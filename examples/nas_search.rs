@@ -1,0 +1,120 @@
+//! Predictor-guided NAS — the paper's intro motivates DIPPM for "efficient
+//! Neural Architecture Search": a latency/memory-constrained random search
+//! where candidate architectures are scored by the *trained predictor*
+//! instead of being run on the device. The device simulator then verifies
+//! the final picks — measuring how much the predictor's ranking agrees
+//! with ground truth (the metric that decides whether DIPPM-guided NAS
+//! actually works).
+//!
+//! Run: `cargo run --release --example nas_search`
+
+use dippm::coordinator::{Coordinator, CoordinatorOptions};
+use dippm::dataset::Dataset;
+use dippm::ir::Graph;
+use dippm::modelgen::ALL_FAMILIES;
+use dippm::runtime::Runtime;
+use dippm::simulator::Simulator;
+use dippm::training::{TrainConfig, Trainer};
+use dippm::util::bench::Table;
+use dippm::util::rng::Rng;
+
+const LATENCY_BUDGET_MS: f64 = 5.0;
+const MEMORY_BUDGET_MB: f64 = 5.0 * 1024.0; // must fit a 1g.5gb MIG slice
+
+fn main() -> anyhow::Result<()> {
+    // Train the predictor briefly (reuse a checkpoint in real use).
+    println!("[setup] training the predictor...");
+    let ds = Dataset::build(0.06, 42, 0);
+    let rt = Runtime::new("artifacts")?;
+    let mut trainer = Trainer::new(
+        &rt,
+        TrainConfig {
+            epochs: 12,
+            lr: 3e-3,
+            ..Default::default()
+        },
+    )?;
+    for e in 0..trainer.config.epochs {
+        trainer.train_epoch(&ds, e)?;
+    }
+    let mape = trainer.evaluate(&ds, &ds.splits.test)?.overall();
+    println!("[setup] predictor test MAPE {mape:.3}");
+    let params = trainer.params.clone();
+    drop(trainer);
+    drop(rt);
+    let coord = Coordinator::start("artifacts", params, CoordinatorOptions::default())?;
+
+    // Random search over the whole modelgen design space.
+    let mut rng = Rng::new(2026);
+    let n_candidates = 120;
+    println!("\n[search] scoring {n_candidates} random candidates against");
+    println!("         latency < {LATENCY_BUDGET_MS} ms, memory < {MEMORY_BUDGET_MB:.0} MB (1g.5gb)\n");
+    let mut feasible: Vec<(Graph, f64, f64)> = Vec::new();
+    let t0 = std::time::Instant::now();
+    for _ in 0..n_candidates {
+        let family = *rng.choose(&ALL_FAMILIES);
+        let idx = rng.below(family.grid_size());
+        let g = family.generate(idx);
+        let pred = coord.predict(g.clone())?;
+        if pred.latency_ms < LATENCY_BUDGET_MS && pred.memory_mb < MEMORY_BUDGET_MB {
+            feasible.push((g, pred.latency_ms, pred.memory_mb));
+        }
+    }
+    let search_s = t0.elapsed().as_secs_f64();
+    println!(
+        "[search] {} feasible / {n_candidates} in {search_s:.1}s ({:.0} cand/s — no GPU runs)",
+        feasible.len(),
+        n_candidates as f64 / search_s
+    );
+
+    // Rank by predicted latency, verify the top picks on the device model.
+    feasible.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    let sim = Simulator::new();
+    let mut t = Table::new(&[
+        "candidate", "batch", "pred lat (ms)", "true lat (ms)", "pred mem",
+        "true mem", "budget ok?",
+    ]);
+    let mut verified = 0;
+    let top: Vec<_> = feasible.iter().take(8).collect();
+    for (g, pl, pm) in &top {
+        let m = sim.measure(g);
+        let ok = m.latency_ms < LATENCY_BUDGET_MS && m.memory_mb < MEMORY_BUDGET_MB;
+        verified += ok as usize;
+        t.row(&[
+            g.variant.clone(),
+            g.batch.to_string(),
+            format!("{pl:.3}"),
+            format!("{:.3}", m.latency_ms),
+            format!("{pm:.0}"),
+            format!("{:.0}", m.memory_mb),
+            if ok { "Y".into() } else { "n".into() },
+        ]);
+    }
+    t.print();
+    println!(
+        "\n{verified}/{} of the predictor's top picks verified within budget on the device model.",
+        top.len()
+    );
+
+    // Ranking agreement: Spearman-ish check on the feasible set.
+    let sample: Vec<_> = feasible.iter().take(20).collect();
+    let mut concordant = 0;
+    let mut total_pairs = 0;
+    for i in 0..sample.len() {
+        for j in i + 1..sample.len() {
+            let ti = sim.measure(&sample[i].0).latency_ms;
+            let tj = sim.measure(&sample[j].0).latency_ms;
+            total_pairs += 1;
+            if (sample[i].1 < sample[j].1) == (ti < tj) {
+                concordant += 1;
+            }
+        }
+    }
+    if total_pairs > 0 {
+        println!(
+            "pairwise ranking agreement (pred vs device): {:.0}% over {total_pairs} pairs",
+            100.0 * concordant as f64 / total_pairs as f64
+        );
+    }
+    Ok(())
+}

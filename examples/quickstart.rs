@@ -1,0 +1,89 @@
+//! Quickstart — the paper's Fig. 5 usability story, end to end in ~a minute:
+//!
+//! 1. build a small dataset on the A100 simulator,
+//! 2. train the GraphSAGE predictor briefly through the PJRT train artifact,
+//! 3. export a VGG16 to the PyTorch exchange format (as a user's model file),
+//! 4. predict its latency / memory / energy / MIG profile — without
+//!    "running" the model on the target GPU.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use dippm::coordinator::{Coordinator, CoordinatorOptions};
+use dippm::dataset::Dataset;
+use dippm::frontends::{self, Framework};
+use dippm::modelgen::Family;
+use dippm::runtime::Runtime;
+use dippm::training::{TrainConfig, Trainer};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Dataset (2% of Table 2 ≈ 210 graphs — quickstart-sized).
+    println!("[1/4] building dataset (2% of the paper's 10,508 graphs)...");
+    let ds = Dataset::build(0.02, 42, 0);
+    println!(
+        "      {} graphs, {} train / {} val / {} test",
+        ds.len(),
+        ds.splits.train.len(),
+        ds.splits.val.len(),
+        ds.splits.test.len()
+    );
+
+    // 2. Train GraphSAGE for a handful of epochs.
+    println!("[2/4] training PMGNS (GraphSAGE) via the AOT train artifact...");
+    let rt = Runtime::new("artifacts")?;
+    let mut trainer = Trainer::new(
+        &rt,
+        TrainConfig {
+            epochs: 8,
+            lr: 3e-3,
+            ..Default::default()
+        },
+    )?;
+    for epoch in 0..trainer.config.epochs {
+        let log = trainer.train_epoch(&ds, epoch)?;
+        println!("      epoch {:2}  huber loss {:.4}", epoch, log.mean_loss);
+    }
+    let val = trainer.evaluate(&ds, &ds.splits.val)?;
+    println!(
+        "      val MAPE {:.1}% (paper reaches 1.9% at full scale)",
+        100.0 * val.overall()
+    );
+
+    // 3. A user's model file: VGG16 in the PyTorch exchange format.
+    println!("[3/4] exporting vgg16 to the PyTorch format (the user's input)...");
+    let vgg16 = Family::Vgg.generate(8 * 32 + 2 * 8 + 3); // vgg16-w64 @224 b8
+    let model_file = std::env::temp_dir().join("vgg16_pytorch.json");
+    std::fs::write(&model_file, frontends::export(Framework::PyTorch, &vgg16))?;
+    println!(
+        "      {} ({} nodes, batch {})",
+        vgg16.variant,
+        vgg16.n_nodes(),
+        vgg16.batch
+    );
+
+    // 4. Predict through the serving coordinator (paper Fig. 5's API call).
+    println!("[4/4] predicting through the coordinator...");
+    let params = trainer.params.clone();
+    drop(trainer);
+    drop(rt); // coordinator owns its own runtime
+    let coord = Coordinator::start("artifacts", params, CoordinatorOptions::default())?;
+    let content = std::fs::read_to_string(&model_file)?;
+    let graph = frontends::parse_any(&content).map_err(|e| anyhow::anyhow!(e))?;
+    let pred = coord.predict(graph)?;
+    println!();
+    println!("  DIPPM prediction for {} (no GPU run needed):", vgg16.variant);
+    println!("    latency : {:9.3} ms", pred.latency_ms);
+    println!("    memory  : {:9.0} MB", pred.memory_mb);
+    println!("    energy  : {:9.3} J", pred.energy_j);
+    println!(
+        "    MIG     : {}",
+        pred.mig_profile.as_deref().unwrap_or("None")
+    );
+    // Ground truth from the device simulator for comparison:
+    let m = dippm::simulator::Simulator::new().measure(&vgg16);
+    println!(
+        "  simulator ground truth: {:.3} ms, {:.0} MB, {:.3} J",
+        m.latency_ms, m.memory_mb, m.energy_j
+    );
+    std::fs::remove_file(&model_file).ok();
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! Serving demo: start the coordinator + TCP front end, then hammer it from
+//! multiple client threads sending models in four different framework
+//! formats — showing cross-connection dynamic batching and the JSON-lines
+//! protocol. Prints throughput and batching metrics at the end.
+//!
+//! Run: `cargo run --release --example serve_demo`
+
+use std::sync::Arc;
+
+use dippm::coordinator::{tcp, Coordinator, CoordinatorOptions};
+use dippm::frontends::{self, Framework};
+use dippm::modelgen::Family;
+use dippm::runtime::Runtime;
+use dippm::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    // Untrained params keep the demo fast; swap in ParamStore::load(...) for
+    // real predictions (see quickstart / e2e_reproduce).
+    let rt = Runtime::new("artifacts")?;
+    let params = rt.init_params("sage", 0)?;
+    drop(rt);
+    let coord = Arc::new(Coordinator::start(
+        "artifacts",
+        params,
+        CoordinatorOptions::default(),
+    )?);
+
+    let (port_tx, port_rx) = std::sync::mpsc::channel();
+    {
+        let coord = coord.clone();
+        std::thread::spawn(move || {
+            tcp::serve(coord, "127.0.0.1:0", move |p| {
+                let _ = port_tx.send(p);
+            })
+            .unwrap();
+        });
+    }
+    let port = port_rx.recv()?;
+    println!("serving on 127.0.0.1:{port}\n");
+
+    let t0 = std::time::Instant::now();
+    let per_client = 12;
+    let clients: Vec<_> = [
+        (Framework::PyTorch, Family::ResNet),
+        (Framework::TensorFlow, Family::Vgg),
+        (Framework::Paddle, Family::MobileNet),
+        (Framework::Native, Family::Vit),
+    ]
+    .into_iter()
+    .map(|(fw, family)| {
+        std::thread::spawn(move || {
+            let mut client = tcp::Client::connect(&format!("127.0.0.1:{port}")).unwrap();
+            let mut ok = 0;
+            for i in 0..per_client {
+                let g = family.generate(i);
+                let model = frontends::export(fw, &g);
+                let compact = Json::parse(&model).unwrap().to_string();
+                let line =
+                    format!("{{\"framework\":\"{}\",\"model\":{compact}}}", fw.name());
+                let resp = client.roundtrip(&line).unwrap();
+                let v = Json::parse(&resp).unwrap();
+                assert_eq!(v.path(&["ok"]).as_bool(), Some(true), "{resp}");
+                if i == 0 {
+                    println!(
+                        "[{}/{}] {} -> latency {:.2} ms, MIG {}",
+                        fw.name(),
+                        family.name(),
+                        g.variant,
+                        v.path(&["latency_ms"]).as_f64().unwrap_or(-1.0),
+                        v.path(&["mig_profile"])
+                            .as_str()
+                            .unwrap_or("None")
+                    );
+                }
+                ok += 1;
+            }
+            ok
+        })
+    })
+    .collect();
+
+    let total: usize = clients.into_iter().map(|c| c.join().unwrap()).sum();
+    let el = t0.elapsed().as_secs_f64();
+    let m = coord.metrics();
+    println!(
+        "\n{total} requests over 4 framework formats in {el:.2}s = {:.1} req/s",
+        total as f64 / el
+    );
+    println!(
+        "batches: {}, mean fill: {:.2}, errors: {}",
+        m.batches,
+        m.mean_batch_fill(),
+        m.errors
+    );
+    Ok(())
+}

@@ -1,0 +1,146 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts + manifest for Rust.
+
+Run once via `make artifacts` (python -m compile.aot --out-dir ../artifacts).
+Python never runs again after this: the Rust runtime loads the HLO text via
+`HloModuleProto::from_text_file`, compiles on the PJRT CPU client, and
+executes it on the request path.
+
+Interchange format is HLO *text*, not `.serialize()`: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids, which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts per variant (sage, gcn, gin, gat, mlp):
+    {v}_init.hlo.txt          seed:i32            -> params tuple
+    {v}_train.hlo.txt         params,m,v,step,lr,seed,X,A,S,mask,Y
+                                                  -> params',m',v',loss
+    {v}_predict_b{B}.hlo.txt  params,X,A,S,mask   -> (yhat,)
+plus sage_train_mse.hlo.txt for the Huber-vs-MSE ablation, and
+manifest.json describing shapes, parameter order and input layout.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import constants as C
+from .model import init_params, make_predict, make_train_step, param_spec
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(batch):
+    """(X, A, S, mask) input specs for a given minibatch size."""
+    return [
+        _spec((batch, C.MAX_NODES, C.NODE_FEATS)),
+        _spec((batch, C.MAX_NODES, C.MAX_NODES)),
+        _spec((batch, C.STATIC_FEATS)),
+        _spec((batch, C.MAX_NODES)),
+    ]
+
+
+def lower_variant(variant: str, out_dir: str, *, progress=print):
+    spec = param_spec(variant)
+    n = len(spec)
+    pspecs = [_spec(s) for _, s in spec]
+    entry = {
+        "params": [{"name": name, "shape": list(shape)} for name, shape in spec],
+        "predict": {},
+    }
+
+    progress(f"  {variant}: init ({n} params)")
+    lowered = jax.jit(lambda seed: init_params(variant, seed), keep_unused=True).lower(
+        _spec((), jnp.int32)
+    )
+    fname = f"{variant}_init.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(to_hlo_text(lowered))
+    entry["init"] = fname
+
+    losses = ("huber", "mse") if variant == "sage" else ("huber",)
+    for loss in losses:
+        progress(f"  {variant}: train_step [{loss}]")
+        step_fn = make_train_step(variant, loss=loss, n_params=n)
+        args = (
+            pspecs  # params
+            + pspecs  # adam m
+            + pspecs  # adam v
+            + [_spec(()), _spec(()), _spec((), jnp.int32)]  # step, lr, seed
+            + batch_specs(C.BATCH)
+            + [_spec((C.BATCH, C.TARGETS))]  # Y
+        )
+        lowered = jax.jit(step_fn, keep_unused=True).lower(*args)
+        fname = f"{variant}_train{'' if loss == 'huber' else '_' + loss}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(to_hlo_text(lowered))
+        entry["train" if loss == "huber" else "train_mse"] = fname
+
+    for b in sorted(set(C.PREDICT_BATCHES)):
+        progress(f"  {variant}: predict b{b}")
+        pred_fn = make_predict(variant, n_params=n)
+        lowered = jax.jit(pred_fn, keep_unused=True).lower(*(pspecs + batch_specs(b)))
+        fname = f"{variant}_predict_b{b}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(to_hlo_text(lowered))
+        entry["predict"][str(b)] = fname
+
+    return entry
+
+
+def build_manifest(variants_entries):
+    return {
+        "constants": {
+            "max_nodes": C.MAX_NODES,
+            "node_feats": C.NODE_FEATS,
+            "static_feats": C.STATIC_FEATS,
+            "targets": C.TARGETS,
+            "batch": C.BATCH,
+            "hidden": C.HIDDEN,
+            "dropout": C.DROPOUT,
+            "huber_delta": C.HUBER_DELTA,
+        },
+        # Input layout contracts, mirrored by rust/src/runtime/artifacts.rs.
+        "train_inputs": "params*, m*, v*, step:f32, lr:f32, seed:i32, "
+        "X[B,N,F], A[B,N,N], S[B,5], mask[B,N], Y[B,3]",
+        "predict_inputs": "params*, X[B,N,F], A[B,N,N], S[B,5], mask[B,N]",
+        "variants": variants_entries,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--variants", default=",".join(C.VARIANTS), help="comma-separated subset"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    entries = {}
+    for variant in args.variants.split(","):
+        print(f"lowering {variant} ...")
+        entries[variant] = lower_variant(variant, args.out_dir)
+
+    manifest = build_manifest(entries)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Shared shape constants for the AOT artifacts.
+
+These are the *compile-time* shapes every HLO artifact is specialized to.
+They are written into artifacts/manifest.json by aot.py and parsed by the
+Rust runtime — Rust never hard-codes them.
+
+Environment overrides (DIPPM_*) exist so tests and the bench harness can
+lower small variants quickly; the defaults are the reproduction profile
+described in DESIGN.md §5.
+"""
+
+import os
+
+
+def _env_int(name: str, default: int) -> int:
+    v = os.environ.get(name)
+    return int(v) if v else default
+
+
+# Padded graph encoding ------------------------------------------------------
+MAX_NODES = _env_int("DIPPM_MAX_NODES", 160)  # N: operator nodes per graph
+NODE_FEATS = _env_int("DIPPM_NODE_FEATS", 32)  # F: paper §3.2 fixed length 32
+STATIC_FEATS = 5  # F_s: MACs, batch, #conv, #dense, #relu (paper eq. 1)
+TARGETS = 3  # latency (ms), memory (MB), energy (J)
+
+# Model / training -----------------------------------------------------------
+HIDDEN = _env_int("DIPPM_HIDDEN", 128)  # paper uses 512; CPU profile uses 128
+BATCH = _env_int("DIPPM_BATCH", 32)  # training minibatch
+PREDICT_BATCHES = (1, BATCH)  # predict artifacts lowered for these batch sizes
+DROPOUT = 0.05  # paper Table 3
+HUBER_DELTA = 1.0
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+VARIANTS = ("sage", "gcn", "gin", "gat", "mlp")  # paper Table 4

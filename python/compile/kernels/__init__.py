@@ -1,0 +1,16 @@
+"""Layer-1 Pallas kernels and their pure-jnp oracles."""
+
+from .fc_block import fc_block, fc_block_fwd_pallas
+from .ref import fc_block_ref, huber_ref, masked_mean_ref, sage_layer_ref
+from .sage_layer import sage_layer, sage_layer_fwd_pallas
+
+__all__ = [
+    "fc_block",
+    "fc_block_fwd_pallas",
+    "fc_block_ref",
+    "huber_ref",
+    "masked_mean_ref",
+    "sage_layer",
+    "sage_layer_fwd_pallas",
+    "sage_layer_ref",
+]

@@ -1,0 +1,66 @@
+"""Pallas kernel: fused fully-connected block (dense + bias + optional ReLU).
+
+The DIPPM head is three FC blocks (paper Fig. 2); at serving time they run
+back-to-back on small [B, D] activations, so kernel-launch and HBM traffic
+dominate. Fusing bias+activation into the matmul kernel removes two
+elementwise passes per block.
+
+Grid: single step — the whole [B,D_in] x [D_in,D_out] product fits in VMEM
+for every shape DIPPM uses (B <= 32, D <= 512: < 300 KB). For larger D this
+would tile over D_out; BlockSpec already expresses that extension.
+
+interpret=True for CPU-PJRT executability; custom_vjp as in sage_layer.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fc_kernel(x_ref, w_ref, b_ref, o_ref, *, activate):
+    out = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    out = out + b_ref[...]
+    if activate:
+        out = jnp.maximum(out, 0.0)
+    o_ref[...] = out
+
+
+def fc_block_fwd_pallas(x, w, b, *, activate=True):
+    batch, d_in = x.shape
+    d_out = w.shape[1]
+    kernel = functools.partial(_fc_kernel, activate=activate)
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((batch, d_in), lambda i: (0, 0)),
+            pl.BlockSpec((d_in, d_out), lambda i: (0, 0)),
+            pl.BlockSpec((d_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((batch, d_out), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, d_out), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fc_block(x, w, b, activate=True):
+    """Fused dense+bias+ReLU: Pallas forward, jnp backward."""
+    return fc_block_fwd_pallas(x, w, b, activate=activate)
+
+
+def _fc_vjp_fwd(x, w, b, activate):
+    out = fc_block_fwd_pallas(x, w, b, activate=activate)
+    return out, (x, w, out)
+
+
+def _fc_vjp_bwd(activate, res, g):
+    x, w, out = res
+    if activate:
+        g = g * (out > 0.0)
+    return g @ w.T, x.T @ g, g.sum(axis=0)
+
+
+fc_block.defvjp(_fc_vjp_fwd, _fc_vjp_bwd)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest asserts the Pallas kernels
+(interpret=True) match these to float32 tolerance over hypothesis-driven
+shape sweeps. They are also used as the backward-pass building blocks in the
+custom_vjp rules (the hot forward runs the Pallas kernel, the backward is
+plain jnp — standard practice, and the backward is bandwidth-bound anyway).
+"""
+
+import jax.numpy as jnp
+
+
+def sage_layer_ref(h, a_hat, w_self, w_neigh, b, *, activate=True):
+    """GraphSAGE layer on a padded dense graph.
+
+    h       [B, N, F]   node features
+    a_hat   [B, N, N]   row-normalized adjacency (mean aggregator folded in)
+    w_self  [F, H]
+    w_neigh [F, H]
+    b       [H]
+    returns [B, N, H]
+    """
+    agg = jnp.einsum("bnm,bmf->bnf", a_hat, h)
+    out = h @ w_self + agg @ w_neigh + b
+    return jnp.maximum(out, 0.0) if activate else out
+
+
+def fc_block_ref(x, w, b, *, activate=True):
+    """Fully-connected block: x[B, D_in] @ w[D_in, D_out] + b, optional ReLU."""
+    out = x @ w + b
+    return jnp.maximum(out, 0.0) if activate else out
+
+
+def masked_mean_ref(h, mask):
+    """Graph readout: mean over valid nodes. h [B,N,H], mask [B,N] -> [B,H]."""
+    num = jnp.einsum("bnh,bn->bh", h, mask)
+    den = jnp.maximum(mask.sum(axis=1, keepdims=True), 1.0)
+    return num / den
+
+
+def huber_ref(pred, target, delta=1.0):
+    """Mean Huber loss (paper Table 3)."""
+    err = pred - target
+    abs_err = jnp.abs(err)
+    quad = jnp.minimum(abs_err, delta)
+    return jnp.mean(0.5 * quad**2 + delta * (abs_err - quad))

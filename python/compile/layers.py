@@ -1,0 +1,80 @@
+"""Message-passing layers for the PMGNS variants compared in paper Table 4.
+
+All layers operate on the padded dense-graph encoding (DESIGN.md §5):
+    h      [B, N, D]  node features (zero-padded past the node mask)
+    a_hat  [B, N, N]  row-normalized adjacency with self-loops (zero-padded)
+    mask   [B, N]     1.0 for valid operator nodes
+
+The GraphSAGE layer is the paper's pick and runs as the L1 Pallas kernel
+(kernels/sage_layer.py). GCN / GIN / GAT / MLP are the baselines; they are
+plain jnp — they exist to reproduce the comparison, not to be the hot path.
+
+Zero-padding invariant: every layer must map padded-zero rows to zeros (or
+at least to values that the masked-mean readout ignores); tests assert
+predictions are invariant to the padding region's contents.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import sage_layer
+
+
+def sage(h, a_hat, w_self, w_neigh, b, *, activate=True):
+    """GraphSAGE with mean aggregator (Hamilton et al.) — Pallas forward."""
+    return sage_layer(h, a_hat, w_self, w_neigh, b, activate)
+
+
+def gcn(h, a_hat, w, b, *, activate=True):
+    """Kipf & Welling GCN layer: relu(Â h W + b)."""
+    out = jnp.einsum("bnm,bmd->bnd", a_hat, h) @ w + b
+    return jnp.maximum(out, 0.0) if activate else out
+
+
+def gin(h, a_hat, eps, w1, b1, w2, b2, *, activate=True):
+    """GIN (Xu et al.): MLP((1+eps)·h + agg(h)).
+
+    The canonical GIN uses sum aggregation; on the padded dense encoding we
+    aggregate with Â (mean) so padded rows stay zero — the degree information
+    GIN would get from sums is already present in the node features
+    (DESIGN.md §5). eps is a learned scalar, broadcast.
+    """
+    agg = jnp.einsum("bnm,bmd->bnd", a_hat, h)
+    pre = (1.0 + eps) * h + agg
+    hid = jnp.maximum(pre @ w1 + b1, 0.0)
+    out = hid @ w2 + b2
+    return jnp.maximum(out, 0.0) if activate else out
+
+
+def gat(h, a_hat, mask, w, a_src, a_dst, b, *, activate=True):
+    """Single-head GAT (Veličković et al.) with masked dense attention.
+
+    Attention logits e_ij = LeakyReLU(s_i + d_j) are computed for every
+    (i, j) pair, then masked to the edge set (a_hat > 0 — which includes
+    self-loops) and to valid target nodes before the softmax.
+    """
+    hw = h @ w  # [B, N, H]
+    s = hw @ a_src  # [B, N]
+    d = hw @ a_dst  # [B, N]
+    logits = s[:, :, None] + d[:, None, :]  # [B, N, N] (i attends over j)
+    logits = jnp.where(logits > 0.0, logits, 0.2 * logits)  # LeakyReLU(0.2)
+    edge = (a_hat > 0.0) & (mask[:, None, :] > 0.0)
+    logits = jnp.where(edge, logits, -1e9)
+    att = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    att = att * edge  # rows with no edges (padding) become all-zero
+    att = att / jnp.maximum(att.sum(axis=-1, keepdims=True), 1e-9)
+    out = jnp.einsum("bnm,bmh->bnh", att, hw) + b
+    out = out * mask[:, :, None]  # keep padded rows exactly zero
+    return jnp.maximum(out, 0.0) if activate else out
+
+
+def mlp_node(h, w, b, *, activate=True):
+    """Per-node dense layer — the no-GNN baseline's 'message passing'."""
+    out = h @ w + b
+    return jnp.maximum(out, 0.0) if activate else out
+
+
+def masked_mean(h, mask):
+    """Graph readout: mean over valid nodes. [B,N,H] x [B,N] -> [B,H]."""
+    num = jnp.einsum("bnh,bn->bh", h, mask)
+    den = jnp.maximum(mask.sum(axis=1, keepdims=True), 1.0)
+    return num / den

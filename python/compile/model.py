@@ -1,0 +1,197 @@
+"""Layer-2: the PMGNS model (paper §3.4) and its Table-4 baseline variants.
+
+Everything here is *functional* so it AOT-lowers cleanly:
+  - params are a flat, ordered list of arrays (order defined by param_spec();
+    the same order is written to the manifest and used by the Rust runtime),
+  - the Adam optimizer update runs INSIDE the train-step HLO, so the Rust
+    driver only shuttles literals (params, m, v) between steps,
+  - dropout derives its randomness from a seed input via threefry, in-graph.
+
+Architecture (paper Fig. 2): 3 message-passing blocks -> masked-mean readout
+-> concat static features F_s -> 3 FC blocks (+dropout) -> linear head with
+3 outputs (latency, memory, energy). Targets arrive normalized (log1p +
+z-score, computed in Rust); the Huber loss (Table 3) acts in that space.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import constants as C
+from .kernels import fc_block, huber_ref
+from .layers import gat, gcn, gin, masked_mean, mlp_node, sage
+
+# ---------------------------------------------------------------------------
+# Parameter specifications
+# ---------------------------------------------------------------------------
+
+
+def param_spec(variant: str, hidden: int = None, node_feats: int = None):
+    """Ordered [(name, shape)] for a variant. This order IS the ABI between
+    the HLO artifacts and the Rust runtime — never reorder without re-lowering.
+    """
+    h = hidden or C.HIDDEN
+    f = node_feats or C.NODE_FEATS
+    dims = [(f, h), (h, h), (h, h)]  # 3 message-passing blocks
+    spec = []
+    for i, (din, dout) in enumerate(dims):
+        if variant == "sage":
+            spec += [
+                (f"sage{i}.w_self", (din, dout)),
+                (f"sage{i}.w_neigh", (din, dout)),
+                (f"sage{i}.b", (dout,)),
+            ]
+        elif variant == "gcn":
+            spec += [(f"gcn{i}.w", (din, dout)), (f"gcn{i}.b", (dout,))]
+        elif variant == "gin":
+            spec += [
+                (f"gin{i}.eps", ()),
+                (f"gin{i}.w1", (din, dout)),
+                (f"gin{i}.b1", (dout,)),
+                (f"gin{i}.w2", (dout, dout)),
+                (f"gin{i}.b2", (dout,)),
+            ]
+        elif variant == "gat":
+            spec += [
+                (f"gat{i}.w", (din, dout)),
+                (f"gat{i}.a_src", (dout,)),
+                (f"gat{i}.a_dst", (dout,)),
+                (f"gat{i}.b", (dout,)),
+            ]
+        elif variant == "mlp":
+            spec += [(f"mlp{i}.w", (din, dout)), (f"mlp{i}.b", (dout,))]
+        else:
+            raise ValueError(f"unknown variant {variant!r}")
+    # Shared head: 3 FC blocks + linear regression head (paper Fig. 2).
+    spec += [
+        ("fc0.w", (h + C.STATIC_FEATS, h)),
+        ("fc0.b", (h,)),
+        ("fc1.w", (h, h)),
+        ("fc1.b", (h,)),
+        ("fc2.w", (h, h)),
+        ("fc2.b", (h,)),
+        ("head.w", (h, C.TARGETS)),
+        ("head.b", (C.TARGETS,)),
+    ]
+    return spec
+
+
+def init_params(variant: str, seed, hidden: int = None, node_feats: int = None):
+    """Glorot-uniform init, traced on a seed scalar (lowered as `init` HLO)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_spec(variant, hidden, node_feats):
+        key, sub = jax.random.split(key)
+        if name.endswith(".eps"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        elif len(shape) == 2:
+            limit = jnp.sqrt(6.0 / (shape[0] + shape[1]))
+            params.append(
+                jax.random.uniform(sub, shape, jnp.float32, -limit, limit)
+            )
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return tuple(params)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _backbone(variant, p, x, a_hat, mask, i0=0):
+    """Run the 3 message-passing blocks; returns (h, next_param_index)."""
+    h, i = x, i0
+    for _ in range(3):
+        if variant == "sage":
+            h = sage(h, a_hat, p[i], p[i + 1], p[i + 2])
+            i += 3
+        elif variant == "gcn":
+            h = gcn(h, a_hat, p[i], p[i + 1])
+            i += 2
+        elif variant == "gin":
+            h = gin(h, a_hat, p[i], p[i + 1], p[i + 2], p[i + 3], p[i + 4])
+            i += 5
+        elif variant == "gat":
+            h = gat(h, a_hat, mask, p[i], p[i + 1], p[i + 2], p[i + 3])
+            i += 4
+        elif variant == "mlp":
+            h = mlp_node(h, p[i], p[i + 1])
+            i += 2
+        h = h * mask[:, :, None]  # re-assert the padding invariant per block
+    return h, i
+
+
+def forward(variant, params, x, a_hat, statics, mask, *, train=False, seed=None):
+    """Full PMGNS forward. Returns [B, TARGETS] in normalized target space."""
+    p = list(params)
+    h, i = _backbone(variant, p, x, a_hat, mask)
+    z = masked_mean(h, mask)  # graph embedding (paper §3.4)
+    z = jnp.concatenate([z, statics], axis=1)  # ⊕ F_s (paper eq. 1)
+    key = jax.random.PRNGKey(seed) if train else None
+    for blk in range(3):
+        w, b = p[i], p[i + 1]
+        i += 2
+        z = fc_block(z, w, b, True) if variant == "sage" else jnp.maximum(z @ w + b, 0.0)
+        if train and C.DROPOUT > 0.0:
+            key, sub = jax.random.split(key)
+            keep = jax.random.bernoulli(sub, 1.0 - C.DROPOUT, z.shape)
+            z = jnp.where(keep, z / (1.0 - C.DROPOUT), 0.0)
+    w, b = p[i], p[i + 1]
+    return z @ w + b  # linear regression head
+
+
+# ---------------------------------------------------------------------------
+# Loss + Adam-in-graph training step
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(variant, params, batch, seed, *, loss="huber"):
+    x, a_hat, statics, mask, y = batch
+    pred = forward(variant, params, x, a_hat, statics, mask, train=True, seed=seed)
+    if loss == "huber":
+        return huber_ref(pred, y, C.HUBER_DELTA)
+    return jnp.mean((pred - y) ** 2)  # MSE ablation (paper §4.3 mentions it)
+
+
+def make_train_step(variant, *, loss="huber", n_params=None):
+    """Returns train_step(params.., m.., v.., step, lr, seed, X, A, S, mask, Y)
+    -> (params'.., m'.., v'.., loss). Flat positional signature for AOT."""
+    n = n_params or len(param_spec(variant))
+
+    def train_step(*args):
+        params = args[:n]
+        m = args[n : 2 * n]
+        v = args[2 * n : 3 * n]
+        step, lr, seed = args[3 * n], args[3 * n + 1], args[3 * n + 2]
+        batch = args[3 * n + 3 :]
+        lval, grads = jax.value_and_grad(
+            lambda ps: loss_fn(variant, ps, batch, seed, loss=loss)
+        )(params)
+        t = step + 1.0
+        bc1 = 1.0 - C.ADAM_B1**t
+        bc2 = 1.0 - C.ADAM_B2**t
+        new_p, new_m, new_v = [], [], []
+        for pi, mi, vi, gi in zip(params, m, v, grads):
+            mi = C.ADAM_B1 * mi + (1.0 - C.ADAM_B1) * gi
+            vi = C.ADAM_B2 * vi + (1.0 - C.ADAM_B2) * gi * gi
+            update = lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + C.ADAM_EPS)
+            new_p.append(pi - update)
+            new_m.append(mi)
+            new_v.append(vi)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (lval,)
+
+    return train_step
+
+
+def make_predict(variant, *, n_params=None):
+    """Returns predict(params.., X, A, S, mask) -> yhat [B, TARGETS]."""
+    n = n_params or len(param_spec(variant))
+
+    def predict(*args):
+        params = args[:n]
+        x, a_hat, statics, mask = args[n : n + 4]
+        return (forward(variant, params, x, a_hat, statics, mask, train=False),)
+
+    return predict

@@ -1,0 +1,88 @@
+"""AOT lowering: HLO text artifacts are well-formed and manifest-consistent."""
+
+import json
+import os
+import tempfile
+
+import pytest
+
+from compile import constants as C
+from compile.aot import batch_specs, build_manifest, lower_variant, to_hlo_text
+from compile.model import param_spec
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestLowering:
+    def test_lower_small_variant(self):
+        """Lower one variant into a temp dir and sanity-check the HLO text."""
+        with tempfile.TemporaryDirectory() as d:
+            entry = lower_variant("mlp", d, progress=lambda *_: None)
+            for key in ("init", "train"):
+                path = os.path.join(d, entry[key])
+                text = open(path).read()
+                assert "ENTRY" in text and "HloModule" in text
+            assert set(entry["predict"]) == {str(b) for b in set(C.PREDICT_BATCHES)}
+
+    def test_to_hlo_text_roundtrippable_ids(self):
+        """The text must not be a serialized proto (the 64-bit-id trap)."""
+        import jax
+        import jax.numpy as jnp
+
+        lowered = jax.jit(lambda x: (x + 1.0,)).lower(
+            jax.ShapeDtypeStruct((2,), jnp.float32)
+        )
+        text = to_hlo_text(lowered)
+        assert text.lstrip().startswith("HloModule")
+
+    def test_batch_specs_shapes(self):
+        x, a, s, mask = batch_specs(7)
+        assert x.shape == (7, C.MAX_NODES, C.NODE_FEATS)
+        assert a.shape == (7, C.MAX_NODES, C.MAX_NODES)
+        assert s.shape == (7, C.STATIC_FEATS)
+        assert mask.shape == (7, C.MAX_NODES)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestBuiltArtifacts:
+    """Validate the artifacts/ directory the Rust runtime will consume."""
+
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_constants_match(self, manifest):
+        c = manifest["constants"]
+        assert c["max_nodes"] == C.MAX_NODES
+        assert c["node_feats"] == C.NODE_FEATS
+        assert c["static_feats"] == C.STATIC_FEATS
+        assert c["targets"] == C.TARGETS
+        assert c["batch"] == C.BATCH
+
+    def test_all_variants_present(self, manifest):
+        assert set(manifest["variants"]) == set(C.VARIANTS)
+
+    def test_param_specs_match_model(self, manifest):
+        for variant, entry in manifest["variants"].items():
+            spec = param_spec(variant)
+            assert [(p["name"], tuple(p["shape"])) for p in entry["params"]] == [
+                (n, tuple(s)) for n, s in spec
+            ]
+
+    def test_artifact_files_exist_and_parse(self, manifest):
+        for entry in manifest["variants"].values():
+            files = [entry["init"], entry["train"], *entry["predict"].values()]
+            if "train_mse" in entry:
+                files.append(entry["train_mse"])
+            for fname in files:
+                path = os.path.join(ART, fname)
+                assert os.path.exists(path), fname
+                head = open(path).read(200)
+                assert head.lstrip().startswith("HloModule"), fname
+
+    def test_sage_has_mse_ablation(self, manifest):
+        assert "train_mse" in manifest["variants"]["sage"]

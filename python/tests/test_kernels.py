@@ -1,0 +1,181 @@
+"""L1 correctness: Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+This is the CORE numerics signal for the whole stack: the Rust runtime
+executes HLO lowered from these kernels, so kernel == oracle here implies
+the serving path computes what the reference math says.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import (
+    fc_block,
+    fc_block_fwd_pallas,
+    fc_block_ref,
+    huber_ref,
+    masked_mean_ref,
+    sage_layer,
+    sage_layer_fwd_pallas,
+    sage_layer_ref,
+)
+
+RTOL, ATOL = 1e-5, 1e-5
+
+
+def _rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def _norm_adj(key, b, n):
+    a = jnp.abs(_rand(key, b, n, n))
+    return a / jnp.maximum(a.sum(-1, keepdims=True), 1e-9)
+
+
+# --------------------------------------------------------------------------
+# sage_layer
+# --------------------------------------------------------------------------
+
+
+class TestSageLayer:
+    @pytest.mark.parametrize("activate", [True, False])
+    def test_matches_ref(self, activate):
+        b, n, f, h = 3, 12, 8, 16
+        x, ws, wn, bb = _rand(0, b, n, f), _rand(1, f, h), _rand(2, f, h), _rand(3, h)
+        a = _norm_adj(4, b, n)
+        got = sage_layer_fwd_pallas(x, a, ws, wn, bb, activate=activate)
+        want = sage_layer_ref(x, a, ws, wn, bb, activate=activate)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 4),
+        n=st.integers(1, 24),
+        f=st.integers(1, 16),
+        h=st.integers(1, 24),
+        seed=st.integers(0, 2**16),
+    )
+    def test_shape_sweep(self, b, n, f, h, seed):
+        """Hypothesis sweep over kernel shapes (system-prompt requirement)."""
+        x = _rand(seed, b, n, f)
+        a = _norm_adj(seed + 1, b, n)
+        ws, wn, bb = _rand(seed + 2, f, h), _rand(seed + 3, f, h), _rand(seed + 4, h)
+        got = sage_layer_fwd_pallas(x, a, ws, wn, bb)
+        want = sage_layer_ref(x, a, ws, wn, bb)
+        assert got.shape == (b, n, h)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_zero_adjacency_is_self_only(self):
+        """With Â = 0 the layer degenerates to relu(H @ W_self + b)."""
+        b, n, f, h = 2, 6, 4, 8
+        x, ws, wn, bb = _rand(0, b, n, f), _rand(1, f, h), _rand(2, f, h), _rand(3, h)
+        a = jnp.zeros((b, n, n))
+        got = sage_layer_fwd_pallas(x, a, ws, wn, bb)
+        want = jnp.maximum(x @ ws + bb, 0.0)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_identity_adjacency_doubles_self(self):
+        """Â = I aggregates each node's own features: H@Ws + H@Wn + b."""
+        b, n, f, h = 2, 5, 4, 8
+        x, ws, wn, bb = _rand(0, b, n, f), _rand(1, f, h), _rand(2, f, h), _rand(3, h)
+        a = jnp.broadcast_to(jnp.eye(n), (b, n, n))
+        got = sage_layer_fwd_pallas(x, a, ws, wn, bb, activate=False)
+        want = x @ ws + x @ wn + bb
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_custom_vjp_matches_jnp_grad(self):
+        """Gradients through the Pallas forward == gradients of the oracle."""
+        b, n, f, h = 2, 8, 6, 10
+        x, ws, wn, bb = _rand(0, b, n, f), _rand(1, f, h), _rand(2, f, h), _rand(3, h)
+        a = _norm_adj(4, b, n)
+
+        def via_kernel(x, a, ws, wn, bb):
+            return jnp.sum(sage_layer(x, a, ws, wn, bb) ** 2)
+
+        def via_ref(x, a, ws, wn, bb):
+            return jnp.sum(sage_layer_ref(x, a, ws, wn, bb) ** 2)
+
+        g1 = jax.grad(via_kernel, argnums=(0, 1, 2, 3, 4))(x, a, ws, wn, bb)
+        g2 = jax.grad(via_ref, argnums=(0, 1, 2, 3, 4))(x, a, ws, wn, bb)
+        for a1, a2 in zip(g1, g2):
+            np.testing.assert_allclose(a1, a2, rtol=1e-4, atol=1e-4)
+
+    def test_jit_compatible(self):
+        b, n, f, h = 2, 8, 6, 10
+        x, ws, wn, bb = _rand(0, b, n, f), _rand(1, f, h), _rand(2, f, h), _rand(3, h)
+        a = _norm_adj(4, b, n)
+        got = jax.jit(lambda *a_: sage_layer(*a_))(x, a, ws, wn, bb)
+        want = sage_layer_ref(x, a, ws, wn, bb)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+# --------------------------------------------------------------------------
+# fc_block
+# --------------------------------------------------------------------------
+
+
+class TestFcBlock:
+    @pytest.mark.parametrize("activate", [True, False])
+    def test_matches_ref(self, activate):
+        b, din, dout = 8, 16, 12
+        x, w, bb = _rand(0, b, din), _rand(1, din, dout), _rand(2, dout)
+        got = fc_block_fwd_pallas(x, w, bb, activate=activate)
+        want = fc_block_ref(x, w, bb, activate=activate)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 33),
+        din=st.integers(1, 40),
+        dout=st.integers(1, 40),
+        seed=st.integers(0, 2**16),
+    )
+    def test_shape_sweep(self, b, din, dout, seed):
+        x, w, bb = _rand(seed, b, din), _rand(seed + 1, din, dout), _rand(seed + 2, dout)
+        got = fc_block_fwd_pallas(x, w, bb)
+        want = fc_block_ref(x, w, bb)
+        assert got.shape == (b, dout)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_custom_vjp_matches_jnp_grad(self):
+        b, din, dout = 4, 10, 6
+        x, w, bb = _rand(0, b, din), _rand(1, din, dout), _rand(2, dout)
+        g1 = jax.grad(lambda *a_: jnp.sum(fc_block(*a_) ** 2), argnums=(0, 1, 2))(
+            x, w, bb
+        )
+        g2 = jax.grad(
+            lambda *a_: jnp.sum(fc_block_ref(*a_) ** 2), argnums=(0, 1, 2)
+        )(x, w, bb)
+        for a1, a2 in zip(g1, g2):
+            np.testing.assert_allclose(a1, a2, rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# oracles' own invariants
+# --------------------------------------------------------------------------
+
+
+class TestOracles:
+    def test_masked_mean_ignores_padding(self):
+        h = _rand(0, 2, 6, 4)
+        mask = jnp.array([[1, 1, 1, 0, 0, 0], [1, 1, 1, 1, 1, 1]], jnp.float32)
+        got = masked_mean_ref(h, mask)
+        want0 = h[0, :3].mean(axis=0)
+        np.testing.assert_allclose(got[0], want0, rtol=RTOL, atol=ATOL)
+        # Garbage in the padding region must not change the readout.
+        h2 = h.at[0, 3:].set(1e6)
+        got2 = masked_mean_ref(h2, mask)
+        np.testing.assert_allclose(got[0], got2[0], rtol=RTOL, atol=ATOL)
+
+    def test_huber_quadratic_small_linear_large(self):
+        small = huber_ref(jnp.array([0.5]), jnp.array([0.0]), 1.0)
+        np.testing.assert_allclose(small, 0.5 * 0.25, rtol=RTOL)
+        large = huber_ref(jnp.array([10.0]), jnp.array([0.0]), 1.0)
+        np.testing.assert_allclose(large, 0.5 + 9.0, rtol=RTOL)
+
+    def test_huber_zero_at_perfect_prediction(self):
+        y = _rand(0, 5, 3)
+        assert float(huber_ref(y, y)) == 0.0

@@ -1,0 +1,70 @@
+//! Ablations the paper calls out in §3/§4:
+//!   (a) Huber vs MSE loss (paper: "Huber achieved a higher accuracy").
+//!   (b) static features F_s on vs off (paper eq. 1's contribution).
+//!   (c) learning-rate sensitivity (why the paper ran an LR finder).
+
+#[path = "common.rs"]
+mod common;
+
+use dippm::util::bench::{banner, Table};
+
+fn main() {
+    let frac = common::fraction(0.06, 0.25);
+    let epochs = common::epochs(8, 20);
+    let ds = common::dataset(frac);
+
+    banner("Ablation A", "Huber vs MSE loss (paper §4.3 chose Huber)");
+    let huber = common::train_and_eval(&ds, "sage", epochs, 1e-3, false, false);
+    let mse = common::train_and_eval(&ds, "sage", epochs, 1e-3, true, false);
+    let mut t = Table::new(&["loss", "train MAPE", "val MAPE", "test MAPE"]);
+    for (name, o) in [("huber", &huber), ("mse", &mse)] {
+        t.row(&[
+            name.into(),
+            format!("{:.3}", o.train.overall()),
+            format!("{:.3}", o.val.overall()),
+            format!("{:.3}", o.test.overall()),
+        ]);
+    }
+    t.print();
+    println!(
+        "shape check: huber {} mse on test ({:.3} vs {:.3})",
+        if huber.test.overall() <= mse.test.overall() { "<=" } else { ">" },
+        huber.test.overall(),
+        mse.test.overall()
+    );
+
+    banner("Ablation B", "static features F_s (eq. 1) on vs off");
+    let without = common::train_and_eval(&ds, "sage", epochs, 1e-3, false, true);
+    let mut t = Table::new(&["F_s", "train MAPE", "val MAPE", "test MAPE"]);
+    t.row(&[
+        "with (paper)".into(),
+        format!("{:.3}", huber.train.overall()),
+        format!("{:.3}", huber.val.overall()),
+        format!("{:.3}", huber.test.overall()),
+    ]);
+    t.row(&[
+        "zeroed".into(),
+        format!("{:.3}", without.train.overall()),
+        format!("{:.3}", without.val.overall()),
+        format!("{:.3}", without.test.overall()),
+    ]);
+    t.print();
+    println!(
+        "shape check: removing F_s degrades test MAPE by {:+.1}%",
+        100.0 * (without.test.overall() - huber.test.overall())
+    );
+
+    banner("Ablation C", "learning-rate sensitivity (why Table 3 LR-finds)");
+    let mut t = Table::new(&["lr", "final loss", "test MAPE"]);
+    for lr in [2.754e-5, 3e-4, 1e-3, 1e-2] {
+        let o = common::train_and_eval(&ds, "sage", epochs, lr, false, false);
+        t.row(&[
+            format!("{lr:.3e}"),
+            format!("{:.4}", o.logs.last().map(|l| l.mean_loss).unwrap_or(f64::NAN)),
+            format!("{:.3}", o.test.overall()),
+        ]);
+    }
+    t.print();
+    println!("(the paper's 2.754e-5 is tuned for hidden=512 over 500 epochs; at this");
+    println!(" budget the LR-finder selects a larger step — run `dippm lr-find`.)");
+}

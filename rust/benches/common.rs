@@ -1,0 +1,97 @@
+//! Shared helpers for the paper-reproduction benches.
+//!
+//! Scale knobs (all benches respect them):
+//!   DIPPM_BENCH_FRACTION  dataset fraction of the paper's 10,508 (default
+//!                         varies per bench; FULL=1 raises defaults)
+//!   DIPPM_BENCH_EPOCHS    training epochs for learned-model benches
+//!   FULL=1                paper-scale settings (slow: tens of minutes)
+
+#![allow(dead_code)]
+
+use dippm::dataset::Dataset;
+use dippm::runtime::{ParamStore, Runtime};
+use dippm::training::{trainer::EvalReport, EpochLog, TrainConfig, Trainer};
+
+pub fn is_full() -> bool {
+    std::env::var("FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+pub fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn fraction(default_quick: f64, default_full: f64) -> f64 {
+    env_f64(
+        "DIPPM_BENCH_FRACTION",
+        if is_full() { default_full } else { default_quick },
+    )
+}
+
+pub fn epochs(default_quick: usize, default_full: usize) -> usize {
+    env_usize(
+        "DIPPM_BENCH_EPOCHS",
+        if is_full() { default_full } else { default_quick },
+    )
+}
+
+pub fn dataset(frac: f64) -> Dataset {
+    let t0 = std::time::Instant::now();
+    let ds = Dataset::build(frac, 42, 0);
+    println!(
+        "[setup] dataset: {} graphs (fraction {frac}) in {:.1}s",
+        ds.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    ds
+}
+
+/// Train one variant and return (params, per-epoch logs, reports).
+pub struct TrainOutcome {
+    pub params: ParamStore,
+    pub logs: Vec<EpochLog>,
+    pub train: EvalReport,
+    pub val: EvalReport,
+    pub test: EvalReport,
+}
+
+pub fn train_and_eval(
+    ds: &Dataset,
+    variant: &str,
+    epochs: usize,
+    lr: f64,
+    mse: bool,
+    zero_statics: bool,
+) -> TrainOutcome {
+    let rt = Runtime::new("artifacts").expect("run `make artifacts`");
+    let mut t = Trainer::new(
+        &rt,
+        TrainConfig {
+            variant: variant.to_string(),
+            epochs,
+            lr,
+            seed: 0,
+            mse_loss: mse,
+            max_train: None,
+            zero_statics,
+        },
+    )
+    .unwrap();
+    let mut logs = Vec::new();
+    for e in 0..epochs {
+        logs.push(t.train_epoch(ds, e).unwrap());
+    }
+    let train = t.evaluate(ds, &ds.splits.train).unwrap();
+    let val = t.evaluate(ds, &ds.splits.val).unwrap();
+    let test = t.evaluate(ds, &ds.splits.test).unwrap();
+    TrainOutcome {
+        params: t.params.clone(),
+        logs,
+        train,
+        val,
+        test,
+    }
+}

@@ -1,0 +1,51 @@
+//! Paper Fig. 4 — predicted vs actual scatter on the test split for all
+//! three targets (memory, latency, energy). Prints the series (the paper
+//! plots them) plus correlation and MAPE per target.
+
+#[path = "common.rs"]
+mod common;
+
+use dippm::util::bench::{banner, Table};
+
+fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let cov: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let vx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    let vy: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
+    cov / (vx.sqrt() * vy.sqrt()).max(1e-12)
+}
+
+fn main() {
+    banner("Fig. 4", "predicted vs actual on the test split");
+    let frac = common::fraction(0.08, 0.30);
+    let epochs = common::epochs(12, 40);
+    let ds = common::dataset(frac);
+    let out = common::train_and_eval(&ds, "sage", epochs, 3e-3, false, false);
+
+    let names = ["latency (ms)", "memory (MB)", "energy (J)"];
+    for d in 0..3 {
+        let (pred, actual): (Vec<f64>, Vec<f64>) =
+            out.test.pairs.iter().map(|(p, a)| (p[d], a[d])).unzip();
+        let r = pearson(&pred, &actual);
+        println!("\n--- {} — pearson r = {:.4}, MAPE = {:.4} ---", names[d], r, [
+            out.test.mape_latency,
+            out.test.mape_memory,
+            out.test.mape_energy
+        ][d]);
+        let mut t = Table::new(&["actual", "predicted", "err %"]);
+        for (p, a) in out.test.pairs.iter().take(25) {
+            t.row(&[
+                format!("{:.3}", a[d]),
+                format!("{:.3}", p[d]),
+                format!("{:+.1}%", 100.0 * (p[d] - a[d]) / a[d].max(1e-9)),
+            ]);
+        }
+        t.print();
+    }
+    println!(
+        "\nshape check (paper: \"predictions are close to the actual\"): overall test MAPE {:.4}",
+        out.test.overall()
+    );
+}

@@ -1,0 +1,63 @@
+//! Paper Table 2 — dataset distribution (10,508 graphs over ten families) —
+//! plus dataset-pipeline throughput (graphs simulated + featurized per
+//! second). FULL=1 builds the complete 10,508-graph dataset.
+
+#[path = "common.rs"]
+mod common;
+
+use dippm::features::encode_graph;
+use dippm::modelgen::{table2_total, ALL_FAMILIES};
+use dippm::util::bench::{banner, Table};
+
+fn main() {
+    banner("Table 2", "DIPPM graph dataset distribution");
+    let frac = common::fraction(0.05, 1.0);
+    let ds = common::dataset(frac);
+
+    let mut t = Table::new(&[
+        "Model Family",
+        "# of Graphs (ours)",
+        "Percentage (ours)",
+        "# of Graphs (paper)",
+        "Percentage (paper)",
+    ]);
+    let total = ds.len() as f64;
+    for (f, (name, count)) in ALL_FAMILIES.iter().zip(ds.family_distribution()) {
+        t.row(&[
+            name,
+            count.to_string(),
+            format!("{:.2}%", 100.0 * count as f64 / total),
+            f.table2_count().to_string(),
+            format!("{:.2}%", 100.0 * f.table2_count() as f64 / table2_total() as f64),
+        ]);
+    }
+    t.row(&[
+        "Total".into(),
+        ds.len().to_string(),
+        "100%".into(),
+        table2_total().to_string(),
+        "100%".into(),
+    ]);
+    t.print();
+
+    // Pipeline throughput: simulate + featurize.
+    let t0 = std::time::Instant::now();
+    let mut nodes = 0usize;
+    for s in ds.samples.iter().take(500) {
+        nodes += encode_graph(&s.graph).n;
+    }
+    let el = t0.elapsed().as_secs_f64();
+    println!(
+        "\nfeaturization: {:.0} graphs/s ({} nodes over {:.2}s)",
+        500f64.min(ds.len() as f64) / el,
+        nodes,
+        el
+    );
+    println!(
+        "dataset sanity: target spread latency {:.3}..{:.1} ms, memory {:.0}..{:.0} MB",
+        ds.samples.iter().map(|s| s.y.latency_ms).fold(f64::MAX, f64::min),
+        ds.samples.iter().map(|s| s.y.latency_ms).fold(0.0, f64::max),
+        ds.samples.iter().map(|s| s.y.memory_mb).fold(f64::MAX, f64::min),
+        ds.samples.iter().map(|s| s.y.memory_mb).fold(0.0, f64::max),
+    );
+}

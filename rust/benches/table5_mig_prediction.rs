@@ -1,0 +1,107 @@
+//! Paper Table 5 — MIG-profile prediction for seen, partially-seen and
+//! unseen architectures: train the predictor, predict memory from the
+//! GNN (the 7g.40gb upper bound), apply eq. (2), and compare against the
+//! actually-best profile from per-profile measurement.
+
+#[path = "common.rs"]
+mod common;
+
+use dippm::coordinator::{Coordinator, CoordinatorOptions};
+use dippm::ir::{Attrs, Graph, GraphBuilder, OpKind};
+use dippm::mig;
+use dippm::modelgen::Family;
+use dippm::simulator::{MigResult, Simulator, ALL_PROFILES};
+use dippm::util::bench::{banner, Table};
+
+/// ConvNeXt-like: an architecture family the predictor never trained on
+/// (the paper's unseen convnext_base row).
+fn convnext_like(batch: usize) -> Graph {
+    let mut b = GraphBuilder::new("convnext", &format!("convnext-like-b{batch}"), batch);
+    let x = b.input(vec![batch, 3, 224, 224]);
+    let mut h = b.conv2d(x, 96, 4, 4, 0);
+    let mut dim = 96;
+    for (stage, blocks) in [(0usize, 2usize), (1, 2), (2, 4), (3, 2)] {
+        for _ in 0..blocks {
+            let dw = b.depthwise(h, 7, 1, 3);
+            let n = b.add(OpKind::BatchNorm, Attrs::none(), &[dw]);
+            let e = b.conv2d(n, dim * 4, 1, 1, 0);
+            let g = b.add(OpKind::Gelu, Attrs::none(), &[e]);
+            let p = b.conv2d(g, dim, 1, 1, 0);
+            h = b.add(OpKind::Add, Attrs::none(), &[p, h]);
+        }
+        if stage < 3 {
+            dim *= 2;
+            h = b.conv2d(h, dim, 2, 2, 0);
+        }
+    }
+    let p = b.add(OpKind::GlobalAvgPool2d, Attrs::none(), &[h]);
+    let f = b.add(OpKind::Flatten, Attrs::none(), &[p]);
+    b.dense(f, 1000);
+    b.finish()
+}
+
+fn main() {
+    banner("Table 5", "MIG profile prediction: seen / partially seen / unseen");
+    let frac = common::fraction(0.08, 0.30);
+    let epochs = common::epochs(12, 40);
+    let ds = common::dataset(frac);
+    let out = common::train_and_eval(&ds, "sage", epochs, 3e-3, false, false);
+    println!("[setup] trained sage: test MAPE {:.3}", out.test.overall());
+
+    let sim = Simulator::new();
+    let coord =
+        Coordinator::start("artifacts", out.params, CoordinatorOptions::default()).unwrap();
+
+    // (status, graph) — mirrors the paper's densenet/swin/convnext rows at
+    // two batch sizes each.
+    let candidates: Vec<(&str, Graph)> = vec![
+        ("seen", Family::DenseNet.generate(3)),   // small batch
+        ("seen", Family::DenseNet.generate(5)),   // larger batch
+        ("partially seen", Family::Swin.generate(9)),
+        ("partially seen", Family::Swin.generate(12)),
+        ("unseen", convnext_like(4)),
+        ("unseen", convnext_like(64)),
+    ];
+
+    let mut t = Table::new(&[
+        "Model", "Batch", "Status", "Pred MIG", "Pred Mem", "Actual Mem",
+        "1g.5gb", "2g.10gb", "3g.20gb", "7g.40gb", "Hit",
+    ]);
+    let mut hits = 0;
+    let total = candidates.len();
+    for (status, g) in candidates {
+        let pred = coord.predict(g.clone()).unwrap();
+        let predicted_profile = pred.mig_profile.clone().unwrap_or("None".into());
+        let actual_mem = sim.measure(&g).memory_mb;
+        let actual_best = mig::actual_best_profile(&sim, &g)
+            .map(|p| p.name().to_string())
+            .unwrap_or("None".into());
+        // Per-profile consumption/capacity scores (the paper's columns).
+        let scores: Vec<String> = ALL_PROFILES
+            .iter()
+            .map(|&p| match sim.measure_mig(&g, p) {
+                MigResult::Ok(m) => format!("{:.0}%", 100.0 * m.memory_mb / p.capacity_mb()),
+                MigResult::OutOfMemory { .. } => "OOM".into(),
+            })
+            .collect();
+        let hit = predicted_profile == actual_best;
+        hits += hit as usize;
+        t.row(&[
+            g.variant.clone(),
+            g.batch.to_string(),
+            status.into(),
+            predicted_profile,
+            format!("{:.0}", pred.memory_mb),
+            format!("{actual_mem:.0}"),
+            scores[0].clone(),
+            scores[1].clone(),
+            scores[2].clone(),
+            scores[3].clone(),
+            if hit { "Y".into() } else { "n".into() },
+        ]);
+    }
+    t.print();
+    println!(
+        "\nMIG hit rate: {hits}/{total} (paper Table 5: 6/6 including unseen convnext)"
+    );
+}

@@ -1,0 +1,17 @@
+//! The serving coordinator — L3's runtime contribution: a request router +
+//! dynamic batcher in front of the PJRT predict executable, exposing DIPPM
+//! as a service (the paper's Fig. 5 usability story, minus Python).
+//!
+//! Architecture: callers (CLI, TCP handler threads, benches) submit graphs
+//! through an mpsc channel; a single executor thread owns the PJRT runtime
+//! (XLA client handles are not Sync), drains the queue with a
+//! size-or-deadline batching policy, featurizes into pre-allocated buffers,
+//! executes the right shape-specialized artifact (b=1 fast path vs padded
+//! b=B), denormalizes, applies the MIG rule (eq. 2) and replies.
+
+pub mod protocol;
+pub mod server;
+pub mod tcp;
+
+pub use protocol::{Prediction, Request};
+pub use server::{Coordinator, CoordinatorOptions, Metrics};

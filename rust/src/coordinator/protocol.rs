@@ -1,0 +1,116 @@
+//! Serving protocol types: JSON-lines request/response (the TCP API) and
+//! the in-process request struct.
+
+use crate::frontends::{self, Framework};
+use crate::ir::Graph;
+use crate::util::json::{Json, JsonObj};
+
+/// An in-process prediction request.
+#[derive(Debug)]
+pub struct Request {
+    pub graph: Graph,
+}
+
+/// DIPPM's output (paper Fig. 1): latency, memory, energy + MIG profile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Prediction {
+    pub latency_ms: f64,
+    pub memory_mb: f64,
+    pub energy_j: f64,
+    /// None = model exceeds the largest profile (eq. 2's "None").
+    pub mig_profile: Option<String>,
+}
+
+impl Prediction {
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("latency_ms", self.latency_ms);
+        o.insert("memory_mb", self.memory_mb);
+        o.insert("energy_j", self.energy_j);
+        match &self.mig_profile {
+            Some(p) => o.insert("mig_profile", p.as_str()),
+            None => o.insert("mig_profile", Json::Null),
+        }
+        o.insert("ok", true);
+        Json::Obj(o)
+    }
+}
+
+/// Parse one JSON-lines request:
+/// `{"framework": "pytorch", "model": {...}}` — `model` may be an inline
+/// object (JSON formats) or a string (ONNX text / pre-serialized JSON);
+/// `framework` is optional (auto-detect).
+pub fn parse_request(line: &str) -> Result<Graph, String> {
+    let v = Json::parse(line).map_err(|e| e.to_string())?;
+    let model_text: String = match v.path(&["model"]) {
+        Json::Str(s) => s.clone(),
+        Json::Obj(_) => v.path(&["model"]).to_string(),
+        _ => return Err("request lacks a 'model' field".into()),
+    };
+    match v.path(&["framework"]).as_str() {
+        Some(name) => {
+            let fw = Framework::from_name(name)
+                .ok_or_else(|| format!("unknown framework {name:?}"))?;
+            frontends::parse(fw, &model_text)
+        }
+        None => frontends::parse_any(&model_text),
+    }
+}
+
+pub fn error_response(msg: &str) -> String {
+    let mut o = JsonObj::new();
+    o.insert("ok", false);
+    o.insert("error", msg);
+    Json::Obj(o).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelgen::Family;
+
+    #[test]
+    fn request_with_inline_object() {
+        let g = Family::Vgg.generate(0);
+        let model = frontends::export(Framework::PyTorch, &g);
+        let line = format!("{{\"framework\":\"pytorch\",\"model\":{model}}}");
+        let parsed = parse_request(&line).unwrap();
+        assert!(frontends::structurally_equal(&g, &parsed));
+    }
+
+    #[test]
+    fn request_with_string_model_autodetect() {
+        let g = Family::ResNet.generate(0);
+        let onnx = frontends::export(Framework::Onnx, &g);
+        let mut o = JsonObj::new();
+        o.insert("model", onnx);
+        let line = Json::Obj(o).to_string();
+        let parsed = parse_request(&line).unwrap();
+        assert!(frontends::structurally_equal(&g, &parsed));
+    }
+
+    #[test]
+    fn bad_requests_error() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request("{}").is_err());
+        assert!(parse_request(r#"{"framework":"mxnet","model":"x"}"#).is_err());
+    }
+
+    #[test]
+    fn prediction_serializes() {
+        let p = Prediction {
+            latency_ms: 1.5,
+            memory_mb: 3000.0,
+            energy_j: 0.4,
+            mig_profile: Some("1g.5gb".into()),
+        };
+        let j = p.to_json().to_string();
+        assert!(j.contains("\"mig_profile\":\"1g.5gb\""));
+        assert!(j.contains("\"ok\":true"));
+        let p2 = Prediction {
+            mig_profile: None,
+            ..p
+        };
+        assert!(p2.to_json().to_string().contains("\"mig_profile\":null"));
+    }
+}

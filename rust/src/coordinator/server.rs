@@ -1,0 +1,303 @@
+//! The coordinator core: mpsc request queue → executor thread (owns the
+//! PJRT runtime) with a size-or-deadline dynamic batcher.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::features::static_features;
+use crate::ir::Graph;
+use crate::log_info;
+use crate::mig;
+use crate::runtime::{ParamStore, Runtime};
+use crate::training::BatchBuffers;
+
+use super::protocol::Prediction;
+
+/// Batching policy knobs.
+#[derive(Debug, Clone)]
+pub struct CoordinatorOptions {
+    /// Wait at most this long to grow a batch after the first arrival.
+    pub max_wait: Duration,
+    /// Queue capacity (backpressure: submits block when full).
+    pub queue_depth: usize,
+}
+
+impl Default for CoordinatorOptions {
+    fn default() -> Self {
+        CoordinatorOptions {
+            max_wait: Duration::from_millis(2),
+            queue_depth: 1024,
+        }
+    }
+}
+
+/// Serving metrics (updated by the executor thread).
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub requests: u64,
+    pub batches: u64,
+    pub errors: u64,
+    pub batch_fill_sum: u64,
+    /// Per-request end-to-end latencies (seconds), bounded ring.
+    pub latencies: Vec<f64>,
+}
+
+impl Metrics {
+    pub fn mean_batch_fill(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_fill_sum as f64 / self.batches as f64
+        }
+    }
+}
+
+struct Job {
+    graph: Graph,
+    enqueued: Instant,
+    reply: Sender<Result<Prediction>>,
+}
+
+/// Handle to the serving coordinator. Cloneable submit side; the executor
+/// shuts down when the last handle drops.
+pub struct Coordinator {
+    tx: SyncSender<Job>,
+    metrics: Arc<Mutex<Metrics>>,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the executor. `artifact_dir` must contain the AOT manifest;
+    /// `params` is a trained checkpoint (its embedded norm stats are used
+    /// for featurization and denormalization).
+    pub fn start(
+        artifact_dir: &str,
+        params: ParamStore,
+        opts: CoordinatorOptions,
+    ) -> Result<Coordinator> {
+        let (tx, rx) = mpsc::sync_channel::<Job>(opts.queue_depth);
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let artifact_dir = artifact_dir.to_string();
+        let m2 = metrics.clone();
+        let s2 = stop.clone();
+        // The runtime is constructed inside the executor thread: XLA client
+        // handles never cross threads.
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("dippm-executor".into())
+            .spawn(move || executor_main(&artifact_dir, params, opts, rx, m2, s2, ready_tx))
+            .expect("spawn executor");
+        // Propagate startup errors (bad artifacts, checkpoint mismatch).
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("executor thread died during startup"))??;
+        Ok(Coordinator {
+            tx,
+            metrics,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// Submit a graph; returns a receiver for the prediction.
+    pub fn submit(&self, graph: Graph) -> Receiver<Result<Prediction>> {
+        let (reply, rx) = mpsc::channel();
+        let job = Job {
+            graph,
+            enqueued: Instant::now(),
+            reply,
+        };
+        if self.tx.send(job).is_err() {
+            // Executor gone; the receiver will see a disconnect.
+        }
+        rx
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn predict(&self, graph: Graph) -> Result<Prediction> {
+        self.submit(graph)
+            .recv()
+            .map_err(|_| anyhow!("coordinator shut down"))?
+    }
+
+    pub fn metrics(&self) -> Metrics {
+        self.metrics.lock().unwrap().clone()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the executor by closing the channel.
+        // (tx dropped after handle join would deadlock; drop it via replace.)
+        let (dummy_tx, _) = mpsc::sync_channel(1);
+        let tx = std::mem::replace(&mut self.tx, dummy_tx);
+        drop(tx);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn executor_main(
+    artifact_dir: &str,
+    params: ParamStore,
+    opts: CoordinatorOptions,
+    rx: Receiver<Job>,
+    metrics: Arc<Mutex<Metrics>>,
+    stop: Arc<AtomicBool>,
+    ready: Sender<Result<()>>,
+) {
+    // --- startup ---------------------------------------------------------
+    let setup = (|| -> Result<_> {
+        let runtime = Runtime::new(artifact_dir)?;
+        let info = runtime.variant(&params.variant)?.clone();
+        params.check_against(&info)?;
+        let max_b = info.max_predict_batch();
+        // Pre-compile both fast-path (b=1) and batched artifacts.
+        let art_b1 = info
+            .predict_for(1)
+            .map(|f| runtime.artifact(f))
+            .transpose()?;
+        let art_bn = runtime.artifact(
+            info.predict_for(max_b)
+                .ok_or_else(|| anyhow!("no batched predict artifact"))?,
+        )?;
+        let param_lits = params.to_literals()?;
+        Ok((runtime, art_b1, art_bn, max_b, param_lits))
+    })();
+    let (runtime, art_b1, art_bn, max_b, param_lits) = match setup {
+        Ok(v) => {
+            let _ = ready.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let c = runtime.manifest.constants;
+    let mut buffers = BatchBuffers::new(&c, max_b);
+    let mut buffers_b1 = BatchBuffers::new(&c, 1);
+    log_info!(
+        "coordinator up: variant={} max_batch={max_b} wait={:?}",
+        params.variant,
+        opts.max_wait
+    );
+
+    // --- serve loop --------------------------------------------------------
+    while !stop.load(Ordering::SeqCst) {
+        // Block for the first job.
+        let first = match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(job) => job,
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => break,
+        };
+        // Grow the batch until full or deadline.
+        let mut jobs = vec![first];
+        let deadline = Instant::now() + opts.max_wait;
+        while jobs.len() < max_b {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(job) => jobs.push(job),
+                Err(_) => break,
+            }
+        }
+
+        // Execute: b=1 fast path avoids padding the big batch artifact.
+        let result: Result<Vec<[f32; 3]>> = (|| {
+            let (art, bufs, b) = if jobs.len() == 1 && art_b1.is_some() {
+                (art_b1.as_ref().unwrap(), &mut buffers_b1, 1)
+            } else {
+                (&art_bn, &mut buffers, max_b)
+            };
+            for (slot, job) in jobs.iter().enumerate() {
+                let statics = static_features(&job.graph);
+                bufs.fill_graph(&job.graph, &statics, &params.norm, slot)?;
+            }
+            for slot in jobs.len()..b {
+                bufs.clear_slot(slot);
+            }
+            let mut inputs: Vec<xla::Literal> =
+                param_lits.iter().map(|l| l.clone()).collect();
+            inputs.extend(bufs.feature_literals()?);
+            let outs = art.run(&inputs)?;
+            let yhat = outs
+                .first()
+                .ok_or_else(|| anyhow!("predict returned nothing"))?
+                .to_vec::<f32>()?;
+            Ok((0..jobs.len())
+                .map(|slot| std::array::from_fn(|d| yhat[slot * 3 + d]))
+                .collect())
+        })();
+
+        // Reply + metrics.
+        let mut m = metrics.lock().unwrap();
+        m.batches += 1;
+        m.batch_fill_sum += jobs.len() as u64;
+        match result {
+            Ok(normed) => {
+                for (job, norm) in jobs.into_iter().zip(normed) {
+                    let raw = params.norm.denorm_target(norm);
+                    let pred = Prediction {
+                        latency_ms: raw[0],
+                        memory_mb: raw[1],
+                        energy_j: raw[2],
+                        mig_profile: mig::predict_profile(raw[1])
+                            .map(|p| p.name().to_string()),
+                    };
+                    m.requests += 1;
+                    if m.latencies.len() < 100_000 {
+                        m.latencies.push(job.enqueued.elapsed().as_secs_f64());
+                    }
+                    let _ = job.reply.send(Ok(pred));
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for job in jobs {
+                    m.errors += 1;
+                    let _ = job.reply.send(Err(anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+    log_info!("coordinator executor shutting down");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_options_reasonable() {
+        let o = CoordinatorOptions::default();
+        assert!(o.max_wait <= Duration::from_millis(10));
+        assert!(o.queue_depth >= 64);
+    }
+
+    #[test]
+    fn metrics_mean_fill() {
+        let m = Metrics {
+            batches: 4,
+            batch_fill_sum: 10,
+            ..Default::default()
+        };
+        assert!((m.mean_batch_fill() - 2.5).abs() < 1e-12);
+        assert_eq!(Metrics::default().mean_batch_fill(), 0.0);
+    }
+
+    // End-to-end coordinator tests (require artifacts + PJRT) live in
+    // rust/tests/coordinator_integration.rs.
+}

@@ -1,0 +1,118 @@
+//! TCP JSON-lines front end: one line in (request), one line out
+//! (prediction or error). Each connection gets a handler thread; all
+//! handlers share the coordinator's request queue (the executor batches
+//! across connections — that is the point of the dynamic batcher).
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::ir::Graph;
+use crate::log_info;
+
+use super::protocol::{error_response, parse_request};
+use super::server::Coordinator;
+
+/// Serve forever on `addr` (e.g. "127.0.0.1:7401"). Returns the bound port
+/// via the callback (useful with port 0 in tests).
+pub fn serve(coordinator: Arc<Coordinator>, addr: &str, on_bound: impl FnOnce(u16)) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    let port = listener.local_addr()?.port();
+    log_info!("dippm serving on port {port}");
+    on_bound(port);
+    for stream in listener.incoming() {
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                crate::log_warn!("accept failed: {e}");
+                continue;
+            }
+        };
+        let coord = coordinator.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = handle_connection(&coord, stream) {
+                crate::log_debug!("connection ended: {e}");
+            }
+        });
+    }
+    Ok(())
+}
+
+fn handle_connection(coordinator: &Coordinator, stream: TcpStream) -> Result<()> {
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match parse_request(&line) {
+            Ok(graph) => match coordinator.predict(graph) {
+                Ok(pred) => pred.to_json().to_string(),
+                Err(e) => error_response(&format!("{e:#}")),
+            },
+            Err(e) => error_response(&e),
+        };
+        writer.write_all(response.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+/// Minimal client for tests and the serve_demo example.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    /// Send a raw request line, read one response line.
+    pub fn roundtrip(&mut self, request_line: &str) -> Result<String> {
+        self.writer.write_all(request_line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(line.trim_end().to_string())
+    }
+
+    /// Convenience: predict a graph via its native-format export.
+    pub fn predict_graph(&mut self, graph: &Graph) -> Result<String> {
+        let model = crate::frontends::export(crate::frontends::Framework::Native, graph);
+        let line = format!(
+            "{{\"framework\":\"native\",\"model\":{}}}",
+            compact_json(&model)
+        );
+        self.roundtrip(&line)
+    }
+}
+
+/// Re-serialize pretty JSON compactly so it fits on one protocol line.
+fn compact_json(pretty: &str) -> String {
+    crate::util::json::Json::parse(pretty)
+        .map(|j| j.to_string())
+        .unwrap_or_else(|_| pretty.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compact_json_flattens() {
+        let c = compact_json("{\n  \"a\": 1\n}");
+        assert_eq!(c, "{\"a\":1}");
+        assert!(!c.contains('\n'));
+    }
+}

@@ -1,0 +1,346 @@
+//! Binary dataset serialization (version-tagged, little-endian).
+//!
+//! Layout: magic "DIPPMDS" + u8 version, norm stats, splits, then samples
+//! (graph structure + statics + targets). Node names are not persisted —
+//! they are debugging metadata; reloaded graphs get canonical `op_id` names.
+
+use std::io::{self, Read, Write};
+
+use crate::ir::{Attrs, Graph, Node, OpKind};
+use crate::simulator::Measurement;
+
+use super::normalize::{NormStats, N_STATICS, N_TARGETS};
+use super::split::Splits;
+use super::{Dataset, Sample};
+
+const MAGIC: &[u8; 7] = b"DIPPMDS";
+const VERSION: u8 = 1;
+
+// ---- little-endian primitives ---------------------------------------------
+
+fn w_u32(w: &mut impl Write, v: u32) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn w_u64(w: &mut impl Write, v: u64) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn w_f64(w: &mut impl Write, v: f64) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn w_str(w: &mut impl Write, s: &str) -> io::Result<()> {
+    w_u32(w, s.len() as u32)?;
+    w.write_all(s.as_bytes())
+}
+
+fn r_u8(r: &mut impl Read) -> io::Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+fn r_u32(r: &mut impl Read) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn r_u64(r: &mut impl Read) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn r_f64(r: &mut impl Read) -> io::Result<f64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
+
+fn r_str(r: &mut impl Read) -> io::Result<String> {
+    let len = r_u32(r)? as usize;
+    if len > 1 << 20 {
+        return Err(bad("string too long"));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    String::from_utf8(buf).map_err(|_| bad("invalid utf-8"))
+}
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+// ---- graph ----------------------------------------------------------------
+
+fn write_graph(w: &mut impl Write, g: &Graph) -> io::Result<()> {
+    w_str(w, &g.family)?;
+    w_str(w, &g.variant)?;
+    w_u32(w, g.batch as u32)?;
+    w_u32(w, g.nodes.len() as u32)?;
+    for n in &g.nodes {
+        w.write_all(&[op_code(n.op)])?;
+        let (kh, kw) = n.attrs.kernel.unwrap_or((0, 0));
+        let (sh, sw) = n.attrs.strides.unwrap_or((0, 0));
+        w_u32(w, kh as u32)?;
+        w_u32(w, kw as u32)?;
+        w_u32(w, sh as u32)?;
+        w_u32(w, sw as u32)?;
+        w_u32(w, n.attrs.padding as u32)?;
+        w_u32(w, n.attrs.groups as u32)?;
+        w_u32(w, n.attrs.units.unwrap_or(0) as u32)?;
+        w_u64(w, n.attrs.axis.map(|a| (a + 16) as u64 + 1).unwrap_or(0))?;
+        w_u32(w, n.out_shape.len() as u32)?;
+        for &d in &n.out_shape {
+            w_u32(w, d as u32)?;
+        }
+        w_u32(w, n.inputs.len() as u32)?;
+        for &i in &n.inputs {
+            w_u32(w, i as u32)?;
+        }
+    }
+    Ok(())
+}
+
+fn read_graph(r: &mut impl Read) -> io::Result<Graph> {
+    let family = r_str(r)?;
+    let variant = r_str(r)?;
+    let batch = r_u32(r)? as usize;
+    let n_nodes = r_u32(r)? as usize;
+    if n_nodes > 1 << 16 {
+        return Err(bad("node count implausible"));
+    }
+    let mut nodes = Vec::with_capacity(n_nodes);
+    for id in 0..n_nodes {
+        let op = op_from_code(r_u8(r)?).ok_or_else(|| bad("unknown op code"))?;
+        let kh = r_u32(r)? as usize;
+        let kw = r_u32(r)? as usize;
+        let sh = r_u32(r)? as usize;
+        let sw = r_u32(r)? as usize;
+        let padding = r_u32(r)? as usize;
+        let groups = r_u32(r)? as usize;
+        let units = r_u32(r)? as usize;
+        let axis_raw = r_u64(r)?;
+        let n_dims = r_u32(r)? as usize;
+        let mut out_shape = Vec::with_capacity(n_dims);
+        for _ in 0..n_dims {
+            out_shape.push(r_u32(r)? as usize);
+        }
+        let n_in = r_u32(r)? as usize;
+        let mut inputs = Vec::with_capacity(n_in);
+        for _ in 0..n_in {
+            let i = r_u32(r)? as usize;
+            if i >= id {
+                return Err(bad("non-topological input reference"));
+            }
+            inputs.push(i);
+        }
+        nodes.push(Node {
+            id,
+            op,
+            attrs: Attrs {
+                kernel: if kh == 0 { None } else { Some((kh, kw)) },
+                strides: if sh == 0 { None } else { Some((sh, sw)) },
+                padding,
+                groups,
+                units: if units == 0 { None } else { Some(units) },
+                axis: if axis_raw == 0 {
+                    None
+                } else {
+                    Some(axis_raw as i64 - 1 - 16)
+                },
+            },
+            inputs,
+            out_shape,
+            name: format!("{}_{id}", op.name()),
+        });
+    }
+    let g = Graph {
+        nodes,
+        batch,
+        family,
+        variant,
+    };
+    g.validate().map_err(|e| bad(&format!("invalid graph: {e}")))?;
+    Ok(g)
+}
+
+fn op_code(op: OpKind) -> u8 {
+    crate::ir::op::ALL_OPS.iter().position(|&o| o == op).unwrap() as u8
+}
+
+fn op_from_code(code: u8) -> Option<OpKind> {
+    crate::ir::op::ALL_OPS.get(code as usize).copied()
+}
+
+// ---- dataset ----------------------------------------------------------------
+
+pub fn write_dataset(w: &mut impl Write, ds: &Dataset) -> io::Result<()> {
+    w.write_all(MAGIC)?;
+    w.write_all(&[VERSION])?;
+    // Norm stats.
+    for v in ds.norm.target_mean.iter().chain(&ds.norm.target_std) {
+        w_f64(w, *v)?;
+    }
+    for v in ds.norm.static_mean.iter().chain(&ds.norm.static_std) {
+        w_f64(w, *v)?;
+    }
+    // Splits.
+    for split in [&ds.splits.train, &ds.splits.val, &ds.splits.test] {
+        w_u32(w, split.len() as u32)?;
+        for &i in split {
+            w_u32(w, i as u32)?;
+        }
+    }
+    // Samples.
+    w_u32(w, ds.samples.len() as u32)?;
+    for s in &ds.samples {
+        write_graph(w, &s.graph)?;
+        for v in &s.statics {
+            w_f64(w, *v)?;
+        }
+        w_f64(w, s.y.latency_ms)?;
+        w_f64(w, s.y.memory_mb)?;
+        w_f64(w, s.y.energy_j)?;
+    }
+    Ok(())
+}
+
+pub fn read_dataset(r: &mut impl Read) -> io::Result<Dataset> {
+    let mut magic = [0u8; 7];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(bad("not a DIPPM dataset file"));
+    }
+    if r_u8(r)? != VERSION {
+        return Err(bad("unsupported dataset version"));
+    }
+    let mut norm = NormStats::default();
+    for i in 0..N_TARGETS {
+        norm.target_mean[i] = r_f64(r)?;
+    }
+    for i in 0..N_TARGETS {
+        norm.target_std[i] = r_f64(r)?;
+    }
+    for i in 0..N_STATICS {
+        norm.static_mean[i] = r_f64(r)?;
+    }
+    for i in 0..N_STATICS {
+        norm.static_std[i] = r_f64(r)?;
+    }
+    fn read_split(r: &mut impl Read) -> io::Result<Vec<usize>> {
+        let n = r_u32(r)? as usize;
+        (0..n).map(|_| Ok(r_u32(r)? as usize)).collect()
+    }
+    let train = read_split(r)?;
+    let val = read_split(r)?;
+    let test = read_split(r)?;
+    let n = r_u32(r)? as usize;
+    let mut samples = Vec::with_capacity(n);
+    for _ in 0..n {
+        let graph = read_graph(r)?;
+        let mut statics = [0.0; N_STATICS];
+        for v in &mut statics {
+            *v = r_f64(r)?;
+        }
+        let y = Measurement {
+            latency_ms: r_f64(r)?,
+            memory_mb: r_f64(r)?,
+            energy_j: r_f64(r)?,
+        };
+        samples.push(Sample { graph, statics, y });
+    }
+    Ok(Dataset {
+        samples,
+        norm,
+        splits: Splits { train, val, test },
+    })
+}
+
+pub fn save(path: &str, ds: &Dataset) -> io::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(f);
+    write_dataset(&mut w, ds)
+}
+
+pub fn load(path: &str) -> io::Result<Dataset> {
+    let f = std::fs::File::open(path)?;
+    let mut r = std::io::BufReader::new(f);
+    read_dataset(&mut r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_preserves_everything_but_names() {
+        let ds = Dataset::build(0.004, 3, 2);
+        let mut buf = Vec::new();
+        write_dataset(&mut buf, &ds).unwrap();
+        let back = read_dataset(&mut buf.as_slice()).unwrap();
+        assert_eq!(ds.len(), back.len());
+        assert_eq!(ds.norm, back.norm);
+        assert_eq!(ds.splits, back.splits);
+        for (a, b) in ds.samples.iter().zip(&back.samples) {
+            assert_eq!(a.y, b.y);
+            assert_eq!(a.statics, b.statics);
+            assert_eq!(a.graph.batch, b.graph.batch);
+            assert_eq!(a.graph.variant, b.graph.variant);
+            assert_eq!(a.graph.nodes.len(), b.graph.nodes.len());
+            for (x, y) in a.graph.nodes.iter().zip(&b.graph.nodes) {
+                assert_eq!(x.op, y.op);
+                assert_eq!(x.attrs, y.attrs);
+                assert_eq!(x.inputs, y.inputs);
+                assert_eq!(x.out_shape, y.out_shape);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let buf = b"NOTDIPPM.....".to_vec();
+        assert!(read_dataset(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let ds = Dataset::build(0.004, 3, 2);
+        let mut buf = Vec::new();
+        write_dataset(&mut buf, &ds).unwrap();
+        buf.truncate(buf.len() / 2);
+        assert!(read_dataset(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn negative_axis_roundtrips() {
+        // Mean/concat axes can be negative in principle; check the codec.
+        let mut b = crate::ir::GraphBuilder::new("t", "t", 1);
+        let x = b.input(vec![1, 4, 8]);
+        b.add(
+            crate::ir::OpKind::Softmax,
+            crate::ir::Attrs::with_axis(-1),
+            &[x],
+        );
+        let g = b.finish();
+        let ds = Dataset {
+            samples: vec![Sample {
+                graph: g,
+                statics: [0.0; 5],
+                y: Measurement {
+                    latency_ms: 1.0,
+                    memory_mb: 2.0,
+                    energy_j: 3.0,
+                },
+            }],
+            norm: NormStats::default(),
+            splits: Splits::default(),
+        };
+        let mut buf = Vec::new();
+        write_dataset(&mut buf, &ds).unwrap();
+        let back = read_dataset(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.samples[0].graph.nodes[1].attrs.axis, Some(-1));
+    }
+}

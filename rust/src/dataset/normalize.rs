@@ -1,0 +1,126 @@
+//! Normalization statistics for targets and static features.
+//!
+//! Targets (latency ms, memory MB, energy J) span 4+ orders of magnitude
+//! across the dataset, so the model regresses in log1p + z-score space;
+//! statics (MACs, batch, op counts) get the same treatment. Statistics are
+//! computed on the *training split only* (no test leakage) and stored with
+//! the dataset + checkpoints so serving reuses the exact training transform.
+
+use crate::util::stats::Welford;
+
+pub const N_TARGETS: usize = 3;
+pub const N_STATICS: usize = 5;
+
+/// Per-dimension log1p + z-score transform parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NormStats {
+    pub target_mean: [f64; N_TARGETS],
+    pub target_std: [f64; N_TARGETS],
+    pub static_mean: [f64; N_STATICS],
+    pub static_std: [f64; N_STATICS],
+}
+
+impl Default for NormStats {
+    fn default() -> Self {
+        NormStats {
+            target_mean: [0.0; N_TARGETS],
+            target_std: [1.0; N_TARGETS],
+            static_mean: [0.0; N_STATICS],
+            static_std: [1.0; N_STATICS],
+        }
+    }
+}
+
+impl NormStats {
+    /// Fit from raw (un-logged) target triples and static vectors.
+    pub fn fit<'a>(
+        targets: impl Iterator<Item = [f64; N_TARGETS]>,
+        statics: impl Iterator<Item = &'a [f64; N_STATICS]>,
+    ) -> NormStats {
+        let mut tw = [Welford::new(), Welford::new(), Welford::new()];
+        for t in targets {
+            for (w, v) in tw.iter_mut().zip(t) {
+                w.push(v.max(0.0).ln_1p());
+            }
+        }
+        let mut sw: [Welford; N_STATICS] = Default::default();
+        for s in statics {
+            for (w, v) in sw.iter_mut().zip(s) {
+                w.push(v.max(0.0).ln_1p());
+            }
+        }
+        let mut out = NormStats::default();
+        for i in 0..N_TARGETS {
+            out.target_mean[i] = tw[i].mean();
+            out.target_std[i] = tw[i].std().max(1e-6);
+        }
+        for i in 0..N_STATICS {
+            out.static_mean[i] = sw[i].mean();
+            out.static_std[i] = sw[i].std().max(1e-6);
+        }
+        out
+    }
+
+    pub fn norm_target(&self, raw: [f64; N_TARGETS]) -> [f32; N_TARGETS] {
+        std::array::from_fn(|i| {
+            ((raw[i].max(0.0).ln_1p() - self.target_mean[i]) / self.target_std[i]) as f32
+        })
+    }
+
+    pub fn denorm_target(&self, norm: [f32; N_TARGETS]) -> [f64; N_TARGETS] {
+        // Clamp at 0: targets are physical quantities (ms, MB, J); an
+        // untrained/underfit model must not report negative predictions.
+        std::array::from_fn(|i| {
+            (norm[i] as f64 * self.target_std[i] + self.target_mean[i])
+                .exp_m1()
+                .max(0.0)
+        })
+    }
+
+    pub fn norm_static(&self, raw: &[f64; N_STATICS]) -> [f32; N_STATICS] {
+        std::array::from_fn(|i| {
+            ((raw[i].max(0.0).ln_1p() - self.static_mean[i]) / self.static_std[i]) as f32
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_target() {
+        let stats = NormStats::fit(
+            [[1.0, 2000.0, 0.5], [10.0, 4000.0, 5.0], [100.0, 8000.0, 50.0]]
+                .into_iter(),
+            [[1e9, 8.0, 50.0, 1.0, 40.0]].iter(),
+        );
+        let raw = [12.5, 3000.0, 2.25];
+        let back = stats.denorm_target(stats.norm_target(raw));
+        for (a, b) in raw.iter().zip(back) {
+            assert!((a - b).abs() / a < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn normalized_train_data_is_standardized() {
+        let targets: Vec<[f64; 3]> = (1..200)
+            .map(|i| [i as f64, (i * i) as f64, (i as f64).sqrt()])
+            .collect();
+        let stats = NormStats::fit(targets.iter().copied(), [].iter());
+        let normed: Vec<[f32; 3]> =
+            targets.iter().map(|&t| stats.norm_target(t)).collect();
+        for d in 0..3 {
+            let mean: f64 = normed.iter().map(|n| n[d] as f64).sum::<f64>()
+                / normed.len() as f64;
+            assert!(mean.abs() < 0.05, "dim {d} mean {mean}");
+        }
+    }
+
+    #[test]
+    fn default_is_identity_in_log_space() {
+        let s = NormStats::default();
+        let n = s.norm_target([std::f64::consts::E - 1.0, 0.0, 0.0]);
+        assert!((n[0] - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,79 @@
+//! Deterministic train/validation/test split (paper Table 3: 70/15/15,
+//! random partition).
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Splits {
+    pub train: Vec<usize>,
+    pub val: Vec<usize>,
+    pub test: Vec<usize>,
+}
+
+impl Splits {
+    /// Random partition of `0..n` into train/val/test by fractions
+    /// (`val` gets the remainder of 1 - train - test symmetry: the paper
+    /// uses 70/15/15, so pass train=0.70, val=0.15).
+    pub fn fractions(n: usize, train: f64, val: f64, seed: u64) -> Splits {
+        assert!(train > 0.0 && val >= 0.0 && train + val < 1.0 + 1e-9);
+        let mut idx: Vec<usize> = (0..n).collect();
+        let mut rng = Rng::new(seed ^ 0x5911_7D41_u64);
+        rng.shuffle(&mut idx);
+        let n_train = ((n as f64) * train).round() as usize;
+        let n_val = ((n as f64) * val).round() as usize;
+        let n_train = n_train.min(n);
+        let n_val = n_val.min(n - n_train);
+        Splits {
+            train: idx[..n_train].to_vec(),
+            val: idx[n_train..n_train + n_val].to_vec(),
+            test: idx[n_train + n_val..].to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_is_complete_and_disjoint() {
+        let s = Splits::fractions(1000, 0.70, 0.15, 1);
+        assert_eq!(s.train.len(), 700);
+        assert_eq!(s.val.len(), 150);
+        assert_eq!(s.test.len(), 150);
+        let mut all: Vec<usize> = s
+            .train
+            .iter()
+            .chain(&s.val)
+            .chain(&s.test)
+            .copied()
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Splits::fractions(100, 0.7, 0.15, 9);
+        let b = Splits::fractions(100, 0.7, 0.15, 9);
+        let c = Splits::fractions(100, 0.7, 0.15, 10);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn split_is_shuffled_not_contiguous() {
+        let s = Splits::fractions(1000, 0.7, 0.15, 3);
+        // The train set should not be simply 0..700.
+        assert_ne!(s.train, (0..700).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn tiny_n_does_not_panic() {
+        let s = Splits::fractions(3, 0.7, 0.15, 0);
+        assert_eq!(
+            s.train.len() + s.val.len() + s.test.len(),
+            3
+        );
+    }
+}

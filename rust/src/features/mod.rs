@@ -1,0 +1,13 @@
+//! Featurization: the Node Feature Generator (paper §3.2, Algorithm 1) and
+//! the Static Feature Generator (paper §3.3, eq. 1).
+//!
+//! The NFG walks the IR in post-order, emits a fixed 32-feature vector per
+//! operator node (one-hot category ⊕ attributes ⊕ output shape) and the
+//! row-normalized adjacency-with-self-loops Â the dense GraphSAGE kernel
+//! consumes. The SFG emits `F_s = MACs ⊕ batch ⊕ #conv ⊕ #dense ⊕ #relu`.
+
+pub mod node_features;
+pub mod static_features;
+
+pub use node_features::{encode_graph, fill_padded, FeatureConfig, GraphFeatures};
+pub use static_features::{static_features, STATIC_FEATS};

@@ -1,0 +1,298 @@
+//! Node Feature Generator — paper Algorithm 1.
+//!
+//! For each operator node: `F_node = one_hot(op) ⊕ F_attr ⊕ F_shape`, fixed
+//! length 32 (18 one-hot categories + 6 attribute features + 8 shape
+//! features). All features are scaled to roughly [0, 1] with log transforms
+//! on magnitudes so the GNN sees well-conditioned inputs.
+//!
+//! The adjacency matrix Â is row-normalized with self-loops — the mean
+//! aggregator of the GraphSAGE layer folded into the matrix (DESIGN.md §7),
+//! emitted in the dense padded layout the AOT kernels are specialized to.
+
+use crate::ir::infer::numel;
+use crate::ir::op::N_CATEGORIES;
+use crate::ir::Graph;
+use crate::simulator::cost::op_cost;
+
+/// Number of attribute features.
+pub const ATTR_FEATS: usize = 6;
+/// Number of output-shape features.
+pub const SHAPE_FEATS: usize = 8;
+/// Total node feature length — the paper fixes this at 32 (§3.2).
+pub const NODE_FEATS: usize = N_CATEGORIES + ATTR_FEATS + SHAPE_FEATS;
+
+/// Shape configuration of the padded encoding (mirrors the AOT manifest).
+#[derive(Debug, Clone, Copy)]
+pub struct FeatureConfig {
+    pub max_nodes: usize,
+    pub node_feats: usize,
+}
+
+impl FeatureConfig {
+    pub fn new(max_nodes: usize) -> FeatureConfig {
+        FeatureConfig {
+            max_nodes,
+            node_feats: NODE_FEATS,
+        }
+    }
+}
+
+/// Dense featurized graph: X [n, F] row-major, Â [n, n] row-major, n nodes.
+#[derive(Debug, Clone)]
+pub struct GraphFeatures {
+    pub n: usize,
+    pub x: Vec<f32>,
+    pub a_hat: Vec<f32>,
+}
+
+/// Encode one node's 32 features into `out`.
+fn node_feature_row(graph: &Graph, id: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), NODE_FEATS);
+    let node = &graph.nodes[id];
+    out.fill(0.0);
+
+    // --- one-hot operator category (paper line 6: one_hot_encoder) ------
+    out[node.op.category()] = 1.0;
+
+    // --- attribute features (line 7: ExtractAttributes) -----------------
+    let a = &node.attrs;
+    let base = N_CATEGORIES;
+    let (kh, kw) = a.kernel.unwrap_or((0, 0));
+    out[base] = kh as f32 / 11.0;
+    out[base + 1] = kw as f32 / 11.0;
+    let (sh, _) = a.strides.unwrap_or((0, 0));
+    out[base + 2] = sh as f32 / 4.0;
+    out[base + 3] = a.padding as f32 / 5.0;
+    out[base + 4] = ((a.groups.max(1)) as f32).log2() / 10.0;
+    out[base + 5] = a.axis.unwrap_or(0) as f32 / 4.0;
+
+    // --- output-shape features (line 8: ExtractOutshape) ----------------
+    let s = &node.out_shape;
+    let base = N_CATEGORIES + ATTR_FEATS;
+    for d in 0..4 {
+        let v = s.get(d).copied().unwrap_or(0) as f32;
+        out[base + d] = (v + 1.0).ln() / 8.0;
+    }
+    out[base + 4] = s.len() as f32 / 4.0;
+    out[base + 5] = (numel(s) as f32 + 1.0).ln() / 18.0;
+    let c = op_cost(graph, node);
+    out[base + 6] = ((c.flops + 1.0) as f32).ln() / 26.0;
+    out[base + 7] = ((c.total_bytes() + 1.0) as f32).ln() / 22.0;
+}
+
+/// Encode the whole graph (Algorithm 1's CreateGraph): X and Â at natural
+/// (unpadded) size, nodes in the IR's topological order — the same order
+/// the post-order filter yields up to relabeling, and the order the padded
+/// batch uses.
+pub fn encode_graph(graph: &Graph) -> GraphFeatures {
+    let n = graph.n_nodes();
+    let mut x = vec![0.0f32; n * NODE_FEATS];
+    for id in 0..n {
+        node_feature_row(graph, id, &mut x[id * NODE_FEATS..(id + 1) * NODE_FEATS]);
+    }
+
+    // Â: adjacency with self-loops, row-normalized (mean aggregation).
+    let mut a_hat = vec![0.0f32; n * n];
+    for node in &graph.nodes {
+        let i = node.id;
+        a_hat[i * n + i] = 1.0;
+        for &src in &node.inputs {
+            a_hat[i * n + src] = 1.0;
+        }
+    }
+    for i in 0..n {
+        let row = &mut a_hat[i * n..(i + 1) * n];
+        let deg: f32 = row.iter().sum();
+        if deg > 0.0 {
+            for v in row.iter_mut() {
+                *v /= deg;
+            }
+        }
+    }
+    GraphFeatures { n, x, a_hat }
+}
+
+/// Fill one padded sample into caller-provided buffers (the training/serving
+/// batch assemblers call this directly into their pinned batch buffers —
+/// the serving hot path allocates nothing).
+///
+/// `x_out` is [max_nodes * node_feats], `a_out` [max_nodes²], `mask_out`
+/// [max_nodes]. Returns Err if the graph exceeds `max_nodes`.
+pub fn fill_padded(
+    graph: &Graph,
+    cfg: FeatureConfig,
+    x_out: &mut [f32],
+    a_out: &mut [f32],
+    mask_out: &mut [f32],
+) -> Result<(), String> {
+    let n = graph.n_nodes();
+    let m = cfg.max_nodes;
+    if n > m {
+        return Err(format!(
+            "graph {} has {n} nodes > max_nodes {m}",
+            graph.variant
+        ));
+    }
+    assert_eq!(cfg.node_feats, NODE_FEATS, "manifest/feature length mismatch");
+    assert_eq!(x_out.len(), m * cfg.node_feats);
+    assert_eq!(a_out.len(), m * m);
+    assert_eq!(mask_out.len(), m);
+
+    x_out.fill(0.0);
+    a_out.fill(0.0);
+    mask_out.fill(0.0);
+
+    for id in 0..n {
+        node_feature_row(
+            graph,
+            id,
+            &mut x_out[id * cfg.node_feats..(id + 1) * cfg.node_feats],
+        );
+        mask_out[id] = 1.0;
+    }
+    // Row-normalized adjacency with self-loops, directly in padded layout.
+    for node in &graph.nodes {
+        let i = node.id;
+        a_out[i * m + i] = 1.0;
+        for &src in &node.inputs {
+            a_out[i * m + src] = 1.0;
+        }
+    }
+    for i in 0..n {
+        let row = &mut a_out[i * m..i * m + n];
+        let deg: f32 = row.iter().sum();
+        if deg > 0.0 {
+            for v in row.iter_mut() {
+                *v /= deg;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Attrs, GraphBuilder, OpKind};
+
+    fn tiny() -> Graph {
+        let mut b = GraphBuilder::new("t", "tiny", 2);
+        let x = b.input(vec![2, 3, 16, 16]);
+        let c = b.conv_relu(x, 8, 3, 2, 1);
+        let p = b.add(OpKind::GlobalAvgPool2d, Attrs::none(), &[c]);
+        let f = b.add(OpKind::Flatten, Attrs::none(), &[p]);
+        b.dense(f, 10);
+        b.finish()
+    }
+
+    #[test]
+    fn feature_length_is_32() {
+        assert_eq!(NODE_FEATS, 32); // the paper's fixed length (§3.2)
+    }
+
+    #[test]
+    fn one_hot_is_exclusive() {
+        let g = tiny();
+        let f = encode_graph(&g);
+        for i in 0..f.n {
+            let row = &f.x[i * NODE_FEATS..i * NODE_FEATS + N_CATEGORIES];
+            let ones = row.iter().filter(|&&v| v == 1.0).count();
+            assert_eq!(ones, 1, "node {i}");
+        }
+    }
+
+    #[test]
+    fn rows_of_a_hat_sum_to_one() {
+        let g = tiny();
+        let f = encode_graph(&g);
+        for i in 0..f.n {
+            let s: f32 = f.a_hat[i * f.n..(i + 1) * f.n].iter().sum();
+            assert!((s - 1.0).abs() < 1e-6, "row {i} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn self_loops_present() {
+        let g = tiny();
+        let f = encode_graph(&g);
+        for i in 0..f.n {
+            assert!(f.a_hat[i * f.n + i] > 0.0);
+        }
+    }
+
+    #[test]
+    fn features_bounded() {
+        let g = tiny();
+        let f = encode_graph(&g);
+        for (i, &v) in f.x.iter().enumerate() {
+            assert!(v.is_finite() && (-1.5..=2.0).contains(&v), "x[{i}] = {v}");
+        }
+    }
+
+    #[test]
+    fn conv_attrs_encoded() {
+        let g = tiny();
+        let f = encode_graph(&g);
+        // node 1 is the conv: kernel 3x3, stride 2.
+        let row = &f.x[NODE_FEATS..2 * NODE_FEATS];
+        assert!((row[N_CATEGORIES] - 3.0 / 11.0).abs() < 1e-6);
+        assert!((row[N_CATEGORIES + 2] - 2.0 / 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn encoding_is_deterministic() {
+        let g = tiny();
+        let f1 = encode_graph(&g);
+        let f2 = encode_graph(&g);
+        assert_eq!(f1.x, f2.x);
+        assert_eq!(f1.a_hat, f2.a_hat);
+    }
+
+    #[test]
+    fn fill_padded_matches_unpadded() {
+        let g = tiny();
+        let cfg = FeatureConfig::new(10);
+        let mut x = vec![9.0; 10 * NODE_FEATS];
+        let mut a = vec![9.0; 100];
+        let mut mask = vec![9.0; 10];
+        fill_padded(&g, cfg, &mut x, &mut a, &mut mask).unwrap();
+        let f = encode_graph(&g);
+        let n = f.n;
+        for i in 0..n {
+            assert_eq!(
+                &x[i * NODE_FEATS..(i + 1) * NODE_FEATS],
+                &f.x[i * NODE_FEATS..(i + 1) * NODE_FEATS]
+            );
+            for j in 0..n {
+                assert_eq!(a[i * 10 + j], f.a_hat[i * n + j]);
+            }
+        }
+        assert_eq!(&mask[..n], &vec![1.0; n][..]);
+        assert_eq!(&mask[n..], &vec![0.0; 10 - n][..]);
+        // Padding region zeroed.
+        assert!(x[n * NODE_FEATS..].iter().all(|&v| v == 0.0));
+        assert!(a[n * 10..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn fill_padded_rejects_oversize() {
+        let g = tiny();
+        let cfg = FeatureConfig::new(3);
+        let mut x = vec![0.0; 3 * NODE_FEATS];
+        let mut a = vec![0.0; 9];
+        let mut mask = vec![0.0; 3];
+        assert!(fill_padded(&g, cfg, &mut x, &mut a, &mut mask).is_err());
+    }
+
+    #[test]
+    fn different_graphs_different_features() {
+        let g1 = tiny();
+        let mut b = GraphBuilder::new("t", "other", 2);
+        let x = b.input(vec![2, 3, 16, 16]);
+        b.conv_relu(x, 16, 5, 1, 2);
+        let g2 = b.finish();
+        let f1 = encode_graph(&g1);
+        let f2 = encode_graph(&g2);
+        assert_ne!(f1.x[..2 * NODE_FEATS], f2.x[..2 * NODE_FEATS]);
+    }
+}

@@ -1,0 +1,65 @@
+//! Static Feature Generator — paper §3.3, eq. (1):
+//!
+//! `F_s = F_mac ⊕ F_batch ⊕ F_Tconv ⊕ F_Tdense ⊕ F_Trelu`
+//!
+//! MACs follow the TVM relay analysis convention (conv2d, conv2d_transpose,
+//! dense, batch_matmul — plus depthwise, which TVM counts as grouped conv).
+//! Values are emitted *raw* here; normalization (log1p + z-score over the
+//! training split) happens in `dataset::normalize` so serving can reuse the
+//! exact training statistics.
+
+use crate::ir::{Graph, OpKind};
+use crate::simulator::cost::total_macs;
+
+pub const STATIC_FEATS: usize = 5;
+
+/// Raw static features of a graph, in the paper's eq. (1) order.
+pub fn static_features(graph: &Graph) -> [f64; STATIC_FEATS] {
+    let conv = graph.count_op(OpKind::Conv2d)
+        + graph.count_op(OpKind::DepthwiseConv2d)
+        + graph.count_op(OpKind::Conv2dTranspose);
+    [
+        total_macs(graph),
+        graph.batch as f64,
+        conv as f64,
+        graph.count_op(OpKind::Dense) as f64,
+        graph.count_op(OpKind::Relu) as f64,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::GraphBuilder;
+
+    #[test]
+    fn counts_and_macs() {
+        let mut b = GraphBuilder::new("t", "t", 8);
+        let x = b.input(vec![8, 3, 32, 32]);
+        let c1 = b.conv_relu(x, 16, 3, 1, 1);
+        let c2 = b.conv_relu(c1, 16, 3, 1, 1);
+        let p = b.add(crate::ir::OpKind::GlobalAvgPool2d, crate::ir::Attrs::none(), &[c2]);
+        let f = b.add(crate::ir::OpKind::Flatten, crate::ir::Attrs::none(), &[p]);
+        b.dense(f, 10);
+        let g = b.finish();
+        let s = static_features(&g);
+        assert!(s[0] > 0.0); // MACs
+        assert_eq!(s[1], 8.0); // batch
+        assert_eq!(s[2], 2.0); // convs
+        assert_eq!(s[3], 1.0); // dense
+        assert_eq!(s[4], 2.0); // relus
+    }
+
+    #[test]
+    fn batch_scales_macs_linearly() {
+        let build = |batch| {
+            let mut b = GraphBuilder::new("t", "t", batch);
+            let x = b.input(vec![batch, 3, 32, 32]);
+            b.conv2d(x, 16, 3, 1, 1);
+            b.finish()
+        };
+        let s1 = static_features(&build(1));
+        let s4 = static_features(&build(4));
+        assert!((s4[0] / s1[0] - 4.0).abs() < 1e-9);
+    }
+}

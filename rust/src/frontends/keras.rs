@@ -1,0 +1,266 @@
+//! TensorFlow frontend: Keras functional-API model config JSON
+//! (`class_name`/`config`/`inbound_nodes`), `channels_first` data format.
+
+use crate::ir::{Attrs, Graph, OpKind};
+use crate::util::json::{Json, JsonObj};
+
+use super::NodeSpec;
+
+fn class_of(op: OpKind) -> (&'static str, Option<&'static str>) {
+    // (class_name, activation-name for Activation layers)
+    match op {
+        OpKind::Input => ("InputLayer", None),
+        OpKind::Conv2d => ("Conv2D", None),
+        OpKind::DepthwiseConv2d => ("DepthwiseConv2D", None),
+        OpKind::Conv2dTranspose => ("Conv2DTranspose", None),
+        OpKind::Dense => ("Dense", None),
+        OpKind::BatchMatmul => ("Dot", None),
+        OpKind::Relu => ("Activation", Some("relu")),
+        OpKind::Gelu => ("Activation", Some("gelu")),
+        OpKind::Sigmoid => ("Activation", Some("sigmoid")),
+        OpKind::HardSwish => ("Activation", Some("hard_swish")),
+        OpKind::Softmax => ("Softmax", None),
+        OpKind::Add => ("Add", None),
+        OpKind::Multiply => ("Multiply", None),
+        OpKind::Concat => ("Concatenate", None),
+        OpKind::MaxPool2d => ("MaxPooling2D", None),
+        OpKind::AvgPool2d => ("AveragePooling2D", None),
+        OpKind::GlobalAvgPool2d => ("GlobalAveragePooling2D", None),
+        OpKind::BatchNorm => ("BatchNormalization", None),
+        OpKind::LayerNorm => ("LayerNormalization", None),
+        OpKind::Reshape => ("Reshape", None),
+        OpKind::Transpose => ("Permute", None),
+        OpKind::Flatten => ("Flatten", None),
+        OpKind::StridedSlice => ("Cropping", None),
+        OpKind::Mean => ("ReduceMean", None),
+    }
+}
+
+pub fn export(graph: &Graph) -> String {
+    let mut root = JsonObj::new();
+    root.insert("class_name", "Functional");
+    let mut cfg = JsonObj::new();
+    cfg.insert("name", graph.variant.as_str());
+    cfg.insert("family", graph.family.as_str());
+    cfg.insert("batch_size", graph.batch);
+    cfg.insert("data_format", "channels_first");
+    let layers: Vec<Json> = graph
+        .nodes
+        .iter()
+        .map(|n| {
+            let (class, act) = class_of(n.op);
+            let mut layer = JsonObj::new();
+            layer.insert("class_name", class);
+            layer.insert("name", n.name.as_str());
+            let mut c = JsonObj::new();
+            if let Some(a) = act {
+                c.insert("activation", a);
+            }
+            if n.op == OpKind::Input {
+                c.insert(
+                    "batch_input_shape",
+                    Json::Arr(n.out_shape.iter().map(|&d| Json::from(d)).collect()),
+                );
+            }
+            if let Some((kh, kw)) = n.attrs.kernel {
+                let key = if matches!(n.op, OpKind::MaxPool2d | OpKind::AvgPool2d) {
+                    "pool_size"
+                } else {
+                    "kernel_size"
+                };
+                c.insert(key, Json::Arr(vec![kh.into(), kw.into()]));
+            }
+            if let Some((sh, sw)) = n.attrs.strides {
+                c.insert("strides", Json::Arr(vec![sh.into(), sw.into()]));
+            }
+            c.insert("padding", n.attrs.padding);
+            if n.attrs.groups != 1 {
+                c.insert("groups", n.attrs.groups);
+            }
+            if let Some(u) = n.attrs.units {
+                let key = if n.op == OpKind::Dense { "units" } else { "filters" };
+                c.insert(key, u);
+            }
+            if let Some(ax) = n.attrs.axis {
+                c.insert("axis", ax);
+            }
+            if matches!(
+                n.op,
+                OpKind::Reshape | OpKind::Transpose | OpKind::StridedSlice
+            ) {
+                c.insert(
+                    "target_shape",
+                    Json::Arr(n.out_shape.iter().map(|&d| Json::from(d)).collect()),
+                );
+            }
+            layer.insert("config", c);
+            layer.insert(
+                "inbound_nodes",
+                Json::Arr(
+                    n.inputs
+                        .iter()
+                        .map(|&i| Json::Str(graph.nodes[i].name.clone()))
+                        .collect(),
+                ),
+            );
+            Json::Obj(layer)
+        })
+        .collect();
+    cfg.insert("layers", Json::Arr(layers));
+    root.insert("config", cfg);
+    Json::Obj(root).to_string_pretty()
+}
+
+fn op_of(class: &str, cfg: &Json) -> Result<OpKind, String> {
+    Ok(match class {
+        "InputLayer" => OpKind::Input,
+        "Conv2D" => OpKind::Conv2d,
+        "DepthwiseConv2D" => OpKind::DepthwiseConv2d,
+        "Conv2DTranspose" => OpKind::Conv2dTranspose,
+        "Dense" => OpKind::Dense,
+        "Dot" => OpKind::BatchMatmul,
+        "Activation" => match cfg.path(&["activation"]).as_str() {
+            Some("relu") => OpKind::Relu,
+            Some("gelu") => OpKind::Gelu,
+            Some("sigmoid") => OpKind::Sigmoid,
+            Some("hard_swish" | "hardswish" | "swish") => OpKind::HardSwish,
+            Some("softmax") => OpKind::Softmax,
+            other => return Err(format!("unsupported activation {other:?}")),
+        },
+        "ReLU" => OpKind::Relu,
+        "Softmax" => OpKind::Softmax,
+        "Add" => OpKind::Add,
+        "Multiply" => OpKind::Multiply,
+        "Concatenate" => OpKind::Concat,
+        "MaxPooling2D" => OpKind::MaxPool2d,
+        "AveragePooling2D" => OpKind::AvgPool2d,
+        "GlobalAveragePooling2D" => OpKind::GlobalAvgPool2d,
+        "BatchNormalization" => OpKind::BatchNorm,
+        "LayerNormalization" => OpKind::LayerNorm,
+        "Reshape" => OpKind::Reshape,
+        "Permute" => OpKind::Transpose,
+        "Flatten" => OpKind::Flatten,
+        "Cropping" => OpKind::StridedSlice,
+        "ReduceMean" => OpKind::Mean,
+        other => return Err(format!("unsupported Keras layer {other:?}")),
+    })
+}
+
+pub fn parse(content: &str) -> Result<Graph, String> {
+    let v = Json::parse(content).map_err(|e| e.to_string())?;
+    let class = v.path(&["class_name"]).as_str().unwrap_or("");
+    if class != "Functional" && class != "Sequential" && class != "Model" {
+        return Err("not a Keras model config".into());
+    }
+    let cfg = v.path(&["config"]);
+    let variant = cfg.path(&["name"]).as_str().unwrap_or("unknown").to_string();
+    let family = cfg
+        .path(&["family"])
+        .as_str()
+        .unwrap_or("unknown")
+        .to_string();
+    let layers = cfg.path(&["layers"]).as_arr().ok_or("missing layers")?;
+    let mut batch = cfg.path(&["batch_size"]).as_usize();
+    let mut specs = Vec::with_capacity(layers.len());
+    for (i, l) in layers.iter().enumerate() {
+        let class = l
+            .path(&["class_name"])
+            .as_str()
+            .ok_or_else(|| format!("layer {i}: missing class_name"))?;
+        let c = l.path(&["config"]);
+        let op = op_of(class, c)?;
+        let name = l
+            .path(&["name"])
+            .as_str()
+            .ok_or_else(|| format!("layer {i}: missing name"))?
+            .to_string();
+        let input_names = l
+            .path(&["inbound_nodes"])
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|s| s.as_str().map(str::to_string))
+            .collect();
+        let pair = |key: &str| -> Option<(usize, usize)> {
+            c.path(&[key]).as_arr().and_then(|arr| {
+                Some((arr.first()?.as_usize()?, arr.get(1)?.as_usize()?))
+            })
+        };
+        let shape_of = |key: &str| -> Option<Vec<usize>> {
+            c.path(&[key]).as_arr().map(|arr| {
+                arr.iter().map(|d| d.as_usize().unwrap_or(0)).collect()
+            })
+        };
+        let shape = match op {
+            OpKind::Input => {
+                let s = shape_of("batch_input_shape");
+                if let Some(ref sh) = s {
+                    batch = batch.or_else(|| sh.first().copied());
+                }
+                s
+            }
+            OpKind::Reshape | OpKind::Transpose | OpKind::StridedSlice => {
+                shape_of("target_shape")
+            }
+            _ => None,
+        };
+        let attrs = Attrs {
+            kernel: pair("kernel_size").or_else(|| pair("pool_size")),
+            strides: pair("strides"),
+            padding: c.path(&["padding"]).as_usize().unwrap_or(0),
+            groups: c.path(&["groups"]).as_usize().unwrap_or(1),
+            units: c
+                .path(&["units"])
+                .as_usize()
+                .or_else(|| c.path(&["filters"]).as_usize()),
+            axis: c.path(&["axis"]).as_i64(),
+        };
+        specs.push(NodeSpec {
+            name,
+            op,
+            attrs,
+            input_names,
+            shape,
+        });
+    }
+    let batch = batch.ok_or("unable to determine batch size")?;
+    super::assemble(&family, &variant, batch, specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontends::structurally_equal;
+    use crate::modelgen::Family;
+
+    #[test]
+    fn vgg_roundtrip() {
+        let g = Family::Vgg.generate(2);
+        let parsed = parse(&export(&g)).unwrap();
+        assert!(structurally_equal(&g, &parsed));
+    }
+
+    #[test]
+    fn swin_roundtrip_with_reshapes() {
+        let g = Family::Swin.generate(0);
+        let parsed = parse(&export(&g)).unwrap();
+        assert!(structurally_equal(&g, &parsed));
+    }
+
+    #[test]
+    fn batch_from_input_shape_when_missing() {
+        let text = r#"{"class_name":"Functional","config":{"name":"m","layers":[
+            {"class_name":"InputLayer","name":"in","config":{"batch_input_shape":[4,3,8,8]},"inbound_nodes":[]},
+            {"class_name":"Conv2D","name":"c","config":{"filters":8,"kernel_size":[3,3],"strides":[1,1],"padding":1},"inbound_nodes":["in"]}
+        ]}}"#;
+        let g = parse(text).unwrap();
+        assert_eq!(g.batch, 4);
+    }
+
+    #[test]
+    fn unknown_layer_rejected() {
+        let text = r#"{"class_name":"Functional","config":{"layers":[
+            {"class_name":"HyperDense","name":"h","config":{},"inbound_nodes":[]}]}}"#;
+        assert!(parse(text).is_err());
+    }
+}

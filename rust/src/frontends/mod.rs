@@ -1,0 +1,378 @@
+//! Framework frontends — the paper's "Relay Parser" (§3.1): parse a DL
+//! model serialized by any of four framework-style exchange formats into
+//! the generalized [`ir::Graph`].
+//!
+//! | module        | stands in for | format |
+//! |---------------|---------------|--------|
+//! | [`native`]    | DIPPM IR      | JSON, lossless round-trip |
+//! | [`torchscript`] | PyTorch     | TorchScript-style node list (`aten::*`) |
+//! | [`keras`]     | TensorFlow    | Keras functional-API config JSON |
+//! | [`onnx_text`] | ONNX          | textual protobuf (`node { op_type: … }`) |
+//! | [`paddle`]    | PaddlePaddle  | program-desc JSON (`elementwise_add`, …) |
+//!
+//! Every frontend lowers to [`NodeSpec`]s and calls [`assemble`], which
+//! resolves name references, topologically sorts, runs shape inference and
+//! validates — so a malformed model fails loudly at parse time.
+
+pub mod keras;
+pub mod native;
+pub mod onnx_text;
+pub mod paddle;
+pub mod torchscript;
+
+use crate::ir::infer::{infer_shape, Shape};
+use crate::ir::{Attrs, Graph, Node, OpKind};
+
+/// Framework tag (paper Fig. 1 lists exactly these inputs + our native IR).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Framework {
+    Native,
+    PyTorch,
+    TensorFlow,
+    Onnx,
+    Paddle,
+}
+
+impl Framework {
+    pub fn name(self) -> &'static str {
+        match self {
+            Framework::Native => "native",
+            Framework::PyTorch => "pytorch",
+            Framework::TensorFlow => "tensorflow",
+            Framework::Onnx => "onnx",
+            Framework::Paddle => "paddle",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Framework> {
+        match s {
+            "native" | "dippm" => Some(Framework::Native),
+            "pytorch" | "torch" | "torchscript" => Some(Framework::PyTorch),
+            "tensorflow" | "tf" | "keras" => Some(Framework::TensorFlow),
+            "onnx" => Some(Framework::Onnx),
+            "paddle" | "paddlepaddle" => Some(Framework::Paddle),
+            _ => None,
+        }
+    }
+}
+
+/// Sniff the framework from file content (used when `--framework` is not
+/// given — mirrors DIPPM's "parse from any framework" usability, Fig. 5).
+pub fn detect(content: &str) -> Option<Framework> {
+    let t = content.trim_start();
+    if t.starts_with("ir_version") || t.contains("op_type:") {
+        return Some(Framework::Onnx);
+    }
+    if !t.starts_with('{') {
+        return None;
+    }
+    if t.contains("\"format\": \"dippm-ir\"") || t.contains("\"format\":\"dippm-ir\"") {
+        Some(Framework::Native)
+    } else if t.contains("aten::") {
+        Some(Framework::PyTorch)
+    } else if t.contains("\"class_name\"") {
+        Some(Framework::TensorFlow)
+    } else if t.contains("\"program\"") {
+        Some(Framework::Paddle)
+    } else {
+        None
+    }
+}
+
+/// Parse with an explicit framework.
+pub fn parse(framework: Framework, content: &str) -> Result<Graph, String> {
+    match framework {
+        Framework::Native => native::parse(content),
+        Framework::PyTorch => torchscript::parse(content),
+        Framework::TensorFlow => keras::parse(content),
+        Framework::Onnx => onnx_text::parse(content),
+        Framework::Paddle => paddle::parse(content),
+    }
+}
+
+/// Parse with auto-detection.
+pub fn parse_any(content: &str) -> Result<Graph, String> {
+    let fw = detect(content).ok_or("unable to detect model framework")?;
+    parse(fw, content)
+}
+
+/// Export a graph to a framework's format (used by modelgen to fabricate
+/// test corpora and by the round-trip property tests).
+pub fn export(framework: Framework, graph: &Graph) -> String {
+    match framework {
+        Framework::Native => native::export(graph),
+        Framework::PyTorch => torchscript::export(graph),
+        Framework::TensorFlow => keras::export(graph),
+        Framework::Onnx => onnx_text::export(graph),
+        Framework::Paddle => paddle::export(graph),
+    }
+}
+
+/// Frontend-agnostic node description before assembly.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub name: String,
+    pub op: OpKind,
+    pub attrs: Attrs,
+    pub input_names: Vec<String>,
+    /// Required for Input and reshape-family ops; optional elsewhere (if
+    /// present it is checked against inference).
+    pub shape: Option<Shape>,
+}
+
+/// Resolve names → ids, topologically sort, infer shapes, validate.
+pub fn assemble(
+    family: &str,
+    variant: &str,
+    batch: usize,
+    specs: Vec<NodeSpec>,
+) -> Result<Graph, String> {
+    use std::collections::HashMap;
+    let n = specs.len();
+    if n == 0 {
+        return Err("model has no nodes".into());
+    }
+    let mut by_name: HashMap<&str, usize> = HashMap::new();
+    for (i, s) in specs.iter().enumerate() {
+        if by_name.insert(s.name.as_str(), i).is_some() {
+            return Err(format!("duplicate node name {:?}", s.name));
+        }
+    }
+    // Resolve inputs.
+    let mut inputs: Vec<Vec<usize>> = Vec::with_capacity(n);
+    for s in &specs {
+        let mut ids = Vec::with_capacity(s.input_names.len());
+        for name in &s.input_names {
+            ids.push(
+                *by_name
+                    .get(name.as_str())
+                    .ok_or_else(|| format!("node {:?} references unknown input {name:?}", s.name))?,
+            );
+        }
+        inputs.push(ids);
+    }
+    // Kahn topological sort (stable: ready nodes processed in spec order).
+    let mut indegree: Vec<usize> = inputs.iter().map(|i| i.len()).collect();
+    let mut consumers: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, ins) in inputs.iter().enumerate() {
+        for &src in ins {
+            consumers[src].push(i);
+        }
+    }
+    let mut order: Vec<usize> = Vec::with_capacity(n);
+    let mut ready: std::collections::BTreeSet<usize> = indegree
+        .iter()
+        .enumerate()
+        .filter(|(_, &d)| d == 0)
+        .map(|(i, _)| i)
+        .collect();
+    while let Some(&i) = ready.iter().next() {
+        ready.remove(&i);
+        order.push(i);
+        for &c in &consumers[i] {
+            indegree[c] -= 1;
+            if indegree[c] == 0 {
+                ready.insert(c);
+            }
+        }
+    }
+    if order.len() != n {
+        return Err("model graph contains a cycle".into());
+    }
+    let mut new_id = vec![0usize; n];
+    for (pos, &old) in order.iter().enumerate() {
+        new_id[old] = pos;
+    }
+    // Build nodes in topological order with shape inference.
+    let mut nodes: Vec<Node> = Vec::with_capacity(n);
+    for (pos, &old) in order.iter().enumerate() {
+        let s = &specs[old];
+        let in_ids: Vec<usize> = inputs[old].iter().map(|&i| new_id[i]).collect();
+        let out_shape: Shape = if s.op == OpKind::Input {
+            s.shape
+                .clone()
+                .ok_or_else(|| format!("input node {:?} lacks a shape", s.name))?
+        } else if matches!(
+            s.op,
+            OpKind::Reshape | OpKind::Transpose | OpKind::StridedSlice
+        ) {
+            s.shape
+                .clone()
+                .ok_or_else(|| format!("{} node {:?} needs an explicit shape", s.op, s.name))?
+        } else {
+            let in_shapes: Vec<&Shape> =
+                in_ids.iter().map(|&i| &nodes[i].out_shape).collect();
+            let inferred = infer_shape(s.op, &s.attrs, &in_shapes)
+                .map_err(|e| format!("node {:?}: {e}", s.name))?;
+            if let Some(declared) = &s.shape {
+                if declared != &inferred {
+                    return Err(format!(
+                        "node {:?} declares shape {declared:?} but inference gives {inferred:?}",
+                        s.name
+                    ));
+                }
+            }
+            inferred
+        };
+        nodes.push(Node {
+            id: pos,
+            op: s.op,
+            attrs: s.attrs.clone(),
+            inputs: in_ids,
+            out_shape,
+            name: s.name.clone(),
+        });
+    }
+    // Normalization: frameworks express depthwise convolution as a grouped
+    // Conv2d with groups == C_in == C_out (PyTorch, ONNX). Canonicalize to
+    // the IR's DepthwiseConv2d so featurization sees one operator identity
+    // regardless of source framework.
+    for i in 0..nodes.len() {
+        let (op, groups, units) = {
+            let n = &nodes[i];
+            (n.op, n.attrs.groups, n.attrs.units)
+        };
+        if op == OpKind::Conv2d && groups > 1 {
+            let in_ch = nodes[nodes[i].inputs[0]].out_shape[1];
+            let out_ch = nodes[i].out_shape[1];
+            if groups == in_ch && units == Some(out_ch) && in_ch == out_ch {
+                nodes[i].op = OpKind::DepthwiseConv2d;
+                nodes[i].attrs.units = None;
+            }
+        }
+    }
+    let graph = Graph {
+        nodes,
+        batch,
+        family: family.to_string(),
+        variant: variant.to_string(),
+    };
+    graph.validate()?;
+    Ok(graph)
+}
+
+/// Structural equality ignoring node names (exports rename nodes).
+pub fn structurally_equal(a: &Graph, b: &Graph) -> bool {
+    a.batch == b.batch
+        && a.nodes.len() == b.nodes.len()
+        && a.nodes.iter().zip(&b.nodes).all(|(x, y)| {
+            x.op == y.op
+                && x.attrs == y.attrs
+                && x.inputs == y.inputs
+                && x.out_shape == y.out_shape
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelgen::{Family, ALL_FAMILIES};
+
+    #[test]
+    fn assemble_sorts_and_infers() {
+        // Deliberately out-of-order specs.
+        let specs = vec![
+            NodeSpec {
+                name: "relu".into(),
+                op: OpKind::Relu,
+                attrs: Attrs::none(),
+                input_names: vec!["conv".into()],
+                shape: None,
+            },
+            NodeSpec {
+                name: "x".into(),
+                op: OpKind::Input,
+                attrs: Attrs::none(),
+                input_names: vec![],
+                shape: Some(vec![1, 3, 8, 8]),
+            },
+            NodeSpec {
+                name: "conv".into(),
+                op: OpKind::Conv2d,
+                attrs: Attrs::conv(4, 3, 1, 1, 1),
+                input_names: vec!["x".into()],
+                shape: None,
+            },
+        ];
+        let g = assemble("t", "t", 1, specs).unwrap();
+        assert_eq!(g.nodes[0].op, OpKind::Input);
+        assert_eq!(g.nodes[2].op, OpKind::Relu);
+        assert_eq!(g.nodes[1].out_shape, vec![1, 4, 8, 8]);
+    }
+
+    #[test]
+    fn assemble_rejects_cycle() {
+        let mk = |name: &str, input: &str| NodeSpec {
+            name: name.into(),
+            op: OpKind::Relu,
+            attrs: Attrs::none(),
+            input_names: vec![input.into()],
+            shape: None,
+        };
+        let specs = vec![mk("a", "b"), mk("b", "a")];
+        assert!(assemble("t", "t", 1, specs).unwrap_err().contains("cycle"));
+    }
+
+    #[test]
+    fn assemble_rejects_unknown_input() {
+        let specs = vec![NodeSpec {
+            name: "a".into(),
+            op: OpKind::Relu,
+            attrs: Attrs::none(),
+            input_names: vec!["ghost".into()],
+            shape: None,
+        }];
+        assert!(assemble("t", "t", 1, specs).is_err());
+    }
+
+    #[test]
+    fn assemble_rejects_duplicate_names() {
+        let mk = || NodeSpec {
+            name: "x".into(),
+            op: OpKind::Input,
+            attrs: Attrs::none(),
+            input_names: vec![],
+            shape: Some(vec![1, 3, 4, 4]),
+        };
+        assert!(assemble("t", "t", 1, vec![mk(), mk()]).is_err());
+    }
+
+    #[test]
+    fn detect_each_format() {
+        let g = Family::ResNet.generate(0);
+        for fw in [
+            Framework::Native,
+            Framework::PyTorch,
+            Framework::TensorFlow,
+            Framework::Onnx,
+            Framework::Paddle,
+        ] {
+            let text = export(fw, &g);
+            assert_eq!(detect(&text), Some(fw), "{fw:?}");
+        }
+    }
+
+    #[test]
+    fn all_families_roundtrip_all_frameworks() {
+        // The paper's Table 1 "Multi-SF" claim, as a test: every family's
+        // graph survives export → parse through every frontend.
+        for family in ALL_FAMILIES {
+            let g = family.generate(3);
+            for fw in [
+                Framework::Native,
+                Framework::PyTorch,
+                Framework::TensorFlow,
+                Framework::Onnx,
+                Framework::Paddle,
+            ] {
+                let text = export(fw, &g);
+                let parsed = parse(fw, &text)
+                    .unwrap_or_else(|e| panic!("{family:?} via {fw:?}: {e}"));
+                assert!(
+                    structurally_equal(&g, &parsed),
+                    "{family:?} via {fw:?} altered the graph"
+                );
+            }
+        }
+    }
+}

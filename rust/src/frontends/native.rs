@@ -1,0 +1,161 @@
+//! Native DIPPM IR exchange format: lossless JSON round-trip of a
+//! [`Graph`], including node names, family/variant metadata and all
+//! attributes. This is the repo's canonical on-disk model format.
+
+use crate::ir::{Attrs, Graph, OpKind};
+use crate::util::json::{Json, JsonObj};
+
+use super::NodeSpec;
+
+pub fn export(graph: &Graph) -> String {
+    let mut root = JsonObj::new();
+    root.insert("format", "dippm-ir");
+    root.insert("version", 1usize);
+    root.insert("family", graph.family.as_str());
+    root.insert("variant", graph.variant.as_str());
+    root.insert("batch", graph.batch);
+    let nodes: Vec<Json> = graph
+        .nodes
+        .iter()
+        .map(|n| {
+            let mut o = JsonObj::new();
+            o.insert("name", n.name.as_str());
+            o.insert("op", n.op.name());
+            o.insert(
+                "inputs",
+                Json::Arr(
+                    n.inputs
+                        .iter()
+                        .map(|&i| Json::Str(graph.nodes[i].name.clone()))
+                        .collect(),
+                ),
+            );
+            o.insert(
+                "shape",
+                Json::Arr(n.out_shape.iter().map(|&d| Json::from(d)).collect()),
+            );
+            let mut a = JsonObj::new();
+            if let Some((kh, kw)) = n.attrs.kernel {
+                a.insert("kernel", Json::Arr(vec![kh.into(), kw.into()]));
+            }
+            if let Some((sh, sw)) = n.attrs.strides {
+                a.insert("strides", Json::Arr(vec![sh.into(), sw.into()]));
+            }
+            if n.attrs.padding != 0 {
+                a.insert("padding", n.attrs.padding);
+            }
+            if n.attrs.groups != 1 {
+                a.insert("groups", n.attrs.groups);
+            }
+            if let Some(u) = n.attrs.units {
+                a.insert("units", u);
+            }
+            if let Some(ax) = n.attrs.axis {
+                a.insert("axis", ax);
+            }
+            o.insert("attrs", a);
+            Json::Obj(o)
+        })
+        .collect();
+    root.insert("nodes", Json::Arr(nodes));
+    Json::Obj(root).to_string_pretty()
+}
+
+pub fn parse(content: &str) -> Result<Graph, String> {
+    let v = Json::parse(content).map_err(|e| e.to_string())?;
+    if v.path(&["format"]).as_str() != Some("dippm-ir") {
+        return Err("not a dippm-ir file".into());
+    }
+    let family = v.path(&["family"]).as_str().unwrap_or("unknown").to_string();
+    let variant = v.path(&["variant"]).as_str().unwrap_or("unknown").to_string();
+    let batch = v
+        .path(&["batch"])
+        .as_usize()
+        .ok_or("missing/invalid batch")?;
+    let nodes = v
+        .path(&["nodes"])
+        .as_arr()
+        .ok_or("missing nodes array")?;
+    let mut specs = Vec::with_capacity(nodes.len());
+    for (i, n) in nodes.iter().enumerate() {
+        let name = n
+            .path(&["name"])
+            .as_str()
+            .ok_or_else(|| format!("node {i}: missing name"))?
+            .to_string();
+        let op_name = n
+            .path(&["op"])
+            .as_str()
+            .ok_or_else(|| format!("node {i}: missing op"))?;
+        let op = OpKind::from_name(op_name)
+            .ok_or_else(|| format!("node {i}: unknown op {op_name:?}"))?;
+        let input_names = n
+            .path(&["inputs"])
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|s| s.as_str().map(str::to_string))
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| format!("node {i}: bad inputs"))?;
+        let shape = n.path(&["shape"]).as_arr().map(|a| {
+            a.iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect::<Vec<_>>()
+        });
+        let a = n.path(&["attrs"]);
+        let pair = |key: &str| -> Option<(usize, usize)> {
+            a.path(&[key]).as_arr().and_then(|arr| {
+                Some((arr.first()?.as_usize()?, arr.get(1)?.as_usize()?))
+            })
+        };
+        let attrs = Attrs {
+            kernel: pair("kernel"),
+            strides: pair("strides"),
+            padding: a.path(&["padding"]).as_usize().unwrap_or(0),
+            groups: a.path(&["groups"]).as_usize().unwrap_or(1),
+            units: a.path(&["units"]).as_usize(),
+            axis: a.path(&["axis"]).as_i64(),
+        };
+        specs.push(NodeSpec {
+            name,
+            op,
+            attrs,
+            input_names,
+            shape,
+        });
+    }
+    super::assemble(&family, &variant, batch, specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelgen::Family;
+
+    #[test]
+    fn lossless_roundtrip_including_names() {
+        let g = Family::MobileNet.generate(5);
+        let text = export(&g);
+        let parsed = parse(&text).unwrap();
+        assert_eq!(g, parsed); // full equality: names, metadata, everything
+    }
+
+    #[test]
+    fn rejects_wrong_format_tag() {
+        assert!(parse(r#"{"format":"other"}"#).is_err());
+        assert!(parse("not json").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_op() {
+        let text = r#"{"format":"dippm-ir","family":"t","variant":"t","batch":1,
+            "nodes":[{"name":"x","op":"warp_drive","inputs":[],"shape":[1,3,4,4],"attrs":{}}]}"#;
+        assert!(parse(text).unwrap_err().contains("unknown op"));
+    }
+
+    #[test]
+    fn export_is_deterministic() {
+        let g = Family::Vit.generate(2);
+        assert_eq!(export(&g), export(&g));
+    }
+}

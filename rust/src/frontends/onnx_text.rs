@@ -1,0 +1,485 @@
+//! ONNX frontend: textual-protobuf model files (`node { op_type: "Conv" }`).
+//!
+//! Includes a small protobuf-text parser (`Message`) — fields are repeated
+//! `key: scalar` or `key { nested }` entries, scalars are quoted strings or
+//! integers. This covers the subset `onnx.proto` needs for graph structure.
+
+use std::collections::BTreeMap;
+
+use crate::ir::{Attrs, Graph, OpKind};
+
+use super::NodeSpec;
+
+// ---------------------------------------------------------------------------
+// Textual protobuf substrate
+// ---------------------------------------------------------------------------
+
+/// A parsed protobuf-text value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PbValue {
+    Str(String),
+    Int(i64),
+    Msg(Message),
+}
+
+/// A protobuf-text message: ordered multimap of field name → values.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Message {
+    fields: BTreeMap<String, Vec<PbValue>>,
+}
+
+impl Message {
+    pub fn get(&self, key: &str) -> &[PbValue] {
+        self.fields.get(key).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        match self.get(key).first() {
+            Some(PbValue::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn int(&self, key: &str) -> Option<i64> {
+        match self.get(key).first() {
+            Some(PbValue::Int(i)) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn ints(&self, key: &str) -> Vec<i64> {
+        self.get(key)
+            .iter()
+            .filter_map(|v| match v {
+                PbValue::Int(i) => Some(*i),
+                _ => None,
+            })
+            .collect()
+    }
+
+    pub fn msgs(&self, key: &str) -> Vec<&Message> {
+        self.get(key)
+            .iter()
+            .filter_map(|v| match v {
+                PbValue::Msg(m) => Some(m),
+                _ => None,
+            })
+            .collect()
+    }
+
+    fn push(&mut self, key: &str, v: PbValue) {
+        self.fields.entry(key.to_string()).or_default().push(v);
+    }
+}
+
+struct Lexer<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+#[derive(Debug, PartialEq)]
+enum Tok {
+    Ident(String),
+    Str(String),
+    Int(i64),
+    Colon,
+    LBrace,
+    RBrace,
+    Eof,
+}
+
+impl<'a> Lexer<'a> {
+    fn next_tok(&mut self) -> Result<Tok, String> {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            match b {
+                b' ' | b'\t' | b'\n' | b'\r' => self.pos += 1,
+                b'#' => {
+                    while self.bytes.get(self.pos).is_some_and(|&c| c != b'\n') {
+                        self.pos += 1;
+                    }
+                }
+                _ => break,
+            }
+        }
+        let Some(&b) = self.bytes.get(self.pos) else {
+            return Ok(Tok::Eof);
+        };
+        match b {
+            b':' => {
+                self.pos += 1;
+                Ok(Tok::Colon)
+            }
+            b'{' => {
+                self.pos += 1;
+                Ok(Tok::LBrace)
+            }
+            b'}' => {
+                self.pos += 1;
+                Ok(Tok::RBrace)
+            }
+            b'"' => {
+                self.pos += 1;
+                let start = self.pos;
+                let mut out = String::new();
+                loop {
+                    match self.bytes.get(self.pos) {
+                        None => return Err(format!("unterminated string at {start}")),
+                        Some(b'"') => {
+                            self.pos += 1;
+                            return Ok(Tok::Str(out));
+                        }
+                        Some(b'\\') => {
+                            self.pos += 1;
+                            match self.bytes.get(self.pos) {
+                                Some(b'n') => out.push('\n'),
+                                Some(b't') => out.push('\t'),
+                                Some(&c) => out.push(c as char),
+                                None => return Err("bad escape".into()),
+                            }
+                            self.pos += 1;
+                        }
+                        Some(&c) => {
+                            out.push(c as char);
+                            self.pos += 1;
+                        }
+                    }
+                }
+            }
+            b'-' | b'0'..=b'9' => {
+                let start = self.pos;
+                self.pos += 1;
+                while self
+                    .bytes
+                    .get(self.pos)
+                    .is_some_and(|c| c.is_ascii_digit())
+                {
+                    self.pos += 1;
+                }
+                let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+                s.parse().map(Tok::Int).map_err(|e| e.to_string())
+            }
+            _ => {
+                let start = self.pos;
+                while self
+                    .bytes
+                    .get(self.pos)
+                    .is_some_and(|c| c.is_ascii_alphanumeric() || *c == b'_' || *c == b'.')
+                {
+                    self.pos += 1;
+                }
+                if start == self.pos {
+                    return Err(format!("unexpected byte {:?} at {}", b as char, self.pos));
+                }
+                Ok(Tok::Ident(
+                    std::str::from_utf8(&self.bytes[start..self.pos])
+                        .unwrap()
+                        .to_string(),
+                ))
+            }
+        }
+    }
+}
+
+/// Parse protobuf-text into a [`Message`].
+pub fn parse_pbtext(text: &str) -> Result<Message, String> {
+    let mut lex = Lexer {
+        bytes: text.as_bytes(),
+        pos: 0,
+    };
+    parse_msg(&mut lex, true)
+}
+
+fn parse_msg(lex: &mut Lexer, top: bool) -> Result<Message, String> {
+    let mut msg = Message::default();
+    loop {
+        match lex.next_tok()? {
+            Tok::Eof if top => return Ok(msg),
+            Tok::Eof => return Err("unexpected EOF inside message".into()),
+            Tok::RBrace if !top => return Ok(msg),
+            Tok::RBrace => return Err("unmatched '}'".into()),
+            Tok::Ident(key) => match lex.next_tok()? {
+                Tok::Colon => match lex.next_tok()? {
+                    Tok::Str(s) => msg.push(&key, PbValue::Str(s)),
+                    Tok::Int(i) => msg.push(&key, PbValue::Int(i)),
+                    Tok::Ident(w) => msg.push(&key, PbValue::Str(w)), // enum value
+                    t => return Err(format!("bad value after '{key}:': {t:?}")),
+                },
+                Tok::LBrace => {
+                    let inner = parse_msg(lex, false)?;
+                    msg.push(&key, PbValue::Msg(inner));
+                }
+                t => return Err(format!("expected ':' or '{{' after '{key}', got {t:?}")),
+            },
+            t => return Err(format!("unexpected token {t:?}")),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ONNX mapping
+// ---------------------------------------------------------------------------
+
+fn op_type_of(op: OpKind) -> &'static str {
+    match op {
+        OpKind::Input => "Input", // emitted as graph.input, not a node
+        OpKind::Conv2d | OpKind::DepthwiseConv2d => "Conv",
+        OpKind::Conv2dTranspose => "ConvTranspose",
+        OpKind::Dense => "Gemm",
+        OpKind::BatchMatmul => "MatMul",
+        OpKind::Relu => "Relu",
+        OpKind::Gelu => "Gelu",
+        OpKind::Sigmoid => "Sigmoid",
+        OpKind::HardSwish => "HardSwish",
+        OpKind::Softmax => "Softmax",
+        OpKind::Add => "Add",
+        OpKind::Multiply => "Mul",
+        OpKind::Concat => "Concat",
+        OpKind::MaxPool2d => "MaxPool",
+        OpKind::AvgPool2d => "AveragePool",
+        OpKind::GlobalAvgPool2d => "GlobalAveragePool",
+        OpKind::BatchNorm => "BatchNormalization",
+        OpKind::LayerNorm => "LayerNormalization",
+        OpKind::Reshape => "Reshape",
+        OpKind::Transpose => "Transpose",
+        OpKind::Flatten => "Flatten",
+        OpKind::StridedSlice => "Slice",
+        OpKind::Mean => "ReduceMean",
+    }
+}
+
+fn op_of(op_type: &str) -> Result<OpKind, String> {
+    Ok(match op_type {
+        "Conv" => OpKind::Conv2d,
+        "ConvTranspose" => OpKind::Conv2dTranspose,
+        "Gemm" => OpKind::Dense,
+        "MatMul" => OpKind::BatchMatmul,
+        "Relu" => OpKind::Relu,
+        "Gelu" => OpKind::Gelu,
+        "Sigmoid" => OpKind::Sigmoid,
+        "HardSwish" | "HardSigmoid" => OpKind::HardSwish,
+        "Softmax" => OpKind::Softmax,
+        "Add" | "Sum" => OpKind::Add,
+        "Mul" => OpKind::Multiply,
+        "Concat" => OpKind::Concat,
+        "MaxPool" => OpKind::MaxPool2d,
+        "AveragePool" => OpKind::AvgPool2d,
+        "GlobalAveragePool" => OpKind::GlobalAvgPool2d,
+        "BatchNormalization" => OpKind::BatchNorm,
+        "LayerNormalization" => OpKind::LayerNorm,
+        "Reshape" => OpKind::Reshape,
+        "Transpose" => OpKind::Transpose,
+        "Flatten" => OpKind::Flatten,
+        "Slice" => OpKind::StridedSlice,
+        "ReduceMean" => OpKind::Mean,
+        other => return Err(format!("unsupported ONNX op_type {other:?}")),
+    })
+}
+
+pub fn export(graph: &Graph) -> String {
+    let mut out = String::new();
+    out.push_str("ir_version: 8\n");
+    out.push_str("producer_name: \"dippm\"\n");
+    out.push_str("graph {\n");
+    out.push_str(&format!("  name: \"{}\"\n", graph.variant));
+    out.push_str(&format!(
+        "  metadata {{ family: \"{}\" batch: {} }}\n",
+        graph.family, graph.batch
+    ));
+    for n in &graph.nodes {
+        if n.op == OpKind::Input {
+            out.push_str(&format!("  input {{ name: \"{}\"", n.name));
+            for d in &n.out_shape {
+                out.push_str(&format!(" dim: {d}"));
+            }
+            out.push_str(" }\n");
+            continue;
+        }
+        out.push_str("  node {\n");
+        out.push_str(&format!("    name: \"{}\"\n", n.name));
+        out.push_str(&format!("    op_type: \"{}\"\n", op_type_of(n.op)));
+        for &i in &n.inputs {
+            out.push_str(&format!("    input: \"{}\"\n", graph.nodes[i].name));
+        }
+        out.push_str(&format!("    output: \"{}\"\n", n.name));
+        let mut attr_ints = |name: &str, vals: &[i64]| {
+            out.push_str(&format!("    attribute {{ name: \"{name}\""));
+            for v in vals {
+                out.push_str(&format!(" ints: {v}"));
+            }
+            out.push_str(" }\n");
+        };
+        if let Some((kh, kw)) = n.attrs.kernel {
+            attr_ints("kernel_shape", &[kh as i64, kw as i64]);
+        }
+        if let Some((sh, sw)) = n.attrs.strides {
+            attr_ints("strides", &[sh as i64, sw as i64]);
+        }
+        if n.attrs.padding != 0 {
+            let p = n.attrs.padding as i64;
+            attr_ints("pads", &[p, p, p, p]);
+        }
+        let groups = if n.op == OpKind::DepthwiseConv2d {
+            n.out_shape[1]
+        } else {
+            n.attrs.groups
+        };
+        if groups != 1 {
+            attr_ints("group", &[groups as i64]);
+        }
+        if n.op == OpKind::DepthwiseConv2d {
+            attr_ints("out_channels", &[n.out_shape[1] as i64]);
+        } else if let Some(u) = n.attrs.units {
+            attr_ints("out_channels", &[u as i64]);
+        }
+        if let Some(ax) = n.attrs.axis {
+            attr_ints("axis", &[ax]);
+        }
+        if matches!(
+            n.op,
+            OpKind::Reshape | OpKind::Transpose | OpKind::StridedSlice
+        ) {
+            attr_ints(
+                "shape",
+                &n.out_shape.iter().map(|&d| d as i64).collect::<Vec<_>>(),
+            );
+        }
+        out.push_str("  }\n");
+    }
+    out.push_str("}\n");
+    out
+}
+
+pub fn parse(content: &str) -> Result<Graph, String> {
+    let root = parse_pbtext(content)?;
+    let graphs = root.msgs("graph");
+    let g = graphs.first().ok_or("missing graph { }")?;
+    let variant = g.str("name").unwrap_or("unknown").to_string();
+    let meta = g.msgs("metadata");
+    let family = meta
+        .first()
+        .and_then(|m| m.str("family"))
+        .unwrap_or("unknown")
+        .to_string();
+    let batch = meta
+        .first()
+        .and_then(|m| m.int("batch"))
+        .map(|b| b as usize);
+
+    let mut specs = Vec::new();
+    for inp in g.msgs("input") {
+        let name = inp.str("name").ok_or("graph input lacks name")?.to_string();
+        let shape: Vec<usize> = inp.ints("dim").iter().map(|&d| d as usize).collect();
+        specs.push(NodeSpec {
+            name,
+            op: OpKind::Input,
+            attrs: Attrs::none(),
+            input_names: vec![],
+            shape: Some(shape),
+        });
+    }
+    let batch = batch
+        .or_else(|| specs.first().and_then(|s| s.shape.as_ref()?.first().copied()))
+        .ok_or("unable to determine batch")?;
+
+    for node in g.msgs("node") {
+        let op_type = node.str("op_type").ok_or("node lacks op_type")?;
+        let op = op_of(op_type)?;
+        let name = node
+            .str("output")
+            .or_else(|| node.str("name"))
+            .ok_or("node lacks output/name")?
+            .to_string();
+        let input_names: Vec<String> = node
+            .get("input")
+            .iter()
+            .filter_map(|v| match v {
+                PbValue::Str(s) => Some(s.clone()),
+                _ => None,
+            })
+            .collect();
+        let mut attrs = Attrs::none();
+        let mut shape: Option<Vec<usize>> = None;
+        for a in node.msgs("attribute") {
+            let ints = a.ints("ints");
+            match a.str("name") {
+                Some("kernel_shape") if ints.len() >= 2 => {
+                    attrs.kernel = Some((ints[0] as usize, ints[1] as usize));
+                }
+                Some("strides") if ints.len() >= 2 => {
+                    attrs.strides = Some((ints[0] as usize, ints[1] as usize));
+                }
+                Some("pads") if !ints.is_empty() => attrs.padding = ints[0] as usize,
+                Some("group") if !ints.is_empty() => attrs.groups = ints[0] as usize,
+                Some("out_channels") if !ints.is_empty() => {
+                    attrs.units = Some(ints[0] as usize);
+                }
+                Some("axis" | "axes") if !ints.is_empty() => attrs.axis = Some(ints[0]),
+                Some("shape") => {
+                    shape = Some(ints.iter().map(|&d| d as usize).collect());
+                }
+                _ => {}
+            }
+        }
+        specs.push(NodeSpec {
+            name,
+            op,
+            attrs,
+            input_names,
+            shape,
+        });
+    }
+    super::assemble(&family, &variant, batch, specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontends::structurally_equal;
+    use crate::modelgen::Family;
+
+    #[test]
+    fn pbtext_parses_nested() {
+        let m = parse_pbtext(
+            r#"a: 1
+               b { c: "x" c: "y" d { e: 2 } }
+               b { c: "z" }"#,
+        )
+        .unwrap();
+        assert_eq!(m.int("a"), Some(1));
+        assert_eq!(m.msgs("b").len(), 2);
+        assert_eq!(m.msgs("b")[0].get("c").len(), 2);
+        assert_eq!(m.msgs("b")[0].msgs("d")[0].int("e"), Some(2));
+    }
+
+    #[test]
+    fn pbtext_rejects_garbage() {
+        assert!(parse_pbtext("a: }").is_err());
+        assert!(parse_pbtext("b { c: 1").is_err());
+        assert!(parse_pbtext("}").is_err());
+    }
+
+    #[test]
+    fn efficientnet_roundtrip() {
+        let g = Family::EfficientNet.generate(1);
+        let parsed = parse(&export(&g)).unwrap();
+        assert!(structurally_equal(&g, &parsed));
+    }
+
+    #[test]
+    fn densenet_roundtrip_with_concats() {
+        let g = Family::DenseNet.generate(0);
+        let parsed = parse(&export(&g)).unwrap();
+        assert!(structurally_equal(&g, &parsed));
+    }
+
+    #[test]
+    fn unsupported_op_rejected() {
+        let text = r#"graph {
+            name: "m"
+            metadata { family: "t" batch: 1 }
+            input { name: "x" dim: 1 dim: 3 dim: 4 dim: 4 }
+            node { name: "q" op_type: "QuantumFold" input: "x" output: "q" }
+        }"#;
+        assert!(parse(text).unwrap_err().contains("unsupported"));
+    }
+}

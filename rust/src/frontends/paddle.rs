@@ -1,0 +1,293 @@
+//! PaddlePaddle frontend: program-desc style JSON (`blocks`/`ops`/`vars`,
+//! paddle operator vocabulary: `elementwise_add`, `pool2d`, `reshape2`, …).
+
+use crate::ir::{Attrs, Graph, OpKind};
+use crate::util::json::{Json, JsonObj};
+
+use super::NodeSpec;
+
+fn type_of(op: OpKind) -> &'static str {
+    match op {
+        OpKind::Input => "feed",
+        OpKind::Conv2d => "conv2d",
+        OpKind::DepthwiseConv2d => "depthwise_conv2d",
+        OpKind::Conv2dTranspose => "conv2d_transpose",
+        OpKind::Dense => "fc",
+        OpKind::BatchMatmul => "matmul_v2",
+        OpKind::Relu => "relu",
+        OpKind::Gelu => "gelu",
+        OpKind::Sigmoid => "sigmoid",
+        OpKind::HardSwish => "hard_swish",
+        OpKind::Softmax => "softmax",
+        OpKind::Add => "elementwise_add",
+        OpKind::Multiply => "elementwise_mul",
+        OpKind::Concat => "concat",
+        OpKind::MaxPool2d | OpKind::AvgPool2d | OpKind::GlobalAvgPool2d => "pool2d",
+        OpKind::BatchNorm => "batch_norm",
+        OpKind::LayerNorm => "layer_norm",
+        OpKind::Reshape => "reshape2",
+        OpKind::Transpose => "transpose2",
+        OpKind::Flatten => "flatten_contiguous_range",
+        OpKind::StridedSlice => "slice",
+        OpKind::Mean => "reduce_mean",
+    }
+}
+
+pub fn export(graph: &Graph) -> String {
+    let mut ops: Vec<Json> = Vec::with_capacity(graph.nodes.len());
+    let mut vars: Vec<Json> = Vec::new();
+    for n in &graph.nodes {
+        if n.op == OpKind::Input {
+            let mut v = JsonObj::new();
+            v.insert("name", n.name.as_str());
+            v.insert(
+                "shape",
+                Json::Arr(n.out_shape.iter().map(|&d| Json::from(d)).collect()),
+            );
+            vars.push(Json::Obj(v));
+        }
+        let mut o = JsonObj::new();
+        o.insert("type", type_of(n.op));
+        let mut inputs = JsonObj::new();
+        inputs.insert(
+            "X",
+            Json::Arr(
+                n.inputs
+                    .iter()
+                    .map(|&i| Json::Str(graph.nodes[i].name.clone()))
+                    .collect(),
+            ),
+        );
+        o.insert("inputs", inputs);
+        let mut outputs = JsonObj::new();
+        outputs.insert("Out", Json::Arr(vec![Json::Str(n.name.clone())]));
+        o.insert("outputs", outputs);
+        let mut a = JsonObj::new();
+        if let Some((kh, kw)) = n.attrs.kernel {
+            a.insert("ksize", Json::Arr(vec![kh.into(), kw.into()]));
+        }
+        if let Some((sh, sw)) = n.attrs.strides {
+            a.insert("strides", Json::Arr(vec![sh.into(), sw.into()]));
+        }
+        a.insert("paddings", Json::Arr(vec![n.attrs.padding.into()]));
+        a.insert("groups", n.attrs.groups);
+        if let Some(u) = n.attrs.units {
+            let key = if n.op == OpKind::Dense { "size" } else { "num_filters" };
+            a.insert(key, u);
+        }
+        if let Some(ax) = n.attrs.axis {
+            a.insert("axis", ax);
+        }
+        match n.op {
+            OpKind::MaxPool2d => {
+                a.insert("pooling_type", "max");
+            }
+            OpKind::AvgPool2d => {
+                a.insert("pooling_type", "avg");
+            }
+            OpKind::GlobalAvgPool2d => {
+                a.insert("pooling_type", "avg");
+                a.insert("global_pooling", true);
+            }
+            OpKind::Reshape | OpKind::Transpose | OpKind::StridedSlice => {
+                a.insert(
+                    "shape",
+                    Json::Arr(n.out_shape.iter().map(|&d| Json::from(d)).collect()),
+                );
+            }
+            _ => {}
+        }
+        o.insert("attrs", a);
+        ops.push(Json::Obj(o));
+    }
+    let mut block = JsonObj::new();
+    block.insert("idx", 0usize);
+    block.insert("vars", Json::Arr(vars));
+    block.insert("ops", Json::Arr(ops));
+    let mut program = JsonObj::new();
+    program.insert("version", 1usize);
+    program.insert("family", graph.family.as_str());
+    program.insert("variant", graph.variant.as_str());
+    program.insert("batch", graph.batch);
+    program.insert("blocks", Json::Arr(vec![Json::Obj(block)]));
+    let mut root = JsonObj::new();
+    root.insert("program", program);
+    Json::Obj(root).to_string_pretty()
+}
+
+fn op_of(ty: &str, attrs: &Json) -> Result<OpKind, String> {
+    Ok(match ty {
+        "feed" => OpKind::Input,
+        "conv2d" => OpKind::Conv2d,
+        "depthwise_conv2d" => OpKind::DepthwiseConv2d,
+        "conv2d_transpose" => OpKind::Conv2dTranspose,
+        "fc" | "mul" => OpKind::Dense,
+        "matmul_v2" | "matmul" => OpKind::BatchMatmul,
+        "relu" => OpKind::Relu,
+        "gelu" => OpKind::Gelu,
+        "sigmoid" => OpKind::Sigmoid,
+        "hard_swish" => OpKind::HardSwish,
+        "softmax" => OpKind::Softmax,
+        "elementwise_add" => OpKind::Add,
+        "elementwise_mul" => OpKind::Multiply,
+        "concat" => OpKind::Concat,
+        "pool2d" => {
+            let global = attrs.path(&["global_pooling"]).as_bool().unwrap_or(false);
+            if global {
+                OpKind::GlobalAvgPool2d
+            } else if attrs.path(&["pooling_type"]).as_str() == Some("max") {
+                OpKind::MaxPool2d
+            } else {
+                OpKind::AvgPool2d
+            }
+        }
+        "batch_norm" => OpKind::BatchNorm,
+        "layer_norm" => OpKind::LayerNorm,
+        "reshape2" | "reshape" => OpKind::Reshape,
+        "transpose2" | "transpose" => OpKind::Transpose,
+        "flatten_contiguous_range" | "flatten" => OpKind::Flatten,
+        "slice" | "strided_slice" => OpKind::StridedSlice,
+        "reduce_mean" => OpKind::Mean,
+        other => return Err(format!("unsupported paddle op {other:?}")),
+    })
+}
+
+pub fn parse(content: &str) -> Result<Graph, String> {
+    let v = Json::parse(content).map_err(|e| e.to_string())?;
+    let program = v.path(&["program"]);
+    if program.as_obj().is_none() {
+        return Err("not a paddle program desc".into());
+    }
+    let family = program
+        .path(&["family"])
+        .as_str()
+        .unwrap_or("unknown")
+        .to_string();
+    let variant = program
+        .path(&["variant"])
+        .as_str()
+        .unwrap_or("unknown")
+        .to_string();
+    let batch = program.path(&["batch"]).as_usize();
+    let blocks = program.path(&["blocks"]).as_arr().ok_or("missing blocks")?;
+    let block = blocks.first().ok_or("empty blocks")?;
+
+    // Input shapes come from the vars table.
+    let mut var_shapes = std::collections::HashMap::new();
+    for var in block.path(&["vars"]).as_arr().unwrap_or(&[]) {
+        if let (Some(name), Some(shape)) = (
+            var.path(&["name"]).as_str(),
+            var.path(&["shape"]).as_arr(),
+        ) {
+            let s: Vec<usize> = shape.iter().map(|d| d.as_usize().unwrap_or(0)).collect();
+            var_shapes.insert(name.to_string(), s);
+        }
+    }
+
+    let ops = block.path(&["ops"]).as_arr().ok_or("missing ops")?;
+    let mut specs = Vec::with_capacity(ops.len());
+    for (i, o) in ops.iter().enumerate() {
+        let ty = o
+            .path(&["type"])
+            .as_str()
+            .ok_or_else(|| format!("op {i}: missing type"))?;
+        let a = o.path(&["attrs"]);
+        let op = op_of(ty, a)?;
+        let name = o
+            .path(&["outputs", "Out"])
+            .as_arr()
+            .and_then(|arr| arr.first())
+            .and_then(|s| s.as_str())
+            .ok_or_else(|| format!("op {i}: missing Out"))?
+            .to_string();
+        let input_names: Vec<String> = o
+            .path(&["inputs", "X"])
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|s| s.as_str().map(str::to_string))
+            .collect();
+        let pair = |key: &str| -> Option<(usize, usize)> {
+            a.path(&[key]).as_arr().and_then(|arr| {
+                Some((arr.first()?.as_usize()?, arr.get(1)?.as_usize()?))
+            })
+        };
+        let shape = match op {
+            OpKind::Input => var_shapes.get(&name).cloned(),
+            OpKind::Reshape | OpKind::Transpose | OpKind::StridedSlice => a
+                .path(&["shape"])
+                .as_arr()
+                .map(|arr| arr.iter().map(|d| d.as_usize().unwrap_or(0)).collect()),
+            _ => None,
+        };
+        let attrs = Attrs {
+            kernel: pair("ksize"),
+            strides: pair("strides"),
+            padding: a
+                .path(&["paddings"])
+                .as_arr()
+                .and_then(|arr| arr.first())
+                .and_then(|p| p.as_usize())
+                .unwrap_or(0),
+            groups: a.path(&["groups"]).as_usize().unwrap_or(1),
+            units: a
+                .path(&["num_filters"])
+                .as_usize()
+                .or_else(|| a.path(&["size"]).as_usize()),
+            axis: a.path(&["axis"]).as_i64(),
+        };
+        specs.push(NodeSpec {
+            name,
+            op,
+            attrs,
+            input_names,
+            shape,
+        });
+    }
+    let batch = batch
+        .or_else(|| {
+            specs
+                .iter()
+                .find(|s| s.op == OpKind::Input)
+                .and_then(|s| s.shape.as_ref()?.first().copied())
+        })
+        .ok_or("unable to determine batch")?;
+    super::assemble(&family, &variant, batch, specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontends::structurally_equal;
+    use crate::modelgen::Family;
+
+    #[test]
+    fn mnasnet_roundtrip() {
+        let g = Family::MnasNet.generate(4);
+        let parsed = parse(&export(&g)).unwrap();
+        assert!(structurally_equal(&g, &parsed));
+    }
+
+    #[test]
+    fn poolformer_roundtrip_pool_types() {
+        let g = Family::PoolFormer.generate(0);
+        let text = export(&g);
+        assert!(text.contains("pooling_type"));
+        let parsed = parse(&text).unwrap();
+        assert!(structurally_equal(&g, &parsed));
+    }
+
+    #[test]
+    fn depthwise_is_first_class_in_paddle() {
+        let g = Family::MobileNet.generate(0);
+        let text = export(&g);
+        assert!(text.contains("depthwise_conv2d"));
+        let parsed = parse(&text).unwrap();
+        assert!(structurally_equal(&g, &parsed));
+    }
+
+    #[test]
+    fn rejects_non_paddle() {
+        assert!(parse(r#"{"model":{}}"#).is_err());
+    }
+}

@@ -1,0 +1,236 @@
+//! PyTorch frontend: TorchScript-style graph JSON (`aten::*` node kinds,
+//! PyTorch attribute vocabulary). This is the format a
+//! `torch.jit.trace(...).graph` dump serializes to in our exchange tooling.
+
+use crate::ir::{Attrs, Graph, OpKind};
+use crate::util::json::{Json, JsonObj};
+
+use super::NodeSpec;
+
+fn kind_of(op: OpKind) -> &'static str {
+    match op {
+        OpKind::Input => "prim::Param",
+        OpKind::Conv2d | OpKind::DepthwiseConv2d => "aten::conv2d",
+        OpKind::Conv2dTranspose => "aten::conv_transpose2d",
+        OpKind::Dense => "aten::linear",
+        OpKind::BatchMatmul => "aten::bmm",
+        OpKind::Relu => "aten::relu",
+        OpKind::Gelu => "aten::gelu",
+        OpKind::Sigmoid => "aten::sigmoid",
+        OpKind::HardSwish => "aten::hardswish",
+        OpKind::Softmax => "aten::softmax",
+        OpKind::Add => "aten::add",
+        OpKind::Multiply => "aten::mul",
+        OpKind::Concat => "aten::cat",
+        OpKind::MaxPool2d => "aten::max_pool2d",
+        OpKind::AvgPool2d => "aten::avg_pool2d",
+        OpKind::GlobalAvgPool2d => "aten::adaptive_avg_pool2d",
+        OpKind::BatchNorm => "aten::batch_norm",
+        OpKind::LayerNorm => "aten::layer_norm",
+        OpKind::Reshape => "aten::reshape",
+        OpKind::Transpose => "aten::permute",
+        OpKind::Flatten => "aten::flatten",
+        OpKind::StridedSlice => "aten::slice",
+        OpKind::Mean => "aten::mean",
+    }
+}
+
+fn op_of(kind: &str) -> Result<OpKind, String> {
+    Ok(match kind {
+        "prim::Param" => OpKind::Input,
+        "aten::conv2d" | "aten::_convolution" => OpKind::Conv2d,
+        "aten::conv_transpose2d" => OpKind::Conv2dTranspose,
+        "aten::linear" | "aten::addmm" => OpKind::Dense,
+        "aten::bmm" | "aten::matmul" => OpKind::BatchMatmul,
+        "aten::relu" | "aten::relu_" => OpKind::Relu,
+        "aten::gelu" => OpKind::Gelu,
+        "aten::sigmoid" => OpKind::Sigmoid,
+        "aten::hardswish" | "aten::hardswish_" => OpKind::HardSwish,
+        "aten::softmax" => OpKind::Softmax,
+        "aten::add" | "aten::add_" => OpKind::Add,
+        "aten::mul" => OpKind::Multiply,
+        "aten::cat" => OpKind::Concat,
+        "aten::max_pool2d" => OpKind::MaxPool2d,
+        "aten::avg_pool2d" => OpKind::AvgPool2d,
+        "aten::adaptive_avg_pool2d" => OpKind::GlobalAvgPool2d,
+        "aten::batch_norm" => OpKind::BatchNorm,
+        "aten::layer_norm" => OpKind::LayerNorm,
+        "aten::reshape" | "aten::view" => OpKind::Reshape,
+        "aten::permute" | "aten::transpose" => OpKind::Transpose,
+        "aten::flatten" => OpKind::Flatten,
+        "aten::slice" => OpKind::StridedSlice,
+        "aten::mean" => OpKind::Mean,
+        other => return Err(format!("unsupported aten kind {other:?}")),
+    })
+}
+
+pub fn export(graph: &Graph) -> String {
+    let mut root = JsonObj::new();
+    root.insert("framework", "pytorch");
+    root.insert("ir", "torchscript");
+    root.insert("family", graph.family.as_str());
+    root.insert("variant", graph.variant.as_str());
+    root.insert("batch", graph.batch);
+    let nodes: Vec<Json> = graph
+        .nodes
+        .iter()
+        .map(|n| {
+            let mut o = JsonObj::new();
+            o.insert("name", n.name.as_str());
+            o.insert("kind", kind_of(n.op));
+            o.insert(
+                "inputs",
+                Json::Arr(
+                    n.inputs
+                        .iter()
+                        .map(|&i| Json::Str(graph.nodes[i].name.clone()))
+                        .collect(),
+                ),
+            );
+            let mut a = JsonObj::new();
+            if let Some((kh, kw)) = n.attrs.kernel {
+                a.insert("kernel_size", Json::Arr(vec![kh.into(), kw.into()]));
+            }
+            if let Some((sh, sw)) = n.attrs.strides {
+                a.insert("stride", Json::Arr(vec![sh.into(), sw.into()]));
+            }
+            a.insert("padding", n.attrs.padding);
+            a.insert("groups", n.attrs.groups);
+            if let Some(u) = n.attrs.units {
+                // PyTorch: conv has out_channels, linear has out_features.
+                let key = if n.op == OpKind::Dense {
+                    "out_features"
+                } else {
+                    "out_channels"
+                };
+                a.insert(key, u);
+            }
+            if n.op == OpKind::DepthwiseConv2d {
+                // Depthwise is conv2d with groups == channels in PyTorch.
+                let ch = n.out_shape[1];
+                a.insert("groups", ch);
+                a.insert("out_channels", ch);
+            }
+            if let Some(ax) = n.attrs.axis {
+                a.insert("dim", ax);
+            }
+            o.insert("attrs", a);
+            // TorchScript graphs carry tensor type annotations; we keep the
+            // ones assembly needs (params and shape-carrying ops).
+            if matches!(
+                n.op,
+                OpKind::Input | OpKind::Reshape | OpKind::Transpose | OpKind::StridedSlice
+            ) {
+                o.insert(
+                    "type",
+                    Json::Arr(n.out_shape.iter().map(|&d| Json::from(d)).collect()),
+                );
+            }
+            Json::Obj(o)
+        })
+        .collect();
+    root.insert("nodes", Json::Arr(nodes));
+    Json::Obj(root).to_string_pretty()
+}
+
+pub fn parse(content: &str) -> Result<Graph, String> {
+    let v = Json::parse(content).map_err(|e| e.to_string())?;
+    if v.path(&["framework"]).as_str() != Some("pytorch") {
+        return Err("not a pytorch/torchscript export".into());
+    }
+    let family = v.path(&["family"]).as_str().unwrap_or("unknown").to_string();
+    let variant = v.path(&["variant"]).as_str().unwrap_or("unknown").to_string();
+    let batch = v.path(&["batch"]).as_usize().ok_or("missing batch")?;
+    let nodes = v.path(&["nodes"]).as_arr().ok_or("missing nodes")?;
+    let mut specs = Vec::with_capacity(nodes.len());
+    for (i, n) in nodes.iter().enumerate() {
+        let name = n
+            .path(&["name"])
+            .as_str()
+            .ok_or_else(|| format!("node {i}: missing name"))?
+            .to_string();
+        let kind = n
+            .path(&["kind"])
+            .as_str()
+            .ok_or_else(|| format!("node {i}: missing kind"))?;
+        let op = op_of(kind)?;
+        let input_names = n
+            .path(&["inputs"])
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|s| s.as_str().map(str::to_string))
+            .collect();
+        let a = n.path(&["attrs"]);
+        let pair = |key: &str| -> Option<(usize, usize)> {
+            a.path(&[key]).as_arr().and_then(|arr| {
+                Some((arr.first()?.as_usize()?, arr.get(1)?.as_usize()?))
+            })
+        };
+        let attrs = Attrs {
+            kernel: pair("kernel_size"),
+            strides: pair("stride"),
+            padding: a.path(&["padding"]).as_usize().unwrap_or(0),
+            groups: a.path(&["groups"]).as_usize().unwrap_or(1),
+            units: a
+                .path(&["out_channels"])
+                .as_usize()
+                .or_else(|| a.path(&["out_features"]).as_usize()),
+            axis: a.path(&["dim"]).as_i64(),
+        };
+        let shape = n.path(&["type"]).as_arr().map(|arr| {
+            arr.iter().map(|d| d.as_usize().unwrap_or(0)).collect()
+        });
+        specs.push(NodeSpec {
+            name,
+            op,
+            attrs,
+            input_names,
+            shape,
+        });
+    }
+    super::assemble(&family, &variant, batch, specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontends::structurally_equal;
+    use crate::modelgen::Family;
+
+    #[test]
+    fn resnet_roundtrip() {
+        let g = Family::ResNet.generate(1);
+        let parsed = parse(&export(&g)).unwrap();
+        assert!(structurally_equal(&g, &parsed));
+    }
+
+    #[test]
+    fn depthwise_maps_to_grouped_conv_and_back() {
+        let g = Family::MobileNet.generate(0);
+        let text = export(&g);
+        assert!(text.contains("aten::conv2d"));
+        assert!(!text.contains("aten::depthwise")); // pytorch has no such kind
+        let parsed = parse(&text).unwrap();
+        assert!(structurally_equal(&g, &parsed));
+        assert!(parsed.count_op(OpKind::DepthwiseConv2d) > 0);
+    }
+
+    #[test]
+    fn aliases_accepted() {
+        let text = r#"{"framework":"pytorch","batch":1,"nodes":[
+            {"name":"x","kind":"prim::Param","inputs":[],"attrs":{},"type":[1,8]},
+            {"name":"l","kind":"aten::addmm","inputs":["x"],"attrs":{"out_features":4}},
+            {"name":"r","kind":"aten::relu_","inputs":["l"],"attrs":{}}]}"#;
+        let g = parse(text).unwrap();
+        assert_eq!(g.nodes[1].op, OpKind::Dense);
+        assert_eq!(g.nodes[2].op, OpKind::Relu);
+    }
+
+    #[test]
+    fn unknown_kind_rejected() {
+        let text = r#"{"framework":"pytorch","batch":1,"nodes":[
+            {"name":"x","kind":"aten::quantum","inputs":[],"attrs":{}}]}"#;
+        assert!(parse(text).unwrap_err().contains("unsupported"));
+    }
+}

@@ -1,0 +1,401 @@
+//! The graph structure: a DAG of operator nodes in topological order, plus
+//! the [`GraphBuilder`] the model generators and frontends use to construct
+//! valid graphs (shape inference runs at every `add`).
+
+use super::infer::{infer_shape, numel, weight_count, Shape};
+use super::op::{Attrs, OpKind};
+
+pub type NodeId = usize;
+
+/// One operator node. `inputs` reference earlier nodes only (topological
+/// order is a construction invariant, checked by [`Graph::validate`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    pub id: NodeId,
+    pub op: OpKind,
+    pub attrs: Attrs,
+    pub inputs: Vec<NodeId>,
+    pub out_shape: Shape,
+    /// Human-readable name (layer path in the source framework).
+    pub name: String,
+}
+
+/// A model graph: the IR every frontend lowers into (paper §3.1).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    /// Inference batch size (also a static feature, paper eq. 1).
+    pub batch: usize,
+    /// Family tag, e.g. "resnet" — metadata for the dataset distribution.
+    pub family: String,
+    /// Variant tag, e.g. "resnet34-r224-b16".
+    pub variant: String,
+}
+
+impl Graph {
+    /// Number of operator nodes (excludes nothing — Input is an operator
+    /// node in our encoding, as in the paper's relay post-order walk).
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Directed edge list (src, dst).
+    pub fn edges(&self) -> Vec<(NodeId, NodeId)> {
+        let mut e = Vec::new();
+        for n in &self.nodes {
+            for &src in &n.inputs {
+                e.push((src, n.id));
+            }
+        }
+        e
+    }
+
+    /// Consumers of each node.
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut out = vec![Vec::new(); self.nodes.len()];
+        for n in &self.nodes {
+            for &src in &n.inputs {
+                out[src].push(n.id);
+            }
+        }
+        out
+    }
+
+    /// Validate the topological invariant, id contiguity, shape consistency
+    /// and dangling inputs. Returns a description of the first violation.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.batch == 0 {
+            return Err("batch must be >= 1".into());
+        }
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.id != i {
+                return Err(format!("node {i} has id {}", n.id));
+            }
+            for &src in &n.inputs {
+                if src >= i {
+                    return Err(format!(
+                        "node {i} ({}) references non-earlier input {src}",
+                        n.op
+                    ));
+                }
+            }
+            if n.op == OpKind::Input {
+                if !n.inputs.is_empty() {
+                    return Err(format!("input node {i} has inputs"));
+                }
+                if n.out_shape.is_empty() {
+                    return Err(format!("input node {i} lacks a shape"));
+                }
+                if n.out_shape[0] != self.batch {
+                    return Err(format!(
+                        "input node {i} batch {} != graph batch {}",
+                        n.out_shape[0], self.batch
+                    ));
+                }
+                continue;
+            }
+            // Reshape-family ops carry their own target shape, but must
+            // not create elements out of thin air.
+            if matches!(
+                n.op,
+                OpKind::Reshape | OpKind::Transpose | OpKind::Flatten | OpKind::StridedSlice
+            ) {
+                let in_n = numel(&self.nodes[n.inputs[0]].out_shape);
+                let out_n = numel(&n.out_shape);
+                let ok = match n.op {
+                    OpKind::StridedSlice => out_n <= in_n,
+                    _ => out_n == in_n,
+                };
+                if !ok {
+                    return Err(format!(
+                        "node {i} ({}) element count {out_n} inconsistent with input {in_n}",
+                        n.op
+                    ));
+                }
+                continue;
+            }
+            let in_shapes: Vec<&Shape> =
+                n.inputs.iter().map(|&s| &self.nodes[s].out_shape).collect();
+            let expect = infer_shape(n.op, &n.attrs, &in_shapes)
+                .map_err(|e| format!("node {i} ({}): {e}", n.op))?;
+            if expect != n.out_shape {
+                return Err(format!(
+                    "node {i} ({}) shape {:?} != inferred {:?}",
+                    n.op, n.out_shape, expect
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Post-order traversal from sinks (paper Algorithm 1 filters the relay
+    /// IR by post-order walk). With nodes already topologically ordered this
+    /// visits every node reachable from a sink, children before parents.
+    pub fn post_order(&self) -> Vec<NodeId> {
+        let consumers = self.consumers();
+        let sinks: Vec<NodeId> = (0..self.nodes.len())
+            .filter(|&i| consumers[i].is_empty())
+            .collect();
+        let mut visited = vec![false; self.nodes.len()];
+        let mut order = Vec::with_capacity(self.nodes.len());
+        // Iterative DFS with explicit post-visit marker.
+        let mut stack: Vec<(NodeId, bool)> = sinks.iter().rev().map(|&s| (s, false)).collect();
+        while let Some((id, post)) = stack.pop() {
+            if post {
+                order.push(id);
+                continue;
+            }
+            if visited[id] {
+                continue;
+            }
+            visited[id] = true;
+            stack.push((id, true));
+            for &src in self.nodes[id].inputs.iter().rev() {
+                if !visited[src] {
+                    stack.push((src, false));
+                }
+            }
+        }
+        order
+    }
+
+    /// Total trainable parameters (for model-size / memory accounting).
+    pub fn total_weights(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| {
+                let in_shape = n
+                    .inputs
+                    .first()
+                    .map(|&s| self.nodes[s].out_shape.as_slice())
+                    .unwrap_or(&[]);
+                weight_count(n.op, &n.attrs, in_shape, &n.out_shape)
+            })
+            .sum()
+    }
+
+    /// Count of nodes of a given kind (SFG features, paper eq. 1).
+    pub fn count_op(&self, op: OpKind) -> usize {
+        self.nodes.iter().filter(|n| n.op == op).count()
+    }
+}
+
+/// Builder used by modelgen and the frontends. Every `add` runs shape
+/// inference, so an invalid architecture fails at construction, not later.
+#[derive(Debug, Default)]
+pub struct GraphBuilder {
+    graph: Graph,
+}
+
+impl GraphBuilder {
+    pub fn new(family: &str, variant: &str, batch: usize) -> GraphBuilder {
+        GraphBuilder {
+            graph: Graph {
+                nodes: Vec::new(),
+                batch,
+                family: family.to_string(),
+                variant: variant.to_string(),
+            },
+        }
+    }
+
+    pub fn input(&mut self, shape: Shape) -> NodeId {
+        assert_eq!(shape[0], self.graph.batch, "input batch mismatch");
+        self.push(OpKind::Input, Attrs::none(), vec![], shape, "input")
+    }
+
+    fn push(
+        &mut self,
+        op: OpKind,
+        attrs: Attrs,
+        inputs: Vec<NodeId>,
+        out_shape: Shape,
+        name: &str,
+    ) -> NodeId {
+        let id = self.graph.nodes.len();
+        self.graph.nodes.push(Node {
+            id,
+            op,
+            attrs,
+            inputs,
+            out_shape,
+            name: format!("{name}_{id}"),
+        });
+        id
+    }
+
+    /// Generic add with shape inference.
+    pub fn add(&mut self, op: OpKind, attrs: Attrs, inputs: &[NodeId]) -> NodeId {
+        let shapes: Vec<&Shape> = inputs
+            .iter()
+            .map(|&i| &self.graph.nodes[i].out_shape)
+            .collect();
+        let out = infer_shape(op, &attrs, &shapes)
+            .unwrap_or_else(|e| panic!("shape inference failed for {op}: {e}"));
+        self.push(op, attrs, inputs.to_vec(), out, op.name())
+    }
+
+    /// Reshape-family add where the caller supplies the target shape.
+    pub fn add_reshape(&mut self, op: OpKind, input: NodeId, out_shape: Shape) -> NodeId {
+        debug_assert!(matches!(
+            op,
+            OpKind::Reshape | OpKind::Transpose | OpKind::StridedSlice
+        ));
+        self.push(op, Attrs::none(), vec![input], out_shape, op.name())
+    }
+
+    // --- common layer idioms used across families -----------------------
+
+    pub fn conv2d(
+        &mut self,
+        input: NodeId,
+        out_ch: usize,
+        k: usize,
+        s: usize,
+        pad: usize,
+    ) -> NodeId {
+        self.add(OpKind::Conv2d, Attrs::conv(out_ch, k, s, pad, 1), &[input])
+    }
+
+    pub fn depthwise(&mut self, input: NodeId, k: usize, s: usize, pad: usize) -> NodeId {
+        let c = self.shape(input)[1];
+        let mut a = Attrs::conv(0, k, s, pad, c);
+        a.units = None;
+        self.add(OpKind::DepthwiseConv2d, a, &[input])
+    }
+
+    pub fn relu(&mut self, input: NodeId) -> NodeId {
+        self.add(OpKind::Relu, Attrs::none(), &[input])
+    }
+
+    /// Conv (+folded BN) + ReLU — the inference-simplified conv block.
+    pub fn conv_relu(
+        &mut self,
+        input: NodeId,
+        out_ch: usize,
+        k: usize,
+        s: usize,
+        pad: usize,
+    ) -> NodeId {
+        let c = self.conv2d(input, out_ch, k, s, pad);
+        self.relu(c)
+    }
+
+    pub fn dense(&mut self, input: NodeId, units: usize) -> NodeId {
+        self.add(OpKind::Dense, Attrs::dense(units), &[input])
+    }
+
+    pub fn shape(&self, id: NodeId) -> &Shape {
+        &self.graph.nodes[id].out_shape
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.graph.nodes.len()
+    }
+
+    pub fn finish(self) -> Graph {
+        debug_assert!(self.graph.validate().is_ok(), "{:?}", self.graph.validate());
+        self.graph
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Graph {
+        let mut b = GraphBuilder::new("test", "tiny", 2);
+        let x = b.input(vec![2, 3, 32, 32]);
+        let c = b.conv_relu(x, 8, 3, 1, 1);
+        let p = b.add(OpKind::GlobalAvgPool2d, Attrs::none(), &[c]);
+        let f = b.add(OpKind::Flatten, Attrs::none(), &[p]);
+        b.dense(f, 10);
+        b.finish()
+    }
+
+    #[test]
+    fn builder_produces_valid_graph() {
+        let g = tiny();
+        assert_eq!(g.n_nodes(), 6);
+        assert!(g.validate().is_ok());
+        assert_eq!(g.nodes.last().unwrap().out_shape, vec![2, 10]);
+    }
+
+    #[test]
+    fn validate_catches_forward_reference() {
+        let mut g = tiny();
+        g.nodes[1].inputs = vec![3]; // conv now depends on a later node
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_wrong_shape() {
+        let mut g = tiny();
+        g.nodes[1].out_shape = vec![2, 9, 32, 32];
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_batch() {
+        let mut g = tiny();
+        g.batch = 4; // input node still has batch 2
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn post_order_children_before_parents() {
+        let g = tiny();
+        let order = g.post_order();
+        assert_eq!(order.len(), g.n_nodes());
+        let pos: Vec<usize> = {
+            let mut p = vec![0; order.len()];
+            for (i, &id) in order.iter().enumerate() {
+                p[id] = i;
+            }
+            p
+        };
+        for n in &g.nodes {
+            for &src in &n.inputs {
+                assert!(pos[src] < pos[n.id], "src {src} after node {}", n.id);
+            }
+        }
+    }
+
+    #[test]
+    fn edges_and_consumers_agree() {
+        let g = tiny();
+        let edges = g.edges();
+        let consumers = g.consumers();
+        assert_eq!(edges.len(), consumers.iter().map(|c| c.len()).sum::<usize>());
+        assert_eq!(edges.len(), 5);
+    }
+
+    #[test]
+    fn weights_counted() {
+        let g = tiny();
+        // conv 3->8 3x3 (+bias) + dense 8->10 (+bias)
+        assert_eq!(g.total_weights(), 8 * 3 * 9 + 8 + 8 * 10 + 10);
+    }
+
+    #[test]
+    fn count_op_matches() {
+        let g = tiny();
+        assert_eq!(g.count_op(OpKind::Conv2d), 1);
+        assert_eq!(g.count_op(OpKind::Relu), 1);
+        assert_eq!(g.count_op(OpKind::Dense), 1);
+        assert_eq!(g.count_op(OpKind::BatchMatmul), 0);
+    }
+
+    #[test]
+    fn residual_block_via_add() {
+        let mut b = GraphBuilder::new("test", "resblock", 1);
+        let x = b.input(vec![1, 16, 8, 8]);
+        let c1 = b.conv_relu(x, 16, 3, 1, 1);
+        let c2 = b.conv2d(c1, 16, 3, 1, 1);
+        let s = b.add(OpKind::Add, Attrs::none(), &[c2, x]);
+        let r = b.relu(s);
+        let g = b.finish();
+        assert!(g.validate().is_ok());
+        assert_eq!(g.nodes[r].out_shape, vec![1, 16, 8, 8]);
+    }
+}

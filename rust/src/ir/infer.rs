@@ -1,0 +1,344 @@
+//! Shape inference: output shape of an op from its attributes and input
+//! shapes. Shapes are NCHW for 4-D tensors, `[N, tokens, dim]` for 3-D
+//! (transformers), `[N, features]` for 2-D.
+
+use super::op::{Attrs, OpKind};
+
+pub type Shape = Vec<usize>;
+
+/// Infer the output shape, or an error string describing the mismatch.
+pub fn infer_shape(op: OpKind, attrs: &Attrs, inputs: &[&Shape]) -> Result<Shape, String> {
+    let need = |n: usize| -> Result<(), String> {
+        if inputs.len() != n {
+            Err(format!("{op} expects {n} input(s), got {}", inputs.len()))
+        } else {
+            Ok(())
+        }
+    };
+    match op {
+        OpKind::Input => Err("input nodes carry their own shape".into()),
+
+        OpKind::Conv2d | OpKind::DepthwiseConv2d | OpKind::Conv2dTranspose => {
+            need(1)?;
+            let s = inputs[0];
+            if s.len() != 4 {
+                return Err(format!("{op} needs NCHW input, got {s:?}"));
+            }
+            let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
+            let (kh, kw) = attrs.kernel.ok_or("conv needs kernel")?;
+            let (sh, sw) = attrs.strides.unwrap_or((1, 1));
+            let p = attrs.padding;
+            let out_c = match op {
+                OpKind::DepthwiseConv2d => c,
+                _ => attrs.units.ok_or("conv needs units (out channels)")?,
+            };
+            if op == OpKind::DepthwiseConv2d && attrs.groups != c {
+                return Err(format!(
+                    "depthwise conv groups ({}) must equal C_in ({c})",
+                    attrs.groups
+                ));
+            }
+            if op != OpKind::DepthwiseConv2d && c % attrs.groups.max(1) != 0 {
+                return Err(format!("C_in {c} not divisible by groups {}", attrs.groups));
+            }
+            let (oh, ow) = if op == OpKind::Conv2dTranspose {
+                (h * sh, w * sw) // common upsampling configuration
+            } else {
+                if h + 2 * p < kh || w + 2 * p < kw {
+                    return Err(format!("kernel {kh}x{kw} larger than padded input {h}x{w}"));
+                }
+                ((h + 2 * p - kh) / sh + 1, (w + 2 * p - kw) / sw + 1)
+            };
+            if oh == 0 || ow == 0 {
+                return Err(format!("{op} output collapsed to zero: {oh}x{ow}"));
+            }
+            Ok(vec![n, out_c, oh, ow])
+        }
+
+        OpKind::Dense => {
+            need(1)?;
+            let s = inputs[0];
+            let units = attrs.units.ok_or("dense needs units")?;
+            match s.len() {
+                2 => Ok(vec![s[0], units]),
+                3 => Ok(vec![s[0], s[1], units]), // token-wise linear
+                _ => Err(format!("dense needs 2-D or 3-D input, got {s:?}")),
+            }
+        }
+
+        OpKind::BatchMatmul => {
+            need(2)?;
+            let (a, b) = (inputs[0], inputs[1]);
+            if a.len() != 3 || b.len() != 3 {
+                return Err(format!("batch_matmul needs 3-D inputs, got {a:?} x {b:?}"));
+            }
+            if a[0] != b[0] || a[2] != b[1] {
+                return Err(format!("batch_matmul shape mismatch {a:?} x {b:?}"));
+            }
+            Ok(vec![a[0], a[1], b[2]])
+        }
+
+        OpKind::Relu
+        | OpKind::Gelu
+        | OpKind::Sigmoid
+        | OpKind::HardSwish
+        | OpKind::Softmax
+        | OpKind::BatchNorm
+        | OpKind::LayerNorm => {
+            need(1)?;
+            Ok(inputs[0].clone())
+        }
+
+        OpKind::Add | OpKind::Multiply => {
+            need(2)?;
+            if inputs[0] != inputs[1] {
+                return Err(format!(
+                    "elementwise shape mismatch {:?} vs {:?}",
+                    inputs[0], inputs[1]
+                ));
+            }
+            Ok(inputs[0].clone())
+        }
+
+        OpKind::Concat => {
+            if inputs.is_empty() {
+                return Err("concat needs at least one input".into());
+            }
+            let axis = attrs.axis.unwrap_or(1) as usize;
+            let first = inputs[0];
+            if axis >= first.len() {
+                return Err(format!("concat axis {axis} out of rank {}", first.len()));
+            }
+            let mut out = first.clone();
+            for s in &inputs[1..] {
+                if s.len() != first.len() {
+                    return Err("concat rank mismatch".into());
+                }
+                for (d, (&a, &b)) in first.iter().zip(s.iter()).enumerate() {
+                    if d != axis && a != b {
+                        return Err(format!(
+                            "concat non-axis dim mismatch at {d}: {a} vs {b}"
+                        ));
+                    }
+                }
+                out[axis] += s[axis];
+            }
+            out[axis] = inputs.iter().map(|s| s[axis]).sum();
+            Ok(out)
+        }
+
+        OpKind::MaxPool2d | OpKind::AvgPool2d => {
+            need(1)?;
+            let s = inputs[0];
+            if s.len() != 4 {
+                return Err(format!("{op} needs NCHW input, got {s:?}"));
+            }
+            let (kh, kw) = attrs.kernel.ok_or("pool needs kernel")?;
+            let (sh, sw) = attrs.strides.unwrap_or((kh, kw));
+            let p = attrs.padding;
+            let oh = (s[2] + 2 * p - kh) / sh + 1;
+            let ow = (s[3] + 2 * p - kw) / sw + 1;
+            if oh == 0 || ow == 0 {
+                return Err("pool output collapsed to zero".into());
+            }
+            Ok(vec![s[0], s[1], oh, ow])
+        }
+
+        OpKind::GlobalAvgPool2d => {
+            need(1)?;
+            let s = inputs[0];
+            if s.len() != 4 {
+                return Err(format!("global pool needs NCHW input, got {s:?}"));
+            }
+            Ok(vec![s[0], s[1], 1, 1])
+        }
+
+        OpKind::Flatten => {
+            need(1)?;
+            let s = inputs[0];
+            Ok(vec![s[0], s[1..].iter().product::<usize>().max(1)])
+        }
+
+        OpKind::Reshape | OpKind::Transpose | OpKind::StridedSlice => {
+            // Target shape supplied out-of-band by the builder (these ops
+            // keep or reduce element count; validation happens in the graph).
+            need(1)?;
+            Ok(inputs[0].clone())
+        }
+
+        OpKind::Mean => {
+            need(1)?;
+            let s = inputs[0];
+            let axis = attrs.axis.unwrap_or(1) as usize;
+            if axis >= s.len() {
+                return Err(format!("mean axis {axis} out of rank {}", s.len()));
+            }
+            let mut out = s.clone();
+            out.remove(axis);
+            if out.is_empty() {
+                out.push(1);
+            }
+            Ok(out)
+        }
+    }
+}
+
+/// Element count of a shape.
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product::<usize>().max(if shape.is_empty() { 0 } else { 1 })
+}
+
+/// Trainable weight parameter count of an op (for model-size accounting).
+pub fn weight_count(op: OpKind, attrs: &Attrs, in_shape: &[usize], out_shape: &[usize]) -> usize {
+    match op {
+        OpKind::Conv2d | OpKind::Conv2dTranspose => {
+            let (kh, kw) = attrs.kernel.unwrap_or((1, 1));
+            let c_in = in_shape.get(1).copied().unwrap_or(1);
+            let c_out = out_shape.get(1).copied().unwrap_or(1);
+            let g = attrs.groups.max(1);
+            c_out * (c_in / g) * kh * kw + c_out
+        }
+        OpKind::DepthwiseConv2d => {
+            let (kh, kw) = attrs.kernel.unwrap_or((1, 1));
+            let c = in_shape.get(1).copied().unwrap_or(1);
+            c * kh * kw + c
+        }
+        OpKind::Dense => {
+            let d_in = *in_shape.last().unwrap_or(&1);
+            let d_out = *out_shape.last().unwrap_or(&1);
+            d_in * d_out + d_out
+        }
+        OpKind::BatchNorm => 2 * in_shape.get(1).copied().unwrap_or(1),
+        OpKind::LayerNorm => 2 * in_shape.last().copied().unwrap_or(1),
+        _ => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shape() {
+        let s = vec![1, 3, 224, 224];
+        let out =
+            infer_shape(OpKind::Conv2d, &Attrs::conv(64, 7, 2, 3, 1), &[&s]).unwrap();
+        assert_eq!(out, vec![1, 64, 112, 112]);
+    }
+
+    #[test]
+    fn depthwise_preserves_channels() {
+        let s = vec![2, 32, 56, 56];
+        let mut a = Attrs::conv(0, 3, 1, 1, 32);
+        a.units = None;
+        let out = infer_shape(OpKind::DepthwiseConv2d, &a, &[&s]).unwrap();
+        assert_eq!(out, vec![2, 32, 56, 56]);
+    }
+
+    #[test]
+    fn depthwise_group_mismatch_rejected() {
+        let s = vec![2, 32, 56, 56];
+        let mut a = Attrs::conv(0, 3, 1, 1, 16);
+        a.units = None;
+        assert!(infer_shape(OpKind::DepthwiseConv2d, &a, &[&s]).is_err());
+    }
+
+    #[test]
+    fn dense_2d_and_3d() {
+        assert_eq!(
+            infer_shape(OpKind::Dense, &Attrs::dense(10), &[&vec![4, 512]]).unwrap(),
+            vec![4, 10]
+        );
+        assert_eq!(
+            infer_shape(OpKind::Dense, &Attrs::dense(768), &[&vec![4, 197, 384]])
+                .unwrap(),
+            vec![4, 197, 768]
+        );
+    }
+
+    #[test]
+    fn batch_matmul_checks_dims() {
+        let a = vec![8, 197, 64];
+        let b = vec![8, 64, 197];
+        assert_eq!(
+            infer_shape(OpKind::BatchMatmul, &Attrs::none(), &[&a, &b]).unwrap(),
+            vec![8, 197, 197]
+        );
+        let bad = vec![8, 32, 197];
+        assert!(infer_shape(OpKind::BatchMatmul, &Attrs::none(), &[&a, &bad]).is_err());
+    }
+
+    #[test]
+    fn concat_sums_axis() {
+        let a = vec![1, 64, 28, 28];
+        let b = vec![1, 32, 28, 28];
+        let out =
+            infer_shape(OpKind::Concat, &Attrs::with_axis(1), &[&a, &b]).unwrap();
+        assert_eq!(out, vec![1, 96, 28, 28]);
+    }
+
+    #[test]
+    fn concat_rejects_mismatch() {
+        let a = vec![1, 64, 28, 28];
+        let b = vec![1, 32, 14, 14];
+        assert!(infer_shape(OpKind::Concat, &Attrs::with_axis(1), &[&a, &b]).is_err());
+    }
+
+    #[test]
+    fn pool_defaults_stride_to_kernel() {
+        let s = vec![1, 64, 56, 56];
+        let out = infer_shape(
+            OpKind::MaxPool2d,
+            &Attrs {
+                kernel: Some((2, 2)),
+                ..Attrs::none()
+            },
+            &[&s],
+        )
+        .unwrap();
+        assert_eq!(out, vec![1, 64, 28, 28]);
+    }
+
+    #[test]
+    fn global_pool_and_flatten() {
+        let s = vec![2, 1280, 7, 7];
+        let g = infer_shape(OpKind::GlobalAvgPool2d, &Attrs::none(), &[&s]).unwrap();
+        assert_eq!(g, vec![2, 1280, 1, 1]);
+        let f = infer_shape(OpKind::Flatten, &Attrs::none(), &[&g]).unwrap();
+        assert_eq!(f, vec![2, 1280]);
+    }
+
+    #[test]
+    fn mean_removes_axis() {
+        let s = vec![4, 197, 384];
+        let out = infer_shape(OpKind::Mean, &Attrs::with_axis(1), &[&s]).unwrap();
+        assert_eq!(out, vec![4, 384]);
+    }
+
+    #[test]
+    fn elementwise_requires_same_shape() {
+        let a = vec![1, 64, 28, 28];
+        assert!(infer_shape(OpKind::Add, &Attrs::none(), &[&a, &a]).is_ok());
+        let b = vec![1, 32, 28, 28];
+        assert!(infer_shape(OpKind::Add, &Attrs::none(), &[&a, &b]).is_err());
+    }
+
+    #[test]
+    fn weight_counts() {
+        // conv 3->64, 7x7: 64*3*49 + 64
+        assert_eq!(
+            weight_count(
+                OpKind::Conv2d,
+                &Attrs::conv(64, 7, 2, 3, 1),
+                &[1, 3, 224, 224],
+                &[1, 64, 112, 112]
+            ),
+            64 * 3 * 49 + 64
+        );
+        assert_eq!(
+            weight_count(OpKind::Dense, &Attrs::dense(10), &[1, 512], &[1, 10]),
+            512 * 10 + 10
+        );
+        assert_eq!(weight_count(OpKind::Relu, &Attrs::none(), &[1, 8], &[1, 8]), 0);
+    }
+}

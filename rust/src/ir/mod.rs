@@ -1,0 +1,13 @@
+//! Generalized graph IR (the paper's "Relay IR" analogue, §3.1).
+//!
+//! Every frontend lowers into this representation; the featurizers
+//! (Algorithm 1 + eq. 1), the A100 simulator and the model generators all
+//! speak it. A [`Graph`] is a DAG of operator [`Node`]s over NCHW tensors,
+//! stored in topological order (enforced at construction / validation).
+
+pub mod graph;
+pub mod infer;
+pub mod op;
+
+pub use graph::{Graph, GraphBuilder, Node, NodeId};
+pub use op::{Attrs, OpKind};

@@ -1,0 +1,304 @@
+//! Operator vocabulary and attributes.
+//!
+//! The operator set covers everything the ten model families of paper
+//! Table 2 need after inference simplification (BatchNorm folding happens in
+//! the generators/frontends, but BatchNorm remains representable because
+//! real framework exports may contain it).
+
+use std::fmt;
+
+/// Operator kinds. The one-hot *category* used in node features groups
+/// related kinds (see [`OpKind::category`]) to keep the paper's fixed
+/// 32-feature budget (§3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpKind {
+    /// Graph input placeholder.
+    Input,
+    Conv2d,
+    DepthwiseConv2d,
+    Conv2dTranspose,
+    /// Fully-connected / linear.
+    Dense,
+    /// Batched matrix multiply (attention scores/values).
+    BatchMatmul,
+    Relu,
+    Gelu,
+    Sigmoid,
+    HardSwish,
+    Softmax,
+    Add,
+    Multiply,
+    Concat,
+    MaxPool2d,
+    AvgPool2d,
+    GlobalAvgPool2d,
+    BatchNorm,
+    LayerNorm,
+    Reshape,
+    Transpose,
+    Flatten,
+    StridedSlice,
+    /// Reduction mean over an axis (e.g. token pooling in transformers).
+    Mean,
+}
+
+pub const ALL_OPS: [OpKind; 24] = [
+    OpKind::Input,
+    OpKind::Conv2d,
+    OpKind::DepthwiseConv2d,
+    OpKind::Conv2dTranspose,
+    OpKind::Dense,
+    OpKind::BatchMatmul,
+    OpKind::Relu,
+    OpKind::Gelu,
+    OpKind::Sigmoid,
+    OpKind::HardSwish,
+    OpKind::Softmax,
+    OpKind::Add,
+    OpKind::Multiply,
+    OpKind::Concat,
+    OpKind::MaxPool2d,
+    OpKind::AvgPool2d,
+    OpKind::GlobalAvgPool2d,
+    OpKind::BatchNorm,
+    OpKind::LayerNorm,
+    OpKind::Reshape,
+    OpKind::Transpose,
+    OpKind::Flatten,
+    OpKind::StridedSlice,
+    OpKind::Mean,
+];
+
+/// Number of one-hot categories in the node feature vector.
+pub const N_CATEGORIES: usize = 18;
+
+impl OpKind {
+    /// Canonical lowercase name (used by the native text format and NFG).
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Input => "input",
+            OpKind::Conv2d => "conv2d",
+            OpKind::DepthwiseConv2d => "depthwise_conv2d",
+            OpKind::Conv2dTranspose => "conv2d_transpose",
+            OpKind::Dense => "dense",
+            OpKind::BatchMatmul => "batch_matmul",
+            OpKind::Relu => "relu",
+            OpKind::Gelu => "gelu",
+            OpKind::Sigmoid => "sigmoid",
+            OpKind::HardSwish => "hard_swish",
+            OpKind::Softmax => "softmax",
+            OpKind::Add => "add",
+            OpKind::Multiply => "multiply",
+            OpKind::Concat => "concat",
+            OpKind::MaxPool2d => "max_pool2d",
+            OpKind::AvgPool2d => "avg_pool2d",
+            OpKind::GlobalAvgPool2d => "global_avg_pool2d",
+            OpKind::BatchNorm => "batch_norm",
+            OpKind::LayerNorm => "layer_norm",
+            OpKind::Reshape => "reshape",
+            OpKind::Transpose => "transpose",
+            OpKind::Flatten => "flatten",
+            OpKind::StridedSlice => "strided_slice",
+            OpKind::Mean => "mean",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<OpKind> {
+        ALL_OPS.iter().copied().find(|op| op.name() == name)
+    }
+
+    /// One-hot category index for the NFG (groups related ops; paper §3.2
+    /// fixes the feature length at 32 = 18 categories + 6 attrs + 8 shape).
+    pub fn category(self) -> usize {
+        match self {
+            OpKind::Input => 0,
+            OpKind::Conv2d => 1,
+            OpKind::DepthwiseConv2d => 2,
+            OpKind::Conv2dTranspose => 3,
+            OpKind::Dense => 4,
+            OpKind::BatchMatmul => 5,
+            OpKind::Relu => 6,
+            OpKind::Gelu | OpKind::Sigmoid | OpKind::HardSwish => 7,
+            OpKind::Softmax => 8,
+            OpKind::Add => 9,
+            OpKind::Multiply => 10,
+            OpKind::Concat => 11,
+            OpKind::MaxPool2d | OpKind::AvgPool2d => 12,
+            OpKind::GlobalAvgPool2d => 13,
+            OpKind::BatchNorm => 14,
+            OpKind::LayerNorm => 15,
+            OpKind::Reshape
+            | OpKind::Transpose
+            | OpKind::Flatten
+            | OpKind::StridedSlice => 16,
+            OpKind::Mean => 17,
+        }
+    }
+
+    /// Does this op carry trainable weights (contributes to model size)?
+    pub fn has_weights(self) -> bool {
+        matches!(
+            self,
+            OpKind::Conv2d
+                | OpKind::DepthwiseConv2d
+                | OpKind::Conv2dTranspose
+                | OpKind::Dense
+                | OpKind::BatchNorm
+                | OpKind::LayerNorm
+        )
+    }
+
+    /// Elementwise ops are fusable into their producer (simulator fusion
+    /// pass) — they never cause an extra HBM round-trip on a real GPU.
+    pub fn is_elementwise(self) -> bool {
+        matches!(
+            self,
+            OpKind::Relu
+                | OpKind::Gelu
+                | OpKind::Sigmoid
+                | OpKind::HardSwish
+                | OpKind::Add
+                | OpKind::Multiply
+                | OpKind::BatchNorm
+        )
+    }
+
+    /// Tensor-core eligible (MXU-analogue) ops (simulator roofline).
+    pub fn is_tensor_core(self) -> bool {
+        matches!(
+            self,
+            OpKind::Conv2d | OpKind::Conv2dTranspose | OpKind::Dense | OpKind::BatchMatmul
+        )
+    }
+
+    /// MACs counted by the SFG, mirroring TVM's relay analysis which only
+    /// counts Conv2D / Conv2D-transpose / dense / batch_matmul (paper §3.3).
+    pub fn counts_macs(self) -> bool {
+        matches!(
+            self,
+            OpKind::Conv2d
+                | OpKind::DepthwiseConv2d
+                | OpKind::Conv2dTranspose
+                | OpKind::Dense
+                | OpKind::BatchMatmul
+        )
+    }
+}
+
+impl fmt::Display for OpKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Operator attributes. A closed struct (not a map) keeps featurization
+/// total and cheap; unused fields are zero/None for a given op.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Attrs {
+    /// Convolution / pooling kernel (kh, kw).
+    pub kernel: Option<(usize, usize)>,
+    /// Strides (sh, sw).
+    pub strides: Option<(usize, usize)>,
+    /// Symmetric spatial padding.
+    pub padding: usize,
+    /// Convolution groups (1 = dense conv; = C_in for depthwise).
+    pub groups: usize,
+    /// Dense units / conv output channels.
+    pub units: Option<usize>,
+    /// Axis for concat/softmax/mean.
+    pub axis: Option<i64>,
+}
+
+impl Attrs {
+    pub fn none() -> Attrs {
+        Attrs {
+            groups: 1,
+            ..Default::default()
+        }
+    }
+
+    pub fn conv(out_ch: usize, k: usize, s: usize, pad: usize, groups: usize) -> Attrs {
+        Attrs {
+            kernel: Some((k, k)),
+            strides: Some((s, s)),
+            padding: pad,
+            groups,
+            units: Some(out_ch),
+            axis: None,
+        }
+    }
+
+    pub fn pool(k: usize, s: usize, pad: usize) -> Attrs {
+        Attrs {
+            kernel: Some((k, k)),
+            strides: Some((s, s)),
+            padding: pad,
+            groups: 1,
+            units: None,
+            axis: None,
+        }
+    }
+
+    pub fn dense(units: usize) -> Attrs {
+        Attrs {
+            units: Some(units),
+            groups: 1,
+            ..Default::default()
+        }
+    }
+
+    pub fn with_axis(axis: i64) -> Attrs {
+        Attrs {
+            axis: Some(axis),
+            groups: 1,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for op in ALL_OPS {
+            assert_eq!(OpKind::from_name(op.name()), Some(op), "{op}");
+        }
+        assert_eq!(OpKind::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn categories_within_bounds() {
+        for op in ALL_OPS {
+            assert!(op.category() < N_CATEGORIES, "{op}");
+        }
+    }
+
+    #[test]
+    fn every_category_used() {
+        let mut used = [false; N_CATEGORIES];
+        for op in ALL_OPS {
+            used[op.category()] = true;
+        }
+        assert!(used.iter().all(|&u| u));
+    }
+
+    #[test]
+    fn tensor_core_ops_count_macs() {
+        for op in ALL_OPS {
+            if op.is_tensor_core() {
+                assert!(op.counts_macs(), "{op}");
+            }
+        }
+    }
+
+    #[test]
+    fn attr_constructors() {
+        let a = Attrs::conv(64, 3, 2, 1, 1);
+        assert_eq!(a.kernel, Some((3, 3)));
+        assert_eq!(a.units, Some(64));
+        assert_eq!(Attrs::dense(10).units, Some(10));
+        assert_eq!(Attrs::none().groups, 1);
+    }
+}

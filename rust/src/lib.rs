@@ -1,0 +1,31 @@
+//! # DIPPM — Deep Learning Inference Performance Predictive Model
+//!
+//! Full-system reproduction of *"DIPPM: a Deep Learning Inference Performance
+//! Predictive Model using Graph Neural Networks"* (Panner Selvam & Brorsson,
+//! 2023) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** — Pallas kernels (fused GraphSAGE layer, fused FC block) authored
+//!   in `python/compile/kernels/`, AOT-lowered to HLO text.
+//! * **L2** — the PMGNS model + Table-4 baselines (GCN/GIN/GAT/MLP) in JAX,
+//!   with Huber loss and the Adam update lowered *into* the train-step HLO.
+//! * **L3** — this crate: the generalized graph IR, the four framework
+//!   frontends, the ten model-family generators, the A100 device simulator
+//!   (ground-truth substrate), featurization (Algorithm 1 + eq. 1), the
+//!   dataset pipeline, the PJRT runtime, the training driver, the serving
+//!   coordinator and the MIG advisor.
+//!
+//! Python never runs on the request path: after `make artifacts` the `dippm`
+//! binary is self-contained. See `DESIGN.md` for the system inventory and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod coordinator;
+pub mod dataset;
+pub mod features;
+pub mod frontends;
+pub mod ir;
+pub mod mig;
+pub mod modelgen;
+pub mod runtime;
+pub mod simulator;
+pub mod training;
+pub mod util;

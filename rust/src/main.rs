@@ -1,0 +1,357 @@
+//! `dippm` — the DIPPM command-line launcher.
+//!
+//! Subcommands:
+//!   build-dataset   build the graph dataset (Table 2 distribution)
+//!   train           train a PMGNS variant via the AOT train-step artifact
+//!   evaluate        MAPE of a checkpoint on a dataset split
+//!   predict         predict latency/memory/energy/MIG for a model file
+//!   serve           TCP JSON-lines prediction service
+//!   mig             MIG-profile advisory table for a model file
+//!   compare-gnn     paper Table 4 (GNN variant comparison)
+//!   lr-find         Smith LR range test (paper Table 3's lr provenance)
+//!   show-config     echo the training configuration (paper Table 3)
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use dippm::coordinator::{Coordinator, CoordinatorOptions};
+use dippm::dataset::{io as ds_io, Dataset};
+use dippm::frontends::{self, Framework};
+use dippm::ir::Graph;
+use dippm::mig;
+use dippm::runtime::{ParamStore, Runtime};
+use dippm::simulator::{MigProfile, Simulator, ALL_PROFILES};
+use dippm::training::{lr_finder, trainer, TrainConfig, Trainer};
+use dippm::util::args::Args;
+use dippm::util::bench::Table;
+use dippm::util::threadpool::ThreadPool;
+
+const USAGE: &str = "\
+dippm — Deep Learning Inference Performance Predictive Model (paper reproduction)
+
+USAGE: dippm <command> [options]
+
+COMMANDS
+  build-dataset  --out <file> [--fraction 1.0] [--seed 42] [--workers N]
+  train          --dataset <file> --checkpoint-out <file> [--variant sage]
+                 [--epochs 10] [--lr 1e-3] [--mse] [--max-train N] [--seed 0]
+                 [--artifacts artifacts]
+  evaluate       --dataset <file> --checkpoint <file> [--split test|val|train]
+  predict        --model <file> [--framework auto] --checkpoint <file>
+  serve          --checkpoint <file> [--addr 127.0.0.1:7401] [--max-wait-ms 2]
+  mig            --model <file> [--framework auto] [--checkpoint <file>]
+  compare-gnn    --dataset <file> [--epochs 10] [--lr 1e-3] [--max-train N]
+  lr-find        --dataset <file> [--variant sage] [--steps 60]
+  show-config
+";
+
+fn main() {
+    let args = match Args::parse(&[
+        "out", "fraction", "seed", "workers", "dataset", "checkpoint-out",
+        "variant", "epochs", "lr", "max-train", "artifacts", "checkpoint",
+        "split", "model", "framework", "addr", "max-wait-ms", "steps",
+    ]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if args.wants_help() || args.positional.is_empty() {
+        println!("{USAGE}");
+        return;
+    }
+    let cmd = args.positional[0].clone();
+    let result = match cmd.as_str() {
+        "build-dataset" => cmd_build_dataset(&args),
+        "train" => cmd_train(&args),
+        "evaluate" => cmd_evaluate(&args),
+        "predict" => cmd_predict(&args),
+        "serve" => cmd_serve(&args),
+        "mig" => cmd_mig(&args),
+        "compare-gnn" => cmd_compare_gnn(&args),
+        "lr-find" => cmd_lr_find(&args),
+        "show-config" => cmd_show_config(&args),
+        other => Err(anyhow!("unknown command {other:?}\n{USAGE}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.get_or("artifacts", "artifacts").to_string()
+}
+
+fn load_dataset(args: &Args) -> Result<Dataset> {
+    let path = args.get("dataset").ok_or(anyhow!("--dataset required"))?;
+    ds_io::load(path).with_context(|| format!("loading dataset {path}"))
+}
+
+fn cmd_build_dataset(args: &Args) -> Result<()> {
+    let out = args.get("out").ok_or(anyhow!("--out required"))?;
+    let fraction = args.get_f64("fraction", 1.0);
+    let seed = args.get_u64("seed", 42);
+    let workers = args.get_usize("workers", ThreadPool::default_parallelism());
+    let t0 = std::time::Instant::now();
+    let ds = Dataset::build(fraction, seed, workers);
+    println!(
+        "built {} graphs in {:.1}s (fraction {fraction})",
+        ds.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    let mut table = Table::new(&["Model Family", "# of Graphs", "Percentage (%)"]);
+    let total = ds.len() as f64;
+    for (family, count) in ds.family_distribution() {
+        table.row(&[
+            family,
+            count.to_string(),
+            format!("{:.2}", 100.0 * count as f64 / total),
+        ]);
+    }
+    table.print();
+    ds_io::save(out, &ds)?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let ds = load_dataset(args)?;
+    let ck_out = args
+        .get("checkpoint-out")
+        .ok_or(anyhow!("--checkpoint-out required"))?;
+    let runtime = Runtime::new(&artifacts_dir(args))?;
+    let config = TrainConfig {
+        variant: args.get_or("variant", "sage").to_string(),
+        epochs: args.get_usize("epochs", 10),
+        lr: args.get_f64("lr", 1e-3),
+        seed: args.get_u64("seed", 0),
+        mse_loss: args.flag("mse"),
+        max_train: args.get("max-train").map(|v| v.parse().unwrap()),
+        zero_statics: args.flag("no-statics"),
+    };
+    let mut t = Trainer::new(&runtime, config)?;
+    for epoch in 0..t.config.epochs {
+        t.train_epoch(&ds, epoch)?;
+        if (epoch + 1) % 5 == 0 || epoch + 1 == t.config.epochs {
+            let val = t.evaluate(&ds, &ds.splits.val)?;
+            println!(
+                "epoch {epoch}: val MAPE {:.4} (lat {:.4} mem {:.4} energy {:.4})",
+                val.overall(),
+                val.mape_latency,
+                val.mape_memory,
+                val.mape_energy
+            );
+        }
+    }
+    let test = t.evaluate(&ds, &ds.splits.test)?;
+    println!(
+        "final test MAPE {:.4} ({:.2}%)  [paper: 0.019 = 1.9%]",
+        test.overall(),
+        100.0 * test.overall()
+    );
+    t.params.save(ck_out)?;
+    println!("checkpoint -> {ck_out}");
+    Ok(())
+}
+
+fn split_indices<'a>(ds: &'a Dataset, which: &str) -> Result<&'a [usize]> {
+    Ok(match which {
+        "train" => &ds.splits.train,
+        "val" => &ds.splits.val,
+        "test" => &ds.splits.test,
+        other => return Err(anyhow!("unknown split {other:?}")),
+    })
+}
+
+fn cmd_evaluate(args: &Args) -> Result<()> {
+    let ds = load_dataset(args)?;
+    let ck = args.get("checkpoint").ok_or(anyhow!("--checkpoint required"))?;
+    let params = ParamStore::load(ck)?;
+    let runtime = Runtime::new(&artifacts_dir(args))?;
+    let split = args.get_or("split", "test");
+    let report = trainer::evaluate_params(&runtime, &params, &ds, split_indices(&ds, split)?)?;
+    println!(
+        "{split} MAPE: overall {:.4} | latency {:.4} memory {:.4} energy {:.4} (n={})",
+        report.overall(),
+        report.mape_latency,
+        report.mape_memory,
+        report.mape_energy,
+        report.n
+    );
+    Ok(())
+}
+
+fn read_model(args: &Args) -> Result<Graph> {
+    let path = args.get("model").ok_or(anyhow!("--model required"))?;
+    let content =
+        std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    match args.get("framework") {
+        Some("auto") | None => frontends::parse_any(&content).map_err(|e| anyhow!(e)),
+        Some(name) => {
+            let fw = Framework::from_name(name)
+                .ok_or_else(|| anyhow!("unknown framework {name:?}"))?;
+            frontends::parse(fw, &content).map_err(|e| anyhow!(e))
+        }
+    }
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let graph = read_model(args)?;
+    let ck = args.get("checkpoint").ok_or(anyhow!("--checkpoint required"))?;
+    let params = ParamStore::load(ck)?;
+    let coord = Coordinator::start(
+        &artifacts_dir(args),
+        params,
+        CoordinatorOptions::default(),
+    )?;
+    let pred = coord.predict(graph.clone())?;
+    println!("model: {} ({} nodes, batch {})", graph.variant, graph.n_nodes(), graph.batch);
+    println!("  latency : {:9.3} ms", pred.latency_ms);
+    println!("  memory  : {:9.0} MB", pred.memory_mb);
+    println!("  energy  : {:9.3} J", pred.energy_j);
+    println!(
+        "  MIG     : {}",
+        pred.mig_profile.as_deref().unwrap_or("None (exceeds 7g.40gb)")
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let ck = args.get("checkpoint").ok_or(anyhow!("--checkpoint required"))?;
+    let params = ParamStore::load(ck)?;
+    let opts = CoordinatorOptions {
+        max_wait: std::time::Duration::from_millis(args.get_u64("max-wait-ms", 2)),
+        ..Default::default()
+    };
+    let coord = Arc::new(Coordinator::start(&artifacts_dir(args), params, opts)?);
+    let addr = args.get_or("addr", "127.0.0.1:7401");
+    dippm::coordinator::tcp::serve(coord, addr, |port| {
+        println!("listening on port {port}; protocol: one JSON request per line");
+    })
+}
+
+fn cmd_mig(args: &Args) -> Result<()> {
+    let graph = read_model(args)?;
+    let sim = Simulator::new();
+    println!("MIG advisory for {} (batch {})", graph.variant, graph.batch);
+    // Predicted side (via checkpoint) if given, else simulator-only table.
+    if let Some(ck) = args.get("checkpoint") {
+        let params = ParamStore::load(ck)?;
+        let coord = Coordinator::start(
+            &artifacts_dir(args),
+            params,
+            CoordinatorOptions::default(),
+        )?;
+        let pred = coord.predict(graph.clone())?;
+        println!(
+            "predicted memory {:.0} MB -> MIG {}",
+            pred.memory_mb,
+            pred.mig_profile.as_deref().unwrap_or("None")
+        );
+    }
+    let mut table = Table::new(&["profile", "memory (MB)", "mem/capacity", "latency (ms)"]);
+    for p in ALL_PROFILES {
+        match sim.measure_mig(&graph, p) {
+            dippm::simulator::MigResult::Ok(m) => table.row(&[
+                p.name().to_string(),
+                format!("{:.0}", m.memory_mb),
+                format!("{:.0}%", 100.0 * m.memory_mb / p.capacity_mb()),
+                format!("{:.3}", m.latency_ms),
+            ]),
+            dippm::simulator::MigResult::OutOfMemory { required_mb, .. } => table.row(&[
+                p.name().to_string(),
+                format!("OOM ({required_mb:.0})"),
+                "-".into(),
+                "-".into(),
+            ]),
+        }
+    }
+    table.print();
+    let best = mig::actual_best_profile(&sim, &graph)
+        .map(|p| p.name().to_string())
+        .unwrap_or_else(|| "None".into());
+    println!("actual best profile: {best}");
+    Ok(())
+}
+
+fn cmd_compare_gnn(args: &Args) -> Result<()> {
+    let ds = load_dataset(args)?;
+    let runtime = Runtime::new(&artifacts_dir(args))?;
+    let epochs = args.get_usize("epochs", 10);
+    let lr = args.get_f64("lr", 1e-3);
+    let max_train = args.get("max-train").map(|v| v.parse().unwrap());
+    let mut table = Table::new(&["Model", "Training", "Validation", "Test"]);
+    let variants: Vec<String> = runtime.manifest.variants.keys().cloned().collect();
+    for variant in ["gat", "gcn", "gin", "mlp", "sage"] {
+        if !variants.iter().any(|v| v == variant) {
+            continue;
+        }
+        let config = TrainConfig {
+            variant: variant.to_string(),
+            epochs,
+            lr,
+            seed: 0,
+            mse_loss: false,
+            max_train,
+            zero_statics: false,
+        };
+        let mut t = Trainer::new(&runtime, config)?;
+        for epoch in 0..epochs {
+            t.train_epoch(&ds, epoch)?;
+        }
+        let tr = t.evaluate(&ds, &ds.splits.train)?;
+        let va = t.evaluate(&ds, &ds.splits.val)?;
+        let te = t.evaluate(&ds, &ds.splits.test)?;
+        table.row(&[
+            variant.to_string(),
+            format!("{:.3}", tr.overall()),
+            format!("{:.3}", va.overall()),
+            format!("{:.3}", te.overall()),
+        ]);
+    }
+    println!("Table 4 reproduction ({epochs} epochs):");
+    table.print();
+    Ok(())
+}
+
+fn cmd_lr_find(args: &Args) -> Result<()> {
+    let ds = load_dataset(args)?;
+    let runtime = Runtime::new(&artifacts_dir(args))?;
+    let config = TrainConfig {
+        variant: args.get_or("variant", "sage").to_string(),
+        ..Default::default()
+    };
+    let mut t = Trainer::new(&runtime, config)?;
+    let steps = args.get_usize("steps", 60);
+    let result = lr_finder::lr_find(&mut t, &ds, 1e-7, 1.0, steps)?;
+    for (lr, loss) in &result.curve {
+        println!("lr {lr:10.3e}  loss {loss:.4}");
+    }
+    println!(
+        "suggested lr: {:.3e} (paper Table 3 used 2.754e-5 for hidden=512)",
+        result.suggested
+    );
+    Ok(())
+}
+
+fn cmd_show_config(args: &Args) -> Result<()> {
+    // Echo Table 3 + this build's constants from the manifest.
+    let runtime = Runtime::new(&artifacts_dir(args))?;
+    let c = runtime.manifest.constants;
+    let mut table = Table::new(&["Setting", "Paper (Table 3)", "This build"]);
+    table.row(&["Dataset partition".into(), "70/15/15".into(), "70/15/15".into()]);
+    table.row(&["Hidden size".into(), "512".into(), c.hidden.to_string()]);
+    table.row(&["Dropout".into(), "0.05".into(), format!("{}", c.dropout)]);
+    table.row(&["Optimizer".into(), "Adam".into(), "Adam (in-graph)".into()]);
+    table.row(&["Learning rate".into(), "2.754e-5".into(), "CLI --lr (lr-find)".into()]);
+    table.row(&["Loss".into(), "Huber".into(), format!("Huber (delta {})", c.huber_delta)]);
+    table.row(&["Max nodes".into(), "-".into(), c.max_nodes.to_string()]);
+    table.row(&["Node features".into(), "32".into(), c.node_feats.to_string()]);
+    table.row(&["Batch".into(), "-".into(), c.batch.to_string()]);
+    table.print();
+    let _ = MigProfile::G7_40; // (full-GPU profile used for dataset collection)
+    Ok(())
+}

@@ -1,0 +1,113 @@
+//! MIG Predictor — paper §3.5, eq. (2): rule-based mapping from predicted
+//! memory (an upper bound, since PMGNS predicts for the full 7g.40gb GPU)
+//! to the smallest MIG profile that fits.
+
+use crate::ir::Graph;
+use crate::simulator::{MigProfile, MigResult, Simulator, ALL_PROFILES};
+
+/// Eq. (2): thresholds in MB on the predicted memory α.
+/// Returns `None` when α exceeds the largest profile (the paper's "None").
+pub fn predict_profile(predicted_mem_mb: f64) -> Option<MigProfile> {
+    let a = predicted_mem_mb;
+    if a <= 0.0 {
+        return None;
+    }
+    for p in ALL_PROFILES {
+        if a < p.capacity_mb() {
+            return Some(p);
+        }
+    }
+    None
+}
+
+/// The paper's Table 5 "actual" methodology: measure memory on every
+/// profile (OOM-aware) and score each by consumption / capacity — "the
+/// higher the value is, the more appropriate profile".
+pub fn actual_profile_scores(sim: &Simulator, graph: &Graph) -> Vec<(MigProfile, Option<f64>)> {
+    ALL_PROFILES
+        .iter()
+        .map(|&p| {
+            let score = match sim.measure_mig(graph, p) {
+                MigResult::Ok(m) => Some(m.memory_mb / p.capacity_mb()),
+                MigResult::OutOfMemory { .. } => None,
+            };
+            (p, score)
+        })
+        .collect()
+}
+
+/// The actually-best profile: smallest profile that fits (highest
+/// consumption/capacity ratio among the feasible ones).
+pub fn actual_best_profile(sim: &Simulator, graph: &Graph) -> Option<MigProfile> {
+    actual_profile_scores(sim, graph)
+        .into_iter()
+        .filter_map(|(p, s)| s.map(|score| (p, score)))
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .map(|(p, _)| p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::GraphBuilder;
+
+    #[test]
+    fn eq2_thresholds() {
+        assert_eq!(predict_profile(2865.0), Some(MigProfile::G1_5)); // densenet121 b8 (paper Table 5)
+        assert_eq!(predict_profile(5952.0), Some(MigProfile::G2_10));
+        assert_eq!(predict_profile(12_000.0), Some(MigProfile::G3_20));
+        assert_eq!(predict_profile(26_439.0), Some(MigProfile::G7_40));
+        assert_eq!(predict_profile(50_000.0), None);
+        assert_eq!(predict_profile(0.0), None);
+        assert_eq!(predict_profile(-1.0), None);
+    }
+
+    #[test]
+    fn boundary_values() {
+        assert_eq!(predict_profile(5119.9), Some(MigProfile::G1_5));
+        assert_eq!(predict_profile(5121.0), Some(MigProfile::G2_10));
+    }
+
+    #[test]
+    fn actual_best_is_smallest_feasible() {
+        let mut b = GraphBuilder::new("t", "tiny-mig", 1);
+        let x = b.input(vec![1, 3, 64, 64]);
+        b.conv_relu(x, 16, 3, 1, 1);
+        let g = b.finish();
+        let sim = Simulator::new();
+        // Tiny model fits everywhere -> best profile is the smallest.
+        assert_eq!(actual_best_profile(&sim, &g), Some(MigProfile::G1_5));
+    }
+
+    #[test]
+    fn big_model_needs_big_profile() {
+        let mut b = GraphBuilder::new("t", "big-mig", 256);
+        let x = b.input(vec![256, 3, 224, 224]);
+        let mut h = b.conv_relu(x, 128, 7, 2, 3);
+        for _ in 0..6 {
+            h = b.conv_relu(h, 128, 3, 1, 1);
+        }
+        let g = b.finish();
+        let sim = Simulator::new();
+        let best = actual_best_profile(&sim, &g);
+        // A batch-128 224px convnet cannot run on the smallest slice.
+        assert_ne!(best, Some(MigProfile::G1_5), "mem {:.0} MB",
+                   sim.memory_mb(&g, MigProfile::G7_40));
+    }
+
+    #[test]
+    fn scores_increase_toward_best() {
+        let mut b = GraphBuilder::new("t", "mid-mig", 16);
+        let x = b.input(vec![16, 3, 160, 160]);
+        let mut h = b.conv_relu(x, 48, 5, 2, 2);
+        for _ in 0..3 {
+            h = b.conv_relu(h, 48, 3, 1, 1);
+        }
+        let g = b.finish();
+        let sim = Simulator::new();
+        let scores = actual_profile_scores(&sim, &g);
+        // consumption/capacity must decrease as capacity grows (feasible ones).
+        let feasible: Vec<f64> = scores.iter().filter_map(|(_, s)| *s).collect();
+        assert!(feasible.windows(2).all(|w| w[0] > w[1]), "{feasible:?}");
+    }
+}

@@ -1,0 +1,243 @@
+//! Classic CNN families: VGG, ResNet, DenseNet (inference-simplified:
+//! BN folded into the preceding conv).
+
+use crate::ir::{Attrs, Graph, GraphBuilder, OpKind};
+
+use super::common::{bumped_batch, classifier_head, Grid};
+
+pub mod vgg {
+    use super::*;
+
+    /// (name, per-stage conv counts) — VGG-11/13/16/19 layouts.
+    const CFGS: [(&str, [usize; 5]); 4] = [
+        ("vgg11", [1, 1, 2, 2, 2]),
+        ("vgg13", [2, 2, 2, 2, 2]),
+        ("vgg16", [2, 2, 3, 3, 3]),
+        ("vgg19", [2, 2, 4, 4, 4]),
+    ];
+    const WIDTHS: [usize; 3] = [32, 48, 64];
+    const RES: [usize; 4] = [160, 192, 224, 256];
+
+    pub const GRID: Grid = Grid {
+        variants: CFGS.len() * WIDTHS.len(),
+        resolutions: RES.len(),
+        batches: 8,
+    };
+
+    pub fn build(i: usize, bump: usize) -> Graph {
+        let (vi, ri, bi) = GRID.split(i);
+        let (name, stages) = CFGS[vi / WIDTHS.len()];
+        let base = WIDTHS[vi % WIDTHS.len()];
+        let res = RES[ri];
+        let batch = bumped_batch(bi, bump);
+        let mut b = GraphBuilder::new(
+            "vgg",
+            &format!("{name}-w{base}-r{res}-b{batch}"),
+            batch,
+        );
+        let x = b.input(vec![batch, 3, res, res]);
+        let mut h = x;
+        let mut ch = base;
+        for (si, &convs) in stages.iter().enumerate() {
+            for _ in 0..convs {
+                h = b.conv_relu(h, ch, 3, 1, 1);
+            }
+            h = b.add(OpKind::MaxPool2d, Attrs::pool(2, 2, 0), &[h]);
+            if si < 3 {
+                ch *= 2;
+            }
+        }
+        // Classifier: GAP instead of the 7x7 flatten keeps the node budget
+        // (torchvision's adaptive-avgpool variant); two hidden FCs as in VGG.
+        let p = b.add(OpKind::GlobalAvgPool2d, Attrs::none(), &[h]);
+        let f = b.add(OpKind::Flatten, Attrs::none(), &[p]);
+        let d1 = b.dense(f, ch * 4);
+        let r1 = b.relu(d1);
+        let d2 = b.dense(r1, ch * 4);
+        let r2 = b.relu(d2);
+        b.dense(r2, 1000);
+        b.finish()
+    }
+}
+
+pub mod resnet {
+    use super::*;
+
+    /// (name, blocks per stage) — basic-block ResNets.
+    const CFGS: [(&str, [usize; 4]); 4] = [
+        ("resnet10", [1, 1, 1, 1]),
+        ("resnet18", [2, 2, 2, 2]),
+        ("resnet26", [2, 3, 4, 3]),
+        ("resnet34", [3, 4, 6, 3]),
+    ];
+    const WIDTHS: [usize; 3] = [32, 48, 64];
+    const RES: [usize; 4] = [160, 192, 224, 256];
+
+    pub const GRID: Grid = Grid {
+        variants: CFGS.len() * WIDTHS.len(),
+        resolutions: RES.len(),
+        batches: 8,
+    };
+
+    fn basic_block(
+        b: &mut GraphBuilder,
+        input: crate::ir::NodeId,
+        ch: usize,
+        stride: usize,
+    ) -> crate::ir::NodeId {
+        let in_ch = b.shape(input)[1];
+        let c1 = b.conv_relu(input, ch, 3, stride, 1);
+        let c2 = b.conv2d(c1, ch, 3, 1, 1);
+        let skip = if stride != 1 || in_ch != ch {
+            b.conv2d(input, ch, 1, stride, 0) // projection shortcut
+        } else {
+            input
+        };
+        let s = b.add(OpKind::Add, Attrs::none(), &[c2, skip]);
+        b.relu(s)
+    }
+
+    pub fn build(i: usize, bump: usize) -> Graph {
+        let (vi, ri, bi) = GRID.split(i);
+        let (name, blocks) = CFGS[vi / WIDTHS.len()];
+        let base = WIDTHS[vi % WIDTHS.len()];
+        let res = RES[ri];
+        let batch = bumped_batch(bi, bump);
+        let mut b = GraphBuilder::new(
+            "resnet",
+            &format!("{name}-w{base}-r{res}-b{batch}"),
+            batch,
+        );
+        let x = b.input(vec![batch, 3, res, res]);
+        let mut h = b.conv_relu(x, base, 7, 2, 3);
+        h = b.add(OpKind::MaxPool2d, Attrs::pool(3, 2, 1), &[h]);
+        let mut ch = base;
+        for (si, &n) in blocks.iter().enumerate() {
+            for bi2 in 0..n {
+                let stride = if si > 0 && bi2 == 0 { 2 } else { 1 };
+                h = basic_block(&mut b, h, ch, stride);
+            }
+            if si < 3 {
+                ch *= 2;
+            }
+        }
+        classifier_head(&mut b, h, 1000);
+        b.finish()
+    }
+}
+
+pub mod densenet {
+    use super::*;
+
+    /// (name, layers per dense block) — compact DenseNets sized to the AOT
+    /// node budget (DESIGN.md §5; torchvision's 121-layer config would
+    /// exceed MAX_NODES).
+    const CFGS: [(&str, [usize; 4]); 3] = [
+        ("densenet-s", [2, 4, 6, 4]),
+        ("densenet-m", [3, 6, 9, 6]),
+        ("densenet-l", [2, 6, 10, 6]),
+    ];
+    const GROWTHS: [usize; 3] = [12, 16, 24];
+    const RES: [usize; 4] = [160, 192, 224, 256];
+
+    pub const GRID: Grid = Grid {
+        variants: CFGS.len() * GROWTHS.len(),
+        resolutions: RES.len(),
+        batches: 8,
+    };
+
+    pub fn build(i: usize, bump: usize) -> Graph {
+        let (vi, ri, bi) = GRID.split(i);
+        let (name, blocks) = CFGS[vi / GROWTHS.len()];
+        let growth = GROWTHS[vi % GROWTHS.len()];
+        let res = RES[ri];
+        let batch = bumped_batch(bi, bump);
+        let mut b = GraphBuilder::new(
+            "densenet",
+            &format!("{name}-g{growth}-r{res}-b{batch}"),
+            batch,
+        );
+        let x = b.input(vec![batch, 3, res, res]);
+        let mut h = b.conv_relu(x, growth * 2, 7, 2, 3);
+        h = b.add(OpKind::MaxPool2d, Attrs::pool(3, 2, 1), &[h]);
+        for (si, &layers) in blocks.iter().enumerate() {
+            // Dense block: each layer sees the concat of all previous maps.
+            for _ in 0..layers {
+                let bottleneck = b.conv_relu(h, growth * 4, 1, 1, 0);
+                let new = b.conv2d(bottleneck, growth, 3, 1, 1);
+                h = b.add(OpKind::Concat, Attrs::with_axis(1), &[h, new]);
+            }
+            if si < 3 {
+                // Transition: 1x1 conv halves channels, then 2x2 avg pool.
+                let ch = b.shape(h)[1] / 2;
+                let t = b.conv_relu(h, ch, 1, 1, 0);
+                h = b.add(OpKind::AvgPool2d, Attrs::pool(2, 2, 0), &[t]);
+            }
+        }
+        classifier_head(&mut b, h, 1000);
+        b.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::OpKind;
+
+    #[test]
+    fn vgg19_has_16_convs() {
+        // vi layout: cfg-major; vgg19 = cfg 3, width 64 = idx (3*3+2) over
+        // widths*res*batches
+        let i = (3 * 3 + 2) * vgg::GRID.resolutions * vgg::GRID.batches;
+        let g = vgg::build(i, 1);
+        assert!(g.variant.starts_with("vgg19"));
+        assert_eq!(g.count_op(OpKind::Conv2d), 16);
+        assert_eq!(g.count_op(OpKind::MaxPool2d), 5);
+        assert_eq!(g.count_op(OpKind::Dense), 3);
+    }
+
+    #[test]
+    fn resnet34_structure() {
+        let i = (3 * 3 + 2) * resnet::GRID.resolutions * resnet::GRID.batches;
+        let g = resnet::build(i, 1);
+        assert!(g.variant.starts_with("resnet34"));
+        // 1 stem + 16 blocks * 2 + 3 projection shortcuts + 0 head convs
+        assert_eq!(g.count_op(OpKind::Conv2d), 1 + 32 + 3);
+        assert!(g.n_nodes() <= 160, "{}", g.n_nodes());
+    }
+
+    #[test]
+    fn densenet_concat_count_matches_layers() {
+        let g = densenet::build(0, 1);
+        // densenet-s growth 12: 2+4+6+4 = 16 dense layers = 16 concats
+        assert_eq!(g.count_op(OpKind::Concat), 16);
+        assert!(g.n_nodes() <= 160, "{}", g.n_nodes());
+    }
+
+    #[test]
+    fn densenet_channels_grow() {
+        let g = densenet::build(0, 1);
+        // After block 1 (2 layers of growth 12 on 24-ch stem): 24+2*12 = 48
+        let concat_shapes: Vec<usize> = g
+            .nodes
+            .iter()
+            .filter(|n| n.op == OpKind::Concat)
+            .map(|n| n.out_shape[1])
+            .collect();
+        assert_eq!(concat_shapes[0], 24 + 12);
+        assert_eq!(concat_shapes[1], 24 + 24);
+    }
+
+    #[test]
+    fn all_grids_in_budget() {
+        for i in [0, 37, vgg::GRID.len() - 1] {
+            assert!(vgg::build(i, 1).n_nodes() <= 160);
+        }
+        for i in [0, 101, resnet::GRID.len() - 1] {
+            assert!(resnet::build(i, 1).n_nodes() <= 160);
+        }
+        for i in [0, 55, densenet::GRID.len() - 1] {
+            assert!(densenet::build(i, 1).n_nodes() <= 160);
+        }
+    }
+}

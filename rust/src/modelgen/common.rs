@@ -1,0 +1,186 @@
+//! Shared building blocks for the family generators.
+
+use crate::ir::{Attrs, GraphBuilder, NodeId, OpKind};
+
+/// Standard batch-size sweep used by the config grids (paper datasets sweep
+/// batch to make F_batch informative — §3.3).
+pub const BATCHES: [usize; 8] = [1, 2, 4, 8, 16, 32, 64, 128];
+
+/// A family's deterministic config grid: architecture variants × input
+/// resolutions × batch sizes, enumerated in row-major order.
+#[derive(Debug, Clone, Copy)]
+pub struct Grid {
+    pub variants: usize,
+    pub resolutions: usize,
+    pub batches: usize,
+}
+
+impl Grid {
+    pub const fn len(&self) -> usize {
+        self.variants * self.resolutions * self.batches
+    }
+
+    pub const fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Decompose a grid index into (variant, resolution, batch) indices.
+    pub fn split(&self, i: usize) -> (usize, usize, usize) {
+        debug_assert!(i < self.len());
+        let bi = i % self.batches;
+        let ri = (i / self.batches) % self.resolutions;
+        let vi = i / (self.batches * self.resolutions);
+        (vi, ri, bi)
+    }
+}
+
+/// Batch size for grid index + lap bump: laps beyond the grid multiply the
+/// batch by a small prime and wrap into (0, 192] so repeated grid entries
+/// stay distinct but physically plausible.
+pub fn bumped_batch(bi: usize, bump: usize) -> usize {
+    let b = BATCHES[bi] * bump;
+    if b > 192 {
+        ((b - 1) % 192) + 1
+    } else {
+        b
+    }
+}
+
+/// Round channels to a multiple (torchvision's `_make_divisible`).
+pub fn make_divisible(v: f64, divisor: usize) -> usize {
+    let d = divisor as f64;
+    let new = ((v + d / 2.0) / d).floor() * d;
+    let new = new.max(d) as usize;
+    if (new as f64) < 0.9 * v {
+        new + divisor
+    } else {
+        new
+    }
+}
+
+/// Global-average-pool → flatten → dense classifier head.
+pub fn classifier_head(b: &mut GraphBuilder, input: NodeId, classes: usize) -> NodeId {
+    let p = b.add(OpKind::GlobalAvgPool2d, Attrs::none(), &[input]);
+    let f = b.add(OpKind::Flatten, Attrs::none(), &[p]);
+    b.dense(f, classes)
+}
+
+/// Inverted-residual (MBConv) block with folded BN: expand 1x1 conv +
+/// activation, depthwise kxk + activation, project 1x1 conv, optional
+/// residual add. `act` is the activation op (ReLU for MobileNet/MNASNet,
+/// HardSwish for EfficientNet-style blocks).
+#[allow(clippy::too_many_arguments)]
+pub fn mbconv(
+    b: &mut GraphBuilder,
+    input: NodeId,
+    out_ch: usize,
+    expand: usize,
+    k: usize,
+    stride: usize,
+    act: OpKind,
+) -> NodeId {
+    let in_ch = b.shape(input)[1];
+    let mid = in_ch * expand;
+    let mut h = input;
+    if expand != 1 {
+        h = b.conv2d(h, mid, 1, 1, 0);
+        h = b.add(act, Attrs::none(), &[h]);
+    }
+    h = b.depthwise(h, k, stride, k / 2);
+    h = b.add(act, Attrs::none(), &[h]);
+    h = b.conv2d(h, out_ch, 1, 1, 0); // linear projection
+    if stride == 1 && in_ch == out_ch {
+        h = b.add(OpKind::Add, Attrs::none(), &[h, input]);
+    }
+    h
+}
+
+/// Pre-norm transformer encoder block over `[B, tokens, dim]`:
+/// LN → QKV/attention (single fused head set) → proj → +res → LN → MLP → +res.
+pub fn transformer_block(
+    b: &mut GraphBuilder,
+    input: NodeId,
+    dim: usize,
+    mlp_ratio: usize,
+) -> NodeId {
+    let shape = b.shape(input).clone();
+    let tokens = shape[1];
+    // Attention.
+    let ln1 = b.add(OpKind::LayerNorm, Attrs::none(), &[input]);
+    let q = b.dense(ln1, dim);
+    let k = b.dense(ln1, dim);
+    let v = b.dense(ln1, dim);
+    let kt = b.add_reshape(OpKind::Transpose, k, vec![shape[0], dim, tokens]);
+    let scores = b.add(OpKind::BatchMatmul, Attrs::none(), &[q, kt]);
+    let attn = b.add(OpKind::Softmax, Attrs::with_axis(2), &[scores]);
+    let ctx = b.add(OpKind::BatchMatmul, Attrs::none(), &[attn, v]);
+    let proj = b.dense(ctx, dim);
+    let res1 = b.add(OpKind::Add, Attrs::none(), &[proj, input]);
+    // MLP.
+    let ln2 = b.add(OpKind::LayerNorm, Attrs::none(), &[res1]);
+    let fc1 = b.dense(ln2, dim * mlp_ratio);
+    let g = b.add(OpKind::Gelu, Attrs::none(), &[fc1]);
+    let fc2 = b.dense(g, dim);
+    b.add(OpKind::Add, Attrs::none(), &[fc2, res1])
+}
+
+/// Patchify stem: conv with kernel=stride=patch, then flatten spatial dims
+/// to tokens: [B, dim, H/p, W/p] -> [B, tokens, dim].
+pub fn patch_embed(
+    b: &mut GraphBuilder,
+    input: NodeId,
+    patch: usize,
+    dim: usize,
+) -> NodeId {
+    let c = b.conv2d(input, dim, patch, patch, 0);
+    let s = b.shape(c).clone();
+    let tokens = s[2] * s[3];
+    b.add_reshape(OpKind::Reshape, c, vec![s[0], tokens, dim])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::GraphBuilder;
+
+    #[test]
+    fn make_divisible_rounds() {
+        assert_eq!(make_divisible(32.0, 8), 32);
+        assert_eq!(make_divisible(33.0, 8), 32);
+        assert_eq!(make_divisible(37.0, 8), 40);
+        assert_eq!(make_divisible(3.0, 8), 8);
+    }
+
+    #[test]
+    fn mbconv_residual_only_when_shapes_match() {
+        let mut b = GraphBuilder::new("t", "t", 1);
+        let x = b.input(vec![1, 16, 32, 32]);
+        let before = b.n_nodes();
+        let same = mbconv(&mut b, x, 16, 6, 3, 1, OpKind::Relu);
+        assert_eq!(b.shape(same), &vec![1, 16, 32, 32]);
+        let with_res = b.n_nodes() - before;
+        let _stride2 = mbconv(&mut b, same, 24, 6, 3, 2, OpKind::Relu);
+        let without_res = b.n_nodes() - before - with_res;
+        assert_eq!(with_res - without_res, 1); // exactly the residual Add
+        b.finish().validate().unwrap();
+    }
+
+    #[test]
+    fn transformer_block_preserves_shape() {
+        let mut b = GraphBuilder::new("t", "t", 2);
+        let x = b.input(vec![2, 3, 32, 32]);
+        let t = patch_embed(&mut b, x, 4, 64);
+        assert_eq!(b.shape(t), &vec![2, 64, 64]);
+        let out = transformer_block(&mut b, t, 64, 4);
+        assert_eq!(b.shape(out), &vec![2, 64, 64]);
+        b.finish().validate().unwrap();
+    }
+
+    #[test]
+    fn classifier_head_shape() {
+        let mut b = GraphBuilder::new("t", "t", 2);
+        let x = b.input(vec![2, 32, 8, 8]);
+        let h = classifier_head(&mut b, x, 1000);
+        assert_eq!(b.shape(h), &vec![2, 1000]);
+    }
+}

@@ -1,0 +1,216 @@
+//! Mobile/efficiency families: MobileNet(V2-style), MNASNet, EfficientNet.
+//! All are inverted-residual (MBConv) architectures; EfficientNet applies
+//! compound width/depth scaling. SE blocks are folded out (DESIGN.md §5 —
+//! they would blow the node budget; their cost is small and uniform).
+
+use crate::ir::{Graph, GraphBuilder, OpKind};
+
+use super::common::{bumped_batch, classifier_head, make_divisible, mbconv, Grid};
+
+/// (expand, out_ch, repeats, stride, kernel) — MobileNetV2 layout.
+const V2_STAGES: [(usize, usize, usize, usize, usize); 7] = [
+    (1, 16, 1, 1, 3),
+    (6, 24, 2, 2, 3),
+    (6, 32, 3, 2, 3),
+    (6, 64, 4, 2, 3),
+    (6, 96, 3, 1, 3),
+    (6, 160, 3, 2, 3),
+    (6, 320, 1, 1, 3),
+];
+
+fn inverted_residual_net(
+    family: &str,
+    name: &str,
+    stages: &[(usize, usize, usize, usize, usize)],
+    width: f64,
+    depth: f64,
+    res: usize,
+    batch: usize,
+    act: OpKind,
+) -> Graph {
+    let mut b = GraphBuilder::new(family, &format!("{name}-r{res}-b{batch}"), batch);
+    let x = b.input(vec![batch, 3, res, res]);
+    let stem = make_divisible(32.0 * width, 8);
+    let mut h = b.conv2d(x, stem, 3, 2, 1);
+    h = b.add(act, crate::ir::Attrs::none(), &[h]);
+    for &(expand, ch, repeats, stride, k) in stages {
+        let out = make_divisible(ch as f64 * width, 8);
+        let reps = ((repeats as f64 * depth).ceil() as usize).max(1);
+        for r in 0..reps {
+            let s = if r == 0 { stride } else { 1 };
+            h = mbconv(&mut b, h, out, expand, k, s, act);
+        }
+    }
+    let head_ch = make_divisible(1280.0 * width.max(1.0), 8);
+    h = b.conv2d(h, head_ch, 1, 1, 0);
+    h = b.add(act, crate::ir::Attrs::none(), &[h]);
+    classifier_head(&mut b, h, 1000);
+    b.finish()
+}
+
+pub mod mobilenet {
+    use super::*;
+
+    const WIDTHS: [f64; 4] = [0.5, 0.75, 1.0, 1.4];
+    /// Full V2 layout and a trimmed variant (fewer repeats).
+    const DEPTHS: [f64; 2] = [1.0, 0.7];
+    const RES: [usize; 5] = [128, 160, 192, 224, 256];
+
+    pub const GRID: Grid = Grid {
+        variants: WIDTHS.len() * DEPTHS.len(),
+        resolutions: RES.len(),
+        batches: 8,
+    };
+
+    pub fn build(i: usize, bump: usize) -> Graph {
+        let (vi, ri, bi) = GRID.split(i);
+        let width = WIDTHS[vi / DEPTHS.len()];
+        let depth = DEPTHS[vi % DEPTHS.len()];
+        inverted_residual_net(
+            "mobilenet",
+            &format!("mobilenetv2-w{width}-d{depth}"),
+            &V2_STAGES,
+            width,
+            depth,
+            RES[ri],
+            bumped_batch(bi, bump),
+            OpKind::Relu,
+        )
+    }
+}
+
+pub mod mnasnet {
+    use super::*;
+
+    /// MNASNet-B1 layout (kernel mix of 3 and 5, lighter expansion early).
+    const STAGES: [(usize, usize, usize, usize, usize); 6] = [
+        (3, 24, 2, 2, 3),
+        (3, 40, 3, 2, 5),
+        (6, 80, 3, 2, 5),
+        (6, 96, 2, 1, 3),
+        (6, 192, 3, 2, 5),
+        (6, 320, 1, 1, 3),
+    ];
+    const WIDTHS: [f64; 4] = [0.5, 0.75, 1.0, 1.3];
+    const RES: [usize; 4] = [160, 192, 224, 256];
+
+    pub const GRID: Grid = Grid {
+        variants: WIDTHS.len(),
+        resolutions: RES.len(),
+        batches: 8,
+    };
+
+    pub fn build(i: usize, bump: usize) -> Graph {
+        let (vi, ri, bi) = GRID.split(i);
+        inverted_residual_net(
+            "mnasnet",
+            &format!("mnasnet-b1-w{}", WIDTHS[vi]),
+            &STAGES,
+            WIDTHS[vi],
+            1.0,
+            RES[ri],
+            bumped_batch(bi, bump),
+            OpKind::Relu,
+        )
+    }
+}
+
+pub mod efficientnet {
+    use super::*;
+
+    /// EfficientNet-B0 layout (SE folded out; HardSwish stands in for SiLU
+    /// in the op vocabulary — same cost class).
+    const B0_STAGES: [(usize, usize, usize, usize, usize); 7] = [
+        (1, 16, 1, 1, 3),
+        (6, 24, 2, 2, 3),
+        (6, 40, 2, 2, 5),
+        (6, 80, 3, 2, 3),
+        (6, 112, 3, 1, 5),
+        (6, 192, 4, 2, 5),
+        (6, 320, 1, 1, 3),
+    ];
+    /// Compound scaling (width, depth, base res) for B0..B6 — depth capped
+    /// at 1.4 to respect the node budget (DESIGN.md §5).
+    const SCALES: [(f64, f64, usize); 7] = [
+        (1.0, 1.0, 224),
+        (1.0, 1.1, 240),
+        (1.1, 1.2, 260),
+        (1.2, 1.4, 288),
+        (1.4, 1.4, 300),
+        (1.6, 1.4, 320),
+        (1.8, 1.4, 320),
+    ];
+    const WIDTH_TWEAK: [f64; 2] = [1.0, 0.85];
+    const RES_OFFSETS: [i64; 4] = [0, -32, -64, 32];
+
+    pub const GRID: Grid = Grid {
+        variants: SCALES.len() * WIDTH_TWEAK.len(),
+        resolutions: RES_OFFSETS.len(),
+        batches: 8,
+    };
+
+    pub fn build(i: usize, bump: usize) -> Graph {
+        let (vi, ri, bi) = GRID.split(i);
+        let (w, d, base_res) = SCALES[vi / WIDTH_TWEAK.len()];
+        let w = w * WIDTH_TWEAK[vi % WIDTH_TWEAK.len()];
+        let res = ((base_res as i64 + RES_OFFSETS[ri]).max(96)) as usize;
+        inverted_residual_net(
+            "efficientnet",
+            &format!("efficientnet-b{}-w{w:.2}-d{d}", vi / WIDTH_TWEAK.len()),
+            &B0_STAGES,
+            w,
+            d,
+            res,
+            bumped_batch(bi, bump),
+            OpKind::HardSwish,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mobilenet_has_depthwise_ops() {
+        let g = mobilenet::build(0, 1);
+        assert!(g.count_op(OpKind::DepthwiseConv2d) >= 10);
+        assert!(g.n_nodes() <= 160, "{}", g.n_nodes());
+    }
+
+    #[test]
+    fn wider_mobilenet_has_more_weights() {
+        // width 0.5 (vi=0) vs width 1.4 (vi=6), same depth/res/batch.
+        let narrow = mobilenet::build(0, 1);
+        let wide = mobilenet::build(6 * mobilenet::GRID.resolutions * 8, 1);
+        assert!(wide.total_weights() > 2 * narrow.total_weights());
+    }
+
+    #[test]
+    fn efficientnet_uses_hardswish_and_fits() {
+        let g = efficientnet::build(0, 1);
+        assert!(g.count_op(OpKind::HardSwish) > 10);
+        assert_eq!(g.count_op(OpKind::Relu), 0);
+        // Largest scale must also fit the node budget.
+        let big = efficientnet::build(efficientnet::GRID.len() - 1, 1);
+        assert!(big.n_nodes() <= 160, "{}", big.n_nodes());
+    }
+
+    #[test]
+    fn mnasnet_kernel_mix() {
+        let g = mnasnet::build(0, 1);
+        let k5 = g
+            .nodes
+            .iter()
+            .filter(|n| n.op == OpKind::DepthwiseConv2d && n.attrs.kernel == Some((5, 5)))
+            .count();
+        assert!(k5 >= 3, "expected 5x5 depthwise convs, got {k5}");
+    }
+
+    #[test]
+    fn depth_scaling_adds_blocks() {
+        let b0 = efficientnet::build(0, 1);
+        let b3 = efficientnet::build(3 * 2 * efficientnet::GRID.resolutions * 8, 1);
+        assert!(b3.n_nodes() > b0.n_nodes());
+    }
+}

@@ -1,0 +1,279 @@
+//! Transformer / MetaFormer families: ViT, Swin, Visformer, PoolFormer.
+//! Token-space ops run on `[B, tokens, dim]`; attention uses the fused
+//! single-head-set block of `common::transformer_block` (multi-head split
+//! is cost-neutral at the IR granularity the NFG sees).
+
+use crate::ir::{Attrs, Graph, GraphBuilder, NodeId, OpKind};
+
+use super::common::{
+    bumped_batch, classifier_head, patch_embed, transformer_block, Grid,
+};
+
+/// Mean over tokens → dense head (transformer classifier).
+fn token_head(b: &mut GraphBuilder, input: NodeId, classes: usize) -> NodeId {
+    let ln = b.add(OpKind::LayerNorm, Attrs::none(), &[input]);
+    let pooled = b.add(OpKind::Mean, Attrs::with_axis(1), &[ln]);
+    b.dense(pooled, classes)
+}
+
+pub mod vit {
+    use super::*;
+
+    const DEPTHS: [usize; 3] = [4, 6, 8];
+    const DIMS: [usize; 3] = [96, 192, 384];
+    const PATCHES: [usize; 2] = [8, 16];
+    const RES: [usize; 2] = [160, 224];
+
+    pub const GRID: Grid = Grid {
+        variants: DEPTHS.len() * DIMS.len() * PATCHES.len(),
+        resolutions: RES.len(),
+        batches: 8,
+    };
+
+    pub fn build(i: usize, bump: usize) -> Graph {
+        let (vi, ri, bi) = GRID.split(i);
+        let depth = DEPTHS[vi / (DIMS.len() * PATCHES.len())];
+        let dim = DIMS[(vi / PATCHES.len()) % DIMS.len()];
+        let patch = PATCHES[vi % PATCHES.len()];
+        let res = RES[ri];
+        let batch = bumped_batch(bi, bump);
+        let mut b = GraphBuilder::new(
+            "vit",
+            &format!("vit-d{depth}-dim{dim}-p{patch}-r{res}-b{batch}"),
+            batch,
+        );
+        let x = b.input(vec![batch, 3, res, res]);
+        let mut t = patch_embed(&mut b, x, patch, dim);
+        for _ in 0..depth {
+            t = transformer_block(&mut b, t, dim, 4);
+        }
+        token_head(&mut b, t, 1000);
+        b.finish()
+    }
+}
+
+pub mod swin {
+    use super::*;
+
+    /// Blocks per stage (dims double at each patch-merging downsample).
+    /// Total blocks ≤ 8 to fit the node budget.
+    const CFGS: [(&str, [usize; 3]); 3] = [
+        ("swin-t", [2, 2, 4]),
+        ("swin-xs", [1, 1, 2]),
+        ("swin-s", [2, 2, 2]),
+    ];
+    const DIMS: [usize; 3] = [48, 64, 96];
+    const RES: [usize; 3] = [192, 224, 256];
+
+    pub const GRID: Grid = Grid {
+        variants: CFGS.len() * DIMS.len(),
+        resolutions: RES.len(),
+        batches: 8,
+    };
+
+    /// Patch merging: halve tokens via strided slice, double dim via dense.
+    /// (The real Swin concatenates a 2x2 neighbourhood then projects; at IR
+    /// cost granularity this is the identical dense projection.)
+    fn patch_merge(b: &mut GraphBuilder, t: NodeId) -> NodeId {
+        let s = b.shape(t).clone();
+        let half = b.add_reshape(OpKind::StridedSlice, t, vec![s[0], s[1] / 4, s[2] * 4]);
+        b.dense(half, s[2] * 2)
+    }
+
+    pub fn build(i: usize, bump: usize) -> Graph {
+        let (vi, ri, bi) = GRID.split(i);
+        let (name, stages) = CFGS[vi / DIMS.len()];
+        let dim = DIMS[vi % DIMS.len()];
+        let res = RES[ri];
+        let batch = bumped_batch(bi, bump);
+        let mut b = GraphBuilder::new(
+            "swin",
+            &format!("{name}-dim{dim}-r{res}-b{batch}"),
+            batch,
+        );
+        let x = b.input(vec![batch, 3, res, res]);
+        let mut t = patch_embed(&mut b, x, 4, dim);
+        let mut d = dim;
+        for (si, &blocks) in stages.iter().enumerate() {
+            for _ in 0..blocks {
+                t = transformer_block(&mut b, t, d, 4);
+            }
+            if si < stages.len() - 1 {
+                t = patch_merge(&mut b, t);
+                d *= 2;
+            }
+        }
+        token_head(&mut b, t, 1000);
+        b.finish()
+    }
+}
+
+pub mod visformer {
+    use super::*;
+
+    /// (conv blocks, transformer blocks).
+    const CFGS: [(usize, usize); 6] = [(2, 3), (2, 4), (2, 5), (3, 3), (3, 4), (3, 5)];
+    const DIMS: [usize; 2] = [96, 192];
+    const RES: [usize; 2] = [160, 224];
+
+    pub const GRID: Grid = Grid {
+        variants: CFGS.len() * DIMS.len(),
+        resolutions: RES.len(),
+        batches: 8,
+    };
+
+    pub fn build(i: usize, bump: usize) -> Graph {
+        let (vi, ri, bi) = GRID.split(i);
+        let (conv_blocks, t_blocks) = CFGS[vi / DIMS.len()];
+        let dim = DIMS[vi % DIMS.len()];
+        let res = RES[ri];
+        let batch = bumped_batch(bi, bump);
+        let mut b = GraphBuilder::new(
+            "visformer",
+            &format!("visformer-c{conv_blocks}t{t_blocks}-dim{dim}-r{res}-b{batch}"),
+            batch,
+        );
+        let x = b.input(vec![batch, 3, res, res]);
+        // Convolutional stem + stage (the "vis" half).
+        let mut h = b.conv_relu(x, dim / 4, 7, 2, 3);
+        h = b.add(OpKind::MaxPool2d, Attrs::pool(3, 2, 1), &[h]);
+        for _ in 0..conv_blocks {
+            let c1 = b.conv_relu(h, dim / 2, 3, 1, 1);
+            let c2 = b.conv2d(c1, dim / 4, 3, 1, 1);
+            let merged = if b.shape(c2) == b.shape(h) {
+                b.add(OpKind::Add, Attrs::none(), &[c2, h])
+            } else {
+                c2
+            };
+            h = b.relu(merged);
+        }
+        // Patchify to tokens and run the transformer stage.
+        let mut t = patch_embed(&mut b, h, 4, dim);
+        for _ in 0..t_blocks {
+            t = transformer_block(&mut b, t, dim, 4);
+        }
+        token_head(&mut b, t, 1000);
+        b.finish()
+    }
+}
+
+pub mod poolformer {
+    use super::*;
+
+    /// Blocks per stage (MetaFormer S-style shapes, trimmed to budget).
+    const CFGS: [(&str, [usize; 4]); 3] = [
+        ("poolformer-xs", [1, 1, 2, 1]),
+        ("poolformer-s", [2, 2, 4, 2]),
+        ("poolformer-m", [2, 2, 6, 2]),
+    ];
+    const DIMS: [usize; 3] = [32, 48, 64];
+    const RES: [usize; 3] = [160, 192, 224];
+
+    pub const GRID: Grid = Grid {
+        variants: CFGS.len() * DIMS.len(),
+        resolutions: RES.len(),
+        batches: 8,
+    };
+
+    /// PoolFormer block in NCHW: norm → 3x3 avg-pool token mixing (+res) →
+    /// norm → pointwise MLP (+res). BatchNorm stands in for GroupNorm.
+    fn block(b: &mut GraphBuilder, input: NodeId, dim: usize) -> NodeId {
+        let n1 = b.add(OpKind::BatchNorm, Attrs::none(), &[input]);
+        let mixed = b.add(OpKind::AvgPool2d, Attrs::pool(3, 1, 1), &[n1]);
+        let r1 = b.add(OpKind::Add, Attrs::none(), &[mixed, input]);
+        let n2 = b.add(OpKind::BatchNorm, Attrs::none(), &[r1]);
+        let f1 = b.conv2d(n2, dim * 4, 1, 1, 0);
+        let g = b.add(OpKind::Gelu, Attrs::none(), &[f1]);
+        let f2 = b.conv2d(g, dim, 1, 1, 0);
+        b.add(OpKind::Add, Attrs::none(), &[f2, r1])
+    }
+
+    pub fn build(i: usize, bump: usize) -> Graph {
+        let (vi, ri, bi) = GRID.split(i);
+        let (name, stages) = CFGS[vi / DIMS.len()];
+        let dim = DIMS[vi % DIMS.len()];
+        let res = RES[ri];
+        let batch = bumped_batch(bi, bump);
+        let mut b = GraphBuilder::new(
+            "poolformer",
+            &format!("{name}-dim{dim}-r{res}-b{batch}"),
+            batch,
+        );
+        let x = b.input(vec![batch, 3, res, res]);
+        let mut h = b.conv2d(x, dim, 7, 4, 3); // patch embedding conv
+        let mut d = dim;
+        for (si, &blocks) in stages.iter().enumerate() {
+            for _ in 0..blocks {
+                h = block(&mut b, h, d);
+            }
+            if si < 3 {
+                d *= 2;
+                h = b.conv2d(h, d, 3, 2, 1); // downsampling embedding
+            }
+        }
+        classifier_head(&mut b, h, 1000);
+        b.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vit_block_count() {
+        let g = vit::build(0, 1); // depth 4
+        assert_eq!(g.count_op(OpKind::Softmax), 4);
+        assert_eq!(g.count_op(OpKind::BatchMatmul), 8);
+        assert!(g.n_nodes() <= 160);
+    }
+
+    #[test]
+    fn vit_biggest_fits() {
+        let g = vit::build(vit::GRID.len() - 1, 1); // depth 8, dim 384
+        assert!(g.n_nodes() <= 160, "{}", g.n_nodes());
+    }
+
+    #[test]
+    fn swin_dims_double_across_stages() {
+        let g = swin::build(0, 1);
+        let dense_dims: Vec<usize> = g
+            .nodes
+            .iter()
+            .filter(|n| n.op == OpKind::Dense)
+            .map(|n| *n.out_shape.last().unwrap())
+            .collect();
+        let max_dim = *dense_dims.iter().max().unwrap();
+        assert!(max_dim >= 48 * 4 * 4, "dims {dense_dims:?}"); // dim*2*2 in MLP
+        assert!(g.n_nodes() <= 160, "{}", g.n_nodes());
+    }
+
+    #[test]
+    fn visformer_is_hybrid() {
+        let g = visformer::build(0, 1);
+        assert!(g.count_op(OpKind::Conv2d) >= 5);
+        assert!(g.count_op(OpKind::Softmax) >= 3);
+        assert!(g.n_nodes() <= 160, "{}", g.n_nodes());
+    }
+
+    #[test]
+    fn poolformer_has_no_attention() {
+        let g = poolformer::build(0, 1);
+        assert_eq!(g.count_op(OpKind::Softmax), 0);
+        assert_eq!(g.count_op(OpKind::BatchMatmul), 0);
+        assert!(g.count_op(OpKind::AvgPool2d) >= 5);
+        let big = poolformer::build(poolformer::GRID.len() - 1, 1);
+        assert!(big.n_nodes() <= 160, "{}", big.n_nodes());
+    }
+
+    #[test]
+    fn token_counts_match_patching() {
+        let g = vit::build(0, 1); // patch 8, res 160 -> 400 tokens
+        let reshape = g
+            .nodes
+            .iter()
+            .find(|n| n.op == OpKind::Reshape)
+            .expect("patch embed reshape");
+        assert_eq!(reshape.out_shape[1], (160 / 8) * (160 / 8));
+    }
+}

@@ -1,0 +1,187 @@
+//! Artifact manifest: the ABI contract between `python/compile/aot.py` and
+//! the Rust runtime (constants, parameter order/shapes, artifact files).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Compile-time constants every artifact is shape-specialized to.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Constants {
+    pub max_nodes: usize,
+    pub node_feats: usize,
+    pub static_feats: usize,
+    pub targets: usize,
+    pub batch: usize,
+    pub hidden: usize,
+    pub dropout: f64,
+    pub huber_delta: f64,
+}
+
+/// One model variant's artifacts + parameter spec (order matters: it is the
+/// positional ABI of every train/predict call).
+#[derive(Debug, Clone)]
+pub struct VariantInfo {
+    pub name: String,
+    pub params: Vec<(String, Vec<usize>)>,
+    pub init: String,
+    pub train: String,
+    pub train_mse: Option<String>,
+    /// batch size → predict artifact file.
+    pub predict: BTreeMap<usize, String>,
+}
+
+impl VariantInfo {
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Predict artifact for a batch size (exact match required — artifacts
+    /// are shape-specialized).
+    pub fn predict_for(&self, batch: usize) -> Option<&str> {
+        self.predict.get(&batch).map(|s| s.as_str())
+    }
+
+    /// Largest available predict batch (the batcher's max).
+    pub fn max_predict_batch(&self) -> usize {
+        self.predict.keys().max().copied().unwrap_or(1)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub constants: Constants,
+    pub variants: BTreeMap<String, VariantInfo>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest, String> {
+        let v = Json::parse(text).map_err(|e| e.to_string())?;
+        let c = v.path(&["constants"]);
+        let get = |key: &str| -> Result<usize, String> {
+            c.path(&[key])
+                .as_usize()
+                .ok_or_else(|| format!("manifest missing constants.{key}"))
+        };
+        let constants = Constants {
+            max_nodes: get("max_nodes")?,
+            node_feats: get("node_feats")?,
+            static_feats: get("static_feats")?,
+            targets: get("targets")?,
+            batch: get("batch")?,
+            hidden: get("hidden")?,
+            dropout: c.path(&["dropout"]).as_f64().unwrap_or(0.0),
+            huber_delta: c.path(&["huber_delta"]).as_f64().unwrap_or(1.0),
+        };
+        let mut variants = BTreeMap::new();
+        let vobj = v
+            .path(&["variants"])
+            .as_obj()
+            .ok_or("manifest missing variants")?;
+        for (name, entry) in vobj.iter() {
+            let params = entry
+                .path(&["params"])
+                .as_arr()
+                .ok_or_else(|| format!("variant {name}: missing params"))?
+                .iter()
+                .map(|p| {
+                    let pname = p.path(&["name"]).as_str()?.to_string();
+                    let shape = p
+                        .path(&["shape"])
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Option<Vec<_>>>()?;
+                    Some((pname, shape))
+                })
+                .collect::<Option<Vec<_>>>()
+                .ok_or_else(|| format!("variant {name}: malformed params"))?;
+            let mut predict = BTreeMap::new();
+            if let Some(pobj) = entry.path(&["predict"]).as_obj() {
+                for (b, file) in pobj.iter() {
+                    let batch: usize = b
+                        .parse()
+                        .map_err(|_| format!("variant {name}: bad predict batch {b:?}"))?;
+                    predict.insert(
+                        batch,
+                        file.as_str()
+                            .ok_or_else(|| format!("variant {name}: bad predict file"))?
+                            .to_string(),
+                    );
+                }
+            }
+            let req = |key: &str| -> Result<String, String> {
+                entry
+                    .path(&[key])
+                    .as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| format!("variant {name}: missing {key}"))
+            };
+            variants.insert(
+                name.clone(),
+                VariantInfo {
+                    name: name.clone(),
+                    params,
+                    init: req("init")?,
+                    train: req("train")?,
+                    train_mse: entry.path(&["train_mse"]).as_str().map(str::to_string),
+                    predict,
+                },
+            );
+        }
+        if variants.is_empty() {
+            return Err("manifest has no variants".into());
+        }
+        Ok(Manifest { constants, variants })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "constants": {"max_nodes":160,"node_feats":32,"static_feats":5,
+                    "targets":3,"batch":32,"hidden":128,
+                    "dropout":0.05,"huber_delta":1.0},
+      "variants": {
+        "sage": {
+          "params": [{"name":"sage0.w_self","shape":[32,128]},
+                     {"name":"head.b","shape":[3]}],
+          "init": "sage_init.hlo.txt",
+          "train": "sage_train.hlo.txt",
+          "train_mse": "sage_train_mse.hlo.txt",
+          "predict": {"1":"sage_predict_b1.hlo.txt","32":"sage_predict_b32.hlo.txt"}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.constants.max_nodes, 160);
+        assert_eq!(m.constants.batch, 32);
+        let v = &m.variants["sage"];
+        assert_eq!(v.n_params(), 2);
+        assert_eq!(v.params[0].1, vec![32, 128]);
+        assert_eq!(v.predict_for(32), Some("sage_predict_b32.hlo.txt"));
+        assert_eq!(v.predict_for(7), None);
+        assert_eq!(v.max_predict_batch(), 32);
+        assert!(v.train_mse.is_some());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"constants":{"max_nodes":1}}"#).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_built() {
+        if let Ok(text) = std::fs::read_to_string("artifacts/manifest.json") {
+            let m = Manifest::parse(&text).unwrap();
+            assert!(m.variants.contains_key("sage"));
+            assert_eq!(m.constants.node_feats, 32);
+        }
+    }
+}

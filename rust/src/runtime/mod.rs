@@ -1,0 +1,128 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! This is the ONLY place the xla crate is touched; everything above deals
+//! in [`tensor::HostTensor`]s.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`) — see
+//! aot.py's module docstring for why serialized protos don't work.
+
+pub mod manifest;
+pub mod params;
+pub mod tensor;
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+pub use manifest::{Manifest, VariantInfo};
+pub use params::ParamStore;
+pub use tensor::HostTensor;
+
+/// A compiled artifact ready to execute.
+pub struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: String,
+}
+
+impl Artifact {
+    /// Execute with literal inputs; returns flattened output literals
+    /// (a 1-tuple root — jax lowering uses return_tuple=True — is
+    /// decomposed transparently).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.path))?;
+        let device0 = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("no device output"))?;
+        let mut literals = Vec::with_capacity(device0.len());
+        for buf in device0 {
+            let lit = buf.to_literal_sync()?;
+            if lit.ty().is_ok() {
+                literals.push(lit); // plain array/scalar output
+            } else {
+                literals.extend(lit.to_tuple()?); // tuple root: flatten
+            }
+        }
+        Ok(literals)
+    }
+}
+
+/// Runtime: PJRT client + artifact compile cache + the manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    artifact_dir: String,
+    cache: Mutex<HashMap<String, std::sync::Arc<Artifact>>>,
+}
+
+impl Runtime {
+    /// Create from an artifacts directory (must contain manifest.json).
+    pub fn new(artifact_dir: &str) -> Result<Runtime> {
+        let manifest_path = format!("{artifact_dir}/manifest.json");
+        let manifest_text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path} (run `make artifacts`)"))?;
+        let manifest = Manifest::parse(&manifest_text)
+            .map_err(|e| anyhow!("parsing {manifest_path}: {e}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            manifest,
+            artifact_dir: artifact_dir.to_string(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Load + compile an artifact by file name (cached).
+    pub fn artifact(&self, file: &str) -> Result<std::sync::Arc<Artifact>> {
+        if let Some(a) = self.cache.lock().unwrap().get(file) {
+            return Ok(a.clone());
+        }
+        let path = format!("{}/{file}", self.artifact_dir);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("loading HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path}"))?;
+        let artifact = std::sync::Arc::new(Artifact { exe, path });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(file.to_string(), artifact.clone());
+        Ok(artifact)
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantInfo> {
+        self.manifest
+            .variants
+            .get(name)
+            .ok_or_else(|| anyhow!("variant {name:?} not in manifest"))
+    }
+
+    /// Run a variant's `init` artifact → fresh parameters.
+    pub fn init_params(&self, variant: &str, seed: i32) -> Result<ParamStore> {
+        let info = self.variant(variant)?.clone();
+        let art = self.artifact(&info.init)?;
+        let outs = art.run(&[tensor::scalar_i32(seed)])?;
+        if outs.len() != info.params.len() {
+            return Err(anyhow!(
+                "init returned {} tensors, manifest declares {}",
+                outs.len(),
+                info.params.len()
+            ));
+        }
+        ParamStore::from_literals(&info, outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! These tests require built artifacts; they are exercised via
+    //! `rust/tests/runtime_integration.rs` (integration tests can assume
+    //! `make artifacts` ran; unit tests here stay hermetic).
+}

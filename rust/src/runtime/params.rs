@@ -1,0 +1,289 @@
+//! Parameter store: the model's flat parameter list (the positional ABI of
+//! the train/predict artifacts) + binary checkpointing with the dataset's
+//! normalization stats embedded, so a checkpoint is self-contained for
+//! serving.
+
+use std::io::{self, Read, Write};
+
+use anyhow::{anyhow, Result};
+
+use crate::dataset::normalize::{NormStats, N_STATICS, N_TARGETS};
+
+use super::manifest::VariantInfo;
+use super::tensor::HostTensor;
+
+const MAGIC: &[u8; 7] = b"DIPPMCK";
+const VERSION: u8 = 1;
+
+/// Parameters as host tensors, in manifest order.
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    pub variant: String,
+    pub names: Vec<String>,
+    pub tensors: Vec<HostTensor>,
+    /// Normalization stats captured at training time (identity by default).
+    pub norm: NormStats,
+}
+
+impl ParamStore {
+    pub fn from_literals(info: &VariantInfo, literals: Vec<xla::Literal>) -> Result<ParamStore> {
+        let mut tensors = Vec::with_capacity(literals.len());
+        for (lit, (name, shape)) in literals.iter().zip(&info.params) {
+            let t = HostTensor::from_literal(lit)?;
+            let expect: usize = shape.iter().product();
+            if t.numel() != expect {
+                return Err(anyhow!(
+                    "param {name}: got {} elements, manifest says {expect}",
+                    t.numel()
+                ));
+            }
+            tensors.push(HostTensor {
+                shape: shape.clone(), // manifest shape is canonical (scalars)
+                data: t.data,
+            });
+        }
+        Ok(ParamStore {
+            variant: info.name.clone(),
+            names: info.params.iter().map(|(n, _)| n.clone()).collect(),
+            tensors,
+            norm: NormStats::default(),
+        })
+    }
+
+    /// Zeroed store with the same shapes (Adam m/v initialization).
+    pub fn zeros_like(&self) -> ParamStore {
+        ParamStore {
+            variant: self.variant.clone(),
+            names: self.names.clone(),
+            tensors: self
+                .tensors
+                .iter()
+                .map(|t| HostTensor::zeros(&t.shape))
+                .collect(),
+            norm: self.norm.clone(),
+        }
+    }
+
+    pub fn to_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.tensors.iter().map(|t| t.to_literal()).collect()
+    }
+
+    pub fn total_elements(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    /// Replace tensor data from output literals (after a train step).
+    pub fn update_from_literals(&mut self, literals: &[xla::Literal]) -> Result<()> {
+        if literals.len() != self.tensors.len() {
+            return Err(anyhow!(
+                "update: got {} literals for {} params",
+                literals.len(),
+                self.tensors.len()
+            ));
+        }
+        for (t, lit) in self.tensors.iter_mut().zip(literals) {
+            let new = HostTensor::from_literal(lit)?;
+            if new.numel() != t.numel() {
+                return Err(anyhow!("update: element count changed"));
+            }
+            t.data = new.data;
+        }
+        Ok(())
+    }
+
+    // ---- checkpointing ----------------------------------------------------
+
+    pub fn save(&self, path: &str) -> io::Result<()> {
+        let f = std::fs::File::create(path)?;
+        let mut w = std::io::BufWriter::new(f);
+        w.write_all(MAGIC)?;
+        w.write_all(&[VERSION])?;
+        let ws = |w: &mut dyn Write, s: &str| -> io::Result<()> {
+            w.write_all(&(s.len() as u32).to_le_bytes())?;
+            w.write_all(s.as_bytes())
+        };
+        ws(&mut w, &self.variant)?;
+        for v in self
+            .norm
+            .target_mean
+            .iter()
+            .chain(&self.norm.target_std)
+            .chain(&self.norm.static_mean)
+            .chain(&self.norm.static_std)
+        {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in self.names.iter().zip(&self.tensors) {
+            ws(&mut w, name)?;
+            w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.shape {
+                w.write_all(&(d as u32).to_le_bytes())?;
+            }
+            for v in &t.data {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &str) -> io::Result<ParamStore> {
+        let f = std::fs::File::open(path)?;
+        let mut r = std::io::BufReader::new(f);
+        let bad = |m: &str| io::Error::new(io::ErrorKind::InvalidData, m);
+        let mut magic = [0u8; 7];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(bad("not a DIPPM checkpoint"));
+        }
+        let mut ver = [0u8; 1];
+        r.read_exact(&mut ver)?;
+        if ver[0] != VERSION {
+            return Err(bad("unsupported checkpoint version"));
+        }
+        let r_u32 = |r: &mut dyn Read| -> io::Result<u32> {
+            let mut b = [0u8; 4];
+            r.read_exact(&mut b)?;
+            Ok(u32::from_le_bytes(b))
+        };
+        let r_f64 = |r: &mut dyn Read| -> io::Result<f64> {
+            let mut b = [0u8; 8];
+            r.read_exact(&mut b)?;
+            Ok(f64::from_le_bytes(b))
+        };
+        let r_str = |r: &mut dyn Read| -> io::Result<String> {
+            let mut b = [0u8; 4];
+            r.read_exact(&mut b)?;
+            let len = u32::from_le_bytes(b) as usize;
+            if len > 1 << 16 {
+                return Err(io::Error::new(io::ErrorKind::InvalidData, "string too long"));
+            }
+            let mut buf = vec![0u8; len];
+            r.read_exact(&mut buf)?;
+            String::from_utf8(buf)
+                .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "bad utf8"))
+        };
+        let variant = r_str(&mut r)?;
+        let mut norm = NormStats::default();
+        for i in 0..N_TARGETS {
+            norm.target_mean[i] = r_f64(&mut r)?;
+        }
+        for i in 0..N_TARGETS {
+            norm.target_std[i] = r_f64(&mut r)?;
+        }
+        for i in 0..N_STATICS {
+            norm.static_mean[i] = r_f64(&mut r)?;
+        }
+        for i in 0..N_STATICS {
+            norm.static_std[i] = r_f64(&mut r)?;
+        }
+        let n = r_u32(&mut r)? as usize;
+        let mut names = Vec::with_capacity(n);
+        let mut tensors = Vec::with_capacity(n);
+        for _ in 0..n {
+            names.push(r_str(&mut r)?);
+            let rank = r_u32(&mut r)? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(r_u32(&mut r)? as usize);
+            }
+            let count: usize = shape.iter().product();
+            if count > 1 << 28 {
+                return Err(bad("tensor too large"));
+            }
+            let mut data = vec![0f32; count];
+            for v in &mut data {
+                let mut b = [0u8; 4];
+                r.read_exact(&mut b)?;
+                *v = f32::from_le_bytes(b);
+            }
+            tensors.push(HostTensor { shape, data });
+        }
+        Ok(ParamStore {
+            variant,
+            names,
+            tensors,
+            norm,
+        })
+    }
+
+    /// Verify shape compatibility with a manifest variant.
+    pub fn check_against(&self, info: &VariantInfo) -> Result<()> {
+        if self.variant != info.name {
+            return Err(anyhow!(
+                "checkpoint is for variant {:?}, manifest expects {:?}",
+                self.variant,
+                info.name
+            ));
+        }
+        if self.tensors.len() != info.params.len() {
+            return Err(anyhow!("checkpoint param count mismatch"));
+        }
+        for ((name, shape), t) in info.params.iter().zip(&self.tensors) {
+            if &t.shape != shape {
+                return Err(anyhow!(
+                    "param {name}: checkpoint shape {:?} != manifest {:?}",
+                    t.shape,
+                    shape
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> ParamStore {
+        ParamStore {
+            variant: "sage".into(),
+            names: vec!["w".into(), "b".into()],
+            tensors: vec![
+                HostTensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+                HostTensor::from_vec(&[3], vec![0.1, 0.2, 0.3]),
+            ],
+            norm: NormStats {
+                target_mean: [1.0, 2.0, 3.0],
+                target_std: [0.5, 0.6, 0.7],
+                static_mean: [1.0; 5],
+                static_std: [2.0; 5],
+            },
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let s = store();
+        let path = std::env::temp_dir().join("dippm_ck_test.bin");
+        let path = path.to_str().unwrap();
+        s.save(path).unwrap();
+        let back = ParamStore::load(path).unwrap();
+        assert_eq!(back.variant, "sage");
+        assert_eq!(back.names, s.names);
+        assert_eq!(back.tensors, s.tensors);
+        assert_eq!(back.norm, s.norm);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn zeros_like_matches_shapes() {
+        let z = store().zeros_like();
+        assert_eq!(z.tensors[0].shape, vec![2, 3]);
+        assert!(z.tensors[0].data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let path = std::env::temp_dir().join("dippm_ck_bad.bin");
+        std::fs::write(&path, b"garbage").unwrap();
+        assert!(ParamStore::load(path.to_str().unwrap()).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn total_elements() {
+        assert_eq!(store().total_elements(), 9);
+    }
+}

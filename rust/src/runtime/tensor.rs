@@ -1,0 +1,91 @@
+//! Host-side tensors and literal conversion helpers.
+
+use anyhow::{anyhow, Result};
+
+/// A host f32 tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[usize]) -> HostTensor {
+        let n: usize = shape.iter().product();
+        HostTensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Convert to an XLA literal (zero-copy into XLA's buffer via the
+    /// untyped-data constructor).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(
+                self.data.as_ptr() as *const u8,
+                self.data.len() * std::mem::size_of::<f32>(),
+            )
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &self.shape,
+            bytes,
+        )?)
+    }
+
+    /// Read back from a literal (must be f32).
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        if data.len() != dims.iter().product::<usize>() {
+            return Err(anyhow!("literal element count mismatch"));
+        }
+        Ok(HostTensor { shape: dims, data })
+    }
+}
+
+/// f32 scalar literal.
+pub fn scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// i32 scalar literal.
+pub fn scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_from_vec() {
+        let t = HostTensor::zeros(&[2, 3]);
+        assert_eq!(t.numel(), 6);
+        let u = HostTensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        assert_eq!(u.shape, vec![3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_checks_len() {
+        HostTensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    // Literal round-trips are covered by rust/tests/runtime_integration.rs
+    // (they need the PJRT shared library loaded).
+}

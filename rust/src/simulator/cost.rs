@@ -1,0 +1,196 @@
+//! Per-op arithmetic cost: FLOPs, MACs and HBM bytes from shapes.
+//!
+//! MACs follow TVM's relay.analysis.count_macs convention (only conv /
+//! dense / batch_matmul count — paper §3.3); FLOPs are the full roofline
+//! work estimate used by the device model, and bytes are the ideal HBM
+//! traffic of an unfused kernel (inputs + weights + outputs, fp32).
+
+use crate::ir::infer::numel;
+use crate::ir::{Graph, Node, OpKind};
+
+pub const BYTES_PER_ELEM: f64 = 4.0; // fp32 inference, as measured by the paper
+
+/// Cost of one node in isolation (before fusion).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OpCost {
+    pub flops: f64,
+    pub macs: f64,
+    pub bytes_in: f64,
+    pub bytes_weights: f64,
+    pub bytes_out: f64,
+}
+
+impl OpCost {
+    pub fn total_bytes(&self) -> f64 {
+        self.bytes_in + self.bytes_weights + self.bytes_out
+    }
+}
+
+/// Compute the cost of `node` within `graph`.
+pub fn op_cost(graph: &Graph, node: &Node) -> OpCost {
+    let in_numel: f64 = node
+        .inputs
+        .iter()
+        .map(|&i| numel(&graph.nodes[i].out_shape) as f64)
+        .sum();
+    let out_numel = numel(&node.out_shape) as f64;
+    let first_in = node
+        .inputs
+        .first()
+        .map(|&i| graph.nodes[i].out_shape.as_slice())
+        .unwrap_or(&[]);
+
+    let mut c = OpCost {
+        bytes_in: in_numel * BYTES_PER_ELEM,
+        bytes_out: out_numel * BYTES_PER_ELEM,
+        ..Default::default()
+    };
+
+    match node.op {
+        OpKind::Input => {
+            c.bytes_in = 0.0;
+            c.bytes_out = 0.0; // materialized by the host copy, not a kernel
+        }
+        OpKind::Conv2d | OpKind::Conv2dTranspose => {
+            let (kh, kw) = node.attrs.kernel.unwrap_or((1, 1));
+            let c_in = first_in.get(1).copied().unwrap_or(1) as f64;
+            let groups = node.attrs.groups.max(1) as f64;
+            // out elems * (C_in/g * kh * kw) MACs each
+            c.macs = out_numel * (c_in / groups) * (kh * kw) as f64;
+            c.flops = 2.0 * c.macs;
+            let c_out = node.out_shape.get(1).copied().unwrap_or(1) as f64;
+            c.bytes_weights = (c_out * (c_in / groups) * (kh * kw) as f64 + c_out)
+                * BYTES_PER_ELEM;
+        }
+        OpKind::DepthwiseConv2d => {
+            let (kh, kw) = node.attrs.kernel.unwrap_or((1, 1));
+            c.macs = out_numel * (kh * kw) as f64;
+            c.flops = 2.0 * c.macs;
+            let ch = first_in.get(1).copied().unwrap_or(1) as f64;
+            c.bytes_weights = (ch * (kh * kw) as f64 + ch) * BYTES_PER_ELEM;
+        }
+        OpKind::Dense => {
+            let d_in = *first_in.last().unwrap_or(&1) as f64;
+            c.macs = out_numel * d_in;
+            c.flops = 2.0 * c.macs;
+            let d_out = *node.out_shape.last().unwrap_or(&1) as f64;
+            c.bytes_weights = (d_in * d_out + d_out) * BYTES_PER_ELEM;
+        }
+        OpKind::BatchMatmul => {
+            // [B,M,K] x [B,K,N]: B*M*N*K MACs
+            let k = *first_in.last().unwrap_or(&1) as f64;
+            c.macs = out_numel * k;
+            c.flops = 2.0 * c.macs;
+        }
+        OpKind::Relu => c.flops = out_numel,
+        OpKind::Sigmoid | OpKind::HardSwish => c.flops = 4.0 * out_numel,
+        OpKind::Gelu => c.flops = 8.0 * out_numel,
+        OpKind::Softmax => c.flops = 5.0 * out_numel,
+        OpKind::Add | OpKind::Multiply => c.flops = out_numel,
+        OpKind::Concat => c.flops = 0.0, // pure data movement
+        OpKind::MaxPool2d | OpKind::AvgPool2d => {
+            let (kh, kw) = node.attrs.kernel.unwrap_or((1, 1));
+            c.flops = out_numel * (kh * kw) as f64;
+        }
+        OpKind::GlobalAvgPool2d | OpKind::Mean => c.flops = in_numel,
+        OpKind::BatchNorm => {
+            c.flops = 2.0 * out_numel; // folded scale+shift at inference
+            let ch = first_in.get(1).copied().unwrap_or(1) as f64;
+            c.bytes_weights = 2.0 * ch * BYTES_PER_ELEM;
+        }
+        OpKind::LayerNorm => {
+            c.flops = 8.0 * out_numel;
+            let d = *first_in.last().unwrap_or(&1) as f64;
+            c.bytes_weights = 2.0 * d * BYTES_PER_ELEM;
+        }
+        OpKind::Reshape | OpKind::Flatten => {
+            // Metadata-only on contiguous tensors.
+            c.flops = 0.0;
+            c.bytes_in = 0.0;
+            c.bytes_out = 0.0;
+        }
+        OpKind::Transpose | OpKind::StridedSlice => c.flops = 0.0, // move-only
+    }
+    c
+}
+
+/// Total MACs of a graph (the SFG's F_mac, paper eq. 1 — TVM convention:
+/// only ops with `counts_macs`).
+pub fn total_macs(graph: &Graph) -> f64 {
+    graph
+        .nodes
+        .iter()
+        .filter(|n| n.op.counts_macs())
+        .map(|n| op_cost(graph, n).macs)
+        .sum()
+}
+
+/// Total FLOPs of a graph (all ops).
+pub fn total_flops(graph: &Graph) -> f64 {
+    graph.nodes.iter().map(|n| op_cost(graph, n).flops).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Attrs, GraphBuilder};
+
+    #[test]
+    fn conv_macs_match_formula() {
+        let mut b = GraphBuilder::new("t", "t", 1);
+        let x = b.input(vec![1, 3, 32, 32]);
+        b.conv2d(x, 16, 3, 1, 1);
+        let g = b.finish();
+        let conv = &g.nodes[1];
+        let c = op_cost(&g, conv);
+        // out 16x32x32, each needs 3*3*3 MACs
+        assert_eq!(c.macs, (16 * 32 * 32) as f64 * 27.0);
+        assert_eq!(c.flops, 2.0 * c.macs);
+        assert_eq!(c.bytes_weights, ((16 * 3 * 9 + 16) as f64) * 4.0);
+    }
+
+    #[test]
+    fn dense_macs() {
+        let mut b = GraphBuilder::new("t", "t", 2);
+        let x = b.input(vec![2, 128]);
+        b.dense(x, 10);
+        let g = b.finish();
+        let c = op_cost(&g, &g.nodes[1]);
+        assert_eq!(c.macs, (2 * 10 * 128) as f64);
+    }
+
+    #[test]
+    fn depthwise_cheaper_than_dense_conv() {
+        let mut b = GraphBuilder::new("t", "t", 1);
+        let x = b.input(vec![1, 32, 16, 16]);
+        let dw = b.depthwise(x, 3, 1, 1);
+        let _cv = b.conv2d(dw, 32, 3, 1, 1);
+        let g = b.finish();
+        let dwc = op_cost(&g, &g.nodes[1]);
+        let cvc = op_cost(&g, &g.nodes[2]);
+        assert!(dwc.macs * 8.0 < cvc.macs);
+    }
+
+    #[test]
+    fn total_macs_ignores_elementwise() {
+        let mut b = GraphBuilder::new("t", "t", 1);
+        let x = b.input(vec![1, 3, 8, 8]);
+        let c = b.conv_relu(x, 4, 3, 1, 1);
+        let _ = b.relu(c);
+        let g = b.finish();
+        let conv_only = op_cost(&g, &g.nodes[1]).macs;
+        assert_eq!(total_macs(&g), conv_only);
+        assert!(total_flops(&g) > 2.0 * conv_only);
+    }
+
+    #[test]
+    fn reshape_is_free() {
+        let mut b = GraphBuilder::new("t", "t", 1);
+        let x = b.input(vec![1, 4, 2, 2]);
+        let f = b.add(OpKind::Flatten, Attrs::none(), &[x]);
+        let g = b.finish();
+        let c = op_cost(&g, &g.nodes[f]);
+        assert_eq!(c.flops, 0.0);
+        assert_eq!(c.total_bytes(), 0.0);
+    }
+}

@@ -1,0 +1,163 @@
+//! Device model: NVIDIA A100-SXM4-40GB and its MIG partitions.
+//!
+//! Numbers are from the A100 datasheet / MIG user guide; the utilization
+//! half-work constants are calibration knobs (DESIGN.md §6) that shape the
+//! small-kernel inefficiency the paper's GNN learns to capture.
+
+/// A MIG profile of the A100 (paper §3.5 considers these four).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MigProfile {
+    /// 1g.5gb — 1/7 of SMs, 1/8 of memory bandwidth, 5 GB.
+    G1_5,
+    /// 2g.10gb
+    G2_10,
+    /// 3g.20gb
+    G3_20,
+    /// 7g.40gb — the full GPU (what the paper's dataset was measured on).
+    G7_40,
+}
+
+pub const ALL_PROFILES: [MigProfile; 4] = [
+    MigProfile::G1_5,
+    MigProfile::G2_10,
+    MigProfile::G3_20,
+    MigProfile::G7_40,
+];
+
+impl MigProfile {
+    pub fn name(self) -> &'static str {
+        match self {
+            MigProfile::G1_5 => "1g.5gb",
+            MigProfile::G2_10 => "2g.10gb",
+            MigProfile::G3_20 => "3g.20gb",
+            MigProfile::G7_40 => "7g.40gb",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<MigProfile> {
+        ALL_PROFILES.iter().copied().find(|p| p.name() == s)
+    }
+
+    /// Fraction of the 108 SMs (GPU slices are out of 7).
+    pub fn sm_fraction(self) -> f64 {
+        match self {
+            MigProfile::G1_5 => 1.0 / 7.0,
+            MigProfile::G2_10 => 2.0 / 7.0,
+            MigProfile::G3_20 => 3.0 / 7.0,
+            MigProfile::G7_40 => 1.0,
+        }
+    }
+
+    /// Fraction of HBM bandwidth (memory slices are out of 8).
+    pub fn bw_fraction(self) -> f64 {
+        match self {
+            MigProfile::G1_5 => 1.0 / 8.0,
+            MigProfile::G2_10 => 2.0 / 8.0,
+            MigProfile::G3_20 => 4.0 / 8.0,
+            MigProfile::G7_40 => 1.0,
+        }
+    }
+
+    /// Memory capacity in MB.
+    pub fn capacity_mb(self) -> f64 {
+        match self {
+            MigProfile::G1_5 => 5.0 * 1024.0,
+            MigProfile::G2_10 => 10.0 * 1024.0,
+            MigProfile::G3_20 => 20.0 * 1024.0,
+            MigProfile::G7_40 => 40.0 * 1024.0,
+        }
+    }
+}
+
+/// Calibrated A100 device parameters used by the analytical cost model.
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    /// Peak tensor-core throughput for the FP32-input (TF32) path, FLOP/s.
+    pub tc_flops: f64,
+    /// Peak CUDA-core FP32 throughput, FLOP/s.
+    pub cuda_flops: f64,
+    /// Peak HBM bandwidth, B/s.
+    pub hbm_bw: f64,
+    /// Kernel launch + scheduling overhead per (fused) kernel, seconds.
+    pub launch_s: f64,
+    /// Max achievable utilization of peak compute (cuDNN-style efficiency).
+    pub max_compute_util: f64,
+    /// Max achievable fraction of peak bandwidth.
+    pub max_bw_util: f64,
+    /// FLOPs at which compute utilization reaches half of max.
+    pub flops_half_util: f64,
+    /// Bytes at which bandwidth utilization reaches half of max.
+    pub bytes_half_util: f64,
+    /// Idle board power (W) attributed while a kernel runs at util ~ 0.
+    pub idle_w: f64,
+    /// TDP (W) at full utilization.
+    pub tdp_w: f64,
+    /// CUDA context + framework baseline memory (MB) on the full GPU.
+    pub context_mb: f64,
+    /// Allocator slack multiplier on activations (caching allocator).
+    pub alloc_slack: f64,
+    /// cuDNN/cuBLAS workspace pool floor (MB).
+    pub workspace_floor_mb: f64,
+}
+
+impl Default for DeviceSpec {
+    fn default() -> Self {
+        DeviceSpec {
+            tc_flops: 156e12,  // TF32 tensor core
+            cuda_flops: 19.5e12,
+            hbm_bw: 1555e9,
+            launch_s: 4e-6,
+            max_compute_util: 0.62,
+            max_bw_util: 0.78,
+            flops_half_util: 6.0e8,
+            bytes_half_util: 1.2e7,
+            idle_w: 58.0,
+            tdp_w: 400.0,
+            context_mb: 1045.0,
+            alloc_slack: 1.32,
+            workspace_floor_mb: 192.0,
+        }
+    }
+}
+
+impl DeviceSpec {
+    /// Compute-utilization saturation curve: util(w) = umax * w / (w + w50).
+    pub fn compute_util(&self, flops: f64) -> f64 {
+        self.max_compute_util * flops / (flops + self.flops_half_util)
+    }
+
+    pub fn bw_util(&self, bytes: f64) -> f64 {
+        self.max_bw_util * bytes / (bytes + self.bytes_half_util)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_names_roundtrip() {
+        for p in ALL_PROFILES {
+            assert_eq!(MigProfile::from_name(p.name()), Some(p));
+        }
+        assert_eq!(MigProfile::from_name("9g.80gb"), None);
+    }
+
+    #[test]
+    fn fractions_monotone() {
+        let sm: Vec<f64> = ALL_PROFILES.iter().map(|p| p.sm_fraction()).collect();
+        let bw: Vec<f64> = ALL_PROFILES.iter().map(|p| p.bw_fraction()).collect();
+        assert!(sm.windows(2).all(|w| w[0] < w[1]));
+        assert!(bw.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(MigProfile::G7_40.sm_fraction(), 1.0);
+    }
+
+    #[test]
+    fn util_curves_saturate() {
+        let d = DeviceSpec::default();
+        assert!(d.compute_util(1e3) < 0.01);
+        assert!(d.compute_util(1e12) > 0.6 * d.max_compute_util);
+        assert!(d.compute_util(1e15) < d.max_compute_util);
+        assert!(d.bw_util(1e12) > 0.7 * d.max_bw_util);
+    }
+}

@@ -1,0 +1,170 @@
+//! Kernel fusion pass: groups each producer op with the chain of
+//! elementwise/activation consumers that a real inference runtime (cuDNN /
+//! TensorRT / XLA) would execute as one kernel.
+//!
+//! Rules (single-consumer chains only, mirroring conservative vertical
+//! fusion):
+//!   * an elementwise op whose *first* input is the immediately preceding
+//!     unfused producer joins that producer's kernel;
+//!   * fused ops contribute their FLOPs but not their intermediate HBM
+//!     round-trip (input bytes from the producer are dropped);
+//!   * reshape/flatten are zero-cost and never form kernels.
+
+use crate::ir::{Graph, NodeId, OpKind};
+
+use super::cost::{op_cost, OpCost};
+
+/// A fused kernel: one launch on the device.
+#[derive(Debug, Clone)]
+pub struct Kernel {
+    /// Node ids fused into this kernel (first = producer).
+    pub nodes: Vec<NodeId>,
+    /// Aggregate cost after removing internal traffic.
+    pub cost: OpCost,
+    /// Whether the producer runs on tensor cores.
+    pub tensor_core: bool,
+}
+
+/// Partition the graph into fused kernels (in topological order).
+pub fn fuse(graph: &Graph) -> Vec<Kernel> {
+    let consumers = graph.consumers();
+    let mut kernel_of: Vec<Option<usize>> = vec![None; graph.nodes.len()];
+    let mut kernels: Vec<Kernel> = Vec::new();
+
+    for node in &graph.nodes {
+        if node.op == OpKind::Input {
+            continue; // host copy, not a kernel
+        }
+        let c = op_cost(graph, node);
+        if matches!(node.op, OpKind::Reshape | OpKind::Flatten) {
+            continue; // metadata-only
+        }
+
+        // Try to fuse into the kernel of our first input: allowed when this
+        // op is elementwise and the producer has exactly one consumer.
+        let fuse_target = node.inputs.first().and_then(|&src| {
+            if node.op.is_elementwise() && consumers[src].len() == 1 {
+                kernel_of[src]
+            } else {
+                None
+            }
+        });
+
+        match fuse_target {
+            Some(kid) => {
+                let k = &mut kernels[kid];
+                k.nodes.push(node.id);
+                k.cost.flops += c.flops;
+                k.cost.macs += c.macs;
+                k.cost.bytes_weights += c.bytes_weights;
+                // The chain's intermediate stays on-chip: drop the fused
+                // op's primary input traffic; its extra inputs (e.g. the
+                // residual branch of an Add) still come from HBM.
+                let primary = node.inputs[0];
+                let primary_bytes = crate::ir::infer::numel(
+                    &graph.nodes[primary].out_shape,
+                ) as f64
+                    * super::cost::BYTES_PER_ELEM;
+                k.cost.bytes_in += c.bytes_in - primary_bytes;
+                // Output of the kernel is now this op's output.
+                k.cost.bytes_out = c.bytes_out;
+                kernel_of[node.id] = Some(kid);
+            }
+            None => {
+                let kid = kernels.len();
+                kernels.push(Kernel {
+                    nodes: vec![node.id],
+                    cost: c,
+                    tensor_core: node.op.is_tensor_core(),
+                });
+                kernel_of[node.id] = Some(kid);
+            }
+        }
+    }
+    kernels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Attrs, GraphBuilder};
+
+    #[test]
+    fn conv_relu_fuses_into_one_kernel() {
+        let mut b = GraphBuilder::new("t", "t", 1);
+        let x = b.input(vec![1, 3, 16, 16]);
+        b.conv_relu(x, 8, 3, 1, 1);
+        let g = b.finish();
+        let ks = fuse(&g);
+        assert_eq!(ks.len(), 1);
+        assert_eq!(ks[0].nodes.len(), 2);
+        assert!(ks[0].tensor_core);
+    }
+
+    #[test]
+    fn fusion_drops_intermediate_traffic() {
+        let mut b = GraphBuilder::new("t", "t", 1);
+        let x = b.input(vec![1, 3, 16, 16]);
+        let c = b.conv2d(x, 8, 3, 1, 1);
+        b.relu(c);
+        let g = b.finish();
+        let fused = fuse(&g);
+        let conv_cost = op_cost(&g, &g.nodes[1]);
+        // Fused kernel reads conv input+weights, writes relu output — the
+        // [1,8,16,16] intermediate never hits HBM.
+        assert_eq!(fused[0].cost.bytes_in, conv_cost.bytes_in);
+        assert_eq!(fused[0].cost.bytes_out, conv_cost.bytes_out);
+        assert!(fused[0].cost.flops > conv_cost.flops);
+    }
+
+    #[test]
+    fn branch_point_blocks_fusion() {
+        let mut b = GraphBuilder::new("t", "t", 1);
+        let x = b.input(vec![1, 8, 8, 8]);
+        let c = b.conv2d(x, 8, 3, 1, 1);
+        let r = b.relu(c); // c has 2 consumers -> relu cannot fuse
+        let _ = b.add(OpKind::Add, Attrs::none(), &[r, c]);
+        let g = b.finish();
+        let ks = fuse(&g);
+        // conv | relu | add(fused into relu? add's first input is relu which
+        // has 1 consumer -> fuses) => 2 kernels
+        assert_eq!(ks.len(), 2);
+        assert_eq!(ks[0].nodes, vec![1]);
+        assert_eq!(ks[1].nodes, vec![2, 3]);
+    }
+
+    #[test]
+    fn residual_add_keeps_branch_traffic() {
+        let mut b = GraphBuilder::new("t", "t", 1);
+        let x = b.input(vec![1, 8, 8, 8]);
+        let c1 = b.conv2d(x, 8, 3, 1, 1);
+        let c2 = b.conv2d(c1, 8, 3, 1, 1);
+        let s = b.add(OpKind::Add, Attrs::none(), &[c2, c1]);
+        let _ = b.relu(s);
+        let g = b.finish();
+        let ks = fuse(&g);
+        // c1 feeds c2 and the add -> 2 consumers, so c1 is its own kernel and
+        // cannot absorb anything; c2+add+relu fuse.
+        assert_eq!(ks.len(), 2);
+        let k2 = &ks[1];
+        assert_eq!(k2.nodes.len(), 3);
+        // The add still reads the residual branch from HBM.
+        let branch_bytes = (8 * 8 * 8) as f64 * 4.0;
+        let c2_cost = op_cost(&g, &g.nodes[2]);
+        assert!((k2.cost.bytes_in - (c2_cost.bytes_in + branch_bytes)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn kernel_count_less_than_node_count() {
+        let mut b = GraphBuilder::new("t", "t", 1);
+        let x = b.input(vec![1, 3, 32, 32]);
+        let mut h = x;
+        for _ in 0..4 {
+            h = b.conv_relu(h, 16, 3, 1, 1);
+        }
+        let g = b.finish();
+        let ks = fuse(&g);
+        assert_eq!(ks.len(), 4); // each conv+relu pair = 1 kernel
+        assert_eq!(g.n_nodes(), 9);
+    }
+}

@@ -1,0 +1,167 @@
+//! Memory model: peak device-memory consumption of an inference pass.
+//!
+//! peak = context + weights + alloc_slack * (liveness-peak activations)
+//!        + workspace, where the liveness peak comes from walking the graph
+//! in execution order and freeing each tensor after its last consumer —
+//! what a framework's caching allocator converges to. The workspace term
+//! models cuDNN algorithm scratch (proportional to the largest conv) with a
+//! pool floor. Mirrors the out-of-memory failure mode Gao et al. report
+//! (paper §1) and reproduces the Fig. 3 profile-capacity effect via the
+//! context scaling in `Simulator::memory_mb`.
+
+use crate::ir::infer::numel;
+use crate::ir::{Graph, OpKind};
+
+use super::cost::BYTES_PER_ELEM;
+
+/// Peak live activation bytes over a topological execution of the graph.
+pub fn peak_activation_bytes(graph: &Graph) -> f64 {
+    let consumers = graph.consumers();
+    // last_use[i] = position of the last consumer of node i (or its own
+    // position if unconsumed — outputs stay alive to the end of the pass).
+    let n = graph.nodes.len();
+    let mut last_use: Vec<usize> = (0..n).collect();
+    for (i, node) in graph.nodes.iter().enumerate() {
+        for &src in &node.inputs {
+            last_use[src] = last_use[src].max(i);
+        }
+    }
+    for (i, cons) in consumers.iter().enumerate() {
+        if cons.is_empty() {
+            last_use[i] = n; // graph output lives until the pass ends
+        }
+    }
+    // Alias propagation: a reshape/flatten shares its input's buffer, so
+    // the input must stay live as long as the alias is (reverse pass
+    // handles alias chains).
+    for i in (0..n).rev() {
+        let node = &graph.nodes[i];
+        if matches!(node.op, OpKind::Reshape | OpKind::Flatten) {
+            if let Some(&p) = node.inputs.first() {
+                last_use[p] = last_use[p].max(last_use[i]);
+            }
+        }
+    }
+
+    let mut live = 0.0f64;
+    let mut peak = 0.0f64;
+    for (i, node) in graph.nodes.iter().enumerate() {
+        // Allocate this node's output (reshape/flatten alias their input).
+        let aliases = matches!(node.op, OpKind::Reshape | OpKind::Flatten);
+        if !aliases {
+            live += numel(&node.out_shape) as f64 * BYTES_PER_ELEM;
+        }
+        peak = peak.max(live);
+        // Free tensors whose last use was this node.
+        for (j, &lu) in last_use.iter().enumerate().take(i + 1) {
+            if lu == i {
+                let nj = &graph.nodes[j];
+                let aliases_j = matches!(nj.op, OpKind::Reshape | OpKind::Flatten);
+                if !aliases_j {
+                    live -= numel(&nj.out_shape) as f64 * BYTES_PER_ELEM;
+                }
+                // Guard against double-free by marking as freed.
+                // (last_use[j] can equal i only once since we mutate below.)
+            }
+        }
+        // Mark frees so they are not repeated (set to sentinel).
+        for lu in last_use.iter_mut().take(i + 1) {
+            if *lu == i {
+                *lu = usize::MAX;
+            }
+        }
+    }
+    peak
+}
+
+/// Weight bytes of the whole model.
+pub fn weight_bytes(graph: &Graph) -> f64 {
+    graph.total_weights() as f64 * BYTES_PER_ELEM
+}
+
+/// cuDNN-style workspace: a fraction of the largest single conv activation,
+/// with a pool floor applied by the caller.
+pub fn workspace_bytes(graph: &Graph) -> f64 {
+    graph
+        .nodes
+        .iter()
+        .filter(|n| {
+            matches!(
+                n.op,
+                OpKind::Conv2d | OpKind::DepthwiseConv2d | OpKind::Conv2dTranspose
+            )
+        })
+        .map(|n| numel(&n.out_shape) as f64 * BYTES_PER_ELEM * 0.5)
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Attrs, GraphBuilder};
+
+    #[test]
+    fn linear_chain_peak_is_two_tensors() {
+        // x -> conv -> conv -> conv, all same size: peak = in + out of one op
+        let mut b = GraphBuilder::new("t", "t", 1);
+        let x = b.input(vec![1, 8, 16, 16]);
+        let c1 = b.conv2d(x, 8, 3, 1, 1);
+        let c2 = b.conv2d(c1, 8, 3, 1, 1);
+        b.conv2d(c2, 8, 3, 1, 1);
+        let g = b.finish();
+        let t = (8 * 16 * 16) as f64 * 4.0;
+        assert_eq!(peak_activation_bytes(&g), 2.0 * t);
+    }
+
+    #[test]
+    fn residual_keeps_skip_alive() {
+        // x -> c1 -> c2 -> add(x)  : while computing c2, x must stay live.
+        let mut b = GraphBuilder::new("t", "t", 1);
+        let x = b.input(vec![1, 8, 16, 16]);
+        let c1 = b.conv2d(x, 8, 3, 1, 1);
+        let c2 = b.conv2d(c1, 8, 3, 1, 1);
+        b.add(OpKind::Add, Attrs::none(), &[c2, x]);
+        let g = b.finish();
+        let t = (8 * 16 * 16) as f64 * 4.0;
+        assert_eq!(peak_activation_bytes(&g), 3.0 * t); // x + c1 + c2
+    }
+
+    #[test]
+    fn peak_scales_with_batch() {
+        let build = |batch| {
+            let mut b = GraphBuilder::new("t", "t", batch);
+            let x = b.input(vec![batch, 16, 32, 32]);
+            let c = b.conv_relu(x, 16, 3, 1, 1);
+            b.conv2d(c, 16, 3, 1, 1);
+            b.finish()
+        };
+        let p1 = peak_activation_bytes(&build(1));
+        let p4 = peak_activation_bytes(&build(4));
+        assert!((p4 / p1 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reshape_does_not_allocate() {
+        let mut b = GraphBuilder::new("t", "t", 1);
+        let x = b.input(vec![1, 8, 4, 4]);
+        let f = b.add(OpKind::Flatten, Attrs::none(), &[x]);
+        b.dense(f, 8);
+        let g = b.finish();
+        let t = (8 * 4 * 4) as f64 * 4.0;
+        let out = 8.0 * 4.0;
+        assert_eq!(peak_activation_bytes(&g), t + out);
+    }
+
+    #[test]
+    fn workspace_tracks_largest_conv() {
+        let mut b = GraphBuilder::new("t", "t", 1);
+        let x = b.input(vec![1, 3, 64, 64]);
+        let c1 = b.conv2d(x, 32, 3, 1, 1); // 32*64*64 out
+        b.conv2d(c1, 16, 3, 2, 1); // smaller
+        let g = b.finish();
+        assert_eq!(
+            workspace_bytes(&g),
+            (32 * 64 * 64) as f64 * 4.0 * 0.5
+        );
+    }
+}

@@ -1,0 +1,287 @@
+//! The A100 device simulator — the ground-truth substrate replacing the
+//! paper's physical GPU + NVML measurements (DESIGN.md §2, §6).
+//!
+//! Given an [`ir::Graph`] and a [`MigProfile`], [`Simulator::measure`]
+//! returns the (latency ms, memory MB, energy J) triple the paper's dataset
+//! records, including the paper's measurement protocol: 5 warm-up runs are
+//! implicit (the model is steady-state), and the reported value is the mean
+//! of 30 noisy runs with a deterministic per-(graph, profile) noise stream.
+
+pub mod cost;
+pub mod device;
+pub mod fusion;
+pub mod memory;
+
+use crate::ir::Graph;
+use crate::util::rng::{hash_bytes, Rng};
+
+pub use device::{DeviceSpec, MigProfile, ALL_PROFILES};
+
+/// One measured data point — the paper's Y vector (§4.1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Measurement {
+    pub latency_ms: f64,
+    pub memory_mb: f64,
+    pub energy_j: f64,
+}
+
+/// Result of a MIG-aware measurement: `None` memory means OOM on that slice.
+#[derive(Debug, Clone, Copy)]
+pub enum MigResult {
+    Ok(Measurement),
+    OutOfMemory { required_mb: f64, capacity_mb: f64 },
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Simulator {
+    pub spec: DeviceSpec,
+    /// Relative std-dev of per-run measurement noise (paper: mean of 30).
+    pub noise_sd: f64,
+    /// Number of simulated measurement runs averaged together.
+    pub runs: usize,
+}
+
+impl Simulator {
+    pub fn new() -> Simulator {
+        Simulator {
+            spec: DeviceSpec::default(),
+            noise_sd: 0.02,
+            runs: 30,
+        }
+    }
+
+    /// Noise-free analytical latency in seconds on a profile.
+    pub fn latency_s(&self, graph: &Graph, profile: MigProfile) -> f64 {
+        let kernels = fusion::fuse(graph);
+        let s = &self.spec;
+        let sm = profile.sm_fraction();
+        let bw = profile.bw_fraction();
+        let mut total = 0.0;
+        for k in &kernels {
+            let peak = if k.tensor_core {
+                s.tc_flops
+            } else {
+                s.cuda_flops
+            } * sm;
+            let cu = s.compute_util(k.cost.flops * sm.recip().min(4.0)); // smaller slice saturates sooner
+            let bu = s.bw_util(k.cost.total_bytes());
+            let t_compute = if k.cost.flops > 0.0 {
+                k.cost.flops / (peak * cu.max(1e-3))
+            } else {
+                0.0
+            };
+            let t_mem = k.cost.total_bytes() / (s.hbm_bw * bw * bu.max(1e-3));
+            total += t_compute.max(t_mem) + s.launch_s;
+        }
+        total
+    }
+
+    /// Average achieved utilization (power-weighting term for energy).
+    fn avg_util(&self, graph: &Graph, profile: MigProfile) -> f64 {
+        let kernels = fusion::fuse(graph);
+        let s = &self.spec;
+        let sm = profile.sm_fraction();
+        let (mut t_sum, mut u_sum) = (0.0, 0.0);
+        for k in &kernels {
+            let peak = if k.tensor_core {
+                s.tc_flops
+            } else {
+                s.cuda_flops
+            } * sm;
+            let cu = s.compute_util(k.cost.flops * sm.recip().min(4.0));
+            let bu = s.bw_util(k.cost.total_bytes());
+            let t_compute = if k.cost.flops > 0.0 {
+                k.cost.flops / (peak * cu.max(1e-3))
+            } else {
+                0.0
+            };
+            let t_mem = k.cost.total_bytes() / (s.hbm_bw * profile.bw_fraction() * bu.max(1e-3));
+            let t = t_compute.max(t_mem) + s.launch_s;
+            // Utilization while this kernel runs: how close to the roofline.
+            let u = if t > 0.0 {
+                (t_compute.max(t_mem) / t) * cu.max(bu)
+            } else {
+                0.0
+            };
+            t_sum += t;
+            u_sum += u * t;
+        }
+        if t_sum > 0.0 {
+            u_sum / t_sum
+        } else {
+            0.0
+        }
+    }
+
+    /// Noise-free memory consumption in MB on a profile.
+    ///
+    /// The context term scales mildly with slice capacity — the effect the
+    /// paper's Fig. 3 shows (consumption slightly increases with the MIG
+    /// profile, and is always highest on 7g.40gb).
+    pub fn memory_mb(&self, graph: &Graph, profile: MigProfile) -> f64 {
+        let s = &self.spec;
+        let act = memory::peak_activation_bytes(graph) / 1e6;
+        let w = memory::weight_bytes(graph) / 1e6;
+        let ws = (memory::workspace_bytes(graph) / 1e6).max(s.workspace_floor_mb)
+            * profile.sm_fraction().sqrt(); // smaller slices get smaller pools
+        let context = s.context_mb * (0.62 + 0.38 * profile.bw_fraction());
+        context + w + s.alloc_slack * act + ws
+    }
+
+    /// Noise-free energy in joules for one inference on a profile.
+    pub fn energy_j(&self, graph: &Graph, profile: MigProfile) -> f64 {
+        let t = self.latency_s(graph, profile);
+        let u = self.avg_util(graph, profile);
+        let frac = profile.sm_fraction();
+        // Board power attributed to the slice: share of idle + dynamic.
+        let p = self.spec.idle_w * frac + (self.spec.tdp_w - self.spec.idle_w) * frac * u;
+        p * t
+    }
+
+    /// Full measurement protocol on the 7g.40gb profile (paper §4.1: the
+    /// dataset is collected on the full GPU).
+    pub fn measure(&self, graph: &Graph) -> Measurement {
+        self.measure_on(graph, MigProfile::G7_40)
+    }
+
+    /// Measurement with the paper's protocol on a given profile: mean of
+    /// `runs` noisy samples, deterministic per (graph variant, profile).
+    pub fn measure_on(&self, graph: &Graph, profile: MigProfile) -> Measurement {
+        let lat = self.latency_s(graph, profile) * 1e3;
+        let mem = self.memory_mb(graph, profile);
+        let en = self.energy_j(graph, profile);
+        let seed = hash_bytes(
+            format!("{}|{}|{}|{}", graph.family, graph.variant, graph.batch, profile.name())
+                .as_bytes(),
+        );
+        let mut rng = Rng::new(seed);
+        let noisy_mean = |rng: &mut Rng, base: f64| -> f64 {
+            let runs = self.runs.max(1);
+            let mut acc = 0.0;
+            for _ in 0..runs {
+                acc += base * (1.0 + self.noise_sd * rng.gaussian());
+            }
+            acc / runs as f64
+        };
+        Measurement {
+            latency_ms: noisy_mean(&mut rng, lat),
+            // Memory is allocator-deterministic: a single noisy sample
+            // rounded to MB, like nvidia-smi reporting.
+            memory_mb: (mem * (1.0 + 0.005 * rng.gaussian())).round(),
+            energy_j: noisy_mean(&mut rng, en),
+        }
+    }
+
+    /// MIG-aware measurement that reports OOM when the graph cannot fit.
+    pub fn measure_mig(&self, graph: &Graph, profile: MigProfile) -> MigResult {
+        let mem = self.memory_mb(graph, profile);
+        if mem > profile.capacity_mb() {
+            return MigResult::OutOfMemory {
+                required_mb: mem,
+                capacity_mb: profile.capacity_mb(),
+            };
+        }
+        MigResult::Ok(self.measure_on(graph, profile))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::GraphBuilder;
+
+    fn convnet(batch: usize, ch: usize, layers: usize) -> Graph {
+        let mut b = GraphBuilder::new("t", &format!("convnet-c{ch}-l{layers}-b{batch}"), batch);
+        let x = b.input(vec![batch, 3, 64, 64]);
+        let mut h = b.conv_relu(x, ch, 3, 1, 1);
+        for _ in 1..layers {
+            h = b.conv_relu(h, ch, 3, 1, 1);
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn measurement_is_deterministic() {
+        let sim = Simulator::new();
+        let g = convnet(4, 32, 4);
+        let a = sim.measure(&g);
+        let b = sim.measure(&g);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn more_work_more_latency_and_energy() {
+        let sim = Simulator::new();
+        let small = convnet(1, 16, 2);
+        let big = convnet(1, 64, 8);
+        assert!(sim.latency_s(&big, MigProfile::G7_40) > sim.latency_s(&small, MigProfile::G7_40));
+        assert!(sim.energy_j(&big, MigProfile::G7_40) > sim.energy_j(&small, MigProfile::G7_40));
+    }
+
+    #[test]
+    fn bigger_batch_more_memory() {
+        let sim = Simulator::new();
+        assert!(
+            sim.memory_mb(&convnet(16, 32, 4), MigProfile::G7_40)
+                > sim.memory_mb(&convnet(1, 32, 4), MigProfile::G7_40)
+        );
+    }
+
+    #[test]
+    fn smaller_slice_is_slower() {
+        let sim = Simulator::new();
+        let g = convnet(8, 64, 6);
+        let full = sim.latency_s(&g, MigProfile::G7_40);
+        let slice = sim.latency_s(&g, MigProfile::G1_5);
+        assert!(slice > full * 1.5, "slice {slice} vs full {full}");
+    }
+
+    #[test]
+    fn fig3_memory_increases_with_profile_capacity() {
+        // The paper's Fig. 3 effect: same model, slightly more memory on
+        // bigger profiles; highest on 7g.40gb.
+        let sim = Simulator::new();
+        let g = convnet(16, 32, 4);
+        let mems: Vec<f64> = ALL_PROFILES
+            .iter()
+            .map(|&p| sim.memory_mb(&g, p))
+            .collect();
+        assert!(mems.windows(2).all(|w| w[0] < w[1]), "{mems:?}");
+        let spread = (mems[3] - mems[0]) / mems[3];
+        assert!(spread < 0.45, "profile effect too large: {mems:?}");
+    }
+
+    #[test]
+    fn oom_on_small_slice() {
+        let sim = Simulator::new();
+        // ~2.4 GB per activation tensor: far beyond the 5 GB slice.
+        let mut b = GraphBuilder::new("t", "huge-b256", 256);
+        let x = b.input(vec![256, 3, 96, 96]);
+        let c1 = b.conv_relu(x, 256, 3, 1, 1);
+        b.conv_relu(c1, 256, 3, 1, 1);
+        let g = b.finish();
+        match sim.measure_mig(&g, MigProfile::G1_5) {
+            MigResult::OutOfMemory { required_mb, capacity_mb } => {
+                assert!(required_mb > capacity_mb);
+            }
+            MigResult::Ok(m) => panic!("expected OOM, got {m:?}"),
+        }
+    }
+
+    #[test]
+    fn latency_in_plausible_range() {
+        // A 6-layer 64ch convnet at batch 8 on the full GPU: O(0.1–10 ms).
+        let sim = Simulator::new();
+        let ms = sim.latency_s(&convnet(8, 64, 6), MigProfile::G7_40) * 1e3;
+        assert!(ms > 0.05 && ms < 50.0, "latency {ms} ms");
+    }
+
+    #[test]
+    fn noise_is_small_relative_to_signal() {
+        let sim = Simulator::new();
+        let g = convnet(4, 32, 4);
+        let m = sim.measure(&g);
+        let clean = sim.latency_s(&g, MigProfile::G7_40) * 1e3;
+        assert!((m.latency_ms - clean).abs() / clean < 0.05);
+    }
+}

@@ -1,0 +1,10 @@
+//! Training driver: runs the AOT train-step executable (Adam inside the
+//! HLO) over the dataset, evaluates MAPE (the paper's metric), and provides
+//! the LR-finder the paper references (Smith, WACV'17).
+
+pub mod batch;
+pub mod lr_finder;
+pub mod trainer;
+
+pub use batch::BatchBuffers;
+pub use trainer::{EpochLog, EvalReport, TrainConfig, Trainer};

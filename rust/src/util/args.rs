@@ -1,0 +1,116 @@
+//! Minimal CLI argument parser (clap is not in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Unknown options are an error; `--help` is handled by the caller via
+//! [`Args::wants_help`].
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit list (testable); `spec` declares option keys
+    /// that take a value — everything else starting with `--` is a flag.
+    pub fn parse_from(argv: &[String], value_opts: &[&str]) -> Result<Args, String> {
+        let mut a = Args::default();
+        a.known = value_opts.iter().map(|s| s.to_string()).collect();
+        let mut it = argv.iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if value_opts.contains(&rest) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("--{rest} expects a value"))?;
+                    a.options.insert(rest.to_string(), v.clone());
+                } else {
+                    a.flags.push(rest.to_string());
+                }
+            } else {
+                a.positional.push(arg.clone());
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn parse(value_opts: &[&str]) -> Result<Args, String> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse_from(&argv, value_opts)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn wants_help(&self) -> bool {
+        self.flag("help") || self.positional.iter().any(|p| p == "help")
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_positional_flags_and_options() {
+        let a = Args::parse_from(
+            &argv(&["train", "--variant", "sage", "--epochs=10", "--verbose"]),
+            &["variant", "epochs"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get("variant"), Some("sage"));
+        assert_eq!(a.get_usize("epochs", 0), 10);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse_from(&argv(&["--variant"]), &["variant"]).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse_from(&argv(&[]), &[]).unwrap();
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_f64("lr", 1e-3), 1e-3);
+    }
+}

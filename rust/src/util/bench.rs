@@ -1,0 +1,131 @@
+//! Criterion-less measurement harness for `cargo bench` (criterion is not
+//! in the offline vendor set).
+//!
+//! Provides warmup + repeated timed runs with mean/std/p50/p99 reporting,
+//! and table-printing helpers used by the paper-reproduction benches so
+//! every bench prints "paper vs ours" rows in a uniform format.
+
+use std::time::Instant;
+
+use crate::util::stats::{mean, quantile};
+
+/// Timing summary over repeated runs of a closure.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub min_s: f64,
+}
+
+impl Timing {
+    pub fn per_sec(&self) -> f64 {
+        if self.mean_s > 0.0 {
+            1.0 / self.mean_s
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Measure `f` with `warmup` unmeasured + `iters` measured runs.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let m = mean(&samples);
+    let var =
+        samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / samples.len() as f64;
+    Timing {
+        iters: samples.len(),
+        mean_s: m,
+        std_s: var.sqrt(),
+        p50_s: quantile(&samples, 0.5),
+        p99_s: quantile(&samples, 0.99),
+        min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+/// Fixed-width table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            println!("{s}");
+        };
+        line(&self.headers);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        line(&sep);
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Standard banner so every paper bench is identifiable in bench_output.txt.
+pub fn banner(id: &str, what: &str) {
+    println!();
+    println!("=== {id} — {what} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_counts_iters() {
+        let t = time_it(1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(t.iters, 5);
+        assert!(t.mean_s >= 0.0 && t.min_s <= t.p99_s);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print(); // must not panic
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,20 @@
+//! Support substrates built from scratch (the offline vendor set has no
+//! serde/clap/criterion/tokio/proptest, so we implement what we need):
+//!
+//! * [`json`] — a complete JSON parser/writer (frontends + manifest + API).
+//! * [`rng`] — splittable PCG32 PRNG with gaussian sampling.
+//! * [`args`] — CLI argument parser used by `main.rs` and the benches.
+//! * [`logging`] — leveled logger (`DIPPM_LOG=debug|info|warn|error`).
+//! * [`stats`] — MAPE / quantiles / Welford accumulators.
+//! * [`threadpool`] — fixed thread pool for the dataset builder + benches.
+//! * [`proptest`] — a miniature property-testing harness with shrinking.
+//! * [`bench`] — a criterion-less measurement harness for `cargo bench`.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

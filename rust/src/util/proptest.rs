@@ -1,0 +1,160 @@
+//! Miniature property-testing harness (the real proptest crate is not in
+//! the offline vendor set).
+//!
+//! A property is a closure over a [`Gen`] (a seeded random source with
+//! convenience generators). `check` runs it for `cases` seeds; on failure it
+//! re-runs with a bisected "size" parameter to find a smaller failing case,
+//! then panics with the seed so the case is exactly reproducible:
+//!
+//! ```ignore
+//! proptest(100, |g| {
+//!     let v = g.vec_usize(0..50, 0..100);
+//!     let mut s = v.clone();
+//!     s.sort_unstable();
+//!     prop_assert!(s.len() == v.len());
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Random-input generator handed to properties. `size` scales collection
+/// bounds during shrinking (1.0 = full size).
+pub struct Gen {
+    pub rng: Rng,
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen {
+            rng: Rng::new(seed),
+            size: 1.0,
+        }
+    }
+
+    fn scaled(&self, n: usize) -> usize {
+        ((n as f64 * self.size).ceil() as usize).max(1)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let hi_scaled = lo + self.scaled(hi.saturating_sub(lo));
+        let hi = hi.min(hi_scaled);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+
+    pub fn vec_usize(&mut self, len_hi: usize, val_hi: usize) -> Vec<usize> {
+        let n = self.usize_in(0, len_hi);
+        (0..n).map(|_| self.usize_in(0, val_hi)).collect()
+    }
+
+    pub fn vec_f64(&mut self, len_hi: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let n = self.usize_in(0, len_hi);
+        (0..n).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    pub fn string(&mut self, len_hi: usize) -> String {
+        let n = self.usize_in(0, len_hi);
+        (0..n)
+            .map(|_| {
+                // Mix of ASCII, escapes-needing and multibyte chars.
+                const POOL: &[char] =
+                    &['a', 'Z', '0', ' ', '"', '\\', '\n', 'é', '✓', '😀', '{', ']'];
+                *self.rng.choose(POOL)
+            })
+            .collect()
+    }
+}
+
+/// Run `property` for `cases` random cases. Panics on the first failure
+/// after attempting size-shrinking, reporting the reproducing seed.
+pub fn proptest<F: Fn(&mut Gen) -> Result<(), String>>(cases: u64, property: F) {
+    let base = std::env::var("DIPPM_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD1B2_u64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = property(&mut g) {
+            // Shrink: retry the same seed with smaller collection sizes.
+            let mut best: Option<(f64, String)> = None;
+            for &size in &[0.05, 0.1, 0.25, 0.5, 0.75] {
+                let mut g = Gen::new(seed);
+                g.size = size;
+                if let Err(m) = property(&mut g) {
+                    best = Some((size, m));
+                    break;
+                }
+            }
+            let (size, m) = best.unwrap_or((1.0, msg));
+            panic!(
+                "property failed (seed={seed}, size={size}): {m}\n\
+                 reproduce with DIPPM_PROPTEST_SEED={seed}"
+            );
+        }
+    }
+}
+
+/// Assertion helpers returning Err instead of panicking so shrinking works.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) { return Err(format!($($fmt)+)); }
+    };
+    ($cond:expr) => {
+        if !($cond) { return Err(format!("assertion failed: {}", stringify!($cond))); }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!("{:?} != {:?}", a, b));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        proptest(50, |g| {
+            let v = g.vec_usize(20, 100);
+            let mut s = v.clone();
+            s.sort_unstable();
+            prop_assert_eq!(s.len(), v.len());
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        proptest(50, |g| {
+            let v = g.vec_usize(20, 100);
+            prop_assert!(v.len() < 3, "len {} >= 3", v.len());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gen_bounds_respected() {
+        let mut g = Gen::new(1);
+        for _ in 0..200 {
+            let x = g.usize_in(3, 9);
+            assert!((3..=9).contains(&x));
+        }
+    }
+}

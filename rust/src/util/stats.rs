@@ -1,0 +1,136 @@
+//! Statistics helpers: MAPE (the paper's metric), Welford accumulators for
+//! normalization stats, and quantiles for the serving benchmarks.
+
+/// Mean Absolute Percentage Error — the paper's accuracy metric (§4.3).
+/// `MAPE = mean(|pred - actual| / |actual|)`; pairs with |actual| < eps are
+/// skipped (they would blow up the metric on near-zero targets).
+pub fn mape(pred: &[f64], actual: &[f64]) -> f64 {
+    assert_eq!(pred.len(), actual.len());
+    let mut sum = 0.0;
+    let mut n = 0usize;
+    for (&p, &a) in pred.iter().zip(actual) {
+        if a.abs() > 1e-9 {
+            sum += ((p - a) / a).abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
+}
+
+/// Online mean/variance (Welford). Used for dataset normalization stats.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Quantile from unsorted data (linear interpolation, like numpy default).
+pub fn quantile(data: &[f64], q: f64) -> f64 {
+    assert!(!data.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    let mut v: Vec<f64> = data.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn mean(data: &[f64]) -> f64 {
+    if data.is_empty() {
+        0.0
+    } else {
+        data.iter().sum::<f64>() / data.len() as f64
+    }
+}
+
+pub fn geomean(data: &[f64]) -> f64 {
+    if data.is_empty() {
+        return 0.0;
+    }
+    (data.iter().map(|x| x.max(1e-12).ln()).sum::<f64>() / data.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mape_basic() {
+        assert!((mape(&[110.0], &[100.0]) - 0.1).abs() < 1e-12);
+        assert_eq!(mape(&[5.0, 5.0], &[5.0, 5.0]), 0.0);
+    }
+
+    #[test]
+    fn mape_skips_zero_targets() {
+        let m = mape(&[1.0, 110.0], &[0.0, 100.0]);
+        assert!((m - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_matches_closed_form() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        let var = xs.iter().map(|x| (x - 5.0) * (x - 5.0)).sum::<f64>() / 7.0;
+        assert!((w.variance() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let d = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&d, 0.0), 1.0);
+        assert_eq!(quantile(&d, 1.0), 4.0);
+        assert!((quantile(&d, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_of_equal_values() {
+        assert!((geomean(&[3.0, 3.0, 3.0]) - 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,228 @@
+//! Property-based tests over the Rust substrates (hermetic: no PJRT),
+//! using the in-repo miniature proptest harness (util::proptest).
+
+use dippm::dataset::split::Splits;
+use dippm::features::encode_graph;
+use dippm::frontends::{self, Framework};
+use dippm::ir::{Attrs, Graph, GraphBuilder, OpKind};
+use dippm::modelgen::{Family, ALL_FAMILIES};
+use dippm::simulator::{MigProfile, Simulator, ALL_PROFILES};
+use dippm::util::json::Json;
+use dippm::util::proptest::{proptest, Gen};
+use dippm::{prop_assert, prop_assert_eq};
+
+/// Generate a random valid conv-net graph.
+fn random_graph(g: &mut Gen) -> Graph {
+    let batch = *g.rng.choose(&[1usize, 2, 4, 8, 16]);
+    let res = *g.rng.choose(&[32usize, 64, 96]);
+    let mut b = GraphBuilder::new("prop", &format!("rand-{}", g.rng.next_u32()), batch);
+    let x = b.input(vec![batch, 3, res, res]);
+    let mut h = b.conv_relu(x, 8 << g.rng.below(3), 3, 1, 1);
+    let layers = g.usize_in(1, 8);
+    let mut skip = h;
+    for i in 0..layers {
+        let ch = b.shape(h)[1];
+        match g.rng.below(5) {
+            0 => h = b.conv_relu(h, ch, 3, 1, 1),
+            1 => h = b.depthwise(h, 3, 1, 1),
+            2 => {
+                if b.shape(skip) == b.shape(h) && skip != h {
+                    h = b.add(OpKind::Add, Attrs::none(), &[h, skip]);
+                } else {
+                    h = b.relu(h);
+                }
+            }
+            3 => h = b.add(OpKind::Concat, Attrs::with_axis(1), &[h, h]),
+            _ => h = b.conv_relu(h, ch, 1, 1, 0),
+        }
+        if i == layers / 2 {
+            skip = h;
+        }
+    }
+    let p = b.add(OpKind::GlobalAvgPool2d, Attrs::none(), &[h]);
+    let f = b.add(OpKind::Flatten, Attrs::none(), &[p]);
+    b.dense(f, 10);
+    b.finish()
+}
+
+#[test]
+fn random_graphs_validate_and_post_order_is_complete() {
+    proptest(60, |g| {
+        let graph = random_graph(g);
+        prop_assert!(graph.validate().is_ok(), "{:?}", graph.validate());
+        let order = graph.post_order();
+        prop_assert_eq!(order.len(), graph.n_nodes());
+        Ok(())
+    });
+}
+
+#[test]
+fn featurization_is_deterministic_and_row_normalized() {
+    proptest(40, |g| {
+        let graph = random_graph(g);
+        let f1 = encode_graph(&graph);
+        let f2 = encode_graph(&graph);
+        prop_assert_eq!(&f1.x, &f2.x);
+        for i in 0..f1.n {
+            let s: f32 = f1.a_hat[i * f1.n..(i + 1) * f1.n].iter().sum();
+            prop_assert!((s - 1.0).abs() < 1e-5, "row {i} sums to {s}");
+        }
+        for &v in &f1.x {
+            prop_assert!(v.is_finite());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn simulator_monotone_in_mig_profile() {
+    proptest(30, |g| {
+        let graph = random_graph(g);
+        let sim = Simulator::new();
+        let mut last_lat = f64::INFINITY;
+        let mut last_mem = 0.0;
+        for &p in &ALL_PROFILES {
+            let lat = sim.latency_s(&graph, p);
+            let mem = sim.memory_mb(&graph, p);
+            prop_assert!(lat <= last_lat * 1.0001, "latency not monotone at {p:?}");
+            prop_assert!(mem >= last_mem, "memory not monotone at {p:?}");
+            prop_assert!(sim.energy_j(&graph, p).is_finite());
+            last_lat = lat;
+            last_mem = mem;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn simulator_latency_monotone_in_batch() {
+    proptest(30, |g| {
+        let res = *g.rng.choose(&[32usize, 64]);
+        let ch = 8 << g.rng.below(3);
+        let layers = g.usize_in(1, 5);
+        let build = |batch: usize| {
+            let mut b = GraphBuilder::new("prop", &format!("b{batch}"), batch);
+            let x = b.input(vec![batch, 3, res, res]);
+            let mut h = x;
+            for _ in 0..layers {
+                h = b.conv_relu(h, ch, 3, 1, 1);
+            }
+            b.finish()
+        };
+        let sim = Simulator::new();
+        let l1 = sim.latency_s(&build(1), MigProfile::G7_40);
+        let l8 = sim.latency_s(&build(8), MigProfile::G7_40);
+        prop_assert!(l8 > l1, "batch 8 ({l8}) not slower than batch 1 ({l1})");
+        Ok(())
+    });
+}
+
+#[test]
+fn frontend_roundtrip_random_graphs() {
+    proptest(25, |g| {
+        let graph = random_graph(g);
+        for fw in [
+            Framework::Native,
+            Framework::PyTorch,
+            Framework::TensorFlow,
+            Framework::Onnx,
+            Framework::Paddle,
+        ] {
+            let text = frontends::export(fw, &graph);
+            let parsed = frontends::parse(fw, &text)
+                .map_err(|e| format!("{fw:?}: {e}"))?;
+            prop_assert!(
+                frontends::structurally_equal(&graph, &parsed),
+                "{fw:?} altered the graph"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn json_roundtrip_random_values() {
+    proptest(80, |g| {
+        // Build a random JSON value, stringify, reparse, compare.
+        fn random_json(g: &mut Gen, depth: usize) -> Json {
+            match if depth > 2 { g.rng.below(4) } else { g.rng.below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(g.bool()),
+                2 => Json::Num((g.rng.int_in(-1_000_000, 1_000_000) as f64) / 64.0),
+                3 => Json::Str(g.string(12)),
+                4 => Json::Arr((0..g.usize_in(0, 5)).map(|_| random_json(g, depth + 1)).collect()),
+                _ => {
+                    let mut o = dippm::util::json::JsonObj::new();
+                    for i in 0..g.usize_in(0, 5) {
+                        o.insert(format!("k{i}_{}", g.string(4)), random_json(g, depth + 1));
+                    }
+                    Json::Obj(o)
+                }
+            }
+        }
+        let v = random_json(g, 0);
+        let compact = Json::parse(&v.to_string()).map_err(|e| e.to_string())?;
+        let pretty = Json::parse(&v.to_string_pretty()).map_err(|e| e.to_string())?;
+        prop_assert_eq!(&v, &compact);
+        prop_assert_eq!(&v, &pretty);
+        Ok(())
+    });
+}
+
+#[test]
+fn splits_always_partition() {
+    proptest(50, |g| {
+        let n = g.usize_in(1, 500);
+        let seed = g.rng.next_u64();
+        let s = Splits::fractions(n, 0.7, 0.15, seed);
+        let mut all: Vec<usize> = s.train.iter().chain(&s.val).chain(&s.test).copied().collect();
+        all.sort_unstable();
+        prop_assert_eq!(all, (0..n).collect::<Vec<_>>());
+        Ok(())
+    });
+}
+
+#[test]
+fn modelgen_samples_validate_across_grids() {
+    proptest(30, |g| {
+        let family = *g.rng.choose(&ALL_FAMILIES);
+        let idx = g.rng.below(family.grid_size() * 2);
+        let graph = family.generate(idx);
+        prop_assert!(graph.validate().is_ok());
+        prop_assert!(graph.n_nodes() <= 160, "{family:?}[{idx}] = {}", graph.n_nodes());
+        // Featurization must accept every generated graph.
+        let f = encode_graph(&graph);
+        prop_assert_eq!(f.n, graph.n_nodes());
+        Ok(())
+    });
+}
+
+#[test]
+fn mig_rule_consistent_with_capacities() {
+    proptest(100, |g| {
+        let mem = g.f64_in(1.0, 60_000.0);
+        match dippm::mig::predict_profile(mem) {
+            Some(p) => {
+                prop_assert!(mem < p.capacity_mb());
+                // It must be the smallest fitting profile.
+                for q in ALL_PROFILES {
+                    if q.capacity_mb() < p.capacity_mb() {
+                        prop_assert!(mem >= q.capacity_mb());
+                    }
+                }
+            }
+            None => prop_assert!(mem >= MigProfile::G7_40.capacity_mb()),
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn family_generate_is_pure() {
+    proptest(20, |g| {
+        let family = *g.rng.choose(&ALL_FAMILIES);
+        let idx = g.rng.below(family.grid_size());
+        prop_assert_eq!(family.generate(idx), family.generate(idx));
+        Ok(())
+    });
+}

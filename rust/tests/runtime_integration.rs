@@ -1,0 +1,165 @@
+//! Integration: the AOT artifacts (python/jax/pallas) load and execute
+//! correctly through the Rust PJRT runtime. Requires `make artifacts`.
+
+use dippm::features::static_features;
+use dippm::modelgen::Family;
+use dippm::runtime::tensor::HostTensor;
+use dippm::runtime::Runtime;
+use dippm::training::BatchBuffers;
+
+fn runtime() -> Runtime {
+    Runtime::new("artifacts").expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_constants_match_feature_generator() {
+    let rt = runtime();
+    let c = rt.manifest.constants;
+    assert_eq!(c.node_feats, dippm::features::node_features::NODE_FEATS);
+    assert_eq!(c.static_feats, 5);
+    assert_eq!(c.targets, 3);
+    assert!(c.max_nodes >= 128);
+}
+
+#[test]
+fn init_params_match_manifest_shapes() {
+    let rt = runtime();
+    for variant in ["sage", "gcn", "gin", "gat", "mlp"] {
+        let params = rt.init_params(variant, 0).unwrap();
+        let info = rt.variant(variant).unwrap();
+        assert_eq!(params.tensors.len(), info.n_params(), "{variant}");
+        for ((name, shape), t) in info.params.iter().zip(&params.tensors) {
+            assert_eq!(&t.shape, shape, "{variant}/{name}");
+            assert!(t.data.iter().all(|v| v.is_finite()), "{variant}/{name}");
+        }
+    }
+}
+
+#[test]
+fn init_is_seed_deterministic_across_calls() {
+    let rt = runtime();
+    let a = rt.init_params("sage", 7).unwrap();
+    let b = rt.init_params("sage", 7).unwrap();
+    let c = rt.init_params("sage", 8).unwrap();
+    for (x, y) in a.tensors.iter().zip(&b.tensors) {
+        assert_eq!(x.data, y.data);
+    }
+    assert!(a
+        .tensors
+        .iter()
+        .zip(&c.tensors)
+        .any(|(x, y)| x.data != y.data));
+}
+
+#[test]
+fn predict_b1_runs_on_generated_graph() {
+    let rt = runtime();
+    let c = rt.manifest.constants;
+    let params = rt.init_params("sage", 0).unwrap();
+    let graph = Family::ResNet.generate(0);
+    let statics = static_features(&graph);
+    let norm = dippm::dataset::NormStats::default();
+    let mut bufs = BatchBuffers::new(&c, 1);
+    bufs.fill_graph(&graph, &statics, &norm, 0).unwrap();
+    let info = rt.variant("sage").unwrap().clone();
+    let art = rt.artifact(info.predict_for(1).unwrap()).unwrap();
+    let mut inputs = params.to_literals().unwrap();
+    inputs.extend(bufs.feature_literals().unwrap());
+    let outs = art.run(&inputs).unwrap();
+    assert_eq!(outs.len(), 1);
+    let y = outs[0].to_vec::<f32>().unwrap();
+    assert_eq!(y.len(), 3);
+    assert!(y.iter().all(|v| v.is_finite()), "{y:?}");
+}
+
+#[test]
+fn predict_is_deterministic_and_padding_invariant() {
+    let rt = runtime();
+    let c = rt.manifest.constants;
+    let params = rt.init_params("sage", 3).unwrap();
+    let graph = Family::Vgg.generate(1);
+    let statics = static_features(&graph);
+    let norm = dippm::dataset::NormStats::default();
+    let info = rt.variant("sage").unwrap().clone();
+    let art = rt.artifact(info.predict_for(1).unwrap()).unwrap();
+
+    let run = |bufs: &BatchBuffers| -> Vec<f32> {
+        let mut inputs = params.to_literals().unwrap();
+        inputs.extend(bufs.feature_literals().unwrap());
+        art.run(&inputs).unwrap()[0].to_vec::<f32>().unwrap()
+    };
+    let mut bufs = BatchBuffers::new(&c, 1);
+    bufs.fill_graph(&graph, &statics, &norm, 0).unwrap();
+    let y1 = run(&bufs);
+    let y2 = run(&bufs);
+    assert_eq!(y1, y2, "predict must be deterministic (no dropout at eval)");
+
+    // Poison the padding region of X beyond the mask: prediction unchanged.
+    let n_nodes = graph.n_nodes();
+    let f = c.node_feats;
+    for i in n_nodes * f..c.max_nodes * f {
+        bufs.x.data[i] = 42.0;
+    }
+    let y3 = run(&bufs);
+    for (a, b) in y1.iter().zip(&y3) {
+        assert!((a - b).abs() < 1e-4, "padding leaked into prediction");
+    }
+}
+
+#[test]
+fn batched_predict_matches_b1() {
+    let rt = runtime();
+    let c = rt.manifest.constants;
+    let params = rt.init_params("sage", 5).unwrap();
+    let norm = dippm::dataset::NormStats::default();
+    let info = rt.variant("sage").unwrap().clone();
+    let art1 = rt.artifact(info.predict_for(1).unwrap()).unwrap();
+    let artb = rt.artifact(info.predict_for(c.batch).unwrap()).unwrap();
+
+    let graphs: Vec<_> = (0..4).map(|i| Family::MobileNet.generate(i)).collect();
+    // Batched run.
+    let mut bb = BatchBuffers::new(&c, c.batch);
+    for (slot, g) in graphs.iter().enumerate() {
+        bb.fill_graph(g, &static_features(g), &norm, slot).unwrap();
+    }
+    for slot in graphs.len()..c.batch {
+        bb.clear_slot(slot);
+    }
+    let mut inputs = params.to_literals().unwrap();
+    inputs.extend(bb.feature_literals().unwrap());
+    let yb = artb.run(&inputs).unwrap()[0].to_vec::<f32>().unwrap();
+    // Individual runs must agree with the batched slots.
+    for (slot, g) in graphs.iter().enumerate() {
+        let mut b1 = BatchBuffers::new(&c, 1);
+        b1.fill_graph(g, &static_features(g), &norm, 0).unwrap();
+        let mut inputs = params.to_literals().unwrap();
+        inputs.extend(b1.feature_literals().unwrap());
+        let y1 = art1.run(&inputs).unwrap()[0].to_vec::<f32>().unwrap();
+        for d in 0..3 {
+            assert!(
+                (y1[d] - yb[slot * 3 + d]).abs() < 1e-3,
+                "slot {slot} dim {d}: {} vs {}",
+                y1[d],
+                yb[slot * 3 + d]
+            );
+        }
+    }
+}
+
+#[test]
+fn literal_roundtrip() {
+    let _rt = runtime(); // ensures the PJRT lib is loaded
+    let t = HostTensor::from_vec(&[2, 3], vec![1.0, -2.0, 3.5, 0.0, 5.0, -6.25]);
+    let lit = t.to_literal().unwrap();
+    let back = HostTensor::from_literal(&lit).unwrap();
+    assert_eq!(t, back);
+}
+
+#[test]
+fn artifact_cache_reuses_compilation() {
+    let rt = runtime();
+    let info = rt.variant("mlp").unwrap().clone();
+    let a1 = rt.artifact(&info.init).unwrap();
+    let a2 = rt.artifact(&info.init).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a1, &a2));
+}

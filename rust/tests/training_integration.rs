@@ -1,0 +1,135 @@
+//! Integration: the full training path — dataset → batches → PJRT train
+//! step (Adam in HLO) → falling loss → MAPE eval → checkpoint round-trip.
+
+use dippm::dataset::Dataset;
+use dippm::runtime::{ParamStore, Runtime};
+use dippm::training::{trainer, TrainConfig, Trainer};
+
+fn runtime() -> Runtime {
+    Runtime::new("artifacts").expect("run `make artifacts` first")
+}
+
+fn tiny_dataset() -> Dataset {
+    // ~105 samples: enough for a couple of batches per epoch.
+    Dataset::build(0.01, 11, 4)
+}
+
+#[test]
+fn loss_decreases_over_epochs() {
+    let rt = runtime();
+    let ds = tiny_dataset();
+    let mut t = Trainer::new(
+        &rt,
+        TrainConfig {
+            epochs: 6,
+            lr: 3e-3,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut logs = Vec::new();
+    for e in 0..6 {
+        logs.push(t.train_epoch(&ds, e).unwrap());
+    }
+    let first = logs.first().unwrap().mean_loss;
+    let last = logs.last().unwrap().mean_loss;
+    assert!(
+        last < first * 0.8,
+        "loss did not fall: {first:.4} -> {last:.4}"
+    );
+}
+
+#[test]
+fn training_improves_mape_and_checkpoint_roundtrips() {
+    let rt = runtime();
+    let ds = tiny_dataset();
+    let mut t = Trainer::new(
+        &rt,
+        TrainConfig {
+            epochs: 10,
+            lr: 3e-3,
+            seed: 1,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let before = t.evaluate(&ds, &ds.splits.val).unwrap();
+    for e in 0..10 {
+        t.train_epoch(&ds, e).unwrap();
+    }
+    let after = t.evaluate(&ds, &ds.splits.val).unwrap();
+    assert!(
+        after.overall() < before.overall(),
+        "val MAPE did not improve: {:.3} -> {:.3}",
+        before.overall(),
+        after.overall()
+    );
+    assert!(after.n == ds.splits.val.len());
+    assert!(after.pairs.iter().all(|(p, a)| p
+        .iter()
+        .chain(a.iter())
+        .all(|v| v.is_finite())));
+
+    // Checkpoint round-trip reproduces evaluation exactly.
+    let path = std::env::temp_dir().join("dippm_train_it_ck.bin");
+    let path = path.to_str().unwrap().to_string();
+    t.params.save(&path).unwrap();
+    let loaded = ParamStore::load(&path).unwrap();
+    let again = trainer::evaluate_params(&rt, &loaded, &ds, &ds.splits.val).unwrap();
+    assert!((again.overall() - after.overall()).abs() < 1e-9);
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn mse_ablation_artifact_trains() {
+    let rt = runtime();
+    let ds = tiny_dataset();
+    let mut t = Trainer::new(
+        &rt,
+        TrainConfig {
+            epochs: 3,
+            lr: 3e-3,
+            mse_loss: true,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let logs: Vec<_> = (0..3).map(|e| t.train_epoch(&ds, e).unwrap()).collect();
+    assert!(logs.last().unwrap().mean_loss < logs[0].mean_loss);
+}
+
+#[test]
+fn all_variants_take_a_training_step() {
+    let rt = runtime();
+    let ds = tiny_dataset();
+    for variant in ["gcn", "gin", "gat", "mlp"] {
+        let mut t = Trainer::new(
+            &rt,
+            TrainConfig {
+                variant: variant.into(),
+                epochs: 1,
+                lr: 1e-3,
+                max_train: Some(32),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let log = t.train_epoch(&ds, 0).unwrap();
+        assert!(log.mean_loss.is_finite(), "{variant} loss NaN");
+        assert!(log.steps >= 1, "{variant} took no steps");
+    }
+}
+
+#[test]
+fn lr_finder_produces_monotone_ramp() {
+    let rt = runtime();
+    let ds = tiny_dataset();
+    let mut t = Trainer::new(&rt, TrainConfig::default()).unwrap();
+    let result = dippm::training::lr_finder::lr_find(&mut t, &ds, 1e-6, 1e-1, 12).unwrap();
+    assert!(result.curve.len() >= 4);
+    assert!(result.suggested > 0.0);
+    // LRs strictly increase along the ramp.
+    for w in result.curve.windows(2) {
+        assert!(w[1].0 > w[0].0);
+    }
+}
