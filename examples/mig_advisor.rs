@@ -13,6 +13,9 @@ use dippm::util::bench::Table;
 
 fn main() {
     let sim = Simulator::new();
+    // Memoizing advisor: repeated advisories for the same architecture
+    // (DSE re-queries) are served from its fingerprint-keyed memo.
+    let advisor = mig::MigAdvisor::new(sim.clone());
     let models = vec![
         ("seen", Family::DenseNet.generate(3)),
         ("seen", Family::DenseNet.generate(100)),
@@ -20,6 +23,8 @@ fn main() {
         ("partially seen", Family::Swin.generate(60)),
         ("seen", Family::Vgg.generate(200)),
         ("seen", Family::EfficientNet.generate(40)),
+        // Deliberate re-query of the first model: a memo hit.
+        ("seen (re-query)", Family::DenseNet.generate(3)),
     ];
 
     for (status, g) in models {
@@ -44,15 +49,14 @@ fn main() {
         t.print();
         // The paper's rule: predict from full-GPU memory (upper bound).
         let full_mem = sim.measure(&g).memory_mb;
-        let rule = mig::predict_profile(full_mem)
-            .map(|p| p.name())
-            .unwrap_or("None");
-        let actual = mig::actual_best_profile(&sim, &g)
-            .map(|p| p.name())
-            .unwrap_or("None");
+        let advice = advisor.advise(&g, Some(full_mem));
+        let rule = advice.predicted.map(|p| p.name()).unwrap_or("None");
+        let actual = advice.table.best.map(|p| p.name()).unwrap_or("None");
         println!(
             "eq.(2) from 7g.40gb memory ({full_mem:.0} MB): {rule}  |  actually best: {actual}  |  {}",
             if rule == actual { "MATCH" } else { "MISS" }
         );
     }
+    let (hits, misses) = advisor.memo_stats();
+    println!("\nadvisor memo: {hits} hits / {misses} misses (re-queries are free)");
 }

@@ -1,7 +1,12 @@
 //! Serving demo: start the coordinator + TCP front end, then hammer it from
 //! multiple client threads sending models in four different framework
-//! formats — showing cross-connection dynamic batching and the JSON-lines
-//! protocol. Prints throughput and batching metrics at the end.
+//! formats — showing cross-connection dynamic batching, the JSON-lines
+//! protocol and the graph-fingerprint prediction cache (clients re-send the
+//! same small model set, so most requests answer from the LRU without
+//! touching the runtime). Prints throughput, batching and cache metrics.
+//!
+//! Uses the PJRT backend when AOT artifacts are built, else the hermetic
+//! simulator backend — the serving stack is identical.
 //!
 //! Run: `cargo run --release --example serve_demo`
 
@@ -13,17 +18,33 @@ use dippm::modelgen::Family;
 use dippm::runtime::Runtime;
 use dippm::util::json::Json;
 
-fn main() -> anyhow::Result<()> {
+fn start_coordinator() -> anyhow::Result<Arc<Coordinator>> {
     // Untrained params keep the demo fast; swap in ParamStore::load(...) for
-    // real predictions (see quickstart / e2e_reproduce).
-    let rt = Runtime::new("artifacts")?;
-    let params = rt.init_params("sage", 0)?;
-    drop(rt);
-    let coord = Arc::new(Coordinator::start(
-        "artifacts",
-        params,
-        CoordinatorOptions::default(),
-    )?);
+    // real predictions (see quickstart / e2e_reproduce). Any PJRT-side
+    // failure (missing artifacts, bad checkpoint, runtime startup) falls
+    // back to the simulator backend — the serving stack is identical.
+    let pjrt = (|| -> anyhow::Result<Coordinator> {
+        let rt = Runtime::new("artifacts")?;
+        let params = rt.init_params("sage", 0)?;
+        drop(rt);
+        Coordinator::start("artifacts", params, CoordinatorOptions::default())
+    })();
+    match pjrt {
+        Ok(coord) => {
+            println!("backend: pjrt (artifacts found)");
+            Ok(Arc::new(coord))
+        }
+        Err(e) => {
+            println!("backend: simulator ({e:#})");
+            Ok(Arc::new(Coordinator::start_sim(
+                CoordinatorOptions::default(),
+            )?))
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let coord = start_coordinator()?;
 
     let (port_tx, port_rx) = std::sync::mpsc::channel();
     {
@@ -52,7 +73,9 @@ fn main() -> anyhow::Result<()> {
             let mut client = tcp::Client::connect(&format!("127.0.0.1:{port}")).unwrap();
             let mut ok = 0;
             for i in 0..per_client {
-                let g = family.generate(i);
+                // Cycle a small variant set: repeats hit the fingerprint
+                // cache no matter which framework format carried them.
+                let g = family.generate(i % 3);
                 let model = frontends::export(fw, &g);
                 let compact = Json::parse(&model).unwrap().to_string();
                 let line =
@@ -92,5 +115,17 @@ fn main() -> anyhow::Result<()> {
         m.mean_batch_fill(),
         m.errors
     );
+    println!(
+        "cache: {} hits / {} misses ({:.0}% hit rate), {} coalesced, {} entries",
+        m.cache_hits,
+        m.cache_misses,
+        100.0 * m.cache_hit_rate(),
+        m.coalesced,
+        m.cache_entries
+    );
+
+    // The cache_stats admin command reports the same counters over TCP.
+    let mut client = tcp::Client::connect(&format!("127.0.0.1:{port}"))?;
+    println!("cache_stats -> {}", client.cache_stats()?);
     Ok(())
 }

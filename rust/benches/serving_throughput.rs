@@ -1,28 +1,92 @@
 //! Serving performance (L3 hot path): closed-loop load against the
-//! coordinator — throughput, p50/p99 end-to-end latency, batch fill — for
-//! single-client (b=1 fast path) vs many-client (dynamic batching) loads.
-//! This is the §Perf L3 measurement recorded in EXPERIMENTS.md.
+//! coordinator — throughput, p50/p99 end-to-end latency, cache hit rate —
+//! across three workload shapes, each with the prediction cache on and off:
+//!
+//! * **hot**  — 100% repeat: every client re-submits the same graph (the
+//!   DSE/NAS "query storm" the fingerprint cache exists for).
+//! * **cold** — 0% repeat: every request is a distinct architecture (worst
+//!   case; measures the cache's overhead on misses).
+//! * **zipf** — Zipf(α=1.1) over a 64-graph pool (the long-tailed but
+//!   repetitive population of PerfSAGE-style arbitrary-model serving).
+//!
+//! Uses the PJRT backend when artifacts are built, else the simulator
+//! backend — the coordinator stack under test is identical.
+//!
+//! Scale knobs: DIPPM_BENCH_REQS (per client), DIPPM_BENCH_CLIENTS, FULL=1.
 
 #[path = "common.rs"]
 mod common;
 
 use std::sync::Arc;
+use std::time::Duration;
 
+use dippm::cache::CacheConfig;
 use dippm::coordinator::{Coordinator, CoordinatorOptions};
-use dippm::modelgen::Family;
+use dippm::ir::Graph;
+use dippm::modelgen::ALL_FAMILIES;
 use dippm::runtime::Runtime;
 use dippm::util::bench::{banner, Table};
+use dippm::util::rng::Rng;
 use dippm::util::stats::quantile;
 
-fn run_load(coord: &Arc<Coordinator>, clients: usize, per_client: usize) -> (f64, Vec<f64>) {
+/// Distinct architectures by construction: family × grid index.
+fn graph_pool(n: usize) -> Vec<Graph> {
+    (0..n)
+        .map(|i| ALL_FAMILIES[i % ALL_FAMILIES.len()].generate(i / ALL_FAMILIES.len()))
+        .collect()
+}
+
+/// Zipf(alpha) ranks over `pool` items, deterministic in `seed`.
+fn zipf_indices(n_requests: usize, pool: usize, alpha: f64, seed: u64) -> Vec<usize> {
+    let weights: Vec<f64> = (1..=pool).map(|k| (k as f64).powf(-alpha)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut cdf = Vec::with_capacity(pool);
+    let mut acc = 0.0;
+    for w in &weights {
+        acc += w / total;
+        cdf.push(acc);
+    }
+    let mut rng = Rng::new(seed);
+    (0..n_requests)
+        .map(|_| {
+            let u = rng.f64();
+            cdf.iter().position(|&c| u <= c).unwrap_or(pool - 1)
+        })
+        .collect()
+}
+
+fn start(cache_on: bool) -> (Arc<Coordinator>, &'static str) {
+    let opts = CoordinatorOptions {
+        max_wait: Duration::from_millis(1),
+        cache: if cache_on {
+            CacheConfig::default()
+        } else {
+            CacheConfig::disabled()
+        },
+        ..Default::default()
+    };
+    match Runtime::new("artifacts") {
+        Ok(rt) => {
+            let params = rt.init_params("sage", 0).unwrap();
+            drop(rt); // the coordinator builds its own runtime in its executor
+            let coord = Coordinator::start("artifacts", params, opts).unwrap();
+            (Arc::new(coord), "pjrt")
+        }
+        Err(_) => (Arc::new(Coordinator::start_sim(opts).unwrap()), "sim"),
+    }
+}
+
+/// Closed-loop load: each client thread drives its own request schedule.
+fn run_load(coord: &Arc<Coordinator>, schedules: Vec<Vec<Graph>>) -> (f64, Vec<f64>) {
+    let total: usize = schedules.iter().map(Vec::len).sum();
     let t0 = std::time::Instant::now();
-    let handles: Vec<_> = (0..clients)
-        .map(|c| {
+    let handles: Vec<_> = schedules
+        .into_iter()
+        .map(|reqs| {
             let coord = coord.clone();
             std::thread::spawn(move || {
-                let mut lats = Vec::with_capacity(per_client);
-                for i in 0..per_client {
-                    let g = Family::MobileNet.generate((c * per_client + i) % 160);
+                let mut lats = Vec::with_capacity(reqs.len());
+                for g in reqs {
                     let t = std::time::Instant::now();
                     coord.predict(g).unwrap();
                     lats.push(t.elapsed().as_secs_f64());
@@ -36,54 +100,85 @@ fn run_load(coord: &Arc<Coordinator>, clients: usize, per_client: usize) -> (f64
         lats.extend(h.join().unwrap());
     }
     let el = t0.elapsed().as_secs_f64();
-    ((clients * per_client) as f64 / el, lats)
+    (total as f64 / el, lats)
 }
 
 fn main() {
-    banner("Perf/L3", "coordinator serving throughput & latency");
-    let rt = Runtime::new("artifacts").expect("run `make artifacts`");
-    let params = rt.init_params("sage", 0).unwrap();
-    drop(rt);
-    let per_client = common::env_usize("DIPPM_BENCH_REQS", if common::is_full() { 64 } else { 16 });
+    banner("Perf/L3", "serving throughput & latency: cache × workload shape");
+    let per_client =
+        common::env_usize("DIPPM_BENCH_REQS", if common::is_full() { 256 } else { 64 });
+    let clients = common::env_usize("DIPPM_BENCH_CLIENTS", 8);
+    let zipf_pool = 64;
+
+    // Pre-generate workloads (graph construction stays out of the timing).
+    // One shared pool sized to the largest scenario; the warmup graph is
+    // the one index beyond it, so it is outside every workload pool no
+    // matter how the scale knobs are set.
+    let pool_n = (clients * per_client).max(zipf_pool);
+    let mut all = graph_pool(pool_n + 1);
+    let warmup_graph = all.pop().unwrap();
+    let hot_graph = all[0].clone();
+    let mixed_pool = all[..zipf_pool].to_vec();
+    let cold_pool = all;
+
+    let schedule = |scenario: &str, client: usize| -> Vec<Graph> {
+        match scenario {
+            "hot" => vec![hot_graph.clone(); per_client],
+            "cold" => cold_pool
+                [client * per_client..(client + 1) * per_client]
+                .to_vec(),
+            _ => zipf_indices(per_client, zipf_pool, 1.1, 42 + client as u64)
+                .into_iter()
+                .map(|i| mixed_pool[i].clone())
+                .collect(),
+        }
+    };
 
     let mut t = Table::new(&[
-        "load", "req/s", "p50 (ms)", "p99 (ms)", "mean batch fill", "batches",
+        "scenario", "cache", "req/s", "p50 (ms)", "p99 (ms)", "hit rate",
+        "batches", "coalesced",
     ]);
-    for (label, clients, wait_ms) in [
-        ("1 client (b1 fast path)", 1usize, 2u64),
-        ("8 clients", 8, 2),
-        ("32 clients", 32, 2),
-        ("32 clients, no batching wait", 32, 0),
-    ] {
-        let coord = Arc::new(
-            Coordinator::start(
-                "artifacts",
-                {
-                    let rt = Runtime::new("artifacts").unwrap();
-                    rt.init_params("sage", 0).unwrap()
-                },
-                CoordinatorOptions {
-                    max_wait: std::time::Duration::from_millis(wait_ms),
-                    ..Default::default()
-                },
-            )
-            .unwrap(),
-        );
-        // Warmup (compile + first-execute costs out of the measurement).
-        coord.predict(Family::MobileNet.generate(0)).unwrap();
-        let (rps, lats) = run_load(&coord, clients, per_client);
-        let m = coord.metrics();
-        t.row(&[
-            label.into(),
-            format!("{rps:.1}"),
-            format!("{:.2}", 1e3 * quantile(&lats, 0.5)),
-            format!("{:.2}", 1e3 * quantile(&lats, 0.99)),
-            format!("{:.2}", m.mean_batch_fill()),
-            m.batches.to_string(),
-        ]);
+    let mut hot_rps = (0.0, 0.0); // (cache on, cache off)
+    let mut backend = "";
+    for scenario in ["hot", "cold", "zipf"] {
+        for cache_on in [true, false] {
+            let (coord, be) = start(cache_on);
+            backend = be;
+            // Warmup outside the measurement (compile/first-execute costs).
+            coord.predict(warmup_graph.clone()).unwrap();
+            let schedules: Vec<Vec<Graph>> =
+                (0..clients).map(|c| schedule(scenario, c)).collect();
+            let (rps, lats) = run_load(&coord, schedules);
+            let m = coord.metrics();
+            if scenario == "hot" {
+                if cache_on {
+                    hot_rps.0 = rps;
+                } else {
+                    hot_rps.1 = rps;
+                }
+            }
+            t.row(&[
+                scenario.into(),
+                if cache_on { "on" } else { "off" }.into(),
+                format!("{rps:.0}"),
+                format!("{:.3}", 1e3 * quantile(&lats, 0.5)),
+                format!("{:.3}", 1e3 * quantile(&lats, 0.99)),
+                format!("{:.1}%", 100.0 * m.cache_hit_rate()),
+                m.batches.to_string(),
+                m.coalesced.to_string(),
+            ]);
+        }
     }
     t.print();
-    let _ = params;
-    println!("\nnote: batching amortizes the padded-b32 artifact across concurrent");
-    println!("clients; the b1 artifact keeps single-stream latency low.");
+    println!(
+        "\nbackend: {backend}; {clients} clients x {per_client} reqs; zipf pool {zipf_pool}"
+    );
+    if hot_rps.1 > 0.0 {
+        println!(
+            "hot-workload speedup from the prediction cache: {:.1}x (target >= 5x)",
+            hot_rps.0 / hot_rps.1
+        );
+    }
+    println!("note: hot hits bypass the batcher and the runtime entirely;");
+    println!("cold rows bound the fingerprint+LRU overhead on pure misses.");
 }

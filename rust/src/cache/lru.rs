@@ -1,0 +1,257 @@
+//! Slab-backed LRU map with optional TTL — one shard of the prediction
+//! cache. O(1) lookup, insert and eviction: a `HashMap` keys into a slab of
+//! doubly-linked slots ordered by recency (no per-operation allocation once
+//! the slab is warm).
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+const NIL: usize = usize::MAX;
+
+struct Slot<V> {
+    key: u128,
+    value: V,
+    inserted: Instant,
+    prev: usize,
+    next: usize,
+}
+
+/// Outcome of a cache lookup, distinguishing TTL expiry from a plain miss
+/// so the shard owner can count both.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lookup<V> {
+    Hit(V),
+    Expired,
+    Miss,
+}
+
+pub struct Lru<V> {
+    map: HashMap<u128, usize>,
+    slots: Vec<Slot<V>>,
+    free: Vec<usize>,
+    /// Most-recently used slot index.
+    head: usize,
+    /// Least-recently used slot index (eviction candidate).
+    tail: usize,
+    capacity: usize,
+}
+
+impl<V: Clone> Lru<V> {
+    pub fn new(capacity: usize) -> Lru<V> {
+        assert!(capacity >= 1, "LRU capacity must be >= 1");
+        Lru {
+            map: HashMap::with_capacity(capacity.min(1 << 16)),
+            slots: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            capacity,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn detach(&mut self, idx: usize) {
+        let (prev, next) = (self.slots[idx].prev, self.slots[idx].next);
+        if prev != NIL {
+            self.slots[prev].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.slots[next].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+        self.slots[idx].prev = NIL;
+        self.slots[idx].next = NIL;
+    }
+
+    fn attach_front(&mut self, idx: usize) {
+        self.slots[idx].prev = NIL;
+        self.slots[idx].next = self.head;
+        if self.head != NIL {
+            self.slots[self.head].prev = idx;
+        }
+        self.head = idx;
+        if self.tail == NIL {
+            self.tail = idx;
+        }
+    }
+
+    fn remove_slot(&mut self, idx: usize) {
+        self.detach(idx);
+        self.map.remove(&self.slots[idx].key);
+        self.free.push(idx);
+    }
+
+    /// Look up `key`, refreshing recency on a hit. `ttl` of `None` means
+    /// entries never expire; expired entries are removed eagerly.
+    pub fn lookup(&mut self, key: u128, ttl: Option<Duration>, now: Instant) -> Lookup<V> {
+        let Some(&idx) = self.map.get(&key) else {
+            return Lookup::Miss;
+        };
+        if let Some(ttl) = ttl {
+            if now.saturating_duration_since(self.slots[idx].inserted) >= ttl {
+                self.remove_slot(idx);
+                return Lookup::Expired;
+            }
+        }
+        self.detach(idx);
+        self.attach_front(idx);
+        Lookup::Hit(self.slots[idx].value.clone())
+    }
+
+    /// Insert or refresh `key`. Returns the key evicted to make room, if
+    /// any (never the key just inserted).
+    pub fn insert(&mut self, key: u128, value: V, now: Instant) -> Option<u128> {
+        if let Some(&idx) = self.map.get(&key) {
+            self.slots[idx].value = value;
+            self.slots[idx].inserted = now;
+            self.detach(idx);
+            self.attach_front(idx);
+            return None;
+        }
+        let mut evicted = None;
+        if self.map.len() >= self.capacity {
+            let victim = self.tail;
+            debug_assert_ne!(victim, NIL);
+            evicted = Some(self.slots[victim].key);
+            self.remove_slot(victim);
+        }
+        let idx = match self.free.pop() {
+            Some(idx) => {
+                self.slots[idx] = Slot {
+                    key,
+                    value,
+                    inserted: now,
+                    prev: NIL,
+                    next: NIL,
+                };
+                idx
+            }
+            None => {
+                self.slots.push(Slot {
+                    key,
+                    value,
+                    inserted: now,
+                    prev: NIL,
+                    next: NIL,
+                });
+                self.slots.len() - 1
+            }
+        };
+        self.map.insert(key, idx);
+        self.attach_front(idx);
+        evicted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn now() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn hit_miss_basic() {
+        let mut l: Lru<u32> = Lru::new(4);
+        assert_eq!(l.lookup(1, None, now()), Lookup::Miss);
+        l.insert(1, 10, now());
+        assert_eq!(l.lookup(1, None, now()), Lookup::Hit(10));
+        assert_eq!(l.len(), 1);
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut l: Lru<u32> = Lru::new(3);
+        l.insert(1, 10, now());
+        l.insert(2, 20, now());
+        l.insert(3, 30, now());
+        // Touch 1 so 2 becomes the LRU.
+        assert_eq!(l.lookup(1, None, now()), Lookup::Hit(10));
+        let evicted = l.insert(4, 40, now());
+        assert_eq!(evicted, Some(2));
+        assert_eq!(l.lookup(2, None, now()), Lookup::Miss);
+        assert_eq!(l.lookup(1, None, now()), Lookup::Hit(10));
+        assert_eq!(l.lookup(4, None, now()), Lookup::Hit(40));
+        assert_eq!(l.len(), 3);
+    }
+
+    #[test]
+    fn reinsert_refreshes_without_evicting() {
+        let mut l: Lru<u32> = Lru::new(2);
+        l.insert(1, 10, now());
+        l.insert(2, 20, now());
+        assert_eq!(l.insert(1, 11, now()), None);
+        assert_eq!(l.lookup(1, None, now()), Lookup::Hit(11));
+        assert_eq!(l.len(), 2);
+        // 2 is now the LRU.
+        assert_eq!(l.insert(3, 30, now()), Some(2));
+    }
+
+    #[test]
+    fn ttl_expires_entries() {
+        let mut l: Lru<u32> = Lru::new(4);
+        l.insert(1, 10, now());
+        // Zero TTL: everything is instantly stale.
+        assert_eq!(l.lookup(1, Some(Duration::ZERO), now()), Lookup::Expired);
+        // The expired entry was removed eagerly.
+        assert_eq!(l.lookup(1, None, now()), Lookup::Miss);
+        assert_eq!(l.len(), 0);
+        // A generous TTL keeps the entry alive.
+        l.insert(2, 20, now());
+        assert_eq!(
+            l.lookup(2, Some(Duration::from_secs(3600)), now()),
+            Lookup::Hit(20)
+        );
+    }
+
+    #[test]
+    fn capacity_one_works() {
+        let mut l: Lru<u32> = Lru::new(1);
+        l.insert(1, 10, now());
+        assert_eq!(l.insert(2, 20, now()), Some(1));
+        assert_eq!(l.lookup(1, None, now()), Lookup::Miss);
+        assert_eq!(l.lookup(2, None, now()), Lookup::Hit(20));
+    }
+
+    #[test]
+    fn slab_reuses_freed_slots() {
+        let mut l: Lru<u32> = Lru::new(2);
+        for k in 0..100u128 {
+            l.insert(k, k as u32, now());
+        }
+        assert_eq!(l.len(), 2);
+        // Slab never grows past capacity + the transient insert.
+        assert!(l.slots.len() <= 3, "slab grew to {}", l.slots.len());
+    }
+
+    #[test]
+    fn many_keys_consistent() {
+        let mut l: Lru<u64> = Lru::new(64);
+        for k in 0..1000u128 {
+            l.insert(k, k as u64, now());
+        }
+        assert_eq!(l.len(), 64);
+        // The survivors are exactly the 64 most recent keys.
+        for k in 936..1000u128 {
+            assert_eq!(l.lookup(k, None, now()), Lookup::Hit(k as u64), "{k}");
+        }
+        for k in 0..936u128 {
+            assert_eq!(l.lookup(k, None, now()), Lookup::Miss);
+        }
+    }
+}

@@ -1,0 +1,272 @@
+//! Graph-fingerprint prediction cache — the serving-path subsystem that
+//! makes repeated predictions free.
+//!
+//! DIPPM's workloads (design-space exploration, NAS sweeps, §DSE of the
+//! paper) re-query near-identical graphs thousands of times. This module
+//! keeps every answered prediction behind a canonical structural key:
+//!
+//! * [`fingerprint`] — deterministic 128-bit structural hashes, invariant
+//!   to node numbering and naming ([`Fingerprint`]).
+//! * [`lru`] — a slab-backed O(1) LRU with TTL, used per shard.
+//! * [`ShardedLruCache`] — N mutex-sharded LRUs with hit/miss/eviction
+//!   counters, keyed by fingerprint.
+//! * [`singleflight`] — coalesces concurrent identical submissions onto
+//!   one in-flight batch slot ([`SingleFlight`]).
+//!
+//! The coordinator consults the cache before enqueueing (hit → reply
+//! without touching the batcher or the runtime) and publishes results back
+//! through it; see `coordinator::server`.
+
+pub mod fingerprint;
+pub mod lru;
+pub mod singleflight;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+pub use fingerprint::Fingerprint;
+pub use singleflight::{Role, SingleFlight, Waiter};
+
+use lru::{Lookup, Lru};
+
+/// Prediction-cache knobs (threaded through `CoordinatorOptions` and the
+/// `dippm serve` CLI).
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    /// Master switch: `false` disables fingerprinting, caching and
+    /// single-flight dedup entirely (the pre-cache serving path).
+    pub enabled: bool,
+    /// Total entries across all shards.
+    pub capacity: usize,
+    /// Number of mutex-sharded LRU maps (rounded up to at least 1).
+    pub shards: usize,
+    /// Entry time-to-live; `None` = never expires.
+    pub ttl: Option<Duration>,
+    /// Coalesce concurrent identical submissions (single-flight dedup).
+    pub single_flight: bool,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            enabled: true,
+            capacity: 8192,
+            shards: 8,
+            ttl: None,
+            single_flight: true,
+        }
+    }
+}
+
+impl CacheConfig {
+    /// A config with the whole subsystem off.
+    pub fn disabled() -> CacheConfig {
+        CacheConfig {
+            enabled: false,
+            ..Default::default()
+        }
+    }
+}
+
+/// Counter snapshot (folded into the coordinator's `Metrics`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    pub expirations: u64,
+    pub entries: u64,
+    pub capacity: u64,
+}
+
+impl CacheStats {
+    /// Hit rate over all lookups (0 when nothing was looked up).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// N mutex-sharded LRU maps keyed by [`Fingerprint`]. Lock scope is one
+/// shard per operation; counters are lock-free atomics shared across
+/// shards.
+pub struct ShardedLruCache<V: Clone> {
+    shards: Vec<Mutex<Lru<V>>>,
+    ttl: Option<Duration>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    insertions: AtomicU64,
+    evictions: AtomicU64,
+    expirations: AtomicU64,
+    capacity: usize,
+}
+
+impl<V: Clone> ShardedLruCache<V> {
+    pub fn new(config: &CacheConfig) -> ShardedLruCache<V> {
+        let n = config.shards.max(1);
+        let per_shard = (config.capacity / n).max(1);
+        ShardedLruCache {
+            shards: (0..n).map(|_| Mutex::new(Lru::new(per_shard))).collect(),
+            ttl: config.ttl,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            expirations: AtomicU64::new(0),
+            capacity: per_shard * n,
+        }
+    }
+
+    fn shard(&self, key: u128) -> &Mutex<Lru<V>> {
+        // High bits: the fingerprint is uniformly mixed, any slice works.
+        let idx = ((key >> 64) as u64 % self.shards.len() as u64) as usize;
+        &self.shards[idx]
+    }
+
+    pub fn get(&self, fp: Fingerprint) -> Option<V> {
+        let key = fp.as_u128();
+        let outcome = self
+            .shard(key)
+            .lock()
+            .unwrap()
+            .lookup(key, self.ttl, Instant::now());
+        match outcome {
+            Lookup::Hit(v) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(v)
+            }
+            Lookup::Expired => {
+                self.expirations.fetch_add(1, Ordering::Relaxed);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+            Lookup::Miss => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    pub fn insert(&self, fp: Fingerprint, value: V) {
+        let key = fp.as_u128();
+        let evicted = self.shard(key).lock().unwrap().insert(key, value, Instant::now());
+        self.insertions.fetch_add(1, Ordering::Relaxed);
+        if evicted.is_some() {
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            insertions: self.insertions.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            expirations: self.expirations.load(Ordering::Relaxed),
+            entries: self.len() as u64,
+            capacity: self.capacity as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Attrs, GraphBuilder, OpKind};
+
+    fn graph(ch: usize) -> crate::ir::Graph {
+        let mut b = GraphBuilder::new("t", "cache-test", 1);
+        let x = b.input(vec![1, 3, 8, 8]);
+        let c = b.conv_relu(x, ch, 3, 1, 1);
+        b.add(OpKind::GlobalAvgPool2d, Attrs::none(), &[c]);
+        b.finish()
+    }
+
+    #[test]
+    fn get_insert_roundtrip_with_stats() {
+        let cache: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig::default());
+        let fp = Fingerprint::of_graph(&graph(8));
+        assert_eq!(cache.get(fp), None);
+        cache.insert(fp, 7);
+        assert_eq!(cache.get(fp), Some(7));
+        let s = cache.stats();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.insertions, 1);
+        assert_eq!(s.entries, 1);
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn capacity_bounds_total_entries() {
+        let cache: ShardedLruCache<usize> = ShardedLruCache::new(&CacheConfig {
+            capacity: 16,
+            shards: 4,
+            ..Default::default()
+        });
+        for ch in 0..200 {
+            cache.insert(Fingerprint::of_graph(&graph(ch + 1)), ch);
+        }
+        assert!(cache.len() <= 16, "len {}", cache.len());
+        let s = cache.stats();
+        assert!(s.evictions > 0);
+        assert_eq!(s.insertions, 200);
+    }
+
+    #[test]
+    fn ttl_zero_expires_everything() {
+        let cache: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig {
+            ttl: Some(Duration::ZERO),
+            ..Default::default()
+        });
+        let fp = Fingerprint::of_graph(&graph(8));
+        cache.insert(fp, 1);
+        assert_eq!(cache.get(fp), None);
+        let s = cache.stats();
+        assert_eq!(s.expirations, 1);
+        assert_eq!(s.entries, 0);
+    }
+
+    #[test]
+    fn distinct_graphs_do_not_collide() {
+        let cache: ShardedLruCache<usize> = ShardedLruCache::new(&CacheConfig::default());
+        for ch in 1..65 {
+            cache.insert(Fingerprint::of_graph(&graph(ch)), ch);
+        }
+        for ch in 1..65 {
+            assert_eq!(cache.get(Fingerprint::of_graph(&graph(ch))), Some(ch));
+        }
+    }
+
+    #[test]
+    fn shards_round_capacity_sanely() {
+        let cache: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig {
+            capacity: 10,
+            shards: 4,
+            ..Default::default()
+        });
+        // 4 shards of 2 entries each.
+        assert_eq!(cache.stats().capacity, 8);
+    }
+
+    #[test]
+    fn disabled_config_constructor() {
+        let c = CacheConfig::disabled();
+        assert!(!c.enabled);
+        assert!(c.single_flight);
+    }
+}

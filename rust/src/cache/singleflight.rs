@@ -1,0 +1,138 @@
+//! Single-flight deduplication: concurrent submissions of the same graph
+//! fingerprint coalesce onto one in-flight batch slot. The first submitter
+//! (the *leader*) enqueues a real job; everyone else (*followers*) parks a
+//! reply sender here and is woken when the leader's result lands. A
+//! thundering herd of identical models costs exactly one GNN inference.
+
+use std::collections::HashMap;
+use std::sync::mpsc::Sender;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// A parked follower: where to send the result + when it arrived (for
+/// latency accounting).
+pub struct Waiter<T> {
+    pub reply: Sender<anyhow::Result<T>>,
+    pub enqueued: Instant,
+}
+
+/// Outcome of [`SingleFlight::join`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// First submitter for this key: enqueue the real job, then call
+    /// [`SingleFlight::take`] once the result is known.
+    Leader,
+    /// A flight for this key is already pending; the reply sender was
+    /// parked and will be completed by the leader's flight.
+    Follower,
+}
+
+pub struct SingleFlight<T> {
+    inner: Mutex<HashMap<u128, Vec<Waiter<T>>>>,
+}
+
+impl<T> Default for SingleFlight<T> {
+    fn default() -> Self {
+        SingleFlight {
+            inner: Mutex::new(HashMap::new()),
+        }
+    }
+}
+
+impl<T> SingleFlight<T> {
+    pub fn new() -> SingleFlight<T> {
+        SingleFlight::default()
+    }
+
+    /// Join the flight for `key`. The leader's own reply sender is *not*
+    /// stored — the leader keeps it on its job and must later [`take`] the
+    /// followers (or the flight would leak and park followers forever).
+    ///
+    /// [`take`]: SingleFlight::take
+    pub fn join(&self, key: u128, reply: Sender<anyhow::Result<T>>, enqueued: Instant) -> Role {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.get_mut(&key) {
+            Some(waiters) => {
+                waiters.push(Waiter { reply, enqueued });
+                Role::Follower
+            }
+            None => {
+                inner.insert(key, Vec::new());
+                Role::Leader
+            }
+        }
+    }
+
+    /// Close the flight for `key`, returning its parked followers for the
+    /// caller to fan the result out to. Safe to call for a key with no
+    /// flight (returns empty).
+    pub fn take(&self, key: u128) -> Vec<Waiter<T>> {
+        self.inner.lock().unwrap().remove(&key).unwrap_or_default()
+    }
+
+    /// Number of keys currently in flight.
+    pub fn in_flight(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    /// Total parked followers across all flights.
+    pub fn parked(&self) -> usize {
+        self.inner.lock().unwrap().values().map(Vec::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    #[test]
+    fn first_is_leader_rest_follow() {
+        let sf: SingleFlight<u32> = SingleFlight::new();
+        let (tx1, _rx1) = mpsc::channel();
+        let (tx2, rx2) = mpsc::channel();
+        let (tx3, rx3) = mpsc::channel();
+        assert_eq!(sf.join(7, tx1, Instant::now()), Role::Leader);
+        assert_eq!(sf.join(7, tx2, Instant::now()), Role::Follower);
+        assert_eq!(sf.join(7, tx3, Instant::now()), Role::Follower);
+        assert_eq!(sf.in_flight(), 1);
+        assert_eq!(sf.parked(), 2);
+
+        let waiters = sf.take(7);
+        assert_eq!(waiters.len(), 2);
+        for w in waiters {
+            w.reply.send(Ok(42)).unwrap();
+        }
+        assert_eq!(rx2.recv().unwrap().unwrap(), 42);
+        assert_eq!(rx3.recv().unwrap().unwrap(), 42);
+        assert_eq!(sf.in_flight(), 0);
+    }
+
+    #[test]
+    fn distinct_keys_fly_independently() {
+        let sf: SingleFlight<u32> = SingleFlight::new();
+        let (tx, _rx) = mpsc::channel();
+        assert_eq!(sf.join(1, tx.clone(), Instant::now()), Role::Leader);
+        assert_eq!(sf.join(2, tx.clone(), Instant::now()), Role::Leader);
+        assert_eq!(sf.join(1, tx, Instant::now()), Role::Follower);
+        assert_eq!(sf.in_flight(), 2);
+        assert_eq!(sf.take(1).len(), 1);
+        assert_eq!(sf.take(2).len(), 0);
+        assert_eq!(sf.in_flight(), 0);
+    }
+
+    #[test]
+    fn take_without_flight_is_empty() {
+        let sf: SingleFlight<u32> = SingleFlight::new();
+        assert!(sf.take(99).is_empty());
+    }
+
+    #[test]
+    fn key_can_fly_again_after_take() {
+        let sf: SingleFlight<u32> = SingleFlight::new();
+        let (tx, _rx) = mpsc::channel();
+        assert_eq!(sf.join(5, tx.clone(), Instant::now()), Role::Leader);
+        sf.take(5);
+        assert_eq!(sf.join(5, tx, Instant::now()), Role::Leader);
+    }
+}

@@ -1,0 +1,227 @@
+//! Pluggable inference backends for the coordinator executor.
+//!
+//! The executor thread owns exactly one [`Backend`] and drives it with
+//! denormalization already folded in: `predict_raw` returns physical
+//! `[latency_ms, memory_mb, energy_j]` triples. Two implementations:
+//!
+//! * [`PjrtBackend`] — the paper path: featurize into pinned buffers and
+//!   run the AOT-compiled PMGNS predict artifact on the PJRT runtime.
+//! * [`SimBackend`] — the A100 analytical simulator (the dataset's
+//!   ground-truth substrate). Hermetic: no artifacts, no PJRT. Used by
+//!   integration tests, benches and `--backend sim` serving so the full
+//!   coordinator stack (batching, cache, single-flight, TCP) is
+//!   exercisable on any machine.
+
+use anyhow::{anyhow, Result};
+
+use crate::dataset::normalize::NormStats;
+use crate::features::static_features;
+use crate::ir::Graph;
+use crate::runtime::{Artifact, ParamStore, Runtime};
+use crate::simulator::Simulator;
+use crate::training::BatchBuffers;
+
+/// An inference engine the executor can drive. Implementations live on the
+/// executor thread (XLA client handles are not Sync), hence `Send` only.
+pub trait Backend: Send {
+    /// Human-readable backend name for logs.
+    fn name(&self) -> &'static str;
+    /// Largest batch `predict_raw` accepts.
+    fn max_batch(&self) -> usize;
+    /// Predict denormalized `[latency_ms, memory_mb, energy_j]` per graph.
+    /// `graphs.len()` must be in `1..=max_batch()`.
+    fn predict_raw(&mut self, graphs: &[&Graph]) -> Result<Vec<[f64; 3]>>;
+}
+
+/// Deferred backend constructor, invoked *inside* the executor thread
+/// (PJRT clients must be created on the thread that uses them).
+pub type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn Backend>> + Send>;
+
+/// The PJRT/AOT-artifact backend (paper serving path).
+pub struct PjrtBackend {
+    // Keeps the PJRT client (and its artifact cache) alive for the
+    // lifetime of the compiled executables.
+    _runtime: Runtime,
+    art_b1: Option<std::sync::Arc<Artifact>>,
+    art_bn: std::sync::Arc<Artifact>,
+    max_b: usize,
+    param_lits: Vec<xla::Literal>,
+    buffers: BatchBuffers,
+    buffers_b1: BatchBuffers,
+    norm: NormStats,
+}
+
+impl PjrtBackend {
+    /// `artifact_dir` must contain the AOT manifest; `params` is a trained
+    /// checkpoint (its embedded norm stats drive featurization and
+    /// denormalization).
+    pub fn new(artifact_dir: &str, params: ParamStore) -> Result<PjrtBackend> {
+        let runtime = Runtime::new(artifact_dir)?;
+        let info = runtime.variant(&params.variant)?.clone();
+        params.check_against(&info)?;
+        let max_b = info.max_predict_batch();
+        // Pre-compile both fast-path (b=1) and batched artifacts.
+        let art_b1 = info
+            .predict_for(1)
+            .map(|f| runtime.artifact(f))
+            .transpose()?;
+        let art_bn = runtime.artifact(
+            info.predict_for(max_b)
+                .ok_or_else(|| anyhow!("no batched predict artifact"))?,
+        )?;
+        let param_lits = params.to_literals()?;
+        let c = runtime.manifest.constants;
+        Ok(PjrtBackend {
+            buffers: BatchBuffers::new(&c, max_b),
+            buffers_b1: BatchBuffers::new(&c, 1),
+            _runtime: runtime,
+            art_b1,
+            art_bn,
+            max_b,
+            param_lits,
+            norm: params.norm.clone(),
+        })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_b
+    }
+
+    fn predict_raw(&mut self, graphs: &[&Graph]) -> Result<Vec<[f64; 3]>> {
+        // b=1 fast path avoids padding the big batch artifact.
+        let (art, bufs, b) = if graphs.len() == 1 && self.art_b1.is_some() {
+            (self.art_b1.as_ref().unwrap(), &mut self.buffers_b1, 1)
+        } else {
+            (&self.art_bn, &mut self.buffers, self.max_b)
+        };
+        if graphs.len() > b {
+            return Err(anyhow!("batch of {} exceeds max {b}", graphs.len()));
+        }
+        for (slot, graph) in graphs.iter().enumerate() {
+            let statics = static_features(graph);
+            bufs.fill_graph(graph, &statics, &self.norm, slot)?;
+        }
+        for slot in graphs.len()..b {
+            bufs.clear_slot(slot);
+        }
+        let mut inputs: Vec<xla::Literal> = self.param_lits.to_vec();
+        inputs.extend(bufs.feature_literals()?);
+        let outs = art.run(&inputs)?;
+        let yhat = outs
+            .first()
+            .ok_or_else(|| anyhow!("predict returned nothing"))?
+            .to_vec::<f32>()?;
+        Ok((0..graphs.len())
+            .map(|slot| {
+                let normed: [f32; 3] = std::array::from_fn(|d| yhat[slot * 3 + d]);
+                self.norm.denorm_target(normed)
+            })
+            .collect())
+    }
+}
+
+/// The analytical-simulator backend: deterministic ground-truth triples,
+/// no artifacts required. Enforces the same `max_nodes` contract as the
+/// AOT padding so oversized graphs fail identically on both backends.
+pub struct SimBackend {
+    sim: Simulator,
+    max_nodes: usize,
+    max_batch: usize,
+}
+
+impl Default for SimBackend {
+    fn default() -> Self {
+        SimBackend {
+            sim: Simulator::new(),
+            // Mirrors the AOT manifest constants (max_nodes=160, b=32).
+            max_nodes: 160,
+            max_batch: 32,
+        }
+    }
+}
+
+impl SimBackend {
+    pub fn new() -> SimBackend {
+        SimBackend::default()
+    }
+
+    /// A factory for [`crate::coordinator::Coordinator::start_with_backend`].
+    pub fn factory() -> BackendFactory {
+        Box::new(|| Ok(Box::new(SimBackend::new()) as Box<dyn Backend>))
+    }
+}
+
+impl Backend for SimBackend {
+    fn name(&self) -> &'static str {
+        "simulator"
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn predict_raw(&mut self, graphs: &[&Graph]) -> Result<Vec<[f64; 3]>> {
+        graphs
+            .iter()
+            .map(|graph| {
+                if graph.n_nodes() > self.max_nodes {
+                    return Err(anyhow!(
+                        "graph {} has {} nodes > max_nodes {}",
+                        graph.variant,
+                        graph.n_nodes(),
+                        self.max_nodes
+                    ));
+                }
+                let m = self.sim.measure(graph);
+                Ok([m.latency_ms, m.memory_mb, m.energy_j])
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelgen::Family;
+
+    #[test]
+    fn sim_backend_predicts_deterministically() {
+        let mut b = SimBackend::new();
+        let g = Family::ResNet.generate(1);
+        let a = b.predict_raw(&[&g]).unwrap();
+        let c = b.predict_raw(&[&g]).unwrap();
+        assert_eq!(a, c);
+        assert!(a[0][0] > 0.0 && a[0][1] > 0.0 && a[0][2] > 0.0);
+    }
+
+    #[test]
+    fn sim_backend_batches() {
+        let mut b = SimBackend::new();
+        let g1 = Family::MobileNet.generate(0);
+        let g2 = Family::Vgg.generate(0);
+        let out = b.predict_raw(&[&g1, &g2]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_ne!(out[0], out[1]);
+    }
+
+    #[test]
+    fn sim_backend_rejects_oversize() {
+        use crate::ir::GraphBuilder;
+        let mut bld = GraphBuilder::new("t", "too-big", 1);
+        let x = bld.input(vec![1, 8, 16, 16]);
+        let mut h = x;
+        for _ in 0..220 {
+            h = bld.conv_relu(h, 8, 3, 1, 1);
+        }
+        let g = bld.finish();
+        let mut b = SimBackend::new();
+        let err = b.predict_raw(&[&g]).unwrap_err();
+        assert!(format!("{err:#}").contains("max_nodes"));
+    }
+}

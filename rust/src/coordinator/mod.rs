@@ -3,15 +3,24 @@
 //! as a service (the paper's Fig. 5 usability story, minus Python).
 //!
 //! Architecture: callers (CLI, TCP handler threads, benches) submit graphs
-//! through an mpsc channel; a single executor thread owns the PJRT runtime
-//! (XLA client handles are not Sync), drains the queue with a
+//! through an mpsc channel; a single executor thread owns the inference
+//! backend (XLA client handles are not Sync), drains the queue with a
 //! size-or-deadline batching policy, featurizes into pre-allocated buffers,
 //! executes the right shape-specialized artifact (b=1 fast path vs padded
 //! b=B), denormalizes, applies the MIG rule (eq. 2) and replies.
+//!
+//! In front of the queue sits the graph-fingerprint prediction cache
+//! (`crate::cache`): repeated graphs answer from a sharded LRU without
+//! touching the batcher, and concurrent identical submissions coalesce
+//! onto one in-flight batch slot (single-flight dedup). Backends are
+//! pluggable (`backend::PjrtBackend` for the AOT/PJRT path,
+//! `backend::SimBackend` for the hermetic simulator path).
 
+pub mod backend;
 pub mod protocol;
 pub mod server;
 pub mod tcp;
 
+pub use backend::{Backend, BackendFactory, PjrtBackend, SimBackend};
 pub use protocol::{Prediction, Request};
 pub use server::{Coordinator, CoordinatorOptions, Metrics};

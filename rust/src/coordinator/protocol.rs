@@ -1,9 +1,15 @@
 //! Serving protocol types: JSON-lines request/response (the TCP API) and
 //! the in-process request struct.
+//!
+//! Besides model-prediction requests, the protocol carries admin commands
+//! as `{"cmd": "..."}` lines; `cache_stats` reports the prediction cache's
+//! hit/miss/eviction counters and the batcher's fill metrics.
 
 use crate::frontends::{self, Framework};
 use crate::ir::Graph;
 use crate::util::json::{Json, JsonObj};
+
+use super::server::Metrics;
 
 /// An in-process prediction request.
 #[derive(Debug)]
@@ -42,6 +48,12 @@ impl Prediction {
 /// `framework` is optional (auto-detect).
 pub fn parse_request(line: &str) -> Result<Graph, String> {
     let v = Json::parse(line).map_err(|e| e.to_string())?;
+    parse_request_value(&v)
+}
+
+/// Same as [`parse_request`] over an already-parsed value (the TCP handler
+/// parses each line exactly once, routing on the presence of `cmd`).
+pub fn parse_request_value(v: &Json) -> Result<Graph, String> {
     let model_text: String = match v.path(&["model"]) {
         Json::Str(s) => s.clone(),
         Json::Obj(_) => v.path(&["model"]).to_string(),
@@ -61,6 +73,33 @@ pub fn error_response(msg: &str) -> String {
     let mut o = JsonObj::new();
     o.insert("ok", false);
     o.insert("error", msg);
+    Json::Obj(o).to_string()
+}
+
+/// Extract the admin command of a parsed request, if it is one
+/// (`{"cmd": "cache_stats"}`). Model requests return `None` and flow
+/// through [`parse_request_value`].
+pub fn parse_cmd(v: &Json) -> Option<&str> {
+    v.path(&["cmd"]).as_str()
+}
+
+/// Serialize the `cache_stats` response from a metrics snapshot.
+pub fn cache_stats_response(m: &Metrics) -> String {
+    let mut o = JsonObj::new();
+    o.insert("ok", true);
+    o.insert("cache_enabled", m.cache_enabled);
+    o.insert("hits", m.cache_hits as usize);
+    o.insert("misses", m.cache_misses as usize);
+    o.insert("hit_rate", m.cache_hit_rate());
+    o.insert("coalesced", m.coalesced as usize);
+    o.insert("insertions", m.cache_insertions as usize);
+    o.insert("evictions", m.cache_evictions as usize);
+    o.insert("expirations", m.cache_expirations as usize);
+    o.insert("entries", m.cache_entries as usize);
+    o.insert("capacity", m.cache_capacity as usize);
+    o.insert("requests", m.requests as usize);
+    o.insert("batches", m.batches as usize);
+    o.insert("mean_batch_fill", m.mean_batch_fill());
     Json::Obj(o).to_string()
 }
 
@@ -94,6 +133,34 @@ mod tests {
         assert!(parse_request("not json").is_err());
         assert!(parse_request("{}").is_err());
         assert!(parse_request(r#"{"framework":"mxnet","model":"x"}"#).is_err());
+    }
+
+    #[test]
+    fn cmd_lines_are_recognized() {
+        let cmd = Json::parse(r#"{"cmd":"cache_stats"}"#).unwrap();
+        assert_eq!(parse_cmd(&cmd), Some("cache_stats"));
+        let model = Json::parse(r#"{"model": {}}"#).unwrap();
+        assert_eq!(parse_cmd(&model), None);
+    }
+
+    #[test]
+    fn cache_stats_serializes() {
+        let m = crate::coordinator::Metrics {
+            requests: 10,
+            batches: 2,
+            cache_enabled: true,
+            cache_hits: 6,
+            cache_misses: 4,
+            coalesced: 1,
+            ..Default::default()
+        };
+        let s = cache_stats_response(&m);
+        let v = Json::parse(&s).unwrap();
+        assert_eq!(v.path(&["ok"]).as_bool(), Some(true));
+        assert_eq!(v.path(&["hits"]).as_usize(), Some(6));
+        assert_eq!(v.path(&["misses"]).as_usize(), Some(4));
+        assert!((v.path(&["hit_rate"]).as_f64().unwrap() - 0.6).abs() < 1e-9);
+        assert_eq!(v.path(&["coalesced"]).as_usize(), Some(1));
     }
 
     #[test]

@@ -1,7 +1,20 @@
 //! The coordinator core: mpsc request queue → executor thread (owns the
-//! PJRT runtime) with a size-or-deadline dynamic batcher.
+//! inference [`Backend`]) with a size-or-deadline dynamic batcher, fronted
+//! by the graph-fingerprint prediction cache.
+//!
+//! Request path:
+//!
+//! 1. `submit` fingerprints the graph (`cache::Fingerprint`) and consults
+//!    the sharded LRU. A hit replies immediately on the caller thread —
+//!    the batcher, the queue and the runtime are never touched.
+//! 2. On a miss, single-flight dedup coalesces concurrent submissions of
+//!    the same fingerprint: one leader enqueues a real job; followers park
+//!    a reply sender and are woken when the leader's batch lands.
+//! 3. The executor drains the queue with the size-or-deadline policy,
+//!    calls the backend once per batch, publishes results into the cache
+//!    and fans each result out to its followers.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -9,22 +22,25 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::features::static_features;
+use crate::cache::{CacheConfig, CacheStats, Fingerprint, Role, ShardedLruCache, SingleFlight};
 use crate::ir::Graph;
 use crate::log_info;
 use crate::mig;
-use crate::runtime::{ParamStore, Runtime};
-use crate::training::BatchBuffers;
+use crate::runtime::ParamStore;
 
+use super::backend::{Backend, BackendFactory, PjrtBackend, SimBackend};
 use super::protocol::Prediction;
 
-/// Batching policy knobs.
+/// Batching + caching policy knobs.
 #[derive(Debug, Clone)]
 pub struct CoordinatorOptions {
     /// Wait at most this long to grow a batch after the first arrival.
     pub max_wait: Duration,
     /// Queue capacity (backpressure: submits block when full).
     pub queue_depth: usize,
+    /// Prediction-cache configuration (`CacheConfig::disabled()` restores
+    /// the pre-cache serving path exactly).
+    pub cache: CacheConfig,
 }
 
 impl Default for CoordinatorOptions {
@@ -32,18 +48,37 @@ impl Default for CoordinatorOptions {
         CoordinatorOptions {
             max_wait: Duration::from_millis(2),
             queue_depth: 1024,
+            cache: CacheConfig::default(),
         }
     }
 }
 
-/// Serving metrics (updated by the executor thread).
+/// Serving metrics. Queue/batch counters are updated by the executor;
+/// request/hit accounting happens on the submit path; cache_* fields are
+/// folded in from the cache's atomics when you call
+/// [`Coordinator::metrics`].
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
+    /// Total submissions (cache hits, coalesced followers and real jobs).
     pub requests: u64,
+    /// Backend invocations (each one executes one batch).
     pub batches: u64,
     pub errors: u64,
     pub batch_fill_sum: u64,
-    /// Per-request end-to-end latencies (seconds), bounded ring.
+    /// Requests answered by a parked single-flight follower.
+    pub coalesced: u64,
+    pub cache_enabled: bool,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_insertions: u64,
+    pub cache_evictions: u64,
+    pub cache_expirations: u64,
+    pub cache_entries: u64,
+    pub cache_capacity: u64,
+    /// End-to-end latencies (seconds) of backend-served requests (leaders
+    /// and coalesced followers), bounded ring. Cache hits are not recorded
+    /// here: the hit path is lock-free by design and its latency is the
+    /// fingerprint hash plus one shard lock (~microseconds).
     pub latencies: Vec<f64>,
 }
 
@@ -55,10 +90,29 @@ impl Metrics {
             self.batch_fill_sum as f64 / self.batches as f64
         }
     }
+
+    /// Cache hit rate over all lookups (0 with the cache disabled).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+}
+
+const LATENCY_RING: usize = 100_000;
+
+fn push_latency(m: &mut Metrics, seconds: f64) {
+    if m.latencies.len() < LATENCY_RING {
+        m.latencies.push(seconds);
+    }
 }
 
 struct Job {
     graph: Graph,
+    fingerprint: Option<Fingerprint>,
     enqueued: Instant,
     reply: Sender<Result<Prediction>>,
 }
@@ -68,31 +122,62 @@ struct Job {
 pub struct Coordinator {
     tx: SyncSender<Job>,
     metrics: Arc<Mutex<Metrics>>,
+    /// Submission counter, kept out of the metrics mutex so the cache-hit
+    /// fast path takes no global lock.
+    requests: AtomicU64,
+    cache: Option<Arc<ShardedLruCache<Prediction>>>,
+    flight: Option<Arc<SingleFlight<Prediction>>>,
     stop: Arc<AtomicBool>,
     handle: Option<JoinHandle<()>>,
 }
 
 impl Coordinator {
-    /// Start the executor. `artifact_dir` must contain the AOT manifest;
-    /// `params` is a trained checkpoint (its embedded norm stats are used
-    /// for featurization and denormalization).
+    /// Start with the PJRT backend. `artifact_dir` must contain the AOT
+    /// manifest; `params` is a trained checkpoint (its embedded norm stats
+    /// are used for featurization and denormalization).
     pub fn start(
         artifact_dir: &str,
         params: ParamStore,
         opts: CoordinatorOptions,
     ) -> Result<Coordinator> {
+        let artifact_dir = artifact_dir.to_string();
+        Self::start_with_backend(
+            Box::new(move || {
+                PjrtBackend::new(&artifact_dir, params).map(|b| Box::new(b) as Box<dyn Backend>)
+            }),
+            opts,
+        )
+    }
+
+    /// Start with the hermetic simulator backend (no artifacts, no PJRT).
+    pub fn start_sim(opts: CoordinatorOptions) -> Result<Coordinator> {
+        Self::start_with_backend(SimBackend::factory(), opts)
+    }
+
+    /// Start with any backend. The factory runs inside the executor thread
+    /// (XLA client handles never cross threads); startup errors propagate.
+    pub fn start_with_backend(
+        factory: BackendFactory,
+        opts: CoordinatorOptions,
+    ) -> Result<Coordinator> {
         let (tx, rx) = mpsc::sync_channel::<Job>(opts.queue_depth);
         let metrics = Arc::new(Mutex::new(Metrics::default()));
         let stop = Arc::new(AtomicBool::new(false));
-        let artifact_dir = artifact_dir.to_string();
+        let cache = opts
+            .cache
+            .enabled
+            .then(|| Arc::new(ShardedLruCache::new(&opts.cache)));
+        let flight = (opts.cache.enabled && opts.cache.single_flight)
+            .then(|| Arc::new(SingleFlight::new()));
         let m2 = metrics.clone();
         let s2 = stop.clone();
-        // The runtime is constructed inside the executor thread: XLA client
-        // handles never cross threads.
+        let c2 = cache.clone();
+        let f2 = flight.clone();
+        let max_wait = opts.max_wait;
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let handle = std::thread::Builder::new()
             .name("dippm-executor".into())
-            .spawn(move || executor_main(&artifact_dir, params, opts, rx, m2, s2, ready_tx))
+            .spawn(move || executor_main(factory, max_wait, rx, m2, c2, f2, s2, ready_tx))
             .expect("spawn executor");
         // Propagate startup errors (bad artifacts, checkpoint mismatch).
         ready_rx
@@ -101,21 +186,50 @@ impl Coordinator {
         Ok(Coordinator {
             tx,
             metrics,
+            requests: AtomicU64::new(0),
+            cache,
+            flight,
             stop,
             handle: Some(handle),
         })
     }
 
-    /// Submit a graph; returns a receiver for the prediction.
+    /// Submit a graph; returns a receiver for the prediction. Cache hits
+    /// reply before this returns; misses enqueue (or coalesce onto an
+    /// identical in-flight submission).
     pub fn submit(&self, graph: Graph) -> Receiver<Result<Prediction>> {
         let (reply, rx) = mpsc::channel();
+        let enqueued = Instant::now();
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let mut fingerprint = None;
+        if let Some(cache) = &self.cache {
+            let fp = Fingerprint::of_graph(&graph);
+            if let Some(pred) = cache.get(fp) {
+                // Lock-free reply: the hit path never touches the metrics
+                // mutex, the queue or the executor.
+                let _ = reply.send(Ok(pred));
+                return rx;
+            }
+            if let Some(flight) = &self.flight {
+                match flight.join(fp.as_u128(), reply.clone(), enqueued) {
+                    Role::Follower => return rx,
+                    Role::Leader => {}
+                }
+            }
+            fingerprint = Some(fp);
+        }
         let job = Job {
             graph,
-            enqueued: Instant::now(),
+            fingerprint,
+            enqueued,
             reply,
         };
         if self.tx.send(job).is_err() {
-            // Executor gone; the receiver will see a disconnect.
+            // Executor gone; every receiver sees a disconnect. Close the
+            // flight so parked followers disconnect too instead of hanging.
+            if let (Some(fp), Some(flight)) = (fingerprint, &self.flight) {
+                drop(flight.take(fp.as_u128()));
+            }
         }
         rx
     }
@@ -127,8 +241,27 @@ impl Coordinator {
             .map_err(|_| anyhow!("coordinator shut down"))?
     }
 
+    /// Snapshot of serving metrics with cache counters folded in.
     pub fn metrics(&self) -> Metrics {
-        self.metrics.lock().unwrap().clone()
+        let mut m = self.metrics.lock().unwrap().clone();
+        m.requests = self.requests.load(Ordering::Relaxed);
+        if let Some(cache) = &self.cache {
+            let s = cache.stats();
+            m.cache_enabled = true;
+            m.cache_hits = s.hits;
+            m.cache_misses = s.misses;
+            m.cache_insertions = s.insertions;
+            m.cache_evictions = s.evictions;
+            m.cache_expirations = s.expirations;
+            m.cache_entries = s.entries;
+            m.cache_capacity = s.capacity;
+        }
+        m
+    }
+
+    /// Raw cache counters (None when the cache is disabled).
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.cache.as_ref().map(|c| c.stats())
     }
 }
 
@@ -148,52 +281,35 @@ impl Drop for Coordinator {
 
 #[allow(clippy::too_many_arguments)]
 fn executor_main(
-    artifact_dir: &str,
-    params: ParamStore,
-    opts: CoordinatorOptions,
+    factory: BackendFactory,
+    max_wait: Duration,
     rx: Receiver<Job>,
     metrics: Arc<Mutex<Metrics>>,
+    cache: Option<Arc<ShardedLruCache<Prediction>>>,
+    flight: Option<Arc<SingleFlight<Prediction>>>,
     stop: Arc<AtomicBool>,
     ready: Sender<Result<()>>,
 ) {
     // --- startup ---------------------------------------------------------
-    let setup = (|| -> Result<_> {
-        let runtime = Runtime::new(artifact_dir)?;
-        let info = runtime.variant(&params.variant)?.clone();
-        params.check_against(&info)?;
-        let max_b = info.max_predict_batch();
-        // Pre-compile both fast-path (b=1) and batched artifacts.
-        let art_b1 = info
-            .predict_for(1)
-            .map(|f| runtime.artifact(f))
-            .transpose()?;
-        let art_bn = runtime.artifact(
-            info.predict_for(max_b)
-                .ok_or_else(|| anyhow!("no batched predict artifact"))?,
-        )?;
-        let param_lits = params.to_literals()?;
-        Ok((runtime, art_b1, art_bn, max_b, param_lits))
-    })();
-    let (runtime, art_b1, art_bn, max_b, param_lits) = match setup {
-        Ok(v) => {
+    let mut backend = match factory() {
+        Ok(b) => {
             let _ = ready.send(Ok(()));
-            v
+            b
         }
         Err(e) => {
             let _ = ready.send(Err(e));
             return;
         }
     };
-    let c = runtime.manifest.constants;
-    let mut buffers = BatchBuffers::new(&c, max_b);
-    let mut buffers_b1 = BatchBuffers::new(&c, 1);
+    let max_b = backend.max_batch().max(1);
     log_info!(
-        "coordinator up: variant={} max_batch={max_b} wait={:?}",
-        params.variant,
-        opts.max_wait
+        "coordinator up: backend={} max_batch={max_b} wait={max_wait:?} cache={} dedup={}",
+        backend.name(),
+        cache.is_some(),
+        flight.is_some()
     );
 
-    // --- serve loop --------------------------------------------------------
+    // --- serve loop ------------------------------------------------------
     while !stop.load(Ordering::SeqCst) {
         // Block for the first job.
         let first = match rx.recv_timeout(Duration::from_millis(50)) {
@@ -203,7 +319,7 @@ fn executor_main(
         };
         // Grow the batch until full or deadline.
         let mut jobs = vec![first];
-        let deadline = Instant::now() + opts.max_wait;
+        let deadline = Instant::now() + max_wait;
         while jobs.len() < max_b {
             let now = Instant::now();
             if now >= deadline {
@@ -215,41 +331,18 @@ fn executor_main(
             }
         }
 
-        // Execute: b=1 fast path avoids padding the big batch artifact.
-        let result: Result<Vec<[f32; 3]>> = (|| {
-            let (art, bufs, b) = if jobs.len() == 1 && art_b1.is_some() {
-                (art_b1.as_ref().unwrap(), &mut buffers_b1, 1)
-            } else {
-                (&art_bn, &mut buffers, max_b)
-            };
-            for (slot, job) in jobs.iter().enumerate() {
-                let statics = static_features(&job.graph);
-                bufs.fill_graph(&job.graph, &statics, &params.norm, slot)?;
-            }
-            for slot in jobs.len()..b {
-                bufs.clear_slot(slot);
-            }
-            let mut inputs: Vec<xla::Literal> =
-                param_lits.iter().map(|l| l.clone()).collect();
-            inputs.extend(bufs.feature_literals()?);
-            let outs = art.run(&inputs)?;
-            let yhat = outs
-                .first()
-                .ok_or_else(|| anyhow!("predict returned nothing"))?
-                .to_vec::<f32>()?;
-            Ok((0..jobs.len())
-                .map(|slot| std::array::from_fn(|d| yhat[slot * 3 + d]))
-                .collect())
-        })();
+        let result = {
+            let graphs: Vec<&Graph> = jobs.iter().map(|j| &j.graph).collect();
+            backend.predict_raw(&graphs)
+        };
 
-        // Reply + metrics.
+        // Publish to cache, wake followers, reply + metrics.
         let mut m = metrics.lock().unwrap();
         m.batches += 1;
         m.batch_fill_sum += jobs.len() as u64;
         match result {
-            Ok(normed) => {
-                for (job, norm) in jobs.into_iter().zip(normed) {
-                    let raw = params.norm.denorm_target(norm);
+            Ok(raws) => {
+                for (job, raw) in jobs.into_iter().zip(raws) {
                     let pred = Prediction {
                         latency_ms: raw[0],
                         memory_mb: raw[1],
@@ -257,10 +350,17 @@ fn executor_main(
                         mig_profile: mig::predict_profile(raw[1])
                             .map(|p| p.name().to_string()),
                     };
-                    m.requests += 1;
-                    if m.latencies.len() < 100_000 {
-                        m.latencies.push(job.enqueued.elapsed().as_secs_f64());
+                    if let (Some(fp), Some(cache)) = (job.fingerprint, &cache) {
+                        cache.insert(fp, pred.clone());
                     }
+                    if let (Some(fp), Some(flight)) = (job.fingerprint, &flight) {
+                        for w in flight.take(fp.as_u128()) {
+                            m.coalesced += 1;
+                            push_latency(&mut m, w.enqueued.elapsed().as_secs_f64());
+                            let _ = w.reply.send(Ok(pred.clone()));
+                        }
+                    }
+                    push_latency(&mut m, job.enqueued.elapsed().as_secs_f64());
                     let _ = job.reply.send(Ok(pred));
                 }
             }
@@ -268,6 +368,12 @@ fn executor_main(
                 let msg = format!("{e:#}");
                 for job in jobs {
                     m.errors += 1;
+                    if let (Some(fp), Some(flight)) = (job.fingerprint, &flight) {
+                        for w in flight.take(fp.as_u128()) {
+                            m.errors += 1;
+                            let _ = w.reply.send(Err(anyhow!("{msg}")));
+                        }
+                    }
                     let _ = job.reply.send(Err(anyhow!("{msg}")));
                 }
             }
@@ -285,6 +391,9 @@ mod tests {
         let o = CoordinatorOptions::default();
         assert!(o.max_wait <= Duration::from_millis(10));
         assert!(o.queue_depth >= 64);
+        assert!(o.cache.enabled);
+        assert!(o.cache.single_flight);
+        assert!(o.cache.capacity >= 1024);
     }
 
     #[test]
@@ -298,6 +407,17 @@ mod tests {
         assert_eq!(Metrics::default().mean_batch_fill(), 0.0);
     }
 
-    // End-to-end coordinator tests (require artifacts + PJRT) live in
-    // rust/tests/coordinator_integration.rs.
+    #[test]
+    fn metrics_hit_rate() {
+        let m = Metrics {
+            cache_hits: 3,
+            cache_misses: 1,
+            ..Default::default()
+        };
+        assert!((m.cache_hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(Metrics::default().cache_hit_rate(), 0.0);
+    }
+
+    // End-to-end coordinator tests (simulator backend, plus PJRT when
+    // artifacts exist) live in rust/tests/coordinator_integration.rs.
 }

@@ -12,8 +12,9 @@ use anyhow::Result;
 use crate::ir::Graph;
 use crate::log_info;
 
-use super::protocol::{error_response, parse_request};
+use super::protocol::{cache_stats_response, error_response, parse_cmd, parse_request_value};
 use super::server::Coordinator;
+use crate::util::json::Json;
 
 /// Serve forever on `addr` (e.g. "127.0.0.1:7401"). Returns the bound port
 /// via the callback (useful with port 0 in tests).
@@ -48,12 +49,20 @@ fn handle_connection(coordinator: &Coordinator, stream: TcpStream) -> Result<()>
         if line.trim().is_empty() {
             continue;
         }
-        let response = match parse_request(&line) {
-            Ok(graph) => match coordinator.predict(graph) {
-                Ok(pred) => pred.to_json().to_string(),
-                Err(e) => error_response(&format!("{e:#}")),
+        // Parse each line exactly once; route on the `cmd` key.
+        let response = match Json::parse(&line) {
+            Err(e) => error_response(&e.to_string()),
+            Ok(v) => match parse_cmd(&v) {
+                Some("cache_stats") => cache_stats_response(&coordinator.metrics()),
+                Some(other) => error_response(&format!("unknown cmd {other:?}")),
+                None => match parse_request_value(&v) {
+                    Ok(graph) => match coordinator.predict(graph) {
+                        Ok(pred) => pred.to_json().to_string(),
+                        Err(e) => error_response(&format!("{e:#}")),
+                    },
+                    Err(e) => error_response(&e),
+                },
             },
-            Err(e) => error_response(&e),
         };
         writer.write_all(response.as_bytes())?;
         writer.write_all(b"\n")?;
@@ -85,6 +94,11 @@ impl Client {
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         Ok(line.trim_end().to_string())
+    }
+
+    /// Query the server's prediction-cache statistics.
+    pub fn cache_stats(&mut self) -> Result<String> {
+        self.roundtrip("{\"cmd\":\"cache_stats\"}")
     }
 
     /// Convenience: predict a graph via its native-format export.

@@ -10,4 +10,4 @@ pub mod node_features;
 pub mod static_features;
 
 pub use node_features::{encode_graph, fill_padded, FeatureConfig, GraphFeatures};
-pub use static_features::{static_features, STATIC_FEATS};
+pub use static_features::{static_feature_bits, static_features, STATIC_FEATS};

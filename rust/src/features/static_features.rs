@@ -27,10 +27,26 @@ pub fn static_features(graph: &Graph) -> [f64; STATIC_FEATS] {
     ]
 }
 
+/// Static features as exact integers for hashing (the cache fingerprint).
+/// Every component of eq. (1) is an integral count (MACs, batch, op
+/// counts), so rounding is exact and — unlike raw f64 bit patterns — the
+/// result cannot depend on summation order.
+pub fn static_feature_bits(statics: &[f64; STATIC_FEATS]) -> [u64; STATIC_FEATS] {
+    std::array::from_fn(|i| statics[i].max(0.0).round() as u64)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::ir::GraphBuilder;
+
+    #[test]
+    fn feature_bits_are_exact_counts() {
+        let bits = static_feature_bits(&[1e9, 8.0, 3.0, 1.0, 2.0]);
+        assert_eq!(bits, [1_000_000_000, 8, 3, 1, 2]);
+        // Negative (impossible, but defensive) clamps to zero.
+        assert_eq!(static_feature_bits(&[-1.0, 0.0, 0.0, 0.0, 0.0])[0], 0);
+    }
 
     #[test]
     fn counts_and_macs() {

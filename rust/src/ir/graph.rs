@@ -4,6 +4,7 @@
 
 use super::infer::{infer_shape, numel, weight_count, Shape};
 use super::op::{Attrs, OpKind};
+use crate::util::rng::splitmix64;
 
 pub type NodeId = usize;
 
@@ -177,6 +178,78 @@ impl Graph {
     /// Count of nodes of a given kind (SFG features, paper eq. 1).
     pub fn count_op(&self, op: OpKind) -> usize {
         self.nodes.iter().filter(|n| n.op == op).count()
+    }
+
+    /// Canonical per-node structural signatures via Weisfeiler–Lehman-style
+    /// color refinement: each node starts from a hash of its semantic
+    /// content (op kind, attributes, output shape — never its id or name)
+    /// and is refined for a few rounds by mixing in its ordered input
+    /// signatures and its sorted consumer signatures.
+    ///
+    /// The result is invariant to node renaming and to any topology-
+    /// preserving relabeling of node ids: isomorphic graphs produce the
+    /// same multiset of signatures. This is the substrate of the serving
+    /// cache's [`crate::cache::Fingerprint`].
+    pub fn canonical_signatures(&self) -> Vec<u64> {
+        fn mix(h: u64, v: u64) -> u64 {
+            splitmix64(h.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ v)
+        }
+        fn local_signature(node: &Node) -> u64 {
+            let mut h = 0xD1B2_C0DE_u64;
+            for &b in node.op.name().as_bytes() {
+                h = mix(h, b as u64);
+            }
+            let a = &node.attrs;
+            let (kh, kw) = a.kernel.map_or((0, 0), |(x, y)| (x + 1, y + 1));
+            let (sh, sw) = a.strides.map_or((0, 0), |(x, y)| (x + 1, y + 1));
+            let units = a.units.map_or(0, |u| u + 1);
+            // Axis is signed; shift into non-negative space deterministically.
+            let axis = a.axis.map_or(0, |x| (x + 64) as u64 + 1);
+            for v in [
+                kh as u64,
+                kw as u64,
+                sh as u64,
+                sw as u64,
+                a.padding as u64,
+                a.groups as u64,
+                units as u64,
+                axis,
+            ] {
+                h = mix(h, v);
+            }
+            h = mix(h, node.out_shape.len() as u64);
+            for &d in &node.out_shape {
+                h = mix(h, d as u64 + 1);
+            }
+            h
+        }
+
+        let n = self.nodes.len();
+        let mut sig: Vec<u64> = self.nodes.iter().map(local_signature).collect();
+        let consumers = self.consumers();
+        // Three rounds propagate context 3 hops in each direction — ample
+        // to separate every practically distinct architecture while staying
+        // O(rounds * edges) on the serving hot path.
+        for round in 0..3u64 {
+            let mut next = vec![0u64; n];
+            for (i, node) in self.nodes.iter().enumerate() {
+                let mut h = mix(sig[i], 0xA11C_E000 ^ round);
+                // Input order is semantic (e.g. concat), so hash it ordered.
+                for &src in &node.inputs {
+                    h = mix(h, sig[src]);
+                }
+                // Consumer ids are labeling-dependent; sort their signatures
+                // so the multiset is what gets hashed.
+                let mut cons: Vec<u64> = consumers[i].iter().map(|&c| sig[c]).collect();
+                cons.sort_unstable();
+                for c in cons {
+                    h = mix(h, c.rotate_left(32));
+                }
+                next[i] = h;
+            }
+            sig = next;
+        }
+        sig
     }
 }
 
@@ -384,6 +457,46 @@ mod tests {
         assert_eq!(g.count_op(OpKind::Relu), 1);
         assert_eq!(g.count_op(OpKind::Dense), 1);
         assert_eq!(g.count_op(OpKind::BatchMatmul), 0);
+    }
+
+    #[test]
+    fn canonical_signatures_ignore_names() {
+        let a = tiny();
+        let mut b = tiny();
+        for (i, n) in b.nodes.iter_mut().enumerate() {
+            n.name = format!("renamed/{i}");
+        }
+        b.family = "other-family".into();
+        b.variant = "other-variant".into();
+        assert_eq!(a.canonical_signatures(), b.canonical_signatures());
+    }
+
+    #[test]
+    fn canonical_signatures_see_attr_changes() {
+        let a = tiny();
+        let mut b = tiny();
+        b.nodes[1].attrs.padding += 1;
+        assert_ne!(a.canonical_signatures(), b.canonical_signatures());
+    }
+
+    #[test]
+    fn canonical_signatures_distinguish_structure() {
+        // Same node multiset, different wiring: add(x, c2) vs add(c1, c2)
+        // is captured by the refinement rounds.
+        let build = |skip_from_input: bool| {
+            let mut b = GraphBuilder::new("t", "wiring", 1);
+            let x = b.input(vec![1, 8, 8, 8]);
+            let c1 = b.conv2d(x, 8, 3, 1, 1);
+            let c2 = b.conv2d(c1, 8, 3, 1, 1);
+            let lhs = if skip_from_input { x } else { c1 };
+            b.add(OpKind::Add, Attrs::none(), &[lhs, c2]);
+            b.finish()
+        };
+        let mut sa = build(true).canonical_signatures();
+        let mut sb = build(false).canonical_signatures();
+        sa.sort_unstable();
+        sb.sort_unstable();
+        assert_ne!(sa, sb);
     }
 
     #[test]

@@ -12,12 +12,15 @@
 //!   frontends, the ten model-family generators, the A100 device simulator
 //!   (ground-truth substrate), featurization (Algorithm 1 + eq. 1), the
 //!   dataset pipeline, the PJRT runtime, the training driver, the serving
-//!   coordinator and the MIG advisor.
+//!   coordinator with its graph-fingerprint prediction cache, and the MIG
+//!   advisor.
 //!
 //! Python never runs on the request path: after `make artifacts` the `dippm`
-//! binary is self-contained. See `DESIGN.md` for the system inventory and
-//! `EXPERIMENTS.md` for paper-vs-measured results.
+//! binary is self-contained. See `rust/README.md` for the three-layer
+//! architecture, the serving-cache subsystem (`cache/`) and how the offline
+//! vendor crates relate to the real PJRT bindings.
 
+pub mod cache;
 pub mod coordinator;
 pub mod dataset;
 pub mod features;

@@ -5,7 +5,9 @@
 //!   train           train a PMGNS variant via the AOT train-step artifact
 //!   evaluate        MAPE of a checkpoint on a dataset split
 //!   predict         predict latency/memory/energy/MIG for a model file
-//!   serve           TCP JSON-lines prediction service
+//!   serve           TCP JSON-lines prediction service (fingerprint cache +
+//!                   single-flight dedup in front of the dynamic batcher)
+//!   cache-stats     query a running server's prediction-cache counters
 //!   mig             MIG-profile advisory table for a model file
 //!   compare-gnn     paper Table 4 (GNN variant comparison)
 //!   lr-find         Smith LR range test (paper Table 3's lr provenance)
@@ -15,6 +17,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
+use dippm::cache::CacheConfig;
 use dippm::coordinator::{Coordinator, CoordinatorOptions};
 use dippm::dataset::{io as ds_io, Dataset};
 use dippm::frontends::{self, Framework};
@@ -38,8 +41,12 @@ COMMANDS
                  [--epochs 10] [--lr 1e-3] [--mse] [--max-train N] [--seed 0]
                  [--artifacts artifacts]
   evaluate       --dataset <file> --checkpoint <file> [--split test|val|train]
-  predict        --model <file> [--framework auto] --checkpoint <file>
-  serve          --checkpoint <file> [--addr 127.0.0.1:7401] [--max-wait-ms 2]
+  predict        --model <file> [--framework auto] [--checkpoint <file>]
+                 [--backend auto|pjrt|sim]
+  serve          [--checkpoint <file>] [--addr 127.0.0.1:7401] [--max-wait-ms 2]
+                 [--backend auto|pjrt|sim] [--no-cache] [--no-dedup]
+                 [--cache-capacity 8192] [--cache-shards 8] [--cache-ttl-s N]
+  cache-stats    [--addr 127.0.0.1:7401]
   mig            --model <file> [--framework auto] [--checkpoint <file>]
   compare-gnn    --dataset <file> [--epochs 10] [--lr 1e-3] [--max-train N]
   lr-find        --dataset <file> [--variant sage] [--steps 60]
@@ -51,6 +58,7 @@ fn main() {
         "out", "fraction", "seed", "workers", "dataset", "checkpoint-out",
         "variant", "epochs", "lr", "max-train", "artifacts", "checkpoint",
         "split", "model", "framework", "addr", "max-wait-ms", "steps",
+        "backend", "cache-capacity", "cache-shards", "cache-ttl-s",
     ]) {
         Ok(a) => a,
         Err(e) => {
@@ -69,6 +77,7 @@ fn main() {
         "evaluate" => cmd_evaluate(&args),
         "predict" => cmd_predict(&args),
         "serve" => cmd_serve(&args),
+        "cache-stats" => cmd_cache_stats(&args),
         "mig" => cmd_mig(&args),
         "compare-gnn" => cmd_compare_gnn(&args),
         "lr-find" => cmd_lr_find(&args),
@@ -83,6 +92,66 @@ fn main() {
 
 fn artifacts_dir(args: &Args) -> String {
     args.get_or("artifacts", "artifacts").to_string()
+}
+
+fn coordinator_options(args: &Args) -> Result<CoordinatorOptions> {
+    let ttl = match args.get("cache-ttl-s") {
+        None => None,
+        Some(v) => {
+            let secs: f64 = v
+                .parse()
+                .map_err(|_| anyhow!("--cache-ttl-s must be a number, got {v:?}"))?;
+            if !secs.is_finite() || secs < 0.0 {
+                return Err(anyhow!("--cache-ttl-s must be >= 0, got {v:?}"));
+            }
+            Some(std::time::Duration::from_secs_f64(secs))
+        }
+    };
+    let cache = CacheConfig {
+        enabled: !args.flag("no-cache"),
+        single_flight: !args.flag("no-dedup"),
+        capacity: args.get_usize("cache-capacity", 8192),
+        shards: args.get_usize("cache-shards", 8),
+        ttl,
+    };
+    Ok(CoordinatorOptions {
+        max_wait: std::time::Duration::from_millis(args.get_u64("max-wait-ms", 2)),
+        cache,
+        ..Default::default()
+    })
+}
+
+/// Start a coordinator per `--backend`: `pjrt` (requires a checkpoint and
+/// built artifacts), `sim` (hermetic), or `auto` (pjrt when a checkpoint is
+/// given and the runtime loads, else the simulator).
+fn start_coordinator(args: &Args, opts: CoordinatorOptions) -> Result<Coordinator> {
+    match args.get_or("backend", "auto") {
+        "sim" => Coordinator::start_sim(opts),
+        "pjrt" => {
+            let ck = args
+                .get("checkpoint")
+                .ok_or(anyhow!("--checkpoint required for --backend pjrt"))?;
+            let params = ParamStore::load(ck)?;
+            Coordinator::start(&artifacts_dir(args), params, opts)
+        }
+        "auto" => {
+            if let Some(ck) = args.get("checkpoint") {
+                let params = ParamStore::load(ck)?;
+                match Coordinator::start(&artifacts_dir(args), params, opts.clone()) {
+                    Ok(c) => Ok(c),
+                    Err(e) => {
+                        eprintln!(
+                            "PJRT backend unavailable ({e:#}); falling back to the simulator backend"
+                        );
+                        Coordinator::start_sim(opts)
+                    }
+                }
+            } else {
+                Coordinator::start_sim(opts)
+            }
+        }
+        other => Err(anyhow!("unknown backend {other:?} (expected pjrt|sim|auto)")),
+    }
 }
 
 fn load_dataset(args: &Args) -> Result<Dataset> {
@@ -200,13 +269,7 @@ fn read_model(args: &Args) -> Result<Graph> {
 
 fn cmd_predict(args: &Args) -> Result<()> {
     let graph = read_model(args)?;
-    let ck = args.get("checkpoint").ok_or(anyhow!("--checkpoint required"))?;
-    let params = ParamStore::load(ck)?;
-    let coord = Coordinator::start(
-        &artifacts_dir(args),
-        params,
-        CoordinatorOptions::default(),
-    )?;
+    let coord = start_coordinator(args, coordinator_options(args)?)?;
     let pred = coord.predict(graph.clone())?;
     println!("model: {} ({} nodes, batch {})", graph.variant, graph.n_nodes(), graph.batch);
     println!("  latency : {:9.3} ms", pred.latency_ms);
@@ -220,38 +283,50 @@ fn cmd_predict(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let ck = args.get("checkpoint").ok_or(anyhow!("--checkpoint required"))?;
-    let params = ParamStore::load(ck)?;
-    let opts = CoordinatorOptions {
-        max_wait: std::time::Duration::from_millis(args.get_u64("max-wait-ms", 2)),
-        ..Default::default()
-    };
-    let coord = Arc::new(Coordinator::start(&artifacts_dir(args), params, opts)?);
+    let opts = coordinator_options(args)?;
+    let coord = Arc::new(start_coordinator(args, opts.clone())?);
     let addr = args.get_or("addr", "127.0.0.1:7401");
-    dippm::coordinator::tcp::serve(coord, addr, |port| {
+    let cache_desc = if opts.cache.enabled {
+        format!(
+            "cache on (capacity {}, {} shards, dedup {})",
+            opts.cache.capacity,
+            opts.cache.shards,
+            if opts.cache.single_flight { "on" } else { "off" }
+        )
+    } else {
+        "cache off".to_string()
+    };
+    dippm::coordinator::tcp::serve(coord, addr, move |port| {
         println!("listening on port {port}; protocol: one JSON request per line");
+        println!("{cache_desc}; query counters with {{\"cmd\":\"cache_stats\"}}");
     })
+}
+
+fn cmd_cache_stats(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7401");
+    let mut client = dippm::coordinator::tcp::Client::connect(addr)?;
+    println!("{}", client.cache_stats()?);
+    Ok(())
 }
 
 fn cmd_mig(args: &Args) -> Result<()> {
     let graph = read_model(args)?;
     let sim = Simulator::new();
+    let advisor = mig::MigAdvisor::new(sim.clone());
     println!("MIG advisory for {} (batch {})", graph.variant, graph.batch);
-    // Predicted side (via checkpoint) if given, else simulator-only table.
-    if let Some(ck) = args.get("checkpoint") {
-        let params = ParamStore::load(ck)?;
-        let coord = Coordinator::start(
-            &artifacts_dir(args),
-            params,
-            CoordinatorOptions::default(),
-        )?;
+    // Predicted side (via checkpoint / simulator backend) if available.
+    let predicted_mem = if args.get("checkpoint").is_some() || args.get("backend").is_some() {
+        let coord = start_coordinator(args, coordinator_options(args)?)?;
         let pred = coord.predict(graph.clone())?;
         println!(
             "predicted memory {:.0} MB -> MIG {}",
             pred.memory_mb,
             pred.mig_profile.as_deref().unwrap_or("None")
         );
-    }
+        Some(pred.memory_mb)
+    } else {
+        None
+    };
     let mut table = Table::new(&["profile", "memory (MB)", "mem/capacity", "latency (ms)"]);
     for p in ALL_PROFILES {
         match sim.measure_mig(&graph, p) {
@@ -270,7 +345,12 @@ fn cmd_mig(args: &Args) -> Result<()> {
         }
     }
     table.print();
-    let best = mig::actual_best_profile(&sim, &graph)
+    // The advisor memoizes the per-profile sweep by graph fingerprint, so
+    // repeated advisories for the same architecture are free.
+    let advice = advisor.advise(&graph, predicted_mem);
+    let best = advice
+        .table
+        .best
         .map(|p| p.name().to_string())
         .unwrap_or_else(|| "None".into());
     println!("actual best profile: {best}");

@@ -1,7 +1,15 @@
 //! MIG Predictor — paper §3.5, eq. (2): rule-based mapping from predicted
 //! memory (an upper bound, since PMGNS predicts for the full 7g.40gb GPU)
-//! to the smallest MIG profile that fits.
+//! to the smallest MIG profile that fits, plus the memoizing
+//! [`MigAdvisor`] that serves full per-profile advisory tables keyed by
+//! graph fingerprint (the table costs one simulator sweep per profile —
+//! worth caching under DSE/NAS query storms).
 
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::cache::Fingerprint;
 use crate::ir::Graph;
 use crate::simulator::{MigProfile, MigResult, Simulator, ALL_PROFILES};
 
@@ -44,6 +52,93 @@ pub fn actual_best_profile(sim: &Simulator, graph: &Graph) -> Option<MigProfile>
         .filter_map(|(p, s)| s.map(|score| (p, score)))
         .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
         .map(|(p, _)| p)
+}
+
+/// A memoized per-profile advisory table for one architecture.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfileTable {
+    /// Per profile: consumption/capacity score, `None` = OOM on that slice.
+    pub scores: Vec<(MigProfile, Option<f64>)>,
+    /// Smallest feasible profile (Table 5 "actual" methodology).
+    pub best: Option<MigProfile>,
+}
+
+/// Advisory result: the eq. (2) rule applied to a *predicted* memory plus
+/// the (memoized) measured table.
+#[derive(Debug, Clone)]
+pub struct Advice {
+    /// Profile suggested from the predicted memory (None = no prediction
+    /// given, or it exceeds the largest profile).
+    pub predicted: Option<MigProfile>,
+    pub table: Arc<ProfileTable>,
+}
+
+/// Memoizing MIG advisor. Computing a [`ProfileTable`] runs the simulator
+/// once per profile; under design-space-exploration query storms the same
+/// architectures recur, so tables are cached by graph fingerprint.
+pub struct MigAdvisor {
+    sim: Simulator,
+    memo: Mutex<HashMap<u128, Arc<ProfileTable>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for MigAdvisor {
+    fn default() -> Self {
+        MigAdvisor::new(Simulator::new())
+    }
+}
+
+impl MigAdvisor {
+    pub fn new(sim: Simulator) -> MigAdvisor {
+        MigAdvisor {
+            sim,
+            memo: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The advisory table for `graph`, memoized by structural fingerprint.
+    pub fn table(&self, graph: &Graph) -> Arc<ProfileTable> {
+        let key = Fingerprint::of_graph(graph).as_u128();
+        if let Some(t) = self.memo.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return t.clone();
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        // Compute outside the lock: a concurrent duplicate sweep is cheaper
+        // than serializing every distinct-table computation.
+        let scores = actual_profile_scores(&self.sim, graph);
+        let best = scores
+            .iter()
+            .filter_map(|&(p, s)| s.map(|score| (p, score)))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(p, _)| p);
+        let table = Arc::new(ProfileTable { scores, best });
+        self.memo
+            .lock()
+            .unwrap()
+            .insert(key, table.clone());
+        table
+    }
+
+    /// Full advice: eq. (2) on the predicted memory (when given) plus the
+    /// memoized measured table.
+    pub fn advise(&self, graph: &Graph, predicted_mem_mb: Option<f64>) -> Advice {
+        Advice {
+            predicted: predicted_mem_mb.and_then(predict_profile),
+            table: self.table(graph),
+        }
+    }
+
+    /// (memo hits, memo misses) — misses equal distinct architectures seen.
+    pub fn memo_stats(&self) -> (u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+        )
+    }
 }
 
 #[cfg(test)]
@@ -93,6 +188,45 @@ mod tests {
         // A batch-128 224px convnet cannot run on the smallest slice.
         assert_ne!(best, Some(MigProfile::G1_5), "mem {:.0} MB",
                    sim.memory_mb(&g, MigProfile::G7_40));
+    }
+
+    #[test]
+    fn advisor_memoizes_by_architecture() {
+        let adv = MigAdvisor::default();
+        let mut b = GraphBuilder::new("t", "memo-a", 1);
+        let x = b.input(vec![1, 3, 64, 64]);
+        b.conv_relu(x, 16, 3, 1, 1);
+        let g = b.finish();
+        let t1 = adv.table(&g);
+        // Same architecture, different names/variant: memo hit.
+        let mut g2 = g.clone();
+        g2.variant = "memo-renamed".into();
+        for n in &mut g2.nodes {
+            n.name = format!("{}-x", n.name);
+        }
+        let t2 = adv.table(&g2);
+        assert!(Arc::ptr_eq(&t1, &t2));
+        assert_eq!(adv.memo_stats(), (1, 1));
+        // A different architecture misses.
+        let mut b = GraphBuilder::new("t", "memo-b", 1);
+        let x = b.input(vec![1, 3, 64, 64]);
+        b.conv_relu(x, 32, 3, 1, 1);
+        adv.table(&b.finish());
+        assert_eq!(adv.memo_stats(), (1, 2));
+    }
+
+    #[test]
+    fn advise_matches_rule_and_table() {
+        let adv = MigAdvisor::default();
+        let mut b = GraphBuilder::new("t", "advise", 1);
+        let x = b.input(vec![1, 3, 64, 64]);
+        b.conv_relu(x, 16, 3, 1, 1);
+        let g = b.finish();
+        let a = adv.advise(&g, Some(2865.0));
+        assert_eq!(a.predicted, Some(MigProfile::G1_5));
+        assert_eq!(a.table.best, actual_best_profile(&Simulator::new(), &g));
+        let none = adv.advise(&g, None);
+        assert_eq!(none.predicted, None);
     }
 
     #[test]

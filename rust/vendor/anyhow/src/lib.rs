@@ -1,0 +1,232 @@
+//! Offline stand-in for the `anyhow` crate, implementing the subset dippm
+//! uses: [`Error`], [`Result`], the [`anyhow!`] macro and the [`Context`]
+//! extension trait. Error values carry a message plus an optional cause
+//! chain; `{}` prints the outermost message and `{:#}` prints the whole
+//! chain separated by `: `, matching real-anyhow formatting closely enough
+//! for tests that grep error text.
+
+use std::fmt;
+
+/// A message-chain error type. Unlike real anyhow this does not box the
+/// original error value — only its rendered message chain — which is all
+/// the dippm code base relies on.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+            cause: None,
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error {
+            msg: context.to_string(),
+            cause: Some(Box::new(self)),
+        }
+    }
+
+    /// The outermost message (without the cause chain).
+    pub fn message(&self) -> &str {
+        &self.msg
+    }
+
+    /// Iterate over the message chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut msgs = vec![self.msg.as_str()];
+        let mut cur = self.cause.as_deref();
+        while let Some(e) = cur {
+            msgs.push(e.msg.as_str());
+            cur = e.cause.as_deref();
+        }
+        msgs.into_iter()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            let mut first = true;
+            for msg in self.chain() {
+                if !first {
+                    f.write_str(": ")?;
+                }
+                f.write_str(msg)?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            f.write_str(&self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        let mut cur = self.cause.as_deref();
+        if cur.is_some() {
+            f.write_str("\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = e.cause.as_deref();
+        }
+        Ok(())
+    }
+}
+
+/// Every std error converts into `Error`, preserving its source chain as
+/// rendered messages. This powers `?` on io/xla results inside functions
+/// returning `anyhow::Result`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msgs: Vec<String> = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for msg in msgs.into_iter().rev() {
+            err = Some(match err {
+                None => Error { msg, cause: None },
+                Some(inner) => Error {
+                    msg,
+                    cause: Some(Box::new(inner)),
+                },
+            });
+        }
+        err.expect("at least one message")
+    }
+}
+
+/// Context-attaching extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert!(format!("{e:#}").contains("missing file"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| "reading config").unwrap_err();
+        assert_eq!(format!("{e:#}"), "reading config: missing file");
+        let o: Option<u32> = None;
+        let e = o.context("value absent").unwrap_err();
+        assert_eq!(format!("{e}"), "value absent");
+    }
+
+    #[test]
+    fn macro_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let n = 3;
+        let b = anyhow!("got {n} items");
+        assert_eq!(b.to_string(), "got 3 items");
+        let c = anyhow!("got {} items", 4);
+        assert_eq!(c.to_string(), "got 4 items");
+        let msg = String::from("from a string");
+        let d = anyhow!(msg);
+        assert_eq!(d.to_string(), "from a string");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("boom {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "boom 7");
+    }
+}

@@ -1,0 +1,277 @@
+//! API-compatible offline stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The dippm runtime layer (`rust/src/runtime/`) is written against the real
+//! bindings; this stub provides the same types and signatures so the crate
+//! builds and tests run on machines without the XLA shared library. Host-side
+//! data plumbing ([`Literal`], [`ArrayShape`], [`ElementType`]) is fully
+//! functional; device execution entry points ([`PjRtClient::cpu`]) return a
+//! descriptive error, which the coordinator surfaces as "use the simulator
+//! backend". Swapping this path dependency for the real crate re-enables the
+//! PJRT path with no source changes.
+
+use std::fmt;
+
+/// Error type mirroring xla-rs (message-only in the stub).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable() -> Error {
+    Error(
+        "PJRT runtime is not available in this offline build (stub xla crate); \
+         use the simulator backend or link the real xla-rs crate"
+            .to_string(),
+    )
+}
+
+/// Element types of literals (subset dippm uses).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    pub fn byte_size(self) -> usize {
+        4
+    }
+}
+
+/// Rust scalar types that map onto an [`ElementType`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn write_le(self, out: &mut Vec<u8>);
+    fn read_le(bytes: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        i32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+/// Dense array shape (dims in elements).
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// A host literal: element type + dims + row-major little-endian bytes.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    /// Rank-0 scalar literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        let mut bytes = Vec::with_capacity(4);
+        v.write_le(&mut bytes);
+        Literal {
+            ty: T::TY,
+            dims: Vec::new(),
+            bytes,
+        }
+    }
+
+    /// Build from a shape and raw untyped bytes (the zero-copy entry point
+    /// of the real bindings; the stub copies).
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let numel: usize = dims.iter().product();
+        if numel * ty.byte_size() != data.len() {
+            return Err(Error(format!(
+                "literal data is {} bytes, shape {dims:?} needs {}",
+                data.len(),
+                numel * ty.byte_size()
+            )));
+        }
+        Ok(Literal {
+            ty,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            bytes: data.to_vec(),
+        })
+    }
+
+    /// Element type; errors on tuple literals in the real bindings (the
+    /// stub has no tuples, so this always succeeds).
+    pub fn ty(&self) -> Result<ElementType> {
+        Ok(self.ty)
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape {
+            dims: self.dims.clone(),
+        })
+    }
+
+    /// Decompose a tuple literal. The stub never produces tuples.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error("stub literals are never tuples".to_string()))
+    }
+
+    /// Read back as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::TY {
+            return Err(Error(format!(
+                "literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        let sz = self.ty.byte_size();
+        Ok(self.bytes.chunks_exact(sz).map(T::read_le).collect())
+    }
+}
+
+/// Parsed HLO module (the stub only retains the source path).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    pub path: String,
+}
+
+impl HloModuleProto {
+    /// Load HLO text. File-existence errors are real; parsing is deferred
+    /// to compile time in the actual bindings and skipped by the stub.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        std::fs::metadata(path)
+            .map_err(|e| Error(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto {
+            path: path.to_string(),
+        })
+    }
+}
+
+/// An XLA computation handle.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    pub path: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            path: proto.path.clone(),
+        }
+    }
+}
+
+/// PJRT client. Device execution is unavailable in the stub: construction
+/// fails with a descriptive error so callers can fall back gracefully.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+/// A compiled executable (unreachable in the stub — clients cannot be
+/// constructed — but the type and signatures must exist).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// A device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let l = Literal::scalar(1.5f32);
+        assert_eq!(l.ty().unwrap(), ElementType::F32);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.5]);
+        let i = Literal::scalar(-7i32);
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![-7]);
+    }
+
+    #[test]
+    fn untyped_roundtrip() {
+        let data: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let l =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 3], &bytes)
+                .unwrap();
+        assert_eq!(l.array_shape().unwrap().dims(), &[2i64, 3][..]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), data);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &[0u8; 8])
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn type_mismatch_rejected() {
+        let l = Literal::scalar(1i32);
+        assert!(l.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("offline"));
+    }
+
+    #[test]
+    fn hlo_text_requires_file() {
+        assert!(HloModuleProto::from_text_file("/nonexistent/x.hlo.txt").is_err());
+    }
+}
