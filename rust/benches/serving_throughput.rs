@@ -13,6 +13,10 @@
 //! backend — the coordinator stack under test is identical.
 //!
 //! Scale knobs: DIPPM_BENCH_REQS (per client), DIPPM_BENCH_CLIENTS, FULL=1.
+//! Set DIPPM_BENCH_JSON=<path> to also write the results as a machine-
+//! readable JSON document (the CI bench-smoke job uploads it as the
+//! `BENCH_serving_throughput.json` artifact, accumulating the perf
+//! trajectory across commits).
 
 #[path = "common.rs"]
 mod common;
@@ -26,6 +30,7 @@ use dippm::ir::Graph;
 use dippm::modelgen::ALL_FAMILIES;
 use dippm::runtime::Runtime;
 use dippm::util::bench::{banner, Table};
+use dippm::util::json::{Json, JsonObj};
 use dippm::util::rng::Rng;
 use dippm::util::stats::quantile;
 
@@ -140,6 +145,7 @@ fn main() {
     ]);
     let mut hot_rps = (0.0, 0.0); // (cache on, cache off)
     let mut backend = "";
+    let mut json_rows: Vec<Json> = Vec::new();
     for scenario in ["hot", "cold", "zipf"] {
         for cache_on in [true, false] {
             let (coord, be) = start(cache_on);
@@ -167,18 +173,42 @@ fn main() {
                 m.batches.to_string(),
                 m.coalesced.to_string(),
             ]);
+            let mut row = JsonObj::new();
+            row.insert("scenario", scenario);
+            row.insert("cache", cache_on);
+            row.insert("req_per_s", rps);
+            row.insert("p50_ms", 1e3 * quantile(&lats, 0.5));
+            row.insert("p99_ms", 1e3 * quantile(&lats, 0.99));
+            row.insert("hit_rate", m.cache_hit_rate());
+            row.insert("batches", m.batches as usize);
+            row.insert("coalesced", m.coalesced as usize);
+            json_rows.push(Json::Obj(row));
         }
     }
     t.print();
     println!(
         "\nbackend: {backend}; {clients} clients x {per_client} reqs; zipf pool {zipf_pool}"
     );
+    let hot_speedup = if hot_rps.1 > 0.0 { hot_rps.0 / hot_rps.1 } else { 0.0 };
     if hot_rps.1 > 0.0 {
         println!(
-            "hot-workload speedup from the prediction cache: {:.1}x (target >= 5x)",
-            hot_rps.0 / hot_rps.1
+            "hot-workload speedup from the prediction cache: {hot_speedup:.1}x (target >= 5x)"
         );
     }
     println!("note: hot hits bypass the batcher and the runtime entirely;");
     println!("cold rows bound the fingerprint+LRU overhead on pure misses.");
+
+    // Machine-readable results for the CI perf trajectory.
+    if let Ok(path) = std::env::var("DIPPM_BENCH_JSON") {
+        let mut doc = JsonObj::new();
+        doc.insert("bench", "serving_throughput");
+        doc.insert("backend", backend);
+        doc.insert("clients", clients);
+        doc.insert("per_client", per_client);
+        doc.insert("zipf_pool", zipf_pool);
+        doc.insert("hot_speedup", hot_speedup);
+        doc.insert("scenarios", Json::Arr(json_rows));
+        std::fs::write(&path, format!("{}\n", Json::Obj(doc))).expect("write DIPPM_BENCH_JSON");
+        println!("wrote {path}");
+    }
 }

@@ -1,0 +1,217 @@
+//! Composite, device-aware cache keys.
+//!
+//! A prediction is only meaningful *for a target configuration*: the same
+//! graph served on a full A100 and on a `2g.10gb` MIG slice has different
+//! latency/memory/energy. [`Target`] names that configuration (device +
+//! optional MIG profile) and [`CacheKey`] folds it into the structural
+//! [`Fingerprint`], so one coordinator can serve a heterogeneous fleet
+//! without key collisions — same graph, two targets, two cache entries.
+//!
+//! Like the fingerprint itself, target bits are derived with the in-repo
+//! splitmix64 only, never `std`'s randomized hasher: composite keys are
+//! stable across runs, processes and machines, which is what makes the
+//! disk snapshots of [`super::persist`] portable between restarts.
+
+use std::fmt;
+
+use crate::ir::Graph;
+use crate::simulator::MigProfile;
+use crate::util::rng::splitmix64;
+
+use super::Fingerprint;
+
+// Independent lane keys; arbitrary odd constants.
+const K_DEVICE: u64 = 0xD1B5_4A32_D192_ED03;
+const K_PROFILE: u64 = 0x9E37_79B9_7F4A_7C15;
+const K_TARGET: u64 = 0x6C62_272E_07BB_0142 | 1;
+
+/// A serving target: device model plus an optional MIG slice.
+///
+/// `profile: None` means the full GPU — the paper's `7g.40gb` measurement
+/// substrate — and `Some(G7_40)` is normalized to `None` at construction
+/// so the two spellings of "the whole A100" share one cache key.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Target {
+    /// Device identifier, lower-cased (e.g. `"a100"`, the only device the
+    /// simulator currently models).
+    pub device: String,
+    /// MIG slice; `None` = the full GPU.
+    pub profile: Option<MigProfile>,
+}
+
+impl Default for Target {
+    fn default() -> Self {
+        Target::new("a100", None)
+    }
+}
+
+impl Target {
+    /// Build a target, normalizing case and the full-GPU profile spelling.
+    pub fn new(device: &str, profile: Option<MigProfile>) -> Target {
+        Target {
+            device: device.to_ascii_lowercase(),
+            profile: profile.filter(|&p| p != MigProfile::G7_40),
+        }
+    }
+
+    /// Parse a `--target-device` / protocol `"target"` string. Accepted
+    /// forms: `"a100"`, `"a100:2g.10gb"`, or a bare MIG profile
+    /// (`"2g.10gb"`, device defaults to `a100`).
+    pub fn parse(s: &str) -> Result<Target, String> {
+        let s = s.trim();
+        if s.is_empty() {
+            return Err("empty target".into());
+        }
+        let (device, profile_name) = match s.split_once(':') {
+            Some((d, p)) => (d, Some(p)),
+            None if MigProfile::from_name(&s.to_ascii_lowercase()).is_some() => ("a100", Some(s)),
+            None => (s, None),
+        };
+        if device.trim().is_empty() {
+            return Err(format!("target {s:?} lacks a device name"));
+        }
+        let profile = match profile_name {
+            None => None,
+            Some(p) => Some(MigProfile::from_name(&p.trim().to_ascii_lowercase()).ok_or_else(
+                || {
+                    format!(
+                        "unknown MIG profile {p:?} (expected 1g.5gb|2g.10gb|3g.20gb|7g.40gb)"
+                    )
+                },
+            )?),
+        };
+        Ok(Target::new(device.trim(), profile))
+    }
+
+    /// The MIG profile this target resolves to on the simulator (full GPU
+    /// when no slice is named).
+    pub fn profile_or_full(&self) -> MigProfile {
+        self.profile.unwrap_or(MigProfile::G7_40)
+    }
+
+    /// Deterministic 64-bit digest of the target (mixed into cache keys).
+    pub fn key_bits(&self) -> u64 {
+        let mut h = K_DEVICE;
+        for &b in self.device.as_bytes() {
+            h = splitmix64(h ^ b as u64);
+        }
+        let p = match self.profile {
+            None => 0,
+            Some(p) => {
+                let mut q = K_PROFILE;
+                for &b in p.name().as_bytes() {
+                    q = splitmix64(q ^ b as u64);
+                }
+                q | 1
+            }
+        };
+        splitmix64(h ^ p.rotate_left(32))
+    }
+}
+
+impl fmt::Display for Target {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.profile {
+            None => write!(f, "{}", self.device),
+            Some(p) => write!(f, "{}:{}", self.device, p.name()),
+        }
+    }
+}
+
+/// The composite prediction-cache key: structural graph fingerprint ×
+/// serving target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub graph: Fingerprint,
+    /// [`Target::key_bits`] of the target this entry is valid for.
+    pub target_bits: u64,
+}
+
+impl CacheKey {
+    pub fn new(graph: Fingerprint, target: &Target) -> CacheKey {
+        CacheKey {
+            graph,
+            target_bits: target.key_bits(),
+        }
+    }
+
+    /// Fingerprint `graph` and compose with `target` in one call.
+    pub fn of(graph: &Graph, target: &Target) -> CacheKey {
+        CacheKey::new(Fingerprint::of_graph(graph), target)
+    }
+
+    /// The composite key as one 128-bit integer (cache/shard/snapshot
+    /// key). Deterministic across processes, so snapshot entries written
+    /// by one server are hits in the next.
+    pub fn as_u128(self) -> u128 {
+        let lo = splitmix64(self.graph.lo ^ self.target_bits);
+        let hi = splitmix64(self.graph.hi ^ splitmix64(self.target_bits ^ K_TARGET));
+        ((hi as u128) << 64) | lo as u128
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelgen::Family;
+
+    #[test]
+    fn parse_forms() {
+        assert_eq!(Target::parse("a100").unwrap(), Target::default());
+        assert_eq!(
+            Target::parse("A100:2g.10gb").unwrap(),
+            Target::new("a100", Some(MigProfile::G2_10))
+        );
+        // Bare profile defaults the device to a100.
+        assert_eq!(
+            Target::parse("1g.5gb").unwrap(),
+            Target::new("a100", Some(MigProfile::G1_5))
+        );
+        assert!(Target::parse("a100:9g.80gb").is_err());
+        assert!(Target::parse("").is_err());
+        assert!(Target::parse(":1g.5gb").is_err());
+    }
+
+    #[test]
+    fn full_gpu_spellings_share_a_key() {
+        let a = Target::parse("a100").unwrap();
+        let b = Target::parse("a100:7g.40gb").unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.key_bits(), b.key_bits());
+        assert_eq!(a.to_string(), "a100");
+    }
+
+    #[test]
+    fn display_roundtrips_through_parse() {
+        for s in ["a100", "a100:1g.5gb", "a100:2g.10gb", "a100:3g.20gb"] {
+            let t = Target::parse(s).unwrap();
+            assert_eq!(t.to_string(), s);
+            assert_eq!(Target::parse(&t.to_string()).unwrap(), t);
+        }
+    }
+
+    #[test]
+    fn same_graph_distinct_targets_distinct_keys() {
+        let g = Family::ResNet.generate(1);
+        let full = CacheKey::of(&g, &Target::default());
+        let slice = CacheKey::of(&g, &Target::parse("a100:2g.10gb").unwrap());
+        let other_dev = CacheKey::of(&g, &Target::new("h100", None));
+        assert_eq!(full.graph, slice.graph, "structural part is shared");
+        assert_ne!(full.as_u128(), slice.as_u128());
+        assert_ne!(full.as_u128(), other_dev.as_u128());
+        assert_ne!(slice.as_u128(), other_dev.as_u128());
+    }
+
+    #[test]
+    fn keys_are_deterministic() {
+        let g = Family::Vgg.generate(0);
+        let t = Target::parse("a100:1g.5gb").unwrap();
+        assert_eq!(CacheKey::of(&g, &t).as_u128(), CacheKey::of(&g, &t).as_u128());
+        // All four distinct profiles (incl. full) on one graph: 4 keys.
+        let mut keys = std::collections::HashSet::new();
+        for spec in ["a100", "a100:1g.5gb", "a100:2g.10gb", "a100:3g.20gb"] {
+            keys.insert(CacheKey::of(&g, &Target::parse(spec).unwrap()).as_u128());
+        }
+        assert_eq!(keys.len(), 4);
+    }
+}

@@ -12,6 +12,8 @@ struct Slot<V> {
     key: u128,
     value: V,
     inserted: Instant,
+    /// Per-entry TTL override (tombstones); `None` = the shard default.
+    ttl: Option<Duration>,
     prev: usize,
     next: usize,
 }
@@ -96,12 +98,13 @@ impl<V: Clone> Lru<V> {
     }
 
     /// Look up `key`, refreshing recency on a hit. `ttl` of `None` means
-    /// entries never expire; expired entries are removed eagerly.
+    /// entries never expire; a per-entry override (see [`Lru::insert_with`])
+    /// wins over the shard default; expired entries are removed eagerly.
     pub fn lookup(&mut self, key: u128, ttl: Option<Duration>, now: Instant) -> Lookup<V> {
         let Some(&idx) = self.map.get(&key) else {
             return Lookup::Miss;
         };
-        if let Some(ttl) = ttl {
+        if let Some(ttl) = self.slots[idx].ttl.or(ttl) {
             if now.saturating_duration_since(self.slots[idx].inserted) >= ttl {
                 self.remove_slot(idx);
                 return Lookup::Expired;
@@ -115,9 +118,23 @@ impl<V: Clone> Lru<V> {
     /// Insert or refresh `key`. Returns the key evicted to make room, if
     /// any (never the key just inserted).
     pub fn insert(&mut self, key: u128, value: V, now: Instant) -> Option<u128> {
+        self.insert_with(key, value, now, None)
+    }
+
+    /// [`Lru::insert`] with a per-entry TTL override (`Some` = this entry
+    /// expires on its own clock regardless of the shard default — used for
+    /// short-lived negative entries).
+    pub fn insert_with(
+        &mut self,
+        key: u128,
+        value: V,
+        now: Instant,
+        ttl: Option<Duration>,
+    ) -> Option<u128> {
         if let Some(&idx) = self.map.get(&key) {
             self.slots[idx].value = value;
             self.slots[idx].inserted = now;
+            self.slots[idx].ttl = ttl;
             self.detach(idx);
             self.attach_front(idx);
             return None;
@@ -129,31 +146,46 @@ impl<V: Clone> Lru<V> {
             evicted = Some(self.slots[victim].key);
             self.remove_slot(victim);
         }
+        let slot = Slot {
+            key,
+            value,
+            inserted: now,
+            ttl,
+            prev: NIL,
+            next: NIL,
+        };
         let idx = match self.free.pop() {
             Some(idx) => {
-                self.slots[idx] = Slot {
-                    key,
-                    value,
-                    inserted: now,
-                    prev: NIL,
-                    next: NIL,
-                };
+                self.slots[idx] = slot;
                 idx
             }
             None => {
-                self.slots.push(Slot {
-                    key,
-                    value,
-                    inserted: now,
-                    prev: NIL,
-                    next: NIL,
-                });
+                self.slots.push(slot);
                 self.slots.len() - 1
             }
         };
         self.map.insert(key, idx);
         self.attach_front(idx);
         evicted
+    }
+
+    /// All live entries, least-recently-used first, as
+    /// `(key, value, age, per-entry ttl override)`. LRU-first so that
+    /// re-inserting in order reproduces the recency order exactly.
+    pub fn export(&self, now: Instant) -> Vec<(u128, V, Duration, Option<Duration>)> {
+        let mut out = Vec::with_capacity(self.map.len());
+        let mut idx = self.tail;
+        while idx != NIL {
+            let s = &self.slots[idx];
+            out.push((
+                s.key,
+                s.value.clone(),
+                now.saturating_duration_since(s.inserted),
+                s.ttl,
+            ));
+            idx = s.prev;
+        }
+        out
     }
 }
 
@@ -237,6 +269,36 @@ mod tests {
         assert_eq!(l.len(), 2);
         // Slab never grows past capacity + the transient insert.
         assert!(l.slots.len() <= 3, "slab grew to {}", l.slots.len());
+    }
+
+    #[test]
+    fn per_entry_ttl_overrides_shard_default() {
+        let mut l: Lru<u32> = Lru::new(4);
+        // No shard TTL, but this entry carries a zero TTL of its own.
+        l.insert_with(1, 10, now(), Some(Duration::ZERO));
+        assert_eq!(l.lookup(1, None, now()), Lookup::Expired);
+        // A per-entry TTL longer than the shard default also wins.
+        l.insert_with(2, 20, now(), Some(Duration::from_secs(3600)));
+        assert_eq!(l.lookup(2, Some(Duration::ZERO), now()), Lookup::Hit(20));
+        // Refreshing without an override clears the old one.
+        l.insert_with(3, 30, now(), Some(Duration::ZERO));
+        l.insert(3, 31, now());
+        assert_eq!(l.lookup(3, None, now()), Lookup::Hit(31));
+    }
+
+    #[test]
+    fn export_is_lru_first_with_overrides() {
+        let mut l: Lru<u32> = Lru::new(4);
+        l.insert(1, 10, now());
+        l.insert(2, 20, now());
+        l.insert_with(3, 30, now(), Some(Duration::from_secs(5)));
+        // Touch 1 so the recency order (LRU->MRU) is 2, 3, 1.
+        assert_eq!(l.lookup(1, None, now()), Lookup::Hit(10));
+        let entries = l.export(now());
+        let keys: Vec<u128> = entries.iter().map(|e| e.0).collect();
+        assert_eq!(keys, vec![2, 3, 1]);
+        assert_eq!(entries[1].3, Some(Duration::from_secs(5)));
+        assert_eq!(entries[0].3, None);
     }
 
     #[test]

@@ -7,25 +7,37 @@
 //!
 //! * [`fingerprint`] — deterministic 128-bit structural hashes, invariant
 //!   to node numbering and naming ([`Fingerprint`]).
-//! * [`lru`] — a slab-backed O(1) LRU with TTL, used per shard.
+//! * [`key`] — device-aware composite keys: [`CacheKey`] folds a serving
+//!   [`Target`] (device + MIG profile) into the fingerprint so one
+//!   coordinator serves heterogeneous fleets without collisions.
+//! * [`lru`] — a slab-backed O(1) LRU with TTL (global + per-entry
+//!   override), used per shard.
 //! * [`ShardedLruCache`] — N mutex-sharded LRUs with hit/miss/eviction
-//!   counters, keyed by fingerprint.
+//!   counters, keyed by composite key.
 //! * [`singleflight`] — coalesces concurrent identical submissions onto
 //!   one in-flight batch slot ([`SingleFlight`]).
+//! * [`persist`] — versioned, checksummed disk snapshots of the cache,
+//!   written on graceful shutdown / a timer and preloaded on boot so DSE
+//!   sweeps restart hot.
 //!
 //! The coordinator consults the cache before enqueueing (hit → reply
 //! without touching the batcher or the runtime) and publishes results back
 //! through it; see `coordinator::server`.
 
 pub mod fingerprint;
+pub mod key;
 pub mod lru;
+pub mod persist;
 pub mod singleflight;
 
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 pub use fingerprint::Fingerprint;
+pub use key::{CacheKey, Target};
+pub use persist::{LoadReport, SaveReport, SnapshotValue};
 pub use singleflight::{Role, SingleFlight, Waiter};
 
 use lru::{Lookup, Lru};
@@ -45,7 +57,23 @@ pub struct CacheConfig {
     pub ttl: Option<Duration>,
     /// Coalesce concurrent identical submissions (single-flight dedup).
     pub single_flight: bool,
+    /// Tombstone lifetime for negative entries (per-graph featurization
+    /// failures). `None` disables negative caching entirely.
+    pub negative_ttl: Option<Duration>,
+    /// Disk snapshot file (`--cache-file`). `None` = in-memory only. With
+    /// a path set, the coordinator preloads it on boot, rewrites it on
+    /// graceful shutdown, and — with [`CacheConfig::snapshot_every`] — on
+    /// a timer. Ignored when the cache is disabled (`--no-cache` wins).
+    pub snapshot_path: Option<PathBuf>,
+    /// Periodic snapshot interval (`--cache-snapshot-every-s`); `None` =
+    /// snapshot only on graceful shutdown.
+    pub snapshot_every: Option<Duration>,
 }
+
+/// Default tombstone lifetime: long enough to absorb a DSE client
+/// re-submitting a poison graph in a tight loop, short enough that a fixed
+/// backend (e.g. a raised `max_nodes`) is picked up quickly.
+pub const DEFAULT_NEGATIVE_TTL: Duration = Duration::from_secs(30);
 
 impl Default for CacheConfig {
     fn default() -> Self {
@@ -55,6 +83,9 @@ impl Default for CacheConfig {
             shards: 8,
             ttl: None,
             single_flight: true,
+            negative_ttl: Some(DEFAULT_NEGATIVE_TTL),
+            snapshot_path: None,
+            snapshot_every: None,
         }
     }
 }
@@ -93,8 +124,8 @@ impl CacheStats {
     }
 }
 
-/// N mutex-sharded LRU maps keyed by [`Fingerprint`]. Lock scope is one
-/// shard per operation; counters are lock-free atomics shared across
+/// N mutex-sharded LRU maps keyed by composite [`CacheKey`]. Lock scope is
+/// one shard per operation; counters are lock-free atomics shared across
 /// shards.
 pub struct ShardedLruCache<V: Clone> {
     shards: Vec<Mutex<Lru<V>>>,
@@ -124,13 +155,13 @@ impl<V: Clone> ShardedLruCache<V> {
     }
 
     fn shard(&self, key: u128) -> &Mutex<Lru<V>> {
-        // High bits: the fingerprint is uniformly mixed, any slice works.
+        // High bits: the composite key is uniformly mixed, any slice works.
         let idx = ((key >> 64) as u64 % self.shards.len() as u64) as usize;
         &self.shards[idx]
     }
 
-    pub fn get(&self, fp: Fingerprint) -> Option<V> {
-        let key = fp.as_u128();
+    pub fn get(&self, key: CacheKey) -> Option<V> {
+        let key = key.as_u128();
         let outcome = self
             .shard(key)
             .lock()
@@ -153,13 +184,80 @@ impl<V: Clone> ShardedLruCache<V> {
         }
     }
 
-    pub fn insert(&self, fp: Fingerprint, value: V) {
-        let key = fp.as_u128();
-        let evicted = self.shard(key).lock().unwrap().insert(key, value, Instant::now());
+    pub fn insert(&self, key: CacheKey, value: V) {
+        self.insert_with_ttl(key, value, None)
+    }
+
+    /// Insert with a per-entry TTL override (`Some` = this entry expires on
+    /// its own clock regardless of the cache-wide TTL; used for short-lived
+    /// negative entries).
+    pub fn insert_with_ttl(&self, key: CacheKey, value: V, ttl: Option<Duration>) {
+        let key = key.as_u128();
+        let evicted = self
+            .shard(key)
+            .lock()
+            .unwrap()
+            .insert_with(key, value, Instant::now(), ttl);
         self.insertions.fetch_add(1, Ordering::Relaxed);
         if evicted.is_some() {
             self.evictions.fetch_add(1, Ordering::Relaxed);
         }
+    }
+
+    /// Snapshot-exportable view of every entry *without* a per-entry TTL
+    /// override, as `(raw composite key, value, age)`. Tombstones always
+    /// carry an override, so they are structurally excluded. Within each
+    /// shard entries come out least-recently-used first, so replaying an
+    /// export through [`ShardedLruCache::preload`] reproduces recency.
+    pub fn export(&self) -> Vec<(u128, V, Duration)> {
+        let now = Instant::now();
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            for (key, value, age, ttl_override) in shard.lock().unwrap().export(now) {
+                if ttl_override.is_none() {
+                    out.push((key, value, age));
+                }
+            }
+        }
+        out
+    }
+
+    /// Bulk-load snapshot entries (warm start), backdating each entry by
+    /// its recorded age so the cache-wide TTL keeps counting from the
+    /// original insertion. Entries already older than the TTL are skipped.
+    /// Returns `(loaded, skipped_expired)`, where `loaded` is net of any
+    /// evictions the preload itself caused (a snapshot bigger than the
+    /// configured capacity does not overreport restored entries). Preloads
+    /// bypass the insertion/eviction counters: warm-start traffic is
+    /// accounted separately by the coordinator.
+    pub fn preload(
+        &self,
+        entries: impl IntoIterator<Item = (u128, V, Duration)>,
+    ) -> (usize, usize) {
+        let now = Instant::now();
+        let mut loaded = 0usize;
+        let mut evicted = 0usize;
+        let mut skipped = 0;
+        for (key, value, age) in entries {
+            if let Some(ttl) = self.ttl {
+                if age >= ttl {
+                    skipped += 1;
+                    continue;
+                }
+            }
+            let inserted = now.checked_sub(age).unwrap_or(now);
+            if self
+                .shard(key)
+                .lock()
+                .unwrap()
+                .insert(key, value, inserted)
+                .is_some()
+            {
+                evicted += 1;
+            }
+            loaded += 1;
+        }
+        (loaded.saturating_sub(evicted), skipped)
     }
 
     pub fn len(&self) -> usize {
@@ -196,13 +294,17 @@ mod tests {
         b.finish()
     }
 
+    fn key(ch: usize) -> CacheKey {
+        CacheKey::of(&graph(ch), &Target::default())
+    }
+
     #[test]
     fn get_insert_roundtrip_with_stats() {
         let cache: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig::default());
-        let fp = Fingerprint::of_graph(&graph(8));
-        assert_eq!(cache.get(fp), None);
-        cache.insert(fp, 7);
-        assert_eq!(cache.get(fp), Some(7));
+        let k = key(8);
+        assert_eq!(cache.get(k), None);
+        cache.insert(k, 7);
+        assert_eq!(cache.get(k), Some(7));
         let s = cache.stats();
         assert_eq!(s.hits, 1);
         assert_eq!(s.misses, 1);
@@ -219,7 +321,7 @@ mod tests {
             ..Default::default()
         });
         for ch in 0..200 {
-            cache.insert(Fingerprint::of_graph(&graph(ch + 1)), ch);
+            cache.insert(key(ch + 1), ch);
         }
         assert!(cache.len() <= 16, "len {}", cache.len());
         let s = cache.stats();
@@ -233,9 +335,9 @@ mod tests {
             ttl: Some(Duration::ZERO),
             ..Default::default()
         });
-        let fp = Fingerprint::of_graph(&graph(8));
-        cache.insert(fp, 1);
-        assert_eq!(cache.get(fp), None);
+        let k = key(8);
+        cache.insert(k, 1);
+        assert_eq!(cache.get(k), None);
         let s = cache.stats();
         assert_eq!(s.expirations, 1);
         assert_eq!(s.entries, 0);
@@ -245,11 +347,76 @@ mod tests {
     fn distinct_graphs_do_not_collide() {
         let cache: ShardedLruCache<usize> = ShardedLruCache::new(&CacheConfig::default());
         for ch in 1..65 {
-            cache.insert(Fingerprint::of_graph(&graph(ch)), ch);
+            cache.insert(key(ch), ch);
         }
         for ch in 1..65 {
-            assert_eq!(cache.get(Fingerprint::of_graph(&graph(ch))), Some(ch));
+            assert_eq!(cache.get(key(ch)), Some(ch));
         }
+    }
+
+    #[test]
+    fn same_graph_two_targets_two_entries() {
+        let cache: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig::default());
+        let g = graph(8);
+        let full = CacheKey::of(&g, &Target::default());
+        let slice = CacheKey::of(&g, &Target::parse("a100:1g.5gb").unwrap());
+        cache.insert(full, 1);
+        // The other target is a miss, not a collision.
+        assert_eq!(cache.get(slice), None);
+        cache.insert(slice, 2);
+        assert_eq!(cache.get(full), Some(1));
+        assert_eq!(cache.get(slice), Some(2));
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn export_skips_ttl_overrides_and_preload_restores() {
+        let cache: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig::default());
+        cache.insert(key(1), 10);
+        cache.insert(key(2), 20);
+        // A tombstone-style entry (per-entry TTL) must not be exported.
+        cache.insert_with_ttl(key(3), 30, Some(Duration::from_secs(3600)));
+        let dump = cache.export();
+        assert_eq!(dump.len(), 2);
+
+        let fresh: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig::default());
+        let (loaded, skipped) = fresh.preload(dump);
+        assert_eq!((loaded, skipped), (2, 0));
+        assert_eq!(fresh.get(key(1)), Some(10));
+        assert_eq!(fresh.get(key(2)), Some(20));
+        assert_eq!(fresh.get(key(3)), None);
+        // Preload itself does not count as insertions.
+        assert_eq!(fresh.stats().insertions, 0);
+    }
+
+    #[test]
+    fn preload_skips_entries_older_than_ttl() {
+        let cache: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig {
+            ttl: Some(Duration::from_secs(60)),
+            ..Default::default()
+        });
+        let entries = vec![
+            (1u128, 10u32, Duration::from_secs(5)),
+            (2u128, 20u32, Duration::from_secs(600)),
+        ];
+        let (loaded, skipped) = cache.preload(entries);
+        assert_eq!((loaded, skipped), (1, 1));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn preload_beyond_capacity_reports_net_entries() {
+        // 1 shard x 4 slots; preloading 10 entries keeps only the last 4.
+        let cache: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig {
+            capacity: 4,
+            shards: 1,
+            ..Default::default()
+        });
+        let entries: Vec<(u128, u32, Duration)> =
+            (0..10u128).map(|k| (k, k as u32, Duration::ZERO)).collect();
+        let (loaded, skipped) = cache.preload(entries);
+        assert_eq!((loaded, skipped), (4, 0));
+        assert_eq!(cache.len(), 4);
     }
 
     #[test]
@@ -268,5 +435,7 @@ mod tests {
         let c = CacheConfig::disabled();
         assert!(!c.enabled);
         assert!(c.single_flight);
+        assert!(c.negative_ttl.is_some());
+        assert!(c.snapshot_path.is_none());
     }
 }

@@ -1,0 +1,404 @@
+//! Disk persistence for the prediction cache: a versioned, checksummed
+//! binary snapshot (composite key → value entries with age metadata),
+//! written atomically and preloaded on boot so design-space-exploration
+//! sweeps restart hot.
+//!
+//! Format (all integers little-endian):
+//!
+//! ```text
+//! magic    8  b"DIPPMCS\x01"
+//! version  4  u32, currently 1
+//! count    8  u64 number of entries
+//! entry   (count times)
+//!   key      16  u128 composite cache key (CacheKey::as_u128)
+//!   age_ms    8  u64 entry age at snapshot time
+//!   len       4  u32 value payload length
+//!   value   len  SnapshotValue::snapshot_encode bytes
+//! checksum 8  u64 FNV-1a/splitmix digest of everything above
+//! ```
+//!
+//! Guarantees:
+//!
+//! * **Atomicity** — [`save_snapshot`] writes a sibling temp file and
+//!   `rename`s it over the target, so readers never observe a torn file
+//!   even if the writer dies mid-snapshot.
+//! * **Integrity** — the trailing checksum covers the whole body; any
+//!   truncation or bit-flip makes [`load_snapshot`] return an error. The
+//!   coordinator treats a rejected snapshot as a cold start, never a crash.
+//! * **TTL continuity** — entries carry their age, so a cache-wide TTL
+//!   keeps counting from the original insertion across restarts.
+//! * **No tombstones** — values may decline serialization (negative
+//!   entries do), and the cache additionally excludes every entry with a
+//!   per-entry TTL override from its export.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::rng::splitmix64;
+
+use super::ShardedLruCache;
+
+/// Magic prefix; the final byte is the format generation.
+pub const MAGIC: [u8; 8] = *b"DIPPMCS\x01";
+/// Current snapshot format version.
+pub const VERSION: u32 = 1;
+
+const HEADER_LEN: usize = 8 + 4 + 8; // magic + version + count
+const CHECKSUM_LEN: usize = 8;
+
+/// A value the snapshot layer can round-trip. Returning `None` from
+/// [`SnapshotValue::snapshot_encode`] excludes the entry (tombstones).
+pub trait SnapshotValue: Sized {
+    fn snapshot_encode(&self) -> Option<Vec<u8>>;
+    fn snapshot_decode(bytes: &[u8]) -> Result<Self>;
+}
+
+/// What [`save_snapshot`] wrote.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SaveReport {
+    pub path: PathBuf,
+    pub entries: usize,
+    pub bytes: usize,
+}
+
+/// What [`load_snapshot`] restored.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LoadReport {
+    pub path: PathBuf,
+    /// Entries inserted into the cache.
+    pub entries: usize,
+    /// Entries skipped because they were already older than the cache TTL.
+    pub expired: usize,
+}
+
+/// FNV-1a over the body with a final splitmix avalanche, so truncation at
+/// any byte and single-bit flips both change the digest.
+fn checksum(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    splitmix64(h)
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u128(out: &mut Vec<u8>, v: u128) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounds-checked little-endian reader over the snapshot body.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| anyhow!("snapshot truncated at byte {}", self.pos))?;
+        let slice = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(slice)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn u128(&mut self) -> Result<u128> {
+        Ok(u128::from_le_bytes(self.take(16)?.try_into().unwrap()))
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+/// Serialize the cache's exportable entries into snapshot bytes. Returns
+/// the encoded body (checksum included) and the entry count.
+pub fn encode_snapshot<V: SnapshotValue + Clone>(cache: &ShardedLruCache<V>) -> (Vec<u8>, usize) {
+    let mut entries = Vec::new();
+    let mut count: u64 = 0;
+    for (key, value, age) in cache.export() {
+        let Some(payload) = value.snapshot_encode() else {
+            continue;
+        };
+        put_u128(&mut entries, key);
+        put_u64(&mut entries, age.as_millis().min(u64::MAX as u128) as u64);
+        put_u32(&mut entries, payload.len() as u32);
+        entries.extend_from_slice(&payload);
+        count += 1;
+    }
+    let mut body = Vec::with_capacity(HEADER_LEN + entries.len() + CHECKSUM_LEN);
+    body.extend_from_slice(&MAGIC);
+    put_u32(&mut body, VERSION);
+    put_u64(&mut body, count);
+    body.extend_from_slice(&entries);
+    let digest = checksum(&body);
+    put_u64(&mut body, digest);
+    (body, count as usize)
+}
+
+/// Parse and verify snapshot bytes into `(key, value, age)` entries.
+/// Rejects bad magic, unknown versions, checksum mismatches (covers both
+/// corruption and truncation) and trailing garbage.
+pub fn decode_snapshot<V: SnapshotValue>(bytes: &[u8]) -> Result<Vec<(u128, V, Duration)>> {
+    if bytes.len() < HEADER_LEN + CHECKSUM_LEN {
+        bail!("snapshot too short ({} bytes)", bytes.len());
+    }
+    let (body, tail) = bytes.split_at(bytes.len() - CHECKSUM_LEN);
+    let stored = u64::from_le_bytes(tail.try_into().unwrap());
+    if checksum(body) != stored {
+        bail!("snapshot checksum mismatch (corrupted or truncated file)");
+    }
+    let mut r = Reader::new(body);
+    if r.take(8)? != &MAGIC[..] {
+        bail!("not a dippm cache snapshot (bad magic)");
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        bail!("unsupported snapshot version {version} (this build reads {VERSION})");
+    }
+    let count = r.u64()?;
+    let mut out = Vec::with_capacity(count.min(1 << 20) as usize);
+    for i in 0..count {
+        let key = r.u128()?;
+        let age_ms = r.u64()?;
+        let len = r.u32()? as usize;
+        let payload = r.take(len)?;
+        let value = V::snapshot_decode(payload)
+            .map_err(|e| e.context(format!("snapshot entry {i}")))?;
+        out.push((key, value, Duration::from_millis(age_ms)));
+    }
+    if r.remaining() != 0 {
+        bail!("snapshot has {} trailing bytes after {count} entries", r.remaining());
+    }
+    Ok(out)
+}
+
+/// Monotonic discriminator so concurrent saves (periodic timer + a TCP
+/// `cache_save` on a connection thread) never share one temp file — each
+/// writes its own and the renames serialize at the filesystem.
+static TMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Write an atomically-rotated snapshot of `cache` to `path`: encode,
+/// write a unique `<file>.tmp.<pid>.<n>` next to the target, then rename
+/// over it.
+pub fn save_snapshot<V: SnapshotValue + Clone>(
+    path: &Path,
+    cache: &ShardedLruCache<V>,
+) -> Result<SaveReport> {
+    let (bytes, entries) = encode_snapshot(cache);
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            fs::create_dir_all(dir)
+                .with_context(|| format!("creating snapshot dir {}", dir.display()))?;
+        }
+    }
+    let file = path
+        .file_name()
+        .map(|f| f.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "cache-snapshot".into());
+    let tmp = path.with_file_name(format!(
+        "{file}.tmp.{}.{}",
+        std::process::id(),
+        TMP_COUNTER.fetch_add(1, Ordering::Relaxed)
+    ));
+    fs::write(&tmp, &bytes).with_context(|| format!("writing {}", tmp.display()))?;
+    if let Err(e) = fs::rename(&tmp, path) {
+        let _ = fs::remove_file(&tmp);
+        return Err(anyhow::Error::from(e)
+            .context(format!("rotating snapshot into {}", path.display())));
+    }
+    Ok(SaveReport {
+        path: path.to_path_buf(),
+        entries,
+        bytes: bytes.len(),
+    })
+}
+
+/// Read, verify and preload a snapshot into `cache`. Errors on IO problems
+/// and on any integrity failure; the caller decides whether that is fatal
+/// (an explicit `cache_load` command) or a logged cold start (boot).
+pub fn load_snapshot<V: SnapshotValue + Clone>(
+    path: &Path,
+    cache: &ShardedLruCache<V>,
+) -> Result<LoadReport> {
+    let bytes =
+        fs::read(path).with_context(|| format!("reading snapshot {}", path.display()))?;
+    let entries = decode_snapshot::<V>(&bytes)?;
+    let (loaded, expired) = cache.preload(entries);
+    Ok(LoadReport {
+        path: path.to_path_buf(),
+        entries: loaded,
+        expired,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::{CacheConfig, CacheKey, Fingerprint, Target};
+
+    // A trivially serializable value for format-level tests.
+    impl SnapshotValue for u32 {
+        fn snapshot_encode(&self) -> Option<Vec<u8>> {
+            Some(self.to_le_bytes().to_vec())
+        }
+        fn snapshot_decode(bytes: &[u8]) -> Result<u32> {
+            let arr: [u8; 4] = bytes
+                .try_into()
+                .map_err(|_| anyhow!("u32 payload must be 4 bytes, got {}", bytes.len()))?;
+            Ok(u32::from_le_bytes(arr))
+        }
+    }
+
+    fn key(i: u64) -> CacheKey {
+        CacheKey::new(
+            Fingerprint {
+                hi: i.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                lo: i,
+            },
+            &Target::default(),
+        )
+    }
+
+    fn tmp_path(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("dippm-persist-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_save_load_hits() {
+        let cache: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig::default());
+        for i in 0..50 {
+            cache.insert(key(i), i as u32);
+        }
+        let path = tmp_path("roundtrip.bin");
+        let saved = save_snapshot(&path, &cache).unwrap();
+        assert_eq!(saved.entries, 50);
+        assert!(saved.bytes > HEADER_LEN + CHECKSUM_LEN);
+
+        let fresh: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig::default());
+        let loaded = load_snapshot(&path, &fresh).unwrap();
+        assert_eq!(loaded.entries, 50);
+        assert_eq!(loaded.expired, 0);
+        for i in 0..50 {
+            assert_eq!(fresh.get(key(i)), Some(i as u32), "key {i}");
+        }
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn empty_cache_roundtrips() {
+        let cache: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig::default());
+        let (bytes, n) = encode_snapshot(&cache);
+        assert_eq!(n, 0);
+        assert!(decode_snapshot::<u32>(&bytes).unwrap().is_empty());
+    }
+
+    #[test]
+    fn corrupted_byte_is_rejected() {
+        let cache: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig::default());
+        cache.insert(key(1), 11);
+        cache.insert(key(2), 22);
+        let (mut bytes, _) = encode_snapshot(&cache);
+        // Flip one bit in the middle of the entry region.
+        let mid = HEADER_LEN + 5;
+        bytes[mid] ^= 0x40;
+        let err = decode_snapshot::<u32>(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+    }
+
+    #[test]
+    fn truncation_is_rejected() {
+        let cache: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig::default());
+        for i in 0..10 {
+            cache.insert(key(i), i as u32);
+        }
+        let (bytes, _) = encode_snapshot(&cache);
+        for cut in [0, 1, HEADER_LEN, bytes.len() - 1] {
+            assert!(
+                decode_snapshot::<u32>(&bytes[..cut]).is_err(),
+                "truncation to {cut} bytes must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_rejected() {
+        let cache: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig::default());
+        cache.insert(key(1), 1);
+        let (bytes, _) = encode_snapshot(&cache);
+
+        let mut wrong_magic = bytes.clone();
+        wrong_magic[0] = b'X';
+        // Re-seal so only the magic (not the checksum) is at fault.
+        let n = wrong_magic.len() - CHECKSUM_LEN;
+        let digest = checksum(&wrong_magic[..n]).to_le_bytes();
+        wrong_magic[n..].copy_from_slice(&digest);
+        let err = decode_snapshot::<u32>(&wrong_magic).unwrap_err();
+        assert!(format!("{err:#}").contains("magic"), "{err:#}");
+
+        let mut wrong_version = bytes;
+        wrong_version[8] = 99;
+        let n = wrong_version.len() - CHECKSUM_LEN;
+        let digest = checksum(&wrong_version[..n]).to_le_bytes();
+        wrong_version[n..].copy_from_slice(&digest);
+        let err = decode_snapshot::<u32>(&wrong_version).unwrap_err();
+        assert!(format!("{err:#}").contains("version"), "{err:#}");
+    }
+
+    #[test]
+    fn missing_file_is_an_error_not_a_panic() {
+        let cache: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig::default());
+        assert!(load_snapshot(&tmp_path("never-written.bin"), &cache).is_err());
+    }
+
+    #[test]
+    fn save_overwrites_atomically() {
+        let path = tmp_path("rotate.bin");
+        let cache: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig::default());
+        cache.insert(key(1), 1);
+        save_snapshot(&path, &cache).unwrap();
+        cache.insert(key(2), 2);
+        let second = save_snapshot(&path, &cache).unwrap();
+        assert_eq!(second.entries, 2);
+        let fresh: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig::default());
+        assert_eq!(load_snapshot(&path, &fresh).unwrap().entries, 2);
+        // No temp droppings left behind.
+        let dir = path.parent().unwrap();
+        let leftovers: Vec<_> = fs::read_dir(dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| {
+                n.contains(&format!("dippm-persist-{}-rotate.bin.tmp", std::process::id()))
+            })
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        let _ = fs::remove_file(&path);
+    }
+}

@@ -2,24 +2,44 @@
 //!
 //! The executor thread owns exactly one [`Backend`] and drives it with
 //! denormalization already folded in: `predict_raw` returns physical
-//! `[latency_ms, memory_mb, energy_j]` triples. Two implementations:
+//! `[latency_ms, memory_mb, energy_j]` triples, one *per-request outcome*
+//! each. A request that fails featurization (e.g. a `max_nodes` overflow)
+//! yields an inner `Err` without poisoning the rest of the batch — the
+//! coordinator turns those into short-TTL negative cache entries. A
+//! batch-level `Err` means infrastructure failure (nothing cacheable).
+//!
+//! Two implementations:
 //!
 //! * [`PjrtBackend`] — the paper path: featurize into pinned buffers and
 //!   run the AOT-compiled PMGNS predict artifact on the PJRT runtime.
+//!   Serves the full-GPU target only (the dataset's measurement
+//!   substrate); sliced targets are per-request errors.
 //! * [`SimBackend`] — the A100 analytical simulator (the dataset's
-//!   ground-truth substrate). Hermetic: no artifacts, no PJRT. Used by
-//!   integration tests, benches and `--backend sim` serving so the full
-//!   coordinator stack (batching, cache, single-flight, TCP) is
-//!   exercisable on any machine.
+//!   ground-truth substrate), MIG-target aware. Hermetic: no artifacts,
+//!   no PJRT. Used by integration tests, benches and `--backend sim`
+//!   serving so the full coordinator stack (batching, cache,
+//!   single-flight, TCP) is exercisable on any machine.
 
 use anyhow::{anyhow, Result};
 
+use crate::cache::Target;
 use crate::dataset::normalize::NormStats;
 use crate::features::static_features;
 use crate::ir::Graph;
 use crate::runtime::{Artifact, ParamStore, Runtime};
 use crate::simulator::Simulator;
 use crate::training::BatchBuffers;
+
+/// One slot of a backend batch: the graph plus the target configuration
+/// the prediction is for.
+pub struct PredictRequest<'a> {
+    pub graph: &'a Graph,
+    pub target: &'a Target,
+}
+
+/// Per-request outcome: a physical triple, or a request-level failure
+/// message (cacheable as a tombstone).
+pub type RawOutcome = Result<[f64; 3], String>;
 
 /// An inference engine the executor can drive. Implementations live on the
 /// executor thread (XLA client handles are not Sync), hence `Send` only.
@@ -28,9 +48,10 @@ pub trait Backend: Send {
     fn name(&self) -> &'static str;
     /// Largest batch `predict_raw` accepts.
     fn max_batch(&self) -> usize;
-    /// Predict denormalized `[latency_ms, memory_mb, energy_j]` per graph.
-    /// `graphs.len()` must be in `1..=max_batch()`.
-    fn predict_raw(&mut self, graphs: &[&Graph]) -> Result<Vec<[f64; 3]>>;
+    /// Predict denormalized `[latency_ms, memory_mb, energy_j]` per
+    /// request. `requests.len()` must be in `1..=max_batch()`, and the
+    /// returned vector must have exactly `requests.len()` outcomes.
+    fn predict_raw(&mut self, requests: &[PredictRequest<'_>]) -> Result<Vec<RawOutcome>>;
 }
 
 /// Deferred backend constructor, invoked *inside* the executor thread
@@ -93,21 +114,54 @@ impl Backend for PjrtBackend {
         self.max_b
     }
 
-    fn predict_raw(&mut self, graphs: &[&Graph]) -> Result<Vec<[f64; 3]>> {
+    fn predict_raw(&mut self, requests: &[PredictRequest<'_>]) -> Result<Vec<RawOutcome>> {
         // b=1 fast path avoids padding the big batch artifact.
-        let (art, bufs, b) = if graphs.len() == 1 && self.art_b1.is_some() {
+        let (art, bufs, b) = if requests.len() == 1 && self.art_b1.is_some() {
             (self.art_b1.as_ref().unwrap(), &mut self.buffers_b1, 1)
         } else {
             (&self.art_bn, &mut self.buffers, self.max_b)
         };
-        if graphs.len() > b {
-            return Err(anyhow!("batch of {} exceeds max {b}", graphs.len()));
+        if requests.len() > b {
+            return Err(anyhow!("batch of {} exceeds max {b}", requests.len()));
         }
-        for (slot, graph) in graphs.iter().enumerate() {
-            let statics = static_features(graph);
-            bufs.fill_graph(graph, &statics, &self.norm, slot)?;
+        // Featurization failures are per-request: the slot is cleared and
+        // the failure recorded, the rest of the batch still executes.
+        let mut failures: Vec<Option<String>> = vec![None; requests.len()];
+        for (slot, req) in requests.iter().enumerate() {
+            // The AOT artifacts are trained for (and compiled against) the
+            // full A100: unknown devices and sliced targets are per-request
+            // failures, exactly as on the simulator backend.
+            if req.target.device != "a100" {
+                failures[slot] = Some(format!(
+                    "unknown device {:?} (pjrt artifacts are trained for a100)",
+                    req.target.device
+                ));
+                bufs.clear_slot(slot);
+                continue;
+            }
+            if req.target.profile.is_some() {
+                failures[slot] = Some(format!(
+                    "pjrt backend serves full-GPU predictions only (requested target {})",
+                    req.target
+                ));
+                bufs.clear_slot(slot);
+                continue;
+            }
+            let statics = static_features(req.graph);
+            if let Err(e) = bufs.fill_graph(req.graph, &statics, &self.norm, slot) {
+                failures[slot] = Some(format!("{e:#}"));
+                bufs.clear_slot(slot);
+            }
         }
-        for slot in graphs.len()..b {
+        // Nothing survived featurization: skip the artifact execution, the
+        // outcome is already fully determined.
+        if failures.iter().all(Option::is_some) {
+            return Ok(failures
+                .into_iter()
+                .map(|f| Err(f.expect("all slots failed")))
+                .collect());
+        }
+        for slot in requests.len()..b {
             bufs.clear_slot(slot);
         }
         let mut inputs: Vec<xla::Literal> = self.param_lits.to_vec();
@@ -117,18 +171,22 @@ impl Backend for PjrtBackend {
             .first()
             .ok_or_else(|| anyhow!("predict returned nothing"))?
             .to_vec::<f32>()?;
-        Ok((0..graphs.len())
-            .map(|slot| {
-                let normed: [f32; 3] = std::array::from_fn(|d| yhat[slot * 3 + d]);
-                self.norm.denorm_target(normed)
+        Ok((0..requests.len())
+            .map(|slot| match failures[slot].take() {
+                Some(msg) => Err(msg),
+                None => {
+                    let normed: [f32; 3] = std::array::from_fn(|d| yhat[slot * 3 + d]);
+                    Ok(self.norm.denorm_target(normed))
+                }
             })
             .collect())
     }
 }
 
 /// The analytical-simulator backend: deterministic ground-truth triples,
-/// no artifacts required. Enforces the same `max_nodes` contract as the
-/// AOT padding so oversized graphs fail identically on both backends.
+/// no artifacts required. Target-aware — a request for `a100:2g.10gb` is
+/// measured on that MIG slice. Enforces the same `max_nodes` contract as
+/// the AOT padding so oversized graphs fail identically on both backends.
 pub struct SimBackend {
     sim: Simulator,
     max_nodes: usize,
@@ -166,22 +224,28 @@ impl Backend for SimBackend {
         self.max_batch
     }
 
-    fn predict_raw(&mut self, graphs: &[&Graph]) -> Result<Vec<[f64; 3]>> {
-        graphs
+    fn predict_raw(&mut self, requests: &[PredictRequest<'_>]) -> Result<Vec<RawOutcome>> {
+        Ok(requests
             .iter()
-            .map(|graph| {
-                if graph.n_nodes() > self.max_nodes {
-                    return Err(anyhow!(
+            .map(|req| {
+                if req.target.device != "a100" {
+                    return Err(format!(
+                        "unknown device {:?} (the simulator models a100 only)",
+                        req.target.device
+                    ));
+                }
+                if req.graph.n_nodes() > self.max_nodes {
+                    return Err(format!(
                         "graph {} has {} nodes > max_nodes {}",
-                        graph.variant,
-                        graph.n_nodes(),
+                        req.graph.variant,
+                        req.graph.n_nodes(),
                         self.max_nodes
                     ));
                 }
-                let m = self.sim.measure(graph);
+                let m = self.sim.measure_on(req.graph, req.target.profile_or_full());
                 Ok([m.latency_ms, m.memory_mb, m.energy_j])
             })
-            .collect()
+            .collect())
     }
 }
 
@@ -190,14 +254,24 @@ mod tests {
     use super::*;
     use crate::modelgen::Family;
 
+    fn full() -> Target {
+        Target::default()
+    }
+
+    fn req<'a>(graph: &'a Graph, target: &'a Target) -> PredictRequest<'a> {
+        PredictRequest { graph, target }
+    }
+
     #[test]
     fn sim_backend_predicts_deterministically() {
         let mut b = SimBackend::new();
         let g = Family::ResNet.generate(1);
-        let a = b.predict_raw(&[&g]).unwrap();
-        let c = b.predict_raw(&[&g]).unwrap();
+        let t = full();
+        let a = b.predict_raw(&[req(&g, &t)]).unwrap();
+        let c = b.predict_raw(&[req(&g, &t)]).unwrap();
         assert_eq!(a, c);
-        assert!(a[0][0] > 0.0 && a[0][1] > 0.0 && a[0][2] > 0.0);
+        let triple = a[0].as_ref().unwrap();
+        assert!(triple[0] > 0.0 && triple[1] > 0.0 && triple[2] > 0.0);
     }
 
     #[test]
@@ -205,13 +279,45 @@ mod tests {
         let mut b = SimBackend::new();
         let g1 = Family::MobileNet.generate(0);
         let g2 = Family::Vgg.generate(0);
-        let out = b.predict_raw(&[&g1, &g2]).unwrap();
+        let t = full();
+        let out = b.predict_raw(&[req(&g1, &t), req(&g2, &t)]).unwrap();
         assert_eq!(out.len(), 2);
         assert_ne!(out[0], out[1]);
     }
 
     #[test]
-    fn sim_backend_rejects_oversize() {
+    fn sim_backend_is_target_aware() {
+        let mut b = SimBackend::new();
+        let g = Family::ResNet.generate(0);
+        let t_full = full();
+        let t_slice = Target::parse("a100:1g.5gb").unwrap();
+        let out = b
+            .predict_raw(&[req(&g, &t_full), req(&g, &t_slice)])
+            .unwrap();
+        let full_lat = out[0].as_ref().unwrap()[0];
+        let slice_lat = out[1].as_ref().unwrap()[0];
+        // A 1/7th slice must be slower than the whole GPU.
+        assert!(
+            slice_lat > full_lat,
+            "slice {slice_lat} ms vs full {full_lat} ms"
+        );
+    }
+
+    #[test]
+    fn sim_backend_rejects_unknown_device_per_request() {
+        let mut b = SimBackend::new();
+        let good = Family::Vgg.generate(0);
+        let t_full = full();
+        let t_bad = Target::new("tpu-v4", None);
+        let out = b
+            .predict_raw(&[req(&good, &t_bad), req(&good, &t_full)])
+            .unwrap();
+        assert!(out[0].as_ref().unwrap_err().contains("unknown device"));
+        assert!(out[1].is_ok(), "the rest of the batch still executes");
+    }
+
+    #[test]
+    fn sim_backend_rejects_oversize_without_poisoning_batch() {
         use crate::ir::GraphBuilder;
         let mut bld = GraphBuilder::new("t", "too-big", 1);
         let x = bld.input(vec![1, 8, 16, 16]);
@@ -220,8 +326,11 @@ mod tests {
             h = bld.conv_relu(h, 8, 3, 1, 1);
         }
         let g = bld.finish();
+        let ok_g = Family::MobileNet.generate(0);
+        let t = full();
         let mut b = SimBackend::new();
-        let err = b.predict_raw(&[&g]).unwrap_err();
-        assert!(format!("{err:#}").contains("max_nodes"));
+        let out = b.predict_raw(&[req(&g, &t), req(&ok_g, &t)]).unwrap();
+        assert!(out[0].as_ref().unwrap_err().contains("max_nodes"));
+        assert!(out[1].is_ok());
     }
 }

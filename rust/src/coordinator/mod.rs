@@ -21,6 +21,6 @@ pub mod protocol;
 pub mod server;
 pub mod tcp;
 
-pub use backend::{Backend, BackendFactory, PjrtBackend, SimBackend};
+pub use backend::{Backend, BackendFactory, PjrtBackend, PredictRequest, RawOutcome, SimBackend};
 pub use protocol::{Prediction, Request};
-pub use server::{Coordinator, CoordinatorOptions, Metrics};
+pub use server::{CacheValue, Coordinator, CoordinatorOptions, Metrics};

@@ -1,10 +1,18 @@
 //! Serving protocol types: JSON-lines request/response (the TCP API) and
 //! the in-process request struct.
 //!
+//! Prediction requests may carry an optional `"target"` field (e.g.
+//! `"a100:2g.10gb"`) selecting the device/MIG configuration the prediction
+//! is for; omitted = the server's default target.
+//!
 //! Besides model-prediction requests, the protocol carries admin commands
-//! as `{"cmd": "..."}` lines; `cache_stats` reports the prediction cache's
-//! hit/miss/eviction counters and the batcher's fill metrics.
+//! as `{"cmd": "..."}` lines: `cache_stats` reports the prediction cache's
+//! hit/miss/eviction/warm-start counters and the batcher's fill metrics;
+//! `cache_save` / `cache_load` rotate a disk snapshot out of / into the
+//! live cache (optional `"path"`, defaulting to the server's
+//! `--cache-file`).
 
+use crate::cache::{LoadReport, SaveReport, Target};
 use crate::frontends::{self, Framework};
 use crate::ir::Graph;
 use crate::util::json::{Json, JsonObj};
@@ -69,6 +77,16 @@ pub fn parse_request_value(v: &Json) -> Result<Graph, String> {
     }
 }
 
+/// Extract the optional `"target"` of a prediction request. `Ok(None)` =
+/// not named (use the server default); an unparsable target is an error.
+pub fn parse_target_value(v: &Json) -> Result<Option<Target>, String> {
+    match v.path(&["target"]) {
+        Json::Null => Ok(None),
+        Json::Str(s) => Target::parse(s).map(Some),
+        other => Err(format!("'target' must be a string, got {other}")),
+    }
+}
+
 pub fn error_response(msg: &str) -> String {
     let mut o = JsonObj::new();
     o.insert("ok", false);
@@ -97,9 +115,33 @@ pub fn cache_stats_response(m: &Metrics) -> String {
     o.insert("expirations", m.cache_expirations as usize);
     o.insert("entries", m.cache_entries as usize);
     o.insert("capacity", m.cache_capacity as usize);
+    o.insert("negative_hits", m.negative_hits as usize);
+    o.insert("warm_start_entries", m.warm_start_entries as usize);
     o.insert("requests", m.requests as usize);
     o.insert("batches", m.batches as usize);
     o.insert("mean_batch_fill", m.mean_batch_fill());
+    Json::Obj(o).to_string()
+}
+
+/// Serialize the `cache_save` response.
+pub fn cache_save_response(r: &SaveReport) -> String {
+    let mut o = JsonObj::new();
+    o.insert("ok", true);
+    o.insert("cmd", "cache_save");
+    o.insert("path", r.path.display().to_string());
+    o.insert("entries", r.entries);
+    o.insert("bytes", r.bytes);
+    Json::Obj(o).to_string()
+}
+
+/// Serialize the `cache_load` response.
+pub fn cache_load_response(r: &LoadReport) -> String {
+    let mut o = JsonObj::new();
+    o.insert("ok", true);
+    o.insert("cmd", "cache_load");
+    o.insert("path", r.path.display().to_string());
+    o.insert("entries", r.entries);
+    o.insert("expired", r.expired);
     Json::Obj(o).to_string()
 }
 
@@ -152,6 +194,8 @@ mod tests {
             cache_hits: 6,
             cache_misses: 4,
             coalesced: 1,
+            negative_hits: 2,
+            warm_start_entries: 5,
             ..Default::default()
         };
         let s = cache_stats_response(&m);
@@ -161,6 +205,44 @@ mod tests {
         assert_eq!(v.path(&["misses"]).as_usize(), Some(4));
         assert!((v.path(&["hit_rate"]).as_f64().unwrap() - 0.6).abs() < 1e-9);
         assert_eq!(v.path(&["coalesced"]).as_usize(), Some(1));
+        assert_eq!(v.path(&["negative_hits"]).as_usize(), Some(2));
+        assert_eq!(v.path(&["warm_start_entries"]).as_usize(), Some(5));
+    }
+
+    #[test]
+    fn target_field_parses_or_defaults() {
+        let v = Json::parse(r#"{"model":{},"target":"a100:2g.10gb"}"#).unwrap();
+        let t = parse_target_value(&v).unwrap().unwrap();
+        assert_eq!(t.to_string(), "a100:2g.10gb");
+        let v = Json::parse(r#"{"model":{}}"#).unwrap();
+        assert_eq!(parse_target_value(&v).unwrap(), None);
+        let v = Json::parse(r#"{"target":"a100:9g.80gb"}"#).unwrap();
+        assert!(parse_target_value(&v).is_err());
+        let v = Json::parse(r#"{"target":42}"#).unwrap();
+        assert!(parse_target_value(&v).is_err());
+    }
+
+    #[test]
+    fn save_and_load_responses_serialize() {
+        let s = cache_save_response(&SaveReport {
+            path: "/tmp/cache.bin".into(),
+            entries: 7,
+            bytes: 321,
+        });
+        let v = Json::parse(&s).unwrap();
+        assert_eq!(v.path(&["ok"]).as_bool(), Some(true));
+        assert_eq!(v.path(&["cmd"]).as_str(), Some("cache_save"));
+        assert_eq!(v.path(&["entries"]).as_usize(), Some(7));
+
+        let l = cache_load_response(&LoadReport {
+            path: "/tmp/cache.bin".into(),
+            entries: 6,
+            expired: 1,
+        });
+        let v = Json::parse(&l).unwrap();
+        assert_eq!(v.path(&["cmd"]).as_str(), Some("cache_load"));
+        assert_eq!(v.path(&["entries"]).as_usize(), Some(6));
+        assert_eq!(v.path(&["expired"]).as_usize(), Some(1));
     }
 
     #[test]

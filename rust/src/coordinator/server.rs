@@ -1,34 +1,46 @@
 //! The coordinator core: mpsc request queue → executor thread (owns the
 //! inference [`Backend`]) with a size-or-deadline dynamic batcher, fronted
-//! by the graph-fingerprint prediction cache.
+//! by the device-aware graph-fingerprint prediction cache.
 //!
 //! Request path:
 //!
-//! 1. `submit` fingerprints the graph (`cache::Fingerprint`) and consults
-//!    the sharded LRU. A hit replies immediately on the caller thread —
-//!    the batcher, the queue and the runtime are never touched.
+//! 1. `submit` fingerprints the graph and composes the device-aware
+//!    [`CacheKey`] (graph × target), then consults the sharded LRU. A hit
+//!    replies immediately on the caller thread — the batcher, the queue
+//!    and the runtime are never touched. A tombstone hit (negative entry)
+//!    replies with the cached failure just as fast.
 //! 2. On a miss, single-flight dedup coalesces concurrent submissions of
-//!    the same fingerprint: one leader enqueues a real job; followers park
-//!    a reply sender and are woken when the leader's batch lands.
+//!    the same composite key: one leader enqueues a real job; followers
+//!    park a reply sender and are woken when the leader's batch lands.
 //! 3. The executor drains the queue with the size-or-deadline policy,
-//!    calls the backend once per batch, publishes results into the cache
-//!    and fans each result out to its followers.
+//!    calls the backend once per batch, publishes per-request results into
+//!    the cache (failures become short-TTL tombstones) and fans each
+//!    result out to its followers.
+//!
+//! Persistence: with `CacheConfig::snapshot_path` set, the cache is
+//! preloaded from disk on boot (warm start), snapshotted on a timer
+//! (`snapshot_every`) and re-snapshotted on graceful shutdown — see
+//! [`crate::cache::persist`] for the format and its guarantees.
 
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
-use crate::cache::{CacheConfig, CacheStats, Fingerprint, Role, ShardedLruCache, SingleFlight};
+use crate::cache::{
+    persist, CacheConfig, CacheKey, CacheStats, Role, ShardedLruCache, SingleFlight,
+    SnapshotValue, Target,
+};
 use crate::ir::Graph;
-use crate::log_info;
 use crate::mig;
 use crate::runtime::ParamStore;
+use crate::{log_info, log_warn};
 
-use super::backend::{Backend, BackendFactory, PjrtBackend, SimBackend};
+use super::backend::{Backend, BackendFactory, PjrtBackend, PredictRequest, SimBackend};
 use super::protocol::Prediction;
 
 /// Batching + caching policy knobs.
@@ -41,6 +53,9 @@ pub struct CoordinatorOptions {
     /// Prediction-cache configuration (`CacheConfig::disabled()` restores
     /// the pre-cache serving path exactly).
     pub cache: CacheConfig,
+    /// Target configuration assumed for submissions that do not name one
+    /// (`--target-device`). Folded into every cache key.
+    pub target: Target,
 }
 
 impl Default for CoordinatorOptions {
@@ -49,6 +64,7 @@ impl Default for CoordinatorOptions {
             max_wait: Duration::from_millis(2),
             queue_depth: 1024,
             cache: CacheConfig::default(),
+            target: Target::default(),
         }
     }
 }
@@ -75,6 +91,13 @@ pub struct Metrics {
     pub cache_expirations: u64,
     pub cache_entries: u64,
     pub cache_capacity: u64,
+    /// Requests answered by a cached *negative* entry (tombstone): the
+    /// backend's earlier per-graph failure was replayed without the graph
+    /// ever reaching the executor again.
+    pub negative_hits: u64,
+    /// Entries preloaded from a disk snapshot at boot (plus any explicit
+    /// `cache_load` commands).
+    pub warm_start_entries: u64,
     /// End-to-end latencies (seconds) of backend-served requests (leaders
     /// and coalesced followers), bounded ring. Cache hits are not recorded
     /// here: the hit path is lock-free by design and its latency is the
@@ -110,11 +133,76 @@ fn push_latency(m: &mut Metrics, seconds: f64) {
     }
 }
 
+/// What the prediction cache stores per composite (graph, target) key.
+#[derive(Debug, Clone)]
+pub enum CacheValue {
+    /// A successfully served prediction.
+    Pred(Prediction),
+    /// Negative entry: the backend rejected this request (featurization
+    /// failure such as a `max_nodes` overflow, or an unservable target).
+    /// Short-TTL by construction, so repeated poison graphs are answered
+    /// on the submit path without reaching the executor, while a fixed
+    /// backend is picked up quickly. Never written to snapshots.
+    Tombstone(String),
+}
+
+impl SnapshotValue for CacheValue {
+    fn snapshot_encode(&self) -> Option<Vec<u8>> {
+        let CacheValue::Pred(p) = self else {
+            return None; // tombstones are excluded from snapshots
+        };
+        let mut out = Vec::with_capacity(32);
+        out.extend_from_slice(&p.latency_ms.to_le_bytes());
+        out.extend_from_slice(&p.memory_mb.to_le_bytes());
+        out.extend_from_slice(&p.energy_j.to_le_bytes());
+        match &p.mig_profile {
+            None => out.push(0),
+            Some(name) => {
+                out.push(1);
+                out.push(name.len().min(255) as u8);
+                out.extend_from_slice(&name.as_bytes()[..name.len().min(255)]);
+            }
+        }
+        Some(out)
+    }
+
+    fn snapshot_decode(bytes: &[u8]) -> Result<CacheValue> {
+        if bytes.len() < 25 {
+            bail!("prediction payload too short ({} bytes)", bytes.len());
+        }
+        let f = |i: usize| f64::from_le_bytes(bytes[i * 8..i * 8 + 8].try_into().unwrap());
+        let mig_profile = match bytes[24] {
+            0 if bytes.len() == 25 => None,
+            1 if bytes.len() >= 26 && bytes.len() == 26 + bytes[25] as usize => Some(
+                String::from_utf8(bytes[26..].to_vec())
+                    .map_err(|_| anyhow!("mig profile name is not utf-8"))?,
+            ),
+            _ => bail!("malformed prediction payload ({} bytes)", bytes.len()),
+        };
+        Ok(CacheValue::Pred(Prediction {
+            latency_ms: f(0),
+            memory_mb: f(1),
+            energy_j: f(2),
+            mig_profile,
+        }))
+    }
+}
+
 struct Job {
     graph: Graph,
-    fingerprint: Option<Fingerprint>,
+    target: Target,
+    key: Option<CacheKey>,
     enqueued: Instant,
     reply: Sender<Result<Prediction>>,
+}
+
+/// Interruptible shutdown signal for the snapshot timer thread: the
+/// thread sleeps on the condvar until the next deadline and is woken
+/// immediately by [`Coordinator::drop`] — one wakeup per interval instead
+/// of a polling loop.
+struct SnapSignal {
+    stopped: Mutex<bool>,
+    cv: Condvar,
 }
 
 /// Handle to the serving coordinator. Cloneable submit side; the executor
@@ -125,10 +213,18 @@ pub struct Coordinator {
     /// Submission counter, kept out of the metrics mutex so the cache-hit
     /// fast path takes no global lock.
     requests: AtomicU64,
-    cache: Option<Arc<ShardedLruCache<Prediction>>>,
+    /// Tombstone hits, same reasoning.
+    negative_hits: AtomicU64,
+    /// Entries restored from disk snapshots (boot preload + cache_load).
+    warm_start: AtomicU64,
+    cache: Option<Arc<ShardedLruCache<CacheValue>>>,
     flight: Option<Arc<SingleFlight<Prediction>>>,
+    default_target: Target,
+    snapshot_path: Option<PathBuf>,
     stop: Arc<AtomicBool>,
     handle: Option<JoinHandle<()>>,
+    snap_signal: Option<Arc<SnapSignal>>,
+    snap_handle: Option<JoinHandle<()>>,
 }
 
 impl Coordinator {
@@ -166,85 +262,205 @@ impl Coordinator {
         let cache = opts
             .cache
             .enabled
-            .then(|| Arc::new(ShardedLruCache::new(&opts.cache)));
+            .then(|| Arc::new(ShardedLruCache::<CacheValue>::new(&opts.cache)));
         let flight = (opts.cache.enabled && opts.cache.single_flight)
             .then(|| Arc::new(SingleFlight::new()));
+
+        // Warm start: preload the disk snapshot if one exists. A rejected
+        // snapshot (corrupted, truncated, wrong version) is a logged cold
+        // start, never a startup failure.
+        let mut warm = 0u64;
+        if let (Some(cache), Some(path)) = (&cache, &opts.cache.snapshot_path) {
+            if path.exists() {
+                match persist::load_snapshot(path, cache.as_ref()) {
+                    Ok(r) => {
+                        warm = r.entries as u64;
+                        log_info!(
+                            "cache warm start: {} entries from {} ({} expired)",
+                            r.entries,
+                            path.display(),
+                            r.expired
+                        );
+                    }
+                    Err(e) => {
+                        log_warn!(
+                            "cache snapshot {} rejected ({e:#}); cold start",
+                            path.display()
+                        );
+                    }
+                }
+            }
+        }
+
         let m2 = metrics.clone();
         let s2 = stop.clone();
         let c2 = cache.clone();
         let f2 = flight.clone();
         let max_wait = opts.max_wait;
+        let negative_ttl = opts.cache.negative_ttl;
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let handle = std::thread::Builder::new()
             .name("dippm-executor".into())
-            .spawn(move || executor_main(factory, max_wait, rx, m2, c2, f2, s2, ready_tx))
+            .spawn(move || {
+                executor_main(factory, max_wait, negative_ttl, rx, m2, c2, f2, s2, ready_tx)
+            })
             .expect("spawn executor");
         // Propagate startup errors (bad artifacts, checkpoint mismatch).
         ready_rx
             .recv()
             .map_err(|_| anyhow!("executor thread died during startup"))??;
+
+        // Periodic snapshot rotation (atomic rename; see cache::persist).
+        let mut snap_signal = None;
+        let snap_handle = match (&cache, &opts.cache.snapshot_path, opts.cache.snapshot_every) {
+            (Some(cache), Some(path), Some(every)) if every > Duration::ZERO => {
+                let cache = cache.clone();
+                let path = path.clone();
+                let signal = Arc::new(SnapSignal {
+                    stopped: Mutex::new(false),
+                    cv: Condvar::new(),
+                });
+                snap_signal = Some(signal.clone());
+                Some(
+                    std::thread::Builder::new()
+                        .name("dippm-cache-snapshot".into())
+                        .spawn(move || snapshot_main(cache, path, every, signal))
+                        .expect("spawn snapshot thread"),
+                )
+            }
+            _ => None,
+        };
+
         Ok(Coordinator {
             tx,
             metrics,
             requests: AtomicU64::new(0),
+            negative_hits: AtomicU64::new(0),
+            warm_start: AtomicU64::new(warm),
             cache,
             flight,
+            default_target: opts.target,
+            snapshot_path: opts.cache.snapshot_path,
             stop,
             handle: Some(handle),
+            snap_signal,
+            snap_handle,
         })
     }
 
-    /// Submit a graph; returns a receiver for the prediction. Cache hits
-    /// reply before this returns; misses enqueue (or coalesce onto an
-    /// identical in-flight submission).
+    /// The target assumed for submissions that do not name one.
+    pub fn default_target(&self) -> &Target {
+        &self.default_target
+    }
+
+    /// Submit a graph for the default target; see [`Coordinator::submit_to`].
     pub fn submit(&self, graph: Graph) -> Receiver<Result<Prediction>> {
+        self.submit_to(graph, self.default_target.clone())
+    }
+
+    /// Submit a graph for a specific target; returns a receiver for the
+    /// prediction. Cache hits (positive and negative) reply before this
+    /// returns; misses enqueue (or coalesce onto an identical in-flight
+    /// submission of the same graph × target).
+    pub fn submit_to(&self, graph: Graph, target: Target) -> Receiver<Result<Prediction>> {
         let (reply, rx) = mpsc::channel();
         let enqueued = Instant::now();
         self.requests.fetch_add(1, Ordering::Relaxed);
-        let mut fingerprint = None;
+        let mut key = None;
         if let Some(cache) = &self.cache {
-            let fp = Fingerprint::of_graph(&graph);
-            if let Some(pred) = cache.get(fp) {
+            let k = CacheKey::of(&graph, &target);
+            match cache.get(k) {
                 // Lock-free reply: the hit path never touches the metrics
                 // mutex, the queue or the executor.
-                let _ = reply.send(Ok(pred));
-                return rx;
+                Some(CacheValue::Pred(pred)) => {
+                    let _ = reply.send(Ok(pred));
+                    return rx;
+                }
+                Some(CacheValue::Tombstone(msg)) => {
+                    self.negative_hits.fetch_add(1, Ordering::Relaxed);
+                    let _ = reply.send(Err(anyhow!("{msg}")));
+                    return rx;
+                }
+                None => {}
             }
             if let Some(flight) = &self.flight {
-                match flight.join(fp.as_u128(), reply.clone(), enqueued) {
+                match flight.join(k.as_u128(), reply.clone(), enqueued) {
                     Role::Follower => return rx,
                     Role::Leader => {}
                 }
             }
-            fingerprint = Some(fp);
+            key = Some(k);
         }
         let job = Job {
             graph,
-            fingerprint,
+            target,
+            key,
             enqueued,
             reply,
         };
         if self.tx.send(job).is_err() {
             // Executor gone; every receiver sees a disconnect. Close the
             // flight so parked followers disconnect too instead of hanging.
-            if let (Some(fp), Some(flight)) = (fingerprint, &self.flight) {
-                drop(flight.take(fp.as_u128()));
+            if let (Some(k), Some(flight)) = (key, &self.flight) {
+                drop(flight.take(k.as_u128()));
             }
         }
         rx
     }
 
-    /// Blocking convenience: submit and wait.
+    /// Blocking convenience: submit for the default target and wait.
     pub fn predict(&self, graph: Graph) -> Result<Prediction> {
-        self.submit(graph)
+        self.predict_to(graph, None)
+    }
+
+    /// Blocking convenience: submit for `target` (default when `None`)
+    /// and wait.
+    pub fn predict_to(&self, graph: Graph, target: Option<Target>) -> Result<Prediction> {
+        let target = target.unwrap_or_else(|| self.default_target.clone());
+        self.submit_to(graph, target)
             .recv()
             .map_err(|_| anyhow!("coordinator shut down"))?
+    }
+
+    /// Snapshot the cache to `path`, or to the configured `--cache-file`
+    /// when `None`. Errors when the cache is disabled or no path resolves.
+    pub fn save_cache(&self, path: Option<&str>) -> Result<persist::SaveReport> {
+        let cache = self
+            .cache
+            .as_ref()
+            .ok_or_else(|| anyhow!("cache disabled (--no-cache)"))?;
+        let path = self.resolve_snapshot_path(path)?;
+        persist::save_snapshot(&path, cache.as_ref())
+    }
+
+    /// Load a snapshot from `path` (or the configured `--cache-file`) into
+    /// the live cache, counting restored entries as warm starts. Errors
+    /// propagate — an explicit load of a corrupted file should be visible,
+    /// unlike the tolerant preload at boot.
+    pub fn load_cache(&self, path: Option<&str>) -> Result<persist::LoadReport> {
+        let cache = self
+            .cache
+            .as_ref()
+            .ok_or_else(|| anyhow!("cache disabled (--no-cache)"))?;
+        let path = self.resolve_snapshot_path(path)?;
+        let report = persist::load_snapshot(&path, cache.as_ref())?;
+        self.warm_start
+            .fetch_add(report.entries as u64, Ordering::Relaxed);
+        Ok(report)
+    }
+
+    fn resolve_snapshot_path(&self, path: Option<&str>) -> Result<PathBuf> {
+        path.map(|p| Path::new(p).to_path_buf())
+            .or_else(|| self.snapshot_path.clone())
+            .ok_or_else(|| anyhow!("no snapshot path (start with --cache-file or pass one)"))
     }
 
     /// Snapshot of serving metrics with cache counters folded in.
     pub fn metrics(&self) -> Metrics {
         let mut m = self.metrics.lock().unwrap().clone();
         m.requests = self.requests.load(Ordering::Relaxed);
+        m.negative_hits = self.negative_hits.load(Ordering::Relaxed);
+        m.warm_start_entries = self.warm_start.load(Ordering::Relaxed);
         if let Some(cache) = &self.cache {
             let s = cache.stats();
             m.cache_enabled = true;
@@ -268,6 +484,11 @@ impl Coordinator {
 impl Drop for Coordinator {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
+        // Wake the snapshot thread out of its deadline sleep immediately.
+        if let Some(signal) = &self.snap_signal {
+            *signal.stopped.lock().unwrap() = true;
+            signal.cv.notify_all();
+        }
         // Unblock the executor by closing the channel.
         // (tx dropped after handle join would deadlock; drop it via replace.)
         let (dummy_tx, _) = mpsc::sync_channel(1);
@@ -276,6 +497,62 @@ impl Drop for Coordinator {
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
+        if let Some(h) = self.snap_handle.take() {
+            let _ = h.join();
+        }
+        // Graceful-shutdown hook: final snapshot so the next boot is hot.
+        if let (Some(cache), Some(path)) = (&self.cache, &self.snapshot_path) {
+            match persist::save_snapshot(path, cache.as_ref()) {
+                Ok(r) => log_info!(
+                    "cache snapshot on shutdown: {} entries -> {}",
+                    r.entries,
+                    path.display()
+                ),
+                Err(e) => log_warn!("cache snapshot on shutdown failed: {e:#}"),
+            }
+        }
+    }
+}
+
+/// Timer loop for `--cache-snapshot-every-s`: sleeps on the condvar until
+/// the next deadline (one wakeup per interval — no polling), rotates a
+/// snapshot, repeats. Shutdown notifies the condvar for a prompt exit.
+fn snapshot_main(
+    cache: Arc<ShardedLruCache<CacheValue>>,
+    path: PathBuf,
+    every: Duration,
+    signal: Arc<SnapSignal>,
+) {
+    let mut last = Instant::now();
+    loop {
+        // Interruptible wait until the next deadline (or shutdown).
+        let mut stopped = signal.stopped.lock().unwrap();
+        loop {
+            if *stopped {
+                return;
+            }
+            let elapsed = last.elapsed();
+            if elapsed >= every {
+                break;
+            }
+            // Spurious wakeups just re-enter the deadline check.
+            let (guard, _timed_out) = signal
+                .cv
+                .wait_timeout(stopped, every - elapsed)
+                .unwrap();
+            stopped = guard;
+        }
+        // Save outside the lock so shutdown is never blocked on disk IO.
+        drop(stopped);
+        match persist::save_snapshot(&path, cache.as_ref()) {
+            Ok(r) => crate::log_debug!(
+                "cache snapshot: {} entries -> {}",
+                r.entries,
+                path.display()
+            ),
+            Err(e) => log_warn!("periodic cache snapshot failed: {e:#}"),
+        }
+        last = Instant::now();
     }
 }
 
@@ -283,9 +560,10 @@ impl Drop for Coordinator {
 fn executor_main(
     factory: BackendFactory,
     max_wait: Duration,
+    negative_ttl: Option<Duration>,
     rx: Receiver<Job>,
     metrics: Arc<Mutex<Metrics>>,
-    cache: Option<Arc<ShardedLruCache<Prediction>>>,
+    cache: Option<Arc<ShardedLruCache<CacheValue>>>,
     flight: Option<Arc<SingleFlight<Prediction>>>,
     stop: Arc<AtomicBool>,
     ready: Sender<Result<()>>,
@@ -332,8 +610,23 @@ fn executor_main(
         }
 
         let result = {
-            let graphs: Vec<&Graph> = jobs.iter().map(|j| &j.graph).collect();
-            backend.predict_raw(&graphs)
+            let requests: Vec<PredictRequest<'_>> = jobs
+                .iter()
+                .map(|j| PredictRequest {
+                    graph: &j.graph,
+                    target: &j.target,
+                })
+                .collect();
+            backend.predict_raw(&requests)
+        };
+        let result = match result {
+            Ok(outcomes) if outcomes.len() == jobs.len() => Ok(outcomes),
+            Ok(outcomes) => Err(anyhow!(
+                "backend returned {} outcomes for {} jobs",
+                outcomes.len(),
+                jobs.len()
+            )),
+            Err(e) => Err(e),
         };
 
         // Publish to cache, wake followers, reply + metrics.
@@ -341,35 +634,62 @@ fn executor_main(
         m.batches += 1;
         m.batch_fill_sum += jobs.len() as u64;
         match result {
-            Ok(raws) => {
-                for (job, raw) in jobs.into_iter().zip(raws) {
-                    let pred = Prediction {
-                        latency_ms: raw[0],
-                        memory_mb: raw[1],
-                        energy_j: raw[2],
-                        mig_profile: mig::predict_profile(raw[1])
-                            .map(|p| p.name().to_string()),
-                    };
-                    if let (Some(fp), Some(cache)) = (job.fingerprint, &cache) {
-                        cache.insert(fp, pred.clone());
-                    }
-                    if let (Some(fp), Some(flight)) = (job.fingerprint, &flight) {
-                        for w in flight.take(fp.as_u128()) {
-                            m.coalesced += 1;
-                            push_latency(&mut m, w.enqueued.elapsed().as_secs_f64());
-                            let _ = w.reply.send(Ok(pred.clone()));
+            Ok(outcomes) => {
+                for (job, outcome) in jobs.into_iter().zip(outcomes) {
+                    match outcome {
+                        Ok(raw) => {
+                            let pred = Prediction {
+                                latency_ms: raw[0],
+                                memory_mb: raw[1],
+                                energy_j: raw[2],
+                                mig_profile: mig::predict_profile(raw[1])
+                                    .map(|p| p.name().to_string()),
+                            };
+                            if let (Some(k), Some(cache)) = (job.key, &cache) {
+                                cache.insert(k, CacheValue::Pred(pred.clone()));
+                            }
+                            if let (Some(k), Some(flight)) = (job.key, &flight) {
+                                for w in flight.take(k.as_u128()) {
+                                    m.coalesced += 1;
+                                    push_latency(&mut m, w.enqueued.elapsed().as_secs_f64());
+                                    let _ = w.reply.send(Ok(pred.clone()));
+                                }
+                            }
+                            push_latency(&mut m, job.enqueued.elapsed().as_secs_f64());
+                            let _ = job.reply.send(Ok(pred));
+                        }
+                        Err(msg) => {
+                            // Per-request failure: tombstone it so repeats
+                            // are served on the submit path, then fail the
+                            // leader and every parked follower.
+                            m.errors += 1;
+                            if let (Some(k), Some(cache), Some(ttl)) =
+                                (job.key, &cache, negative_ttl)
+                            {
+                                cache.insert_with_ttl(
+                                    k,
+                                    CacheValue::Tombstone(msg.clone()),
+                                    Some(ttl),
+                                );
+                            }
+                            if let (Some(k), Some(flight)) = (job.key, &flight) {
+                                for w in flight.take(k.as_u128()) {
+                                    m.errors += 1;
+                                    let _ = w.reply.send(Err(anyhow!("{msg}")));
+                                }
+                            }
+                            let _ = job.reply.send(Err(anyhow!("{msg}")));
                         }
                     }
-                    push_latency(&mut m, job.enqueued.elapsed().as_secs_f64());
-                    let _ = job.reply.send(Ok(pred));
                 }
             }
             Err(e) => {
+                // Batch-level (infrastructure) failure: nothing cacheable.
                 let msg = format!("{e:#}");
                 for job in jobs {
                     m.errors += 1;
-                    if let (Some(fp), Some(flight)) = (job.fingerprint, &flight) {
-                        for w in flight.take(fp.as_u128()) {
+                    if let (Some(k), Some(flight)) = (job.key, &flight) {
+                        for w in flight.take(k.as_u128()) {
                             m.errors += 1;
                             let _ = w.reply.send(Err(anyhow!("{msg}")));
                         }
@@ -394,6 +714,8 @@ mod tests {
         assert!(o.cache.enabled);
         assert!(o.cache.single_flight);
         assert!(o.cache.capacity >= 1024);
+        assert_eq!(o.target, Target::default());
+        assert!(o.cache.negative_ttl.is_some());
     }
 
     #[test]
@@ -418,6 +740,53 @@ mod tests {
         assert_eq!(Metrics::default().cache_hit_rate(), 0.0);
     }
 
+    #[test]
+    fn cache_value_snapshot_roundtrip() {
+        let pred = Prediction {
+            latency_ms: 1.25,
+            memory_mb: 2865.0,
+            energy_j: 0.75,
+            mig_profile: Some("1g.5gb".into()),
+        };
+        let bytes = CacheValue::Pred(pred.clone()).snapshot_encode().unwrap();
+        let CacheValue::Pred(back) = CacheValue::snapshot_decode(&bytes).unwrap() else {
+            panic!("decoded a tombstone");
+        };
+        assert_eq!(back, pred);
+
+        let no_mig = Prediction {
+            mig_profile: None,
+            ..pred
+        };
+        let bytes = CacheValue::Pred(no_mig.clone()).snapshot_encode().unwrap();
+        let CacheValue::Pred(back) = CacheValue::snapshot_decode(&bytes).unwrap() else {
+            panic!("decoded a tombstone");
+        };
+        assert_eq!(back, no_mig);
+    }
+
+    #[test]
+    fn tombstones_refuse_snapshot_encoding() {
+        assert!(CacheValue::Tombstone("max_nodes".into())
+            .snapshot_encode()
+            .is_none());
+    }
+
+    #[test]
+    fn cache_value_decode_rejects_garbage() {
+        assert!(CacheValue::snapshot_decode(&[]).is_err());
+        assert!(CacheValue::snapshot_decode(&[0u8; 24]).is_err());
+        let mut bad_tag = vec![0u8; 25];
+        bad_tag[24] = 7;
+        assert!(CacheValue::snapshot_decode(&bad_tag).is_err());
+        // Tag says "profile follows" but the length lies.
+        let mut short = vec![0u8; 27];
+        short[24] = 1;
+        short[25] = 200;
+        assert!(CacheValue::snapshot_decode(&short).is_err());
+    }
+
     // End-to-end coordinator tests (simulator backend, plus PJRT when
-    // artifacts exist) live in rust/tests/coordinator_integration.rs.
+    // artifacts exist) live in rust/tests/coordinator_integration.rs and
+    // rust/tests/cache_persistence.rs.
 }

@@ -12,9 +12,12 @@ use anyhow::Result;
 use crate::ir::Graph;
 use crate::log_info;
 
-use super::protocol::{cache_stats_response, error_response, parse_cmd, parse_request_value};
+use super::protocol::{
+    cache_load_response, cache_save_response, cache_stats_response, error_response, parse_cmd,
+    parse_request_value, parse_target_value,
+};
 use super::server::Coordinator;
-use crate::util::json::Json;
+use crate::util::json::{Json, JsonObj};
 
 /// Serve forever on `addr` (e.g. "127.0.0.1:7401"). Returns the bound port
 /// via the callback (useful with port 0 in tests).
@@ -54,11 +57,22 @@ fn handle_connection(coordinator: &Coordinator, stream: TcpStream) -> Result<()>
             Err(e) => error_response(&e.to_string()),
             Ok(v) => match parse_cmd(&v) {
                 Some("cache_stats") => cache_stats_response(&coordinator.metrics()),
+                Some("cache_save") => match coordinator.save_cache(v.path(&["path"]).as_str()) {
+                    Ok(r) => cache_save_response(&r),
+                    Err(e) => error_response(&format!("{e:#}")),
+                },
+                Some("cache_load") => match coordinator.load_cache(v.path(&["path"]).as_str()) {
+                    Ok(r) => cache_load_response(&r),
+                    Err(e) => error_response(&format!("{e:#}")),
+                },
                 Some(other) => error_response(&format!("unknown cmd {other:?}")),
                 None => match parse_request_value(&v) {
-                    Ok(graph) => match coordinator.predict(graph) {
-                        Ok(pred) => pred.to_json().to_string(),
-                        Err(e) => error_response(&format!("{e:#}")),
+                    Ok(graph) => match parse_target_value(&v) {
+                        Ok(target) => match coordinator.predict_to(graph, target) {
+                            Ok(pred) => pred.to_json().to_string(),
+                            Err(e) => error_response(&format!("{e:#}")),
+                        },
+                        Err(e) => error_response(&e),
                     },
                     Err(e) => error_response(&e),
                 },
@@ -101,11 +115,41 @@ impl Client {
         self.roundtrip("{\"cmd\":\"cache_stats\"}")
     }
 
+    fn cache_cmd(&mut self, cmd: &str, path: Option<&str>) -> Result<String> {
+        let mut o = JsonObj::new();
+        o.insert("cmd", cmd);
+        if let Some(p) = path {
+            o.insert("path", p);
+        }
+        self.roundtrip(&Json::Obj(o).to_string())
+    }
+
+    /// Ask the server to snapshot its cache (`path` = override the
+    /// server's `--cache-file`).
+    pub fn cache_save(&mut self, path: Option<&str>) -> Result<String> {
+        self.cache_cmd("cache_save", path)
+    }
+
+    /// Ask the server to preload a snapshot into its live cache.
+    pub fn cache_load(&mut self, path: Option<&str>) -> Result<String> {
+        self.cache_cmd("cache_load", path)
+    }
+
     /// Convenience: predict a graph via its native-format export.
     pub fn predict_graph(&mut self, graph: &Graph) -> Result<String> {
         let model = crate::frontends::export(crate::frontends::Framework::Native, graph);
         let line = format!(
             "{{\"framework\":\"native\",\"model\":{}}}",
+            compact_json(&model)
+        );
+        self.roundtrip(&line)
+    }
+
+    /// Convenience: predict a graph for a specific target configuration.
+    pub fn predict_graph_on(&mut self, graph: &Graph, target: &str) -> Result<String> {
+        let model = crate::frontends::export(crate::frontends::Framework::Native, graph);
+        let line = format!(
+            "{{\"framework\":\"native\",\"target\":\"{target}\",\"model\":{}}}",
             compact_json(&model)
         );
         self.roundtrip(&line)

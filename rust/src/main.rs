@@ -17,7 +17,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
-use dippm::cache::CacheConfig;
+use dippm::cache::{CacheConfig, Target};
 use dippm::coordinator::{Coordinator, CoordinatorOptions};
 use dippm::dataset::{io as ds_io, Dataset};
 use dippm::frontends::{self, Framework};
@@ -42,12 +42,16 @@ COMMANDS
                  [--artifacts artifacts]
   evaluate       --dataset <file> --checkpoint <file> [--split test|val|train]
   predict        --model <file> [--framework auto] [--checkpoint <file>]
-                 [--backend auto|pjrt|sim]
+                 [--backend auto|pjrt|sim] [--target-device a100[:MIG]]
+                 [--cache-file <file>]
   serve          [--checkpoint <file>] [--addr 127.0.0.1:7401] [--max-wait-ms 2]
                  [--backend auto|pjrt|sim] [--no-cache] [--no-dedup]
                  [--cache-capacity 8192] [--cache-shards 8] [--cache-ttl-s N]
+                 [--cache-file <file>] [--cache-snapshot-every-s N]
+                 [--target-device a100[:MIG]]   (MIG: 1g.5gb|2g.10gb|3g.20gb|7g.40gb)
   cache-stats    [--addr 127.0.0.1:7401]
   mig            --model <file> [--framework auto] [--checkpoint <file>]
+                 [--target-device a100[:MIG]]
   compare-gnn    --dataset <file> [--epochs 10] [--lr 1e-3] [--max-train N]
   lr-find        --dataset <file> [--variant sage] [--steps 60]
   show-config
@@ -59,6 +63,7 @@ fn main() {
         "variant", "epochs", "lr", "max-train", "artifacts", "checkpoint",
         "split", "model", "framework", "addr", "max-wait-ms", "steps",
         "backend", "cache-capacity", "cache-shards", "cache-ttl-s",
+        "cache-file", "cache-snapshot-every-s", "target-device",
     ]) {
         Ok(a) => a,
         Err(e) => {
@@ -94,29 +99,45 @@ fn artifacts_dir(args: &Args) -> String {
     args.get_or("artifacts", "artifacts").to_string()
 }
 
-fn coordinator_options(args: &Args) -> Result<CoordinatorOptions> {
-    let ttl = match args.get("cache-ttl-s") {
-        None => None,
+fn seconds_arg(args: &Args, key: &str) -> Result<Option<std::time::Duration>> {
+    match args.get(key) {
+        None => Ok(None),
         Some(v) => {
             let secs: f64 = v
                 .parse()
-                .map_err(|_| anyhow!("--cache-ttl-s must be a number, got {v:?}"))?;
+                .map_err(|_| anyhow!("--{key} must be a number, got {v:?}"))?;
             if !secs.is_finite() || secs < 0.0 {
-                return Err(anyhow!("--cache-ttl-s must be >= 0, got {v:?}"));
+                return Err(anyhow!("--{key} must be >= 0, got {v:?}"));
             }
-            Some(std::time::Duration::from_secs_f64(secs))
+            std::time::Duration::try_from_secs_f64(secs)
+                .map(Some)
+                .map_err(|_| anyhow!("--{key} is out of range, got {v:?}"))
         }
-    };
+    }
+}
+
+fn target_from_args(args: &Args) -> Result<Target> {
+    match args.get("target-device") {
+        None => Ok(Target::default()),
+        Some(s) => Target::parse(s).map_err(|e| anyhow!(e)),
+    }
+}
+
+fn coordinator_options(args: &Args) -> Result<CoordinatorOptions> {
     let cache = CacheConfig {
         enabled: !args.flag("no-cache"),
         single_flight: !args.flag("no-dedup"),
         capacity: args.get_usize("cache-capacity", 8192),
         shards: args.get_usize("cache-shards", 8),
-        ttl,
+        ttl: seconds_arg(args, "cache-ttl-s")?,
+        snapshot_path: args.get("cache-file").map(std::path::PathBuf::from),
+        snapshot_every: seconds_arg(args, "cache-snapshot-every-s")?,
+        ..Default::default()
     };
     Ok(CoordinatorOptions {
         max_wait: std::time::Duration::from_millis(args.get_u64("max-wait-ms", 2)),
         cache,
+        target: target_from_args(args)?,
         ..Default::default()
     })
 }
@@ -287,11 +308,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let coord = Arc::new(start_coordinator(args, opts.clone())?);
     let addr = args.get_or("addr", "127.0.0.1:7401");
     let cache_desc = if opts.cache.enabled {
+        let persist_desc = match (&opts.cache.snapshot_path, opts.cache.snapshot_every) {
+            (Some(p), Some(every)) => {
+                format!(", snapshots -> {} every {:.0}s", p.display(), every.as_secs_f64())
+            }
+            (Some(p), None) => format!(", snapshot -> {} on shutdown", p.display()),
+            _ => String::new(),
+        };
         format!(
-            "cache on (capacity {}, {} shards, dedup {})",
+            "cache on (capacity {}, {} shards, dedup {}, target {}{persist_desc})",
             opts.cache.capacity,
             opts.cache.shards,
-            if opts.cache.single_flight { "on" } else { "off" }
+            if opts.cache.single_flight { "on" } else { "off" },
+            opts.target,
         )
     } else {
         "cache off".to_string()
@@ -312,8 +341,14 @@ fn cmd_cache_stats(args: &Args) -> Result<()> {
 fn cmd_mig(args: &Args) -> Result<()> {
     let graph = read_model(args)?;
     let sim = Simulator::new();
-    let advisor = mig::MigAdvisor::new(sim.clone());
-    println!("MIG advisory for {} (batch {})", graph.variant, graph.batch);
+    let target = target_from_args(args)?;
+    // Advisory tables are memoized under the composite fingerprint x
+    // target key, so advisors for different devices never alias.
+    let advisor = mig::MigAdvisor::with_target(sim.clone(), target.clone());
+    println!(
+        "MIG advisory for {} (batch {}, target {target})",
+        graph.variant, graph.batch
+    );
     // Predicted side (via checkpoint / simulator backend) if available.
     let predicted_mem = if args.get("checkpoint").is_some() || args.get("backend").is_some() {
         let coord = start_coordinator(args, coordinator_options(args)?)?;

@@ -9,7 +9,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::cache::Fingerprint;
+use crate::cache::{CacheKey, Target};
 use crate::ir::Graph;
 use crate::simulator::{MigProfile, MigResult, Simulator, ALL_PROFILES};
 
@@ -75,9 +75,12 @@ pub struct Advice {
 
 /// Memoizing MIG advisor. Computing a [`ProfileTable`] runs the simulator
 /// once per profile; under design-space-exploration query storms the same
-/// architectures recur, so tables are cached by graph fingerprint.
+/// architectures recur, so tables are cached by the composite cache key
+/// (graph fingerprint × advisor target device) — two advisors pointed at
+/// different devices never alias each other's tables.
 pub struct MigAdvisor {
     sim: Simulator,
+    target: Target,
     memo: Mutex<HashMap<u128, Arc<ProfileTable>>>,
     hits: AtomicU64,
     misses: AtomicU64,
@@ -91,17 +94,35 @@ impl Default for MigAdvisor {
 
 impl MigAdvisor {
     pub fn new(sim: Simulator) -> MigAdvisor {
+        MigAdvisor::with_target(sim, Target::default())
+    }
+
+    /// An advisor whose memo keys are scoped to a specific target device,
+    /// so advisors for different devices never alias each other's tables.
+    /// Note the tables themselves are computed by the given `sim` (the
+    /// A100 analytical model — the only device simulated today); the
+    /// target partitions the memo space, it does not re-parameterize the
+    /// simulator. Pair a non-A100 target with an appropriately calibrated
+    /// `Simulator` when one exists.
+    pub fn with_target(sim: Simulator, target: Target) -> MigAdvisor {
         MigAdvisor {
             sim,
+            target,
             memo: Mutex::new(HashMap::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }
     }
 
-    /// The advisory table for `graph`, memoized by structural fingerprint.
+    /// The device this advisor's tables are computed for.
+    pub fn target(&self) -> &Target {
+        &self.target
+    }
+
+    /// The advisory table for `graph`, memoized by the composite
+    /// fingerprint × target key.
     pub fn table(&self, graph: &Graph) -> Arc<ProfileTable> {
-        let key = Fingerprint::of_graph(graph).as_u128();
+        let key = CacheKey::of(graph, &self.target).as_u128();
         if let Some(t) = self.memo.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return t.clone();
@@ -213,6 +234,27 @@ mod tests {
         b.conv_relu(x, 32, 3, 1, 1);
         adv.table(&b.finish());
         assert_eq!(adv.memo_stats(), (1, 2));
+    }
+
+    #[test]
+    fn advisor_memo_keys_are_target_scoped() {
+        let mut b = GraphBuilder::new("t", "memo-target", 1);
+        let x = b.input(vec![1, 3, 64, 64]);
+        b.conv_relu(x, 16, 3, 1, 1);
+        let g = b.finish();
+        let a100 = MigAdvisor::default();
+        let other = MigAdvisor::with_target(Simulator::new(), Target::new("a100-sxm8", None));
+        // Same graph, two devices: each advisor computes its own table
+        // under a distinct composite key (no cross-device aliasing).
+        let t1 = a100.table(&g);
+        let t2 = other.table(&g);
+        assert!(!Arc::ptr_eq(&t1, &t2));
+        assert_eq!(a100.memo_stats(), (0, 1));
+        assert_eq!(other.memo_stats(), (0, 1));
+        assert_ne!(
+            crate::cache::CacheKey::of(&g, a100.target()).as_u128(),
+            crate::cache::CacheKey::of(&g, other.target()).as_u128()
+        );
     }
 
     #[test]

@@ -10,7 +10,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use dippm::cache::CacheConfig;
+use dippm::cache::{CacheConfig, Target};
 use dippm::coordinator::{tcp, Coordinator, CoordinatorOptions};
 use dippm::frontends::{self, Framework};
 use dippm::modelgen::Family;
@@ -202,9 +202,7 @@ fn identical_graphs_get_identical_predictions() {
     assert_eq!(a, b);
 }
 
-#[test]
-fn oversized_graph_is_rejected_gracefully() {
-    let coord = sim_coordinator(CoordinatorOptions::default());
+fn oversized_graph() -> dippm::ir::Graph {
     // Fabricate a graph larger than MAX_NODES.
     let mut b = dippm::ir::GraphBuilder::new("t", "too-big", 1);
     let x = b.input(vec![1, 8, 16, 16]);
@@ -212,16 +210,92 @@ fn oversized_graph_is_rejected_gracefully() {
     for _ in 0..220 {
         h = b.conv_relu(h, 8, 3, 1, 1);
     }
-    let g = b.finish();
-    let err = coord.predict(g).unwrap_err();
+    b.finish()
+}
+
+#[test]
+fn oversized_graph_is_rejected_gracefully() {
+    let coord = sim_coordinator(CoordinatorOptions::default());
+    let err = coord.predict(oversized_graph()).unwrap_err();
     assert!(format!("{err:#}").contains("max_nodes"), "{err:#}");
-    // The coordinator must survive the error, and the failed prediction
-    // must not have been cached.
+    // The coordinator must survive the error; the failure is cached only
+    // as a tombstone (negative entry), never as a prediction.
     let ok = coord.predict(Family::Vgg.generate(0)).unwrap();
     assert!(ok.latency_ms.is_finite());
     let m = coord.metrics();
     assert_eq!(m.errors, 1);
-    assert_eq!(m.cache_entries, 1);
+    assert_eq!(m.cache_entries, 2, "one prediction + one tombstone");
+}
+
+#[test]
+fn repeated_poison_graph_is_tombstoned_not_reexecuted() {
+    let coord = sim_coordinator(CoordinatorOptions::default());
+    let g = oversized_graph();
+    let e1 = coord.predict(g.clone()).unwrap_err();
+    let batches_after_first = coord.metrics().batches;
+    // Second submission: answered from the tombstone on the submit path —
+    // the executor (and the backend) never see the graph again.
+    let e2 = coord.predict(g.clone()).unwrap_err();
+    let m = coord.metrics();
+    assert_eq!(m.batches, batches_after_first, "tombstone hit must not batch");
+    assert_eq!(m.negative_hits, 1);
+    assert_eq!(m.errors, 1, "tombstone replay is not a new executor error");
+    assert!(format!("{e1:#}").contains("max_nodes"));
+    assert!(format!("{e2:#}").contains("max_nodes"), "{e2:#}");
+}
+
+#[test]
+fn negative_caching_can_be_disabled() {
+    let coord = sim_coordinator(CoordinatorOptions {
+        cache: CacheConfig {
+            negative_ttl: None,
+            ..Default::default()
+        },
+        ..Default::default()
+    });
+    let g = oversized_graph();
+    coord.predict(g.clone()).unwrap_err();
+    coord.predict(g).unwrap_err();
+    let m = coord.metrics();
+    assert_eq!(m.negative_hits, 0);
+    assert_eq!(m.errors, 2, "without tombstones both submissions execute");
+    assert_eq!(m.cache_entries, 0);
+}
+
+#[test]
+fn same_graph_two_targets_is_two_backend_executions() {
+    let coord = sim_coordinator(CoordinatorOptions::default());
+    let g = Family::ResNet.generate(1);
+    let full = coord
+        .predict_to(g.clone(), Some(Target::default()))
+        .unwrap();
+    let m1 = coord.metrics();
+    assert_eq!((m1.cache_hits, m1.cache_misses), (0, 1));
+
+    // Same graph, sliced target: a distinct composite key — a miss, a new
+    // backend execution, and a different (slower) answer.
+    let slice = coord
+        .predict_to(g.clone(), Some(Target::parse("a100:1g.5gb").unwrap()))
+        .unwrap();
+    let m2 = coord.metrics();
+    assert_eq!((m2.cache_hits, m2.cache_misses), (0, 2));
+    assert_eq!(m2.batches, 2);
+    assert_eq!(m2.cache_entries, 2);
+    assert!(
+        slice.latency_ms > full.latency_ms,
+        "1/7th slice must be slower: {} vs {}",
+        slice.latency_ms,
+        full.latency_ms
+    );
+
+    // Each target now hits its own entry.
+    coord.predict_to(g.clone(), Some(Target::default())).unwrap();
+    coord
+        .predict_to(g, Some(Target::parse("a100:1g.5gb").unwrap()))
+        .unwrap();
+    let m3 = coord.metrics();
+    assert_eq!(m3.cache_hits, 2);
+    assert_eq!(m3.batches, 2, "both repeats were cache hits");
 }
 
 #[test]
@@ -294,6 +368,40 @@ fn tcp_end_to_end_all_frameworks() {
     assert!(resp.contains("\"ok\":false"), "{resp}");
     let resp = client.predict_graph(&g).unwrap();
     assert!(resp.contains("\"ok\":true"));
+}
+
+#[test]
+fn tcp_target_field_selects_cache_entry() {
+    let coord = Arc::new(sim_coordinator(CoordinatorOptions::default()));
+    let (port_tx, port_rx) = std::sync::mpsc::channel();
+    {
+        let coord = coord.clone();
+        std::thread::spawn(move || {
+            tcp::serve(coord, "127.0.0.1:0", move |p| {
+                let _ = port_tx.send(p);
+            })
+            .unwrap();
+        });
+    }
+    let port = port_rx.recv().unwrap();
+    let mut client = tcp::Client::connect(&format!("127.0.0.1:{port}")).unwrap();
+
+    let g = Family::MobileNet.generate(2);
+    let full = client.predict_graph(&g).unwrap();
+    let sliced = client.predict_graph_on(&g, "a100:2g.10gb").unwrap();
+    let full_v = Json::parse(&full).unwrap();
+    let sliced_v = Json::parse(&sliced).unwrap();
+    assert_eq!(full_v.path(&["ok"]).as_bool(), Some(true), "{full}");
+    assert_eq!(sliced_v.path(&["ok"]).as_bool(), Some(true), "{sliced}");
+    assert!(
+        sliced_v.path(&["latency_ms"]).as_f64().unwrap()
+            > full_v.path(&["latency_ms"]).as_f64().unwrap()
+    );
+    // Two targets, two entries; a bad target is a structured error.
+    let stats = Json::parse(&client.cache_stats().unwrap()).unwrap();
+    assert_eq!(stats.path(&["entries"]).as_usize(), Some(2));
+    let bad = client.predict_graph_on(&g, "a100:9g.80gb").unwrap();
+    assert!(bad.contains("\"ok\":false"), "{bad}");
 }
 
 #[test]
