@@ -1,0 +1,161 @@
+//! Dataset-build & analyze-once throughput (Perf/L2): the offline half of
+//! the one-pass `GraphAnalysis` win.
+//!
+//! Two measurements, both written to the `BENCH_dataset_build.json` CI
+//! artifact when `DIPPM_BENCH_JSON` is set:
+//!
+//! 1. **Dataset build** — `Dataset::build` (generate → analyze once →
+//!    measure, per graph) at 1 worker vs a multi-worker pool, proving the
+//!    builder parallelizes and stays deterministic across worker counts.
+//! 2. **MIG sweep** — a 7-profile advisory sweep over one graph per
+//!    family, per-profile recompute (the seed path's shape: every profile
+//!    re-derives costs/fusion/liveness) vs analyze-once
+//!    (`GraphAnalysis::of` + `measure_mig_analyzed` × 7). A smoke
+//!    assertion fails the bench if analyze-once is ever slower than the
+//!    recompute path — the regression gate CI runs on every commit.
+//!
+//! Scale knobs: DIPPM_BENCH_FRACTION, DIPPM_BENCH_WORKERS, FULL=1.
+
+#[path = "common.rs"]
+mod common;
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use dippm::dataset::Dataset;
+use dippm::ir::Graph;
+use dippm::modelgen::ALL_FAMILIES;
+use dippm::simulator::{GraphAnalysis, MigResult, Simulator, ALL_PROFILES};
+use dippm::util::bench::{banner, Table};
+use dippm::util::json::{Json, JsonObj};
+use dippm::util::stats::quantile;
+use dippm::util::threadpool::ThreadPool;
+
+fn main() {
+    banner("Perf/L2", "dataset build & analyze-once MIG sweep");
+    let fraction = common::fraction(0.02, 0.25);
+    let workers_mt = common::env_usize(
+        "DIPPM_BENCH_WORKERS",
+        ThreadPool::default_parallelism().clamp(2, 8),
+    );
+
+    // --- dataset build: 1 worker vs pool --------------------------------
+    let t0 = Instant::now();
+    let ds_serial = Dataset::build(fraction, 42, 1);
+    let serial_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let ds_parallel = Dataset::build(fraction, 42, workers_mt);
+    let parallel_s = t0.elapsed().as_secs_f64();
+    assert_eq!(ds_serial.len(), ds_parallel.len(), "worker count changed the dataset");
+    for (a, b) in ds_serial.samples.iter().zip(&ds_parallel.samples) {
+        assert_eq!(a.y, b.y, "worker count must not change measurements");
+    }
+    let n_graphs = ds_serial.len();
+    let build_speedup = serial_s / parallel_s.max(1e-9);
+
+    let mut t = Table::new(&["phase", "workers", "wall (s)", "graphs/s"]);
+    t.row(&[
+        "build".into(),
+        "1".into(),
+        format!("{serial_s:.2}"),
+        format!("{:.0}", n_graphs as f64 / serial_s.max(1e-9)),
+    ]);
+    t.row(&[
+        "build".into(),
+        workers_mt.to_string(),
+        format!("{parallel_s:.2}"),
+        format!("{:.0}", n_graphs as f64 / parallel_s.max(1e-9)),
+    ]);
+
+    // --- MIG sweep: per-profile recompute vs analyze-once ----------------
+    let sim = Simulator::new();
+    let graphs: Vec<Graph> = ALL_FAMILIES.iter().map(|f| f.generate(0)).collect();
+    let reps = if common::is_full() { 9 } else { 5 };
+
+    // Sanity first: the two paths must produce identical sweeps.
+    for g in &graphs {
+        let a = GraphAnalysis::of(g);
+        for &p in &ALL_PROFILES {
+            match (sim.measure_mig(g, p), sim.measure_mig_analyzed(&a, p)) {
+                (MigResult::Ok(x), MigResult::Ok(y)) => assert_eq!(x, y, "{} on {p:?}", g.variant),
+                (MigResult::OutOfMemory { .. }, MigResult::OutOfMemory { .. }) => {}
+                (x, y) => panic!("sweep divergence for {}: {x:?} vs {y:?}", g.variant),
+            }
+        }
+    }
+
+    let mut per_profile = Vec::with_capacity(reps);
+    let mut analyze_once = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        for g in &graphs {
+            for &p in &ALL_PROFILES {
+                black_box(sim.measure_mig(g, p));
+            }
+        }
+        per_profile.push(t0.elapsed().as_secs_f64());
+
+        let t0 = Instant::now();
+        for g in &graphs {
+            let a = GraphAnalysis::of(g);
+            for &p in &ALL_PROFILES {
+                black_box(sim.measure_mig_analyzed(&a, p));
+            }
+        }
+        analyze_once.push(t0.elapsed().as_secs_f64());
+    }
+    let per_profile_s = quantile(&per_profile, 0.5);
+    let analyze_once_s = quantile(&analyze_once, 0.5);
+    let sweep_speedup = per_profile_s / analyze_once_s.max(1e-12);
+    t.row(&[
+        "mig sweep (per-profile)".into(),
+        "1".into(),
+        format!("{per_profile_s:.4}"),
+        "-".into(),
+    ]);
+    t.row(&[
+        "mig sweep (analyze-once)".into(),
+        "1".into(),
+        format!("{analyze_once_s:.4}"),
+        "-".into(),
+    ]);
+    t.print();
+    println!(
+        "\n{n_graphs} graphs (fraction {fraction}); build speedup {build_speedup:.2}x with \
+         {workers_mt} workers"
+    );
+    println!(
+        "MIG sweep: analyze-once {sweep_speedup:.2}x vs per-profile recompute \
+         ({} graphs x {} profiles, median of {reps})",
+        graphs.len(),
+        ALL_PROFILES.len()
+    );
+
+    // CI smoke gate: the analyze-once sweep must never be slower than the
+    // seed-shaped recompute path (generous margin for timer noise).
+    assert!(
+        analyze_once_s <= per_profile_s * 1.15,
+        "analyze-once MIG sweep regressed: {analyze_once_s:.4}s vs per-profile \
+         {per_profile_s:.4}s"
+    );
+
+    if let Ok(path) = std::env::var("DIPPM_BENCH_JSON") {
+        let mut sweep = JsonObj::new();
+        sweep.insert("per_profile_s", per_profile_s);
+        sweep.insert("analyze_once_s", analyze_once_s);
+        sweep.insert("speedup", sweep_speedup);
+        sweep.insert("graphs", graphs.len());
+        sweep.insert("profiles", ALL_PROFILES.len());
+        let mut doc = JsonObj::new();
+        doc.insert("bench", "dataset_build");
+        doc.insert("fraction", fraction);
+        doc.insert("graphs", n_graphs);
+        doc.insert("serial_s", serial_s);
+        doc.insert("parallel_s", parallel_s);
+        doc.insert("workers", workers_mt);
+        doc.insert("build_speedup", build_speedup);
+        doc.insert("mig_sweep", Json::Obj(sweep));
+        std::fs::write(&path, format!("{}\n", Json::Obj(doc))).expect("write DIPPM_BENCH_JSON");
+        println!("wrote {path}");
+    }
+}

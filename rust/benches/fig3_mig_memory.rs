@@ -4,7 +4,7 @@
 //! capacity, and is always highest on 7g.40gb.
 
 use dippm::modelgen::{cnn, transformer};
-use dippm::simulator::{MigResult, Simulator, ALL_PROFILES};
+use dippm::simulator::{GraphAnalysis, MigResult, Simulator, ALL_PROFILES};
 use dippm::util::bench::{banner, Table};
 
 fn main() {
@@ -19,9 +19,11 @@ fn main() {
 
     let mut t = Table::new(&["model", "1g.5gb", "2g.10gb", "3g.20gb", "7g.40gb", "monotone?"]);
     for g in [&vgg16, &densenet, &swin] {
+        // Analyze once, sweep all profiles against the same plan.
+        let a = GraphAnalysis::of(g);
         let mems: Vec<Option<f64>> = ALL_PROFILES
             .iter()
-            .map(|&p| match sim.measure_mig(g, p) {
+            .map(|&p| match sim.measure_mig_analyzed(&a, p) {
                 MigResult::Ok(m) => Some(m.memory_mb),
                 MigResult::OutOfMemory { .. } => None,
             })

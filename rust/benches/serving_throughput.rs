@@ -12,7 +12,14 @@
 //! Uses the PJRT backend when artifacts are built, else the simulator
 //! backend — the coordinator stack under test is identical.
 //!
-//! Scale knobs: DIPPM_BENCH_REQS (per client), DIPPM_BENCH_CLIENTS, FULL=1.
+//! Besides the cache × workload matrix (all at 1 executor thread, for
+//! comparability with the historical trajectory), the cold scenario is
+//! re-run with a multi-thread executor pool: cold misses are the path the
+//! parallel batch executor exists for, and `cold_thread_speedup` in the
+//! JSON records the win of `--executor-threads N` over 1.
+//!
+//! Scale knobs: DIPPM_BENCH_REQS (per client), DIPPM_BENCH_CLIENTS,
+//! DIPPM_BENCH_THREADS (multi-thread pool size), FULL=1.
 //! Set DIPPM_BENCH_JSON=<path> to also write the results as a machine-
 //! readable JSON document (the CI bench-smoke job uploads it as the
 //! `BENCH_serving_throughput.json` artifact, accumulating the perf
@@ -60,9 +67,10 @@ fn zipf_indices(n_requests: usize, pool: usize, alpha: f64, seed: u64) -> Vec<us
         .collect()
 }
 
-fn start(cache_on: bool) -> (Arc<Coordinator>, &'static str) {
+fn start(cache_on: bool, executor_threads: usize) -> (Arc<Coordinator>, &'static str) {
     let opts = CoordinatorOptions {
         max_wait: Duration::from_millis(1),
+        executor_threads,
         cache: if cache_on {
             CacheConfig::default()
         } else {
@@ -139,51 +147,76 @@ fn main() {
         }
     };
 
+    let mt_threads = common::env_usize(
+        "DIPPM_BENCH_THREADS",
+        dippm::util::threadpool::ThreadPool::default_parallelism().clamp(2, 8),
+    );
+
     let mut t = Table::new(&[
-        "scenario", "cache", "req/s", "p50 (ms)", "p99 (ms)", "hit rate",
+        "scenario", "cache", "threads", "req/s", "p50 (ms)", "p99 (ms)", "hit rate",
         "batches", "coalesced",
     ]);
     let mut hot_rps = (0.0, 0.0); // (cache on, cache off)
+    let mut cold_rps = (0.0, 0.0); // (1 thread, mt_threads)
     let mut backend = "";
     let mut json_rows: Vec<Json> = Vec::new();
+    // The classic matrix runs at 1 executor thread (comparable with the
+    // historical trajectory); the extra ("cold", on, mt_threads) run
+    // measures the parallel batch executor on the pure-miss path.
+    let mut runs: Vec<(&str, bool, usize)> = Vec::new();
     for scenario in ["hot", "cold", "zipf"] {
         for cache_on in [true, false] {
-            let (coord, be) = start(cache_on);
-            backend = be;
-            // Warmup outside the measurement (compile/first-execute costs).
-            coord.predict(warmup_graph.clone()).unwrap();
-            let schedules: Vec<Vec<Graph>> =
-                (0..clients).map(|c| schedule(scenario, c)).collect();
-            let (rps, lats) = run_load(&coord, schedules);
-            let m = coord.metrics();
-            if scenario == "hot" {
-                if cache_on {
-                    hot_rps.0 = rps;
-                } else {
-                    hot_rps.1 = rps;
-                }
-            }
-            t.row(&[
-                scenario.into(),
-                if cache_on { "on" } else { "off" }.into(),
-                format!("{rps:.0}"),
-                format!("{:.3}", 1e3 * quantile(&lats, 0.5)),
-                format!("{:.3}", 1e3 * quantile(&lats, 0.99)),
-                format!("{:.1}%", 100.0 * m.cache_hit_rate()),
-                m.batches.to_string(),
-                m.coalesced.to_string(),
-            ]);
-            let mut row = JsonObj::new();
-            row.insert("scenario", scenario);
-            row.insert("cache", cache_on);
-            row.insert("req_per_s", rps);
-            row.insert("p50_ms", 1e3 * quantile(&lats, 0.5));
-            row.insert("p99_ms", 1e3 * quantile(&lats, 0.99));
-            row.insert("hit_rate", m.cache_hit_rate());
-            row.insert("batches", m.batches as usize);
-            row.insert("coalesced", m.coalesced as usize);
-            json_rows.push(Json::Obj(row));
+            runs.push((scenario, cache_on, 1));
         }
+    }
+    runs.push(("cold", true, mt_threads));
+    for (scenario, cache_on, threads) in runs {
+        let (coord, be) = start(cache_on, threads);
+        backend = be;
+        // Warmup outside the measurement (compile/first-execute costs).
+        coord.predict(warmup_graph.clone()).unwrap();
+        let schedules: Vec<Vec<Graph>> =
+            (0..clients).map(|c| schedule(scenario, c)).collect();
+        let (rps, lats) = run_load(&coord, schedules);
+        let m = coord.metrics();
+        if scenario == "hot" && threads == 1 {
+            if cache_on {
+                hot_rps.0 = rps;
+            } else {
+                hot_rps.1 = rps;
+            }
+        }
+        if scenario == "cold" && cache_on {
+            if threads == 1 {
+                cold_rps.0 = rps;
+            } else {
+                cold_rps.1 = rps;
+            }
+        }
+        t.row(&[
+            scenario.into(),
+            if cache_on { "on" } else { "off" }.into(),
+            threads.to_string(),
+            format!("{rps:.0}"),
+            format!("{:.3}", 1e3 * quantile(&lats, 0.5)),
+            format!("{:.3}", 1e3 * quantile(&lats, 0.99)),
+            format!("{:.1}%", 100.0 * m.cache_hit_rate()),
+            m.batches.to_string(),
+            m.coalesced.to_string(),
+        ]);
+        let mut row = JsonObj::new();
+        row.insert("scenario", scenario);
+        row.insert("cache", cache_on);
+        row.insert("executor_threads", threads);
+        row.insert("req_per_s", rps);
+        row.insert("p50_ms", 1e3 * quantile(&lats, 0.5));
+        row.insert("p99_ms", 1e3 * quantile(&lats, 0.99));
+        row.insert("hit_rate", m.cache_hit_rate());
+        row.insert("batches", m.batches as usize);
+        row.insert("coalesced", m.coalesced as usize);
+        row.insert("analyses_computed", m.analyses_computed as usize);
+        row.insert("analyses_reused", m.analyses_reused as usize);
+        json_rows.push(Json::Obj(row));
     }
     t.print();
     println!(
@@ -193,6 +226,13 @@ fn main() {
     if hot_rps.1 > 0.0 {
         println!(
             "hot-workload speedup from the prediction cache: {hot_speedup:.1}x (target >= 5x)"
+        );
+    }
+    let cold_thread_speedup = if cold_rps.0 > 0.0 { cold_rps.1 / cold_rps.0 } else { 0.0 };
+    if cold_rps.0 > 0.0 {
+        println!(
+            "cold-workload speedup from --executor-threads {mt_threads}: \
+             {cold_thread_speedup:.2}x (target > 1x)"
         );
     }
     println!("note: hot hits bypass the batcher and the runtime entirely;");
@@ -207,6 +247,8 @@ fn main() {
         doc.insert("per_client", per_client);
         doc.insert("zipf_pool", zipf_pool);
         doc.insert("hot_speedup", hot_speedup);
+        doc.insert("executor_threads_mt", mt_threads);
+        doc.insert("cold_thread_speedup", cold_thread_speedup);
         doc.insert("scenarios", Json::Arr(json_rows));
         std::fs::write(&path, format!("{}\n", Json::Obj(doc))).expect("write DIPPM_BENCH_JSON");
         println!("wrote {path}");

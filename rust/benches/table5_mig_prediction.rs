@@ -10,7 +10,7 @@ use dippm::coordinator::{Coordinator, CoordinatorOptions};
 use dippm::ir::{Attrs, Graph, GraphBuilder, OpKind};
 use dippm::mig;
 use dippm::modelgen::Family;
-use dippm::simulator::{MigResult, Simulator, ALL_PROFILES};
+use dippm::simulator::{GraphAnalysis, MigResult, Simulator, ALL_PROFILES};
 use dippm::util::bench::{banner, Table};
 
 /// ConvNeXt-like: an architecture family the predictor never trained on
@@ -72,14 +72,20 @@ fn main() {
     for (status, g) in candidates {
         let pred = coord.predict(g.clone()).unwrap();
         let predicted_profile = pred.mig_profile.clone().unwrap_or("None".into());
-        let actual_mem = sim.measure(&g).memory_mb;
-        let actual_best = mig::actual_best_profile(&sim, &g)
-            .map(|p| p.name().to_string())
+        // Analyze once; the full-GPU measurement, the best-profile search
+        // and the per-profile score columns all share the same plan.
+        let a = GraphAnalysis::of(&g);
+        let actual_mem = sim.measure_analyzed(&a).memory_mb;
+        let actual_best = mig::actual_profile_scores_analyzed(&sim, &a)
+            .into_iter()
+            .filter_map(|(p, s)| s.map(|score| (p, score)))
+            .max_by(|x, y| x.1.partial_cmp(&y.1).unwrap())
+            .map(|(p, _)| p.name().to_string())
             .unwrap_or("None".into());
         // Per-profile consumption/capacity scores (the paper's columns).
         let scores: Vec<String> = ALL_PROFILES
             .iter()
-            .map(|&p| match sim.measure_mig(&g, p) {
+            .map(|&p| match sim.measure_mig_analyzed(&a, p) {
                 MigResult::Ok(m) => format!("{:.0}%", 100.0 * m.memory_mb / p.capacity_mb()),
                 MigResult::OutOfMemory { .. } => "OOM".into(),
             })

@@ -1,96 +1,23 @@
 //! Canonical 128-bit graph fingerprints for the prediction cache.
 //!
-//! A [`Fingerprint`] is a deterministic structural hash of a model graph:
-//! two submissions of the *same architecture at the same batch size* map to
-//! the same key regardless of how the frontend numbered or named the nodes,
-//! while any semantic difference (an op kind, an attribute, a shape, an
-//! edge, the batch) changes the key with overwhelming probability.
+//! The [`Fingerprint`] type and its fold algorithm live in
+//! [`crate::simulator::analysis`] since the analyze-once refactor: the fold
+//! consumes the static-feature bits the one-pass [`GraphAnalysis`] already
+//! computed, so the serving path derives the cache key as a free by-product
+//! of the analysis instead of running a separate hashing sweep. This module
+//! re-exports the type under its original path — the key format (and every
+//! disk snapshot written with it) is unchanged — and keeps the
+//! cache-perspective test suite.
 //!
-//! Construction: per-node Weisfeiler–Lehman signatures from
-//! [`Graph::canonical_signatures`] (id/name-invariant) are folded with an
-//! order-independent multiset combine (wrapping sums of keyed mixes) over
-//! nodes and edges, then mixed with the static-feature vector (paper eq. 1)
-//! so the cache key covers exactly what the predictor sees. Only the
-//! in-repo splitmix64 is used — never `std`'s randomized hasher — so keys
-//! are stable across runs, processes and machines.
+//! [`GraphAnalysis`]: crate::simulator::GraphAnalysis
 
-use std::fmt;
-
-use crate::features::{static_feature_bits, static_features};
-use crate::ir::Graph;
-use crate::util::rng::splitmix64;
-
-/// A 128-bit structural graph fingerprint.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub struct Fingerprint {
-    pub hi: u64,
-    pub lo: u64,
-}
-
-// Independent lane keys; arbitrary odd constants.
-const K_NODE_LO: u64 = 0x9AE1_6A3B_2F90_404F;
-const K_NODE_HI: u64 = 0xC2B2_AE3D_27D4_EB4F;
-const K_EDGE_LO: u64 = 0x1656_67B1_9E37_79F9;
-const K_EDGE_HI: u64 = 0x27D4_EB2F_1656_67C5;
-
-impl Fingerprint {
-    /// Fingerprint a graph. Cost is O(nodes + edges) with a few small
-    /// allocations — negligible next to featurization, and it runs on the
-    /// submitting thread, never the executor.
-    pub fn of_graph(graph: &Graph) -> Fingerprint {
-        let sigs = graph.canonical_signatures();
-        let mut lo: u64 = 0;
-        let mut hi: u64 = 0;
-        // Node multiset: wrapping sums are permutation-invariant.
-        for &s in &sigs {
-            lo = lo.wrapping_add(splitmix64(s ^ K_NODE_LO));
-            hi = hi.wrapping_add(splitmix64(s ^ K_NODE_HI));
-        }
-        // Edge multiset over refined endpoint signatures (directed pairs).
-        for node in &graph.nodes {
-            for &src in &node.inputs {
-                let e = splitmix64(sigs[src])
-                    .wrapping_mul(0x100_0000_01B3)
-                    .wrapping_add(splitmix64(sigs[node.id]));
-                lo = lo.wrapping_add(splitmix64(e ^ K_EDGE_LO));
-                hi = hi.wrapping_add(splitmix64(e ^ K_EDGE_HI));
-            }
-        }
-        // Static features are integral counts (MACs, batch, op counts);
-        // `static_feature_bits` rounds exactly, so the key never depends on
-        // f64 summation order.
-        let mut t = splitmix64(graph.batch as u64 ^ 0xBA7C_4000);
-        for v in static_feature_bits(&static_features(graph)) {
-            t = splitmix64(t ^ v);
-        }
-        t = splitmix64(t ^ (graph.n_nodes() as u64).rotate_left(32));
-        Fingerprint {
-            lo: splitmix64(lo ^ t),
-            hi: splitmix64(hi ^ t.rotate_left(17)),
-        }
-    }
-
-    /// The fingerprint as one 128-bit integer (cache/shard key).
-    pub fn as_u128(self) -> u128 {
-        ((self.hi as u128) << 64) | self.lo as u128
-    }
-
-    /// 32-hex-digit rendering (stable; used by the TCP API and logs).
-    pub fn to_hex(self) -> String {
-        format!("{:016x}{:016x}", self.hi, self.lo)
-    }
-}
-
-impl fmt::Display for Fingerprint {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "{:016x}{:016x}", self.hi, self.lo)
-    }
-}
+pub use crate::simulator::analysis::Fingerprint;
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ir::{Attrs, GraphBuilder, OpKind};
+    use crate::ir::{Attrs, Graph, GraphBuilder, OpKind};
+    use crate::simulator::GraphAnalysis;
 
     fn sample(batch: usize, ch: usize) -> Graph {
         let mut b = GraphBuilder::new("t", "fp-sample", batch);
@@ -144,6 +71,14 @@ mod tests {
         let h = Fingerprint::of_graph(&sample(1, 8)).to_hex();
         assert_eq!(h.len(), 32);
         assert!(h.chars().all(|c| c.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn analysis_fingerprint_is_the_cache_key() {
+        // The analyze-once path and the scratch path must agree — the cache
+        // key format survives the refactor.
+        let g = sample(2, 8);
+        assert_eq!(GraphAnalysis::of(&g).fingerprint, Fingerprint::of_graph(&g));
     }
 
     #[test]

@@ -75,6 +75,30 @@ impl<T> SingleFlight<T> {
         self.inner.lock().unwrap().len()
     }
 
+    /// Parked followers for one key (0 when no flight or none parked).
+    pub fn waiters(&self, key: u128) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(&key)
+            .map_or(0, Vec::len)
+    }
+
+    /// One-shot snapshot of parked-follower counts per key. The executor's
+    /// cache-aware batch admission prioritizes queued misses by these
+    /// counts (serving the miss with the most followers first unblocks the
+    /// most requests per batch slot) — taken once per admission decision so
+    /// the flight mutex is locked once, not once per queued job.
+    pub fn waiter_counts(&self) -> HashMap<u128, usize> {
+        self.inner
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, w)| !w.is_empty())
+            .map(|(&k, w)| (k, w.len()))
+            .collect()
+    }
+
     /// Total parked followers across all flights.
     pub fn parked(&self) -> usize {
         self.inner.lock().unwrap().values().map(Vec::len).sum()
@@ -97,6 +121,11 @@ mod tests {
         assert_eq!(sf.join(7, tx3, Instant::now()), Role::Follower);
         assert_eq!(sf.in_flight(), 1);
         assert_eq!(sf.parked(), 2);
+        assert_eq!(sf.waiters(7), 2);
+        assert_eq!(sf.waiters(99), 0);
+        let counts = sf.waiter_counts();
+        assert_eq!(counts.get(&7), Some(&2));
+        assert_eq!(counts.get(&99), None);
 
         let waiters = sf.take(7);
         assert_eq!(waiters.len(), 2);

@@ -24,16 +24,20 @@ use anyhow::{anyhow, Result};
 
 use crate::cache::Target;
 use crate::dataset::normalize::NormStats;
-use crate::features::static_features;
 use crate::ir::Graph;
+use crate::runtime::manifest::Constants;
 use crate::runtime::{Artifact, ParamStore, Runtime};
-use crate::simulator::Simulator;
+use crate::simulator::{GraphAnalysis, Simulator};
 use crate::training::BatchBuffers;
 
-/// One slot of a backend batch: the graph plus the target configuration
-/// the prediction is for.
+/// One slot of a backend batch: the graph, its precomputed one-pass
+/// [`GraphAnalysis`] (the coordinator computes it once at submit and
+/// carries it in the job — backends must featurize/simulate from it, never
+/// re-traverse the graph), and the target configuration the prediction is
+/// for.
 pub struct PredictRequest<'a> {
     pub graph: &'a Graph,
+    pub analysis: &'a GraphAnalysis,
     pub target: &'a Target,
 }
 
@@ -54,9 +58,11 @@ pub trait Backend: Send {
     fn predict_raw(&mut self, requests: &[PredictRequest<'_>]) -> Result<Vec<RawOutcome>>;
 }
 
-/// Deferred backend constructor, invoked *inside* the executor thread
-/// (PJRT clients must be created on the thread that uses them).
-pub type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn Backend>> + Send>;
+/// Deferred backend constructor, invoked *inside* each executor worker
+/// thread (PJRT clients must be created on the thread that uses them).
+/// Multi-shot: with `--executor-threads N` the coordinator calls it once
+/// per worker, so every worker owns an independent backend instance.
+pub type BackendFactory = Box<dyn Fn() -> Result<Box<dyn Backend>> + Send + Sync>;
 
 /// The PJRT/AOT-artifact backend (paper serving path).
 pub struct PjrtBackend {
@@ -147,8 +153,10 @@ impl Backend for PjrtBackend {
                 bufs.clear_slot(slot);
                 continue;
             }
-            let statics = static_features(req.graph);
-            if let Err(e) = bufs.fill_graph(req.graph, &statics, &self.norm, slot) {
+            // Featurize from the carried analysis: cached per-node costs
+            // and statics — the backend never re-derives them.
+            if let Err(e) = bufs.fill_graph_analyzed(req.graph, req.analysis, &self.norm, slot)
+            {
                 failures[slot] = Some(format!("{e:#}"));
                 bufs.clear_slot(slot);
             }
@@ -185,21 +193,41 @@ impl Backend for PjrtBackend {
 
 /// The analytical-simulator backend: deterministic ground-truth triples,
 /// no artifacts required. Target-aware — a request for `a100:2g.10gb` is
-/// measured on that MIG slice. Enforces the same `max_nodes` contract as
-/// the AOT padding so oversized graphs fail identically on both backends.
+/// measured on that MIG slice.
+///
+/// Mirrors the PJRT backend's per-request cost structure so hermetic
+/// benches and tests see a faithful serving path: each request is
+/// featurized into a reusable padded batch buffer from the carried
+/// analysis (which also enforces the same `max_nodes` contract as the AOT
+/// padding, so oversized graphs fail identically on both backends), then
+/// "predicted" by the analytical device model reading the same analysis.
 pub struct SimBackend {
     sim: Simulator,
-    max_nodes: usize,
     max_batch: usize,
+    /// Single-slot padded featurization buffer, reused across requests
+    /// (no allocation on the hot path, like the PJRT pinned buffers).
+    buffers: BatchBuffers,
+    norm: NormStats,
 }
 
 impl Default for SimBackend {
     fn default() -> Self {
+        // Mirrors the AOT manifest constants (max_nodes=160, feats=32).
+        let constants = Constants {
+            max_nodes: 160,
+            node_feats: 32,
+            static_feats: 5,
+            targets: 3,
+            batch: 1,
+            hidden: 128,
+            dropout: 0.05,
+            huber_delta: 1.0,
+        };
         SimBackend {
             sim: Simulator::new(),
-            // Mirrors the AOT manifest constants (max_nodes=160, b=32).
-            max_nodes: 160,
             max_batch: 32,
+            buffers: BatchBuffers::new(&constants, 1),
+            norm: NormStats::default(),
         }
     }
 }
@@ -234,15 +262,18 @@ impl Backend for SimBackend {
                         req.target.device
                     ));
                 }
-                if req.graph.n_nodes() > self.max_nodes {
-                    return Err(format!(
-                        "graph {} has {} nodes > max_nodes {}",
-                        req.graph.variant,
-                        req.graph.n_nodes(),
-                        self.max_nodes
-                    ));
+                // Featurize exactly like the PJRT path would (from the
+                // carried analysis, into the padded slot); a `max_nodes`
+                // overflow fails here with the same per-request error.
+                if let Err(e) =
+                    self.buffers
+                        .fill_graph_analyzed(req.graph, req.analysis, &self.norm, 0)
+                {
+                    return Err(format!("{e:#}"));
                 }
-                let m = self.sim.measure_on(req.graph, req.target.profile_or_full());
+                let m = self
+                    .sim
+                    .measure_on_analyzed(req.analysis, req.target.profile_or_full());
                 Ok([m.latency_ms, m.memory_mb, m.energy_j])
             })
             .collect())
@@ -258,17 +289,26 @@ mod tests {
         Target::default()
     }
 
-    fn req<'a>(graph: &'a Graph, target: &'a Target) -> PredictRequest<'a> {
-        PredictRequest { graph, target }
+    fn req<'a>(
+        graph: &'a Graph,
+        analysis: &'a GraphAnalysis,
+        target: &'a Target,
+    ) -> PredictRequest<'a> {
+        PredictRequest {
+            graph,
+            analysis,
+            target,
+        }
     }
 
     #[test]
     fn sim_backend_predicts_deterministically() {
         let mut b = SimBackend::new();
         let g = Family::ResNet.generate(1);
+        let an = GraphAnalysis::of(&g);
         let t = full();
-        let a = b.predict_raw(&[req(&g, &t)]).unwrap();
-        let c = b.predict_raw(&[req(&g, &t)]).unwrap();
+        let a = b.predict_raw(&[req(&g, &an, &t)]).unwrap();
+        let c = b.predict_raw(&[req(&g, &an, &t)]).unwrap();
         assert_eq!(a, c);
         let triple = a[0].as_ref().unwrap();
         assert!(triple[0] > 0.0 && triple[1] > 0.0 && triple[2] > 0.0);
@@ -279,8 +319,11 @@ mod tests {
         let mut b = SimBackend::new();
         let g1 = Family::MobileNet.generate(0);
         let g2 = Family::Vgg.generate(0);
+        let (a1, a2) = (GraphAnalysis::of(&g1), GraphAnalysis::of(&g2));
         let t = full();
-        let out = b.predict_raw(&[req(&g1, &t), req(&g2, &t)]).unwrap();
+        let out = b
+            .predict_raw(&[req(&g1, &a1, &t), req(&g2, &a2, &t)])
+            .unwrap();
         assert_eq!(out.len(), 2);
         assert_ne!(out[0], out[1]);
     }
@@ -289,10 +332,11 @@ mod tests {
     fn sim_backend_is_target_aware() {
         let mut b = SimBackend::new();
         let g = Family::ResNet.generate(0);
+        let an = GraphAnalysis::of(&g);
         let t_full = full();
         let t_slice = Target::parse("a100:1g.5gb").unwrap();
         let out = b
-            .predict_raw(&[req(&g, &t_full), req(&g, &t_slice)])
+            .predict_raw(&[req(&g, &an, &t_full), req(&g, &an, &t_slice)])
             .unwrap();
         let full_lat = out[0].as_ref().unwrap()[0];
         let slice_lat = out[1].as_ref().unwrap()[0];
@@ -307,10 +351,11 @@ mod tests {
     fn sim_backend_rejects_unknown_device_per_request() {
         let mut b = SimBackend::new();
         let good = Family::Vgg.generate(0);
+        let an = GraphAnalysis::of(&good);
         let t_full = full();
         let t_bad = Target::new("tpu-v4", None);
         let out = b
-            .predict_raw(&[req(&good, &t_bad), req(&good, &t_full)])
+            .predict_raw(&[req(&good, &an, &t_bad), req(&good, &an, &t_full)])
             .unwrap();
         assert!(out[0].as_ref().unwrap_err().contains("unknown device"));
         assert!(out[1].is_ok(), "the rest of the batch still executes");
@@ -326,11 +371,28 @@ mod tests {
             h = bld.conv_relu(h, 8, 3, 1, 1);
         }
         let g = bld.finish();
+        let an = GraphAnalysis::of(&g);
         let ok_g = Family::MobileNet.generate(0);
+        let ok_an = GraphAnalysis::of(&ok_g);
         let t = full();
         let mut b = SimBackend::new();
-        let out = b.predict_raw(&[req(&g, &t), req(&ok_g, &t)]).unwrap();
+        let out = b
+            .predict_raw(&[req(&g, &an, &t), req(&ok_g, &ok_an, &t)])
+            .unwrap();
         assert!(out[0].as_ref().unwrap_err().contains("max_nodes"));
         assert!(out[1].is_ok());
+    }
+
+    #[test]
+    fn multi_shot_factory_builds_independent_backends() {
+        let factory = SimBackend::factory();
+        let mut b1 = factory().unwrap();
+        let mut b2 = factory().unwrap();
+        let g = Family::Vgg.generate(0);
+        let an = GraphAnalysis::of(&g);
+        let t = full();
+        let r1 = b1.predict_raw(&[req(&g, &an, &t)]).unwrap();
+        let r2 = b2.predict_raw(&[req(&g, &an, &t)]).unwrap();
+        assert_eq!(r1, r2);
     }
 }

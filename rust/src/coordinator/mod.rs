@@ -3,11 +3,16 @@
 //! as a service (the paper's Fig. 5 usability story, minus Python).
 //!
 //! Architecture: callers (CLI, TCP handler threads, benches) submit graphs
-//! through an mpsc channel; a single executor thread owns the inference
-//! backend (XLA client handles are not Sync), drains the queue with a
-//! size-or-deadline batching policy, featurizes into pre-allocated buffers,
-//! executes the right shape-specialized artifact (b=1 fast path vs padded
-//! b=B), denormalizes, applies the MIG rule (eq. 2) and replies.
+//! through a bounded priority job queue. The submit path runs the one-pass
+//! `GraphAnalysis` exactly once — its fingerprint is the cache key, and the
+//! analysis rides the job so nothing downstream re-traverses the graph. A
+//! pool of `--executor-threads` worker threads (each owning its own
+//! inference backend — XLA client handles are not Sync) drains the queue
+//! with a size-or-deadline batching policy and cache-aware admission
+//! (misses with the most parked single-flight followers first), featurizes
+//! into pre-allocated buffers from the carried analysis, executes the
+//! right shape-specialized artifact (b=1 fast path vs padded b=B),
+//! denormalizes, applies the MIG rule (eq. 2) and replies.
 //!
 //! In front of the queue sits the graph-fingerprint prediction cache
 //! (`crate::cache`): repeated graphs answer from a sharded LRU without

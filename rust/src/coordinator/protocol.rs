@@ -120,6 +120,14 @@ pub fn cache_stats_response(m: &Metrics) -> String {
     o.insert("requests", m.requests as usize);
     o.insert("batches", m.batches as usize);
     o.insert("mean_batch_fill", m.mean_batch_fill());
+    // Analyze-once observability: full analyses built for enqueued misses
+    // (hits stop at the cost-sweep/fingerprint stage) vs. consumed by the
+    // executor/backend, and how often cache-aware admission reordered the
+    // queue.
+    o.insert("analyses_computed", m.analyses_computed as usize);
+    o.insert("analyses_reused", m.analyses_reused as usize);
+    o.insert("priority_admissions", m.priority_admissions as usize);
+    o.insert("executor_threads", m.executor_threads as usize);
     Json::Obj(o).to_string()
 }
 
@@ -196,6 +204,10 @@ mod tests {
             coalesced: 1,
             negative_hits: 2,
             warm_start_entries: 5,
+            analyses_computed: 10,
+            analyses_reused: 4,
+            priority_admissions: 3,
+            executor_threads: 2,
             ..Default::default()
         };
         let s = cache_stats_response(&m);
@@ -207,6 +219,10 @@ mod tests {
         assert_eq!(v.path(&["coalesced"]).as_usize(), Some(1));
         assert_eq!(v.path(&["negative_hits"]).as_usize(), Some(2));
         assert_eq!(v.path(&["warm_start_entries"]).as_usize(), Some(5));
+        assert_eq!(v.path(&["analyses_computed"]).as_usize(), Some(10));
+        assert_eq!(v.path(&["analyses_reused"]).as_usize(), Some(4));
+        assert_eq!(v.path(&["priority_admissions"]).as_usize(), Some(3));
+        assert_eq!(v.path(&["executor_threads"]).as_usize(), Some(2));
     }
 
     #[test]

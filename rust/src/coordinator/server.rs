@@ -1,30 +1,39 @@
-//! The coordinator core: mpsc request queue → executor thread (owns the
-//! inference [`Backend`]) with a size-or-deadline dynamic batcher, fronted
-//! by the device-aware graph-fingerprint prediction cache.
+//! The coordinator core: a priority job queue → a pool of executor worker
+//! threads (each owning its own inference [`Backend`]) with a
+//! size-or-deadline dynamic batcher and cache-aware batch admission,
+//! fronted by the device-aware graph-fingerprint prediction cache.
 //!
 //! Request path:
 //!
-//! 1. `submit` fingerprints the graph and composes the device-aware
-//!    [`CacheKey`] (graph × target), then consults the sharded LRU. A hit
-//!    replies immediately on the caller thread — the batcher, the queue
-//!    and the runtime are never touched. A tombstone hit (negative entry)
-//!    replies with the cached failure just as fast.
+//! 1. `submit` runs the one-pass [`GraphAnalysis`] exactly once — its WL
+//!    fingerprint composes the device-aware [`CacheKey`] (graph × target)
+//!    — then consults the sharded LRU. A hit replies immediately on the
+//!    caller thread — the batcher, the queue and the runtime are never
+//!    touched. A tombstone hit (negative entry) replies with the cached
+//!    failure just as fast.
 //! 2. On a miss, single-flight dedup coalesces concurrent submissions of
-//!    the same composite key: one leader enqueues a real job; followers
+//!    the same composite key: one leader enqueues a real job (carrying the
+//!    analysis, so the executor never re-traverses the graph); followers
 //!    park a reply sender and are woken when the leader's batch lands.
-//! 3. The executor drains the queue with the size-or-deadline policy,
-//!    calls the backend once per batch, publishes per-request results into
-//!    the cache (failures become short-TTL tombstones) and fans each
-//!    result out to its followers.
+//! 3. `--executor-threads` worker threads drain the queue with the
+//!    size-or-deadline policy. Batch admission is cache-aware: when the
+//!    queue holds more misses than a batch has slots, the misses with the
+//!    most parked single-flight followers are admitted first, so hot keys
+//!    unblock the most requests per slot. Each worker calls its own
+//!    backend once per batch, publishes per-request results into the cache
+//!    (failures become short-TTL tombstones), fans results out to
+//!    followers, and only then folds its counters into [`Metrics`] under a
+//!    short lock — replies are never sent while holding it.
 //!
 //! Persistence: with `CacheConfig::snapshot_path` set, the cache is
 //! preloaded from disk on boot (warm start), snapshotted on a timer
 //! (`snapshot_every`) and re-snapshotted on graceful shutdown — see
 //! [`crate::cache::persist`] for the format and its guarantees.
 
+use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -38,6 +47,7 @@ use crate::cache::{
 use crate::ir::Graph;
 use crate::mig;
 use crate::runtime::ParamStore;
+use crate::simulator::{CostSweep, GraphAnalysis};
 use crate::{log_info, log_warn};
 
 use super::backend::{Backend, BackendFactory, PjrtBackend, PredictRequest, SimBackend};
@@ -50,6 +60,11 @@ pub struct CoordinatorOptions {
     pub max_wait: Duration,
     /// Queue capacity (backpressure: submits block when full).
     pub queue_depth: usize,
+    /// Executor worker threads (`--executor-threads`). Each worker owns an
+    /// independent backend instance and processes whole batches, so batch
+    /// wall-clock drops roughly with core count under concurrent miss
+    /// load. 1 = the classic single-executor coordinator.
+    pub executor_threads: usize,
     /// Prediction-cache configuration (`CacheConfig::disabled()` restores
     /// the pre-cache serving path exactly).
     pub cache: CacheConfig,
@@ -63,6 +78,7 @@ impl Default for CoordinatorOptions {
         CoordinatorOptions {
             max_wait: Duration::from_millis(2),
             queue_depth: 1024,
+            executor_threads: 1,
             cache: CacheConfig::default(),
             target: Target::default(),
         }
@@ -83,6 +99,23 @@ pub struct Metrics {
     pub batch_fill_sum: u64,
     /// Requests answered by a parked single-flight follower.
     pub coalesced: u64,
+    /// Full one-pass analyses built on the submit path — one per enqueued
+    /// job. Cache hits, tombstone hits and coalesced followers stop at the
+    /// cost-sweep/fingerprint stage and never build the full plan, so
+    /// `requests - analyses_computed` ≈ submissions answered without ever
+    /// deriving a kernel plan (the analyze-once saving, in production).
+    pub analyses_computed: u64,
+    /// Carried analyses consumed downstream instead of re-deriving
+    /// per-graph facts: one per backend-served request (featurization +
+    /// simulation both read the job's analysis; pre-refactor each of those
+    /// re-traversed the graph).
+    pub analyses_reused: u64,
+    /// Batch-admission decisions that jumped a miss with more parked
+    /// single-flight followers ahead of an older miss (cache-aware
+    /// admission at work; 0 under FIFO-equivalent load).
+    pub priority_admissions: u64,
+    /// Executor worker threads serving this coordinator.
+    pub executor_threads: u64,
     pub cache_enabled: bool,
     pub cache_hits: u64,
     pub cache_misses: u64,
@@ -190,10 +223,152 @@ impl SnapshotValue for CacheValue {
 
 struct Job {
     graph: Graph,
+    /// One-pass analysis computed at submit; the executor and the backend
+    /// featurize/simulate from it and never re-traverse the graph.
+    analysis: GraphAnalysis,
     target: Target,
     key: Option<CacheKey>,
     enqueued: Instant,
     reply: Sender<Result<Prediction>>,
+}
+
+/// Bounded MPMC job queue with condvar-based backpressure and cache-aware
+/// batch admission. Replaces the old mpsc channel so the executor can pop
+/// *batches* and reorder admission by single-flight follower count — with
+/// a channel, a hot miss with a growing crowd of parked followers would
+/// wait behind every older cold miss.
+struct JobQueue {
+    inner: Mutex<JobQueueInner>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+struct JobQueueInner {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+/// A popped batch plus how many of its jobs jumped an older queued miss
+/// (for the `priority_admissions` counter).
+struct Batch {
+    jobs: Vec<Job>,
+    jumped: u64,
+}
+
+impl JobQueue {
+    fn new(capacity: usize) -> JobQueue {
+        JobQueue {
+            inner: Mutex::new(JobQueueInner {
+                jobs: VecDeque::new(),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Enqueue, blocking while full (backpressure — the old
+    /// `sync_channel` semantics). Returns the job back when the queue is
+    /// closed (shutdown), so the caller can unwind its single-flight.
+    fn push(&self, job: Job) -> std::result::Result<(), Job> {
+        let mut q = self.inner.lock().unwrap();
+        while q.jobs.len() >= self.capacity && !q.closed {
+            q = self.not_full.wait(q).unwrap();
+        }
+        if q.closed {
+            return Err(job);
+        }
+        q.jobs.push_back(job);
+        drop(q);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Close the queue: pushes fail, poppers drain what is left and then
+    /// observe `None`. Wakes every waiter.
+    fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Pop one batch: block for the first job, then keep the batch open
+    /// until `max_b` jobs are queued or `max_wait` elapses, then admit up
+    /// to `max_b` jobs — highest priority first (parked single-flight
+    /// followers), FIFO among ties. `priorities` maps the queued jobs to
+    /// per-job priorities in one call (so its lock cost is one acquisition
+    /// per admission decision) and is only consulted when the queue holds
+    /// more jobs than the batch admits. Returns `None` when closed and
+    /// drained.
+    fn pop_batch(
+        &self,
+        max_b: usize,
+        max_wait: Duration,
+        priorities: impl Fn(&VecDeque<Job>) -> Vec<usize>,
+    ) -> Option<Batch> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            // Block for the first job.
+            loop {
+                if !q.jobs.is_empty() {
+                    break;
+                }
+                if q.closed {
+                    return None;
+                }
+                q = self.not_empty.wait(q).unwrap();
+            }
+            // Grow: keep the batch open until the queue could fill it or
+            // the deadline passes. (Spurious wakeups just re-check.)
+            let deadline = Instant::now() + max_wait;
+            while q.jobs.len() < max_b && !q.closed {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _timed_out) =
+                    self.not_empty.wait_timeout(q, deadline - now).unwrap();
+                q = guard;
+            }
+            // A concurrent worker may have drained the queue mid-grow;
+            // go back to blocking for a first job.
+            if !q.jobs.is_empty() {
+                break;
+            }
+            if q.closed {
+                return None;
+            }
+        }
+        // Cache-aware admission: when more jobs are queued than the batch
+        // holds, admit by descending parked-follower count (stable order
+        // among ties preserves FIFO fairness).
+        let take = q.jobs.len().min(max_b);
+        let mut order: Vec<usize> = (0..q.jobs.len()).collect();
+        let mut jumped = 0u64;
+        if take < q.jobs.len() {
+            let prio = priorities(&q.jobs);
+            debug_assert_eq!(prio.len(), q.jobs.len());
+            order.sort_by_key(|&i| (std::cmp::Reverse(prio[i]), i));
+            let oldest_left_behind = order[take..].iter().copied().min().unwrap_or(usize::MAX);
+            jumped = order[..take]
+                .iter()
+                .filter(|&&i| i > oldest_left_behind)
+                .count() as u64;
+        }
+        let mut picked: Vec<usize> = order[..take].to_vec();
+        picked.sort_unstable();
+        let mut jobs = Vec::with_capacity(take);
+        // Remove back-to-front so earlier indices stay valid.
+        for &i in picked.iter().rev() {
+            jobs.push(q.jobs.remove(i).expect("picked index in range"));
+        }
+        jobs.reverse(); // restore FIFO order within the admitted batch
+        drop(q);
+        self.not_full.notify_all();
+        Some(Batch { jobs, jumped })
+    }
 }
 
 /// Interruptible shutdown signal for the snapshot timer thread: the
@@ -208,13 +383,15 @@ struct SnapSignal {
 /// Handle to the serving coordinator. Cloneable submit side; the executor
 /// shuts down when the last handle drops.
 pub struct Coordinator {
-    tx: SyncSender<Job>,
+    queue: Arc<JobQueue>,
     metrics: Arc<Mutex<Metrics>>,
     /// Submission counter, kept out of the metrics mutex so the cache-hit
     /// fast path takes no global lock.
     requests: AtomicU64,
     /// Tombstone hits, same reasoning.
     negative_hits: AtomicU64,
+    /// One-pass analyses computed at submit, same reasoning.
+    analyses: AtomicU64,
     /// Entries restored from disk snapshots (boot preload + cache_load).
     warm_start: AtomicU64,
     cache: Option<Arc<ShardedLruCache<CacheValue>>>,
@@ -222,7 +399,7 @@ pub struct Coordinator {
     default_target: Target,
     snapshot_path: Option<PathBuf>,
     stop: Arc<AtomicBool>,
-    handle: Option<JoinHandle<()>>,
+    handles: Vec<JoinHandle<()>>,
     snap_signal: Option<Arc<SnapSignal>>,
     snap_handle: Option<JoinHandle<()>>,
 }
@@ -230,7 +407,8 @@ pub struct Coordinator {
 impl Coordinator {
     /// Start with the PJRT backend. `artifact_dir` must contain the AOT
     /// manifest; `params` is a trained checkpoint (its embedded norm stats
-    /// are used for featurization and denormalization).
+    /// are used for featurization and denormalization). With
+    /// `executor_threads > 1` each worker compiles/loads its own runtime.
     pub fn start(
         artifact_dir: &str,
         params: ParamStore,
@@ -239,7 +417,8 @@ impl Coordinator {
         let artifact_dir = artifact_dir.to_string();
         Self::start_with_backend(
             Box::new(move || {
-                PjrtBackend::new(&artifact_dir, params).map(|b| Box::new(b) as Box<dyn Backend>)
+                PjrtBackend::new(&artifact_dir, params.clone())
+                    .map(|b| Box::new(b) as Box<dyn Backend>)
             }),
             opts,
         )
@@ -250,13 +429,14 @@ impl Coordinator {
         Self::start_with_backend(SimBackend::factory(), opts)
     }
 
-    /// Start with any backend. The factory runs inside the executor thread
-    /// (XLA client handles never cross threads); startup errors propagate.
+    /// Start with any backend. The factory runs inside each executor
+    /// worker thread (XLA client handles never cross threads); startup
+    /// errors from any worker propagate.
     pub fn start_with_backend(
         factory: BackendFactory,
         opts: CoordinatorOptions,
     ) -> Result<Coordinator> {
-        let (tx, rx) = mpsc::sync_channel::<Job>(opts.queue_depth);
+        let queue = Arc::new(JobQueue::new(opts.queue_depth));
         let metrics = Arc::new(Mutex::new(Metrics::default()));
         let stop = Arc::new(AtomicBool::new(false));
         let cache = opts
@@ -292,23 +472,64 @@ impl Coordinator {
             }
         }
 
-        let m2 = metrics.clone();
-        let s2 = stop.clone();
-        let c2 = cache.clone();
-        let f2 = flight.clone();
+        let threads = opts.executor_threads.max(1);
+        metrics.lock().unwrap().executor_threads = threads as u64;
+        let factory: Arc<BackendFactory> = Arc::new(factory);
         let max_wait = opts.max_wait;
         let negative_ttl = opts.cache.negative_ttl;
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let handle = std::thread::Builder::new()
-            .name("dippm-executor".into())
-            .spawn(move || {
-                executor_main(factory, max_wait, negative_ttl, rx, m2, c2, f2, s2, ready_tx)
-            })
-            .expect("spawn executor");
-        // Propagate startup errors (bad artifacts, checkpoint mismatch).
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("executor thread died during startup"))??;
+        let mut handles = Vec::with_capacity(threads);
+        for worker in 0..threads {
+            let factory = factory.clone();
+            let queue = queue.clone();
+            let m2 = metrics.clone();
+            let c2 = cache.clone();
+            let f2 = flight.clone();
+            let s2 = stop.clone();
+            let ready = ready_tx.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("dippm-executor-{worker}"))
+                    .spawn(move || {
+                        executor_main(
+                            worker,
+                            factory.as_ref(),
+                            max_wait,
+                            negative_ttl,
+                            queue,
+                            m2,
+                            c2,
+                            f2,
+                            s2,
+                            ready,
+                        )
+                    })
+                    .expect("spawn executor"),
+            );
+        }
+        drop(ready_tx);
+        // Propagate startup errors (bad artifacts, checkpoint mismatch)
+        // from every worker; on failure, tear the pool down cleanly.
+        let mut startup_err = None;
+        for _ in 0..threads {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    startup_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    startup_err.get_or_insert(anyhow!("executor thread died during startup"));
+                }
+            }
+        }
+        if let Some(e) = startup_err {
+            stop.store(true, Ordering::SeqCst);
+            queue.close();
+            for h in handles {
+                let _ = h.join();
+            }
+            return Err(e);
+        }
 
         // Periodic snapshot rotation (atomic rename; see cache::persist).
         let mut snap_signal = None;
@@ -332,17 +553,18 @@ impl Coordinator {
         };
 
         Ok(Coordinator {
-            tx,
+            queue,
             metrics,
             requests: AtomicU64::new(0),
             negative_hits: AtomicU64::new(0),
+            analyses: AtomicU64::new(0),
             warm_start: AtomicU64::new(warm),
             cache,
             flight,
             default_target: opts.target,
             snapshot_path: opts.cache.snapshot_path,
             stop,
-            handle: Some(handle),
+            handles,
             snap_signal,
             snap_handle,
         })
@@ -366,9 +588,17 @@ impl Coordinator {
         let (reply, rx) = mpsc::channel();
         let enqueued = Instant::now();
         self.requests.fetch_add(1, Ordering::Relaxed);
+        // Stage 1 on the submitting thread: the cost sweep, whose
+        // fingerprint is the cache key. Hits and coalesced followers stop
+        // here; only a miss that actually enqueues completes the sweep
+        // into a full analysis (fusion plan + memory totals) below, which
+        // then rides the job so the executor/backend never re-traverse the
+        // graph. Client threads thus parallelize analysis naturally, off
+        // the executor pool.
+        let sweep = CostSweep::of(&graph);
         let mut key = None;
         if let Some(cache) = &self.cache {
-            let k = CacheKey::of(&graph, &target);
+            let k = CacheKey::new(sweep.fingerprint, &target);
             match cache.get(k) {
                 // Lock-free reply: the hit path never touches the metrics
                 // mutex, the queue or the executor.
@@ -391,14 +621,19 @@ impl Coordinator {
             }
             key = Some(k);
         }
+        // Miss (or cache disabled): build the full plan from the sweep —
+        // the cost pass is not re-run.
+        let analysis = sweep.complete(&graph);
+        self.analyses.fetch_add(1, Ordering::Relaxed);
         let job = Job {
             graph,
+            analysis,
             target,
             key,
             enqueued,
             reply,
         };
-        if self.tx.send(job).is_err() {
+        if self.queue.push(job).is_err() {
             // Executor gone; every receiver sees a disconnect. Close the
             // flight so parked followers disconnect too instead of hanging.
             if let (Some(k), Some(flight)) = (key, &self.flight) {
@@ -460,6 +695,7 @@ impl Coordinator {
         let mut m = self.metrics.lock().unwrap().clone();
         m.requests = self.requests.load(Ordering::Relaxed);
         m.negative_hits = self.negative_hits.load(Ordering::Relaxed);
+        m.analyses_computed = self.analyses.load(Ordering::Relaxed);
         m.warm_start_entries = self.warm_start.load(Ordering::Relaxed);
         if let Some(cache) = &self.cache {
             let s = cache.stats();
@@ -489,12 +725,10 @@ impl Drop for Coordinator {
             *signal.stopped.lock().unwrap() = true;
             signal.cv.notify_all();
         }
-        // Unblock the executor by closing the channel.
-        // (tx dropped after handle join would deadlock; drop it via replace.)
-        let (dummy_tx, _) = mpsc::sync_channel(1);
-        let tx = std::mem::replace(&mut self.tx, dummy_tx);
-        drop(tx);
-        if let Some(h) = self.handle.take() {
+        // Unblock the worker pool: workers drain what is queued, then see
+        // the closed queue and exit.
+        self.queue.close();
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
         if let Some(h) = self.snap_handle.take() {
@@ -556,12 +790,23 @@ fn snapshot_main(
     }
 }
 
+/// Per-batch counters accumulated while publishing results (outside the
+/// metrics lock) and folded in afterwards under one short acquisition.
+#[derive(Default)]
+struct BatchOutcomeCounters {
+    coalesced: u64,
+    errors: u64,
+    reused: u64,
+    latencies: Vec<f64>,
+}
+
 #[allow(clippy::too_many_arguments)]
 fn executor_main(
-    factory: BackendFactory,
+    worker: usize,
+    factory: &BackendFactory,
     max_wait: Duration,
     negative_ttl: Option<Duration>,
-    rx: Receiver<Job>,
+    queue: Arc<JobQueue>,
     metrics: Arc<Mutex<Metrics>>,
     cache: Option<Arc<ShardedLruCache<CacheValue>>>,
     flight: Option<Arc<SingleFlight<Prediction>>>,
@@ -580,40 +825,48 @@ fn executor_main(
         }
     };
     let max_b = backend.max_batch().max(1);
-    log_info!(
-        "coordinator up: backend={} max_batch={max_b} wait={max_wait:?} cache={} dedup={}",
-        backend.name(),
-        cache.is_some(),
-        flight.is_some()
-    );
+    if worker == 0 {
+        log_info!(
+            "coordinator up: backend={} max_batch={max_b} wait={max_wait:?} cache={} dedup={}",
+            backend.name(),
+            cache.is_some(),
+            flight.is_some()
+        );
+    }
 
     // --- serve loop ------------------------------------------------------
+    // Cache-aware admission priorities, computed only when a batch
+    // overflows: one single-flight snapshot per decision (one lock, not
+    // one per queued job), with aging — a miss that has waited past the
+    // starvation bound outranks any follower count, so every queued job
+    // makes progress even under a sustained storm of hotter keys.
+    let starvation_bound = (max_wait * 64).max(Duration::from_millis(250));
+    let priorities = |jobs: &VecDeque<Job>| -> Vec<usize> {
+        let counts = flight.as_ref().map(|f| f.waiter_counts());
+        jobs.iter()
+            .map(|job| {
+                if job.enqueued.elapsed() >= starvation_bound {
+                    return usize::MAX; // aged: admit ahead of any hot key
+                }
+                match (&counts, job.key) {
+                    (Some(c), Some(k)) => c.get(&k.as_u128()).copied().unwrap_or(0),
+                    _ => 0,
+                }
+            })
+            .collect()
+    };
     while !stop.load(Ordering::SeqCst) {
-        // Block for the first job.
-        let first = match rx.recv_timeout(Duration::from_millis(50)) {
-            Ok(job) => job,
-            Err(RecvTimeoutError::Timeout) => continue,
-            Err(RecvTimeoutError::Disconnected) => break,
+        let Some(batch) = queue.pop_batch(max_b, max_wait, &priorities) else {
+            break; // queue closed and drained
         };
-        // Grow the batch until full or deadline.
-        let mut jobs = vec![first];
-        let deadline = Instant::now() + max_wait;
-        while jobs.len() < max_b {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(job) => jobs.push(job),
-                Err(_) => break,
-            }
-        }
+        let jobs = batch.jobs;
 
         let result = {
             let requests: Vec<PredictRequest<'_>> = jobs
                 .iter()
                 .map(|j| PredictRequest {
                     graph: &j.graph,
+                    analysis: &j.analysis,
                     target: &j.target,
                 })
                 .collect();
@@ -629,12 +882,14 @@ fn executor_main(
             Err(e) => Err(e),
         };
 
-        // Publish to cache, wake followers, reply + metrics.
-        let mut m = metrics.lock().unwrap();
-        m.batches += 1;
-        m.batch_fill_sum += jobs.len() as u64;
+        // Publish to cache, wake followers and reply first — no lock held
+        // while senders run — then fold the counters into the metrics
+        // under one short acquisition.
+        let n_jobs = jobs.len() as u64;
+        let mut c = BatchOutcomeCounters::default();
         match result {
             Ok(outcomes) => {
+                c.reused = n_jobs; // every served request consumed its carried analysis
                 for (job, outcome) in jobs.into_iter().zip(outcomes) {
                     match outcome {
                         Ok(raw) => {
@@ -650,19 +905,19 @@ fn executor_main(
                             }
                             if let (Some(k), Some(flight)) = (job.key, &flight) {
                                 for w in flight.take(k.as_u128()) {
-                                    m.coalesced += 1;
-                                    push_latency(&mut m, w.enqueued.elapsed().as_secs_f64());
+                                    c.coalesced += 1;
+                                    c.latencies.push(w.enqueued.elapsed().as_secs_f64());
                                     let _ = w.reply.send(Ok(pred.clone()));
                                 }
                             }
-                            push_latency(&mut m, job.enqueued.elapsed().as_secs_f64());
+                            c.latencies.push(job.enqueued.elapsed().as_secs_f64());
                             let _ = job.reply.send(Ok(pred));
                         }
                         Err(msg) => {
                             // Per-request failure: tombstone it so repeats
                             // are served on the submit path, then fail the
                             // leader and every parked follower.
-                            m.errors += 1;
+                            c.errors += 1;
                             if let (Some(k), Some(cache), Some(ttl)) =
                                 (job.key, &cache, negative_ttl)
                             {
@@ -674,7 +929,7 @@ fn executor_main(
                             }
                             if let (Some(k), Some(flight)) = (job.key, &flight) {
                                 for w in flight.take(k.as_u128()) {
-                                    m.errors += 1;
+                                    c.errors += 1;
                                     let _ = w.reply.send(Err(anyhow!("{msg}")));
                                 }
                             }
@@ -687,10 +942,10 @@ fn executor_main(
                 // Batch-level (infrastructure) failure: nothing cacheable.
                 let msg = format!("{e:#}");
                 for job in jobs {
-                    m.errors += 1;
+                    c.errors += 1;
                     if let (Some(k), Some(flight)) = (job.key, &flight) {
                         for w in flight.take(k.as_u128()) {
-                            m.errors += 1;
+                            c.errors += 1;
                             let _ = w.reply.send(Err(anyhow!("{msg}")));
                         }
                     }
@@ -698,8 +953,19 @@ fn executor_main(
                 }
             }
         }
+
+        let mut m = metrics.lock().unwrap();
+        m.batches += 1;
+        m.batch_fill_sum += n_jobs;
+        m.coalesced += c.coalesced;
+        m.errors += c.errors;
+        m.analyses_reused += c.reused;
+        m.priority_admissions += batch.jumped;
+        for lat in c.latencies {
+            push_latency(&mut m, lat);
+        }
     }
-    log_info!("coordinator executor shutting down");
+    crate::log_debug!("coordinator executor worker {worker} shutting down");
 }
 
 #[cfg(test)]
@@ -711,11 +977,97 @@ mod tests {
         let o = CoordinatorOptions::default();
         assert!(o.max_wait <= Duration::from_millis(10));
         assert!(o.queue_depth >= 64);
+        assert_eq!(o.executor_threads, 1, "parallelism is opt-in");
         assert!(o.cache.enabled);
         assert!(o.cache.single_flight);
         assert!(o.cache.capacity >= 1024);
         assert_eq!(o.target, Target::default());
         assert!(o.cache.negative_ttl.is_some());
+    }
+
+    fn fifo_prio(jobs: &VecDeque<Job>) -> Vec<usize> {
+        vec![0; jobs.len()]
+    }
+
+    fn dummy_job(tag: u64) -> (Job, Receiver<Result<Prediction>>) {
+        let (reply, rx) = mpsc::channel();
+        let mut b = crate::ir::GraphBuilder::new("t", &format!("q-{tag}"), 1);
+        let x = b.input(vec![1, 3, 8, 8]);
+        b.conv_relu(x, 4 + tag as usize, 3, 1, 1);
+        let graph = b.finish();
+        let analysis = GraphAnalysis::of(&graph);
+        let key = Some(CacheKey::new(analysis.fingerprint, &Target::default()));
+        (
+            Job {
+                graph,
+                analysis,
+                target: Target::default(),
+                key,
+                enqueued: Instant::now(),
+                reply,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn job_queue_admits_by_priority_then_fifo() {
+        let q = JobQueue::new(16);
+        // Three jobs, priorities 0 / 2 / 1: a 1-slot batch admits the
+        // 2-follower job first even though it arrived second.
+        let mut prios = std::collections::HashMap::new();
+        for (tag, p) in [(0u64, 0usize), (1, 2), (2, 1)] {
+            let (job, _rx) = dummy_job(tag);
+            prios.insert(job.analysis.fingerprint.as_u128(), p);
+            q.push(job).map_err(|_| ()).unwrap();
+        }
+        let prio = |jobs: &VecDeque<Job>| -> Vec<usize> {
+            jobs.iter()
+                .map(|j| prios[&j.analysis.fingerprint.as_u128()])
+                .collect()
+        };
+        let b1 = q.pop_batch(1, Duration::ZERO, &prio).unwrap();
+        assert_eq!(b1.jobs[0].variant_tag(), "q-1");
+        assert_eq!(b1.jumped, 1, "q-1 jumped the older q-0");
+        let b2 = q.pop_batch(1, Duration::ZERO, &prio).unwrap();
+        assert_eq!(b2.jobs[0].variant_tag(), "q-2");
+        let b3 = q.pop_batch(1, Duration::ZERO, &prio).unwrap();
+        assert_eq!(b3.jobs[0].variant_tag(), "q-0");
+        assert_eq!(b3.jumped, 0, "nothing left to jump");
+    }
+
+    #[test]
+    fn job_queue_equal_priorities_are_fifo() {
+        let q = JobQueue::new(16);
+        for tag in 0..4u64 {
+            let (job, _rx) = dummy_job(tag);
+            q.push(job).map_err(|_| ()).unwrap();
+        }
+        let b = q.pop_batch(2, Duration::ZERO, fifo_prio).unwrap();
+        assert_eq!(b.jobs.len(), 2);
+        assert_eq!(b.jobs[0].variant_tag(), "q-0");
+        assert_eq!(b.jobs[1].variant_tag(), "q-1");
+        assert_eq!(b.jumped, 0);
+    }
+
+    #[test]
+    fn job_queue_close_drains_then_ends() {
+        let q = JobQueue::new(16);
+        let (job, _rx) = dummy_job(0);
+        q.push(job).map_err(|_| ()).unwrap();
+        q.close();
+        // Queued work is still served after close...
+        assert!(q.pop_batch(8, Duration::ZERO, fifo_prio).is_some());
+        // ...then poppers see the end, and pushes bounce.
+        assert!(q.pop_batch(8, Duration::ZERO, fifo_prio).is_none());
+        let (job, _rx) = dummy_job(1);
+        assert!(q.push(job).is_err());
+    }
+
+    impl Job {
+        fn variant_tag(&self) -> &str {
+            &self.graph.variant
+        }
     }
 
     #[test]

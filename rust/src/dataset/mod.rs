@@ -6,10 +6,9 @@ pub mod io;
 pub mod normalize;
 pub mod split;
 
-use crate::features::static_features;
 use crate::ir::Graph;
 use crate::modelgen::{Family, ALL_FAMILIES};
-use crate::simulator::{Measurement, Simulator};
+use crate::simulator::{GraphAnalysis, Measurement, Simulator};
 use crate::util::threadpool::parallel_map_indexed;
 
 pub use normalize::NormStats;
@@ -49,8 +48,11 @@ impl Dataset {
         let samples = parallel_map_indexed(specs.len(), workers, |i| {
             let (family, idx) = specs[i];
             let graph = family.generate(idx);
-            let statics = static_features(&graph);
-            let y = sim.measure(&graph);
+            // Analyze once per graph: the statics and the measurement share
+            // one cost/fusion/liveness pass instead of re-deriving it.
+            let analysis = GraphAnalysis::of(&graph);
+            let statics = analysis.statics;
+            let y = sim.measure_analyzed(&analysis);
             Sample { graph, statics, y }
         });
         let splits = Splits::fractions(samples.len(), 0.70, 0.15, seed);

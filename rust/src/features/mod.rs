@@ -9,5 +9,8 @@
 pub mod node_features;
 pub mod static_features;
 
-pub use node_features::{encode_graph, fill_padded, FeatureConfig, GraphFeatures};
+pub use node_features::{
+    encode_graph, encode_graph_analyzed, fill_padded, fill_padded_analyzed, FeatureConfig,
+    GraphFeatures, NODE_FEATS,
+};
 pub use static_features::{static_feature_bits, static_features, STATIC_FEATS};

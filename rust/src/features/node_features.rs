@@ -12,7 +12,8 @@
 use crate::ir::infer::numel;
 use crate::ir::op::N_CATEGORIES;
 use crate::ir::Graph;
-use crate::simulator::cost::op_cost;
+use crate::simulator::cost::{op_cost, OpCost};
+use crate::simulator::GraphAnalysis;
 
 /// Number of attribute features.
 pub const ATTR_FEATS: usize = 6;
@@ -45,8 +46,15 @@ pub struct GraphFeatures {
     pub a_hat: Vec<f32>,
 }
 
-/// Encode one node's 32 features into `out`.
+/// Encode one node's 32 features into `out`, computing the node's cost
+/// from scratch (legacy path; the serving path passes cached costs via
+/// [`node_feature_row_with_cost`]).
 fn node_feature_row(graph: &Graph, id: usize, out: &mut [f32]) {
+    node_feature_row_with_cost(graph, id, &op_cost(graph, &graph.nodes[id]), out)
+}
+
+/// Encode one node's 32 features into `out` from a precomputed [`OpCost`].
+fn node_feature_row_with_cost(graph: &Graph, id: usize, cost: &OpCost, out: &mut [f32]) {
     debug_assert_eq!(out.len(), NODE_FEATS);
     let node = &graph.nodes[id];
     out.fill(0.0);
@@ -75,9 +83,8 @@ fn node_feature_row(graph: &Graph, id: usize, out: &mut [f32]) {
     }
     out[base + 4] = s.len() as f32 / 4.0;
     out[base + 5] = (numel(s) as f32 + 1.0).ln() / 18.0;
-    let c = op_cost(graph, node);
-    out[base + 6] = ((c.flops + 1.0) as f32).ln() / 26.0;
-    out[base + 7] = ((c.total_bytes() + 1.0) as f32).ln() / 22.0;
+    out[base + 6] = ((cost.flops + 1.0) as f32).ln() / 26.0;
+    out[base + 7] = ((cost.total_bytes() + 1.0) as f32).ln() / 22.0;
 }
 
 /// Encode the whole graph (Algorithm 1's CreateGraph): X and Â at natural
@@ -85,10 +92,23 @@ fn node_feature_row(graph: &Graph, id: usize, out: &mut [f32]) {
 /// the post-order filter yields up to relabeling, and the order the padded
 /// batch uses.
 pub fn encode_graph(graph: &Graph) -> GraphFeatures {
+    encode_graph_impl(graph, node_feature_row)
+}
+
+/// [`encode_graph`] from a precomputed analysis: node cost features come
+/// from the cached per-node [`OpCost`]s — no cost recomputation.
+pub fn encode_graph_analyzed(graph: &Graph, analysis: &GraphAnalysis) -> GraphFeatures {
+    debug_assert_eq!(analysis.n_nodes, graph.n_nodes());
+    encode_graph_impl(graph, |graph, id, out| {
+        node_feature_row_with_cost(graph, id, &analysis.costs[id], out)
+    })
+}
+
+fn encode_graph_impl(graph: &Graph, row: impl Fn(&Graph, usize, &mut [f32])) -> GraphFeatures {
     let n = graph.n_nodes();
     let mut x = vec![0.0f32; n * NODE_FEATS];
     for id in 0..n {
-        node_feature_row(graph, id, &mut x[id * NODE_FEATS..(id + 1) * NODE_FEATS]);
+        row(graph, id, &mut x[id * NODE_FEATS..(id + 1) * NODE_FEATS]);
     }
 
     // Â: adjacency with self-loops, row-normalized (mean aggregation).
@@ -125,6 +145,33 @@ pub fn fill_padded(
     a_out: &mut [f32],
     mask_out: &mut [f32],
 ) -> Result<(), String> {
+    fill_padded_impl(graph, cfg, x_out, a_out, mask_out, node_feature_row)
+}
+
+/// [`fill_padded`] from a precomputed analysis: the serving batch
+/// assembler's path — cached per-node costs, zero graph re-traversal.
+pub fn fill_padded_analyzed(
+    graph: &Graph,
+    analysis: &GraphAnalysis,
+    cfg: FeatureConfig,
+    x_out: &mut [f32],
+    a_out: &mut [f32],
+    mask_out: &mut [f32],
+) -> Result<(), String> {
+    debug_assert_eq!(analysis.n_nodes, graph.n_nodes());
+    fill_padded_impl(graph, cfg, x_out, a_out, mask_out, |graph, id, out| {
+        node_feature_row_with_cost(graph, id, &analysis.costs[id], out)
+    })
+}
+
+fn fill_padded_impl(
+    graph: &Graph,
+    cfg: FeatureConfig,
+    x_out: &mut [f32],
+    a_out: &mut [f32],
+    mask_out: &mut [f32],
+    row: impl Fn(&Graph, usize, &mut [f32]),
+) -> Result<(), String> {
     let n = graph.n_nodes();
     let m = cfg.max_nodes;
     if n > m {
@@ -143,7 +190,7 @@ pub fn fill_padded(
     mask_out.fill(0.0);
 
     for id in 0..n {
-        node_feature_row(
+        row(
             graph,
             id,
             &mut x_out[id * cfg.node_feats..(id + 1) * cfg.node_feats],
@@ -272,6 +319,25 @@ mod tests {
         // Padding region zeroed.
         assert!(x[n * NODE_FEATS..].iter().all(|&v| v == 0.0));
         assert!(a[n * 10..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn analyzed_featurization_matches_scratch() {
+        let g = tiny();
+        let a = GraphAnalysis::of(&g);
+        let scratch = encode_graph(&g);
+        let analyzed = encode_graph_analyzed(&g, &a);
+        assert_eq!(scratch.x, analyzed.x);
+        assert_eq!(scratch.a_hat, analyzed.a_hat);
+
+        let cfg = FeatureConfig::new(10);
+        let (mut x1, mut a1, mut m1) = (vec![0.0; 10 * NODE_FEATS], vec![0.0; 100], vec![0.0; 10]);
+        let (mut x2, mut a2, mut m2) = (vec![0.0; 10 * NODE_FEATS], vec![0.0; 100], vec![0.0; 10]);
+        fill_padded(&g, cfg, &mut x1, &mut a1, &mut m1).unwrap();
+        fill_padded_analyzed(&g, &a, cfg, &mut x2, &mut a2, &mut m2).unwrap();
+        assert_eq!(x1, x2);
+        assert_eq!(a1, a2);
+        assert_eq!(m1, m2);
     }
 
     #[test]

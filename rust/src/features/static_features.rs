@@ -11,9 +11,13 @@
 use crate::ir::{Graph, OpKind};
 use crate::simulator::cost::total_macs;
 
-pub const STATIC_FEATS: usize = 5;
+pub use crate::simulator::analysis::STATIC_FEATS;
 
 /// Raw static features of a graph, in the paper's eq. (1) order.
+///
+/// This is the recompute-from-scratch path (one cost sweep); callers that
+/// already hold a [`crate::simulator::GraphAnalysis`] read its `statics`
+/// field instead — the two are bit-identical (parity property tests).
 pub fn static_features(graph: &Graph) -> [f64; STATIC_FEATS] {
     let conv = graph.count_op(OpKind::Conv2d)
         + graph.count_op(OpKind::DepthwiseConv2d)
@@ -30,9 +34,10 @@ pub fn static_features(graph: &Graph) -> [f64; STATIC_FEATS] {
 /// Static features as exact integers for hashing (the cache fingerprint).
 /// Every component of eq. (1) is an integral count (MACs, batch, op
 /// counts), so rounding is exact and — unlike raw f64 bit patterns — the
-/// result cannot depend on summation order.
+/// result cannot depend on summation order. (The rounding itself lives in
+/// `simulator::analysis`, next to the fingerprint fold that consumes it.)
 pub fn static_feature_bits(statics: &[f64; STATIC_FEATS]) -> [u64; STATIC_FEATS] {
-    std::array::from_fn(|i| statics[i].max(0.0).round() as u64)
+    crate::simulator::analysis::static_bits(statics)
 }
 
 #[cfg(test)]

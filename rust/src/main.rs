@@ -45,7 +45,8 @@ COMMANDS
                  [--backend auto|pjrt|sim] [--target-device a100[:MIG]]
                  [--cache-file <file>]
   serve          [--checkpoint <file>] [--addr 127.0.0.1:7401] [--max-wait-ms 2]
-                 [--backend auto|pjrt|sim] [--no-cache] [--no-dedup]
+                 [--backend auto|pjrt|sim] [--executor-threads 1]
+                 [--no-cache] [--no-dedup]
                  [--cache-capacity 8192] [--cache-shards 8] [--cache-ttl-s N]
                  [--cache-file <file>] [--cache-snapshot-every-s N]
                  [--target-device a100[:MIG]]   (MIG: 1g.5gb|2g.10gb|3g.20gb|7g.40gb)
@@ -62,8 +63,8 @@ fn main() {
         "out", "fraction", "seed", "workers", "dataset", "checkpoint-out",
         "variant", "epochs", "lr", "max-train", "artifacts", "checkpoint",
         "split", "model", "framework", "addr", "max-wait-ms", "steps",
-        "backend", "cache-capacity", "cache-shards", "cache-ttl-s",
-        "cache-file", "cache-snapshot-every-s", "target-device",
+        "backend", "executor-threads", "cache-capacity", "cache-shards",
+        "cache-ttl-s", "cache-file", "cache-snapshot-every-s", "target-device",
     ]) {
         Ok(a) => a,
         Err(e) => {
@@ -136,6 +137,7 @@ fn coordinator_options(args: &Args) -> Result<CoordinatorOptions> {
     };
     Ok(CoordinatorOptions {
         max_wait: std::time::Duration::from_millis(args.get_u64("max-wait-ms", 2)),
+        executor_threads: args.get_usize("executor-threads", 1).max(1),
         cache,
         target: target_from_args(args)?,
         ..Default::default()
@@ -325,9 +327,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         "cache off".to_string()
     };
+    let threads = opts.executor_threads.max(1);
     dippm::coordinator::tcp::serve(coord, addr, move |port| {
         println!("listening on port {port}; protocol: one JSON request per line");
-        println!("{cache_desc}; query counters with {{\"cmd\":\"cache_stats\"}}");
+        println!(
+            "{cache_desc}; {threads} executor thread(s); query counters with {{\"cmd\":\"cache_stats\"}}"
+        );
     })
 }
 

@@ -11,7 +11,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::cache::{CacheKey, Target};
 use crate::ir::Graph;
-use crate::simulator::{MigProfile, MigResult, Simulator, ALL_PROFILES};
+use crate::simulator::{GraphAnalysis, MigProfile, MigResult, Simulator, ALL_PROFILES};
 
 /// Eq. (2): thresholds in MB on the predicted memory α.
 /// Returns `None` when α exceeds the largest profile (the paper's "None").
@@ -30,12 +30,22 @@ pub fn predict_profile(predicted_mem_mb: f64) -> Option<MigProfile> {
 
 /// The paper's Table 5 "actual" methodology: measure memory on every
 /// profile (OOM-aware) and score each by consumption / capacity — "the
-/// higher the value is, the more appropriate profile".
+/// higher the value is, the more appropriate profile". Analyzes the graph
+/// once and sweeps all 7 profiles against the same plan.
 pub fn actual_profile_scores(sim: &Simulator, graph: &Graph) -> Vec<(MigProfile, Option<f64>)> {
+    actual_profile_scores_analyzed(sim, &GraphAnalysis::of(graph))
+}
+
+/// [`actual_profile_scores`] from a precomputed analysis — the per-profile
+/// sweep never re-traverses the graph.
+pub fn actual_profile_scores_analyzed(
+    sim: &Simulator,
+    analysis: &GraphAnalysis,
+) -> Vec<(MigProfile, Option<f64>)> {
     ALL_PROFILES
         .iter()
         .map(|&p| {
-            let score = match sim.measure_mig(graph, p) {
+            let score = match sim.measure_mig_analyzed(analysis, p) {
                 MigResult::Ok(m) => Some(m.memory_mb / p.capacity_mb()),
                 MigResult::OutOfMemory { .. } => None,
             };
@@ -120,9 +130,18 @@ impl MigAdvisor {
     }
 
     /// The advisory table for `graph`, memoized by the composite
-    /// fingerprint × target key.
+    /// fingerprint × target key. Analyzes the graph once: the fingerprint
+    /// keys the memo and, on a miss, the same analysis feeds the 7-profile
+    /// sweep — the graph is traversed exactly once per distinct
+    /// architecture.
     pub fn table(&self, graph: &Graph) -> Arc<ProfileTable> {
-        let key = CacheKey::of(graph, &self.target).as_u128();
+        self.table_analyzed(&GraphAnalysis::of(graph))
+    }
+
+    /// [`MigAdvisor::table`] from a precomputed analysis (e.g. the one the
+    /// coordinator already carries in its job).
+    pub fn table_analyzed(&self, analysis: &GraphAnalysis) -> Arc<ProfileTable> {
+        let key = CacheKey::new(analysis.fingerprint, &self.target).as_u128();
         if let Some(t) = self.memo.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return t.clone();
@@ -130,7 +149,7 @@ impl MigAdvisor {
         self.misses.fetch_add(1, Ordering::Relaxed);
         // Compute outside the lock: a concurrent duplicate sweep is cheaper
         // than serializing every distinct-table computation.
-        let scores = actual_profile_scores(&self.sim, graph);
+        let scores = actual_profile_scores_analyzed(&self.sim, analysis);
         let best = scores
             .iter()
             .filter_map(|&(p, s)| s.map(|score| (p, score)))

@@ -1,0 +1,353 @@
+//! One-pass graph analysis: the analyze-once / reuse-everywhere artifact of
+//! the serving and dataset hot paths.
+//!
+//! Before this module existed every prediction re-derived the same per-graph
+//! facts many times over: the fusion pass re-ran `op_cost` per node, latency
+//! and utilization each re-ran the fusion pass, featurization re-ran
+//! `op_cost` per node again, and a 7-profile MIG sweep repeated the whole
+//! stack once per profile. [`GraphAnalysis::of`] computes everything exactly
+//! once — per-node [`OpCost`]s, the fused [`Kernel`] plan, the static
+//! feature vector (paper eq. 1), graph totals (FLOPs / MACs / weight,
+//! peak-liveness and workspace bytes) and the canonical WL [`Fingerprint`]
+//! — from a single cost sweep whose results every later stage shares:
+//!
+//! * `Simulator::{latency_s,memory_mb,energy_j,measure,measure_mig}` have
+//!   `*_analyzed` twins that read the cached plan; a MIG sweep analyzes once
+//!   and evaluates all 7 profiles against the same kernels.
+//! * `features::{encode_graph_analyzed, fill_padded_analyzed}` featurize
+//!   from the cached costs instead of recomputing them per node.
+//! * The coordinator computes the analysis once at submit (the fingerprint
+//!   doubles as the cache key) and carries it in the job, so the executor
+//!   never re-traverses the graph.
+//!
+//! The fingerprint algorithm lives here (rather than in `cache`) because it
+//! folds the static-feature bits the analysis already has; `cache` re-exports
+//! [`Fingerprint`] unchanged, and the key format is bit-identical to the one
+//! the disk snapshots of `cache::persist` were written with.
+
+use std::fmt;
+
+use crate::ir::{Graph, OpKind};
+use crate::util::rng::splitmix64;
+
+use super::cost::{op_cost, OpCost};
+use super::fusion::{self, Kernel};
+use super::memory;
+
+/// Number of static features (paper eq. 1).
+pub const STATIC_FEATS: usize = 5;
+
+/// A 128-bit structural graph fingerprint.
+///
+/// Deterministic hash of a model graph: two submissions of the *same
+/// architecture at the same batch size* map to the same key regardless of
+/// how the frontend numbered or named the nodes, while any semantic
+/// difference (an op kind, an attribute, a shape, an edge, the batch)
+/// changes the key with overwhelming probability.
+///
+/// Construction: per-node Weisfeiler–Lehman signatures from
+/// [`Graph::canonical_signatures`] (id/name-invariant) are folded with an
+/// order-independent multiset combine (wrapping sums of keyed mixes) over
+/// nodes and edges, then mixed with the static-feature vector (paper eq. 1)
+/// so the cache key covers exactly what the predictor sees. Only the
+/// in-repo splitmix64 is used — never `std`'s randomized hasher — so keys
+/// are stable across runs, processes and machines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fingerprint {
+    pub hi: u64,
+    pub lo: u64,
+}
+
+// Independent lane keys; arbitrary odd constants.
+const K_NODE_LO: u64 = 0x9AE1_6A3B_2F90_404F;
+const K_NODE_HI: u64 = 0xC2B2_AE3D_27D4_EB4F;
+const K_EDGE_LO: u64 = 0x1656_67B1_9E37_79F9;
+const K_EDGE_HI: u64 = 0x27D4_EB2F_1656_67C5;
+
+impl Fingerprint {
+    /// Fingerprint a graph from scratch. Cost is O(nodes + edges) plus one
+    /// cost sweep for the static bits. The serving path never calls this:
+    /// it reads [`GraphAnalysis::fingerprint`], which shares the analysis'
+    /// cost sweep instead of running its own.
+    pub fn of_graph(graph: &Graph) -> Fingerprint {
+        let (statics, _flops) = statics_sweep(graph, |i| op_cost(graph, &graph.nodes[i]));
+        fold_fingerprint(graph, &statics)
+    }
+
+    /// The fingerprint as one 128-bit integer (cache/shard key).
+    pub fn as_u128(self) -> u128 {
+        ((self.hi as u128) << 64) | self.lo as u128
+    }
+
+    /// 32-hex-digit rendering (stable; used by the TCP API and logs).
+    pub fn to_hex(self) -> String {
+        format!("{:016x}{:016x}", self.hi, self.lo)
+    }
+}
+
+impl fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:016x}{:016x}", self.hi, self.lo)
+    }
+}
+
+/// Static features as exact integers for hashing. Every component of
+/// eq. (1) is an integral count (MACs, batch, op counts), so rounding is
+/// exact and — unlike raw f64 bit patterns — the result cannot depend on
+/// summation order.
+pub fn static_bits(statics: &[f64; STATIC_FEATS]) -> [u64; STATIC_FEATS] {
+    std::array::from_fn(|i| statics[i].max(0.0).round() as u64)
+}
+
+/// Fold the WL node/edge multisets and the static bits into a fingerprint.
+/// Shared by [`Fingerprint::of_graph`] (fresh statics) and
+/// [`GraphAnalysis::of`] (statics from the cached cost sweep) — the two
+/// paths are bit-identical by construction.
+fn fold_fingerprint(graph: &Graph, statics: &[f64; STATIC_FEATS]) -> Fingerprint {
+    let sigs = graph.canonical_signatures();
+    let mut lo: u64 = 0;
+    let mut hi: u64 = 0;
+    // Node multiset: wrapping sums are permutation-invariant.
+    for &s in &sigs {
+        lo = lo.wrapping_add(splitmix64(s ^ K_NODE_LO));
+        hi = hi.wrapping_add(splitmix64(s ^ K_NODE_HI));
+    }
+    // Edge multiset over refined endpoint signatures (directed pairs).
+    for node in &graph.nodes {
+        for &src in &node.inputs {
+            let e = splitmix64(sigs[src])
+                .wrapping_mul(0x100_0000_01B3)
+                .wrapping_add(splitmix64(sigs[node.id]));
+            lo = lo.wrapping_add(splitmix64(e ^ K_EDGE_LO));
+            hi = hi.wrapping_add(splitmix64(e ^ K_EDGE_HI));
+        }
+    }
+    let mut t = splitmix64(graph.batch as u64 ^ 0xBA7C_4000);
+    for v in static_bits(statics) {
+        t = splitmix64(t ^ v);
+    }
+    t = splitmix64(t ^ (graph.n_nodes() as u64).rotate_left(32));
+    Fingerprint {
+        lo: splitmix64(lo ^ t),
+        hi: splitmix64(hi ^ t.rotate_left(17)),
+    }
+}
+
+/// One sweep over the nodes accumulating the eq. (1) statics and total
+/// FLOPs from a per-node cost source. The MAC accumulation order is the
+/// node order — identical to `cost::total_macs`, so the f64 sums agree
+/// bit-for-bit with the legacy scratch path.
+fn statics_sweep(graph: &Graph, cost_of: impl Fn(usize) -> OpCost) -> ([f64; STATIC_FEATS], f64) {
+    let mut macs = 0.0;
+    let mut flops = 0.0;
+    let (mut conv, mut dense, mut relu) = (0u64, 0u64, 0u64);
+    for (i, node) in graph.nodes.iter().enumerate() {
+        let c = cost_of(i);
+        flops += c.flops;
+        if node.op.counts_macs() {
+            macs += c.macs;
+        }
+        match node.op {
+            OpKind::Conv2d | OpKind::DepthwiseConv2d | OpKind::Conv2dTranspose => conv += 1,
+            OpKind::Dense => dense += 1,
+            OpKind::Relu => relu += 1,
+            _ => {}
+        }
+    }
+    let statics = [
+        macs,
+        graph.batch as f64,
+        conv as f64,
+        dense as f64,
+        relu as f64,
+    ];
+    (statics, flops)
+}
+
+/// Stage 1 of the one-pass analysis: the cost sweep. Per-node costs, the
+/// eq. (1) statics, total FLOPs and the WL fingerprint — exactly what the
+/// serving cache key needs. The coordinator's submit path runs this for
+/// every request; cache hits stop here, and only misses pay
+/// [`CostSweep::complete`] (fusion plan + memory totals) to become a full
+/// [`GraphAnalysis`] — without re-running the sweep.
+pub struct CostSweep {
+    costs: Vec<OpCost>,
+    statics: [f64; STATIC_FEATS],
+    flops: f64,
+    /// Canonical structural fingerprint (the cache key substrate).
+    pub fingerprint: Fingerprint,
+}
+
+impl CostSweep {
+    /// Run the cost sweep: one `op_cost` pass shared by the statics and
+    /// the fingerprint fold.
+    pub fn of(graph: &Graph) -> CostSweep {
+        let costs: Vec<OpCost> = graph.nodes.iter().map(|n| op_cost(graph, n)).collect();
+        let (statics, flops) = statics_sweep(graph, |i| costs[i]);
+        let fingerprint = fold_fingerprint(graph, &statics);
+        CostSweep {
+            costs,
+            statics,
+            flops,
+            fingerprint,
+        }
+    }
+
+    /// Upgrade to a full [`GraphAnalysis`]: fuse the kernel plan from the
+    /// already-computed costs and add the memory totals and identity
+    /// fields. `graph` must be the graph this sweep was computed from.
+    pub fn complete(self, graph: &Graph) -> GraphAnalysis {
+        debug_assert_eq!(self.costs.len(), graph.n_nodes());
+        let kernels = fusion::fuse_with_costs(graph, &self.costs);
+        GraphAnalysis {
+            family: graph.family.clone(),
+            variant: graph.variant.clone(),
+            batch: graph.batch,
+            n_nodes: graph.n_nodes(),
+            macs: self.statics[0],
+            flops: self.flops,
+            weight_bytes: memory::weight_bytes(graph),
+            peak_activation_bytes: memory::peak_activation_bytes(graph),
+            workspace_bytes: memory::workspace_bytes(graph),
+            costs: self.costs,
+            kernels,
+            statics: self.statics,
+            fingerprint: self.fingerprint,
+        }
+    }
+}
+
+/// The analyze-once artifact: everything the simulator, the featurizers,
+/// the MIG advisor and the serving cache need from one graph, computed in
+/// a single analysis pass (one shared cost sweep; no stage recomputes
+/// another's work).
+///
+/// The analysis owns small copies of the graph's identity fields
+/// (family/variant/batch seed the simulator's deterministic noise stream)
+/// so it can travel through queues without borrowing the graph.
+#[derive(Debug, Clone)]
+pub struct GraphAnalysis {
+    /// Family tag of the analyzed graph (noise-seed identity).
+    pub family: String,
+    /// Variant tag of the analyzed graph (noise-seed identity).
+    pub variant: String,
+    /// Inference batch size.
+    pub batch: usize,
+    /// Node count of the analyzed graph.
+    pub n_nodes: usize,
+    /// Per-node isolated costs, indexed by `NodeId`.
+    pub costs: Vec<OpCost>,
+    /// The fused-kernel plan (what one inference actually launches).
+    pub kernels: Vec<Kernel>,
+    /// Raw static feature vector (paper eq. 1 order).
+    pub statics: [f64; STATIC_FEATS],
+    /// Total FLOPs over all nodes.
+    pub flops: f64,
+    /// Total MACs (TVM convention — `counts_macs` ops only).
+    pub macs: f64,
+    /// Model weight bytes.
+    pub weight_bytes: f64,
+    /// Liveness-peak activation bytes over a topological execution.
+    pub peak_activation_bytes: f64,
+    /// cuDNN-style workspace bytes (largest conv scratch, before the
+    /// device-level pool floor).
+    pub workspace_bytes: f64,
+    /// Canonical structural fingerprint (the cache key substrate).
+    pub fingerprint: Fingerprint,
+}
+
+impl GraphAnalysis {
+    /// Analyze a graph once. Every derived quantity is bit-identical to the
+    /// legacy recompute-from-scratch helpers (`cost::op_cost`,
+    /// `fusion::fuse`, `memory::*`, `features::static_features`,
+    /// `Fingerprint::of_graph`) — guaranteed by the parity property tests.
+    pub fn of(graph: &Graph) -> GraphAnalysis {
+        CostSweep::of(graph).complete(graph)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Attrs, GraphBuilder};
+    use crate::simulator::cost::{total_flops, total_macs};
+
+    fn sample(batch: usize, ch: usize) -> Graph {
+        let mut b = GraphBuilder::new("t", "analysis-sample", batch);
+        let x = b.input(vec![batch, 3, 16, 16]);
+        let c = b.conv_relu(x, ch, 3, 1, 1);
+        let p = b.add(OpKind::GlobalAvgPool2d, Attrs::none(), &[c]);
+        let f = b.add(OpKind::Flatten, Attrs::none(), &[p]);
+        b.dense(f, 10);
+        b.finish()
+    }
+
+    #[test]
+    fn costs_match_scratch_op_cost() {
+        let g = sample(2, 8);
+        let a = GraphAnalysis::of(&g);
+        assert_eq!(a.costs.len(), g.n_nodes());
+        for (i, node) in g.nodes.iter().enumerate() {
+            assert_eq!(a.costs[i], op_cost(&g, node), "node {i}");
+        }
+    }
+
+    #[test]
+    fn kernels_match_scratch_fuse() {
+        let g = sample(4, 16);
+        let a = GraphAnalysis::of(&g);
+        assert_eq!(a.kernels, fusion::fuse(&g));
+    }
+
+    #[test]
+    fn totals_match_scratch_helpers() {
+        let g = sample(2, 8);
+        let a = GraphAnalysis::of(&g);
+        assert_eq!(a.macs, total_macs(&g));
+        assert_eq!(a.flops, total_flops(&g));
+        assert_eq!(a.weight_bytes, memory::weight_bytes(&g));
+        assert_eq!(a.peak_activation_bytes, memory::peak_activation_bytes(&g));
+        assert_eq!(a.workspace_bytes, memory::workspace_bytes(&g));
+    }
+
+    #[test]
+    fn fingerprint_matches_of_graph() {
+        for (batch, ch) in [(1, 8), (2, 8), (4, 32)] {
+            let g = sample(batch, ch);
+            assert_eq!(GraphAnalysis::of(&g).fingerprint, Fingerprint::of_graph(&g));
+        }
+    }
+
+    #[test]
+    fn sweep_then_complete_equals_direct_analysis() {
+        let g = sample(2, 16);
+        let sweep = CostSweep::of(&g);
+        assert_eq!(sweep.fingerprint, Fingerprint::of_graph(&g));
+        let a = sweep.complete(&g);
+        let direct = GraphAnalysis::of(&g);
+        assert_eq!(a.costs, direct.costs);
+        assert_eq!(a.kernels, direct.kernels);
+        assert_eq!(a.statics, direct.statics);
+        assert_eq!(a.fingerprint, direct.fingerprint);
+        assert_eq!(a.peak_activation_bytes, direct.peak_activation_bytes);
+    }
+
+    #[test]
+    fn identity_fields_copied() {
+        let g = sample(2, 8);
+        let a = GraphAnalysis::of(&g);
+        assert_eq!(a.family, g.family);
+        assert_eq!(a.variant, g.variant);
+        assert_eq!(a.batch, g.batch);
+        assert_eq!(a.n_nodes, g.n_nodes());
+    }
+
+    #[test]
+    fn statics_match_scratch_features() {
+        let g = sample(8, 16);
+        let a = GraphAnalysis::of(&g);
+        assert_eq!(a.statics, crate::features::static_features(&g));
+        let bits = crate::features::static_feature_bits(&a.statics);
+        assert_eq!(static_bits(&a.statics), bits);
+    }
+}

@@ -11,7 +11,7 @@ use crate::ir::{Graph, Node, OpKind};
 pub const BYTES_PER_ELEM: f64 = 4.0; // fp32 inference, as measured by the paper
 
 /// Cost of one node in isolation (before fusion).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct OpCost {
     pub flops: f64,
     pub macs: f64,

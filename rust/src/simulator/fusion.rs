@@ -15,7 +15,7 @@ use crate::ir::{Graph, NodeId, OpKind};
 use super::cost::{op_cost, OpCost};
 
 /// A fused kernel: one launch on the device.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Kernel {
     /// Node ids fused into this kernel (first = producer).
     pub nodes: Vec<NodeId>,
@@ -25,8 +25,19 @@ pub struct Kernel {
     pub tensor_core: bool,
 }
 
-/// Partition the graph into fused kernels (in topological order).
+/// Partition the graph into fused kernels (in topological order),
+/// computing each node's cost from scratch. Callers that already hold a
+/// [`crate::simulator::GraphAnalysis`] read its cached plan instead; this
+/// entry point exists for one-shot callers and as the legacy
+/// recompute-from-scratch path the parity property tests pin against.
 pub fn fuse(graph: &Graph) -> Vec<Kernel> {
+    let costs: Vec<OpCost> = graph.nodes.iter().map(|n| op_cost(graph, n)).collect();
+    fuse_with_costs(graph, &costs)
+}
+
+/// Partition the graph into fused kernels using precomputed per-node costs
+/// (indexed by `NodeId`) — the fusion stage of the one-pass analysis.
+pub fn fuse_with_costs(graph: &Graph, costs: &[OpCost]) -> Vec<Kernel> {
     let consumers = graph.consumers();
     let mut kernel_of: Vec<Option<usize>> = vec![None; graph.nodes.len()];
     let mut kernels: Vec<Kernel> = Vec::new();
@@ -35,7 +46,7 @@ pub fn fuse(graph: &Graph) -> Vec<Kernel> {
         if node.op == OpKind::Input {
             continue; // host copy, not a kernel
         }
-        let c = op_cost(graph, node);
+        let c = costs[node.id];
         if matches!(node.op, OpKind::Reshape | OpKind::Flatten) {
             continue; // metadata-only
         }

@@ -6,7 +6,14 @@
 //! records, including the paper's measurement protocol: 5 warm-up runs are
 //! implicit (the model is steady-state), and the reported value is the mean
 //! of 30 noisy runs with a deterministic per-(graph, profile) noise stream.
+//!
+//! Every entry point has an `*_analyzed` twin taking a precomputed
+//! [`GraphAnalysis`] — analyze a graph once (costs, fused kernels, memory
+//! totals) and evaluate any number of metrics and MIG profiles against the
+//! same plan. The graph-taking methods are one-shot conveniences that
+//! analyze internally.
 
+pub mod analysis;
 pub mod cost;
 pub mod device;
 pub mod fusion;
@@ -15,6 +22,7 @@ pub mod memory;
 use crate::ir::Graph;
 use crate::util::rng::{hash_bytes, Rng};
 
+pub use analysis::{CostSweep, Fingerprint, GraphAnalysis};
 pub use device::{DeviceSpec, MigProfile, ALL_PROFILES};
 
 /// One measured data point — the paper's Y vector (§4.1).
@@ -50,14 +58,21 @@ impl Simulator {
         }
     }
 
-    /// Noise-free analytical latency in seconds on a profile.
+    /// Noise-free analytical latency in seconds on a profile. Analyzes the
+    /// graph first; sweeping several profiles or metrics over one graph is
+    /// cheaper through [`GraphAnalysis::of`] + [`Simulator::latency_s_analyzed`].
     pub fn latency_s(&self, graph: &Graph, profile: MigProfile) -> f64 {
-        let kernels = fusion::fuse(graph);
+        self.latency_s_analyzed(&GraphAnalysis::of(graph), profile)
+    }
+
+    /// Noise-free analytical latency from a precomputed analysis: reads the
+    /// cached kernel plan, never re-traverses the graph.
+    pub fn latency_s_analyzed(&self, a: &GraphAnalysis, profile: MigProfile) -> f64 {
         let s = &self.spec;
         let sm = profile.sm_fraction();
         let bw = profile.bw_fraction();
         let mut total = 0.0;
-        for k in &kernels {
+        for k in &a.kernels {
             let peak = if k.tensor_core {
                 s.tc_flops
             } else {
@@ -77,12 +92,11 @@ impl Simulator {
     }
 
     /// Average achieved utilization (power-weighting term for energy).
-    fn avg_util(&self, graph: &Graph, profile: MigProfile) -> f64 {
-        let kernels = fusion::fuse(graph);
+    fn avg_util_analyzed(&self, a: &GraphAnalysis, profile: MigProfile) -> f64 {
         let s = &self.spec;
         let sm = profile.sm_fraction();
         let (mut t_sum, mut u_sum) = (0.0, 0.0);
-        for k in &kernels {
+        for k in &a.kernels {
             let peak = if k.tensor_core {
                 s.tc_flops
             } else {
@@ -119,10 +133,15 @@ impl Simulator {
     /// paper's Fig. 3 shows (consumption slightly increases with the MIG
     /// profile, and is always highest on 7g.40gb).
     pub fn memory_mb(&self, graph: &Graph, profile: MigProfile) -> f64 {
+        self.memory_mb_analyzed(&GraphAnalysis::of(graph), profile)
+    }
+
+    /// Noise-free memory consumption from a precomputed analysis.
+    pub fn memory_mb_analyzed(&self, a: &GraphAnalysis, profile: MigProfile) -> f64 {
         let s = &self.spec;
-        let act = memory::peak_activation_bytes(graph) / 1e6;
-        let w = memory::weight_bytes(graph) / 1e6;
-        let ws = (memory::workspace_bytes(graph) / 1e6).max(s.workspace_floor_mb)
+        let act = a.peak_activation_bytes / 1e6;
+        let w = a.weight_bytes / 1e6;
+        let ws = (a.workspace_bytes / 1e6).max(s.workspace_floor_mb)
             * profile.sm_fraction().sqrt(); // smaller slices get smaller pools
         let context = s.context_mb * (0.62 + 0.38 * profile.bw_fraction());
         context + w + s.alloc_slack * act + ws
@@ -130,8 +149,14 @@ impl Simulator {
 
     /// Noise-free energy in joules for one inference on a profile.
     pub fn energy_j(&self, graph: &Graph, profile: MigProfile) -> f64 {
-        let t = self.latency_s(graph, profile);
-        let u = self.avg_util(graph, profile);
+        self.energy_j_analyzed(&GraphAnalysis::of(graph), profile)
+    }
+
+    /// Noise-free energy from a precomputed analysis (latency and
+    /// utilization share the same cached kernel plan).
+    pub fn energy_j_analyzed(&self, a: &GraphAnalysis, profile: MigProfile) -> f64 {
+        let t = self.latency_s_analyzed(a, profile);
+        let u = self.avg_util_analyzed(a, profile);
         let frac = profile.sm_fraction();
         // Board power attributed to the slice: share of idle + dynamic.
         let p = self.spec.idle_w * frac + (self.spec.tdp_w - self.spec.idle_w) * frac * u;
@@ -144,15 +169,27 @@ impl Simulator {
         self.measure_on(graph, MigProfile::G7_40)
     }
 
+    /// [`Simulator::measure`] from a precomputed analysis.
+    pub fn measure_analyzed(&self, a: &GraphAnalysis) -> Measurement {
+        self.measure_on_analyzed(a, MigProfile::G7_40)
+    }
+
     /// Measurement with the paper's protocol on a given profile: mean of
     /// `runs` noisy samples, deterministic per (graph variant, profile).
     pub fn measure_on(&self, graph: &Graph, profile: MigProfile) -> Measurement {
-        let lat = self.latency_s(graph, profile) * 1e3;
-        let mem = self.memory_mb(graph, profile);
-        let en = self.energy_j(graph, profile);
+        self.measure_on_analyzed(&GraphAnalysis::of(graph), profile)
+    }
+
+    /// [`Simulator::measure_on`] from a precomputed analysis: latency,
+    /// memory and energy all read the same cached plan — one analysis
+    /// serves the full measurement (and, via repeated calls, a whole MIG
+    /// profile sweep).
+    pub fn measure_on_analyzed(&self, a: &GraphAnalysis, profile: MigProfile) -> Measurement {
+        let lat = self.latency_s_analyzed(a, profile) * 1e3;
+        let mem = self.memory_mb_analyzed(a, profile);
+        let en = self.energy_j_analyzed(a, profile);
         let seed = hash_bytes(
-            format!("{}|{}|{}|{}", graph.family, graph.variant, graph.batch, profile.name())
-                .as_bytes(),
+            format!("{}|{}|{}|{}", a.family, a.variant, a.batch, profile.name()).as_bytes(),
         );
         let mut rng = Rng::new(seed);
         let noisy_mean = |rng: &mut Rng, base: f64| -> f64 {
@@ -174,14 +211,19 @@ impl Simulator {
 
     /// MIG-aware measurement that reports OOM when the graph cannot fit.
     pub fn measure_mig(&self, graph: &Graph, profile: MigProfile) -> MigResult {
-        let mem = self.memory_mb(graph, profile);
+        self.measure_mig_analyzed(&GraphAnalysis::of(graph), profile)
+    }
+
+    /// [`Simulator::measure_mig`] from a precomputed analysis.
+    pub fn measure_mig_analyzed(&self, a: &GraphAnalysis, profile: MigProfile) -> MigResult {
+        let mem = self.memory_mb_analyzed(a, profile);
         if mem > profile.capacity_mb() {
             return MigResult::OutOfMemory {
                 required_mb: mem,
                 capacity_mb: profile.capacity_mb(),
             };
         }
-        MigResult::Ok(self.measure_on(graph, profile))
+        MigResult::Ok(self.measure_on_analyzed(a, profile))
     }
 }
 
@@ -274,6 +316,22 @@ mod tests {
         let sim = Simulator::new();
         let ms = sim.latency_s(&convnet(8, 64, 6), MigProfile::G7_40) * 1e3;
         assert!(ms > 0.05 && ms < 50.0, "latency {ms} ms");
+    }
+
+    #[test]
+    fn analyzed_entry_points_match_graph_entry_points() {
+        // One analysis, all metrics, every profile: bit-identical to the
+        // per-call wrappers (which analyze internally).
+        let sim = Simulator::new();
+        let g = convnet(4, 32, 4);
+        let a = GraphAnalysis::of(&g);
+        for &p in &ALL_PROFILES {
+            assert_eq!(sim.latency_s_analyzed(&a, p), sim.latency_s(&g, p));
+            assert_eq!(sim.memory_mb_analyzed(&a, p), sim.memory_mb(&g, p));
+            assert_eq!(sim.energy_j_analyzed(&a, p), sim.energy_j(&g, p));
+            assert_eq!(sim.measure_on_analyzed(&a, p), sim.measure_on(&g, p));
+        }
+        assert_eq!(sim.measure_analyzed(&a), sim.measure(&g));
     }
 
     #[test]

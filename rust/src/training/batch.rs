@@ -4,10 +4,11 @@
 use anyhow::Result;
 
 use crate::dataset::{to_target, Dataset};
-use crate::features::{fill_padded, FeatureConfig};
+use crate::features::{fill_padded, fill_padded_analyzed, FeatureConfig};
 use crate::ir::Graph;
 use crate::runtime::manifest::Constants;
 use crate::runtime::tensor::HostTensor;
+use crate::simulator::GraphAnalysis;
 
 /// Pre-allocated buffers for one batch in the AOT artifact layout:
 /// X [B,N,F], Â [B,N,N], S [B,5], mask [B,N], Y [B,3].
@@ -55,6 +56,30 @@ impl BatchBuffers {
         norm: &crate::dataset::NormStats,
         slot: usize,
     ) -> Result<()> {
+        self.fill_graph_impl(graph, None, statics, norm, slot)
+    }
+
+    /// Fill slot from a graph with a precomputed analysis: node features
+    /// come from the analysis' cached per-node costs (the coordinator's
+    /// executor path — the graph is never re-traversed for costs).
+    pub fn fill_graph_analyzed(
+        &mut self,
+        graph: &Graph,
+        analysis: &GraphAnalysis,
+        norm: &crate::dataset::NormStats,
+        slot: usize,
+    ) -> Result<()> {
+        self.fill_graph_impl(graph, Some(analysis), &analysis.statics, norm, slot)
+    }
+
+    fn fill_graph_impl(
+        &mut self,
+        graph: &Graph,
+        analysis: Option<&GraphAnalysis>,
+        statics: &[f64; 5],
+        norm: &crate::dataset::NormStats,
+        slot: usize,
+    ) -> Result<()> {
         assert!(slot < self.batch);
         let (n, f) = (self.max_nodes, self.node_feats);
         let cfg = FeatureConfig {
@@ -64,13 +89,13 @@ impl BatchBuffers {
         let xo = slot * n * f;
         let ao = slot * n * n;
         let mo = slot * n;
-        fill_padded(
-            graph,
-            cfg,
-            &mut self.x.data[xo..xo + n * f],
-            &mut self.a.data[ao..ao + n * n],
-            &mut self.mask.data[mo..mo + n],
-        )
+        let x = &mut self.x.data[xo..xo + n * f];
+        let a = &mut self.a.data[ao..ao + n * n];
+        let m = &mut self.mask.data[mo..mo + n];
+        match analysis {
+            Some(an) => fill_padded_analyzed(graph, an, cfg, x, a, m),
+            None => fill_padded(graph, cfg, x, a, m),
+        }
         .map_err(|e| anyhow::anyhow!(e))?;
         let sn = norm.norm_static(statics);
         let so = slot * 5;

@@ -7,11 +7,14 @@
 //! identical under PJRT — one gated test exercises that path when AOT
 //! artifacts are built and the real xla bindings are linked.
 
-use std::sync::Arc;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use dippm::cache::{CacheConfig, Target};
-use dippm::coordinator::{tcp, Coordinator, CoordinatorOptions};
+use dippm::coordinator::{
+    tcp, Backend, Coordinator, CoordinatorOptions, PredictRequest, RawOutcome,
+};
 use dippm::frontends::{self, Framework};
 use dippm::modelgen::Family;
 use dippm::runtime::Runtime;
@@ -357,6 +360,12 @@ fn tcp_end_to_end_all_frameworks() {
     assert_eq!(v.path(&["misses"]).as_usize(), Some(1), "{stats}");
     assert_eq!(v.path(&["hits"]).as_usize(), Some(4), "{stats}");
     assert_eq!(v.path(&["requests"]).as_usize(), Some(5), "{stats}");
+    // Analyze-once observability: of 5 submissions only the single miss
+    // built (and the backend consumed) a full analysis; the 4 hits
+    // stopped at the cost-sweep/fingerprint stage.
+    assert_eq!(v.path(&["analyses_computed"]).as_usize(), Some(1), "{stats}");
+    assert_eq!(v.path(&["analyses_reused"]).as_usize(), Some(1), "{stats}");
+    assert_eq!(v.path(&["executor_threads"]).as_usize(), Some(1), "{stats}");
 
     // Malformed request -> structured error, connection stays up.
     let resp = client.roundtrip("{\"model\": 42}").unwrap();
@@ -402,6 +411,175 @@ fn tcp_target_field_selects_cache_entry() {
     assert_eq!(stats.path(&["entries"]).as_usize(), Some(2));
     let bad = client.predict_graph_on(&g, "a100:9g.80gb").unwrap();
     assert!(bad.contains("\"ok\":false"), "{bad}");
+}
+
+#[test]
+fn analysis_reuse_counters_are_observable() {
+    let coord = sim_coordinator(CoordinatorOptions::default());
+    let g = Family::ResNet.generate(0);
+    coord.predict(g.clone()).unwrap(); // miss: full analysis built + consumed
+    coord.predict(g).unwrap(); // hit: stops at the cost-sweep/fingerprint stage
+    let m = coord.metrics();
+    assert_eq!(m.requests, 2);
+    assert_eq!(
+        m.analyses_computed, 1,
+        "only the enqueued miss builds the full analysis; the hit stops at the key"
+    );
+    assert_eq!(
+        m.analyses_reused, 1,
+        "the backend-served request consumed its carried analysis"
+    );
+    assert_eq!(m.executor_threads, 1);
+}
+
+#[test]
+fn parallel_executor_serves_concurrent_misses_correctly() {
+    // 4 workers, every request a distinct architecture (cache on but all
+    // misses): the pool must serve everything exactly once, with answers
+    // identical to the single-threaded coordinator's.
+    let parallel = Arc::new(sim_coordinator(CoordinatorOptions {
+        executor_threads: 4,
+        max_wait: Duration::from_millis(1),
+        ..Default::default()
+    }));
+    let serial = sim_coordinator(CoordinatorOptions::default());
+    let n = 48;
+    let graphs: Vec<_> = (0..n)
+        .map(|i| Family::MobileNet.generate(i % 7))
+        .collect();
+    // 7 distinct architectures, re-submitted: repeats resolve as cache
+    // hits or coalesced followers, distinct ones fan out across workers.
+    let rxs: Vec<_> = graphs.iter().map(|g| parallel.submit(g.clone())).collect();
+    for (g, rx) in graphs.iter().zip(rxs) {
+        let got = rx.recv().unwrap().unwrap();
+        let want = serial.predict(g.clone()).unwrap();
+        assert_eq!(got, want, "parallel pool must not change answers");
+    }
+    let m = parallel.metrics();
+    assert_eq!(m.requests, n as u64);
+    assert_eq!(m.errors, 0);
+    assert_eq!(m.executor_threads, 4);
+    // Only enqueued misses build a full analysis (repeats resolve as hits
+    // or coalesced followers at the cost-sweep stage), and every enqueued
+    // job's analysis was consumed by a backend.
+    assert!(m.analyses_computed >= 7, "one per distinct architecture");
+    assert!(m.analyses_computed <= n as u64);
+    assert_eq!(m.analyses_reused, m.analyses_computed);
+}
+
+/// A backend for admission-order tests: max_batch 1, records the variant
+/// of everything it serves, and blocks inside the first call until the
+/// test opens the gate — letting the test stack up queued misses with
+/// different single-flight follower counts behind a busy executor.
+struct GatedBackend {
+    served: Arc<Mutex<Vec<String>>>,
+    entered: mpsc::Sender<()>,
+    gate: Arc<(Mutex<bool>, Condvar)>,
+    gated_once: bool,
+}
+
+impl Backend for GatedBackend {
+    fn name(&self) -> &'static str {
+        "gated"
+    }
+
+    fn max_batch(&self) -> usize {
+        1
+    }
+
+    fn predict_raw(&mut self, requests: &[PredictRequest<'_>]) -> anyhow::Result<Vec<RawOutcome>> {
+        for req in requests {
+            self.served.lock().unwrap().push(req.graph.variant.clone());
+        }
+        let _ = self.entered.send(());
+        if !self.gated_once {
+            self.gated_once = true;
+            let (open, cv) = &*self.gate;
+            let mut open = open.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+        }
+        Ok(requests
+            .iter()
+            .map(|req| Ok([1.0, 100.0 + req.graph.n_nodes() as f64, 1.0]))
+            .collect())
+    }
+}
+
+#[test]
+fn cache_aware_admission_prefers_misses_with_more_followers() {
+    let served = Arc::new(Mutex::new(Vec::new()));
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let (entered_tx, entered_rx) = mpsc::channel();
+    // The factory must be Sync (it is shared across the worker pool);
+    // park the sender behind a mutex rather than relying on Sender: Sync.
+    let entered_tx = Arc::new(Mutex::new(entered_tx));
+    let coord = {
+        let served = served.clone();
+        let gate = gate.clone();
+        Coordinator::start_with_backend(
+            Box::new(move || {
+                Ok(Box::new(GatedBackend {
+                    served: served.clone(),
+                    entered: entered_tx.lock().unwrap().clone(),
+                    gate: gate.clone(),
+                    gated_once: false,
+                }) as Box<dyn Backend>)
+            }),
+            CoordinatorOptions {
+                max_wait: Duration::ZERO,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    };
+
+    let g_first = Family::Vgg.generate(0);
+    let g_cold = Family::ResNet.generate(0); // will have 0 followers
+    let g_hot = Family::MobileNet.generate(0); // will gather 3 followers
+
+    // Occupy the executor: the first miss blocks inside the backend.
+    let rx_first = coord.submit(g_first);
+    entered_rx.recv().unwrap();
+
+    // While the executor is busy, enqueue an older cold miss, then a hot
+    // miss whose 3 re-submissions park as single-flight followers.
+    let rx_cold = coord.submit(g_cold);
+    let rx_hot = coord.submit(g_hot.clone());
+    let follower_rxs: Vec<_> = (0..3).map(|_| coord.submit(g_hot.clone())).collect();
+
+    // Open the gate: the executor finishes the first batch, then admits
+    // from a queue holding [cold(0 followers), hot(3 followers)].
+    {
+        let (open, cv) = &*gate;
+        *open.lock().unwrap() = true;
+        cv.notify_all();
+    }
+
+    rx_first.recv().unwrap().unwrap();
+    let hot_pred = rx_hot.recv().unwrap().unwrap();
+    for rx in follower_rxs {
+        assert_eq!(rx.recv().unwrap().unwrap(), hot_pred);
+    }
+    rx_cold.recv().unwrap().unwrap();
+
+    let order = served.lock().unwrap().clone();
+    assert_eq!(order.len(), 3, "3 distinct misses reached the backend");
+    assert_eq!(order[0], g_first.variant);
+    assert_eq!(
+        order[1],
+        Family::MobileNet.generate(0).variant,
+        "the miss with 3 parked followers must be admitted before the older 0-follower miss: {order:?}"
+    );
+    assert_eq!(order[2], Family::ResNet.generate(0).variant);
+
+    let m = coord.metrics();
+    assert_eq!(m.batches, 3, "max_batch=1: one batch per distinct miss");
+    assert_eq!(m.batch_fill_sum, 3, "batch fill reflects the 3 admissions");
+    assert_eq!(m.coalesced, 3, "the 3 followers were woken by the leader");
+    assert!(m.priority_admissions >= 1, "the jump must be counted");
+    assert_eq!(m.requests, 6);
 }
 
 #[test]

@@ -3,11 +3,15 @@
 
 use dippm::cache::Fingerprint;
 use dippm::dataset::split::Splits;
-use dippm::features::encode_graph;
+use dippm::features::{
+    encode_graph, encode_graph_analyzed, fill_padded, fill_padded_analyzed, static_features,
+    FeatureConfig,
+};
 use dippm::frontends::{self, Framework};
 use dippm::ir::{Attrs, Graph, GraphBuilder, Node, NodeId, OpKind};
 use dippm::modelgen::{Family, ALL_FAMILIES};
-use dippm::simulator::{MigProfile, Simulator, ALL_PROFILES};
+use dippm::simulator::cost::op_cost;
+use dippm::simulator::{fusion, GraphAnalysis, MigProfile, Simulator, ALL_PROFILES};
 use dippm::util::json::Json;
 use dippm::util::proptest::{proptest, Gen};
 use dippm::{prop_assert, prop_assert_eq};
@@ -175,6 +179,77 @@ fn distinct_random_graphs_rarely_collide() {
         b.add(OpKind::GlobalAvgPool2d, Attrs::none(), &[c]);
         let fp = Fingerprint::of_graph(&b.finish());
         assert!(seen.insert(fp.as_u128()), "collision at width {ch}");
+    }
+}
+
+/// The analyze-once tentpole's safety net: for random graphs (and a sweep
+/// of every modelgen family below), every quantity the one-pass
+/// [`GraphAnalysis`] caches is *bit-identical* to the legacy
+/// recompute-from-scratch path. This is what licenses the simulator, the
+/// featurizers and the MIG advisor to reuse the analysis without moving a
+/// single prediction (or the tier-1 MAPE benches).
+#[test]
+fn graph_analysis_parity_with_recompute_from_scratch() {
+    proptest(40, |g| {
+        let graph = random_graph(g);
+        let a = GraphAnalysis::of(&graph);
+
+        // Per-node costs.
+        prop_assert_eq!(a.costs.len(), graph.n_nodes());
+        for (i, node) in graph.nodes.iter().enumerate() {
+            prop_assert_eq!(a.costs[i], op_cost(&graph, node));
+        }
+        // Fused kernel plan.
+        prop_assert_eq!(&a.kernels, &fusion::fuse(&graph));
+        // Statics (f64 summation order matters — must match exactly).
+        prop_assert_eq!(a.statics, static_features(&graph));
+        // Fingerprint (the cache-key format must survive the refactor).
+        prop_assert_eq!(a.fingerprint, Fingerprint::of_graph(&graph));
+
+        // Simulator entry points: analyzed == per-call, on every profile.
+        let sim = Simulator::new();
+        for &p in &ALL_PROFILES {
+            prop_assert_eq!(sim.latency_s_analyzed(&a, p), sim.latency_s(&graph, p));
+            prop_assert_eq!(sim.memory_mb_analyzed(&a, p), sim.memory_mb(&graph, p));
+            prop_assert_eq!(sim.energy_j_analyzed(&a, p), sim.energy_j(&graph, p));
+            prop_assert_eq!(sim.measure_on_analyzed(&a, p), sim.measure_on(&graph, p));
+        }
+
+        // Featurization from cached costs == featurization from scratch.
+        let scratch = encode_graph(&graph);
+        let analyzed = encode_graph_analyzed(&graph, &a);
+        prop_assert_eq!(&scratch.x, &analyzed.x);
+        prop_assert_eq!(&scratch.a_hat, &analyzed.a_hat);
+        Ok(())
+    });
+}
+
+#[test]
+fn graph_analysis_parity_across_all_modelgen_families() {
+    for family in ALL_FAMILIES {
+        let graph = family.generate(0);
+        let a = GraphAnalysis::of(&graph);
+        for (i, node) in graph.nodes.iter().enumerate() {
+            assert_eq!(a.costs[i], op_cost(&graph, node), "{family:?} node {i}");
+        }
+        assert_eq!(a.kernels, fusion::fuse(&graph), "{family:?}");
+        assert_eq!(a.statics, static_features(&graph), "{family:?}");
+        assert_eq!(a.fingerprint, Fingerprint::of_graph(&graph), "{family:?}");
+        let sim = Simulator::new();
+        assert_eq!(sim.measure_analyzed(&a), sim.measure(&graph), "{family:?}");
+
+        // Padded featurization (the serving batch layout) agrees too.
+        let cfg = FeatureConfig::new(160);
+        let feats = dippm::features::NODE_FEATS;
+        let (mut x1, mut a1, mut m1) =
+            (vec![0.0; 160 * feats], vec![0.0; 160 * 160], vec![0.0; 160]);
+        let (mut x2, mut a2, mut m2) =
+            (vec![0.0; 160 * feats], vec![0.0; 160 * 160], vec![0.0; 160]);
+        fill_padded(&graph, cfg, &mut x1, &mut a1, &mut m1).unwrap();
+        fill_padded_analyzed(&graph, &a, cfg, &mut x2, &mut a2, &mut m2).unwrap();
+        assert_eq!(x1, x2, "{family:?}");
+        assert_eq!(a1, a2, "{family:?}");
+        assert_eq!(m1, m2, "{family:?}");
     }
 }
 
