@@ -1,0 +1,214 @@
+//! Persistence-path performance: incremental journal + sharded parallel
+//! compaction vs the legacy whole-file snapshot rewrite, across cache
+//! sizes (10k / 100k entries by default; FULL=1 adds 1M — the ROADMAP's
+//! multi-million-entry regime).
+//!
+//! Measured per size N:
+//! * **full rewrite**   — legacy `save_snapshot` of all N entries (what
+//!   PR 2 paid on *every* rotation).
+//! * **journal append** — flushing a 1% delta batch to the journal (what
+//!   a rotation costs now).
+//! * **compaction**     — folding base+journal into a fresh generation,
+//!   written in parallel across shards (the amortized background cost).
+//! * **warm start**     — booting from the journal store vs decoding the
+//!   legacy snapshot.
+//!
+//! Scale knobs: DIPPM_BENCH_PERSIST_ENTRIES="10000,100000", FULL=1.
+//! Set DIPPM_BENCH_JSON=<path> to emit `BENCH_cache_persist.json` (the CI
+//! bench-smoke job uploads it; `journal_beats_full_rewrite` is the
+//! acceptance gate at >= 100k entries).
+
+#[path = "common.rs"]
+mod common;
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use dippm::cache::persist::{
+    read_store, save_snapshot, Delta, DeltaKind, JournalStore, PersistConfig,
+};
+use dippm::cache::{CacheConfig, CacheKey, Fingerprint, ShardedLruCache, Target};
+use dippm::coordinator::{CacheValue, Prediction};
+use dippm::util::bench::{banner, Table};
+use dippm::util::json::{Json, JsonObj};
+use dippm::util::rng::splitmix64;
+
+fn bench_root(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "dippm-bench-persist-{}-{name}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_file(&dir);
+    dir
+}
+
+fn pred(i: u64) -> CacheValue {
+    CacheValue::Pred(Prediction {
+        latency_ms: 0.5 + (i % 97) as f64,
+        memory_mb: 1000.0 + (i % 4096) as f64,
+        energy_j: 0.1 + (i % 31) as f64 * 0.01,
+        mig_profile: if i % 3 == 0 { Some("2g.10gb".into()) } else { None },
+    })
+}
+
+fn key_of(i: u64) -> u128 {
+    CacheKey::new(
+        Fingerprint {
+            hi: splitmix64(i ^ 0xBEEF),
+            lo: splitmix64(i),
+        },
+        &Target::default(),
+    )
+    .as_u128()
+}
+
+fn entries(n: usize) -> Vec<(u128, CacheValue, Duration)> {
+    (0..n as u64)
+        .map(|i| (key_of(i), pred(i), Duration::ZERO))
+        .collect()
+}
+
+fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+fn sizes() -> Vec<usize> {
+    if let Ok(list) = std::env::var("DIPPM_BENCH_PERSIST_ENTRIES") {
+        return list
+            .split(',')
+            .filter_map(|s| s.trim().parse().ok())
+            .filter(|&n| n > 0)
+            .collect();
+    }
+    if common::is_full() {
+        vec![10_000, 100_000, 1_000_000]
+    } else {
+        vec![10_000, 100_000]
+    }
+}
+
+fn main() {
+    banner(
+        "Perf/persist",
+        "cache persistence: journal+compaction vs full snapshot rewrite",
+    );
+    let workers = dippm::util::threadpool::ThreadPool::default_parallelism().clamp(2, 16);
+    let shards = 16;
+    let mut table = Table::new(&[
+        "entries",
+        "full rewrite (s)",
+        "journal append (s)",
+        "speedup",
+        "compaction (s)",
+        "warm journal (s)",
+        "warm snapshot (s)",
+    ]);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut beats_at_100k = true;
+
+    for n in sizes() {
+        // --- legacy full-rewrite baseline --------------------------------
+        let cache: ShardedLruCache<CacheValue> = ShardedLruCache::new(&CacheConfig {
+            capacity: n,
+            shards,
+            ..Default::default()
+        });
+        for i in 0..n as u64 {
+            cache.insert(
+                CacheKey::new(
+                    Fingerprint {
+                        hi: splitmix64(i ^ 0xBEEF),
+                        lo: splitmix64(i),
+                    },
+                    &Target::default(),
+                ),
+                pred(i),
+            );
+        }
+        let snap_path = bench_root(&format!("snap-{n}.bin"));
+        let (saved, full_rewrite_s) = time(|| save_snapshot(&snap_path, &cache).unwrap());
+
+        // --- journal store: base + incremental append --------------------
+        let dir = bench_root(&format!("store-{n}"));
+        let cfg = PersistConfig {
+            shards,
+            ..PersistConfig::at(&dir)
+        };
+        let (store, _) = JournalStore::<CacheValue>::open(&cfg).unwrap();
+        store.compact(entries(n), workers).unwrap();
+        // The incremental unit: a 1% delta batch (>= 100 records), i.e.
+        // what one flush interval of a warm serving cache produces.
+        let batch = (n / 100).max(100);
+        let deltas: Vec<Delta<CacheValue>> = (0..batch as u64)
+            .map(|i| Delta {
+                key: key_of(i),
+                kind: DeltaKind::Upsert(pred(i + 1), Duration::ZERO),
+            })
+            .collect();
+        let (_report, journal_append_s) = time(|| store.append(deltas).unwrap());
+        let (_creport, compaction_s) = time(|| store.compact(entries(n), workers).unwrap());
+        drop(store);
+
+        // --- warm-start reads --------------------------------------------
+        let (boot, warm_journal_s) = time(|| read_store::<CacheValue>(&dir).unwrap());
+        assert_eq!(boot.base.len(), n, "journal warm start must recover all entries");
+        let (snap_entries, warm_snapshot_s) = time(|| {
+            let bytes = std::fs::read(&snap_path).unwrap();
+            dippm::cache::persist::decode_snapshot::<CacheValue>(&bytes).unwrap()
+        });
+        assert_eq!(snap_entries.len(), saved.entries);
+
+        let speedup = if journal_append_s > 0.0 {
+            full_rewrite_s / journal_append_s
+        } else {
+            f64::INFINITY
+        };
+        if n >= 100_000 && journal_append_s >= full_rewrite_s {
+            beats_at_100k = false;
+        }
+        table.row(&[
+            n.to_string(),
+            format!("{full_rewrite_s:.4}"),
+            format!("{journal_append_s:.4}"),
+            format!("{speedup:.1}x"),
+            format!("{compaction_s:.4}"),
+            format!("{warm_journal_s:.4}"),
+            format!("{warm_snapshot_s:.4}"),
+        ]);
+        let mut row = JsonObj::new();
+        row.insert("entries", n);
+        row.insert("delta_batch", batch);
+        row.insert("full_rewrite_s", full_rewrite_s);
+        row.insert("journal_append_s", journal_append_s);
+        row.insert("incremental_speedup", speedup);
+        row.insert("compaction_s", compaction_s);
+        row.insert("warm_start_journal_s", warm_journal_s);
+        row.insert("warm_start_snapshot_s", warm_snapshot_s);
+        rows.push(Json::Obj(row));
+
+        let _ = std::fs::remove_file(&snap_path);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    table.print();
+    println!(
+        "\nworkers {workers}, {shards} shards; the journal column is the per-rotation \
+         cost that used to be the full-rewrite column"
+    );
+    if !beats_at_100k {
+        println!("WARNING: journal append did not beat the full rewrite at >= 100k entries");
+    }
+
+    if let Ok(path) = std::env::var("DIPPM_BENCH_JSON") {
+        let mut doc = JsonObj::new();
+        doc.insert("bench", "cache_persist");
+        doc.insert("workers", workers);
+        doc.insert("shards", shards);
+        doc.insert("journal_beats_full_rewrite", beats_at_100k);
+        doc.insert("sizes", Json::Arr(rows));
+        std::fs::write(&path, format!("{}\n", Json::Obj(doc))).expect("write DIPPM_BENCH_JSON");
+        println!("wrote {path}");
+    }
+}

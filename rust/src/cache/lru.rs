@@ -169,6 +169,16 @@ impl<V: Clone> Lru<V> {
         evicted
     }
 
+    /// Remove `key` outright (journal-replay removes, explicit deletions).
+    /// Returns whether the key was present.
+    pub fn remove(&mut self, key: u128) -> bool {
+        let Some(&idx) = self.map.get(&key) else {
+            return false;
+        };
+        self.remove_slot(idx);
+        true
+    }
+
     /// All live entries, least-recently-used first, as
     /// `(key, value, age, per-entry ttl override)`. LRU-first so that
     /// re-inserting in order reproduces the recency order exactly.
@@ -299,6 +309,22 @@ mod tests {
         assert_eq!(keys, vec![2, 3, 1]);
         assert_eq!(entries[1].3, Some(Duration::from_secs(5)));
         assert_eq!(entries[0].3, None);
+    }
+
+    #[test]
+    fn remove_deletes_and_reports_presence() {
+        let mut l: Lru<u32> = Lru::new(4);
+        l.insert(1, 10, now());
+        l.insert(2, 20, now());
+        assert!(l.remove(1));
+        assert!(!l.remove(1), "second remove is a no-op");
+        assert!(!l.remove(99), "absent key");
+        assert_eq!(l.lookup(1, None, now()), Lookup::Miss);
+        assert_eq!(l.lookup(2, None, now()), Lookup::Hit(20));
+        assert_eq!(l.len(), 1);
+        // Freed slot is reused.
+        l.insert(3, 30, now());
+        assert!(l.slots.len() <= 2, "slab grew to {}", l.slots.len());
     }
 
     #[test]

@@ -31,13 +31,13 @@ pub mod persist;
 pub mod singleflight;
 
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 pub use fingerprint::Fingerprint;
 pub use key::{CacheKey, Target};
-pub use persist::{LoadReport, SaveReport, SnapshotValue};
+pub use persist::{Delta, DeltaKind, LoadReport, SaveReport, SnapshotValue};
 pub use singleflight::{Role, SingleFlight, Waiter};
 
 use lru::{Lookup, Lru};
@@ -60,14 +60,23 @@ pub struct CacheConfig {
     /// Tombstone lifetime for negative entries (per-graph featurization
     /// failures). `None` disables negative caching entirely.
     pub negative_ttl: Option<Duration>,
-    /// Disk snapshot file (`--cache-file`). `None` = in-memory only. With
-    /// a path set, the coordinator preloads it on boot, rewrites it on
-    /// graceful shutdown, and — with [`CacheConfig::snapshot_every`] — on
-    /// a timer. Ignored when the cache is disabled (`--no-cache` wins).
+    /// Journal-store directory (`--cache-file`). `None` = in-memory only.
+    /// With a path set, the coordinator recovers it on boot (manifest +
+    /// generation files + journal-tail replay), flushes journal deltas on
+    /// the [`CacheConfig::snapshot_every`] timer and on graceful shutdown,
+    /// and compacts in the background. A legacy single-file snapshot at
+    /// this path is migrated into a store directory on boot. Ignored when
+    /// the cache is disabled (`--no-cache` wins).
     pub snapshot_path: Option<PathBuf>,
-    /// Periodic snapshot interval (`--cache-snapshot-every-s`); `None` =
-    /// snapshot only on graceful shutdown.
+    /// Periodic journal-flush interval (`--cache-snapshot-every-s`);
+    /// `None` = flush only on graceful shutdown.
     pub snapshot_every: Option<Duration>,
+    /// Background compaction trigger: journal bytes on disk
+    /// (`--cache-compact-bytes`).
+    pub compact_max_journal_bytes: u64,
+    /// Background compaction trigger: journal dead-record ratio
+    /// (`--cache-compact-ratio`).
+    pub compact_dead_ratio: f64,
 }
 
 /// Default tombstone lifetime: long enough to absorb a DSE client
@@ -86,6 +95,8 @@ impl Default for CacheConfig {
             negative_ttl: Some(DEFAULT_NEGATIVE_TTL),
             snapshot_path: None,
             snapshot_every: None,
+            compact_max_journal_bytes: 64 << 20,
+            compact_dead_ratio: 0.5,
         }
     }
 }
@@ -124,6 +135,39 @@ impl CacheStats {
     }
 }
 
+/// A mutation captured for the persistence journal, pending flush. The
+/// insertion [`Instant`] is kept (not an age) so the age is computed at
+/// flush time.
+enum PendingDelta<V> {
+    Upsert(u128, V, Instant),
+    Remove(u128),
+}
+
+/// Bounded buffer of journal deltas between flushes. When the cap is hit
+/// (no timer configured, or a flush stall) the buffer stops recording and
+/// raises `overflowed`, which tells the flusher to escalate to a full
+/// compaction instead of an (incomplete) incremental append.
+struct DeltaBuffer<V> {
+    enabled: bool,
+    ops: Vec<PendingDelta<V>>,
+    overflowed: bool,
+    cap: usize,
+}
+
+impl<V> Default for DeltaBuffer<V> {
+    fn default() -> Self {
+        DeltaBuffer {
+            enabled: false,
+            ops: Vec::new(),
+            overflowed: false,
+            cap: DELTA_BUFFER_CAP,
+        }
+    }
+}
+
+/// Default bound on buffered journal deltas between flushes.
+pub const DELTA_BUFFER_CAP: usize = 1 << 16;
+
 /// N mutex-sharded LRU maps keyed by composite [`CacheKey`]. Lock scope is
 /// one shard per operation; counters are lock-free atomics shared across
 /// shards.
@@ -136,6 +180,12 @@ pub struct ShardedLruCache<V: Clone> {
     evictions: AtomicU64,
     expirations: AtomicU64,
     capacity: usize,
+    /// Journal delta capture (off until persistence enables it, and during
+    /// boot replay so recovered entries are not re-journaled).
+    deltas: Mutex<DeltaBuffer<V>>,
+    /// Lock-free mirror of `DeltaBuffer::enabled`, so the hot path pays
+    /// one relaxed load (not a mutex) when persistence is off.
+    journal_on: AtomicBool,
 }
 
 impl<V: Clone> ShardedLruCache<V> {
@@ -151,7 +201,88 @@ impl<V: Clone> ShardedLruCache<V> {
             evictions: AtomicU64::new(0),
             expirations: AtomicU64::new(0),
             capacity: per_shard * n,
+            deltas: Mutex::new(DeltaBuffer::default()),
+            journal_on: AtomicBool::new(false),
         }
+    }
+
+    /// Start capturing journal deltas (inserts/updates/expiries/evictions
+    /// of persistable entries) for [`ShardedLruCache::drain_deltas`]. Call
+    /// *after* boot replay so recovered entries are not re-journaled.
+    pub fn enable_journal(&self, cap: usize) {
+        let mut d = self.deltas.lock().unwrap();
+        d.enabled = true;
+        d.cap = cap.max(1);
+        self.journal_on.store(true, Ordering::Release);
+    }
+
+    /// Stop capturing and drop anything buffered — the coordinator's
+    /// bail-out when persistence fails after capture was enabled (the
+    /// cache keeps serving, nothing keeps accumulating).
+    pub fn disable_journal(&self) {
+        let mut d = self.deltas.lock().unwrap();
+        d.enabled = false;
+        d.ops.clear();
+        d.overflowed = false;
+        self.journal_on.store(false, Ordering::Release);
+    }
+
+    /// Flag the delta stream incomplete (a flush failed after draining):
+    /// the next flush must escalate to a full compaction instead of an
+    /// incremental append, or replay would miss the dropped batch.
+    pub fn mark_journal_incomplete(&self) {
+        self.deltas.lock().unwrap().overflowed = true;
+    }
+
+    #[inline]
+    fn journal_enabled(&self) -> bool {
+        self.journal_on.load(Ordering::Acquire)
+    }
+
+    /// Take the buffered deltas, resetting the buffer. Returns
+    /// `(deltas, overflowed)`; when `overflowed` is true the delta stream
+    /// is incomplete and the caller must escalate to a full compaction.
+    pub fn drain_deltas(&self) -> (Vec<persist::Delta<V>>, bool) {
+        let (ops, overflowed) = {
+            let mut d = self.deltas.lock().unwrap();
+            let overflowed = d.overflowed;
+            d.overflowed = false;
+            (std::mem::take(&mut d.ops), overflowed)
+        };
+        let deltas = ops
+            .into_iter()
+            .map(|op| match op {
+                PendingDelta::Upsert(key, value, at) => persist::Delta {
+                    key,
+                    kind: persist::DeltaKind::Upsert(value, at.elapsed()),
+                },
+                PendingDelta::Remove(key) => persist::Delta {
+                    key,
+                    kind: persist::DeltaKind::Remove,
+                },
+            })
+            .collect();
+        (deltas, overflowed)
+    }
+
+    /// Record a journal delta. Callers hold the affected shard's lock, so
+    /// for any one key the buffer order equals the cache mutation order
+    /// (keys map to a fixed shard; cross-shard order is irrelevant to
+    /// replay). Lock order is always shard → deltas, never the reverse
+    /// ([`ShardedLruCache::drain_deltas`] takes only the deltas lock).
+    fn record_delta(&self, op: PendingDelta<V>) {
+        if !self.journal_enabled() {
+            return;
+        }
+        let mut d = self.deltas.lock().unwrap();
+        if !d.enabled {
+            return;
+        }
+        if d.ops.len() >= d.cap {
+            d.overflowed = true;
+            return;
+        }
+        d.ops.push(op);
     }
 
     fn shard(&self, key: u128) -> &Mutex<Lru<V>> {
@@ -162,11 +293,17 @@ impl<V: Clone> ShardedLruCache<V> {
 
     pub fn get(&self, key: CacheKey) -> Option<V> {
         let key = key.as_u128();
-        let outcome = self
-            .shard(key)
-            .lock()
-            .unwrap()
-            .lookup(key, self.ttl, Instant::now());
+        let outcome = {
+            let mut shard = self.shard(key).lock().unwrap();
+            let outcome = shard.lookup(key, self.ttl, Instant::now());
+            if matches!(outcome, Lookup::Expired) {
+                // TTL expiry mutates durable state: journal the removal
+                // while still holding the shard lock, so a concurrent
+                // re-insert of the same key cannot record ahead of it.
+                self.record_delta(PendingDelta::Remove(key));
+            }
+            outcome
+        };
         match outcome {
             Lookup::Hit(v) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
@@ -193,15 +330,41 @@ impl<V: Clone> ShardedLruCache<V> {
     /// negative entries).
     pub fn insert_with_ttl(&self, key: CacheKey, value: V, ttl: Option<Duration>) {
         let key = key.as_u128();
-        let evicted = self
-            .shard(key)
-            .lock()
-            .unwrap()
-            .insert_with(key, value, Instant::now(), ttl);
+        let now = Instant::now();
+        // Journal capture: entries with a per-entry TTL override are
+        // tombstone-style and never persisted; evictions of any key are
+        // journaled as removes (a remove of a never-persisted key is a
+        // replay no-op). Clone only when capture is actually on, and
+        // record while still holding the shard lock so per-key delta order
+        // matches the cache mutation order under concurrency.
+        let captured =
+            (ttl.is_none() && self.journal_enabled()).then(|| value.clone());
+        let evicted = {
+            let mut shard = self.shard(key).lock().unwrap();
+            let evicted = shard.insert_with(key, value, now, ttl);
+            if let Some(v) = captured {
+                self.record_delta(PendingDelta::Upsert(key, v, now));
+            }
+            if let Some(victim) = evicted {
+                self.record_delta(PendingDelta::Remove(victim));
+            }
+            evicted
+        };
         self.insertions.fetch_add(1, Ordering::Relaxed);
         if evicted.is_some() {
             self.evictions.fetch_add(1, Ordering::Relaxed);
         }
+    }
+
+    /// Remove a raw composite key outright. Used by journal replay and
+    /// journaled itself when capture is on.
+    pub fn remove(&self, key: u128) -> bool {
+        let mut shard = self.shard(key).lock().unwrap();
+        let removed = shard.remove(key);
+        if removed {
+            self.record_delta(PendingDelta::Remove(key));
+        }
+        removed
     }
 
     /// Snapshot-exportable view of every entry *without* a per-entry TTL
@@ -258,6 +421,40 @@ impl<V: Clone> ShardedLruCache<V> {
             loaded += 1;
         }
         (loaded.saturating_sub(evicted), skipped)
+    }
+
+    /// Apply recovered journal deltas in order (after
+    /// [`ShardedLruCache::preload`] of the base generation): upserts are
+    /// backdated inserts, removes delete. Returns
+    /// `(upserts_applied, skipped_expired)`. Like preload, this bypasses
+    /// the insertion/eviction counters and must run *before*
+    /// [`ShardedLruCache::enable_journal`] so recovery is not re-journaled.
+    pub fn replay(&self, ops: impl IntoIterator<Item = persist::Delta<V>>) -> (usize, usize) {
+        let now = Instant::now();
+        let mut applied = 0usize;
+        let mut skipped = 0usize;
+        for op in ops {
+            match op.kind {
+                persist::DeltaKind::Upsert(value, age) => {
+                    if let Some(ttl) = self.ttl {
+                        if age >= ttl {
+                            skipped += 1;
+                            continue;
+                        }
+                    }
+                    let inserted = now.checked_sub(age).unwrap_or(now);
+                    self.shard(op.key)
+                        .lock()
+                        .unwrap()
+                        .insert(op.key, value, inserted);
+                    applied += 1;
+                }
+                persist::DeltaKind::Remove => {
+                    self.shard(op.key).lock().unwrap().remove(op.key);
+                }
+            }
+        }
+        (applied, skipped)
     }
 
     pub fn len(&self) -> usize {
@@ -437,5 +634,129 @@ mod tests {
         assert!(c.single_flight);
         assert!(c.negative_ttl.is_some());
         assert!(c.snapshot_path.is_none());
+        assert!(c.compact_max_journal_bytes > 0);
+        assert!(c.compact_dead_ratio > 0.0);
+    }
+
+    #[test]
+    fn journal_capture_records_upserts_evictions_and_expiries() {
+        let cache: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig {
+            capacity: 2,
+            shards: 1,
+            ..Default::default()
+        });
+        // Nothing is captured before enable_journal.
+        cache.insert(key(1), 10);
+        cache.enable_journal(DELTA_BUFFER_CAP);
+        let (d, overflowed) = cache.drain_deltas();
+        assert!(d.is_empty() && !overflowed);
+
+        cache.insert(key(2), 20); // upsert
+        cache.insert(key(3), 30); // upsert + evicts key(1)
+        // Tombstone-style entries are never journaled as upserts.
+        cache.insert_with_ttl(key(4), 99, Some(Duration::from_secs(60)));
+        let (d, overflowed) = cache.drain_deltas();
+        assert!(!overflowed);
+        let upserts = d
+            .iter()
+            .filter(|x| matches!(x.kind, DeltaKind::Upsert(..)))
+            .count();
+        let removes = d
+            .iter()
+            .filter(|x| matches!(x.kind, DeltaKind::Remove))
+            .count();
+        assert_eq!(upserts, 2, "{d:?}");
+        // key(1)'s eviction plus whichever key the tombstone insert evicted.
+        assert_eq!(removes, 2, "{d:?}");
+        // Draining resets.
+        assert!(cache.drain_deltas().0.is_empty());
+    }
+
+    #[test]
+    fn journal_capture_overflow_raises_flag() {
+        let cache: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig::default());
+        cache.enable_journal(2);
+        for ch in 1..6 {
+            cache.insert(key(ch), ch as u32);
+        }
+        let (d, overflowed) = cache.drain_deltas();
+        assert_eq!(d.len(), 2, "cap bounds the buffer");
+        assert!(overflowed, "dropped deltas must raise the escalation flag");
+        // The flag resets with the drain.
+        cache.insert(key(9), 9);
+        let (d, overflowed) = cache.drain_deltas();
+        assert_eq!(d.len(), 1);
+        assert!(!overflowed);
+    }
+
+    #[test]
+    fn disable_journal_drops_buffer_and_stops_capture() {
+        let cache: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig::default());
+        cache.enable_journal(DELTA_BUFFER_CAP);
+        cache.insert(key(1), 10);
+        cache.disable_journal();
+        cache.insert(key(2), 20);
+        let (d, overflowed) = cache.drain_deltas();
+        assert!(d.is_empty() && !overflowed);
+    }
+
+    #[test]
+    fn mark_journal_incomplete_forces_escalation_flag() {
+        let cache: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig::default());
+        cache.enable_journal(DELTA_BUFFER_CAP);
+        cache.mark_journal_incomplete();
+        let (d, overflowed) = cache.drain_deltas();
+        assert!(d.is_empty());
+        assert!(overflowed, "a failed flush must force the next one to rebase");
+        // The flag resets with the drain.
+        assert!(!cache.drain_deltas().1);
+    }
+
+    #[test]
+    fn replay_applies_upserts_and_removes_in_order() {
+        let cache: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig::default());
+        let k1 = key(1).as_u128();
+        let k2 = key(2).as_u128();
+        let ops = vec![
+            Delta { key: k1, kind: DeltaKind::Upsert(10, Duration::ZERO) },
+            Delta { key: k2, kind: DeltaKind::Upsert(20, Duration::ZERO) },
+            Delta { key: k1, kind: DeltaKind::Upsert(11, Duration::ZERO) },
+            Delta { key: k2, kind: DeltaKind::Remove },
+        ];
+        let (applied, skipped) = cache.replay(ops);
+        assert_eq!((applied, skipped), (3, 0));
+        assert_eq!(cache.get(key(1)), Some(11));
+        assert_eq!(cache.get(key(2)), None);
+        // Replay bypasses insertion counters (warm-start accounting is the
+        // coordinator's).
+        assert_eq!(cache.stats().insertions, 0);
+    }
+
+    #[test]
+    fn replay_respects_ttl_ages() {
+        let cache: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig {
+            ttl: Some(Duration::from_secs(60)),
+            ..Default::default()
+        });
+        let ops = vec![
+            Delta { key: 1, kind: DeltaKind::Upsert(1, Duration::from_secs(5)) },
+            Delta { key: 2, kind: DeltaKind::Upsert(2, Duration::from_secs(600)) },
+        ];
+        let (applied, skipped) = cache.replay(ops);
+        assert_eq!((applied, skipped), (1, 1));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn remove_is_journaled_when_enabled() {
+        let cache: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig::default());
+        cache.insert(key(5), 50);
+        cache.enable_journal(DELTA_BUFFER_CAP);
+        assert!(cache.remove(key(5).as_u128()));
+        assert!(!cache.remove(key(5).as_u128()));
+        let (d, _) = cache.drain_deltas();
+        assert_eq!(d.len(), 1);
+        assert!(matches!(d[0].kind, DeltaKind::Remove));
+        assert_eq!(cache.get(key(5)), None);
     }
 }

@@ -1,63 +1,129 @@
-//! Disk persistence for the prediction cache: a versioned, checksummed
-//! binary snapshot (composite key → value entries with age metadata),
-//! written atomically and preloaded on boot so design-space-exploration
-//! sweeps restart hot.
+//! Disk persistence for the prediction cache: a crash-safe, incremental
+//! **journal + manifest + generation** store with sharded parallel
+//! compaction. This replaces the PR 2 whole-file snapshot rotation, which
+//! rewrote every entry on every rotation — untenable for multi-million-entry
+//! caches.
 //!
-//! Format (all integers little-endian):
+//! ## Store layout (a directory)
 //!
 //! ```text
-//! magic    8  b"DIPPMCS\x01"
-//! version  4  u32, currently 1
-//! count    8  u64 number of entries
-//! entry   (count times)
-//!   key      16  u128 composite cache key (CacheKey::as_u128)
-//!   age_ms    8  u64 entry age at snapshot time
-//!   len       4  u32 value payload length
-//!   value   len  SnapshotValue::snapshot_encode bytes
-//! checksum 8  u64 FNV-1a/splitmix digest of everything above
+//! <dir>/MANIFEST                     current manifest (atomic rename swap)
+//! <dir>/MANIFEST.prev                previous manifest (one-generation fallback)
+//! <dir>/gen-<G>-shard-<S>.bin        compacted base state, per shard
+//! <dir>/journal-<G>-shard-<S>.log    append-only deltas since generation G
 //! ```
 //!
-//! Guarantees:
+//! Inserts / updates / TTL-expiries / evictions append checksummed,
+//! length-prefixed records to per-shard journal files. A compaction (dead
+//! -record-ratio or journal-byte threshold, or on demand) folds base +
+//! journal into fresh `gen-<G+1>-*` files **written in parallel across
+//! shards**, then atomically swaps the manifest. Boot = read the newest
+//! valid manifest, load its generation files, replay the journal tails.
 //!
-//! * **Atomicity** — [`save_snapshot`] writes a sibling temp file and
-//!   `rename`s it over the target, so readers never observe a torn file
-//!   even if the writer dies mid-snapshot.
-//! * **Integrity** — the trailing checksum covers the whole body; any
-//!   truncation or bit-flip makes [`load_snapshot`] return an error. The
-//!   coordinator treats a rejected snapshot as a cold start, never a crash.
-//! * **TTL continuity** — entries carry their age, so a cache-wide TTL
-//!   keeps counting from the original insertion across restarts.
-//! * **No tombstones** — values may decline serialization (negative
-//!   entries do), and the cache additionally excludes every entry with a
-//!   per-entry TTL override from its export.
+//! ## Crash-safety contract
+//!
+//! * A **torn journal tail** (partial record from a crash mid-append) is
+//!   truncated and counted (`torn_tail_drops`) — every fully-written record
+//!   before it is recovered. Never a cold start.
+//! * A **corrupt or missing manifest** falls back one generation
+//!   (`MANIFEST.prev`); the previous generation's files are retained until
+//!   the *next* compaction commits, so the fallback always has its data.
+//! * A crash at **any** point of a compaction leaves the committed state
+//!   intact: new-generation files are unreferenced until the manifest
+//!   rename lands, and old-generation files are deleted only afterwards.
+//! * Generation-file bit rot (valid manifest, bad shard checksum) skips
+//!   that shard's base with a warning — a partial warm start, not a crash.
+//!
+//! The labeled [`CRASH_POINTS`] plus [`JournalStore::set_crash_hook`] (or
+//! the `DIPPM_PERSIST_CRASH_POINT` env var, which aborts the process) let
+//! the `cache_journal` test harness kill persistence at every point and
+//! assert recovery.
+//!
+//! The legacy PR 2 single-file snapshot codec ([`encode_snapshot`] /
+//! [`decode_snapshot`] / [`save_snapshot`] / [`load_snapshot`]) is kept:
+//! it is the migration source for old `--cache-file` files and the
+//! full-rewrite baseline in the `cache_persist` bench.
 
 use std::fs;
+use std::io::Write;
+use std::marker::PhantomData;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::rng::splitmix64;
+use crate::util::threadpool::parallel_map_indexed;
+use crate::{log_info, log_warn};
 
 use super::ShardedLruCache;
 
-/// Magic prefix; the final byte is the format generation.
+/// Legacy single-file snapshot magic; the final byte is the format
+/// generation.
 pub const MAGIC: [u8; 8] = *b"DIPPMCS\x01";
-/// Current snapshot format version.
+/// Legacy single-file snapshot format version.
 pub const VERSION: u32 = 1;
 
-const HEADER_LEN: usize = 8 + 4 + 8; // magic + version + count
-const CHECKSUM_LEN: usize = 8;
+/// Journal-store file magics.
+pub const MANIFEST_MAGIC: [u8; 8] = *b"DIPPMCM\x01";
+pub const GEN_MAGIC: [u8; 8] = *b"DIPPMCG\x01";
+pub const JOURNAL_MAGIC: [u8; 8] = *b"DIPPMCJ\x01";
+/// Journal-store format version (shared by manifest/gen/journal files).
+pub const STORE_VERSION: u32 = 2;
 
-/// A value the snapshot layer can round-trip. Returning `None` from
-/// [`SnapshotValue::snapshot_encode`] excludes the entry (tombstones).
+const HEADER_LEN: usize = 8 + 4 + 8; // legacy: magic + version + count
+const CHECKSUM_LEN: usize = 8;
+/// Journal record header: payload len (u32) + payload crc (u64).
+const REC_HEADER_LEN: usize = 4 + 8;
+/// Journal file header: magic + version + generation + shard.
+const JOURNAL_HEADER_LEN: usize = 8 + 4 + 8 + 4;
+/// Sanity bound on any single journal payload / value.
+const MAX_PAYLOAD: usize = 1 << 26;
+
+/// Every labeled crash-injection point, in execution order. The
+/// `cache_journal` harness kills persistence at each one and asserts the
+/// recovery contract.
+pub const CRASH_POINTS: &[&str] = &[
+    "append:start",
+    "append:torn-record",
+    "append:after-write",
+    "compact:start",
+    "compact:mid-shard",
+    "compact:after-gen-write",
+    "compact:mid-manifest-swap",
+    "compact:after-manifest",
+];
+
+/// A value the persistence layer can round-trip. Returning `None` from
+/// [`SnapshotValue::snapshot_encode`] excludes the entry (tombstones); a
+/// journaled *update* to a non-encodable value is recorded as a remove so
+/// replay stays consistent.
 pub trait SnapshotValue: Sized {
     fn snapshot_encode(&self) -> Option<Vec<u8>>;
     fn snapshot_decode(bytes: &[u8]) -> Result<Self>;
 }
 
-/// What [`save_snapshot`] wrote.
+/// One journaled mutation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DeltaKind<V> {
+    /// Insert or update; the [`Duration`] is the entry's age at append time
+    /// (so TTLs keep counting from the original insertion across restarts).
+    Upsert(V, Duration),
+    /// The key was evicted, expired or removed.
+    Remove,
+}
+
+/// A keyed journal delta.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Delta<V> {
+    pub key: u128,
+    pub kind: DeltaKind<V>,
+}
+
+/// What a full-store write ([`JournalStore::compact`] via the coordinator's
+/// `cache_save`) produced.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SaveReport {
     pub path: PathBuf,
@@ -65,7 +131,7 @@ pub struct SaveReport {
     pub bytes: usize,
 }
 
-/// What [`load_snapshot`] restored.
+/// What a store read restored.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LoadReport {
     pub path: PathBuf,
@@ -74,6 +140,133 @@ pub struct LoadReport {
     /// Entries skipped because they were already older than the cache TTL.
     pub expired: usize,
 }
+
+/// What [`JournalStore::open`] found on disk.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct BootReport {
+    /// Generation the store booted from.
+    pub generation: u64,
+    /// Entries loaded from the generation (base) files.
+    pub base_entries: usize,
+    /// Journal records replayed on top of the base.
+    pub replayed_records: u64,
+    /// Torn journal tails truncated during replay.
+    pub torn_tail_drops: u64,
+    /// The current manifest was corrupt/missing and `MANIFEST.prev` was
+    /// promoted — the store fell back one generation.
+    pub recovered_previous_manifest: bool,
+}
+
+/// What one [`JournalStore::append`] wrote.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct AppendReport {
+    pub records: usize,
+    pub bytes: usize,
+}
+
+/// What one [`JournalStore::compact`] committed.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CompactReport {
+    pub generation: u64,
+    pub shards: usize,
+    pub entries: usize,
+    /// Total bytes of the new generation files + manifest.
+    pub bytes: usize,
+    /// Journal records folded into the new base (now dead).
+    pub journal_records_folded: u64,
+}
+
+/// Everything [`JournalStore::open`] recovered, for the caller to apply to
+/// its cache: `base` first, then `replay` in order.
+pub struct BootLoad<V> {
+    pub base: Vec<(u128, V, Duration)>,
+    pub replay: Vec<Delta<V>>,
+    pub report: BootReport,
+}
+
+/// Live persistence counters (folded into the coordinator `Metrics`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PersistStats {
+    pub generation: u64,
+    pub base_entries: u64,
+    pub journal_records: u64,
+    pub journal_bytes: u64,
+    /// Records appended over the store's lifetime (metric `journal_appends`).
+    pub appended_records: u64,
+    pub compactions: u64,
+    pub replayed_records: u64,
+    pub torn_tail_drops: u64,
+    /// Upper-bound estimate of the journal's dead-record ratio: every
+    /// journaled record becomes dead once folded into a generation file.
+    pub dead_ratio: f64,
+}
+
+/// Journal-store knobs (threaded from `CacheConfig` / the
+/// `--cache-compact-*` CLI flags).
+#[derive(Debug, Clone)]
+pub struct PersistConfig {
+    /// Store directory.
+    pub dir: PathBuf,
+    /// Shard count for generation and journal files (compaction
+    /// parallelism unit).
+    pub shards: usize,
+    /// Compact when the journal holds at least this many bytes.
+    pub compact_max_journal_bytes: u64,
+    /// Compact when the dead-record ratio crosses this (and at least
+    /// [`PersistConfig::compact_min_records`] records are journaled).
+    pub compact_dead_ratio: f64,
+    /// Minimum journaled records before the ratio trigger applies.
+    pub compact_min_records: u64,
+}
+
+impl PersistConfig {
+    pub fn at(dir: impl Into<PathBuf>) -> PersistConfig {
+        PersistConfig {
+            dir: dir.into(),
+            shards: 8,
+            compact_max_journal_bytes: 64 << 20,
+            compact_dead_ratio: 0.5,
+            compact_min_records: 1024,
+        }
+    }
+}
+
+/// Crash-injection predicate: called with each labeled point; `true` kills
+/// the operation there. See [`JournalStore::set_crash_hook`].
+pub type CrashHook = Box<dyn Fn(&str) -> bool + Send + Sync>;
+
+/// The crash-safe incremental persistence store. One instance per
+/// coordinator; `&self` methods are internally synchronized (single-writer
+/// `io` lock over append/compact).
+pub struct JournalStore<V> {
+    dir: PathBuf,
+    shards: usize,
+    compact_max_journal_bytes: u64,
+    compact_dead_ratio: f64,
+    compact_min_records: u64,
+    generation: AtomicU64,
+    base_entries: AtomicU64,
+    journal_records: AtomicU64,
+    journal_bytes: AtomicU64,
+    appended_records: AtomicU64,
+    compactions: AtomicU64,
+    replayed_records: AtomicU64,
+    torn_tail_drops: AtomicU64,
+    /// Poisoned by an injected crash: all further writes refuse, exactly
+    /// as a dead process would.
+    crashed: AtomicBool,
+    io: Mutex<()>,
+    /// Serializes whole drain→append/compact flush cycles (see
+    /// [`JournalStore::flush_guard`]); distinct from `io`, which only
+    /// serializes individual disk operations.
+    flush: Mutex<()>,
+    hook: Mutex<Option<CrashHook>>,
+    _marker: PhantomData<fn() -> V>,
+}
+
+// ---------------------------------------------------------------------------
+// shared codec helpers
+// ---------------------------------------------------------------------------
 
 /// FNV-1a over the body with a final splitmix avalanche, so truncation at
 /// any byte and single-bit flips both change the digest.
@@ -98,7 +291,7 @@ fn put_u128(out: &mut Vec<u8>, v: u128) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-/// Bounds-checked little-endian reader over the snapshot body.
+/// Bounds-checked little-endian reader over a body buffer.
 struct Reader<'a> {
     buf: &'a [u8],
     pos: usize,
@@ -114,7 +307,7 @@ impl<'a> Reader<'a> {
             .pos
             .checked_add(n)
             .filter(|&e| e <= self.buf.len())
-            .ok_or_else(|| anyhow!("snapshot truncated at byte {}", self.pos))?;
+            .ok_or_else(|| anyhow!("truncated at byte {}", self.pos))?;
         let slice = &self.buf[self.pos..end];
         self.pos = end;
         Ok(slice)
@@ -137,8 +330,12 @@ impl<'a> Reader<'a> {
     }
 }
 
-/// Serialize the cache's exportable entries into snapshot bytes. Returns
-/// the encoded body (checksum included) and the entry count.
+// ---------------------------------------------------------------------------
+// legacy single-file snapshot codec (migration source + bench baseline)
+// ---------------------------------------------------------------------------
+
+/// Serialize the cache's exportable entries into legacy snapshot bytes.
+/// Returns the encoded body (checksum included) and the entry count.
 pub fn encode_snapshot<V: SnapshotValue + Clone>(cache: &ShardedLruCache<V>) -> (Vec<u8>, usize) {
     let mut entries = Vec::new();
     let mut count: u64 = 0;
@@ -162,9 +359,7 @@ pub fn encode_snapshot<V: SnapshotValue + Clone>(cache: &ShardedLruCache<V>) -> 
     (body, count as usize)
 }
 
-/// Parse and verify snapshot bytes into `(key, value, age)` entries.
-/// Rejects bad magic, unknown versions, checksum mismatches (covers both
-/// corruption and truncation) and trailing garbage.
+/// Parse and verify legacy snapshot bytes into `(key, value, age)` entries.
 pub fn decode_snapshot<V: SnapshotValue>(bytes: &[u8]) -> Result<Vec<(u128, V, Duration)>> {
     if bytes.len() < HEADER_LEN + CHECKSUM_LEN {
         bail!("snapshot too short ({} bytes)", bytes.len());
@@ -189,8 +384,8 @@ pub fn decode_snapshot<V: SnapshotValue>(bytes: &[u8]) -> Result<Vec<(u128, V, D
         let age_ms = r.u64()?;
         let len = r.u32()? as usize;
         let payload = r.take(len)?;
-        let value = V::snapshot_decode(payload)
-            .map_err(|e| e.context(format!("snapshot entry {i}")))?;
+        let value =
+            V::snapshot_decode(payload).map_err(|e| e.context(format!("snapshot entry {i}")))?;
         out.push((key, value, Duration::from_millis(age_ms)));
     }
     if r.remaining() != 0 {
@@ -199,14 +394,44 @@ pub fn decode_snapshot<V: SnapshotValue>(bytes: &[u8]) -> Result<Vec<(u128, V, D
     Ok(out)
 }
 
-/// Monotonic discriminator so concurrent saves (periodic timer + a TCP
-/// `cache_save` on a connection thread) never share one temp file — each
-/// writes its own and the renames serialize at the filesystem.
+/// Monotonic discriminator so concurrent writers never share a temp file.
 static TMP_COUNTER: AtomicU64 = AtomicU64::new(0);
 
-/// Write an atomically-rotated snapshot of `cache` to `path`: encode,
-/// write a unique `<file>.tmp.<pid>.<n>` next to the target, then rename
-/// over it.
+fn unique_tmp(path: &Path) -> PathBuf {
+    let file = path
+        .file_name()
+        .map(|f| f.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "dippm-persist".into());
+    path.with_file_name(format!(
+        "{file}.tmp.{}.{}",
+        std::process::id(),
+        TMP_COUNTER.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// Write bytes to a sibling temp file and atomically rename over `path`.
+fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = unique_tmp(path);
+    (|| -> Result<()> {
+        let mut f = fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+        Ok(())
+    })()
+    .and_then(|()| {
+        fs::rename(&tmp, path)
+            .with_context(|| format!("rotating into {}", path.display()))
+    })
+    .map_err(|e| {
+        let _ = fs::remove_file(&tmp);
+        e
+    })
+}
+
+/// Write a legacy atomically-rotated whole-file snapshot of `cache` to
+/// `path`. Kept as the full-rewrite baseline the journal is measured
+/// against (`cache_persist` bench) and for producing migration fixtures.
 pub fn save_snapshot<V: SnapshotValue + Clone>(
     path: &Path,
     cache: &ShardedLruCache<V>,
@@ -218,21 +443,7 @@ pub fn save_snapshot<V: SnapshotValue + Clone>(
                 .with_context(|| format!("creating snapshot dir {}", dir.display()))?;
         }
     }
-    let file = path
-        .file_name()
-        .map(|f| f.to_string_lossy().into_owned())
-        .unwrap_or_else(|| "cache-snapshot".into());
-    let tmp = path.with_file_name(format!(
-        "{file}.tmp.{}.{}",
-        std::process::id(),
-        TMP_COUNTER.fetch_add(1, Ordering::Relaxed)
-    ));
-    fs::write(&tmp, &bytes).with_context(|| format!("writing {}", tmp.display()))?;
-    if let Err(e) = fs::rename(&tmp, path) {
-        let _ = fs::remove_file(&tmp);
-        return Err(anyhow::Error::from(e)
-            .context(format!("rotating snapshot into {}", path.display())));
-    }
+    atomic_write(path, &bytes)?;
     Ok(SaveReport {
         path: path.to_path_buf(),
         entries,
@@ -240,9 +451,7 @@ pub fn save_snapshot<V: SnapshotValue + Clone>(
     })
 }
 
-/// Read, verify and preload a snapshot into `cache`. Errors on IO problems
-/// and on any integrity failure; the caller decides whether that is fatal
-/// (an explicit `cache_load` command) or a logged cold start (boot).
+/// Read, verify and preload a legacy snapshot file into `cache`.
 pub fn load_snapshot<V: SnapshotValue + Clone>(
     path: &Path,
     cache: &ShardedLruCache<V>,
@@ -256,6 +465,897 @@ pub fn load_snapshot<V: SnapshotValue + Clone>(
         entries: loaded,
         expired,
     })
+}
+
+// ---------------------------------------------------------------------------
+// journal store: file names + manifest codec
+// ---------------------------------------------------------------------------
+
+fn gen_file(dir: &Path, generation: u64, shard: usize) -> PathBuf {
+    dir.join(format!("gen-{generation}-shard-{shard}.bin"))
+}
+
+fn journal_file(dir: &Path, generation: u64, shard: usize) -> PathBuf {
+    dir.join(format!("journal-{generation}-shard-{shard}.log"))
+}
+
+/// Parse `gen-<G>-shard-<S>.bin` / `journal-<G>-shard-<S>.log` names;
+/// returns the generation (for the boot-time janitor).
+fn parse_store_file(name: &str) -> Option<u64> {
+    let rest = name
+        .strip_prefix("gen-")
+        .or_else(|| name.strip_prefix("journal-"))?;
+    let (gen_str, _) = rest.split_once("-shard-")?;
+    gen_str.parse().ok()
+}
+
+/// Per-shard record in the manifest: the generation file's exact byte
+/// length and whole-file checksum (0/0 = no base file for this shard).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+struct ShardRecord {
+    len: u64,
+    digest: u64,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Manifest {
+    generation: u64,
+    shards: Vec<ShardRecord>,
+}
+
+fn encode_manifest(m: &Manifest) -> Vec<u8> {
+    let mut body = Vec::with_capacity(8 + 4 + 8 + 4 + m.shards.len() * 16 + CHECKSUM_LEN);
+    body.extend_from_slice(&MANIFEST_MAGIC);
+    put_u32(&mut body, STORE_VERSION);
+    put_u64(&mut body, m.generation);
+    put_u32(&mut body, m.shards.len() as u32);
+    for s in &m.shards {
+        put_u64(&mut body, s.len);
+        put_u64(&mut body, s.digest);
+    }
+    let digest = checksum(&body);
+    put_u64(&mut body, digest);
+    body
+}
+
+fn decode_manifest(bytes: &[u8]) -> Result<Manifest> {
+    if bytes.len() < 8 + 4 + 8 + 4 + CHECKSUM_LEN {
+        bail!("manifest too short ({} bytes)", bytes.len());
+    }
+    let (body, tail) = bytes.split_at(bytes.len() - CHECKSUM_LEN);
+    let stored = u64::from_le_bytes(tail.try_into().unwrap());
+    if checksum(body) != stored {
+        bail!("manifest checksum mismatch");
+    }
+    let mut r = Reader::new(body);
+    if r.take(8)? != &MANIFEST_MAGIC[..] {
+        bail!("not a dippm cache manifest (bad magic)");
+    }
+    let version = r.u32()?;
+    if version != STORE_VERSION {
+        bail!("unsupported store version {version} (this build reads {STORE_VERSION})");
+    }
+    let generation = r.u64()?;
+    let n = r.u32()? as usize;
+    if n == 0 || n > 4096 {
+        bail!("manifest shard count {n} implausible");
+    }
+    let mut shards = Vec::with_capacity(n);
+    for _ in 0..n {
+        let len = r.u64()?;
+        let digest = r.u64()?;
+        shards.push(ShardRecord { len, digest });
+    }
+    if r.remaining() != 0 {
+        bail!("manifest has {} trailing bytes", r.remaining());
+    }
+    Ok(Manifest { generation, shards })
+}
+
+// ---------------------------------------------------------------------------
+// journal store: generation-file + journal-record codecs
+// ---------------------------------------------------------------------------
+
+fn encode_gen_shard<V: SnapshotValue>(
+    generation: u64,
+    shard: usize,
+    entries: &[(u128, V, Duration)],
+) -> Vec<u8> {
+    let mut body = Vec::new();
+    body.extend_from_slice(&GEN_MAGIC);
+    put_u32(&mut body, STORE_VERSION);
+    put_u64(&mut body, generation);
+    put_u32(&mut body, shard as u32);
+    let count_pos = body.len();
+    put_u64(&mut body, 0); // count patched below
+    let mut count: u64 = 0;
+    for (key, value, age) in entries {
+        let Some(payload) = value.snapshot_encode() else {
+            continue;
+        };
+        put_u128(&mut body, *key);
+        put_u64(&mut body, age.as_millis().min(u64::MAX as u128) as u64);
+        put_u32(&mut body, payload.len() as u32);
+        body.extend_from_slice(&payload);
+        count += 1;
+    }
+    body[count_pos..count_pos + 8].copy_from_slice(&count.to_le_bytes());
+    let digest = checksum(&body);
+    put_u64(&mut body, digest);
+    body
+}
+
+fn decode_gen_shard<V: SnapshotValue>(bytes: &[u8]) -> Result<Vec<(u128, V, Duration)>> {
+    if bytes.len() < 8 + 4 + 8 + 4 + 8 + CHECKSUM_LEN {
+        bail!("generation file too short ({} bytes)", bytes.len());
+    }
+    let (body, tail) = bytes.split_at(bytes.len() - CHECKSUM_LEN);
+    let stored = u64::from_le_bytes(tail.try_into().unwrap());
+    if checksum(body) != stored {
+        bail!("generation file checksum mismatch");
+    }
+    let mut r = Reader::new(body);
+    if r.take(8)? != &GEN_MAGIC[..] {
+        bail!("bad generation-file magic");
+    }
+    let version = r.u32()?;
+    if version != STORE_VERSION {
+        bail!("unsupported store version {version}");
+    }
+    let _generation = r.u64()?;
+    let _shard = r.u32()?;
+    let count = r.u64()?;
+    let mut out = Vec::with_capacity(count.min(1 << 22) as usize);
+    for i in 0..count {
+        let key = r.u128()?;
+        let age_ms = r.u64()?;
+        let len = r.u32()? as usize;
+        if len > MAX_PAYLOAD {
+            bail!("entry {i} payload length {len} implausible");
+        }
+        let payload = r.take(len)?;
+        let value = V::snapshot_decode(payload)
+            .map_err(|e| e.context(format!("generation entry {i}")))?;
+        out.push((key, value, Duration::from_millis(age_ms)));
+    }
+    if r.remaining() != 0 {
+        bail!("generation file has {} trailing bytes", r.remaining());
+    }
+    Ok(out)
+}
+
+const OP_UPSERT: u8 = 1;
+const OP_REMOVE: u8 = 2;
+
+/// Encode one delta's record *payload* (the part covered by the per-record
+/// crc). An upsert whose value declines encoding degrades to a remove.
+fn encode_delta_payload<V: SnapshotValue>(delta: &Delta<V>) -> Vec<u8> {
+    let mut p = Vec::with_capacity(32);
+    match &delta.kind {
+        DeltaKind::Upsert(value, age) => match value.snapshot_encode() {
+            Some(bytes) => {
+                p.push(OP_UPSERT);
+                put_u128(&mut p, delta.key);
+                put_u64(&mut p, age.as_millis().min(u64::MAX as u128) as u64);
+                put_u32(&mut p, bytes.len() as u32);
+                p.extend_from_slice(&bytes);
+            }
+            None => {
+                p.push(OP_REMOVE);
+                put_u128(&mut p, delta.key);
+            }
+        },
+        DeltaKind::Remove => {
+            p.push(OP_REMOVE);
+            put_u128(&mut p, delta.key);
+        }
+    }
+    p
+}
+
+fn decode_delta_payload<V: SnapshotValue>(payload: &[u8]) -> Result<Delta<V>> {
+    let mut r = Reader::new(payload);
+    let op = r.take(1)?[0];
+    let key = r.u128()?;
+    let kind = match op {
+        OP_UPSERT => {
+            let age_ms = r.u64()?;
+            let len = r.u32()? as usize;
+            let bytes = r.take(len)?;
+            DeltaKind::Upsert(
+                V::snapshot_decode(bytes)
+                    .map_err(|e| e.context("journal upsert value"))?,
+                Duration::from_millis(age_ms),
+            )
+        }
+        OP_REMOVE => DeltaKind::Remove,
+        other => bail!("unknown journal op {other}"),
+    };
+    if r.remaining() != 0 {
+        bail!("journal record has {} trailing bytes", r.remaining());
+    }
+    Ok(Delta { key, kind })
+}
+
+/// Frame a payload as a journal record: `len u32 | crc u64 | payload`.
+fn frame_record(payload: &[u8], out: &mut Vec<u8>) {
+    put_u32(out, payload.len() as u32);
+    put_u64(out, checksum(payload));
+    out.extend_from_slice(payload);
+}
+
+fn journal_header(generation: u64, shard: usize) -> Vec<u8> {
+    let mut h = Vec::with_capacity(JOURNAL_HEADER_LEN);
+    h.extend_from_slice(&JOURNAL_MAGIC);
+    put_u32(&mut h, STORE_VERSION);
+    put_u64(&mut h, generation);
+    put_u32(&mut h, shard as u32);
+    h
+}
+
+/// Scan one journal file's records. Returns the decoded deltas, the byte
+/// offset of the first torn/corrupt record (`None` = the file is clean),
+/// and whether anything was dropped.
+fn scan_journal<V: SnapshotValue>(bytes: &[u8]) -> (Vec<Delta<V>>, Option<usize>) {
+    if bytes.len() < JOURNAL_HEADER_LEN {
+        // Crash during file creation: the whole file is a torn tail.
+        return (Vec::new(), Some(0));
+    }
+    if bytes[..8] != JOURNAL_MAGIC {
+        return (Vec::new(), Some(0));
+    }
+    let mut out = Vec::new();
+    let mut pos = JOURNAL_HEADER_LEN;
+    while pos < bytes.len() {
+        let rest = &bytes[pos..];
+        if rest.len() < REC_HEADER_LEN {
+            return (out, Some(pos));
+        }
+        let len = u32::from_le_bytes(rest[..4].try_into().unwrap()) as usize;
+        if len > MAX_PAYLOAD || rest.len() < REC_HEADER_LEN + len {
+            return (out, Some(pos));
+        }
+        let crc = u64::from_le_bytes(rest[4..12].try_into().unwrap());
+        let payload = &rest[REC_HEADER_LEN..REC_HEADER_LEN + len];
+        if checksum(payload) != crc {
+            return (out, Some(pos));
+        }
+        match decode_delta_payload::<V>(payload) {
+            Ok(d) => out.push(d),
+            // A crc-valid but semantically bad record: stop here too.
+            Err(_) => return (out, Some(pos)),
+        }
+        pos += REC_HEADER_LEN + len;
+    }
+    (out, None)
+}
+
+/// List journal files of `generation` in the dir, sorted by shard index.
+fn list_journals(dir: &Path, generation: u64) -> Vec<PathBuf> {
+    let prefix = format!("journal-{generation}-shard-");
+    let mut found: Vec<(usize, PathBuf)> = Vec::new();
+    if let Ok(rd) = fs::read_dir(dir) {
+        for e in rd.flatten() {
+            let name = e.file_name().to_string_lossy().into_owned();
+            if let Some(rest) = name.strip_prefix(&prefix) {
+                if let Some(shard) = rest.strip_suffix(".log").and_then(|s| s.parse().ok()) {
+                    found.push((shard, e.path()));
+                }
+            }
+        }
+    }
+    found.sort_by_key(|(s, _)| *s);
+    found.into_iter().map(|(_, p)| p).collect()
+}
+
+// ---------------------------------------------------------------------------
+// journal store: open / read
+// ---------------------------------------------------------------------------
+
+struct LoadedDir<V> {
+    manifest: Manifest,
+    boot: BootLoad<V>,
+    journal_bytes: u64,
+}
+
+/// Read a store directory. With `repair` set (boot path) torn tails are
+/// truncated on disk, a promoted `MANIFEST.prev` is re-committed, and stray
+/// files from aborted compactions are deleted; without it (`cache_load` of
+/// a foreign store) the read is strictly non-mutating.
+fn load_dir<V: SnapshotValue>(dir: &Path, shards_hint: usize, repair: bool) -> Result<LoadedDir<V>> {
+    let manifest_path = dir.join("MANIFEST");
+    let prev_path = dir.join("MANIFEST.prev");
+    let mut recovered_prev = false;
+    let manifest = match fs::read(&manifest_path)
+        .map_err(anyhow::Error::from)
+        .and_then(|b| decode_manifest(&b))
+    {
+        Ok(m) => Some(m),
+        Err(primary) => match fs::read(&prev_path)
+            .map_err(anyhow::Error::from)
+            .and_then(|b| decode_manifest(&b))
+        {
+            Ok(prev) => {
+                log_warn!(
+                    "cache manifest {} unreadable ({primary:#}); falling back one \
+                     generation to MANIFEST.prev (generation {})",
+                    manifest_path.display(),
+                    prev.generation
+                );
+                recovered_prev = true;
+                Some(prev)
+            }
+            Err(_) => {
+                if manifest_path.exists() {
+                    log_warn!(
+                        "cache manifest {} unreadable ({primary:#}) and no usable \
+                         MANIFEST.prev; starting a fresh generation (journal files \
+                         of the newest on-disk generation are still replayed)",
+                        manifest_path.display()
+                    );
+                }
+                None
+            }
+        },
+    };
+    let synthesized = manifest.is_none();
+    let manifest = match manifest {
+        Some(m) => m,
+        None => {
+            // Fresh store (or a hosed manifest pair): synthesize an empty
+            // manifest at the newest generation any on-disk file mentions,
+            // so surviving journals of that generation are still replayed.
+            let newest = fs::read_dir(dir)
+                .ok()
+                .into_iter()
+                .flatten()
+                .flatten()
+                .filter_map(|e| parse_store_file(&e.file_name().to_string_lossy()))
+                .max()
+                .unwrap_or(1);
+            Manifest {
+                generation: newest,
+                shards: vec![ShardRecord::default(); shards_hint.max(1)],
+            }
+        }
+    };
+
+    if repair {
+        if recovered_prev || synthesized {
+            // Re-commit the chosen manifest (promoted fallback or a
+            // synthesized fresh one over a corrupt file) so the next boot
+            // reads it directly.
+            let _ = fs::remove_file(&manifest_path);
+            atomic_write(&manifest_path, &encode_manifest(&manifest))?;
+            let _ = fs::remove_file(&prev_path);
+        }
+        // Janitor: drop temp manifests and any gen/journal files from
+        // generations other than the chosen one and its predecessor (the
+        // predecessor backs the MANIFEST.prev fallback).
+        if let Ok(rd) = fs::read_dir(dir) {
+            for e in rd.flatten() {
+                let name = e.file_name().to_string_lossy().into_owned();
+                if name.starts_with("MANIFEST.tmp") {
+                    let _ = fs::remove_file(e.path());
+                } else if let Some(g) = parse_store_file(&name) {
+                    if g != manifest.generation && g + 1 != manifest.generation {
+                        let _ = fs::remove_file(e.path());
+                    }
+                }
+            }
+        }
+    }
+
+    // Base generation files.
+    let mut base = Vec::new();
+    let mut base_entries = 0usize;
+    for (shard, rec) in manifest.shards.iter().enumerate() {
+        if rec.len == 0 {
+            continue;
+        }
+        let path = gen_file(dir, manifest.generation, shard);
+        let loaded = fs::read(&path)
+            .map_err(anyhow::Error::from)
+            .and_then(|bytes| {
+                if bytes.len() as u64 != rec.len || checksum(&bytes) != rec.digest {
+                    bail!(
+                        "generation shard {shard} does not match its manifest record \
+                         ({} bytes on disk, {} expected)",
+                        bytes.len(),
+                        rec.len
+                    );
+                }
+                decode_gen_shard::<V>(&bytes)
+            });
+        match loaded {
+            Ok(entries) => {
+                base_entries += entries.len();
+                base.extend(entries);
+            }
+            Err(e) => {
+                // Bit rot on a committed generation file: partial warm
+                // start for the other shards, never a crash.
+                log_warn!(
+                    "cache generation shard {} unreadable ({e:#}); skipping its base",
+                    path.display()
+                );
+            }
+        }
+    }
+
+    // Journal tails of the chosen generation.
+    let mut replay = Vec::new();
+    let mut torn = 0u64;
+    let mut journal_bytes = 0u64;
+    for path in list_journals(dir, manifest.generation) {
+        let bytes = match fs::read(&path) {
+            Ok(b) => b,
+            Err(e) => {
+                log_warn!("cache journal {} unreadable ({e}); skipping", path.display());
+                continue;
+            }
+        };
+        let (deltas, torn_at) = scan_journal::<V>(&bytes);
+        if let Some(at) = torn_at {
+            torn += 1;
+            log_warn!(
+                "cache journal {}: torn tail at byte {at} truncated ({} records kept)",
+                path.display(),
+                deltas.len()
+            );
+            if repair {
+                if let Ok(f) = fs::OpenOptions::new().write(true).open(&path) {
+                    let _ = f.set_len(at as u64);
+                }
+            }
+            journal_bytes += at as u64;
+        } else {
+            journal_bytes += bytes.len() as u64;
+        }
+        replay.extend(deltas);
+    }
+
+    let report = BootReport {
+        generation: manifest.generation,
+        base_entries,
+        replayed_records: replay.len() as u64,
+        torn_tail_drops: torn,
+        recovered_previous_manifest: recovered_prev,
+    };
+    Ok(LoadedDir {
+        manifest,
+        boot: BootLoad {
+            base,
+            replay,
+            report,
+        },
+        journal_bytes,
+    })
+}
+
+/// Read a store directory without mutating it (the `cache_load` TCP path).
+/// Returns base entries + replay deltas + what was found.
+pub fn read_store<V: SnapshotValue>(dir: &Path) -> Result<BootLoad<V>> {
+    if !dir.is_dir() {
+        bail!("{} is not a cache store directory", dir.display());
+    }
+    Ok(load_dir::<V>(dir, 8, false)?.boot)
+}
+
+impl<V: SnapshotValue + Clone> JournalStore<V> {
+    /// Open (creating if absent) the store at `cfg.dir` and recover its
+    /// state. The caller applies `BootLoad::base` then `BootLoad::replay`
+    /// to its cache, in order.
+    pub fn open(cfg: &PersistConfig) -> Result<(JournalStore<V>, BootLoad<V>)> {
+        fs::create_dir_all(&cfg.dir)
+            .with_context(|| format!("creating cache store dir {}", cfg.dir.display()))?;
+        let loaded = load_dir::<V>(&cfg.dir, cfg.shards, true)?;
+        let manifest_path = cfg.dir.join("MANIFEST");
+        if !manifest_path.exists() {
+            atomic_write(&manifest_path, &encode_manifest(&loaded.manifest))?;
+        }
+        let store = JournalStore {
+            dir: cfg.dir.clone(),
+            shards: cfg.shards.max(1),
+            compact_max_journal_bytes: cfg.compact_max_journal_bytes.max(1),
+            compact_dead_ratio: cfg.compact_dead_ratio.clamp(0.0, 1.0),
+            compact_min_records: cfg.compact_min_records,
+            generation: AtomicU64::new(loaded.manifest.generation),
+            base_entries: AtomicU64::new(loaded.boot.report.base_entries as u64),
+            journal_records: AtomicU64::new(loaded.boot.report.replayed_records),
+            journal_bytes: AtomicU64::new(loaded.journal_bytes),
+            appended_records: AtomicU64::new(0),
+            compactions: AtomicU64::new(0),
+            replayed_records: AtomicU64::new(loaded.boot.report.replayed_records),
+            torn_tail_drops: AtomicU64::new(loaded.boot.report.torn_tail_drops),
+            crashed: AtomicBool::new(false),
+            io: Mutex::new(()),
+            flush: Mutex::new(()),
+            hook: Mutex::new(None),
+            _marker: PhantomData,
+        };
+        Ok((store, loaded.boot))
+    }
+
+    /// Install a crash-injection predicate: persistence calls it with each
+    /// labeled point (see [`CRASH_POINTS`]); returning `true` makes the
+    /// operation die there (partial writes included), poisoning the store
+    /// exactly as a killed process would. Test-harness hook; production
+    /// never sets it.
+    pub fn set_crash_hook(&self, hook: Option<CrashHook>) {
+        *self.hook.lock().unwrap() = hook;
+    }
+
+    /// Would the hook (or `DIPPM_PERSIST_CRASH_POINT`) crash at `point`?
+    /// Does not fire — used to stage partial writes before the kill.
+    fn wants_crash(&self, point: &str) -> bool {
+        if std::env::var("DIPPM_PERSIST_CRASH_POINT").map(|v| v == point).unwrap_or(false) {
+            return true;
+        }
+        self.hook
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|h| h(point))
+            .unwrap_or(false)
+    }
+
+    /// Fire the crash point: env-var mode aborts the process (the CI
+    /// kill-style harness); hook mode poisons the store and errors out.
+    fn crash_gate(&self, point: &str) -> Result<()> {
+        if std::env::var("DIPPM_PERSIST_CRASH_POINT").map(|v| v == point).unwrap_or(false) {
+            eprintln!("DIPPM_PERSIST_CRASH_POINT={point}: aborting");
+            std::process::abort();
+        }
+        let fire = self
+            .hook
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|h| h(point))
+            .unwrap_or(false);
+        if fire {
+            self.crashed.store(true, Ordering::SeqCst);
+            bail!("injected crash at {point}");
+        }
+        Ok(())
+    }
+
+    fn check_alive(&self) -> Result<()> {
+        if self.crashed.load(Ordering::SeqCst) {
+            bail!("persistence store poisoned by an injected crash");
+        }
+        Ok(())
+    }
+
+    fn shard_of(&self, key: u128) -> usize {
+        ((key >> 64) as u64 % self.shards as u64) as usize
+    }
+
+    /// Current generation.
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Relaxed)
+    }
+
+    /// Hold this guard across a whole drain-the-cache→append/compact flush
+    /// cycle so two concurrent flushers cannot interleave one key's
+    /// drained updates out of order on disk. (Individual `append` /
+    /// `compact` calls are already internally serialized by the io lock;
+    /// this guards the *drain* step that precedes them.)
+    pub fn flush_guard(&self) -> std::sync::MutexGuard<'_, ()> {
+        self.flush.lock().unwrap()
+    }
+
+    /// The store directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Live counters.
+    pub fn stats(&self) -> PersistStats {
+        let base = self.base_entries.load(Ordering::Relaxed);
+        let records = self.journal_records.load(Ordering::Relaxed);
+        let dead_ratio = if records == 0 {
+            0.0
+        } else {
+            records as f64 / (base + records) as f64
+        };
+        PersistStats {
+            generation: self.generation.load(Ordering::Relaxed),
+            base_entries: base,
+            journal_records: records,
+            journal_bytes: self.journal_bytes.load(Ordering::Relaxed),
+            appended_records: self.appended_records.load(Ordering::Relaxed),
+            compactions: self.compactions.load(Ordering::Relaxed),
+            replayed_records: self.replayed_records.load(Ordering::Relaxed),
+            torn_tail_drops: self.torn_tail_drops.load(Ordering::Relaxed),
+            dead_ratio,
+        }
+    }
+
+    /// Should the background compactor run? Byte threshold, or
+    /// dead-record-ratio threshold once enough records are journaled.
+    pub fn should_compact(&self) -> bool {
+        let s = self.stats();
+        s.journal_bytes >= self.compact_max_journal_bytes
+            || (s.journal_records >= self.compact_min_records
+                && s.dead_ratio >= self.compact_dead_ratio)
+    }
+
+    /// Append deltas to the per-shard journals of the current generation.
+    /// Records are checksummed and length-prefixed; a crash mid-append
+    /// leaves at most one torn record at one shard's tail, which recovery
+    /// truncates.
+    pub fn append(&self, deltas: Vec<Delta<V>>) -> Result<AppendReport> {
+        if deltas.is_empty() {
+            return Ok(AppendReport::default());
+        }
+        self.check_alive()?;
+        let _io = self.io.lock().unwrap();
+        self.crash_gate("append:start")?;
+        let generation = self.generation.load(Ordering::Relaxed);
+        // Build per-shard record batches; remember each batch's last
+        // record length so the torn-record injection can cut mid-record.
+        let mut per_shard: Vec<(Vec<u8>, usize)> = (0..self.shards).map(|_| (Vec::new(), 0)).collect();
+        let mut records = 0usize;
+        for d in &deltas {
+            let payload = encode_delta_payload(d);
+            let (buf, last_len) = &mut per_shard[self.shard_of(d.key)];
+            let before = buf.len();
+            frame_record(&payload, buf);
+            *last_len = buf.len() - before;
+            records += 1;
+        }
+        let torn = self.wants_crash("append:torn-record");
+        let last_nonempty = per_shard.iter().rposition(|(b, _)| !b.is_empty());
+        let mut bytes = 0usize;
+        for (shard, (buf, last_len)) in per_shard.iter().enumerate() {
+            if buf.is_empty() {
+                continue;
+            }
+            let path = journal_file(&self.dir, generation, shard);
+            let mut file = fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&path)
+                .with_context(|| format!("opening journal {}", path.display()))?;
+            if file.metadata().map(|m| m.len()).unwrap_or(0) < JOURNAL_HEADER_LEN as u64 {
+                // New (or truncated-to-zero) file: (re)write the header.
+                file.set_len(0)?;
+                file.write_all(&journal_header(generation, shard))?;
+            }
+            if torn && Some(shard) == last_nonempty {
+                // Simulate a crash mid-record: write everything up to the
+                // last record plus half of it, then die.
+                let cut = buf.len() - (last_len + 1) / 2;
+                file.write_all(&buf[..cut])?;
+                file.sync_all()?;
+                return self.crash_gate("append:torn-record").map(|_| unreachable!());
+            }
+            file.write_all(buf)?;
+            file.sync_all()?;
+            bytes += buf.len();
+        }
+        // Records are durable; a crash here loses only the in-memory
+        // counters, which recovery recomputes from the files.
+        self.crash_gate("append:after-write")?;
+        self.journal_records.fetch_add(records as u64, Ordering::Relaxed);
+        self.journal_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.appended_records.fetch_add(records as u64, Ordering::Relaxed);
+        Ok(AppendReport { records, bytes })
+    }
+
+    /// Rewrite the store's base as generation `G+1` from a full export of
+    /// the live cache: shard the entries, write each shard's generation
+    /// file **in parallel** (`workers` threads), atomically swap the
+    /// manifest (keeping the old one as `MANIFEST.prev`), then delete the
+    /// obsolete generation's files.
+    pub fn compact(
+        &self,
+        entries: Vec<(u128, V, Duration)>,
+        workers: usize,
+    ) -> Result<CompactReport>
+    where
+        V: Send + Sync,
+    {
+        self.check_alive()?;
+        let _io = self.io.lock().unwrap();
+        self.crash_gate("compact:start")?;
+        let old_gen = self.generation.load(Ordering::Relaxed);
+        let new_gen = old_gen + 1;
+        let folded = self.journal_records.load(Ordering::Relaxed);
+
+        // Partition by shard.
+        let mut parts: Vec<Vec<(u128, V, Duration)>> = (0..self.shards).map(|_| Vec::new()).collect();
+        let n_entries = entries.len();
+        for e in entries {
+            parts[self.shard_of(e.0)].push(e);
+        }
+
+        // Parallel shard rewrite. The new files are unreferenced until the
+        // manifest lands, so a crash here leaves committed state intact.
+        let mid_shard_crash = self.wants_crash("compact:mid-shard");
+        let results: Vec<Result<ShardRecord>> = parallel_map_indexed(
+            self.shards,
+            workers.clamp(1, self.shards),
+            |shard| -> Result<ShardRecord> {
+                if parts[shard].is_empty() {
+                    return Ok(ShardRecord::default());
+                }
+                let bytes = encode_gen_shard(new_gen, shard, &parts[shard]);
+                let path = gen_file(&self.dir, new_gen, shard);
+                if mid_shard_crash && shard == 0 {
+                    // Half a generation file on disk, then death.
+                    fs::write(&path, &bytes[..bytes.len() / 2])?;
+                    self.crash_gate("compact:mid-shard")?;
+                    unreachable!("crash gate must fire");
+                }
+                let digest = checksum(&bytes);
+                let mut f = fs::File::create(&path)
+                    .with_context(|| format!("creating {}", path.display()))?;
+                f.write_all(&bytes)?;
+                f.sync_all()?;
+                Ok(ShardRecord {
+                    len: bytes.len() as u64,
+                    digest,
+                })
+            },
+        );
+        let mut shard_records = Vec::with_capacity(self.shards);
+        let mut gen_bytes = 0usize;
+        for r in results {
+            let rec = r.map_err(|e| {
+                self.crashed.store(true, Ordering::SeqCst);
+                e
+            })?;
+            gen_bytes += rec.len as usize;
+            shard_records.push(rec);
+        }
+        self.crash_gate("compact:after-gen-write")?;
+
+        // Manifest swap: current -> .prev, new -> current. A crash between
+        // the two renames leaves only MANIFEST.prev, which boot promotes
+        // (falling back one generation, with that generation's files still
+        // on disk).
+        let manifest = Manifest {
+            generation: new_gen,
+            shards: shard_records,
+        };
+        let manifest_bytes = encode_manifest(&manifest);
+        let manifest_path = self.dir.join("MANIFEST");
+        let prev_path = self.dir.join("MANIFEST.prev");
+        let tmp = unique_tmp(&self.dir.join("MANIFEST"));
+        {
+            // write_all + fsync before the rename: the old generation's
+            // journals are deleted below, so a rename that becomes durable
+            // ahead of the manifest *contents* would strand recovery on a
+            // garbage MANIFEST with its fallback's journals gone.
+            let mut tf = fs::File::create(&tmp)
+                .with_context(|| format!("writing {}", tmp.display()))?;
+            tf.write_all(&manifest_bytes)?;
+            tf.sync_all()?;
+        }
+        if manifest_path.exists() {
+            fs::rename(&manifest_path, &prev_path)
+                .with_context(|| "rotating MANIFEST to MANIFEST.prev")?;
+        }
+        if let Err(e) = self.crash_gate("compact:mid-manifest-swap") {
+            let _ = fs::remove_file(&tmp);
+            return Err(e);
+        }
+        fs::rename(&tmp, &manifest_path)
+            .map_err(|e| {
+                let _ = fs::remove_file(&tmp);
+                anyhow::Error::from(e).context("committing new MANIFEST")
+            })?;
+        self.crash_gate("compact:after-manifest")?;
+
+        // Cleanup: the *obsolete* generation (old-1) and the old journals
+        // are gone; the just-superseded generation's gen files stay as the
+        // MANIFEST.prev fallback.
+        for shard in 0..self.shards.max(64) {
+            if old_gen >= 1 {
+                let _ = fs::remove_file(gen_file(&self.dir, old_gen - 1, shard));
+                let _ = fs::remove_file(journal_file(&self.dir, old_gen - 1, shard));
+            }
+        }
+        for path in list_journals(&self.dir, old_gen) {
+            let _ = fs::remove_file(path);
+        }
+
+        self.generation.store(new_gen, Ordering::Relaxed);
+        self.base_entries.store(n_entries as u64, Ordering::Relaxed);
+        self.journal_records.store(0, Ordering::Relaxed);
+        self.journal_bytes.store(0, Ordering::Relaxed);
+        self.compactions.fetch_add(1, Ordering::Relaxed);
+        Ok(CompactReport {
+            generation: new_gen,
+            shards: self.shards,
+            entries: n_entries,
+            bytes: gen_bytes + manifest_bytes.len(),
+            journal_records_folded: folded,
+        })
+    }
+}
+
+/// Write a fresh store at `dir` from a full entry export (the `cache_save`
+/// TCP path with an explicit path, and legacy-snapshot migration).
+pub fn write_fresh_store<V: SnapshotValue + Clone + Send + Sync>(
+    dir: &Path,
+    entries: Vec<(u128, V, Duration)>,
+    shards: usize,
+    workers: usize,
+) -> Result<SaveReport> {
+    let cfg = PersistConfig {
+        shards,
+        ..PersistConfig::at(dir)
+    };
+    let (store, _boot) = JournalStore::<V>::open(&cfg)?;
+    let report = store.compact(entries, workers)?;
+    Ok(SaveReport {
+        path: dir.to_path_buf(),
+        entries: report.entries,
+        bytes: report.bytes,
+    })
+}
+
+/// Boot-time migration: if `path` is a legacy single-file snapshot, decode
+/// it and replace the file with a journal-store directory seeded from its
+/// entries (which then arrive through the normal [`JournalStore::open`]
+/// boot load). Crash-safe: the replacement store is fully written to a
+/// sibling `<path>.migrate-tmp` directory *before* the legacy file is
+/// removed, and an interrupted swap is resumed on the next boot. Returns
+/// whether a migration happened (or resumed); `Ok(false)` = nothing to do.
+pub fn migrate_legacy_snapshot<V: SnapshotValue + Clone + Send + Sync>(
+    path: &Path,
+    shards: usize,
+    workers: usize,
+) -> Result<bool> {
+    let file = path
+        .file_name()
+        .map(|f| f.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "cache-store".into());
+    let tmp_dir = path.with_file_name(format!("{file}.migrate-tmp"));
+    if !path.exists() && tmp_dir.is_dir() {
+        // A previous migration crashed between removing the legacy file
+        // and renaming the finished store into place: finish the swap.
+        fs::rename(&tmp_dir, path)
+            .with_context(|| format!("resuming interrupted migration into {}", path.display()))?;
+        log_info!("resumed interrupted legacy-snapshot migration at {}", path.display());
+        return Ok(true);
+    }
+    if !path.is_file() {
+        let _ = fs::remove_dir_all(&tmp_dir);
+        return Ok(false);
+    }
+    let bytes = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let entries = match decode_snapshot::<V>(&bytes) {
+        Ok(e) => e,
+        Err(e) => {
+            log_warn!(
+                "legacy cache snapshot {} unreadable ({e:#}); discarding it and \
+                 starting a fresh journal store",
+                path.display()
+            );
+            fs::remove_file(path)?;
+            return Ok(true);
+        }
+    };
+    let n = entries.len();
+    // Build the full replacement store first; only then remove the legacy
+    // file and swap the directory in. A crash before the remove leaves the
+    // legacy file authoritative (stale tmp cleaned next boot); a crash
+    // between remove and rename is resumed above.
+    let _ = fs::remove_dir_all(&tmp_dir);
+    write_fresh_store(&tmp_dir, entries, shards, workers)?;
+    fs::remove_file(path)?;
+    fs::rename(&tmp_dir, path)
+        .with_context(|| format!("swapping migrated store into {}", path.display()))?;
+    log_info!(
+        "migrated legacy cache snapshot {} ({n} entries) to a journal store",
+        path.display()
+    );
+    Ok(true)
 }
 
 #[cfg(test)]
@@ -290,8 +1390,51 @@ mod tests {
         std::env::temp_dir().join(format!("dippm-persist-{}-{name}", std::process::id()))
     }
 
+    fn tmp_store(name: &str) -> PathBuf {
+        let dir = tmp_path(name);
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn upsert(key: u128, v: u32) -> Delta<u32> {
+        Delta {
+            key,
+            kind: DeltaKind::Upsert(v, Duration::ZERO),
+        }
+    }
+
+    fn remove(key: u128) -> Delta<u32> {
+        Delta {
+            key,
+            kind: DeltaKind::Remove,
+        }
+    }
+
+    /// Fold a boot load into a sorted (key, value) list.
+    fn folded(boot: &BootLoad<u32>) -> Vec<(u128, u32)> {
+        let mut m = std::collections::HashMap::new();
+        for (k, v, _) in &boot.base {
+            m.insert(*k, *v);
+        }
+        for d in &boot.replay {
+            match &d.kind {
+                DeltaKind::Upsert(v, _) => {
+                    m.insert(d.key, *v);
+                }
+                DeltaKind::Remove => {
+                    m.remove(&d.key);
+                }
+            }
+        }
+        let mut out: Vec<_> = m.into_iter().collect();
+        out.sort_unstable();
+        out
+    }
+
+    // --- legacy snapshot codec (still the migration source) ---------------
+
     #[test]
-    fn roundtrip_save_load_hits() {
+    fn legacy_roundtrip_save_load_hits() {
         let cache: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig::default());
         for i in 0..50 {
             cache.insert(key(i), i as u32);
@@ -312,20 +1455,11 @@ mod tests {
     }
 
     #[test]
-    fn empty_cache_roundtrips() {
-        let cache: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig::default());
-        let (bytes, n) = encode_snapshot(&cache);
-        assert_eq!(n, 0);
-        assert!(decode_snapshot::<u32>(&bytes).unwrap().is_empty());
-    }
-
-    #[test]
-    fn corrupted_byte_is_rejected() {
+    fn legacy_corrupted_byte_is_rejected() {
         let cache: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig::default());
         cache.insert(key(1), 11);
         cache.insert(key(2), 22);
         let (mut bytes, _) = encode_snapshot(&cache);
-        // Flip one bit in the middle of the entry region.
         let mid = HEADER_LEN + 5;
         bytes[mid] ^= 0x40;
         let err = decode_snapshot::<u32>(&bytes).unwrap_err();
@@ -333,7 +1467,7 @@ mod tests {
     }
 
     #[test]
-    fn truncation_is_rejected() {
+    fn legacy_truncation_is_rejected() {
         let cache: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig::default());
         for i in 0..10 {
             cache.insert(key(i), i as u32);
@@ -347,58 +1481,228 @@ mod tests {
         }
     }
 
+    // --- journal store -----------------------------------------------------
+
     #[test]
-    fn bad_magic_and_version_are_rejected() {
-        let cache: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig::default());
-        cache.insert(key(1), 1);
-        let (bytes, _) = encode_snapshot(&cache);
+    fn fresh_store_boots_empty_and_roundtrips_appends() {
+        let dir = tmp_store("fresh");
+        let cfg = PersistConfig::at(&dir);
+        let (store, boot) = JournalStore::<u32>::open(&cfg).unwrap();
+        assert!(boot.base.is_empty());
+        assert!(boot.replay.is_empty());
+        assert!(!boot.report.recovered_previous_manifest);
 
-        let mut wrong_magic = bytes.clone();
-        wrong_magic[0] = b'X';
-        // Re-seal so only the magic (not the checksum) is at fault.
-        let n = wrong_magic.len() - CHECKSUM_LEN;
-        let digest = checksum(&wrong_magic[..n]).to_le_bytes();
-        wrong_magic[n..].copy_from_slice(&digest);
-        let err = decode_snapshot::<u32>(&wrong_magic).unwrap_err();
-        assert!(format!("{err:#}").contains("magic"), "{err:#}");
+        let r = store
+            .append(vec![upsert(1, 10), upsert(2, 20), remove(1), upsert(3, 30)])
+            .unwrap();
+        assert_eq!(r.records, 4);
+        assert!(r.bytes > 0);
+        drop(store);
 
-        let mut wrong_version = bytes;
-        wrong_version[8] = 99;
-        let n = wrong_version.len() - CHECKSUM_LEN;
-        let digest = checksum(&wrong_version[..n]).to_le_bytes();
-        wrong_version[n..].copy_from_slice(&digest);
-        let err = decode_snapshot::<u32>(&wrong_version).unwrap_err();
-        assert!(format!("{err:#}").contains("version"), "{err:#}");
+        let (_store, boot) = JournalStore::<u32>::open(&cfg).unwrap();
+        assert_eq!(boot.report.replayed_records, 4);
+        assert_eq!(boot.report.torn_tail_drops, 0);
+        assert_eq!(folded(&boot), vec![(2, 20), (3, 30)]);
+        let _ = fs::remove_dir_all(&dir);
     }
 
     #[test]
-    fn missing_file_is_an_error_not_a_panic() {
-        let cache: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig::default());
-        assert!(load_snapshot(&tmp_path("never-written.bin"), &cache).is_err());
+    fn compaction_folds_journal_and_survives_reboot() {
+        let dir = tmp_store("compact");
+        let cfg = PersistConfig::at(&dir);
+        let (store, _) = JournalStore::<u32>::open(&cfg).unwrap();
+        store.append(vec![upsert(1, 10), upsert(2, 20)]).unwrap();
+        let entries = vec![
+            (1u128, 10u32, Duration::ZERO),
+            (2u128, 20u32, Duration::from_millis(5)),
+        ];
+        let report = store.compact(entries, 4).unwrap();
+        assert_eq!(report.entries, 2);
+        assert_eq!(report.journal_records_folded, 2);
+        assert_eq!(store.stats().journal_records, 0);
+
+        // Post-compaction appends land in the new generation.
+        store.append(vec![upsert(3, 30)]).unwrap();
+        drop(store);
+        let (store, boot) = JournalStore::<u32>::open(&cfg).unwrap();
+        assert_eq!(boot.report.base_entries, 2);
+        assert_eq!(boot.report.replayed_records, 1);
+        assert_eq!(folded(&boot), vec![(1, 10), (2, 20), (3, 30)]);
+        assert_eq!(store.generation(), report.generation);
+        let _ = fs::remove_dir_all(&dir);
     }
 
     #[test]
-    fn save_overwrites_atomically() {
-        let path = tmp_path("rotate.bin");
+    fn torn_tail_is_truncated_not_fatal() {
+        let dir = tmp_store("torn");
+        let cfg = PersistConfig::at(&dir);
+        let (store, _) = JournalStore::<u32>::open(&cfg).unwrap();
+        store.append(vec![upsert(7, 70)]).unwrap();
+        drop(store);
+        // Append garbage half-record bytes to one journal file.
+        let j = list_journals(&dir, 1).pop().expect("journal exists");
+        let mut bytes = fs::read(&j).unwrap();
+        let clean_len = bytes.len();
+        bytes.extend_from_slice(&[0x55; 7]); // shorter than a record header
+        fs::write(&j, &bytes).unwrap();
+
+        let (_store, boot) = JournalStore::<u32>::open(&cfg).unwrap();
+        assert_eq!(boot.report.torn_tail_drops, 1);
+        assert_eq!(folded(&boot), vec![(7, 70)]);
+        // Repair truncated the file back to the clean prefix.
+        assert_eq!(fs::metadata(&j).unwrap().len() as usize, clean_len);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_manifest_falls_back_one_generation() {
+        let dir = tmp_store("manifest-fallback");
+        let cfg = PersistConfig::at(&dir);
+        let (store, _) = JournalStore::<u32>::open(&cfg).unwrap();
+        store.append(vec![upsert(1, 10)]).unwrap();
+        store
+            .compact(vec![(1u128, 10u32, Duration::ZERO)], 2)
+            .unwrap();
+        drop(store);
+        // Simulate the mid-swap crash window: MANIFEST gone, .prev present.
+        let m = dir.join("MANIFEST");
+        fs::rename(&m, dir.join("MANIFEST.prev")).unwrap();
+
+        let (_store, boot) = JournalStore::<u32>::open(&cfg).unwrap();
+        assert!(boot.report.recovered_previous_manifest);
+        // One generation back = pre-compaction state = same logical content
+        // (base empty + journal replay).
+        assert_eq!(folded(&boot), vec![(1, 10)]);
+        // And the fallback was re-committed as the current manifest.
+        assert!(m.exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unencodable_upsert_becomes_remove() {
+        // Option<u32> with None refusing encoding.
+        impl SnapshotValue for Option<u32> {
+            fn snapshot_encode(&self) -> Option<Vec<u8>> {
+                self.map(|v| v.to_le_bytes().to_vec())
+            }
+            fn snapshot_decode(bytes: &[u8]) -> Result<Option<u32>> {
+                Ok(Some(u32::snapshot_decode(bytes)?))
+            }
+        }
+        let dir = tmp_store("unencodable");
+        let cfg = PersistConfig::at(&dir);
+        let (store, _) = JournalStore::<Option<u32>>::open(&cfg).unwrap();
+        store
+            .append(vec![
+                Delta { key: 1, kind: DeltaKind::Upsert(Some(10), Duration::ZERO) },
+                Delta { key: 1, kind: DeltaKind::Upsert(None, Duration::ZERO) },
+            ])
+            .unwrap();
+        drop(store);
+        let (_store, boot) = JournalStore::<Option<u32>>::open(&cfg).unwrap();
+        // The None upsert journaled as a remove: key 1 is gone.
+        let mut live = std::collections::HashMap::new();
+        for (k, v, _) in &boot.base {
+            live.insert(*k, *v);
+        }
+        for d in &boot.replay {
+            match &d.kind {
+                DeltaKind::Upsert(v, _) => {
+                    live.insert(d.key, *v);
+                }
+                DeltaKind::Remove => {
+                    live.remove(&d.key);
+                }
+            }
+        }
+        assert!(live.is_empty(), "{live:?}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn should_compact_thresholds() {
+        let dir = tmp_store("thresholds");
+        let mut cfg = PersistConfig::at(&dir);
+        cfg.compact_max_journal_bytes = 200;
+        cfg.compact_min_records = 2;
+        cfg.compact_dead_ratio = 0.5;
+        let (store, _) = JournalStore::<u32>::open(&cfg).unwrap();
+        assert!(!store.should_compact());
+        store.append(vec![upsert(1, 1)]).unwrap();
+        // 1 record < min_records and < 200 bytes.
+        assert!(!store.should_compact());
+        store.append(vec![upsert(2, 2), upsert(3, 3)]).unwrap();
+        // 3 records, base 0 => dead ratio 1.0 >= 0.5 and records >= 2.
+        assert!(store.should_compact());
+        store
+            .compact(
+                (1..=3u128).map(|k| (k, k as u32, Duration::ZERO)).collect(),
+                2,
+            )
+            .unwrap();
+        assert!(!store.should_compact());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn read_store_is_non_mutating() {
+        let dir = tmp_store("readonly");
+        let cfg = PersistConfig::at(&dir);
+        let (store, _) = JournalStore::<u32>::open(&cfg).unwrap();
+        store.append(vec![upsert(4, 40)]).unwrap();
+        drop(store);
+        let j = list_journals(&dir, 1).pop().unwrap();
+        let mut bytes = fs::read(&j).unwrap();
+        bytes.extend_from_slice(&[9u8; 3]); // torn tail
+        fs::write(&j, &bytes).unwrap();
+        let before = fs::metadata(&j).unwrap().len();
+
+        let boot = read_store::<u32>(&dir).unwrap();
+        assert_eq!(folded(&boot), vec![(4, 40)]);
+        assert_eq!(boot.report.torn_tail_drops, 1);
+        // No repair happened.
+        assert_eq!(fs::metadata(&j).unwrap().len(), before);
+        assert!(read_store::<u32>(&tmp_path("not-a-store")).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_migration_replaces_file_with_store() {
+        let path = tmp_store("migrate");
         let cache: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig::default());
-        cache.insert(key(1), 1);
+        cache.insert(key(1), 11);
+        cache.insert(key(2), 22);
         save_snapshot(&path, &cache).unwrap();
-        cache.insert(key(2), 2);
-        let second = save_snapshot(&path, &cache).unwrap();
-        assert_eq!(second.entries, 2);
-        let fresh: ShardedLruCache<u32> = ShardedLruCache::new(&CacheConfig::default());
-        assert_eq!(load_snapshot(&path, &fresh).unwrap().entries, 2);
-        // No temp droppings left behind.
-        let dir = path.parent().unwrap();
-        let leftovers: Vec<_> = fs::read_dir(dir)
-            .unwrap()
-            .filter_map(|e| e.ok())
-            .map(|e| e.file_name().to_string_lossy().into_owned())
-            .filter(|n| {
-                n.contains(&format!("dippm-persist-{}-rotate.bin.tmp", std::process::id()))
-            })
-            .collect();
-        assert!(leftovers.is_empty(), "{leftovers:?}");
-        let _ = fs::remove_file(&path);
+        assert!(path.is_file());
+
+        assert!(migrate_legacy_snapshot::<u32>(&path, 4, 2).unwrap());
+        assert!(path.is_dir(), "file replaced by a store directory");
+        let boot = read_store::<u32>(&path).unwrap();
+        assert_eq!(folded(&boot).len(), 2);
+        // Nothing to migrate the second time.
+        assert!(!migrate_legacy_snapshot::<u32>(&path, 4, 2).unwrap());
+        let _ = fs::remove_dir_all(&path);
+    }
+
+    #[test]
+    fn interrupted_migration_swap_is_resumed() {
+        let path = tmp_store("migrate-resume");
+        // Simulate a crash between remove_file(legacy) and rename(tmp):
+        // only the finished tmp store exists.
+        let file = path.file_name().unwrap().to_string_lossy().into_owned();
+        let tmp_dir = path.with_file_name(format!("{file}.migrate-tmp"));
+        let _ = fs::remove_dir_all(&tmp_dir);
+        write_fresh_store(
+            &tmp_dir,
+            vec![(5u128, 55u32, Duration::ZERO)],
+            2,
+            2,
+        )
+        .unwrap();
+        assert!(migrate_legacy_snapshot::<u32>(&path, 2, 2).unwrap());
+        assert!(path.is_dir() && !tmp_dir.exists());
+        let boot = read_store::<u32>(&path).unwrap();
+        assert_eq!(folded(&boot), vec![(5, 55)]);
+        let _ = fs::remove_dir_all(&path);
     }
 }

@@ -7,11 +7,14 @@
 //!
 //! Besides model-prediction requests, the protocol carries admin commands
 //! as `{"cmd": "..."}` lines: `cache_stats` reports the prediction cache's
-//! hit/miss/eviction/warm-start counters and the batcher's fill metrics;
-//! `cache_save` / `cache_load` rotate a disk snapshot out of / into the
-//! live cache (optional `"path"`, defaulting to the server's
-//! `--cache-file`).
+//! hit/miss/eviction counters, the batcher's fill metrics and the
+//! persistence counters (journal appends, compactions, replay/torn-tail
+//! recovery stats — always present, even on a cold boot); `cache_save` /
+//! `cache_load` flush or read a journal store (optional `"path"`,
+//! defaulting to the server's `--cache-file`); `cache_compact` forces a
+//! sharded parallel compaction of the configured store.
 
+use crate::cache::persist::CompactReport;
 use crate::cache::{LoadReport, SaveReport, Target};
 use crate::frontends::{self, Framework};
 use crate::ir::Graph;
@@ -116,7 +119,18 @@ pub fn cache_stats_response(m: &Metrics) -> String {
     o.insert("entries", m.cache_entries as usize);
     o.insert("capacity", m.cache_capacity as usize);
     o.insert("negative_hits", m.negative_hits as usize);
+    // Persistence fields are always reported, cold boot included (a cold
+    // boot is warm_start_entries 0 + persist counters at zero, not an
+    // absent field the client has to special-case).
+    o.insert("persist_enabled", m.persist_enabled);
     o.insert("warm_start_entries", m.warm_start_entries as usize);
+    o.insert("snapshot_age_s", m.persist_age_s);
+    o.insert("journal_appends", m.journal_appends as usize);
+    o.insert("compactions", m.compactions as usize);
+    o.insert("replayed_records", m.replayed_records as usize);
+    o.insert("torn_tail_drops", m.torn_tail_drops as usize);
+    o.insert("journal_bytes", m.journal_bytes as usize);
+    o.insert("journal_generation", m.journal_generation as usize);
     o.insert("requests", m.requests as usize);
     o.insert("batches", m.batches as usize);
     o.insert("mean_batch_fill", m.mean_batch_fill());
@@ -139,6 +153,19 @@ pub fn cache_save_response(r: &SaveReport) -> String {
     o.insert("path", r.path.display().to_string());
     o.insert("entries", r.entries);
     o.insert("bytes", r.bytes);
+    Json::Obj(o).to_string()
+}
+
+/// Serialize the `cache_compact` response.
+pub fn cache_compact_response(r: &CompactReport) -> String {
+    let mut o = JsonObj::new();
+    o.insert("ok", true);
+    o.insert("cmd", "cache_compact");
+    o.insert("generation", r.generation as usize);
+    o.insert("shards", r.shards);
+    o.insert("entries", r.entries);
+    o.insert("bytes", r.bytes);
+    o.insert("journal_records_folded", r.journal_records_folded as usize);
     Json::Obj(o).to_string()
 }
 
@@ -208,6 +235,14 @@ mod tests {
             analyses_reused: 4,
             priority_admissions: 3,
             executor_threads: 2,
+            persist_enabled: true,
+            persist_age_s: 1.5,
+            journal_appends: 12,
+            compactions: 2,
+            replayed_records: 7,
+            torn_tail_drops: 1,
+            journal_bytes: 4096,
+            journal_generation: 3,
             ..Default::default()
         };
         let s = cache_stats_response(&m);
@@ -223,6 +258,49 @@ mod tests {
         assert_eq!(v.path(&["analyses_reused"]).as_usize(), Some(4));
         assert_eq!(v.path(&["priority_admissions"]).as_usize(), Some(3));
         assert_eq!(v.path(&["executor_threads"]).as_usize(), Some(2));
+        assert_eq!(v.path(&["persist_enabled"]).as_bool(), Some(true));
+        assert!((v.path(&["snapshot_age_s"]).as_f64().unwrap() - 1.5).abs() < 1e-9);
+        assert_eq!(v.path(&["journal_appends"]).as_usize(), Some(12));
+        assert_eq!(v.path(&["compactions"]).as_usize(), Some(2));
+        assert_eq!(v.path(&["replayed_records"]).as_usize(), Some(7));
+        assert_eq!(v.path(&["torn_tail_drops"]).as_usize(), Some(1));
+        assert_eq!(v.path(&["journal_bytes"]).as_usize(), Some(4096));
+        assert_eq!(v.path(&["journal_generation"]).as_usize(), Some(3));
+    }
+
+    #[test]
+    fn cache_stats_reports_persistence_fields_on_cold_boot_too() {
+        // A cold boot (no store, nothing replayed) must still carry every
+        // persistence field so clients never special-case their absence.
+        let s = cache_stats_response(&crate::coordinator::Metrics {
+            persist_age_s: -1.0,
+            ..Default::default()
+        });
+        let v = Json::parse(&s).unwrap();
+        assert_eq!(v.path(&["persist_enabled"]).as_bool(), Some(false));
+        assert_eq!(v.path(&["warm_start_entries"]).as_usize(), Some(0));
+        assert!((v.path(&["snapshot_age_s"]).as_f64().unwrap() + 1.0).abs() < 1e-9);
+        assert_eq!(v.path(&["journal_appends"]).as_usize(), Some(0));
+        assert_eq!(v.path(&["compactions"]).as_usize(), Some(0));
+        assert_eq!(v.path(&["replayed_records"]).as_usize(), Some(0));
+        assert_eq!(v.path(&["torn_tail_drops"]).as_usize(), Some(0));
+    }
+
+    #[test]
+    fn cache_compact_response_serializes() {
+        let s = cache_compact_response(&CompactReport {
+            generation: 4,
+            shards: 8,
+            entries: 123,
+            bytes: 9000,
+            journal_records_folded: 55,
+        });
+        let v = Json::parse(&s).unwrap();
+        assert_eq!(v.path(&["ok"]).as_bool(), Some(true));
+        assert_eq!(v.path(&["cmd"]).as_str(), Some("cache_compact"));
+        assert_eq!(v.path(&["generation"]).as_usize(), Some(4));
+        assert_eq!(v.path(&["entries"]).as_usize(), Some(123));
+        assert_eq!(v.path(&["journal_records_folded"]).as_usize(), Some(55));
     }
 
     #[test]

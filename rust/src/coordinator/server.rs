@@ -40,14 +40,16 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::cache::persist::{JournalStore, PersistConfig};
 use crate::cache::{
     persist, CacheConfig, CacheKey, CacheStats, Role, ShardedLruCache, SingleFlight,
-    SnapshotValue, Target,
+    SnapshotValue, Target, DELTA_BUFFER_CAP,
 };
 use crate::ir::Graph;
 use crate::mig;
 use crate::runtime::ParamStore;
 use crate::simulator::{CostSweep, GraphAnalysis};
+use crate::util::threadpool::ThreadPool;
 use crate::{log_info, log_warn};
 
 use super::backend::{Backend, BackendFactory, PjrtBackend, PredictRequest, SimBackend};
@@ -128,9 +130,26 @@ pub struct Metrics {
     /// backend's earlier per-graph failure was replayed without the graph
     /// ever reaching the executor again.
     pub negative_hits: u64,
-    /// Entries preloaded from a disk snapshot at boot (plus any explicit
+    /// Entries preloaded from the disk store at boot (plus any explicit
     /// `cache_load` commands).
     pub warm_start_entries: u64,
+    /// Disk persistence (`--cache-file`) is active.
+    pub persist_enabled: bool,
+    /// Seconds since durable state was last written (journal flush or
+    /// compaction); `-1` when persistence is off or nothing was written yet.
+    pub persist_age_s: f64,
+    /// Journal records appended over the server's lifetime.
+    pub journal_appends: u64,
+    /// Background / on-demand compactions committed.
+    pub compactions: u64,
+    /// Journal records replayed at boot (warm recovery).
+    pub replayed_records: u64,
+    /// Torn journal tails truncated at boot (crash evidence, recovered).
+    pub torn_tail_drops: u64,
+    /// Bytes currently pending in journal files (dead after compaction).
+    pub journal_bytes: u64,
+    /// Current store generation.
+    pub journal_generation: u64,
     /// End-to-end latencies (seconds) of backend-served requests (leaders
     /// and coalesced followers), bounded ring. Cache hits are not recorded
     /// here: the hit path is lock-free by design and its latency is the
@@ -398,10 +417,109 @@ pub struct Coordinator {
     flight: Option<Arc<SingleFlight<Prediction>>>,
     default_target: Target,
     snapshot_path: Option<PathBuf>,
+    /// The journal/manifest/generation store behind `--cache-file`.
+    store: Option<Arc<JournalStore<CacheValue>>>,
+    /// When durable state was last written (flush/compaction/boot).
+    last_persist: Arc<Mutex<Option<Instant>>>,
     stop: Arc<AtomicBool>,
     handles: Vec<JoinHandle<()>>,
     snap_signal: Option<Arc<SnapSignal>>,
     snap_handle: Option<JoinHandle<()>>,
+}
+
+/// Open (or migrate, or recover) the persistence store and warm the cache
+/// from it. Returns the store and the number of warm-started entries.
+/// Every failure mode inside is a logged cold start at the caller, never a
+/// boot failure.
+fn open_persistence(
+    path: &Path,
+    cfg: &CacheConfig,
+    cache: &ShardedLruCache<CacheValue>,
+) -> Result<(JournalStore<CacheValue>, u64)> {
+    let workers = ThreadPool::default_parallelism();
+    // A PR 2-era single-file snapshot at this path becomes a store dir.
+    let migrated = persist::migrate_legacy_snapshot::<CacheValue>(path, cfg.shards.max(1), workers)?;
+    let pcfg = PersistConfig {
+        shards: cfg.shards.max(1),
+        compact_max_journal_bytes: cfg.compact_max_journal_bytes,
+        compact_dead_ratio: cfg.compact_dead_ratio,
+        ..PersistConfig::at(path)
+    };
+    let (store, boot) = JournalStore::open(&pcfg)?;
+    let report = boot.report.clone();
+    // A migrated legacy snapshot was rewritten as the store's base, so it
+    // arrives through `boot.base` like any other generation.
+    let (base_loaded, base_expired) = cache.preload(boot.base);
+    let (replayed, replay_expired) = cache.replay(boot.replay);
+    let expired = base_expired + replay_expired;
+    let warm = cache.len() as u64;
+    log_info!(
+        "cache warm start: {} entries from {}{} (generation {}, {} base + {} replayed \
+         journal records, {} expired, {} torn tails truncated{})",
+        warm,
+        path.display(),
+        if migrated { " [migrated legacy snapshot]" } else { "" },
+        report.generation,
+        base_loaded,
+        replayed,
+        expired,
+        report.torn_tail_drops,
+        if report.recovered_previous_manifest {
+            "; recovered via MANIFEST.prev"
+        } else {
+            ""
+        }
+    );
+    // Only now start capturing deltas: recovery must not re-journal itself.
+    cache.enable_journal(DELTA_BUFFER_CAP);
+    if expired > 0 {
+        // TTL-expired records were dropped from memory but still sit in
+        // the on-disk base/journal; rebase immediately so they cannot
+        // resurrect on the next boot (and so surviving entries' ages
+        // re-anchor to their backdated insertion).
+        store.compact(cache.export(), workers)?;
+        log_info!("cache store compacted at boot ({expired} expired records dropped)");
+    }
+    Ok((store, warm))
+}
+
+/// Drain the cache's pending deltas into the store; escalate to a full
+/// parallel compaction when the delta buffer overflowed or the store's
+/// thresholds say so. The persistence hot loop (timer, shutdown,
+/// `cache_save`).
+fn flush_persistence(
+    cache: &ShardedLruCache<CacheValue>,
+    store: &JournalStore<CacheValue>,
+    force_compact: bool,
+) -> Result<()> {
+    // One flusher at a time: a concurrent timer flush and TCP cache_save
+    // must not interleave one key's drained updates out of order.
+    let _flush = store.flush_guard();
+    let (deltas, overflowed) = cache.drain_deltas();
+    let outcome = (|| -> Result<()> {
+        if overflowed || force_compact {
+            // The incremental stream is incomplete (or a rewrite was asked
+            // for): rebase from a full export. Drained deltas are
+            // superseded by the export.
+            store.compact(cache.export(), ThreadPool::default_parallelism())?;
+            return Ok(());
+        }
+        if !deltas.is_empty() {
+            store.append(deltas)?;
+        }
+        if store.should_compact() {
+            store.compact(cache.export(), ThreadPool::default_parallelism())?;
+        }
+        Ok(())
+    })();
+    if outcome.is_err() {
+        // The drained batch (possibly containing removes) may be partially
+        // or wholly unwritten: the incremental stream now has a gap, so
+        // the next flush must rebase from a full export instead of
+        // appending around it.
+        cache.mark_journal_incomplete();
+    }
+    outcome
 }
 
 impl Coordinator {
@@ -446,31 +564,33 @@ impl Coordinator {
         let flight = (opts.cache.enabled && opts.cache.single_flight)
             .then(|| Arc::new(SingleFlight::new()));
 
-        // Warm start: preload the disk snapshot if one exists. A rejected
-        // snapshot (corrupted, truncated, wrong version) is a logged cold
-        // start, never a startup failure.
+        // Warm start: recover the journal store if configured. Torn tails
+        // and a corrupt manifest are handled inside (truncate / fall back
+        // one generation); anything unrecoverable is a logged cold start,
+        // never a startup failure.
         let mut warm = 0u64;
+        let mut store: Option<Arc<JournalStore<CacheValue>>> = None;
         if let (Some(cache), Some(path)) = (&cache, &opts.cache.snapshot_path) {
-            if path.exists() {
-                match persist::load_snapshot(path, cache.as_ref()) {
-                    Ok(r) => {
-                        warm = r.entries as u64;
-                        log_info!(
-                            "cache warm start: {} entries from {} ({} expired)",
-                            r.entries,
-                            path.display(),
-                            r.expired
-                        );
-                    }
-                    Err(e) => {
-                        log_warn!(
-                            "cache snapshot {} rejected ({e:#}); cold start",
-                            path.display()
-                        );
-                    }
+            match open_persistence(path, &opts.cache, cache.as_ref()) {
+                Ok((s, w)) => {
+                    warm = w;
+                    store = Some(Arc::new(s));
+                }
+                Err(e) => {
+                    // open_persistence may have enabled capture (or warm-
+                    // loaded entries) before failing; with no store to
+                    // drain into, capture must not keep accumulating.
+                    cache.disable_journal();
+                    log_warn!(
+                        "cache store {} unavailable ({e:#}); persistence off \
+                         ({} entries stay in memory only)",
+                        path.display(),
+                        cache.len()
+                    );
                 }
             }
         }
+        let last_persist = Arc::new(Mutex::new(store.as_ref().map(|_| Instant::now())));
 
         let threads = opts.executor_threads.max(1);
         metrics.lock().unwrap().executor_threads = threads as u64;
@@ -531,12 +651,14 @@ impl Coordinator {
             return Err(e);
         }
 
-        // Periodic snapshot rotation (atomic rename; see cache::persist).
+        // Periodic journal flush + background compaction (see
+        // cache::persist for the crash-safety contract).
         let mut snap_signal = None;
-        let snap_handle = match (&cache, &opts.cache.snapshot_path, opts.cache.snapshot_every) {
-            (Some(cache), Some(path), Some(every)) if every > Duration::ZERO => {
+        let snap_handle = match (&cache, &store, opts.cache.snapshot_every) {
+            (Some(cache), Some(store), Some(every)) if every > Duration::ZERO => {
                 let cache = cache.clone();
-                let path = path.clone();
+                let store = store.clone();
+                let last = last_persist.clone();
                 let signal = Arc::new(SnapSignal {
                     stopped: Mutex::new(false),
                     cv: Condvar::new(),
@@ -544,9 +666,9 @@ impl Coordinator {
                 snap_signal = Some(signal.clone());
                 Some(
                     std::thread::Builder::new()
-                        .name("dippm-cache-snapshot".into())
-                        .spawn(move || snapshot_main(cache, path, every, signal))
-                        .expect("spawn snapshot thread"),
+                        .name("dippm-cache-persist".into())
+                        .spawn(move || persist_main(cache, store, every, signal, last))
+                        .expect("spawn persistence thread"),
                 )
             }
             _ => None,
@@ -563,6 +685,8 @@ impl Coordinator {
             flight,
             default_target: opts.target,
             snapshot_path: opts.cache.snapshot_path,
+            store,
+            last_persist,
             stop,
             handles,
             snap_signal,
@@ -657,30 +781,90 @@ impl Coordinator {
             .map_err(|_| anyhow!("coordinator shut down"))?
     }
 
-    /// Snapshot the cache to `path`, or to the configured `--cache-file`
-    /// when `None`. Errors when the cache is disabled or no path resolves.
+    fn mark_persisted(&self) {
+        *self.last_persist.lock().unwrap() = Some(Instant::now());
+    }
+
+    /// Persist the cache durably. With `path` = `None`, flush pending
+    /// journal deltas to the configured store (compacting if thresholds
+    /// say so); with an explicit `path`, write a fresh standalone store
+    /// directory there from a full export. Errors when the cache is
+    /// disabled or no target resolves.
     pub fn save_cache(&self, path: Option<&str>) -> Result<persist::SaveReport> {
         let cache = self
             .cache
             .as_ref()
             .ok_or_else(|| anyhow!("cache disabled (--no-cache)"))?;
-        let path = self.resolve_snapshot_path(path)?;
-        persist::save_snapshot(&path, cache.as_ref())
+        match path {
+            None => {
+                let store = self
+                    .store
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("no cache store (start with --cache-file or pass a path)"))?;
+                flush_persistence(cache, store, false)?;
+                self.mark_persisted();
+                let s = store.stats();
+                Ok(persist::SaveReport {
+                    path: store.dir().to_path_buf(),
+                    entries: cache.len(),
+                    bytes: s.journal_bytes as usize,
+                })
+            }
+            Some(p) => {
+                let dir = Path::new(p);
+                let report = persist::write_fresh_store(
+                    dir,
+                    cache.export(),
+                    8,
+                    ThreadPool::default_parallelism(),
+                )?;
+                Ok(report)
+            }
+        }
     }
 
-    /// Load a snapshot from `path` (or the configured `--cache-file`) into
+    /// Load a store from `path` (or the configured `--cache-file`) into
     /// the live cache, counting restored entries as warm starts. Errors
-    /// propagate — an explicit load of a corrupted file should be visible,
-    /// unlike the tolerant preload at boot.
+    /// propagate — an explicit load of an unreadable store should be
+    /// visible, unlike the tolerant recovery at boot.
     pub fn load_cache(&self, path: Option<&str>) -> Result<persist::LoadReport> {
         let cache = self
             .cache
             .as_ref()
             .ok_or_else(|| anyhow!("cache disabled (--no-cache)"))?;
         let path = self.resolve_snapshot_path(path)?;
-        let report = persist::load_snapshot(&path, cache.as_ref())?;
-        self.warm_start
-            .fetch_add(report.entries as u64, Ordering::Relaxed);
+        let boot = persist::read_store::<CacheValue>(&path)?;
+        let (base_loaded, base_expired) = cache.preload(boot.base);
+        let (replayed, replay_expired) = cache.replay(boot.replay);
+        let entries = base_loaded + replayed;
+        self.warm_start.fetch_add(entries as u64, Ordering::Relaxed);
+        Ok(persist::LoadReport {
+            path,
+            entries,
+            expired: base_expired + replay_expired,
+        })
+    }
+
+    /// Force a sharded parallel compaction of the configured store: fold
+    /// base + journal into a fresh generation and swap the manifest. The
+    /// `cache_compact` TCP command.
+    pub fn compact_cache(&self) -> Result<persist::CompactReport> {
+        let cache = self
+            .cache
+            .as_ref()
+            .ok_or_else(|| anyhow!("cache disabled (--no-cache)"))?;
+        let store = self
+            .store
+            .as_ref()
+            .ok_or_else(|| anyhow!("no cache store (start with --cache-file)"))?;
+        // Discard pending deltas (superseded by the full export), rebase.
+        // Same single-flusher discipline as flush_persistence.
+        let report = {
+            let _flush = store.flush_guard();
+            let _ = cache.drain_deltas();
+            store.compact(cache.export(), ThreadPool::default_parallelism())?
+        };
+        self.mark_persisted();
         Ok(report)
     }
 
@@ -697,6 +881,26 @@ impl Coordinator {
         m.negative_hits = self.negative_hits.load(Ordering::Relaxed);
         m.analyses_computed = self.analyses.load(Ordering::Relaxed);
         m.warm_start_entries = self.warm_start.load(Ordering::Relaxed);
+        // Persistence fields are always reported — a cold boot shows
+        // zeros/-1, not absent fields.
+        m.persist_enabled = self.store.is_some();
+        m.persist_age_s = self
+            .last_persist
+            .lock()
+            .unwrap()
+            .map(|t| t.elapsed().as_secs_f64())
+            .unwrap_or(-1.0);
+        if let Some(store) = &self.store {
+            let s = store.stats();
+            m.journal_appends = s.appended_records;
+            m.compactions = s.compactions;
+            m.replayed_records = s.replayed_records;
+            m.torn_tail_drops = s.torn_tail_drops;
+            m.journal_bytes = s.journal_bytes;
+            m.journal_generation = s.generation;
+        } else {
+            m.persist_age_s = -1.0;
+        }
         if let Some(cache) = &self.cache {
             let s = cache.stats();
             m.cache_enabled = true;
@@ -734,28 +938,32 @@ impl Drop for Coordinator {
         if let Some(h) = self.snap_handle.take() {
             let _ = h.join();
         }
-        // Graceful-shutdown hook: final snapshot so the next boot is hot.
-        if let (Some(cache), Some(path)) = (&self.cache, &self.snapshot_path) {
-            match persist::save_snapshot(path, cache.as_ref()) {
-                Ok(r) => log_info!(
-                    "cache snapshot on shutdown: {} entries -> {}",
-                    r.entries,
-                    path.display()
+        // Graceful-shutdown hook: flush the journal tail so the next boot
+        // recovers everything without a full rewrite.
+        if let (Some(cache), Some(store)) = (&self.cache, &self.store) {
+            match flush_persistence(cache, store, false) {
+                Ok(()) => log_info!(
+                    "cache journal flushed on shutdown ({} entries live) -> {}",
+                    cache.len(),
+                    store.dir().display()
                 ),
-                Err(e) => log_warn!("cache snapshot on shutdown failed: {e:#}"),
+                Err(e) => log_warn!("cache journal flush on shutdown failed: {e:#}"),
             }
         }
     }
 }
 
 /// Timer loop for `--cache-snapshot-every-s`: sleeps on the condvar until
-/// the next deadline (one wakeup per interval — no polling), rotates a
-/// snapshot, repeats. Shutdown notifies the condvar for a prompt exit.
-fn snapshot_main(
+/// the next deadline (one wakeup per interval — no polling), flushes the
+/// pending journal deltas (appends, not a rewrite) and lets the background
+/// compactor fold the journal when its thresholds trip. Shutdown notifies
+/// the condvar for a prompt exit.
+fn persist_main(
     cache: Arc<ShardedLruCache<CacheValue>>,
-    path: PathBuf,
+    store: Arc<JournalStore<CacheValue>>,
     every: Duration,
     signal: Arc<SnapSignal>,
+    last_persist: Arc<Mutex<Option<Instant>>>,
 ) {
     let mut last = Instant::now();
     loop {
@@ -776,17 +984,40 @@ fn snapshot_main(
                 .unwrap();
             stopped = guard;
         }
-        // Save outside the lock so shutdown is never blocked on disk IO.
+        // Flush outside the lock so shutdown is never blocked on disk IO.
         drop(stopped);
-        match persist::save_snapshot(&path, cache.as_ref()) {
-            Ok(r) => crate::log_debug!(
-                "cache snapshot: {} entries -> {}",
-                r.entries,
-                path.display()
-            ),
-            Err(e) => log_warn!("periodic cache snapshot failed: {e:#}"),
+        match flush_persistence(&cache, &store, false) {
+            Ok(()) => {
+                *last_persist.lock().unwrap() = Some(Instant::now());
+                let s = store.stats();
+                crate::log_debug!(
+                    "cache journal flush: generation {} ({} journal records, {} bytes)",
+                    s.generation,
+                    s.journal_records,
+                    s.journal_bytes
+                );
+            }
+            Err(e) => log_warn!("periodic cache journal flush failed: {e:#}"),
         }
         last = Instant::now();
+    }
+}
+
+/// Aging bound for cache-aware batch admission: a miss that has waited
+/// this long outranks any follower count, so every queued job makes
+/// progress even under a sustained storm of hotter keys.
+fn starvation_bound(max_wait: Duration) -> Duration {
+    (max_wait * 64).max(Duration::from_millis(250))
+}
+
+/// Cache-aware admission priority of one queued miss: its parked
+/// single-flight follower count, unless it has aged past the starvation
+/// bound — then it outranks everything.
+fn admission_priority(waited: Duration, followers: usize, bound: Duration) -> usize {
+    if waited >= bound {
+        usize::MAX
+    } else {
+        followers
     }
 }
 
@@ -837,21 +1068,17 @@ fn executor_main(
     // --- serve loop ------------------------------------------------------
     // Cache-aware admission priorities, computed only when a batch
     // overflows: one single-flight snapshot per decision (one lock, not
-    // one per queued job), with aging — a miss that has waited past the
-    // starvation bound outranks any follower count, so every queued job
-    // makes progress even under a sustained storm of hotter keys.
-    let starvation_bound = (max_wait * 64).max(Duration::from_millis(250));
+    // one per queued job), with aging — see `admission_priority`.
+    let bound = starvation_bound(max_wait);
     let priorities = |jobs: &VecDeque<Job>| -> Vec<usize> {
         let counts = flight.as_ref().map(|f| f.waiter_counts());
         jobs.iter()
             .map(|job| {
-                if job.enqueued.elapsed() >= starvation_bound {
-                    return usize::MAX; // aged: admit ahead of any hot key
-                }
-                match (&counts, job.key) {
+                let followers = match (&counts, job.key) {
                     (Some(c), Some(k)) => c.get(&k.as_u128()).copied().unwrap_or(0),
                     _ => 0,
-                }
+                };
+                admission_priority(job.enqueued.elapsed(), followers, bound)
             })
             .collect()
     };
@@ -1068,6 +1295,106 @@ mod tests {
         fn variant_tag(&self) -> &str {
             &self.graph.variant
         }
+    }
+
+    #[test]
+    fn job_queue_backpressure_blocks_push_until_pop() {
+        let q = Arc::new(JobQueue::new(1));
+        let (job, _rx0) = dummy_job(0);
+        q.push(job).map_err(|_| ()).unwrap();
+        // A second push must block until a pop frees a slot.
+        let (done_tx, done_rx) = mpsc::channel();
+        let q2 = q.clone();
+        let handle = std::thread::spawn(move || {
+            let (job, rx1) = dummy_job(1);
+            let pushed = q2.push(job).is_ok();
+            let _ = done_tx.send(pushed);
+            rx1
+        });
+        assert!(
+            done_rx.recv_timeout(Duration::from_millis(100)).is_err(),
+            "push into a full queue must block"
+        );
+        let b = q.pop_batch(1, Duration::ZERO, fifo_prio).unwrap();
+        assert_eq!(b.jobs[0].variant_tag(), "q-0");
+        assert_eq!(
+            done_rx.recv_timeout(Duration::from_secs(5)),
+            Ok(true),
+            "pop must unblock the parked push"
+        );
+        let _ = handle.join().unwrap();
+        // The unblocked job is now queued.
+        let b = q.pop_batch(1, Duration::ZERO, fifo_prio).unwrap();
+        assert_eq!(b.jobs[0].variant_tag(), "q-1");
+    }
+
+    #[test]
+    fn job_queue_close_unblocks_parked_push_with_job_back() {
+        let q = Arc::new(JobQueue::new(1));
+        let (job, _rx0) = dummy_job(0);
+        q.push(job).map_err(|_| ()).unwrap();
+        let q2 = q.clone();
+        let handle = std::thread::spawn(move || {
+            let (job, _rx1) = dummy_job(1);
+            // Blocks on the full queue; close() must hand the job back.
+            q2.push(job).is_err()
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        q.close();
+        assert!(handle.join().unwrap(), "close must bounce the parked push");
+    }
+
+    #[test]
+    fn admission_priority_is_follower_count_below_the_bound() {
+        let bound = starvation_bound(Duration::from_millis(2));
+        assert_eq!(admission_priority(Duration::ZERO, 0, bound), 0);
+        assert_eq!(admission_priority(Duration::from_millis(1), 7, bound), 7);
+        // Bound floor: 64x max_wait but never under 250ms.
+        assert_eq!(bound, Duration::from_millis(250));
+        assert_eq!(starvation_bound(Duration::from_millis(10)), Duration::from_millis(640));
+    }
+
+    #[test]
+    fn admission_priority_aged_miss_outranks_any_follower_count() {
+        let bound = starvation_bound(Duration::from_millis(2));
+        let aged = admission_priority(bound, 0, bound);
+        assert_eq!(aged, usize::MAX);
+        assert!(aged > admission_priority(Duration::ZERO, usize::MAX - 1, bound));
+    }
+
+    #[test]
+    fn job_queue_starved_job_is_admitted_ahead_of_hot_keys() {
+        // Three jobs: the first is aged past the starvation bound, the
+        // others carry huge follower counts. A 1-slot batch admits the
+        // aged one first.
+        let q = JobQueue::new(16);
+        let bound = Duration::from_millis(250);
+        for (tag, backdate) in [(0u64, bound * 2), (1, Duration::ZERO), (2, Duration::ZERO)] {
+            let (mut job, _rx) = dummy_job(tag);
+            job.enqueued = Instant::now() - backdate;
+            q.push(job).map_err(|_| ()).unwrap();
+        }
+        let prio = |jobs: &VecDeque<Job>| -> Vec<usize> {
+            jobs.iter()
+                .map(|j| {
+                    let followers = if j.variant_tag() == "q-0" { 0 } else { 1000 };
+                    admission_priority(j.enqueued.elapsed(), followers, bound)
+                })
+                .collect()
+        };
+        let b = q.pop_batch(1, Duration::ZERO, &prio).unwrap();
+        assert_eq!(b.jobs[0].variant_tag(), "q-0", "aged job must not starve");
+    }
+
+    #[test]
+    fn job_queue_partial_batch_returns_after_deadline() {
+        let q = JobQueue::new(16);
+        let (job, _rx) = dummy_job(0);
+        q.push(job).map_err(|_| ()).unwrap();
+        // max_b 8 but only one job queued: a zero deadline admits it alone.
+        let b = q.pop_batch(8, Duration::ZERO, fifo_prio).unwrap();
+        assert_eq!(b.jobs.len(), 1);
+        assert_eq!(b.jumped, 0);
     }
 
     #[test]

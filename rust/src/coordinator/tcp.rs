@@ -13,8 +13,8 @@ use crate::ir::Graph;
 use crate::log_info;
 
 use super::protocol::{
-    cache_load_response, cache_save_response, cache_stats_response, error_response, parse_cmd,
-    parse_request_value, parse_target_value,
+    cache_compact_response, cache_load_response, cache_save_response, cache_stats_response,
+    error_response, parse_cmd, parse_request_value, parse_target_value,
 };
 use super::server::Coordinator;
 use crate::util::json::{Json, JsonObj};
@@ -63,6 +63,10 @@ fn handle_connection(coordinator: &Coordinator, stream: TcpStream) -> Result<()>
                 },
                 Some("cache_load") => match coordinator.load_cache(v.path(&["path"]).as_str()) {
                     Ok(r) => cache_load_response(&r),
+                    Err(e) => error_response(&format!("{e:#}")),
+                },
+                Some("cache_compact") => match coordinator.compact_cache() {
+                    Ok(r) => cache_compact_response(&r),
                     Err(e) => error_response(&format!("{e:#}")),
                 },
                 Some(other) => error_response(&format!("unknown cmd {other:?}")),
@@ -130,9 +134,15 @@ impl Client {
         self.cache_cmd("cache_save", path)
     }
 
-    /// Ask the server to preload a snapshot into its live cache.
+    /// Ask the server to preload a store into its live cache.
     pub fn cache_load(&mut self, path: Option<&str>) -> Result<String> {
         self.cache_cmd("cache_load", path)
+    }
+
+    /// Ask the server to compact its cache store (fold journal + base into
+    /// a fresh generation, in parallel across shards).
+    pub fn cache_compact(&mut self) -> Result<String> {
+        self.cache_cmd("cache_compact", None)
     }
 
     /// Convenience: predict a graph via its native-format export.

@@ -250,7 +250,10 @@ pub fn read_dataset(r: &mut impl Read) -> io::Result<Dataset> {
             memory_mb: r_f64(r)?,
             energy_j: r_f64(r)?,
         };
-        samples.push(Sample { graph, statics, y });
+        // The binary format carries only the graph: loaded samples start
+        // without a retained analysis (the trainer falls back to the
+        // scratch featurization path).
+        samples.push(Sample { graph, statics, y, analysis: None });
     }
     Ok(Dataset {
         samples,
@@ -334,6 +337,7 @@ mod tests {
                     memory_mb: 2.0,
                     energy_j: 3.0,
                 },
+                analysis: None,
             }],
             norm: NormStats::default(),
             splits: Splits::default(),

@@ -21,6 +21,14 @@ pub struct Sample {
     pub graph: Graph,
     pub statics: [f64; normalize::N_STATICS],
     pub y: Measurement,
+    /// The one-pass analysis [`Dataset::build`] already computes for the
+    /// statics and the measurement, retained so the trainer featurizes
+    /// every epoch from cached per-node costs
+    /// (`BatchBuffers::fill_graph_analyzed`) instead of re-traversing the
+    /// graph. `None` for datasets loaded from disk (the binary format
+    /// carries only the graph; featurization falls back to the scratch
+    /// path, bit-identical by the analysis parity property tests).
+    pub analysis: Option<GraphAnalysis>,
 }
 
 /// The full dataset.
@@ -53,7 +61,12 @@ impl Dataset {
             let analysis = GraphAnalysis::of(&graph);
             let statics = analysis.statics;
             let y = sim.measure_analyzed(&analysis);
-            Sample { graph, statics, y }
+            Sample {
+                graph,
+                statics,
+                y,
+                analysis: Some(analysis),
+            }
         });
         let splits = Splits::fractions(samples.len(), 0.70, 0.15, seed);
         let norm = NormStats::fit(
@@ -144,6 +157,21 @@ mod tests {
             assert_eq!(x.y, y.y);
         }
         assert_eq!(a.splits.train, b.splits.train);
+    }
+
+    #[test]
+    fn build_retains_per_sample_analysis() {
+        let ds = small();
+        for s in &ds.samples {
+            let a = s.analysis.as_ref().expect("build must retain the analysis");
+            // The retained analysis is the one the statics came from.
+            assert_eq!(a.statics, s.statics);
+            assert_eq!(a.n_nodes, s.graph.n_nodes());
+            assert_eq!(
+                a.fingerprint,
+                crate::simulator::GraphAnalysis::of(&s.graph).fingerprint
+            );
+        }
     }
 
     #[test]

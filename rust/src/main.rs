@@ -48,7 +48,8 @@ COMMANDS
                  [--backend auto|pjrt|sim] [--executor-threads 1]
                  [--no-cache] [--no-dedup]
                  [--cache-capacity 8192] [--cache-shards 8] [--cache-ttl-s N]
-                 [--cache-file <file>] [--cache-snapshot-every-s N]
+                 [--cache-file <dir>] [--cache-snapshot-every-s N]
+                 [--cache-compact-bytes 67108864] [--cache-compact-ratio 0.5]
                  [--target-device a100[:MIG]]   (MIG: 1g.5gb|2g.10gb|3g.20gb|7g.40gb)
   cache-stats    [--addr 127.0.0.1:7401]
   mig            --model <file> [--framework auto] [--checkpoint <file>]
@@ -64,7 +65,8 @@ fn main() {
         "variant", "epochs", "lr", "max-train", "artifacts", "checkpoint",
         "split", "model", "framework", "addr", "max-wait-ms", "steps",
         "backend", "executor-threads", "cache-capacity", "cache-shards",
-        "cache-ttl-s", "cache-file", "cache-snapshot-every-s", "target-device",
+        "cache-ttl-s", "cache-file", "cache-snapshot-every-s",
+        "cache-compact-bytes", "cache-compact-ratio", "target-device",
     ]) {
         Ok(a) => a,
         Err(e) => {
@@ -133,6 +135,8 @@ fn coordinator_options(args: &Args) -> Result<CoordinatorOptions> {
         ttl: seconds_arg(args, "cache-ttl-s")?,
         snapshot_path: args.get("cache-file").map(std::path::PathBuf::from),
         snapshot_every: seconds_arg(args, "cache-snapshot-every-s")?,
+        compact_max_journal_bytes: args.get_u64("cache-compact-bytes", 64 << 20).max(1),
+        compact_dead_ratio: args.get_f64("cache-compact-ratio", 0.5).clamp(0.0, 1.0),
         ..Default::default()
     };
     Ok(CoordinatorOptions {
@@ -311,10 +315,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7401");
     let cache_desc = if opts.cache.enabled {
         let persist_desc = match (&opts.cache.snapshot_path, opts.cache.snapshot_every) {
-            (Some(p), Some(every)) => {
-                format!(", snapshots -> {} every {:.0}s", p.display(), every.as_secs_f64())
-            }
-            (Some(p), None) => format!(", snapshot -> {} on shutdown", p.display()),
+            (Some(p), Some(every)) => format!(
+                ", journal -> {} flushed every {:.0}s",
+                p.display(),
+                every.as_secs_f64()
+            ),
+            (Some(p), None) => format!(", journal -> {} flushed on shutdown", p.display()),
             _ => String::new(),
         };
         format!(

@@ -38,10 +38,19 @@ impl BatchBuffers {
     }
 
     /// Fill slot `slot` from a dataset sample (features + normalized
-    /// statics + normalized targets).
+    /// statics + normalized targets). Samples built in-process carry their
+    /// one-pass [`GraphAnalysis`]; featurization then reads the cached
+    /// per-node costs instead of re-traversing the graph every epoch.
+    /// Loaded datasets (no retained analysis) take the scratch path, which
+    /// the parity property tests pin bit-identical.
     pub fn fill_sample(&mut self, ds: &Dataset, sample_idx: usize, slot: usize) -> Result<()> {
         let sample = &ds.samples[sample_idx];
-        self.fill_graph(&sample.graph, &sample.statics, &ds.norm, slot)?;
+        match &sample.analysis {
+            Some(analysis) => {
+                self.fill_graph_analyzed(&sample.graph, analysis, &ds.norm, slot)?
+            }
+            None => self.fill_graph(&sample.graph, &sample.statics, &ds.norm, slot)?,
+        }
         let yn = ds.norm.norm_target(to_target(&sample.y));
         let yo = slot * 3;
         self.y.data[yo..yo + 3].copy_from_slice(&yn);
@@ -163,6 +172,29 @@ mod tests {
         // Slot 1 untouched.
         let m1: f32 = b.mask.data[160..320].iter().sum();
         assert_eq!(m1 as usize, ds.samples[1].graph.n_nodes());
+    }
+
+    #[test]
+    fn fill_sample_analyzed_path_matches_scratch_path() {
+        // A built dataset fills from its retained analyses; stripping them
+        // must produce bit-identical buffers (the analyze-once parity).
+        let ds = Dataset::build(0.002, 1, 2);
+        let mut stripped = ds.clone();
+        for s in &mut stripped.samples {
+            assert!(s.analysis.is_some(), "build retains analyses");
+            s.analysis = None;
+        }
+        let mut via_analysis = BatchBuffers::new(&consts(), 4);
+        let mut via_scratch = BatchBuffers::new(&consts(), 4);
+        for (slot, idx) in [0usize, 1, 2].into_iter().enumerate() {
+            via_analysis.fill_sample(&ds, idx, slot).unwrap();
+            via_scratch.fill_sample(&stripped, idx, slot).unwrap();
+        }
+        assert_eq!(via_analysis.x.data, via_scratch.x.data);
+        assert_eq!(via_analysis.a.data, via_scratch.a.data);
+        assert_eq!(via_analysis.s.data, via_scratch.s.data);
+        assert_eq!(via_analysis.mask.data, via_scratch.mask.data);
+        assert_eq!(via_analysis.y.data, via_scratch.y.data);
     }
 
     #[test]

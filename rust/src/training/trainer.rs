@@ -150,7 +150,11 @@ impl<'rt> Trainer<'rt> {
         Ok(loss)
     }
 
-    /// Run one epoch over the (shuffled) train split.
+    /// Run one epoch over the (shuffled) train split. Featurization is
+    /// analysis-aware: built datasets retain a per-sample `GraphAnalysis`,
+    /// so `BatchBuffers::fill_sample` fills from cached per-node costs
+    /// (`fill_graph_analyzed`) instead of re-traversing every graph every
+    /// epoch; loaded datasets fall back to the bit-identical scratch path.
     pub fn train_epoch(&mut self, ds: &Dataset, epoch: usize) -> Result<EpochLog> {
         // Capture the dataset's normalization stats into the params so a
         // saved checkpoint is self-contained for serving.

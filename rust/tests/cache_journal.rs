@@ -1,0 +1,450 @@
+//! Crash-safety harness for the cache journal store (`cache::persist`):
+//!
+//! * **Kill-at-every-injection-point** — a crash hook kills persistence at
+//!   every labeled point (mid-append, torn record, mid-compaction,
+//!   mid-manifest-swap, post-commit-pre-cleanup) and recovery must be
+//!   bit-identical to the committed pre-crash state: torn tails truncated
+//!   (never a cold start), corrupt manifests falling back one generation.
+//! * **Property round-trips** — random op sequences: journal replay must
+//!   equal an in-memory model, and a store that compacts aggressively must
+//!   recover the same state as one that never compacts.
+//! * **Fuzzed corruption** — random byte flips / truncations of journal
+//!   files must recover a clean *prefix* of the op stream (and a corrupted
+//!   manifest must recover everything via fallback), never panic or error.
+//!
+//! Set `DIPPM_JOURNAL_TEST_DIR` to root the store directories somewhere
+//! persistent (the CI `persist-crash` job points it at the workspace and
+//! uploads the directories on failure); cleanup happens only on success.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use anyhow::Result;
+use dippm::cache::persist::{
+    read_store, BootLoad, Delta, DeltaKind, JournalStore, PersistConfig, SnapshotValue,
+    CRASH_POINTS,
+};
+use dippm::util::proptest::proptest;
+use dippm::{prop_assert, prop_assert_eq};
+
+/// Minimal journaled value for the harness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct TVal(u32);
+
+impl SnapshotValue for TVal {
+    fn snapshot_encode(&self) -> Option<Vec<u8>> {
+        Some(self.0.to_le_bytes().to_vec())
+    }
+    fn snapshot_decode(bytes: &[u8]) -> Result<TVal> {
+        let arr: [u8; 4] = bytes
+            .try_into()
+            .map_err(|_| anyhow::anyhow!("TVal payload must be 4 bytes"))?;
+        Ok(TVal(u32::from_le_bytes(arr)))
+    }
+}
+
+static DIR_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Fresh store directory under `DIPPM_JOURNAL_TEST_DIR` (CI artifact root)
+/// or the system temp dir.
+fn store_dir(name: &str) -> PathBuf {
+    let root = std::env::var("DIPPM_JOURNAL_TEST_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| std::env::temp_dir());
+    let dir = root.join(format!(
+        "dippm-journal-{}-{name}-{}",
+        std::process::id(),
+        DIR_COUNTER.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn cleanup(dir: &PathBuf) {
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+fn cfg(dir: &PathBuf, shards: usize) -> PersistConfig {
+    PersistConfig {
+        shards,
+        ..PersistConfig::at(dir.clone())
+    }
+}
+
+/// Key whose high bits place it on shard `i % shards`.
+fn key(i: u64) -> u128 {
+    ((i as u128) << 64) | i as u128
+}
+
+fn upsert(i: u64, v: u32) -> Delta<TVal> {
+    Delta {
+        key: key(i),
+        kind: DeltaKind::Upsert(TVal(v), Duration::ZERO),
+    }
+}
+
+fn remove(i: u64) -> Delta<TVal> {
+    Delta {
+        key: key(i),
+        kind: DeltaKind::Remove,
+    }
+}
+
+/// Fold a recovered boot load into its logical key→value state.
+fn fold(boot: &BootLoad<TVal>) -> BTreeMap<u128, u32> {
+    let mut m = BTreeMap::new();
+    for (k, v, _) in &boot.base {
+        m.insert(*k, v.0);
+    }
+    apply_deltas(&mut m, &boot.replay);
+    m
+}
+
+fn apply_deltas(m: &mut BTreeMap<u128, u32>, deltas: &[Delta<TVal>]) {
+    for d in deltas {
+        match &d.kind {
+            DeltaKind::Upsert(v, _) => {
+                m.insert(d.key, v.0);
+            }
+            DeltaKind::Remove => {
+                m.remove(&d.key);
+            }
+        }
+    }
+}
+
+fn state(pairs: &[(u64, u32)]) -> BTreeMap<u128, u32> {
+    pairs.iter().map(|&(k, v)| (key(k), v)).collect()
+}
+
+const APPEND_POINTS: &[&str] = &["append:start", "append:torn-record", "append:after-write"];
+const COMPACT_POINTS: &[&str] = &[
+    "compact:start",
+    "compact:mid-shard",
+    "compact:after-gen-write",
+    "compact:mid-manifest-swap",
+    "compact:after-manifest",
+];
+
+#[test]
+fn harness_covers_every_labeled_crash_point() {
+    assert_eq!(
+        CRASH_POINTS.len(),
+        APPEND_POINTS.len() + COMPACT_POINTS.len(),
+        "a new crash point was added without harness coverage"
+    );
+    for p in APPEND_POINTS.iter().chain(COMPACT_POINTS) {
+        assert!(CRASH_POINTS.contains(p), "unknown point {p}");
+    }
+}
+
+#[test]
+fn kill_at_every_append_point_recovers_committed_state() {
+    for &point in APPEND_POINTS {
+        let dir = store_dir("kill-append");
+        let (store, _) = JournalStore::<TVal>::open(&cfg(&dir, 4)).unwrap();
+        // Committed prefix: two acknowledged flushes.
+        store.append(vec![upsert(1, 10)]).unwrap();
+        store.append(vec![upsert(2, 20), remove(1), upsert(5, 50)]).unwrap();
+        let committed = state(&[(2, 20), (5, 50)]);
+
+        // The crashing flush: a single-record batch so the torn-record
+        // point has a deterministic durable/dropped outcome.
+        store.set_crash_hook(Some(Box::new(move |p| p == point)));
+        let err = store.append(vec![upsert(3, 30)]).unwrap_err();
+        assert!(format!("{err:#}").contains("injected crash"), "{point}: {err:#}");
+        // The store is poisoned, exactly like a dead process.
+        assert!(store.append(vec![upsert(4, 44)]).is_err(), "{point}");
+        drop(store);
+
+        // Recovery: reopen the directory cold.
+        let (_store, boot) = JournalStore::<TVal>::open(&cfg(&dir, 4)).unwrap();
+        let mut expected = committed.clone();
+        match point {
+            // Nothing of the crashed record reached the disk.
+            "append:start" => {}
+            // Half a record on disk: recovery truncates the torn tail.
+            "append:torn-record" => {
+                assert_eq!(boot.report.torn_tail_drops, 1, "{point}");
+            }
+            // The record is durable; only the ack was lost.
+            "append:after-write" => {
+                expected.insert(key(3), 30);
+            }
+            other => unreachable!("unhandled append point {other}"),
+        }
+        assert_eq!(fold(&boot), expected, "recovery mismatch at {point}");
+        assert!(!fold(&boot).is_empty(), "{point}: must never cold-start");
+
+        // The recovered store keeps working (the torn tail was repaired).
+        let (store, _) = JournalStore::<TVal>::open(&cfg(&dir, 4)).unwrap();
+        store.append(vec![upsert(9, 90)]).unwrap();
+        drop(store);
+        let (_s, boot) = JournalStore::<TVal>::open(&cfg(&dir, 4)).unwrap();
+        assert_eq!(fold(&boot).get(&key(9)), Some(&90), "{point}");
+        cleanup(&dir);
+    }
+}
+
+#[test]
+fn kill_at_every_compaction_point_preserves_state_exactly() {
+    for &point in COMPACT_POINTS {
+        let dir = store_dir("kill-compact");
+        let (store, _) = JournalStore::<TVal>::open(&cfg(&dir, 4)).unwrap();
+        // Committed state via journal appends across several shards
+        // (shard 0 must be non-empty for the mid-shard injection).
+        store
+            .append(vec![upsert(4, 40), upsert(5, 50), upsert(6, 60), remove(6)])
+            .unwrap();
+        let committed = state(&[(4, 40), (5, 50)]);
+        let export: Vec<(u128, TVal, Duration)> = committed
+            .iter()
+            .map(|(&k, &v)| (k, TVal(v), Duration::ZERO))
+            .collect();
+
+        store.set_crash_hook(Some(Box::new(move |p| p == point)));
+        let err = store.compact(export, 4).unwrap_err();
+        assert!(format!("{err:#}").contains("injected crash"), "{point}: {err:#}");
+        drop(store);
+
+        // A crashed compaction — at ANY point — must leave the committed
+        // state bit-identical: either the old generation (manifest never
+        // landed, or fell back via MANIFEST.prev) or the new one (manifest
+        // landed; base == the same logical state).
+        let (_store, boot) = JournalStore::<TVal>::open(&cfg(&dir, 4)).unwrap();
+        assert_eq!(fold(&boot), committed, "recovery mismatch at {point}");
+        if point == "compact:mid-manifest-swap" {
+            assert!(
+                boot.report.recovered_previous_manifest,
+                "mid-swap crash must recover via MANIFEST.prev"
+            );
+        }
+        assert!(!fold(&boot).is_empty(), "{point}: must never cold-start");
+
+        // And the recovered store can compact successfully afterwards.
+        let (store, boot) = JournalStore::<TVal>::open(&cfg(&dir, 4)).unwrap();
+        let export: Vec<(u128, TVal, Duration)> = fold(&boot)
+            .iter()
+            .map(|(&k, &v)| (k, TVal(v), Duration::ZERO))
+            .collect();
+        store.compact(export, 2).unwrap();
+        drop(store);
+        let (_s, boot) = JournalStore::<TVal>::open(&cfg(&dir, 4)).unwrap();
+        assert_eq!(fold(&boot), committed, "post-recovery compaction at {point}");
+        cleanup(&dir);
+    }
+}
+
+/// One random op: `(key index, None = remove / Some(value) = upsert)`.
+type Op = (u64, Option<u32>);
+
+fn gen_ops(g: &mut dippm::util::proptest::Gen, max_len: usize) -> Vec<Op> {
+    let n = g.usize_in(1, max_len);
+    (0..n)
+        .map(|_| {
+            let k = g.usize_in(0, 9) as u64;
+            if g.bool() {
+                (k, None)
+            } else {
+                (k, Some(g.usize_in(0, 1_000_000) as u32))
+            }
+        })
+        .collect()
+}
+
+fn op_delta(op: Op) -> Delta<TVal> {
+    match op.1 {
+        Some(v) => upsert(op.0, v),
+        None => remove(op.0),
+    }
+}
+
+#[test]
+fn prop_journal_replay_equals_in_memory_model() {
+    proptest(40, |g| {
+        let dir = store_dir("prop-replay");
+        let (store, _) = JournalStore::<TVal>::open(&cfg(&dir, 4)).map_err(|e| e.to_string())?;
+        let ops = gen_ops(g, 60);
+        let mut model = BTreeMap::new();
+        let mut batch = Vec::new();
+        for &op in &ops {
+            batch.push(op_delta(op));
+            apply_deltas(&mut model, &[op_delta(op)]);
+            // Random flush boundaries.
+            if g.bool() {
+                store.append(std::mem::take(&mut batch)).map_err(|e| e.to_string())?;
+            }
+        }
+        store.append(batch).map_err(|e| e.to_string())?;
+        drop(store);
+
+        let (_s, boot) = JournalStore::<TVal>::open(&cfg(&dir, 4)).map_err(|e| e.to_string())?;
+        prop_assert_eq!(fold(&boot), model);
+        cleanup(&dir);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compaction_equals_no_compaction() {
+    proptest(25, |g| {
+        let dir_a = store_dir("prop-nocompact");
+        let dir_b = store_dir("prop-compact");
+        let (a, _) = JournalStore::<TVal>::open(&cfg(&dir_a, 4)).map_err(|e| e.to_string())?;
+        let (b, _) = JournalStore::<TVal>::open(&cfg(&dir_b, 4)).map_err(|e| e.to_string())?;
+        let ops = gen_ops(g, 50);
+        let mut model: BTreeMap<u128, u32> = BTreeMap::new();
+        let mut batch = Vec::new();
+        for &op in &ops {
+            batch.push(op_delta(op));
+            apply_deltas(&mut model, &[op_delta(op)]);
+            if g.bool() {
+                let deltas: Vec<Delta<TVal>> = batch.drain(..).collect();
+                a.append(deltas.clone()).map_err(|e| e.to_string())?;
+                b.append(deltas).map_err(|e| e.to_string())?;
+                // Store B compacts aggressively from the model state (what
+                // the live cache would export at this moment).
+                if g.bool() {
+                    let export: Vec<(u128, TVal, Duration)> = model
+                        .iter()
+                        .map(|(&k, &v)| (k, TVal(v), Duration::ZERO))
+                        .collect();
+                    b.compact(export, 3).map_err(|e| e.to_string())?;
+                }
+            }
+        }
+        a.append(batch.clone()).map_err(|e| e.to_string())?;
+        b.append(batch).map_err(|e| e.to_string())?;
+        drop(a);
+        drop(b);
+
+        let (_sa, boot_a) =
+            JournalStore::<TVal>::open(&cfg(&dir_a, 4)).map_err(|e| e.to_string())?;
+        let (_sb, boot_b) =
+            JournalStore::<TVal>::open(&cfg(&dir_b, 4)).map_err(|e| e.to_string())?;
+        prop_assert_eq!(fold(&boot_a), fold(&boot_b));
+        prop_assert_eq!(fold(&boot_a), model);
+        cleanup(&dir_a);
+        cleanup(&dir_b);
+        Ok(())
+    });
+}
+
+/// Every journal file of generation 1 in the dir (single-shard tests).
+fn journal_files(dir: &PathBuf) -> Vec<PathBuf> {
+    let mut out: Vec<PathBuf> = std::fs::read_dir(dir)
+        .unwrap()
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .map(|n| n.to_string_lossy().starts_with("journal-"))
+                .unwrap_or(false)
+        })
+        .collect();
+    out.sort();
+    out
+}
+
+#[test]
+fn prop_fuzzed_journal_corruption_recovers_a_clean_prefix() {
+    proptest(30, |g| {
+        // Single shard so the journal is one file and replay order is the
+        // op order — recovery must then be the fold of some op *prefix*.
+        let dir = store_dir("fuzz");
+        let (store, _) = JournalStore::<TVal>::open(&cfg(&dir, 1)).map_err(|e| e.to_string())?;
+        let ops = gen_ops(g, 30);
+        for chunk in ops.chunks(5) {
+            store
+                .append(chunk.iter().map(|&op| op_delta(op)).collect())
+                .map_err(|e| e.to_string())?;
+        }
+        drop(store);
+        // All prefix folds of the op stream (the acceptable recoveries).
+        let mut prefixes = vec![BTreeMap::new()];
+        let mut acc = BTreeMap::new();
+        for &op in &ops {
+            apply_deltas(&mut acc, &[op_delta(op)]);
+            prefixes.push(acc.clone());
+        }
+
+        let files = journal_files(&dir);
+        prop_assert!(!files.is_empty(), "journal file must exist");
+        let target = &files[0];
+        let mut bytes = std::fs::read(target).map_err(|e| e.to_string())?;
+        prop_assert!(!bytes.is_empty());
+        if g.bool() {
+            // Truncate at a random offset.
+            let cut = g.usize_in(0, bytes.len() - 1);
+            bytes.truncate(cut);
+        } else {
+            // Flip one random byte.
+            let at = g.usize_in(0, bytes.len() - 1);
+            bytes[at] ^= 1 << g.usize_in(0, 7);
+        }
+        std::fs::write(target, &bytes).map_err(|e| e.to_string())?;
+
+        // Recovery must succeed and land exactly on a prefix fold.
+        let (_s, boot) = JournalStore::<TVal>::open(&cfg(&dir, 1)).map_err(|e| e.to_string())?;
+        let recovered = fold(&boot);
+        prop_assert!(
+            prefixes.contains(&recovered),
+            "recovered state {recovered:?} is not a clean prefix of the op stream"
+        );
+        cleanup(&dir);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fuzzed_manifest_corruption_never_loses_journaled_state() {
+    proptest(15, |g| {
+        let dir = store_dir("fuzz-manifest");
+        let (store, _) = JournalStore::<TVal>::open(&cfg(&dir, 2)).map_err(|e| e.to_string())?;
+        let ops = gen_ops(g, 20);
+        let mut model = BTreeMap::new();
+        for &op in &ops {
+            apply_deltas(&mut model, &[op_delta(op)]);
+        }
+        store
+            .append(ops.iter().map(|&op| op_delta(op)).collect())
+            .map_err(|e| e.to_string())?;
+        drop(store);
+
+        let manifest = dir.join("MANIFEST");
+        let mut bytes = std::fs::read(&manifest).map_err(|e| e.to_string())?;
+        let at = g.usize_in(0, bytes.len() - 1);
+        bytes[at] ^= 0x40;
+        std::fs::write(&manifest, &bytes).map_err(|e| e.to_string())?;
+
+        // No compaction has run, so the journals carry everything: a
+        // corrupt manifest (no .prev yet) must still recover the full
+        // state by replaying the newest generation's journals.
+        let (_s, boot) = JournalStore::<TVal>::open(&cfg(&dir, 2)).map_err(|e| e.to_string())?;
+        prop_assert_eq!(fold(&boot), model);
+        cleanup(&dir);
+        Ok(())
+    });
+}
+
+#[test]
+fn read_store_round_trips_a_compacted_store() {
+    let dir = store_dir("read-store");
+    let (store, _) = JournalStore::<TVal>::open(&cfg(&dir, 4)).unwrap();
+    store
+        .append(vec![upsert(1, 1), upsert(2, 2), upsert(3, 3), remove(2)])
+        .unwrap();
+    let export: Vec<(u128, TVal, Duration)> = state(&[(1, 1), (3, 3)])
+        .iter()
+        .map(|(&k, &v)| (k, TVal(v), Duration::ZERO))
+        .collect();
+    store.compact(export, 2).unwrap();
+    store.append(vec![upsert(4, 4)]).unwrap();
+    drop(store);
+
+    let boot = read_store::<TVal>(&dir).unwrap();
+    assert_eq!(fold(&boot), state(&[(1, 1), (3, 3), (4, 4)]));
+    cleanup(&dir);
+}

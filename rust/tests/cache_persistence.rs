@@ -1,10 +1,13 @@
-//! Integration: disk persistence of the prediction cache — the
-//! kill-and-restart warm-start story, snapshot integrity (corruption ⇒
-//! cold start, not a crash), periodic snapshot rotation, tombstone
-//! exclusion, and the `cache_save`/`cache_load` TCP admin commands.
+//! Integration: disk persistence of the prediction cache through the
+//! journal/manifest/generation store — the kill-and-restart warm-start
+//! story, crash/corruption recovery (torn journal tails are truncated,
+//! corrupt manifests fall back, a hosed store is a cold start — never a
+//! crash), tombstone exclusion, legacy-snapshot migration, and the
+//! `cache_save`/`cache_load`/`cache_compact` TCP admin commands.
 //!
 //! Everything runs hermetically on the simulator backend; the persistence
-//! layer under test is identical under PJRT.
+//! layer under test is identical under PJRT. Store-level crash injection
+//! lives in `tests/cache_journal.rs`.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -16,11 +19,12 @@ use dippm::ir::Graph;
 use dippm::modelgen::Family;
 use dippm::util::json::Json;
 
-fn tmp_snapshot(name: &str) -> PathBuf {
+fn tmp_store(name: &str) -> PathBuf {
     let path = std::env::temp_dir().join(format!(
-        "dippm-persist-it-{}-{name}.bin",
+        "dippm-persist-it-{}-{name}",
         std::process::id()
     ));
+    let _ = std::fs::remove_dir_all(&path);
     let _ = std::fs::remove_file(&path);
     path
 }
@@ -45,13 +49,28 @@ fn oversized_graph() -> Graph {
     b.finish()
 }
 
-/// The acceptance-criteria test: populate via SimBackend, snapshot on
-/// graceful shutdown, restart with `--cache-file`, and the same
+/// Journal files currently in a store directory.
+fn journal_paths(dir: &PathBuf) -> Vec<PathBuf> {
+    std::fs::read_dir(dir)
+        .into_iter()
+        .flatten()
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .map(|n| n.to_string_lossy().starts_with("journal-"))
+                .unwrap_or(false)
+        })
+        .collect()
+}
+
+/// The acceptance-criteria test: populate via SimBackend, flush the
+/// journal on graceful shutdown, restart with `--cache-file`, and the same
 /// graph+target submit is a hit (backend not invoked) while a second
 /// target on the same graph is a miss.
 #[test]
 fn kill_and_restart_warm_start() {
-    let path = tmp_snapshot("warm-start");
+    let path = tmp_store("warm-start");
     let g = Family::ResNet.generate(2);
     let slice = Target::parse("a100:2g.10gb").unwrap();
 
@@ -60,15 +79,20 @@ fn kill_and_restart_warm_start() {
         let coord = Coordinator::start_sim(persistent_options(&path)).unwrap();
         let pred = coord.predict(g.clone()).unwrap();
         assert_eq!(coord.metrics().batches, 1);
+        let m = coord.metrics();
+        assert!(m.persist_enabled, "store must be active");
+        assert!(m.persist_age_s >= 0.0, "persist age reported while active");
         pred
-        // <- drop = kill: the Drop impl writes the snapshot.
+        // <- drop = graceful kill: the Drop impl flushes the journal.
     };
-    assert!(path.exists(), "graceful shutdown must write {path:?}");
+    assert!(path.is_dir(), "shutdown must leave a store directory at {path:?}");
 
-    // Second life: boot from the snapshot.
+    // Second life: boot from the store (journal replay).
     let coord = Coordinator::start_sim(persistent_options(&path)).unwrap();
     let m0 = coord.metrics();
-    assert_eq!(m0.warm_start_entries, 1, "preloaded the snapshot");
+    assert_eq!(m0.warm_start_entries, 1, "replayed the journal");
+    assert_eq!(m0.replayed_records, 1, "one journaled upsert replayed");
+    assert_eq!(m0.torn_tail_drops, 0);
     assert_eq!(m0.cache_entries, 1);
     assert_eq!(m0.batches, 0);
 
@@ -100,53 +124,124 @@ fn kill_and_restart_warm_start() {
     assert_eq!(m3.cache_hits, 2);
     assert_eq!(m3.batches, 0);
     drop(coord);
-    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_dir_all(&path);
 }
 
 #[test]
-fn corrupted_snapshot_is_a_cold_start_not_a_crash() {
-    let path = tmp_snapshot("corrupt");
+fn corrupt_manifest_still_warm_starts_via_journal_replay() {
+    let path = tmp_store("corrupt-manifest");
     {
         let coord = Coordinator::start_sim(persistent_options(&path)).unwrap();
         coord.predict(Family::Vgg.generate(1)).unwrap();
     }
-    // Flip one byte in the middle of the file.
-    let mut bytes = std::fs::read(&path).unwrap();
+    // Flip one byte in the manifest: the journal files still carry every
+    // committed record, so recovery replays them instead of cold-starting.
+    let manifest = path.join("MANIFEST");
+    let mut bytes = std::fs::read(&manifest).unwrap();
     let mid = bytes.len() / 2;
     bytes[mid] ^= 0x20;
-    std::fs::write(&path, &bytes).unwrap();
+    std::fs::write(&manifest, &bytes).unwrap();
 
     let coord = Coordinator::start_sim(persistent_options(&path)).unwrap();
     let m = coord.metrics();
-    assert_eq!(m.warm_start_entries, 0, "rejected snapshot => cold");
-    assert_eq!(m.cache_entries, 0);
-    // And the server still serves.
+    assert_eq!(m.warm_start_entries, 1, "journal replay rescues the state");
+    assert_eq!(m.batches, 0);
     coord.predict(Family::Vgg.generate(1)).unwrap();
-    assert_eq!(coord.metrics().batches, 1);
+    assert_eq!(coord.metrics().batches, 0, "recovered entry serves the hit");
     drop(coord);
-    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_dir_all(&path);
 }
 
 #[test]
-fn truncated_snapshot_is_a_cold_start_not_a_crash() {
-    let path = tmp_snapshot("truncated");
+fn torn_journal_tail_is_truncated_not_a_cold_start() {
+    let path = tmp_store("torn-tail");
+    {
+        let coord = Coordinator::start_sim(persistent_options(&path)).unwrap();
+        coord.predict(Family::MobileNet.generate(0)).unwrap();
+        coord.predict(Family::Vgg.generate(0)).unwrap();
+    }
+    // Append garbage to one journal file: a torn tail from a mid-append
+    // crash. Every fully-written record before it must survive.
+    let journals = journal_paths(&path);
+    assert!(!journals.is_empty(), "shutdown flush must write journals");
+    let victim = &journals[0];
+    let mut bytes = std::fs::read(victim).unwrap();
+    bytes.extend_from_slice(&[0xAB; 9]);
+    std::fs::write(victim, &bytes).unwrap();
+
+    let coord = Coordinator::start_sim(persistent_options(&path)).unwrap();
+    let m = coord.metrics();
+    assert_eq!(m.torn_tail_drops, 1, "the torn tail is counted");
+    assert_eq!(m.warm_start_entries, 2, "committed records all recovered");
+    assert_eq!(m.batches, 0);
+    drop(coord);
+    let _ = std::fs::remove_dir_all(&path);
+}
+
+#[test]
+fn hosed_store_is_a_cold_start_not_a_crash() {
+    let path = tmp_store("hosed");
     {
         let coord = Coordinator::start_sim(persistent_options(&path)).unwrap();
         coord.predict(Family::MobileNet.generate(0)).unwrap();
     }
-    let bytes = std::fs::read(&path).unwrap();
-    std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+    // Scorch the earth: garbage manifest, no journals, no generations.
+    for entry in std::fs::read_dir(&path).unwrap().flatten() {
+        let _ = std::fs::remove_file(entry.path());
+    }
+    std::fs::write(path.join("MANIFEST"), b"not a manifest at all").unwrap();
 
     let coord = Coordinator::start_sim(persistent_options(&path)).unwrap();
-    assert_eq!(coord.metrics().warm_start_entries, 0);
+    let m = coord.metrics();
+    assert_eq!(m.warm_start_entries, 0, "nothing recoverable => cold");
+    assert_eq!(m.cache_entries, 0);
+    // And the server still serves — and persists again.
     coord.predict(Family::MobileNet.generate(0)).unwrap();
+    assert_eq!(coord.metrics().batches, 1);
     drop(coord);
-    let _ = std::fs::remove_file(&path);
+    let coord = Coordinator::start_sim(persistent_options(&path)).unwrap();
+    assert_eq!(coord.metrics().warm_start_entries, 1, "persistence recovered");
+    drop(coord);
+    let _ = std::fs::remove_dir_all(&path);
+}
+
+#[test]
+fn legacy_snapshot_file_is_migrated_to_a_store() {
+    let path = tmp_store("legacy-migrate");
+    // Write a PR 2-era single-file snapshot at the --cache-file path by
+    // exporting a populated in-memory cache with the legacy codec.
+    let g = Family::EfficientNet.generate(2);
+    {
+        use dippm::cache::persist::save_snapshot;
+        use dippm::cache::ShardedLruCache;
+        use dippm::coordinator::CacheValue;
+        let staging: ShardedLruCache<CacheValue> =
+            ShardedLruCache::new(&CacheConfig::default());
+        let coord = Coordinator::start_sim(CoordinatorOptions::default()).unwrap();
+        let pred = coord.predict(g.clone()).unwrap();
+        staging.insert(
+            dippm::cache::CacheKey::of(&g, &Target::default()),
+            CacheValue::Pred(pred),
+        );
+        save_snapshot(&path, &staging).unwrap();
+    }
+    assert!(path.is_file(), "legacy snapshot is a single file");
+
+    // Booting with --cache-file at that path migrates it into a store dir
+    // and warm-starts from its entries.
+    let coord = Coordinator::start_sim(persistent_options(&path)).unwrap();
+    assert!(path.is_dir(), "migration replaces the file with a store");
+    let m = coord.metrics();
+    assert_eq!(m.warm_start_entries, 1);
+    coord.predict(g).unwrap();
+    assert_eq!(coord.metrics().batches, 0, "migrated entry serves the hit");
+    drop(coord);
+    let _ = std::fs::remove_dir_all(&path);
 }
 
 #[test]
 fn tombstones_do_not_survive_restart() {
-    let path = tmp_snapshot("tombstones");
+    let path = tmp_store("tombstones");
     {
         let coord = Coordinator::start_sim(persistent_options(&path)).unwrap();
         coord.predict(Family::Vgg.generate(0)).unwrap();
@@ -158,18 +253,18 @@ fn tombstones_do_not_survive_restart() {
     let m = coord.metrics();
     assert_eq!(
         m.warm_start_entries, 1,
-        "only the real prediction is snapshotted"
+        "only the real prediction is journaled"
     );
     // The poison graph executes again (and fails again) after restart.
     coord.predict(oversized_graph()).unwrap_err();
     assert_eq!(coord.metrics().errors, 1);
     drop(coord);
-    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_dir_all(&path);
 }
 
 #[test]
-fn snapshot_entries_respect_cache_ttl_across_restart() {
-    let path = tmp_snapshot("ttl");
+fn journal_entries_respect_cache_ttl_across_restart() {
+    let path = tmp_store("ttl");
     let ttl_options = |ttl: Duration| CoordinatorOptions {
         cache: CacheConfig {
             snapshot_path: Some(path.clone()),
@@ -181,25 +276,27 @@ fn snapshot_entries_respect_cache_ttl_across_restart() {
     {
         let coord = Coordinator::start_sim(ttl_options(Duration::from_secs(3600))).unwrap();
         coord.predict(Family::ResNet.generate(0)).unwrap();
-        // Age the entry before the shutdown snapshot records its age.
+        // Age the entry before the shutdown flush records its age.
         std::thread::sleep(Duration::from_millis(60));
     }
-    // Restart with a tiny TTL: the snapshot entry's recorded age already
-    // exceeds it (entries are backdated, not reborn), so the boot preload
-    // skips it.
+    // Restart with a tiny TTL: the journaled upsert's recorded age already
+    // exceeds it (entries are backdated, not reborn), so replay skips it.
     let coord = Coordinator::start_sim(ttl_options(Duration::from_millis(50))).unwrap();
     assert_eq!(coord.metrics().warm_start_entries, 0, "aged-out entry skipped");
-    // And with a generous TTL it is preloaded.
     drop(coord);
     let coord = Coordinator::start_sim(ttl_options(Duration::from_secs(3600))).unwrap();
-    assert_eq!(coord.metrics().warm_start_entries, 0, "previous boot saved an empty cache");
+    assert_eq!(
+        coord.metrics().warm_start_entries,
+        0,
+        "previous boot persisted an empty cache"
+    );
     drop(coord);
-    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_dir_all(&path);
 }
 
 #[test]
-fn periodic_snapshot_timer_rotates_without_shutdown() {
-    let path = tmp_snapshot("periodic");
+fn periodic_timer_flushes_journal_without_shutdown() {
+    let path = tmp_store("periodic");
     let coord = Coordinator::start_sim(CoordinatorOptions {
         cache: CacheConfig {
             snapshot_path: Some(path.clone()),
@@ -210,30 +307,57 @@ fn periodic_snapshot_timer_rotates_without_shutdown() {
     })
     .unwrap();
     coord.predict(Family::DenseNet.generate(1)).unwrap();
-    // Wait until a rotation lands that contains the entry: an empty
-    // snapshot is exactly 28 bytes (header + count + checksum), so watch
-    // for a bigger file (rename makes every observation a complete file).
+    // Wait until a timer flush appends the insert to a journal file (the
+    // 24-byte file header alone means no records yet).
     let deadline = std::time::Instant::now() + Duration::from_secs(5);
-    let has_entry = |p: &PathBuf| std::fs::metadata(p).map(|m| m.len() > 28).unwrap_or(false);
-    while !has_entry(&path) && std::time::Instant::now() < deadline {
+    let has_record = |dir: &PathBuf| {
+        journal_paths(dir).iter().any(|p| {
+            std::fs::metadata(p).map(|m| m.len() > 24).unwrap_or(false)
+        })
+    };
+    while !has_record(&path) && std::time::Instant::now() < deadline {
         std::thread::sleep(Duration::from_millis(10));
     }
-    assert!(has_entry(&path), "timer must rotate a populated snapshot");
-    // The rotated snapshot is valid and loadable by a sibling server.
-    let sibling_path = tmp_snapshot("periodic-sib");
+    assert!(has_record(&path), "timer must flush journaled records");
+    assert!(coord.metrics().journal_appends >= 1);
+    // The flushed store is valid and loadable by a sibling server.
+    let sibling_path = tmp_store("periodic-sib");
     let other = Coordinator::start_sim(persistent_options(&sibling_path)).unwrap();
     let report = other.load_cache(Some(path.to_str().unwrap())).unwrap();
     assert_eq!(report.entries, 1);
     assert_eq!(other.metrics().warm_start_entries, 1);
     drop(coord);
     drop(other);
-    let _ = std::fs::remove_file(&path);
-    let _ = std::fs::remove_file(&sibling_path);
+    let _ = std::fs::remove_dir_all(&path);
+    let _ = std::fs::remove_dir_all(&sibling_path);
 }
 
 #[test]
-fn cache_save_and_load_tcp_commands() {
-    let path = tmp_snapshot("tcp-cmd");
+fn compaction_folds_journal_and_restart_reads_the_generation() {
+    let path = tmp_store("compact");
+    {
+        let coord = Coordinator::start_sim(persistent_options(&path)).unwrap();
+        coord.predict(Family::Vgg.generate(0)).unwrap();
+        coord.predict(Family::ResNet.generate(1)).unwrap();
+        let report = coord.compact_cache().unwrap();
+        assert_eq!(report.entries, 2);
+        assert!(report.generation >= 2);
+        let m = coord.metrics();
+        assert_eq!(m.compactions, 1);
+        assert_eq!(m.journal_generation, report.generation);
+    }
+    let coord = Coordinator::start_sim(persistent_options(&path)).unwrap();
+    let m = coord.metrics();
+    assert_eq!(m.warm_start_entries, 2);
+    // Entries now come from the generation base, not journal replay.
+    assert_eq!(m.replayed_records, 0);
+    drop(coord);
+    let _ = std::fs::remove_dir_all(&path);
+}
+
+#[test]
+fn cache_save_load_and_compact_tcp_commands() {
+    let path = tmp_store("tcp-cmd");
     let coord = Arc::new(Coordinator::start_sim(CoordinatorOptions::default()).unwrap());
     let (port_tx, port_rx) = std::sync::mpsc::channel();
     {
@@ -248,9 +372,20 @@ fn cache_save_and_load_tcp_commands() {
     let port = port_rx.recv().unwrap();
     let mut client = tcp::Client::connect(&format!("127.0.0.1:{port}")).unwrap();
 
-    // No --cache-file configured and no path given: structured error.
+    // No --cache-file configured and no path given: structured errors.
     let resp = client.cache_save(None).unwrap();
     assert!(resp.contains("\"ok\":false"), "{resp}");
+    let resp = client.cache_compact().unwrap();
+    assert!(resp.contains("\"ok\":false"), "{resp}");
+
+    // cache_stats must still report the persistence fields on this
+    // persistence-less server (cold boot): present, zeroed, age -1.
+    let stats = Json::parse(&client.cache_stats().unwrap()).unwrap();
+    assert_eq!(stats.path(&["persist_enabled"]).as_bool(), Some(false));
+    assert_eq!(stats.path(&["warm_start_entries"]).as_usize(), Some(0));
+    assert_eq!(stats.path(&["journal_appends"]).as_usize(), Some(0));
+    assert_eq!(stats.path(&["torn_tail_drops"]).as_usize(), Some(0));
+    assert!(stats.path(&["snapshot_age_s"]).as_f64().unwrap() < 0.0);
 
     let g = Family::EfficientNet.generate(1);
     client.predict_graph(&g).unwrap();
@@ -258,10 +393,10 @@ fn cache_save_and_load_tcp_commands() {
     let v = Json::parse(&resp).unwrap();
     assert_eq!(v.path(&["ok"]).as_bool(), Some(true), "{resp}");
     assert_eq!(v.path(&["entries"]).as_usize(), Some(1));
-    assert!(path.exists());
+    assert!(path.is_dir(), "explicit cache_save writes a store directory");
 
-    // A second server starts cold, loads the snapshot over TCP, then
-    // serves the same graph without executing it.
+    // A second server starts cold, loads the store over TCP, then serves
+    // the same graph without executing it.
     let coord2 = Arc::new(Coordinator::start_sim(CoordinatorOptions::default()).unwrap());
     let (port_tx2, port_rx2) = std::sync::mpsc::channel();
     {
@@ -287,8 +422,39 @@ fn cache_save_and_load_tcp_commands() {
     assert_eq!(m.cache_hits, 1);
     assert_eq!(m.warm_start_entries, 1);
 
-    // Loading a nonexistent file over TCP is a structured error.
-    let resp = client2.cache_load(Some("/nonexistent/cache.bin")).unwrap();
+    // Loading a nonexistent store over TCP is a structured error.
+    let resp = client2.cache_load(Some("/nonexistent/cache-store")).unwrap();
     assert!(resp.contains("\"ok\":false"), "{resp}");
-    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_dir_all(&path);
+}
+
+#[test]
+fn cache_compact_tcp_command_on_a_persistent_server() {
+    let path = tmp_store("tcp-compact");
+    let coord = Arc::new(Coordinator::start_sim(persistent_options(&path)).unwrap());
+    let (port_tx, port_rx) = std::sync::mpsc::channel();
+    {
+        let coord = coord.clone();
+        std::thread::spawn(move || {
+            tcp::serve(coord, "127.0.0.1:0", move |p| {
+                let _ = port_tx.send(p);
+            })
+            .unwrap();
+        });
+    }
+    let port = port_rx.recv().unwrap();
+    let mut client = tcp::Client::connect(&format!("127.0.0.1:{port}")).unwrap();
+    client.predict_graph(&Family::Vgg.generate(2)).unwrap();
+
+    let resp = client.cache_compact().unwrap();
+    let v = Json::parse(&resp).unwrap();
+    assert_eq!(v.path(&["ok"]).as_bool(), Some(true), "{resp}");
+    assert_eq!(v.path(&["cmd"]).as_str(), Some("cache_compact"));
+    assert_eq!(v.path(&["entries"]).as_usize(), Some(1));
+
+    let stats = Json::parse(&client.cache_stats().unwrap()).unwrap();
+    assert_eq!(stats.path(&["persist_enabled"]).as_bool(), Some(true));
+    assert_eq!(stats.path(&["compactions"]).as_usize(), Some(1));
+    assert!(stats.path(&["snapshot_age_s"]).as_f64().unwrap() >= 0.0);
+    let _ = std::fs::remove_dir_all(&path);
 }
