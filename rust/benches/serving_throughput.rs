@@ -18,8 +18,19 @@
 //! parallel batch executor exists for, and `cold_thread_speedup` in the
 //! JSON records the win of `--executor-threads N` over 1.
 //!
+//! * **trickle** — the low-concurrency regime a design-space-exploration
+//!   client produces: 2 clients in flight against `--executor-threads 4`,
+//!   every request a distinct miss, with a deliberately wide `max_wait` so
+//!   batching policy dominates p99. Run twice — `--batch-former off`
+//!   (per-worker camping, the legacy batcher) vs the former pipeline —
+//!   and `trickle_p99_speedup` in the JSON records the tail-latency win
+//!   (the former's arrival-gap linger closes hopeless batches after
+//!   `max_wait / 8` instead of waiting out the full window). CI gates
+//!   `trickle_p99_speedup >= 1.0`.
+//!
 //! Scale knobs: DIPPM_BENCH_REQS (per client), DIPPM_BENCH_CLIENTS,
-//! DIPPM_BENCH_THREADS (multi-thread pool size), FULL=1.
+//! DIPPM_BENCH_THREADS (multi-thread pool size),
+//! DIPPM_BENCH_TRICKLE_WAIT_MS (trickle max_wait, default 8), FULL=1.
 //! Set DIPPM_BENCH_JSON=<path> to also write the results as a machine-
 //! readable JSON document (the CI bench-smoke job uploads it as the
 //! `BENCH_serving_throughput.json` artifact, accumulating the perf
@@ -32,7 +43,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use dippm::cache::CacheConfig;
-use dippm::coordinator::{Coordinator, CoordinatorOptions};
+use dippm::coordinator::{BatchFormerMode, Coordinator, CoordinatorOptions};
 use dippm::ir::Graph;
 use dippm::modelgen::ALL_FAMILIES;
 use dippm::runtime::Runtime;
@@ -67,10 +78,16 @@ fn zipf_indices(n_requests: usize, pool: usize, alpha: f64, seed: u64) -> Vec<us
         .collect()
 }
 
-fn start(cache_on: bool, executor_threads: usize) -> (Arc<Coordinator>, &'static str) {
+fn start(
+    cache_on: bool,
+    executor_threads: usize,
+    former: BatchFormerMode,
+    max_wait: Duration,
+) -> (Arc<Coordinator>, &'static str) {
     let opts = CoordinatorOptions {
-        max_wait: Duration::from_millis(1),
+        max_wait,
         executor_threads,
+        batch_former: former,
         cache: if cache_on {
             CacheConfig::default()
         } else {
@@ -122,12 +139,19 @@ fn main() {
         common::env_usize("DIPPM_BENCH_REQS", if common::is_full() { 256 } else { 64 });
     let clients = common::env_usize("DIPPM_BENCH_CLIENTS", 8);
     let zipf_pool = 64;
+    // The trickle p99 gate compares tail latencies, so its sample count is
+    // its own knob: more requests per trickle client stabilizes p99 on
+    // noisy shared runners without inflating the whole matrix.
+    let trickle_reqs = common::env_usize("DIPPM_BENCH_TRICKLE_REQS", per_client);
+    let trickle_clients = clients.clamp(1, 2);
 
     // Pre-generate workloads (graph construction stays out of the timing).
     // One shared pool sized to the largest scenario; the warmup graph is
     // the one index beyond it, so it is outside every workload pool no
     // matter how the scale knobs are set.
-    let pool_n = (clients * per_client).max(zipf_pool);
+    let pool_n = (clients * per_client)
+        .max(zipf_pool)
+        .max(trickle_clients * trickle_reqs);
     let mut all = graph_pool(pool_n + 1);
     let warmup_graph = all.pop().unwrap();
     let hot_graph = all[0].clone();
@@ -139,6 +163,12 @@ fn main() {
             "hot" => vec![hot_graph.clone(); per_client],
             "cold" => cold_pool
                 [client * per_client..(client + 1) * per_client]
+                .to_vec(),
+            // Trickle shares cold's shape (every request a distinct miss);
+            // what changes is the concurrency (2 in-flight), the sample
+            // count and the batch window, set per run below.
+            "trickle" => cold_pool
+                [client * trickle_reqs..(client + 1) * trickle_reqs]
                 .to_vec(),
             _ => zipf_indices(per_client, zipf_pool, 1.1, 42 + client as u64)
                 .into_iter()
@@ -153,30 +183,55 @@ fn main() {
     );
 
     let mut t = Table::new(&[
-        "scenario", "cache", "threads", "req/s", "p50 (ms)", "p99 (ms)", "hit rate",
-        "batches", "coalesced",
+        "scenario", "cache", "threads", "former", "req/s", "p50 (ms)", "p99 (ms)",
+        "hit rate", "batches", "coalesced",
     ]);
     let mut hot_rps = (0.0, 0.0); // (cache on, cache off)
     let mut cold_rps = (0.0, 0.0); // (1 thread, mt_threads)
+    // Trickle p99 (ms): legacy per-worker batcher vs the former pipeline.
+    let mut trickle_p99 = (0.0, 0.0); // (off, leader)
+    let mut trickle_latency = (0u64, 0u64); // leader run's (p50_us, p99_us)
     let mut backend = "";
     let mut json_rows: Vec<Json> = Vec::new();
     // The classic matrix runs at 1 executor thread (comparable with the
     // historical trajectory); the extra ("cold", on, mt_threads) run
-    // measures the parallel batch executor on the pure-miss path.
-    let mut runs: Vec<(&str, bool, usize)> = Vec::new();
+    // measures the parallel batch executor on the pure-miss path, and the
+    // two trickle runs measure the batch-former's tail-latency win in the
+    // low-concurrency regime (2 in-flight clients, 4 workers, wide
+    // max_wait so batching policy dominates p99).
+    let trickle_wait =
+        Duration::from_millis(common::env_usize("DIPPM_BENCH_TRICKLE_WAIT_MS", 8) as u64);
+    let trickle_threads = 4;
+    let default_wait = Duration::from_millis(1);
+    let mut runs: Vec<(&str, bool, usize, BatchFormerMode, Duration)> = Vec::new();
     for scenario in ["hot", "cold", "zipf"] {
         for cache_on in [true, false] {
-            runs.push((scenario, cache_on, 1));
+            runs.push((scenario, cache_on, 1, BatchFormerMode::Leader, default_wait));
         }
     }
-    runs.push(("cold", true, mt_threads));
-    for (scenario, cache_on, threads) in runs {
-        let (coord, be) = start(cache_on, threads);
+    runs.push(("cold", true, mt_threads, BatchFormerMode::Leader, default_wait));
+    runs.push((
+        "trickle",
+        true,
+        trickle_threads,
+        BatchFormerMode::Off,
+        trickle_wait,
+    ));
+    runs.push((
+        "trickle",
+        true,
+        trickle_threads,
+        BatchFormerMode::Leader,
+        trickle_wait,
+    ));
+    for (scenario, cache_on, threads, former, max_wait) in runs {
+        let (coord, be) = start(cache_on, threads, former, max_wait);
         backend = be;
         // Warmup outside the measurement (compile/first-execute costs).
         coord.predict(warmup_graph.clone()).unwrap();
+        let n_clients = if scenario == "trickle" { trickle_clients } else { clients };
         let schedules: Vec<Vec<Graph>> =
-            (0..clients).map(|c| schedule(scenario, c)).collect();
+            (0..n_clients).map(|c| schedule(scenario, c)).collect();
         let (rps, lats) = run_load(&coord, schedules);
         let m = coord.metrics();
         if scenario == "hot" && threads == 1 {
@@ -193,10 +248,21 @@ fn main() {
                 cold_rps.1 = rps;
             }
         }
+        if scenario == "trickle" {
+            let p99 = 1e3 * quantile(&lats, 0.99);
+            match former {
+                BatchFormerMode::Off => trickle_p99.0 = p99,
+                _ => {
+                    trickle_p99.1 = p99;
+                    trickle_latency = (m.latency_p50_us(), m.latency_p99_us());
+                }
+            }
+        }
         t.row(&[
             scenario.into(),
             if cache_on { "on" } else { "off" }.into(),
             threads.to_string(),
+            former.as_str().into(),
             format!("{rps:.0}"),
             format!("{:.3}", 1e3 * quantile(&lats, 0.5)),
             format!("{:.3}", 1e3 * quantile(&lats, 0.99)),
@@ -208,6 +274,7 @@ fn main() {
         row.insert("scenario", scenario);
         row.insert("cache", cache_on);
         row.insert("executor_threads", threads);
+        row.insert("batch_former", former.as_str());
         row.insert("req_per_s", rps);
         row.insert("p50_ms", 1e3 * quantile(&lats, 0.5));
         row.insert("p99_ms", 1e3 * quantile(&lats, 0.99));
@@ -216,6 +283,13 @@ fn main() {
         row.insert("coalesced", m.coalesced as usize);
         row.insert("analyses_computed", m.analyses_computed as usize);
         row.insert("analyses_reused", m.analyses_reused as usize);
+        // Server-side latency histogram + pipeline gauges (the same
+        // numbers cache_stats reports over TCP).
+        row.insert("latency_p50_us", m.latency_p50_us() as usize);
+        row.insert("latency_p99_us", m.latency_p99_us() as usize);
+        row.insert("queue_depth_hwm", m.queue_depth_hwm as usize);
+        row.insert("ring_depth_hwm", m.ring_depth_hwm as usize);
+        row.insert("queue_residency_max_us", m.queue_residency_max_us as usize);
         json_rows.push(Json::Obj(row));
     }
     t.print();
@@ -235,6 +309,16 @@ fn main() {
              {cold_thread_speedup:.2}x (target > 1x)"
         );
     }
+    let trickle_p99_speedup = if trickle_p99.1 > 0.0 { trickle_p99.0 / trickle_p99.1 } else { 0.0 };
+    if trickle_p99.1 > 0.0 {
+        println!(
+            "trickle p99: per-worker batcher {:.3}ms -> batch former {:.3}ms \
+             ({trickle_p99_speedup:.2}x, target >= 1x; max_wait {:.0}ms)",
+            trickle_p99.0,
+            trickle_p99.1,
+            1e3 * trickle_wait.as_secs_f64()
+        );
+    }
     println!("note: hot hits bypass the batcher and the runtime entirely;");
     println!("cold rows bound the fingerprint+LRU overhead on pure misses.");
 
@@ -249,6 +333,17 @@ fn main() {
         doc.insert("hot_speedup", hot_speedup);
         doc.insert("executor_threads_mt", mt_threads);
         doc.insert("cold_thread_speedup", cold_thread_speedup);
+        // The batch-former trickle gate (CI asserts speedup >= 1.0) plus
+        // the server-side latency histogram of the former run.
+        doc.insert("trickle_wait_ms", 1e3 * trickle_wait.as_secs_f64());
+        doc.insert("trickle_clients", trickle_clients);
+        doc.insert("trickle_reqs", trickle_reqs);
+        doc.insert("trickle_threads", trickle_threads);
+        doc.insert("trickle_p99_off_ms", trickle_p99.0);
+        doc.insert("trickle_p99_former_ms", trickle_p99.1);
+        doc.insert("trickle_p99_speedup", trickle_p99_speedup);
+        doc.insert("latency_p50_us", trickle_latency.0 as usize);
+        doc.insert("latency_p99_us", trickle_latency.1 as usize);
         doc.insert("scenarios", Json::Arr(json_rows));
         std::fs::write(&path, format!("{}\n", Json::Obj(doc))).expect("write DIPPM_BENCH_JSON");
         println!("wrote {path}");

@@ -50,12 +50,26 @@ pub type RawOutcome = Result<[f64; 3], String>;
 pub trait Backend: Send {
     /// Human-readable backend name for logs.
     fn name(&self) -> &'static str;
-    /// Largest batch `predict_raw` accepts.
+    /// Largest batch `predict_into` accepts.
     fn max_batch(&self) -> usize;
     /// Predict denormalized `[latency_ms, memory_mb, energy_j]` per
-    /// request. `requests.len()` must be in `1..=max_batch()`, and the
-    /// returned vector must have exactly `requests.len()` outcomes.
-    fn predict_raw(&mut self, requests: &[PredictRequest<'_>]) -> Result<Vec<RawOutcome>>;
+    /// request, appending exactly `requests.len()` outcomes to `out`
+    /// (which arrives empty — the executor's per-worker scratch buffer,
+    /// reused across batches so the steady-state hot path allocates
+    /// nothing). `requests.len()` must be in `1..=max_batch()`.
+    fn predict_into(
+        &mut self,
+        requests: &[PredictRequest<'_>],
+        out: &mut Vec<RawOutcome>,
+    ) -> Result<()>;
+
+    /// Convenience wrapper returning a fresh vector (tests, one-shot
+    /// callers). The serving path uses [`Backend::predict_into`].
+    fn predict_raw(&mut self, requests: &[PredictRequest<'_>]) -> Result<Vec<RawOutcome>> {
+        let mut out = Vec::with_capacity(requests.len());
+        self.predict_into(requests, &mut out)?;
+        Ok(out)
+    }
 }
 
 /// Deferred backend constructor, invoked *inside* each executor worker
@@ -120,7 +134,11 @@ impl Backend for PjrtBackend {
         self.max_b
     }
 
-    fn predict_raw(&mut self, requests: &[PredictRequest<'_>]) -> Result<Vec<RawOutcome>> {
+    fn predict_into(
+        &mut self,
+        requests: &[PredictRequest<'_>],
+        out: &mut Vec<RawOutcome>,
+    ) -> Result<()> {
         // b=1 fast path avoids padding the big batch artifact.
         let (art, bufs, b) = if requests.len() == 1 && self.art_b1.is_some() {
             (self.art_b1.as_ref().unwrap(), &mut self.buffers_b1, 1)
@@ -164,10 +182,12 @@ impl Backend for PjrtBackend {
         // Nothing survived featurization: skip the artifact execution, the
         // outcome is already fully determined.
         if failures.iter().all(Option::is_some) {
-            return Ok(failures
-                .into_iter()
-                .map(|f| Err(f.expect("all slots failed")))
-                .collect());
+            out.extend(
+                failures
+                    .into_iter()
+                    .map(|f| Err(f.expect("all slots failed"))),
+            );
+            return Ok(());
         }
         for slot in requests.len()..b {
             bufs.clear_slot(slot);
@@ -179,15 +199,14 @@ impl Backend for PjrtBackend {
             .first()
             .ok_or_else(|| anyhow!("predict returned nothing"))?
             .to_vec::<f32>()?;
-        Ok((0..requests.len())
-            .map(|slot| match failures[slot].take() {
-                Some(msg) => Err(msg),
-                None => {
-                    let normed: [f32; 3] = std::array::from_fn(|d| yhat[slot * 3 + d]);
-                    Ok(self.norm.denorm_target(normed))
-                }
-            })
-            .collect())
+        out.extend((0..requests.len()).map(|slot| match failures[slot].take() {
+            Some(msg) => Err(msg),
+            None => {
+                let normed: [f32; 3] = std::array::from_fn(|d| yhat[slot * 3 + d]);
+                Ok(self.norm.denorm_target(normed))
+            }
+        }));
+        Ok(())
     }
 }
 
@@ -252,31 +271,33 @@ impl Backend for SimBackend {
         self.max_batch
     }
 
-    fn predict_raw(&mut self, requests: &[PredictRequest<'_>]) -> Result<Vec<RawOutcome>> {
-        Ok(requests
-            .iter()
-            .map(|req| {
-                if req.target.device != "a100" {
-                    return Err(format!(
-                        "unknown device {:?} (the simulator models a100 only)",
-                        req.target.device
-                    ));
-                }
-                // Featurize exactly like the PJRT path would (from the
-                // carried analysis, into the padded slot); a `max_nodes`
-                // overflow fails here with the same per-request error.
-                if let Err(e) =
-                    self.buffers
-                        .fill_graph_analyzed(req.graph, req.analysis, &self.norm, 0)
-                {
-                    return Err(format!("{e:#}"));
-                }
-                let m = self
-                    .sim
-                    .measure_on_analyzed(req.analysis, req.target.profile_or_full());
-                Ok([m.latency_ms, m.memory_mb, m.energy_j])
-            })
-            .collect())
+    fn predict_into(
+        &mut self,
+        requests: &[PredictRequest<'_>],
+        out: &mut Vec<RawOutcome>,
+    ) -> Result<()> {
+        out.extend(requests.iter().map(|req| {
+            if req.target.device != "a100" {
+                return Err(format!(
+                    "unknown device {:?} (the simulator models a100 only)",
+                    req.target.device
+                ));
+            }
+            // Featurize exactly like the PJRT path would (from the
+            // carried analysis, into the padded slot); a `max_nodes`
+            // overflow fails here with the same per-request error.
+            if let Err(e) =
+                self.buffers
+                    .fill_graph_analyzed(req.graph, req.analysis, &self.norm, 0)
+            {
+                return Err(format!("{e:#}"));
+            }
+            let m = self
+                .sim
+                .measure_on_analyzed(req.analysis, req.target.profile_or_full());
+            Ok([m.latency_ms, m.memory_mb, m.energy_j])
+        }));
+        Ok(())
     }
 }
 
@@ -381,6 +402,27 @@ mod tests {
             .unwrap();
         assert!(out[0].as_ref().unwrap_err().contains("max_nodes"));
         assert!(out[1].is_ok());
+    }
+
+    #[test]
+    fn predict_into_appends_into_a_reused_buffer() {
+        // The serving path hands the same outcome vector to every batch;
+        // the backend must append exactly requests.len() outcomes and must
+        // not be confused by retained capacity.
+        let mut b = SimBackend::new();
+        let g = Family::ResNet.generate(1);
+        let an = GraphAnalysis::of(&g);
+        let t = full();
+        let mut out = Vec::with_capacity(8);
+        b.predict_into(&[req(&g, &an, &t)], &mut out).unwrap();
+        assert_eq!(out.len(), 1);
+        let first = out[0].clone();
+        out.clear();
+        b.predict_into(&[req(&g, &an, &t), req(&g, &an, &t)], &mut out)
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0], first, "reused buffer must not change answers");
+        assert_eq!(out[1], first);
     }
 
     #[test]

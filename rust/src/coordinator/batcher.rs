@@ -1,0 +1,1013 @@
+//! Batch formation: the bounded priority [`JobQueue`], the size-or-deadline
+//! grow policy with cache-aware admission, and the single-former pipeline
+//! (former → handoff ring → workers) that replaced per-worker batching.
+//!
+//! Why a single former: with `--executor-threads > 1`, every worker used to
+//! run the grow loop independently, so under a slow trickle several workers
+//! camped on the same queued jobs, each burning a full `max_wait` window
+//! (and a condvar wakeup storm) to admit a batch another camper would
+//! steal. Centralizing admission in one former at a time gives three
+//! guarantees the per-worker design could not:
+//!
+//! * **One wait, ever** — a job's batch is closed by the single former no
+//!   later than `max_wait` after the batch's first arrival; a closed batch
+//!   is handed over the ring and never re-waited by a worker.
+//! * **Arrival-gap linger** — because exactly one owner observes the
+//!   arrival stream, it can close a batch early when a full linger slice
+//!   (`max_wait / 8`) passes with no new arrivals: under a trickle there
+//!   is provably nothing to batch with, so waiting out the full window
+//!   only inflates p99. Campers cannot do this (each sees a private,
+//!   incomplete view of arrivals).
+//! * **No batch behind a busy worker** — the closed batch goes into the
+//!   [`BatchRing`]; any idle worker picks it up immediately, and a worker
+//!   that finds the ring empty steals the former role
+//!   ([`FormerRole::try_acquire`]) instead of sleeping.
+//!
+//! Modes ([`BatchFormerMode`], `--batch-former`): `leader` (default) — the
+//! former role floats between idle workers; `thread` — a dedicated
+//! lightweight former thread owns admission; `off` — the pre-PR-5
+//! per-worker grow loop, kept as the comparison baseline for the
+//! `serving_throughput` trickle scenario.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::cache::{CacheKey, Target};
+use crate::ir::Graph;
+use crate::simulator::GraphAnalysis;
+
+use super::protocol::Prediction;
+
+/// Where batches are formed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BatchFormerMode {
+    /// Every worker runs the grow loop itself (the legacy pipeline; the
+    /// baseline of the trickle bench).
+    Off,
+    /// A dedicated lightweight thread owns admission; workers only
+    /// execute.
+    Thread,
+    /// Leader/follower: an idle worker holds the former role, forms one
+    /// batch, hands it over the ring and loops; workers finding the ring
+    /// empty steal the role instead of sleeping.
+    #[default]
+    Leader,
+}
+
+impl BatchFormerMode {
+    pub fn parse(s: &str) -> std::result::Result<BatchFormerMode, String> {
+        match s {
+            "off" => Ok(BatchFormerMode::Off),
+            "thread" => Ok(BatchFormerMode::Thread),
+            "leader" => Ok(BatchFormerMode::Leader),
+            other => Err(format!(
+                "unknown batch-former mode {other:?} (expected off|thread|leader)"
+            )),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BatchFormerMode::Off => "off",
+            BatchFormerMode::Thread => "thread",
+            BatchFormerMode::Leader => "leader",
+        }
+    }
+}
+
+/// The linger slice of the former's arrival-gap early close: a batch still
+/// below `max_batch` is closed once a full slice passes with no new
+/// arrival. An eighth of the window keeps bursts batching (arrivals inside
+/// a slice reset it) while a trickle closes ~8x earlier than the deadline.
+pub fn linger_slice(max_wait: Duration) -> Duration {
+    (max_wait / 8).max(Duration::from_micros(50))
+}
+
+/// One queued prediction request, carrying its one-pass analysis so
+/// nothing downstream re-traverses the graph.
+pub(crate) struct Job {
+    pub graph: Graph,
+    pub analysis: GraphAnalysis,
+    pub target: Target,
+    pub key: Option<CacheKey>,
+    pub enqueued: Instant,
+    pub reply: Sender<Result<Prediction>>,
+}
+
+/// A closed batch plus how many of its jobs jumped an older queued miss
+/// (for the `priority_admissions` counter) and the longest queue residency
+/// (enqueue → admission) among its jobs — the gauge behind the
+/// one-`max_wait` residency bound.
+pub(crate) struct Batch {
+    pub jobs: Vec<Job>,
+    pub jumped: u64,
+    pub max_residency: Duration,
+}
+
+/// Bounded MPMC job queue with condvar-based backpressure and cache-aware
+/// batch admission. Replaces the old mpsc channel so admission can pop
+/// *batches* and reorder by single-flight follower count — with a channel,
+/// a hot miss with a growing crowd of parked followers would wait behind
+/// every older cold miss.
+pub(crate) struct JobQueue {
+    inner: Mutex<JobQueueInner>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+    /// High-water mark of the queued-job count (never reset; the
+    /// `queue_depth_hwm` gauge).
+    hwm: AtomicU64,
+}
+
+struct JobQueueInner {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+impl JobQueue {
+    pub fn new(capacity: usize) -> JobQueue {
+        JobQueue {
+            inner: Mutex::new(JobQueueInner {
+                jobs: VecDeque::new(),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: capacity.max(1),
+            hwm: AtomicU64::new(0),
+        }
+    }
+
+    /// Currently queued jobs (the `queue_depth` gauge).
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().jobs.len()
+    }
+
+    /// Most jobs ever queued at once (the `queue_depth_hwm` gauge).
+    pub fn depth_high_water(&self) -> u64 {
+        self.hwm.load(Ordering::Relaxed)
+    }
+
+    /// Enqueue, blocking while full (backpressure — the old
+    /// `sync_channel` semantics). Returns the job back when the queue is
+    /// closed (shutdown), so the caller can unwind its single-flight.
+    pub fn push(&self, job: Job) -> std::result::Result<(), Job> {
+        let mut q = self.inner.lock().unwrap();
+        while q.jobs.len() >= self.capacity && !q.closed {
+            q = self.not_full.wait(q).unwrap();
+        }
+        if q.closed {
+            return Err(job);
+        }
+        q.jobs.push_back(job);
+        let depth = q.jobs.len() as u64;
+        self.hwm.fetch_max(depth, Ordering::Relaxed);
+        drop(q);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Close the queue: pushes fail, poppers drain what is left and then
+    /// observe `None`. Wakes every waiter.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Pop one batch: block for the first job, then keep the batch open
+    /// until `max_b` jobs are queued or `max_wait` elapses — or, with
+    /// `linger` set (former modes), until a full linger slice passes with
+    /// no new arrival — then admit up to `max_b` jobs, highest priority
+    /// first (parked single-flight followers), FIFO among ties.
+    /// `priorities` maps the queued jobs to per-job priorities in one call
+    /// (so its lock cost is one acquisition per admission decision) and is
+    /// only consulted when the queue holds more jobs than the batch
+    /// admits. Returns `None` when closed and drained.
+    pub fn pop_batch(
+        &self,
+        max_b: usize,
+        max_wait: Duration,
+        linger: Option<Duration>,
+        priorities: impl Fn(&VecDeque<Job>) -> Vec<usize>,
+    ) -> Option<Batch> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            // Block for the first job.
+            loop {
+                if !q.jobs.is_empty() {
+                    break;
+                }
+                if q.closed {
+                    return None;
+                }
+                q = self.not_empty.wait(q).unwrap();
+            }
+            // Grow: keep the batch open until the queue could fill it or
+            // the deadline passes. With a linger, a slice that elapses
+            // with no arrival closes early — under a trickle the rest of
+            // the window cannot add anything, it only inflates latency.
+            // (Spurious wakeups just re-check.)
+            let deadline = Instant::now() + max_wait;
+            while q.jobs.len() < max_b && !q.closed {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let mut wait = deadline - now;
+                if let Some(slice) = linger {
+                    wait = wait.min(slice);
+                }
+                let len_before = q.jobs.len();
+                let (guard, timed_out) = self.not_empty.wait_timeout(q, wait).unwrap();
+                q = guard;
+                if linger.is_some() && timed_out.timed_out() && q.jobs.len() == len_before {
+                    break; // a full linger slice with no arrivals
+                }
+            }
+            // A concurrent popper may have drained the queue mid-grow
+            // (`off` mode only — former modes have one popper at a time);
+            // go back to blocking for a first job.
+            if !q.jobs.is_empty() {
+                break;
+            }
+            if q.closed {
+                return None;
+            }
+        }
+        // Cache-aware admission: when more jobs are queued than the batch
+        // holds, admit by descending parked-follower count (stable order
+        // among ties preserves FIFO fairness).
+        let take = q.jobs.len().min(max_b);
+        let mut order: Vec<usize> = (0..q.jobs.len()).collect();
+        let mut jumped = 0u64;
+        if take < q.jobs.len() {
+            let prio = priorities(&q.jobs);
+            debug_assert_eq!(prio.len(), q.jobs.len());
+            order.sort_by_key(|&i| (std::cmp::Reverse(prio[i]), i));
+            let oldest_left_behind = order[take..].iter().copied().min().unwrap_or(usize::MAX);
+            jumped = order[..take]
+                .iter()
+                .filter(|&&i| i > oldest_left_behind)
+                .count() as u64;
+        }
+        let mut picked: Vec<usize> = order[..take].to_vec();
+        picked.sort_unstable();
+        let mut jobs = Vec::with_capacity(take);
+        // Remove back-to-front so earlier indices stay valid.
+        for &i in picked.iter().rev() {
+            jobs.push(q.jobs.remove(i).expect("picked index in range"));
+        }
+        jobs.reverse(); // restore FIFO order within the admitted batch
+        drop(q);
+        self.not_full.notify_all();
+        let max_residency = jobs
+            .iter()
+            .map(|j| j.enqueued.elapsed())
+            .max()
+            .unwrap_or_default();
+        Some(Batch {
+            jobs,
+            jumped,
+            max_residency,
+        })
+    }
+}
+
+/// The handoff ring between the former and the workers: a small bounded
+/// deque of *closed* batches. Bounding it (at roughly the worker count)
+/// keeps unadmitted jobs in the [`JobQueue`] where cache-aware priority
+/// admission still applies — an unbounded ring would let the former strip
+/// the queue bare and freeze admission order long before a worker is
+/// ready.
+pub(crate) struct BatchRing {
+    inner: Mutex<RingInner>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+    hwm: AtomicU64,
+}
+
+struct RingInner {
+    batches: VecDeque<Batch>,
+    closed: bool,
+    /// Bumped by [`BatchRing::nudge`] whenever the former role frees, so
+    /// `leader`-mode followers parked on the ring re-contend for the role
+    /// instead of sleeping behind a busy ex-former. A counter (not a
+    /// plain notify) closes the lost-wakeup race: a follower snapshots it
+    /// *before* trying the role, so a nudge landing between its failed
+    /// acquire and its wait is still observed.
+    nudges: u64,
+}
+
+/// Outcome of a nudge-aware ring pop ([`BatchRing::pop_or_nudged`]).
+pub(crate) enum RingPop {
+    /// A closed batch to execute.
+    Batch(Batch),
+    /// Ring closed and drained: the pipeline is shutting down.
+    Closed,
+    /// The former role was freed since the caller's snapshot — re-contend
+    /// for it.
+    Nudged,
+}
+
+impl BatchRing {
+    pub fn new(capacity: usize) -> BatchRing {
+        BatchRing {
+            inner: Mutex::new(RingInner {
+                batches: VecDeque::new(),
+                closed: false,
+                nudges: 0,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: capacity.max(1),
+            hwm: AtomicU64::new(0),
+        }
+    }
+
+    /// Snapshot the nudge counter — take it *before* trying the former
+    /// role, pass it to [`BatchRing::pop_or_nudged`].
+    pub fn nudge_count(&self) -> u64 {
+        self.inner.lock().unwrap().nudges
+    }
+
+    /// Signal that the former role was freed: wakes every parked follower
+    /// so one of them claims the role (the others go back to waiting).
+    pub fn nudge(&self) {
+        self.inner.lock().unwrap().nudges += 1;
+        self.not_empty.notify_all();
+    }
+
+    /// Closed batches currently awaiting a worker (the `ring_depth` gauge).
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().batches.len()
+    }
+
+    /// Most batches ever parked at once (the `ring_depth_hwm` gauge).
+    pub fn depth_high_water(&self) -> u64 {
+        self.hwm.load(Ordering::Relaxed)
+    }
+
+    /// Hand a closed batch to the pool, blocking while the ring is full.
+    /// Returns the batch back if the ring is already closed (a shutdown
+    /// race) — the caller must execute it inline so its replies are never
+    /// dropped.
+    pub fn push(&self, batch: Batch) -> std::result::Result<(), Batch> {
+        let mut r = self.inner.lock().unwrap();
+        while r.batches.len() >= self.capacity && !r.closed {
+            r = self.not_full.wait(r).unwrap();
+        }
+        if r.closed {
+            return Err(batch);
+        }
+        r.batches.push_back(batch);
+        let depth = r.batches.len() as u64;
+        self.hwm.fetch_max(depth, Ordering::Relaxed);
+        drop(r);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking pop (the worker's first stop on each loop: never let a
+    /// closed batch wait while this worker is idle).
+    pub fn try_pop(&self) -> Option<Batch> {
+        let mut r = self.inner.lock().unwrap();
+        let b = r.batches.pop_front();
+        if b.is_some() {
+            drop(r);
+            self.not_full.notify_one();
+        }
+        b
+    }
+
+    /// Blocking pop: returns `None` only when the ring is closed *and*
+    /// drained, so shutdown never strands a formed batch.
+    pub fn pop_blocking(&self) -> Option<Batch> {
+        let mut r = self.inner.lock().unwrap();
+        loop {
+            if let Some(b) = r.batches.pop_front() {
+                drop(r);
+                self.not_full.notify_one();
+                return Some(b);
+            }
+            if r.closed {
+                return None;
+            }
+            r = self.not_empty.wait(r).unwrap();
+        }
+    }
+
+    /// Nudge-aware pop for `leader`-mode followers: block until a batch
+    /// lands, the ring closes, or the former role is freed (`nudges`
+    /// moved past `seen`, taken via [`BatchRing::nudge_count`] *before*
+    /// the failed role acquire). Without the nudge, this failure mode
+    /// exists: the former releases the role and takes its own batch to
+    /// execute, the notified follower finds the ring empty and goes back
+    /// to sleep — and the free role sits unclaimed behind the busy
+    /// ex-former while new jobs queue. At true idle nobody is nudging, so
+    /// followers block indefinitely (no polling).
+    pub fn pop_or_nudged(&self, seen: u64) -> RingPop {
+        let mut r = self.inner.lock().unwrap();
+        loop {
+            if let Some(b) = r.batches.pop_front() {
+                drop(r);
+                self.not_full.notify_one();
+                return RingPop::Batch(b);
+            }
+            if r.closed {
+                return RingPop::Closed;
+            }
+            if r.nudges != seen {
+                return RingPop::Nudged;
+            }
+            r = self.not_empty.wait(r).unwrap();
+        }
+    }
+
+    /// Close the ring: pushes bounce, poppers drain then observe `None`.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+/// The floating former role of `leader` mode: at most one worker forms
+/// batches at any instant, which is the structural guarantee that no two
+/// workers ever camp on the same jobs (and therefore that no job's
+/// admission waits on two overlapping `max_wait` windows).
+#[derive(Default)]
+pub(crate) struct FormerRole(AtomicBool);
+
+impl FormerRole {
+    pub fn new() -> FormerRole {
+        FormerRole(AtomicBool::new(false))
+    }
+
+    /// Try to become the former; false when another worker holds the role.
+    pub fn try_acquire(&self) -> bool {
+        self.0
+            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_ok()
+    }
+
+    /// Release the role (the ex-former loops straight back to the ring, so
+    /// a free role is always observed by at least one awake worker).
+    pub fn release(&self) {
+        self.0.store(false, Ordering::Release);
+    }
+}
+
+/// Aging bound for cache-aware batch admission: a miss that has waited
+/// this long outranks any follower count, so every queued job makes
+/// progress even under a sustained storm of hotter keys.
+pub(crate) fn starvation_bound(max_wait: Duration) -> Duration {
+    (max_wait * 64).max(Duration::from_millis(250))
+}
+
+/// Cache-aware admission priority of one queued miss: its parked
+/// single-flight follower count, unless it has aged past the starvation
+/// bound — then it outranks everything.
+pub(crate) fn admission_priority(waited: Duration, followers: usize, bound: Duration) -> usize {
+    if waited >= bound {
+        usize::MAX
+    } else {
+        followers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::{self, Receiver};
+    use std::sync::Arc;
+
+    fn fifo_prio(jobs: &VecDeque<Job>) -> Vec<usize> {
+        vec![0; jobs.len()]
+    }
+
+    fn dummy_job(tag: u64) -> (Job, Receiver<Result<Prediction>>) {
+        let (reply, rx) = mpsc::channel();
+        let mut b = crate::ir::GraphBuilder::new("t", &format!("q-{tag}"), 1);
+        let x = b.input(vec![1, 3, 8, 8]);
+        b.conv_relu(x, 4 + tag as usize, 3, 1, 1);
+        let graph = b.finish();
+        let analysis = GraphAnalysis::of(&graph);
+        let key = Some(CacheKey::new(analysis.fingerprint, &Target::default()));
+        (
+            Job {
+                graph,
+                analysis,
+                target: Target::default(),
+                key,
+                enqueued: Instant::now(),
+                reply,
+            },
+            rx,
+        )
+    }
+
+    impl Job {
+        fn variant_tag(&self) -> &str {
+            &self.graph.variant
+        }
+    }
+
+    #[test]
+    fn mode_parses_and_prints() {
+        for (s, m) in [
+            ("off", BatchFormerMode::Off),
+            ("thread", BatchFormerMode::Thread),
+            ("leader", BatchFormerMode::Leader),
+        ] {
+            assert_eq!(BatchFormerMode::parse(s).unwrap(), m);
+            assert_eq!(m.as_str(), s);
+        }
+        assert!(BatchFormerMode::parse("eager").is_err());
+        assert_eq!(BatchFormerMode::default(), BatchFormerMode::Leader);
+    }
+
+    #[test]
+    fn linger_is_a_fraction_of_the_window_with_a_floor() {
+        assert_eq!(linger_slice(Duration::from_millis(8)), Duration::from_millis(1));
+        assert_eq!(linger_slice(Duration::ZERO), Duration::from_micros(50));
+    }
+
+    #[test]
+    fn job_queue_admits_by_priority_then_fifo() {
+        let q = JobQueue::new(16);
+        // Three jobs, priorities 0 / 2 / 1: a 1-slot batch admits the
+        // 2-follower job first even though it arrived second.
+        let mut prios = std::collections::HashMap::new();
+        for (tag, p) in [(0u64, 0usize), (1, 2), (2, 1)] {
+            let (job, _rx) = dummy_job(tag);
+            prios.insert(job.analysis.fingerprint.as_u128(), p);
+            q.push(job).map_err(|_| ()).unwrap();
+        }
+        let prio = |jobs: &VecDeque<Job>| -> Vec<usize> {
+            jobs.iter()
+                .map(|j| prios[&j.analysis.fingerprint.as_u128()])
+                .collect()
+        };
+        let b1 = q.pop_batch(1, Duration::ZERO, None, &prio).unwrap();
+        assert_eq!(b1.jobs[0].variant_tag(), "q-1");
+        assert_eq!(b1.jumped, 1, "q-1 jumped the older q-0");
+        let b2 = q.pop_batch(1, Duration::ZERO, None, &prio).unwrap();
+        assert_eq!(b2.jobs[0].variant_tag(), "q-2");
+        let b3 = q.pop_batch(1, Duration::ZERO, None, &prio).unwrap();
+        assert_eq!(b3.jobs[0].variant_tag(), "q-0");
+        assert_eq!(b3.jumped, 0, "nothing left to jump");
+    }
+
+    #[test]
+    fn job_queue_equal_priorities_are_fifo() {
+        let q = JobQueue::new(16);
+        for tag in 0..4u64 {
+            let (job, _rx) = dummy_job(tag);
+            q.push(job).map_err(|_| ()).unwrap();
+        }
+        let b = q.pop_batch(2, Duration::ZERO, None, fifo_prio).unwrap();
+        assert_eq!(b.jobs.len(), 2);
+        assert_eq!(b.jobs[0].variant_tag(), "q-0");
+        assert_eq!(b.jobs[1].variant_tag(), "q-1");
+        assert_eq!(b.jumped, 0);
+    }
+
+    #[test]
+    fn job_queue_close_drains_then_ends() {
+        let q = JobQueue::new(16);
+        let (job, _rx) = dummy_job(0);
+        q.push(job).map_err(|_| ()).unwrap();
+        q.close();
+        // Queued work is still served after close...
+        assert!(q.pop_batch(8, Duration::ZERO, None, fifo_prio).is_some());
+        // ...then poppers see the end, and pushes bounce.
+        assert!(q.pop_batch(8, Duration::ZERO, None, fifo_prio).is_none());
+        let (job, _rx) = dummy_job(1);
+        assert!(q.push(job).is_err());
+    }
+
+    #[test]
+    fn job_queue_backpressure_blocks_push_until_pop() {
+        let q = Arc::new(JobQueue::new(1));
+        let (job, _rx0) = dummy_job(0);
+        q.push(job).map_err(|_| ()).unwrap();
+        // A second push must block until a pop frees a slot.
+        let (done_tx, done_rx) = mpsc::channel();
+        let q2 = q.clone();
+        let handle = std::thread::spawn(move || {
+            let (job, rx1) = dummy_job(1);
+            let pushed = q2.push(job).is_ok();
+            let _ = done_tx.send(pushed);
+            rx1
+        });
+        assert!(
+            done_rx.recv_timeout(Duration::from_millis(100)).is_err(),
+            "push into a full queue must block"
+        );
+        let b = q.pop_batch(1, Duration::ZERO, None, fifo_prio).unwrap();
+        assert_eq!(b.jobs[0].variant_tag(), "q-0");
+        assert_eq!(
+            done_rx.recv_timeout(Duration::from_secs(5)),
+            Ok(true),
+            "pop must unblock the parked push"
+        );
+        let _ = handle.join().unwrap();
+        // The unblocked job is now queued.
+        let b = q.pop_batch(1, Duration::ZERO, None, fifo_prio).unwrap();
+        assert_eq!(b.jobs[0].variant_tag(), "q-1");
+    }
+
+    #[test]
+    fn job_queue_close_unblocks_parked_push_with_job_back() {
+        let q = Arc::new(JobQueue::new(1));
+        let (job, _rx0) = dummy_job(0);
+        q.push(job).map_err(|_| ()).unwrap();
+        let q2 = q.clone();
+        let handle = std::thread::spawn(move || {
+            let (job, _rx1) = dummy_job(1);
+            // Blocks on the full queue; close() must hand the job back.
+            q2.push(job).is_err()
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        q.close();
+        assert!(handle.join().unwrap(), "close must bounce the parked push");
+    }
+
+    #[test]
+    fn job_queue_tracks_depth_and_high_water() {
+        let q = JobQueue::new(16);
+        assert_eq!(q.depth(), 0);
+        assert_eq!(q.depth_high_water(), 0);
+        for tag in 0..3u64 {
+            let (job, _rx) = dummy_job(tag);
+            q.push(job).map_err(|_| ()).unwrap();
+        }
+        assert_eq!(q.depth(), 3);
+        assert_eq!(q.depth_high_water(), 3);
+        let _ = q.pop_batch(2, Duration::ZERO, None, fifo_prio).unwrap();
+        assert_eq!(q.depth(), 1, "two admitted, one left");
+        assert_eq!(q.depth_high_water(), 3, "high-water never recedes");
+    }
+
+    #[test]
+    fn admission_priority_is_follower_count_below_the_bound() {
+        let bound = starvation_bound(Duration::from_millis(2));
+        assert_eq!(admission_priority(Duration::ZERO, 0, bound), 0);
+        assert_eq!(admission_priority(Duration::from_millis(1), 7, bound), 7);
+        // Bound floor: 64x max_wait but never under 250ms.
+        assert_eq!(bound, Duration::from_millis(250));
+        assert_eq!(
+            starvation_bound(Duration::from_millis(10)),
+            Duration::from_millis(640)
+        );
+    }
+
+    #[test]
+    fn admission_priority_aged_miss_outranks_any_follower_count() {
+        let bound = starvation_bound(Duration::from_millis(2));
+        let aged = admission_priority(bound, 0, bound);
+        assert_eq!(aged, usize::MAX);
+        assert!(aged > admission_priority(Duration::ZERO, usize::MAX - 1, bound));
+    }
+
+    #[test]
+    fn job_queue_starved_job_is_admitted_ahead_of_hot_keys() {
+        // Three jobs: the first is aged past the starvation bound, the
+        // others carry huge follower counts. A 1-slot batch admits the
+        // aged one first.
+        let q = JobQueue::new(16);
+        let bound = Duration::from_millis(250);
+        for (tag, backdate) in [(0u64, bound * 2), (1, Duration::ZERO), (2, Duration::ZERO)] {
+            let (mut job, _rx) = dummy_job(tag);
+            job.enqueued = Instant::now() - backdate;
+            q.push(job).map_err(|_| ()).unwrap();
+        }
+        let prio = |jobs: &VecDeque<Job>| -> Vec<usize> {
+            jobs.iter()
+                .map(|j| {
+                    let followers = if j.variant_tag() == "q-0" { 0 } else { 1000 };
+                    admission_priority(j.enqueued.elapsed(), followers, bound)
+                })
+                .collect()
+        };
+        let b = q.pop_batch(1, Duration::ZERO, None, &prio).unwrap();
+        assert_eq!(b.jobs[0].variant_tag(), "q-0", "aged job must not starve");
+    }
+
+    #[test]
+    fn job_queue_partial_batch_returns_after_deadline() {
+        let q = JobQueue::new(16);
+        let (job, _rx) = dummy_job(0);
+        q.push(job).map_err(|_| ()).unwrap();
+        // max_b 8 but only one job queued: a zero deadline admits it alone.
+        let b = q.pop_batch(8, Duration::ZERO, None, fifo_prio).unwrap();
+        assert_eq!(b.jobs.len(), 1);
+        assert_eq!(b.jumped, 0);
+    }
+
+    #[test]
+    fn size_close_is_immediate_despite_a_long_deadline() {
+        // A full batch must not wait out any of the window.
+        let q = JobQueue::new(16);
+        for tag in 0..4u64 {
+            let (job, _rx) = dummy_job(tag);
+            q.push(job).map_err(|_| ()).unwrap();
+        }
+        let t0 = Instant::now();
+        let b = q
+            .pop_batch(4, Duration::from_secs(10), None, fifo_prio)
+            .unwrap();
+        assert_eq!(b.jobs.len(), 4);
+        assert!(
+            t0.elapsed() < Duration::from_secs(1),
+            "size-close must not wait the deadline ({:?})",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn deadline_close_admits_a_partial_batch() {
+        // One job, a short real deadline, room for more: the batch closes
+        // at the deadline with what it has.
+        let q = JobQueue::new(16);
+        let (job, _rx) = dummy_job(0);
+        q.push(job).map_err(|_| ()).unwrap();
+        let t0 = Instant::now();
+        let b = q
+            .pop_batch(8, Duration::from_millis(30), None, fifo_prio)
+            .unwrap();
+        assert_eq!(b.jobs.len(), 1);
+        let waited = t0.elapsed();
+        assert!(
+            waited >= Duration::from_millis(25),
+            "deadline-close should wait ~the window, waited {waited:?}"
+        );
+        assert!(b.max_residency >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn linger_closes_a_trickle_batch_early() {
+        // With a linger slice, a batch with no follow-up arrivals closes
+        // after ~one slice instead of the full window.
+        let q = JobQueue::new(16);
+        let (job, _rx) = dummy_job(0);
+        q.push(job).map_err(|_| ()).unwrap();
+        let t0 = Instant::now();
+        let b = q
+            .pop_batch(
+                8,
+                Duration::from_secs(5),
+                Some(Duration::from_millis(20)),
+                fifo_prio,
+            )
+            .unwrap();
+        assert_eq!(b.jobs.len(), 1);
+        let waited = t0.elapsed();
+        assert!(
+            waited < Duration::from_secs(1),
+            "linger must close far before the 5s deadline, waited {waited:?}"
+        );
+        assert!(
+            waited >= Duration::from_millis(15),
+            "the batch still lingers one slice, waited {waited:?}"
+        );
+    }
+
+    #[test]
+    fn batch_residency_is_measured_at_admission() {
+        let q = JobQueue::new(16);
+        let (mut job, _rx) = dummy_job(0);
+        job.enqueued = Instant::now() - Duration::from_millis(500);
+        q.push(job).map_err(|_| ()).unwrap();
+        let b = q.pop_batch(1, Duration::ZERO, None, fifo_prio).unwrap();
+        assert!(b.max_residency >= Duration::from_millis(500));
+    }
+
+    #[test]
+    fn ring_push_pop_fifo_with_gauges() {
+        let ring = BatchRing::new(4);
+        assert_eq!(ring.depth(), 0);
+        for tag in 0..3u64 {
+            let (job, _rx) = dummy_job(tag);
+            ring.push(Batch {
+                jobs: vec![job],
+                jumped: 0,
+                max_residency: Duration::ZERO,
+            })
+            .map_err(|_| ())
+            .unwrap();
+        }
+        assert_eq!(ring.depth(), 3);
+        assert_eq!(ring.depth_high_water(), 3);
+        assert_eq!(ring.try_pop().unwrap().jobs[0].variant_tag(), "q-0");
+        assert_eq!(ring.pop_blocking().unwrap().jobs[0].variant_tag(), "q-1");
+        assert_eq!(ring.depth(), 1);
+        assert_eq!(ring.depth_high_water(), 3);
+    }
+
+    #[test]
+    fn ring_close_drains_then_ends_and_bounces_pushes() {
+        let ring = BatchRing::new(4);
+        let (job, _rx) = dummy_job(0);
+        ring.push(Batch {
+            jobs: vec![job],
+            jumped: 0,
+            max_residency: Duration::ZERO,
+        })
+        .map_err(|_| ())
+        .unwrap();
+        ring.close();
+        // A formed batch survives close (drain-on-shutdown)...
+        assert!(ring.pop_blocking().is_some());
+        assert!(ring.pop_blocking().is_none());
+        assert!(ring.try_pop().is_none());
+        // ...and a post-close push hands the batch back for inline
+        // execution instead of dropping its replies.
+        let (job, _rx) = dummy_job(1);
+        let bounced = ring.push(Batch {
+            jobs: vec![job],
+            jumped: 0,
+            max_residency: Duration::ZERO,
+        });
+        assert!(bounced.is_err());
+        assert_eq!(bounced.err().unwrap().jobs[0].variant_tag(), "q-1");
+    }
+
+    #[test]
+    fn ring_bounded_push_blocks_until_pop() {
+        let ring = Arc::new(BatchRing::new(1));
+        let (job, _rx) = dummy_job(0);
+        ring.push(Batch {
+            jobs: vec![job],
+            jumped: 0,
+            max_residency: Duration::ZERO,
+        })
+        .map_err(|_| ())
+        .unwrap();
+        let (done_tx, done_rx) = mpsc::channel();
+        let r2 = ring.clone();
+        let handle = std::thread::spawn(move || {
+            let (job, rx) = dummy_job(1);
+            let ok = r2
+                .push(Batch {
+                    jobs: vec![job],
+                    jumped: 0,
+                    max_residency: Duration::ZERO,
+                })
+                .is_ok();
+            let _ = done_tx.send(ok);
+            rx
+        });
+        assert!(
+            done_rx.recv_timeout(Duration::from_millis(100)).is_err(),
+            "push into a full ring must block (the queue keeps admission)"
+        );
+        assert!(ring.try_pop().is_some());
+        assert_eq!(done_rx.recv_timeout(Duration::from_secs(5)), Ok(true));
+        let _ = handle.join().unwrap();
+    }
+
+    #[test]
+    fn ring_pop_or_nudged_sees_nudges_pushes_and_close() {
+        let ring = BatchRing::new(4);
+        // A nudge that already happened relative to the snapshot returns
+        // immediately (the lost-wakeup race is closed by the counter).
+        let seen = ring.nudge_count();
+        ring.nudge();
+        assert!(matches!(ring.pop_or_nudged(seen), RingPop::Nudged));
+        // A fresh snapshot ignores old nudges and sees the batch instead.
+        let seen = ring.nudge_count();
+        let (job, _rx) = dummy_job(0);
+        ring.push(Batch {
+            jobs: vec![job],
+            jumped: 0,
+            max_residency: Duration::ZERO,
+        })
+        .map_err(|_| ())
+        .unwrap();
+        assert!(matches!(ring.pop_or_nudged(seen), RingPop::Batch(_)));
+        ring.close();
+        assert!(matches!(ring.pop_or_nudged(seen), RingPop::Closed));
+    }
+
+    #[test]
+    fn ring_nudge_wakes_a_parked_follower() {
+        let ring = Arc::new(BatchRing::new(4));
+        let seen = ring.nudge_count();
+        let r2 = ring.clone();
+        let handle =
+            std::thread::spawn(move || matches!(r2.pop_or_nudged(seen), RingPop::Nudged));
+        std::thread::sleep(Duration::from_millis(50));
+        ring.nudge();
+        assert!(handle.join().unwrap(), "a parked follower must observe the nudge");
+    }
+
+    #[test]
+    fn former_role_is_exclusive() {
+        let role = FormerRole::new();
+        assert!(role.try_acquire());
+        assert!(!role.try_acquire(), "role is held");
+        role.release();
+        assert!(role.try_acquire(), "released role is stealable");
+    }
+
+    #[test]
+    fn former_never_double_waits_a_job() {
+        // The no-double-max_wait contract: a single former admits a lone
+        // job no later than one window after its arrival, even with a
+        // second pop racing for the role (it cannot — the role is held).
+        let q = Arc::new(JobQueue::new(16));
+        let role = Arc::new(FormerRole::new());
+        assert!(role.try_acquire());
+        let (job, _rx) = dummy_job(0);
+        let t0 = Instant::now();
+        q.push(job).map_err(|_| ()).unwrap();
+        let max_wait = Duration::from_millis(200);
+        let b = q.pop_batch(32, max_wait, None, fifo_prio).unwrap();
+        role.release();
+        let waited = t0.elapsed();
+        assert_eq!(b.jobs.len(), 1);
+        assert!(
+            waited < max_wait * 2 - Duration::from_millis(50),
+            "one former = one window: waited {waited:?} for max_wait {max_wait:?}"
+        );
+        assert!(b.max_residency <= waited + Duration::from_millis(1));
+    }
+
+    /// Former-pipeline admission parity: forming batches through the
+    /// former + ring admits exactly the same multiset of jobs as draining
+    /// the queue with the legacy per-worker `pop_batch`, under identical
+    /// arrival sequences, batch sizes and priorities.
+    #[test]
+    fn proptest_former_admits_same_multiset_as_pop_batch() {
+        crate::util::proptest::proptest(40, |g| {
+            let n_jobs = g.usize_in(1, 24);
+            let max_b = g.usize_in(1, 8);
+            // Random (stable) priorities keyed off the tag.
+            let prios: Vec<usize> = (0..n_jobs).map(|_| g.usize_in(0, 5)).collect();
+            let tags: Vec<u64> = (0..n_jobs as u64).collect();
+
+            let fill = |q: &JobQueue| {
+                for &t in &tags {
+                    let (job, rx) = dummy_job(t);
+                    std::mem::forget(rx); // keep reply senders connected
+                    q.push(job).map_err(|_| ()).unwrap();
+                }
+                q.close();
+            };
+            let prio_of = |jobs: &VecDeque<Job>| -> Vec<usize> {
+                jobs.iter()
+                    .map(|j| {
+                        let tag: usize = j
+                            .variant_tag()
+                            .trim_start_matches("q-")
+                            .parse()
+                            .unwrap();
+                        prios[tag]
+                    })
+                    .collect()
+            };
+
+            // Legacy path: drain directly.
+            let legacy_q = JobQueue::new(64);
+            fill(&legacy_q);
+            let mut legacy: Vec<String> = Vec::new();
+            while let Some(b) = legacy_q.pop_batch(max_b, Duration::ZERO, None, &prio_of) {
+                legacy.extend(b.jobs.iter().map(|j| j.variant_tag().to_string()));
+            }
+
+            // Former path: form into the ring, then drain the ring.
+            let former_q = JobQueue::new(64);
+            fill(&former_q);
+            let ring = BatchRing::new(64);
+            while let Some(b) = former_q.pop_batch(
+                max_b,
+                Duration::ZERO,
+                Some(Duration::from_micros(50)),
+                &prio_of,
+            ) {
+                ring.push(b).map_err(|_| ()).unwrap();
+            }
+            ring.close();
+            let mut former: Vec<String> = Vec::new();
+            while let Some(b) = ring.pop_blocking() {
+                former.extend(b.jobs.iter().map(|j| j.variant_tag().to_string()));
+            }
+
+            let mut l = legacy.clone();
+            let mut f = former.clone();
+            l.sort();
+            f.sort();
+            crate::prop_assert_eq!(l, f);
+            crate::prop_assert_eq!(legacy.len(), tags.len());
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,369 @@
+//! Batch execution: the worker pool behind the former → ring → worker
+//! pipeline (see [`super::batcher`]), with per-worker reusable
+//! [`BatchScratch`] buffers so the steady-state hot path performs no
+//! per-batch allocation on the coordinator side (the backends already
+//! featurize into reused padded buffers; the scratch generalizes that
+//! through the handoff).
+//!
+//! Each worker owns one [`Backend`] instance (XLA client handles never
+//! cross threads) and, depending on [`BatchFormerMode`]:
+//!
+//! * `off`    — runs the grow loop itself (legacy pipeline),
+//! * `thread` — only executes batches popped from the ring (a dedicated
+//!   former thread owns admission, [`former_main`]),
+//! * `leader` — drains the ring first, steals the former role when the
+//!   ring is empty, and sleeps only when another worker is forming.
+//!
+//! Workers publish results to the cache, wake single-flight followers and
+//! reply *before* folding their counters (and per-request latencies, into
+//! the log-bucketed histogram) into [`Metrics`] under one short lock.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::cache::{ShardedLruCache, SingleFlight};
+use crate::mig;
+use crate::{log_info, log_warn};
+
+use super::backend::{Backend, BackendFactory, PredictRequest, RawOutcome};
+use super::batcher::{
+    admission_priority, starvation_bound, Batch, BatchFormerMode, BatchRing, FormerRole, Job,
+    JobQueue, RingPop,
+};
+use super::protocol::Prediction;
+use super::server::{CacheValue, Metrics};
+
+/// Everything a worker (or the dedicated former) shares with the
+/// coordinator: queue, ring, role, metrics and the cache plumbing.
+pub(crate) struct ExecutorShared {
+    pub queue: Arc<JobQueue>,
+    pub ring: Arc<BatchRing>,
+    pub role: Arc<FormerRole>,
+    pub metrics: Arc<Mutex<Metrics>>,
+    pub cache: Option<Arc<ShardedLruCache<CacheValue>>>,
+    pub flight: Option<Arc<SingleFlight<Prediction>>>,
+    pub mode: BatchFormerMode,
+    pub max_wait: Duration,
+    pub linger: Duration,
+    pub negative_ttl: Option<Duration>,
+}
+
+/// Per-worker reusable buffers: the request-slot vector handed to the
+/// backend, the per-request outcome vector the backend fills, and the
+/// per-request latency staging vector — all retain their capacity across
+/// batches, so a warm worker executes a batch without allocating.
+pub(crate) struct BatchScratch {
+    /// Empty between batches; its allocation is recycled across the
+    /// per-batch borrow lifetimes (see [`recycled`]).
+    requests: Vec<PredictRequest<'static>>,
+    outcomes: Vec<RawOutcome>,
+    latencies_us: Vec<u64>,
+}
+
+impl BatchScratch {
+    pub fn with_capacity(max_b: usize) -> BatchScratch {
+        BatchScratch {
+            requests: Vec::with_capacity(max_b),
+            outcomes: Vec::with_capacity(max_b),
+            latencies_us: Vec::with_capacity(2 * max_b),
+        }
+    }
+}
+
+/// Reuse a request vector's allocation across borrow lifetimes: the vector
+/// is emptied, so the in-place collect re-tags the (identical-layout)
+/// element type without touching the heap. Falls back to a fresh
+/// allocation only if the standard library ever stops reusing the buffer —
+/// a perf regression, never a correctness one.
+fn recycled<'a, 'b>(mut v: Vec<PredictRequest<'a>>) -> Vec<PredictRequest<'b>> {
+    v.clear();
+    v.into_iter().map(|_| unreachable!("vector was cleared")).collect()
+}
+
+/// Per-batch counters accumulated while publishing results (outside the
+/// metrics lock) and folded in afterwards under one short acquisition.
+#[derive(Default)]
+struct BatchOutcomeCounters {
+    coalesced: u64,
+    errors: u64,
+    reused: u64,
+}
+
+/// Execute one closed batch: drive the backend from the scratch buffers,
+/// publish per-request results to the cache (failures become short-TTL
+/// tombstones), wake followers, reply, then fold counters + latencies into
+/// the metrics under one short lock.
+pub(crate) fn execute_batch(
+    backend: &mut dyn Backend,
+    batch: Batch,
+    scratch: &mut BatchScratch,
+    sh: &ExecutorShared,
+) {
+    let Batch {
+        jobs,
+        jumped,
+        max_residency,
+    } = batch;
+    let n_jobs = jobs.len() as u64;
+
+    // Covariance: the 'static-typed (empty) buffer coerces down to the
+    // batch lifetime; `recycled` re-tags it on the way back.
+    let mut requests: Vec<PredictRequest<'_>> = std::mem::take(&mut scratch.requests);
+    requests.extend(jobs.iter().map(|j| PredictRequest {
+        graph: &j.graph,
+        analysis: &j.analysis,
+        target: &j.target,
+    }));
+    scratch.outcomes.clear();
+    let result = backend.predict_into(&requests, &mut scratch.outcomes);
+    scratch.requests = recycled(requests);
+
+    let result = match result {
+        Ok(()) if scratch.outcomes.len() == jobs.len() => Ok(()),
+        Ok(()) => Err(anyhow!(
+            "backend returned {} outcomes for {} jobs",
+            scratch.outcomes.len(),
+            jobs.len()
+        )),
+        Err(e) => Err(e),
+    };
+
+    // Publish to cache, wake followers and reply first — no lock held
+    // while senders run — then fold the counters into the metrics under
+    // one short acquisition.
+    scratch.latencies_us.clear();
+    let mut c = BatchOutcomeCounters::default();
+    match result {
+        Ok(()) => {
+            c.reused = n_jobs; // every served request consumed its carried analysis
+            for (job, outcome) in jobs.into_iter().zip(scratch.outcomes.drain(..)) {
+                match outcome {
+                    Ok(raw) => {
+                        let pred = Prediction {
+                            latency_ms: raw[0],
+                            memory_mb: raw[1],
+                            energy_j: raw[2],
+                            mig_profile: mig::predict_profile(raw[1])
+                                .map(|p| p.name().to_string()),
+                        };
+                        if let (Some(k), Some(cache)) = (job.key, &sh.cache) {
+                            cache.insert(k, CacheValue::Pred(pred.clone()));
+                        }
+                        if let (Some(k), Some(flight)) = (job.key, &sh.flight) {
+                            for w in flight.take(k.as_u128()) {
+                                c.coalesced += 1;
+                                scratch
+                                    .latencies_us
+                                    .push(w.enqueued.elapsed().as_micros() as u64);
+                                let _ = w.reply.send(Ok(pred.clone()));
+                            }
+                        }
+                        scratch
+                            .latencies_us
+                            .push(job.enqueued.elapsed().as_micros() as u64);
+                        let _ = job.reply.send(Ok(pred));
+                    }
+                    Err(msg) => {
+                        // Per-request failure: tombstone it so repeats are
+                        // served on the submit path, then fail the leader
+                        // and every parked follower.
+                        c.errors += 1;
+                        if let (Some(k), Some(cache), Some(ttl)) =
+                            (job.key, &sh.cache, sh.negative_ttl)
+                        {
+                            cache.insert_with_ttl(
+                                k,
+                                CacheValue::Tombstone(msg.clone()),
+                                Some(ttl),
+                            );
+                        }
+                        if let (Some(k), Some(flight)) = (job.key, &sh.flight) {
+                            for w in flight.take(k.as_u128()) {
+                                c.errors += 1;
+                                let _ = w.reply.send(Err(anyhow!("{msg}")));
+                            }
+                        }
+                        let _ = job.reply.send(Err(anyhow!("{msg}")));
+                    }
+                }
+            }
+        }
+        Err(e) => {
+            // Batch-level (infrastructure) failure: nothing cacheable.
+            let msg = format!("{e:#}");
+            for job in jobs {
+                c.errors += 1;
+                if let (Some(k), Some(flight)) = (job.key, &sh.flight) {
+                    for w in flight.take(k.as_u128()) {
+                        c.errors += 1;
+                        let _ = w.reply.send(Err(anyhow!("{msg}")));
+                    }
+                }
+                let _ = job.reply.send(Err(anyhow!("{msg}")));
+            }
+        }
+    }
+
+    let mut m = sh.metrics.lock().unwrap();
+    m.batches += 1;
+    m.batch_fill_sum += n_jobs;
+    m.coalesced += c.coalesced;
+    m.errors += c.errors;
+    m.analyses_reused += c.reused;
+    m.priority_admissions += jumped;
+    m.queue_residency_max_us = m
+        .queue_residency_max_us
+        .max(max_residency.as_micros() as u64);
+    for &us in &scratch.latencies_us {
+        m.latency.record(us);
+    }
+}
+
+/// The cache-aware admission priority map: one single-flight snapshot per
+/// decision (one lock, not one per queued job), with starvation aging —
+/// see [`admission_priority`].
+fn priorities_fn(
+    flight: Option<Arc<SingleFlight<Prediction>>>,
+    bound: Duration,
+) -> impl Fn(&VecDeque<Job>) -> Vec<usize> {
+    move |jobs: &VecDeque<Job>| -> Vec<usize> {
+        let counts = flight.as_ref().map(|f| f.waiter_counts());
+        jobs.iter()
+            .map(|job| {
+                let followers = match (&counts, job.key) {
+                    (Some(c), Some(k)) => c.get(&k.as_u128()).copied().unwrap_or(0),
+                    _ => 0,
+                };
+                admission_priority(job.enqueued.elapsed(), followers, bound)
+            })
+            .collect()
+    }
+}
+
+/// The dedicated former of `--batch-former thread`: owns admission — grows
+/// each batch to size / deadline / linger, applies priority admission, and
+/// hands the closed batch over the (bounded) ring. Closes the ring once
+/// the queue is closed and drained, so workers exit only after every
+/// formed batch was executed.
+pub(crate) fn former_main(sh: Arc<ExecutorShared>, max_b: usize) {
+    let bound = starvation_bound(sh.max_wait);
+    let priorities = priorities_fn(sh.flight.clone(), bound);
+    while let Some(batch) = sh.queue.pop_batch(max_b, sh.max_wait, Some(sh.linger), &priorities)
+    {
+        if let Err(batch) = sh.ring.push(batch) {
+            // Unreachable by construction (only this thread closes the
+            // ring, below) — but never silently drop replies.
+            log_warn!(
+                "batch former: ring closed early, dropping a batch of {}",
+                batch.jobs.len()
+            );
+        }
+    }
+    sh.ring.close();
+    crate::log_debug!("batch former thread shutting down");
+}
+
+/// One executor worker. Builds its backend via the factory (reporting
+/// startup success/failure and its `max_batch` through `ready`), then
+/// serves until the queue/ring is closed and drained.
+pub(crate) fn executor_main(
+    worker: usize,
+    factory: &BackendFactory,
+    sh: Arc<ExecutorShared>,
+    ready: Sender<Result<usize>>,
+) {
+    // --- startup ---------------------------------------------------------
+    let mut backend = match factory() {
+        Ok(b) => {
+            let _ = ready.send(Ok(b.max_batch().max(1)));
+            b
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let max_b = backend.max_batch().max(1);
+    if worker == 0 {
+        log_info!(
+            "coordinator up: backend={} max_batch={max_b} wait={:?} former={} cache={} dedup={}",
+            backend.name(),
+            sh.max_wait,
+            sh.mode.as_str(),
+            sh.cache.is_some(),
+            sh.flight.is_some()
+        );
+    }
+    let mut scratch = BatchScratch::with_capacity(max_b);
+    let bound = starvation_bound(sh.max_wait);
+    let priorities = priorities_fn(sh.flight.clone(), bound);
+
+    // --- serve loop ------------------------------------------------------
+    match sh.mode {
+        BatchFormerMode::Off => {
+            // Legacy pipeline: every worker grows its own batch.
+            while let Some(batch) = sh.queue.pop_batch(max_b, sh.max_wait, None, &priorities) {
+                execute_batch(backend.as_mut(), batch, &mut scratch, &sh);
+            }
+        }
+        BatchFormerMode::Thread => {
+            // A dedicated former owns admission; workers only execute.
+            while let Some(batch) = sh.ring.pop_blocking() {
+                execute_batch(backend.as_mut(), batch, &mut scratch, &sh);
+            }
+        }
+        BatchFormerMode::Leader => loop {
+            // 1. Never let a closed batch wait while this worker is idle.
+            if let Some(batch) = sh.ring.try_pop() {
+                execute_batch(backend.as_mut(), batch, &mut scratch, &sh);
+                continue;
+            }
+            // 2. Ring empty: steal the former role instead of sleeping.
+            // The nudge snapshot is taken before the acquire attempt, so
+            // a role freed between a failed acquire and the wait below is
+            // still observed (no lost wakeup, no polling at idle).
+            let seen = sh.ring.nudge_count();
+            if sh.role.try_acquire() {
+                let formed =
+                    sh.queue
+                        .pop_batch(max_b, sh.max_wait, Some(sh.linger), &priorities);
+                sh.role.release();
+                match formed {
+                    Some(batch) => {
+                        // Hand the closed batch to an idle follower; if the
+                        // ring bounced it (shutdown race), execute inline —
+                        // a formed batch's replies are never dropped. Then
+                        // nudge: whoever doesn't get the batch re-contends
+                        // for the freed role instead of sleeping behind
+                        // this (possibly about-to-execute) worker.
+                        let bounced = sh.ring.push(batch);
+                        sh.ring.nudge();
+                        if let Err(batch) = bounced {
+                            execute_batch(backend.as_mut(), batch, &mut scratch, &sh);
+                        }
+                    }
+                    None => {
+                        // Queue closed and drained: end the pipeline.
+                        sh.ring.close();
+                        break;
+                    }
+                }
+            } else {
+                // 3. Another worker holds the former role: block until a
+                // batch lands, shutdown, or the role frees (nudge).
+                match sh.ring.pop_or_nudged(seen) {
+                    RingPop::Batch(batch) => {
+                        execute_batch(backend.as_mut(), batch, &mut scratch, &sh)
+                    }
+                    RingPop::Closed => break,
+                    RingPop::Nudged => {} // re-contend for the former role
+                }
+            }
+        },
+    }
+    crate::log_debug!("coordinator executor worker {worker} shutting down");
+}

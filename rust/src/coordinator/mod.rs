@@ -5,14 +5,19 @@
 //! Architecture: callers (CLI, TCP handler threads, benches) submit graphs
 //! through a bounded priority job queue. The submit path runs the one-pass
 //! `GraphAnalysis` exactly once — its fingerprint is the cache key, and the
-//! analysis rides the job so nothing downstream re-traverses the graph. A
-//! pool of `--executor-threads` worker threads (each owning its own
-//! inference backend — XLA client handles are not Sync) drains the queue
-//! with a size-or-deadline batching policy and cache-aware admission
-//! (misses with the most parked single-flight followers first), featurizes
-//! into pre-allocated buffers from the carried analysis, executes the
-//! right shape-specialized artifact (b=1 fast path vs padded b=B),
-//! denormalizes, applies the MIG rule (eq. 2) and replies.
+//! analysis rides the job so nothing downstream re-traverses the graph.
+//! A single batch former (`batcher` — a dedicated thread, or the leader
+//! role floating between idle workers, `--batch-former`) grows each batch
+//! with the size-or-deadline-or-linger policy and cache-aware admission
+//! (misses with the most parked single-flight followers first), then hands
+//! the closed batch over a small work-stealing ring to a pool of
+//! `--executor-threads` worker threads (`executor` — each owning its own
+//! inference backend, since XLA client handles are not Sync). Workers
+//! featurize into per-worker reusable scratch buffers from the carried
+//! analysis, execute the right shape-specialized artifact (b=1 fast path
+//! vs padded b=B), denormalize, apply the MIG rule (eq. 2) and reply;
+//! per-request latencies land in a log-bucketed histogram
+//! (`latency_p50_us`/`p95`/`p99` in `cache_stats`).
 //!
 //! In front of the queue sits the graph-fingerprint prediction cache
 //! (`crate::cache`): repeated graphs answer from a sharded LRU without
@@ -22,10 +27,13 @@
 //! `backend::SimBackend` for the hermetic simulator path).
 
 pub mod backend;
+pub mod batcher;
+pub mod executor;
 pub mod protocol;
 pub mod server;
 pub mod tcp;
 
 pub use backend::{Backend, BackendFactory, PjrtBackend, PredictRequest, RawOutcome, SimBackend};
+pub use batcher::BatchFormerMode;
 pub use protocol::{Prediction, Request};
 pub use server::{CacheValue, Coordinator, CoordinatorOptions, Metrics};

@@ -7,9 +7,11 @@
 //!
 //! Besides model-prediction requests, the protocol carries admin commands
 //! as `{"cmd": "..."}` lines: `cache_stats` reports the prediction cache's
-//! hit/miss/eviction counters, the batcher's fill metrics and the
-//! persistence counters (journal appends, compactions, replay/torn-tail
-//! recovery stats — always present, even on a cold boot); `cache_save` /
+//! hit/miss/eviction counters, the batcher's fill metrics, the pipeline's
+//! tail-latency histogram quantiles (`latency_p50_us`/`p95`/`p99`/`max`)
+//! and queue/ring depth gauges, and the persistence counters (journal
+//! appends, compactions, replay/torn-tail recovery stats — always
+//! present, even on a cold boot); `cache_save` /
 //! `cache_load` flush or read a journal store (optional `"path"`,
 //! defaulting to the server's `--cache-file`); `cache_compact` forces a
 //! sharded parallel compaction of the configured store.
@@ -142,6 +144,21 @@ pub fn cache_stats_response(m: &Metrics) -> String {
     o.insert("analyses_reused", m.analyses_reused as usize);
     o.insert("priority_admissions", m.priority_admissions as usize);
     o.insert("executor_threads", m.executor_threads as usize);
+    // Batch-former pipeline observability: mode, end-to-end latency
+    // distribution of backend-served requests (log-bucketed histogram,
+    // µs), queue/ring depth gauges (current + high-water) and the worst
+    // queue residency — the gauges behind the one-`max_wait` bound.
+    o.insert("batch_former", m.batch_former);
+    o.insert("latency_p50_us", m.latency_p50_us() as usize);
+    o.insert("latency_p95_us", m.latency_p95_us() as usize);
+    o.insert("latency_p99_us", m.latency_p99_us() as usize);
+    o.insert("latency_max_us", m.latency_max_us() as usize);
+    o.insert("latency_count", m.latency_count() as usize);
+    o.insert("queue_depth", m.queue_depth as usize);
+    o.insert("queue_depth_hwm", m.queue_depth_hwm as usize);
+    o.insert("ring_depth", m.ring_depth as usize);
+    o.insert("ring_depth_hwm", m.ring_depth_hwm as usize);
+    o.insert("queue_residency_max_us", m.queue_residency_max_us as usize);
     Json::Obj(o).to_string()
 }
 
@@ -222,7 +239,18 @@ mod tests {
 
     #[test]
     fn cache_stats_serializes() {
+        let mut latency = crate::util::stats::LogHistogram::new();
+        for us in [100u64, 200, 9000] {
+            latency.record(us);
+        }
         let m = crate::coordinator::Metrics {
+            latency,
+            batch_former: "leader",
+            queue_depth: 2,
+            queue_depth_hwm: 9,
+            ring_depth: 1,
+            ring_depth_hwm: 3,
+            queue_residency_max_us: 2500,
             requests: 10,
             batches: 2,
             cache_enabled: true,
@@ -266,6 +294,19 @@ mod tests {
         assert_eq!(v.path(&["torn_tail_drops"]).as_usize(), Some(1));
         assert_eq!(v.path(&["journal_bytes"]).as_usize(), Some(4096));
         assert_eq!(v.path(&["journal_generation"]).as_usize(), Some(3));
+        // Batch-former pipeline fields.
+        assert_eq!(v.path(&["batch_former"]).as_str(), Some("leader"));
+        assert_eq!(v.path(&["latency_count"]).as_usize(), Some(3));
+        assert_eq!(v.path(&["latency_max_us"]).as_usize(), Some(9000));
+        let p50 = v.path(&["latency_p50_us"]).as_usize().unwrap();
+        assert!((200..=213).contains(&p50), "p50 {p50}");
+        let p99 = v.path(&["latency_p99_us"]).as_usize().unwrap();
+        assert!(p99 >= 9000, "p99 {p99}");
+        assert_eq!(v.path(&["queue_depth"]).as_usize(), Some(2));
+        assert_eq!(v.path(&["queue_depth_hwm"]).as_usize(), Some(9));
+        assert_eq!(v.path(&["ring_depth"]).as_usize(), Some(1));
+        assert_eq!(v.path(&["ring_depth_hwm"]).as_usize(), Some(3));
+        assert_eq!(v.path(&["queue_residency_max_us"]).as_usize(), Some(2500));
     }
 
     #[test]
@@ -284,6 +325,14 @@ mod tests {
         assert_eq!(v.path(&["compactions"]).as_usize(), Some(0));
         assert_eq!(v.path(&["replayed_records"]).as_usize(), Some(0));
         assert_eq!(v.path(&["torn_tail_drops"]).as_usize(), Some(0));
+        // Latency/gauge fields are present (zeroed) before any traffic,
+        // so clients never special-case their absence either.
+        assert_eq!(v.path(&["latency_count"]).as_usize(), Some(0));
+        assert_eq!(v.path(&["latency_p99_us"]).as_usize(), Some(0));
+        assert_eq!(v.path(&["queue_depth"]).as_usize(), Some(0));
+        assert_eq!(v.path(&["queue_depth_hwm"]).as_usize(), Some(0));
+        assert_eq!(v.path(&["ring_depth_hwm"]).as_usize(), Some(0));
+        assert_eq!(v.path(&["queue_residency_max_us"]).as_usize(), Some(0));
     }
 
     #[test]

@@ -1,12 +1,12 @@
-//! The coordinator core: a priority job queue → a pool of executor worker
-//! threads (each owning its own inference [`Backend`]) with a
-//! size-or-deadline dynamic batcher and cache-aware batch admission,
-//! fronted by the device-aware graph-fingerprint prediction cache.
+//! The coordinator core: a priority job queue → a single batch-former →
+//! a work-stealing handoff ring → a pool of executor worker threads (each
+//! owning its own inference [`Backend`]), fronted by the device-aware
+//! graph-fingerprint prediction cache.
 //!
 //! Request path:
 //!
-//! 1. `submit` runs the one-pass [`GraphAnalysis`] exactly once — its WL
-//!    fingerprint composes the device-aware [`CacheKey`] (graph × target)
+//! 1. `submit` runs the one-pass [`crate::simulator::GraphAnalysis`]
+//!    exactly once — its WL fingerprint composes the [`CacheKey`]
 //!    — then consults the sharded LRU. A hit replies immediately on the
 //!    caller thread — the batcher, the queue and the runtime are never
 //!    touched. A tombstone hit (negative entry) replies with the cached
@@ -15,25 +15,31 @@
 //!    the same composite key: one leader enqueues a real job (carrying the
 //!    analysis, so the executor never re-traverses the graph); followers
 //!    park a reply sender and are woken when the leader's batch lands.
-//! 3. `--executor-threads` worker threads drain the queue with the
-//!    size-or-deadline policy. Batch admission is cache-aware: when the
-//!    queue holds more misses than a batch has slots, the misses with the
-//!    most parked single-flight followers are admitted first, so hot keys
-//!    unblock the most requests per slot. Each worker calls its own
-//!    backend once per batch, publishes per-request results into the cache
-//!    (failures become short-TTL tombstones), fans results out to
-//!    followers, and only then folds its counters into [`Metrics`] under a
-//!    short lock — replies are never sent while holding it.
+//! 3. A single batch former (a dedicated thread, or the floating leader
+//!    role among idle workers — `--batch-former`) grows each batch to
+//!    `max_batch`, the `max_wait` deadline, or an arrival-gap linger,
+//!    applies cache-aware priority admission once per batch, closes it and
+//!    hands it over the bounded ring to an idle worker. Workers finding
+//!    the ring empty steal the former role instead of sleeping, so no
+//!    request's admission ever spans two `max_wait` windows and a closed
+//!    batch never waits behind a busy worker while another is idle. See
+//!    [`super::batcher`] for the pipeline and [`super::executor`] for the
+//!    workers' allocation-free execution path.
+//!
+//! Observability: per-request submit→reply latencies land in a
+//! log-bucketed histogram (`latency_p50_us`/`p95`/`p99`/`max` in
+//! [`Metrics`] and `cache_stats`), alongside queue/ring depth gauges and
+//! the max queue residency — the measurement behind the one-`max_wait`
+//! residency bound.
 //!
 //! Persistence: with `CacheConfig::snapshot_path` set, the cache is
 //! preloaded from disk on boot (warm start), snapshotted on a timer
 //! (`snapshot_every`) and re-snapshotted on graceful shutdown — see
 //! [`crate::cache::persist`] for the format and its guarantees.
 
-use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -46,13 +52,15 @@ use crate::cache::{
     SnapshotValue, Target, DELTA_BUFFER_CAP,
 };
 use crate::ir::Graph;
-use crate::mig;
 use crate::runtime::ParamStore;
-use crate::simulator::{CostSweep, GraphAnalysis};
+use crate::simulator::CostSweep;
+use crate::util::stats::LogHistogram;
 use crate::util::threadpool::ThreadPool;
 use crate::{log_info, log_warn};
 
-use super::backend::{Backend, BackendFactory, PjrtBackend, PredictRequest, SimBackend};
+use super::backend::{Backend, BackendFactory, PjrtBackend, SimBackend};
+use super::batcher::{linger_slice, BatchFormerMode, BatchRing, FormerRole, Job, JobQueue};
+use super::executor::{executor_main, former_main, ExecutorShared};
 use super::protocol::Prediction;
 
 /// Batching + caching policy knobs.
@@ -67,6 +75,11 @@ pub struct CoordinatorOptions {
     /// wall-clock drops roughly with core count under concurrent miss
     /// load. 1 = the classic single-executor coordinator.
     pub executor_threads: usize,
+    /// Where batches are formed (`--batch-former off|thread|leader`).
+    /// `leader` (default): the former role floats between idle workers;
+    /// `thread`: a dedicated lightweight admission thread; `off`: the
+    /// legacy per-worker grow loop.
+    pub batch_former: BatchFormerMode,
     /// Prediction-cache configuration (`CacheConfig::disabled()` restores
     /// the pre-cache serving path exactly).
     pub cache: CacheConfig,
@@ -81,6 +94,7 @@ impl Default for CoordinatorOptions {
             max_wait: Duration::from_millis(2),
             queue_depth: 1024,
             executor_threads: 1,
+            batch_former: BatchFormerMode::default(),
             cache: CacheConfig::default(),
             target: Target::default(),
         }
@@ -118,6 +132,27 @@ pub struct Metrics {
     pub priority_admissions: u64,
     /// Executor worker threads serving this coordinator.
     pub executor_threads: u64,
+    /// Active batch-former mode (`off` / `thread` / `leader`).
+    pub batch_former: &'static str,
+    /// Jobs currently waiting in the admission queue.
+    pub queue_depth: u64,
+    /// Most jobs ever queued at once (never resets) — queue pressure that
+    /// was previously invisible until requests timed out.
+    pub queue_depth_hwm: u64,
+    /// Closed batches currently parked in the handoff ring.
+    pub ring_depth: u64,
+    /// Most closed batches ever parked at once.
+    pub ring_depth_hwm: u64,
+    /// Longest observed queue residency (enqueue → batch admission), µs.
+    /// The former pipeline bounds this at one `max_wait` (+ scheduling
+    /// jitter); the deterministic trickle test asserts it.
+    pub queue_residency_max_us: u64,
+    /// Log-bucketed submit→reply latency histogram of backend-served
+    /// requests (leaders and coalesced followers; ≤ 6.25 % relative
+    /// error). Cache hits are not recorded here: the hit path is lock-free
+    /// by design and its latency is the fingerprint hash plus one shard
+    /// lock (~microseconds).
+    pub latency: LogHistogram,
     pub cache_enabled: bool,
     pub cache_hits: u64,
     pub cache_misses: u64,
@@ -150,11 +185,6 @@ pub struct Metrics {
     pub journal_bytes: u64,
     /// Current store generation.
     pub journal_generation: u64,
-    /// End-to-end latencies (seconds) of backend-served requests (leaders
-    /// and coalesced followers), bounded ring. Cache hits are not recorded
-    /// here: the hit path is lock-free by design and its latency is the
-    /// fingerprint hash plus one shard lock (~microseconds).
-    pub latencies: Vec<f64>,
 }
 
 impl Metrics {
@@ -175,13 +205,28 @@ impl Metrics {
             self.cache_hits as f64 / total as f64
         }
     }
-}
 
-const LATENCY_RING: usize = 100_000;
+    /// Median submit→reply latency of backend-served requests, µs.
+    pub fn latency_p50_us(&self) -> u64 {
+        self.latency.quantile(0.5)
+    }
 
-fn push_latency(m: &mut Metrics, seconds: f64) {
-    if m.latencies.len() < LATENCY_RING {
-        m.latencies.push(seconds);
+    pub fn latency_p95_us(&self) -> u64 {
+        self.latency.quantile(0.95)
+    }
+
+    pub fn latency_p99_us(&self) -> u64 {
+        self.latency.quantile(0.99)
+    }
+
+    /// Largest recorded submit→reply latency, µs (exact, not bucketed).
+    pub fn latency_max_us(&self) -> u64 {
+        self.latency.max()
+    }
+
+    /// Requests recorded in the latency histogram.
+    pub fn latency_count(&self) -> u64 {
+        self.latency.count()
     }
 }
 
@@ -240,156 +285,6 @@ impl SnapshotValue for CacheValue {
     }
 }
 
-struct Job {
-    graph: Graph,
-    /// One-pass analysis computed at submit; the executor and the backend
-    /// featurize/simulate from it and never re-traverse the graph.
-    analysis: GraphAnalysis,
-    target: Target,
-    key: Option<CacheKey>,
-    enqueued: Instant,
-    reply: Sender<Result<Prediction>>,
-}
-
-/// Bounded MPMC job queue with condvar-based backpressure and cache-aware
-/// batch admission. Replaces the old mpsc channel so the executor can pop
-/// *batches* and reorder admission by single-flight follower count — with
-/// a channel, a hot miss with a growing crowd of parked followers would
-/// wait behind every older cold miss.
-struct JobQueue {
-    inner: Mutex<JobQueueInner>,
-    not_empty: Condvar,
-    not_full: Condvar,
-    capacity: usize,
-}
-
-struct JobQueueInner {
-    jobs: VecDeque<Job>,
-    closed: bool,
-}
-
-/// A popped batch plus how many of its jobs jumped an older queued miss
-/// (for the `priority_admissions` counter).
-struct Batch {
-    jobs: Vec<Job>,
-    jumped: u64,
-}
-
-impl JobQueue {
-    fn new(capacity: usize) -> JobQueue {
-        JobQueue {
-            inner: Mutex::new(JobQueueInner {
-                jobs: VecDeque::new(),
-                closed: false,
-            }),
-            not_empty: Condvar::new(),
-            not_full: Condvar::new(),
-            capacity: capacity.max(1),
-        }
-    }
-
-    /// Enqueue, blocking while full (backpressure — the old
-    /// `sync_channel` semantics). Returns the job back when the queue is
-    /// closed (shutdown), so the caller can unwind its single-flight.
-    fn push(&self, job: Job) -> std::result::Result<(), Job> {
-        let mut q = self.inner.lock().unwrap();
-        while q.jobs.len() >= self.capacity && !q.closed {
-            q = self.not_full.wait(q).unwrap();
-        }
-        if q.closed {
-            return Err(job);
-        }
-        q.jobs.push_back(job);
-        drop(q);
-        self.not_empty.notify_one();
-        Ok(())
-    }
-
-    /// Close the queue: pushes fail, poppers drain what is left and then
-    /// observe `None`. Wakes every waiter.
-    fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
-        self.not_empty.notify_all();
-        self.not_full.notify_all();
-    }
-
-    /// Pop one batch: block for the first job, then keep the batch open
-    /// until `max_b` jobs are queued or `max_wait` elapses, then admit up
-    /// to `max_b` jobs — highest priority first (parked single-flight
-    /// followers), FIFO among ties. `priorities` maps the queued jobs to
-    /// per-job priorities in one call (so its lock cost is one acquisition
-    /// per admission decision) and is only consulted when the queue holds
-    /// more jobs than the batch admits. Returns `None` when closed and
-    /// drained.
-    fn pop_batch(
-        &self,
-        max_b: usize,
-        max_wait: Duration,
-        priorities: impl Fn(&VecDeque<Job>) -> Vec<usize>,
-    ) -> Option<Batch> {
-        let mut q = self.inner.lock().unwrap();
-        loop {
-            // Block for the first job.
-            loop {
-                if !q.jobs.is_empty() {
-                    break;
-                }
-                if q.closed {
-                    return None;
-                }
-                q = self.not_empty.wait(q).unwrap();
-            }
-            // Grow: keep the batch open until the queue could fill it or
-            // the deadline passes. (Spurious wakeups just re-check.)
-            let deadline = Instant::now() + max_wait;
-            while q.jobs.len() < max_b && !q.closed {
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
-                }
-                let (guard, _timed_out) =
-                    self.not_empty.wait_timeout(q, deadline - now).unwrap();
-                q = guard;
-            }
-            // A concurrent worker may have drained the queue mid-grow;
-            // go back to blocking for a first job.
-            if !q.jobs.is_empty() {
-                break;
-            }
-            if q.closed {
-                return None;
-            }
-        }
-        // Cache-aware admission: when more jobs are queued than the batch
-        // holds, admit by descending parked-follower count (stable order
-        // among ties preserves FIFO fairness).
-        let take = q.jobs.len().min(max_b);
-        let mut order: Vec<usize> = (0..q.jobs.len()).collect();
-        let mut jumped = 0u64;
-        if take < q.jobs.len() {
-            let prio = priorities(&q.jobs);
-            debug_assert_eq!(prio.len(), q.jobs.len());
-            order.sort_by_key(|&i| (std::cmp::Reverse(prio[i]), i));
-            let oldest_left_behind = order[take..].iter().copied().min().unwrap_or(usize::MAX);
-            jumped = order[..take]
-                .iter()
-                .filter(|&&i| i > oldest_left_behind)
-                .count() as u64;
-        }
-        let mut picked: Vec<usize> = order[..take].to_vec();
-        picked.sort_unstable();
-        let mut jobs = Vec::with_capacity(take);
-        // Remove back-to-front so earlier indices stay valid.
-        for &i in picked.iter().rev() {
-            jobs.push(q.jobs.remove(i).expect("picked index in range"));
-        }
-        jobs.reverse(); // restore FIFO order within the admitted batch
-        drop(q);
-        self.not_full.notify_all();
-        Some(Batch { jobs, jumped })
-    }
-}
-
 /// Interruptible shutdown signal for the snapshot timer thread: the
 /// thread sleeps on the condvar until the next deadline and is woken
 /// immediately by [`Coordinator::drop`] — one wakeup per interval instead
@@ -403,6 +298,8 @@ struct SnapSignal {
 /// shuts down when the last handle drops.
 pub struct Coordinator {
     queue: Arc<JobQueue>,
+    ring: Arc<BatchRing>,
+    mode: BatchFormerMode,
     metrics: Arc<Mutex<Metrics>>,
     /// Submission counter, kept out of the metrics mutex so the cache-hit
     /// fast path takes no global lock.
@@ -421,7 +318,6 @@ pub struct Coordinator {
     store: Option<Arc<JournalStore<CacheValue>>>,
     /// When durable state was last written (flush/compaction/boot).
     last_persist: Arc<Mutex<Option<Instant>>>,
-    stop: Arc<AtomicBool>,
     handles: Vec<JoinHandle<()>>,
     snap_signal: Option<Arc<SnapSignal>>,
     snap_handle: Option<JoinHandle<()>>,
@@ -554,9 +450,13 @@ impl Coordinator {
         factory: BackendFactory,
         opts: CoordinatorOptions,
     ) -> Result<Coordinator> {
+        let threads = opts.executor_threads.max(1);
         let queue = Arc::new(JobQueue::new(opts.queue_depth));
+        // A small ring: one staged batch beyond the worker count. Keeping
+        // it tight leaves unadmitted jobs in the queue, where cache-aware
+        // priority admission still reorders them.
+        let ring = Arc::new(BatchRing::new(threads + 1));
         let metrics = Arc::new(Mutex::new(Metrics::default()));
-        let stop = Arc::new(AtomicBool::new(false));
         let cache = opts
             .cache
             .enabled
@@ -592,48 +492,47 @@ impl Coordinator {
         }
         let last_persist = Arc::new(Mutex::new(store.as_ref().map(|_| Instant::now())));
 
-        let threads = opts.executor_threads.max(1);
-        metrics.lock().unwrap().executor_threads = threads as u64;
+        {
+            let mut m = metrics.lock().unwrap();
+            m.executor_threads = threads as u64;
+            m.batch_former = opts.batch_former.as_str();
+        }
+        let shared = Arc::new(ExecutorShared {
+            queue: queue.clone(),
+            ring: ring.clone(),
+            role: Arc::new(FormerRole::new()),
+            metrics: metrics.clone(),
+            cache: cache.clone(),
+            flight: flight.clone(),
+            mode: opts.batch_former,
+            max_wait: opts.max_wait,
+            linger: linger_slice(opts.max_wait),
+            negative_ttl: opts.cache.negative_ttl,
+        });
         let factory: Arc<BackendFactory> = Arc::new(factory);
-        let max_wait = opts.max_wait;
-        let negative_ttl = opts.cache.negative_ttl;
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let mut handles = Vec::with_capacity(threads);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<usize>>();
+        let mut handles = Vec::with_capacity(threads + 1);
         for worker in 0..threads {
             let factory = factory.clone();
-            let queue = queue.clone();
-            let m2 = metrics.clone();
-            let c2 = cache.clone();
-            let f2 = flight.clone();
-            let s2 = stop.clone();
+            let shared = shared.clone();
             let ready = ready_tx.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("dippm-executor-{worker}"))
-                    .spawn(move || {
-                        executor_main(
-                            worker,
-                            factory.as_ref(),
-                            max_wait,
-                            negative_ttl,
-                            queue,
-                            m2,
-                            c2,
-                            f2,
-                            s2,
-                            ready,
-                        )
-                    })
+                    .spawn(move || executor_main(worker, factory.as_ref(), shared, ready))
                     .expect("spawn executor"),
             );
         }
         drop(ready_tx);
         // Propagate startup errors (bad artifacts, checkpoint mismatch)
-        // from every worker; on failure, tear the pool down cleanly.
+        // from every worker; on failure, tear the pool down cleanly. Each
+        // worker also reports its backend's max_batch — the dedicated
+        // former (if any) forms to the smallest.
         let mut startup_err = None;
+        let mut max_b = usize::MAX;
         for _ in 0..threads {
             match ready_rx.recv() {
-                Ok(Ok(())) => {}
+                Ok(Ok(b)) => max_b = max_b.min(b.max(1)),
                 Ok(Err(e)) => {
                     startup_err.get_or_insert(e);
                 }
@@ -643,12 +542,21 @@ impl Coordinator {
             }
         }
         if let Some(e) = startup_err {
-            stop.store(true, Ordering::SeqCst);
             queue.close();
+            ring.close();
             for h in handles {
                 let _ = h.join();
             }
             return Err(e);
+        }
+        if opts.batch_former == BatchFormerMode::Thread {
+            let shared = shared.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name("dippm-batch-former".into())
+                    .spawn(move || former_main(shared, max_b))
+                    .expect("spawn batch former"),
+            );
         }
 
         // Periodic journal flush + background compaction (see
@@ -676,6 +584,8 @@ impl Coordinator {
 
         Ok(Coordinator {
             queue,
+            ring,
+            mode: opts.batch_former,
             metrics,
             requests: AtomicU64::new(0),
             negative_hits: AtomicU64::new(0),
@@ -687,7 +597,6 @@ impl Coordinator {
             snapshot_path: opts.cache.snapshot_path,
             store,
             last_persist,
-            stop,
             handles,
             snap_signal,
             snap_handle,
@@ -874,13 +783,19 @@ impl Coordinator {
             .ok_or_else(|| anyhow!("no snapshot path (start with --cache-file or pass one)"))
     }
 
-    /// Snapshot of serving metrics with cache counters folded in.
+    /// Snapshot of serving metrics with cache counters and pipeline
+    /// gauges folded in.
     pub fn metrics(&self) -> Metrics {
         let mut m = self.metrics.lock().unwrap().clone();
         m.requests = self.requests.load(Ordering::Relaxed);
         m.negative_hits = self.negative_hits.load(Ordering::Relaxed);
         m.analyses_computed = self.analyses.load(Ordering::Relaxed);
         m.warm_start_entries = self.warm_start.load(Ordering::Relaxed);
+        m.batch_former = self.mode.as_str();
+        m.queue_depth = self.queue.depth() as u64;
+        m.queue_depth_hwm = self.queue.depth_high_water();
+        m.ring_depth = self.ring.depth() as u64;
+        m.ring_depth_hwm = self.ring.depth_high_water();
         // Persistence fields are always reported — a cold boot shows
         // zeros/-1, not absent fields.
         m.persist_enabled = self.store.is_some();
@@ -923,14 +838,15 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
         // Wake the snapshot thread out of its deadline sleep immediately.
         if let Some(signal) = &self.snap_signal {
             *signal.stopped.lock().unwrap() = true;
             signal.cv.notify_all();
         }
-        // Unblock the worker pool: workers drain what is queued, then see
-        // the closed queue and exit.
+        // Close the queue: the former drains what is queued into closed
+        // batches, workers drain the ring, then everyone observes the end
+        // and exits — no queued job's reply is ever dropped on a graceful
+        // shutdown.
         self.queue.close();
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -1003,198 +919,6 @@ fn persist_main(
     }
 }
 
-/// Aging bound for cache-aware batch admission: a miss that has waited
-/// this long outranks any follower count, so every queued job makes
-/// progress even under a sustained storm of hotter keys.
-fn starvation_bound(max_wait: Duration) -> Duration {
-    (max_wait * 64).max(Duration::from_millis(250))
-}
-
-/// Cache-aware admission priority of one queued miss: its parked
-/// single-flight follower count, unless it has aged past the starvation
-/// bound — then it outranks everything.
-fn admission_priority(waited: Duration, followers: usize, bound: Duration) -> usize {
-    if waited >= bound {
-        usize::MAX
-    } else {
-        followers
-    }
-}
-
-/// Per-batch counters accumulated while publishing results (outside the
-/// metrics lock) and folded in afterwards under one short acquisition.
-#[derive(Default)]
-struct BatchOutcomeCounters {
-    coalesced: u64,
-    errors: u64,
-    reused: u64,
-    latencies: Vec<f64>,
-}
-
-#[allow(clippy::too_many_arguments)]
-fn executor_main(
-    worker: usize,
-    factory: &BackendFactory,
-    max_wait: Duration,
-    negative_ttl: Option<Duration>,
-    queue: Arc<JobQueue>,
-    metrics: Arc<Mutex<Metrics>>,
-    cache: Option<Arc<ShardedLruCache<CacheValue>>>,
-    flight: Option<Arc<SingleFlight<Prediction>>>,
-    stop: Arc<AtomicBool>,
-    ready: Sender<Result<()>>,
-) {
-    // --- startup ---------------------------------------------------------
-    let mut backend = match factory() {
-        Ok(b) => {
-            let _ = ready.send(Ok(()));
-            b
-        }
-        Err(e) => {
-            let _ = ready.send(Err(e));
-            return;
-        }
-    };
-    let max_b = backend.max_batch().max(1);
-    if worker == 0 {
-        log_info!(
-            "coordinator up: backend={} max_batch={max_b} wait={max_wait:?} cache={} dedup={}",
-            backend.name(),
-            cache.is_some(),
-            flight.is_some()
-        );
-    }
-
-    // --- serve loop ------------------------------------------------------
-    // Cache-aware admission priorities, computed only when a batch
-    // overflows: one single-flight snapshot per decision (one lock, not
-    // one per queued job), with aging — see `admission_priority`.
-    let bound = starvation_bound(max_wait);
-    let priorities = |jobs: &VecDeque<Job>| -> Vec<usize> {
-        let counts = flight.as_ref().map(|f| f.waiter_counts());
-        jobs.iter()
-            .map(|job| {
-                let followers = match (&counts, job.key) {
-                    (Some(c), Some(k)) => c.get(&k.as_u128()).copied().unwrap_or(0),
-                    _ => 0,
-                };
-                admission_priority(job.enqueued.elapsed(), followers, bound)
-            })
-            .collect()
-    };
-    while !stop.load(Ordering::SeqCst) {
-        let Some(batch) = queue.pop_batch(max_b, max_wait, &priorities) else {
-            break; // queue closed and drained
-        };
-        let jobs = batch.jobs;
-
-        let result = {
-            let requests: Vec<PredictRequest<'_>> = jobs
-                .iter()
-                .map(|j| PredictRequest {
-                    graph: &j.graph,
-                    analysis: &j.analysis,
-                    target: &j.target,
-                })
-                .collect();
-            backend.predict_raw(&requests)
-        };
-        let result = match result {
-            Ok(outcomes) if outcomes.len() == jobs.len() => Ok(outcomes),
-            Ok(outcomes) => Err(anyhow!(
-                "backend returned {} outcomes for {} jobs",
-                outcomes.len(),
-                jobs.len()
-            )),
-            Err(e) => Err(e),
-        };
-
-        // Publish to cache, wake followers and reply first — no lock held
-        // while senders run — then fold the counters into the metrics
-        // under one short acquisition.
-        let n_jobs = jobs.len() as u64;
-        let mut c = BatchOutcomeCounters::default();
-        match result {
-            Ok(outcomes) => {
-                c.reused = n_jobs; // every served request consumed its carried analysis
-                for (job, outcome) in jobs.into_iter().zip(outcomes) {
-                    match outcome {
-                        Ok(raw) => {
-                            let pred = Prediction {
-                                latency_ms: raw[0],
-                                memory_mb: raw[1],
-                                energy_j: raw[2],
-                                mig_profile: mig::predict_profile(raw[1])
-                                    .map(|p| p.name().to_string()),
-                            };
-                            if let (Some(k), Some(cache)) = (job.key, &cache) {
-                                cache.insert(k, CacheValue::Pred(pred.clone()));
-                            }
-                            if let (Some(k), Some(flight)) = (job.key, &flight) {
-                                for w in flight.take(k.as_u128()) {
-                                    c.coalesced += 1;
-                                    c.latencies.push(w.enqueued.elapsed().as_secs_f64());
-                                    let _ = w.reply.send(Ok(pred.clone()));
-                                }
-                            }
-                            c.latencies.push(job.enqueued.elapsed().as_secs_f64());
-                            let _ = job.reply.send(Ok(pred));
-                        }
-                        Err(msg) => {
-                            // Per-request failure: tombstone it so repeats
-                            // are served on the submit path, then fail the
-                            // leader and every parked follower.
-                            c.errors += 1;
-                            if let (Some(k), Some(cache), Some(ttl)) =
-                                (job.key, &cache, negative_ttl)
-                            {
-                                cache.insert_with_ttl(
-                                    k,
-                                    CacheValue::Tombstone(msg.clone()),
-                                    Some(ttl),
-                                );
-                            }
-                            if let (Some(k), Some(flight)) = (job.key, &flight) {
-                                for w in flight.take(k.as_u128()) {
-                                    c.errors += 1;
-                                    let _ = w.reply.send(Err(anyhow!("{msg}")));
-                                }
-                            }
-                            let _ = job.reply.send(Err(anyhow!("{msg}")));
-                        }
-                    }
-                }
-            }
-            Err(e) => {
-                // Batch-level (infrastructure) failure: nothing cacheable.
-                let msg = format!("{e:#}");
-                for job in jobs {
-                    c.errors += 1;
-                    if let (Some(k), Some(flight)) = (job.key, &flight) {
-                        for w in flight.take(k.as_u128()) {
-                            c.errors += 1;
-                            let _ = w.reply.send(Err(anyhow!("{msg}")));
-                        }
-                    }
-                    let _ = job.reply.send(Err(anyhow!("{msg}")));
-                }
-            }
-        }
-
-        let mut m = metrics.lock().unwrap();
-        m.batches += 1;
-        m.batch_fill_sum += n_jobs;
-        m.coalesced += c.coalesced;
-        m.errors += c.errors;
-        m.analyses_reused += c.reused;
-        m.priority_admissions += batch.jumped;
-        for lat in c.latencies {
-            push_latency(&mut m, lat);
-        }
-    }
-    crate::log_debug!("coordinator executor worker {worker} shutting down");
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1205,196 +929,12 @@ mod tests {
         assert!(o.max_wait <= Duration::from_millis(10));
         assert!(o.queue_depth >= 64);
         assert_eq!(o.executor_threads, 1, "parallelism is opt-in");
+        assert_eq!(o.batch_former, BatchFormerMode::Leader, "former is the default");
         assert!(o.cache.enabled);
         assert!(o.cache.single_flight);
         assert!(o.cache.capacity >= 1024);
         assert_eq!(o.target, Target::default());
         assert!(o.cache.negative_ttl.is_some());
-    }
-
-    fn fifo_prio(jobs: &VecDeque<Job>) -> Vec<usize> {
-        vec![0; jobs.len()]
-    }
-
-    fn dummy_job(tag: u64) -> (Job, Receiver<Result<Prediction>>) {
-        let (reply, rx) = mpsc::channel();
-        let mut b = crate::ir::GraphBuilder::new("t", &format!("q-{tag}"), 1);
-        let x = b.input(vec![1, 3, 8, 8]);
-        b.conv_relu(x, 4 + tag as usize, 3, 1, 1);
-        let graph = b.finish();
-        let analysis = GraphAnalysis::of(&graph);
-        let key = Some(CacheKey::new(analysis.fingerprint, &Target::default()));
-        (
-            Job {
-                graph,
-                analysis,
-                target: Target::default(),
-                key,
-                enqueued: Instant::now(),
-                reply,
-            },
-            rx,
-        )
-    }
-
-    #[test]
-    fn job_queue_admits_by_priority_then_fifo() {
-        let q = JobQueue::new(16);
-        // Three jobs, priorities 0 / 2 / 1: a 1-slot batch admits the
-        // 2-follower job first even though it arrived second.
-        let mut prios = std::collections::HashMap::new();
-        for (tag, p) in [(0u64, 0usize), (1, 2), (2, 1)] {
-            let (job, _rx) = dummy_job(tag);
-            prios.insert(job.analysis.fingerprint.as_u128(), p);
-            q.push(job).map_err(|_| ()).unwrap();
-        }
-        let prio = |jobs: &VecDeque<Job>| -> Vec<usize> {
-            jobs.iter()
-                .map(|j| prios[&j.analysis.fingerprint.as_u128()])
-                .collect()
-        };
-        let b1 = q.pop_batch(1, Duration::ZERO, &prio).unwrap();
-        assert_eq!(b1.jobs[0].variant_tag(), "q-1");
-        assert_eq!(b1.jumped, 1, "q-1 jumped the older q-0");
-        let b2 = q.pop_batch(1, Duration::ZERO, &prio).unwrap();
-        assert_eq!(b2.jobs[0].variant_tag(), "q-2");
-        let b3 = q.pop_batch(1, Duration::ZERO, &prio).unwrap();
-        assert_eq!(b3.jobs[0].variant_tag(), "q-0");
-        assert_eq!(b3.jumped, 0, "nothing left to jump");
-    }
-
-    #[test]
-    fn job_queue_equal_priorities_are_fifo() {
-        let q = JobQueue::new(16);
-        for tag in 0..4u64 {
-            let (job, _rx) = dummy_job(tag);
-            q.push(job).map_err(|_| ()).unwrap();
-        }
-        let b = q.pop_batch(2, Duration::ZERO, fifo_prio).unwrap();
-        assert_eq!(b.jobs.len(), 2);
-        assert_eq!(b.jobs[0].variant_tag(), "q-0");
-        assert_eq!(b.jobs[1].variant_tag(), "q-1");
-        assert_eq!(b.jumped, 0);
-    }
-
-    #[test]
-    fn job_queue_close_drains_then_ends() {
-        let q = JobQueue::new(16);
-        let (job, _rx) = dummy_job(0);
-        q.push(job).map_err(|_| ()).unwrap();
-        q.close();
-        // Queued work is still served after close...
-        assert!(q.pop_batch(8, Duration::ZERO, fifo_prio).is_some());
-        // ...then poppers see the end, and pushes bounce.
-        assert!(q.pop_batch(8, Duration::ZERO, fifo_prio).is_none());
-        let (job, _rx) = dummy_job(1);
-        assert!(q.push(job).is_err());
-    }
-
-    impl Job {
-        fn variant_tag(&self) -> &str {
-            &self.graph.variant
-        }
-    }
-
-    #[test]
-    fn job_queue_backpressure_blocks_push_until_pop() {
-        let q = Arc::new(JobQueue::new(1));
-        let (job, _rx0) = dummy_job(0);
-        q.push(job).map_err(|_| ()).unwrap();
-        // A second push must block until a pop frees a slot.
-        let (done_tx, done_rx) = mpsc::channel();
-        let q2 = q.clone();
-        let handle = std::thread::spawn(move || {
-            let (job, rx1) = dummy_job(1);
-            let pushed = q2.push(job).is_ok();
-            let _ = done_tx.send(pushed);
-            rx1
-        });
-        assert!(
-            done_rx.recv_timeout(Duration::from_millis(100)).is_err(),
-            "push into a full queue must block"
-        );
-        let b = q.pop_batch(1, Duration::ZERO, fifo_prio).unwrap();
-        assert_eq!(b.jobs[0].variant_tag(), "q-0");
-        assert_eq!(
-            done_rx.recv_timeout(Duration::from_secs(5)),
-            Ok(true),
-            "pop must unblock the parked push"
-        );
-        let _ = handle.join().unwrap();
-        // The unblocked job is now queued.
-        let b = q.pop_batch(1, Duration::ZERO, fifo_prio).unwrap();
-        assert_eq!(b.jobs[0].variant_tag(), "q-1");
-    }
-
-    #[test]
-    fn job_queue_close_unblocks_parked_push_with_job_back() {
-        let q = Arc::new(JobQueue::new(1));
-        let (job, _rx0) = dummy_job(0);
-        q.push(job).map_err(|_| ()).unwrap();
-        let q2 = q.clone();
-        let handle = std::thread::spawn(move || {
-            let (job, _rx1) = dummy_job(1);
-            // Blocks on the full queue; close() must hand the job back.
-            q2.push(job).is_err()
-        });
-        std::thread::sleep(Duration::from_millis(50));
-        q.close();
-        assert!(handle.join().unwrap(), "close must bounce the parked push");
-    }
-
-    #[test]
-    fn admission_priority_is_follower_count_below_the_bound() {
-        let bound = starvation_bound(Duration::from_millis(2));
-        assert_eq!(admission_priority(Duration::ZERO, 0, bound), 0);
-        assert_eq!(admission_priority(Duration::from_millis(1), 7, bound), 7);
-        // Bound floor: 64x max_wait but never under 250ms.
-        assert_eq!(bound, Duration::from_millis(250));
-        assert_eq!(starvation_bound(Duration::from_millis(10)), Duration::from_millis(640));
-    }
-
-    #[test]
-    fn admission_priority_aged_miss_outranks_any_follower_count() {
-        let bound = starvation_bound(Duration::from_millis(2));
-        let aged = admission_priority(bound, 0, bound);
-        assert_eq!(aged, usize::MAX);
-        assert!(aged > admission_priority(Duration::ZERO, usize::MAX - 1, bound));
-    }
-
-    #[test]
-    fn job_queue_starved_job_is_admitted_ahead_of_hot_keys() {
-        // Three jobs: the first is aged past the starvation bound, the
-        // others carry huge follower counts. A 1-slot batch admits the
-        // aged one first.
-        let q = JobQueue::new(16);
-        let bound = Duration::from_millis(250);
-        for (tag, backdate) in [(0u64, bound * 2), (1, Duration::ZERO), (2, Duration::ZERO)] {
-            let (mut job, _rx) = dummy_job(tag);
-            job.enqueued = Instant::now() - backdate;
-            q.push(job).map_err(|_| ()).unwrap();
-        }
-        let prio = |jobs: &VecDeque<Job>| -> Vec<usize> {
-            jobs.iter()
-                .map(|j| {
-                    let followers = if j.variant_tag() == "q-0" { 0 } else { 1000 };
-                    admission_priority(j.enqueued.elapsed(), followers, bound)
-                })
-                .collect()
-        };
-        let b = q.pop_batch(1, Duration::ZERO, &prio).unwrap();
-        assert_eq!(b.jobs[0].variant_tag(), "q-0", "aged job must not starve");
-    }
-
-    #[test]
-    fn job_queue_partial_batch_returns_after_deadline() {
-        let q = JobQueue::new(16);
-        let (job, _rx) = dummy_job(0);
-        q.push(job).map_err(|_| ()).unwrap();
-        // max_b 8 but only one job queued: a zero deadline admits it alone.
-        let b = q.pop_batch(8, Duration::ZERO, fifo_prio).unwrap();
-        assert_eq!(b.jobs.len(), 1);
-        assert_eq!(b.jumped, 0);
     }
 
     #[test]
@@ -1417,6 +957,24 @@ mod tests {
         };
         assert!((m.cache_hit_rate() - 0.75).abs() < 1e-12);
         assert_eq!(Metrics::default().cache_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn metrics_latency_accessors_read_the_histogram() {
+        let mut m = Metrics::default();
+        assert_eq!(m.latency_p50_us(), 0);
+        assert_eq!(m.latency_max_us(), 0);
+        assert_eq!(m.latency_count(), 0);
+        for us in [100u64, 200, 300, 400, 10_000] {
+            m.latency.record(us);
+        }
+        assert_eq!(m.latency_count(), 5);
+        assert_eq!(m.latency_max_us(), 10_000);
+        let p50 = m.latency_p50_us();
+        assert!((300..=320).contains(&p50), "p50 {p50}");
+        let p99 = m.latency_p99_us();
+        assert!(p99 >= 10_000, "p99 {p99} must cover the tail");
+        assert!(m.latency_p95_us() <= p99);
     }
 
     #[test]
@@ -1465,7 +1023,15 @@ mod tests {
         assert!(CacheValue::snapshot_decode(&short).is_err());
     }
 
-    // End-to-end coordinator tests (simulator backend, plus PJRT when
-    // artifacts exist) live in rust/tests/coordinator_integration.rs and
-    // rust/tests/cache_persistence.rs.
+    #[test]
+    fn single_latency_is_reported_exactly_via_the_max_cap() {
+        let mut m = Metrics::default();
+        m.latency.record(300);
+        assert_eq!(m.latency_p50_us(), 300, "quantile is capped by the exact max");
+    }
+
+    // Queue/ring/former unit tests live in coordinator/batcher.rs;
+    // end-to-end coordinator + batch-former pipeline tests (simulator
+    // backend) live in rust/tests/coordinator_integration.rs and
+    // rust/tests/batch_former.rs.
 }

@@ -274,6 +274,17 @@ pub fn load(path: &str) -> io::Result<Dataset> {
     read_dataset(&mut r)
 }
 
+/// Load a dataset and rebuild the per-sample `GraphAnalysis` in parallel
+/// (`Dataset::rebuild_analyses`), so a loaded dataset featurizes from
+/// cached per-node costs exactly like a freshly built one — the
+/// `--analyze-on-load` path. Returns the dataset and how many analyses
+/// were rebuilt.
+pub fn load_analyzed(path: &str, workers: usize) -> io::Result<(Dataset, usize)> {
+    let mut ds = load(path)?;
+    let rebuilt = ds.rebuild_analyses(workers);
+    Ok((ds, rebuilt))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -300,6 +311,28 @@ mod tests {
                 assert_eq!(x.out_shape, y.out_shape);
             }
         }
+    }
+
+    #[test]
+    fn load_analyzed_rebuilds_what_build_retained() {
+        let ds = Dataset::build(0.004, 3, 2);
+        let dir = std::env::temp_dir().join(format!("dippm-ds-analyzed-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ds.bin");
+        let path = path.to_str().unwrap();
+        super::save(path, &ds).unwrap();
+        // Plain load: no analyses. Analyzed load: every sample carries one
+        // matching the originally built analysis.
+        let plain = super::load(path).unwrap();
+        assert!(plain.samples.iter().all(|s| s.analysis.is_none()));
+        let (analyzed, rebuilt) = super::load_analyzed(path, 4).unwrap();
+        assert_eq!(rebuilt, ds.len(), "every loaded sample lacked an analysis");
+        for (a, b) in ds.samples.iter().zip(&analyzed.samples) {
+            let (x, y) = (a.analysis.as_ref().unwrap(), b.analysis.as_ref().unwrap());
+            assert_eq!(x.fingerprint, y.fingerprint);
+            assert_eq!(x.statics, y.statics);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

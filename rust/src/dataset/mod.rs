@@ -83,6 +83,35 @@ impl Dataset {
         }
     }
 
+    /// Rebuild the per-sample [`GraphAnalysis`] for every sample that
+    /// lacks one, in parallel on the shared threadpool — the load-time
+    /// completion of the analysis-aware training loop. Datasets loaded
+    /// from disk carry only graphs; after this, `BatchBuffers::fill_sample`
+    /// featurizes every epoch from cached per-node costs instead of
+    /// re-traversing each graph (bit-identical to the scratch path by the
+    /// analysis parity tests). Returns the number of analyses rebuilt.
+    /// Idempotent: samples that already carry an analysis are untouched.
+    pub fn rebuild_analyses(&mut self, workers: usize) -> usize {
+        let missing: Vec<usize> = self
+            .samples
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.analysis.is_none())
+            .map(|(i, _)| i)
+            .collect();
+        if missing.is_empty() {
+            return 0;
+        }
+        let samples = &self.samples;
+        let analyses = parallel_map_indexed(missing.len(), workers, |k| {
+            GraphAnalysis::of(&samples[missing[k]].graph)
+        });
+        for (k, analysis) in missing.iter().zip(analyses) {
+            self.samples[*k].analysis = Some(analysis);
+        }
+        missing.len()
+    }
+
     pub fn len(&self) -> usize {
         self.samples.len()
     }
@@ -170,6 +199,43 @@ mod tests {
             assert_eq!(
                 a.fingerprint,
                 crate::simulator::GraphAnalysis::of(&s.graph).fingerprint
+            );
+        }
+    }
+
+    #[test]
+    fn rebuild_analyses_matches_build_and_is_idempotent() {
+        let built = small();
+        // Strip the analyses (the loaded-from-disk shape), then rebuild.
+        let mut stripped = built.clone();
+        for s in &mut stripped.samples {
+            s.analysis = None;
+        }
+        let rebuilt = stripped.rebuild_analyses(4);
+        assert_eq!(rebuilt, built.len(), "every sample lacked an analysis");
+        for (a, b) in built.samples.iter().zip(&stripped.samples) {
+            let (x, y) = (a.analysis.as_ref().unwrap(), b.analysis.as_ref().unwrap());
+            assert_eq!(x.fingerprint, y.fingerprint);
+            assert_eq!(x.statics, y.statics);
+            assert_eq!(x.n_nodes, y.n_nodes);
+        }
+        // Idempotent: nothing left to rebuild.
+        assert_eq!(stripped.rebuild_analyses(4), 0);
+    }
+
+    #[test]
+    fn rebuild_analyses_worker_count_is_irrelevant() {
+        let mut a = small();
+        let mut b = small();
+        for s in a.samples.iter_mut().chain(b.samples.iter_mut()) {
+            s.analysis = None;
+        }
+        a.rebuild_analyses(1);
+        b.rebuild_analyses(7);
+        for (x, y) in a.samples.iter().zip(&b.samples) {
+            assert_eq!(
+                x.analysis.as_ref().unwrap().fingerprint,
+                y.analysis.as_ref().unwrap().fingerprint
             );
         }
     }

@@ -39,13 +39,15 @@ COMMANDS
   build-dataset  --out <file> [--fraction 1.0] [--seed 42] [--workers N]
   train          --dataset <file> --checkpoint-out <file> [--variant sage]
                  [--epochs 10] [--lr 1e-3] [--mse] [--max-train N] [--seed 0]
-                 [--artifacts artifacts]
+                 [--artifacts artifacts] [--analyze-on-load] [--workers N]
   evaluate       --dataset <file> --checkpoint <file> [--split test|val|train]
+                 [--analyze-on-load]
   predict        --model <file> [--framework auto] [--checkpoint <file>]
                  [--backend auto|pjrt|sim] [--target-device a100[:MIG]]
                  [--cache-file <file>]
   serve          [--checkpoint <file>] [--addr 127.0.0.1:7401] [--max-wait-ms 2]
                  [--backend auto|pjrt|sim] [--executor-threads 1]
+                 [--batch-former leader|thread|off]
                  [--no-cache] [--no-dedup]
                  [--cache-capacity 8192] [--cache-shards 8] [--cache-ttl-s N]
                  [--cache-file <dir>] [--cache-snapshot-every-s N]
@@ -64,8 +66,8 @@ fn main() {
         "out", "fraction", "seed", "workers", "dataset", "checkpoint-out",
         "variant", "epochs", "lr", "max-train", "artifacts", "checkpoint",
         "split", "model", "framework", "addr", "max-wait-ms", "steps",
-        "backend", "executor-threads", "cache-capacity", "cache-shards",
-        "cache-ttl-s", "cache-file", "cache-snapshot-every-s",
+        "backend", "executor-threads", "batch-former", "cache-capacity",
+        "cache-shards", "cache-ttl-s", "cache-file", "cache-snapshot-every-s",
         "cache-compact-bytes", "cache-compact-ratio", "target-device",
     ]) {
         Ok(a) => a,
@@ -142,6 +144,10 @@ fn coordinator_options(args: &Args) -> Result<CoordinatorOptions> {
     Ok(CoordinatorOptions {
         max_wait: std::time::Duration::from_millis(args.get_u64("max-wait-ms", 2)),
         executor_threads: args.get_usize("executor-threads", 1).max(1),
+        batch_former: dippm::coordinator::BatchFormerMode::parse(
+            args.get_or("batch-former", "leader"),
+        )
+        .map_err(|e| anyhow!(e))?,
         cache,
         target: target_from_args(args)?,
         ..Default::default()
@@ -183,6 +189,22 @@ fn start_coordinator(args: &Args, opts: CoordinatorOptions) -> Result<Coordinato
 
 fn load_dataset(args: &Args) -> Result<Dataset> {
     let path = args.get("dataset").ok_or(anyhow!("--dataset required"))?;
+    // The binary format carries only graphs; with --analyze-on-load the
+    // per-sample analyses are rebuilt in parallel at load time, so the
+    // training loop featurizes every epoch from cached per-node costs
+    // instead of re-traversing each graph (bit-identical by the parity
+    // tests).
+    if args.flag("analyze-on-load") {
+        let workers = args.get_usize("workers", ThreadPool::default_parallelism());
+        let t0 = std::time::Instant::now();
+        let (ds, rebuilt) = ds_io::load_analyzed(path, workers)
+            .with_context(|| format!("loading dataset {path}"))?;
+        println!(
+            "rebuilt {rebuilt} graph analyses in {:.2}s ({workers} workers)",
+            t0.elapsed().as_secs_f64()
+        );
+        return Ok(ds);
+    }
     ds_io::load(path).with_context(|| format!("loading dataset {path}"))
 }
 
@@ -334,10 +356,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "cache off".to_string()
     };
     let threads = opts.executor_threads.max(1);
+    let former = opts.batch_former.as_str();
     dippm::coordinator::tcp::serve(coord, addr, move |port| {
         println!("listening on port {port}; protocol: one JSON request per line");
         println!(
-            "{cache_desc}; {threads} executor thread(s); query counters with {{\"cmd\":\"cache_stats\"}}"
+            "{cache_desc}; {threads} executor thread(s), batch former {former:?}; \
+             query counters with {{\"cmd\":\"cache_stats\"}}"
         );
     })
 }

@@ -198,6 +198,36 @@ mod tests {
     }
 
     #[test]
+    fn rebuilt_analyses_fill_bit_identical_to_scratch() {
+        // The --analyze-on-load path: strip analyses (the loaded-from-disk
+        // shape), rebuild them in parallel, and fill — the buffers must be
+        // bit-identical to both the scratch path and the originally built
+        // dataset's analyzed path.
+        let ds = Dataset::build(0.002, 1, 2);
+        let mut rebuilt = ds.clone();
+        for s in &mut rebuilt.samples {
+            s.analysis = None;
+        }
+        let scratch_ds = rebuilt.clone();
+        assert_eq!(rebuilt.rebuild_analyses(4), ds.len());
+        let mut via_built = BatchBuffers::new(&consts(), 4);
+        let mut via_rebuilt = BatchBuffers::new(&consts(), 4);
+        let mut via_scratch = BatchBuffers::new(&consts(), 4);
+        for (slot, idx) in [0usize, 1, 2].into_iter().enumerate() {
+            via_built.fill_sample(&ds, idx, slot).unwrap();
+            via_rebuilt.fill_sample(&rebuilt, idx, slot).unwrap();
+            via_scratch.fill_sample(&scratch_ds, idx, slot).unwrap();
+        }
+        assert_eq!(via_rebuilt.x.data, via_built.x.data);
+        assert_eq!(via_rebuilt.a.data, via_built.a.data);
+        assert_eq!(via_rebuilt.s.data, via_built.s.data);
+        assert_eq!(via_rebuilt.mask.data, via_built.mask.data);
+        assert_eq!(via_rebuilt.y.data, via_built.y.data);
+        assert_eq!(via_rebuilt.x.data, via_scratch.x.data);
+        assert_eq!(via_rebuilt.s.data, via_scratch.s.data);
+    }
+
+    #[test]
     fn slots_are_independent() {
         let ds = Dataset::build(0.002, 1, 2);
         let mut b1 = BatchBuffers::new(&consts(), 4);

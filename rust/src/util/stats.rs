@@ -1,5 +1,7 @@
 //! Statistics helpers: MAPE (the paper's metric), Welford accumulators for
-//! normalization stats, and quantiles for the serving benchmarks.
+//! normalization stats, quantiles for the serving benchmarks, and the
+//! HDR-style log-bucketed [`LogHistogram`] behind the coordinator's
+//! tail-latency metrics.
 
 /// Mean Absolute Percentage Error — the paper's accuracy metric (§4.3).
 /// `MAPE = mean(|pred - actual| / |actual|)`; pairs with |actual| < eps are
@@ -93,6 +95,126 @@ pub fn geomean(data: &[f64]) -> f64 {
     (data.iter().map(|x| x.max(1e-12).ln()).sum::<f64>() / data.len() as f64).exp()
 }
 
+/// Sub-bucket resolution of [`LogHistogram`]: 2^4 = 16 linear sub-buckets
+/// per power of two, bounding the relative quantile error at 1/16.
+const SUB_BITS: u32 = 4;
+const SUB: usize = 1 << SUB_BITS; // 16
+/// Values below 2·SUB are recorded exactly (one bucket per value).
+const LINEAR_MAX: u64 = (2 * SUB as u64) - 1; // 31
+/// Bucket count covering the full u64 range at SUB_BITS resolution.
+const BUCKETS: usize = 2 * SUB + (64 - SUB_BITS as usize - 1) * SUB;
+
+/// HDR-style log-bucketed histogram over non-negative integer values
+/// (the coordinator records end-to-end latencies in microseconds).
+///
+/// Layout: values `0..=31` get exact buckets; above that, each power of
+/// two is split into 16 linear sub-buckets, so any recorded value is
+/// reconstructed with ≤ 6.25 % relative error. Recording is O(1) with no
+/// allocation after the first record (the bucket table is ~8 KB of `u64`s
+/// and is only materialized on first use), which is what lets the
+/// executor fold per-request latencies under the short metrics lock
+/// without keeping an unbounded sample vector.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    max: u64,
+}
+
+/// Bucket index of a value.
+fn bucket_index(v: u64) -> usize {
+    if v <= LINEAR_MAX {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros(); // >= 5 here
+    let shift = msb - SUB_BITS; // >= 1
+    // (v >> shift) is in [SUB, 2*SUB); subtract SUB for the sub-slot.
+    let sub = ((v >> shift) as usize) - SUB;
+    2 * SUB + (shift as usize - 1) * SUB + sub
+}
+
+/// Inclusive upper bound of the values a bucket holds (the quantile
+/// estimate reported for that bucket — conservative, never under-reports).
+fn bucket_upper(idx: usize) -> u64 {
+    if idx < 2 * SUB {
+        return idx as u64;
+    }
+    let rel = idx - 2 * SUB;
+    let shift = (rel / SUB) as u32 + 1;
+    let sub = (rel % SUB) as u64;
+    // The topmost bucket's exclusive bound is 2^64: the shift discards the
+    // overflowing bit, and the wrapping -1 turns the resulting 0 into
+    // u64::MAX — the correct inclusive upper bound.
+    ((SUB as u64 + sub + 1) << shift).wrapping_sub(1)
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram::default()
+    }
+
+    /// Record one value.
+    pub fn record(&mut self, v: u64) {
+        if self.counts.is_empty() {
+            self.counts = vec![0; BUCKETS];
+        }
+        let idx = bucket_index(v).min(BUCKETS - 1);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.max = self.max.max(v);
+    }
+
+    /// Number of recorded values.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Largest recorded value (exact, not bucketed). 0 when empty.
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Quantile estimate: the upper bound of the bucket where the
+    /// cumulative count first reaches `q·total` (relative error ≤ 1/16
+    /// above the linear range; exact below it). 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * self.total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                // The true max is a tighter bound than the last bucket's
+                // upper edge.
+                return bucket_upper(idx).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fold another histogram into this one.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        if other.total == 0 {
+            return;
+        }
+        if self.counts.is_empty() {
+            self.counts = vec![0; BUCKETS];
+        }
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.max = self.max.max(other.max);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -132,5 +254,91 @@ mod tests {
     #[test]
     fn geomean_of_equal_values() {
         assert!((geomean(&[3.0, 3.0, 3.0]) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_buckets_are_contiguous_and_ordered() {
+        // Every value maps into a bucket whose upper bound is >= the
+        // value, and bucket indices are monotone in the value.
+        let mut prev_idx = 0usize;
+        for v in (0..4096u64).chain([1 << 20, (1 << 20) + 7, u64::MAX >> 1, u64::MAX]) {
+            let idx = bucket_index(v);
+            if v < 4096 {
+                // Contiguous range: indices must be non-decreasing.
+                assert!(idx >= prev_idx, "index not monotone at {v}");
+                prev_idx = idx;
+            }
+            assert!(idx < BUCKETS, "index {idx} out of range for {v}");
+            assert!(bucket_upper(idx) >= v, "upper {} < {v}", bucket_upper(idx));
+            if v > 0 {
+                // Relative error bound: upper / v <= 1 + 1/16 (exact below
+                // the linear range).
+                let upper = bucket_upper(idx) as f64;
+                assert!(upper <= v as f64 * (1.0 + 1.0 / 16.0) + 1.0, "{v} -> {upper}");
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_small_values_are_exact() {
+        let mut h = LogHistogram::new();
+        for v in [0u64, 1, 5, 17, 31] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.max(), 31);
+        assert_eq!(h.quantile(0.0), 0);
+        assert_eq!(h.quantile(1.0), 31);
+        // Median of {0,1,5,17,31} = 5 (rank 3).
+        assert_eq!(h.quantile(0.5), 5);
+    }
+
+    #[test]
+    fn histogram_quantiles_within_relative_error() {
+        let mut h = LogHistogram::new();
+        let vals: Vec<u64> = (1..=1000).map(|i| i * 137).collect();
+        for &v in &vals {
+            h.record(v);
+        }
+        for q in [0.5, 0.95, 0.99] {
+            let exact = vals[((q * 1000.0).ceil() as usize).max(1) - 1] as f64;
+            let est = h.quantile(q) as f64;
+            assert!(est >= exact, "q{q}: {est} under-reports {exact}");
+            assert!(est <= exact * (1.0 + 1.0 / 16.0) + 1.0, "q{q}: {est} vs {exact}");
+        }
+        assert_eq!(h.quantile(1.0), 137_000);
+        assert_eq!(h.max(), 137_000);
+    }
+
+    #[test]
+    fn histogram_merge_equals_combined_recording() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut both = LogHistogram::new();
+        for v in 0..500u64 {
+            let v = v * 31;
+            if v % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            both.record(v);
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged, both);
+        // Merging into an empty histogram works too.
+        let mut empty = LogHistogram::new();
+        empty.merge(&both);
+        assert_eq!(empty, both);
+    }
+
+    #[test]
+    fn histogram_empty_reports_zeros() {
+        let h = LogHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert!(h.is_empty());
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.quantile(0.99), 0);
     }
 }

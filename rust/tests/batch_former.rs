@@ -1,0 +1,278 @@
+//! Integration: the batch-former pipeline (queue → former → handoff ring
+//! → workers) across all three `--batch-former` modes, on the hermetic
+//! simulator backend.
+//!
+//! The contracts under test:
+//!
+//! * mode equivalence — `off`/`thread`/`leader` serve identical answers;
+//! * the one-`max_wait` residency bound — under a trickle with
+//!   `--executor-threads 4`, no request's queue residency (enqueue →
+//!   batch admission, measured inside the queue as
+//!   `queue_residency_max_us`) exceeds one `max_wait`;
+//! * steal-on-empty-ring — with one worker blocked inside its backend, an
+//!   idle worker steals the former role and serves new traffic instead of
+//!   sleeping;
+//! * drain-on-shutdown — dropping the coordinator with jobs queued still
+//!   delivers every reply (queue drains into closed batches, the ring
+//!   drains into workers, then everyone exits);
+//! * the latency histogram and depth gauges are live end to end.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use dippm::coordinator::{
+    Backend, BatchFormerMode, Coordinator, CoordinatorOptions, PredictRequest, RawOutcome,
+};
+use dippm::modelgen::{Family, ALL_FAMILIES};
+
+fn opts(mode: BatchFormerMode, threads: usize, max_wait: Duration) -> CoordinatorOptions {
+    CoordinatorOptions {
+        executor_threads: threads,
+        batch_former: mode,
+        max_wait,
+        ..Default::default()
+    }
+}
+
+const ALL_MODES: [BatchFormerMode; 3] = [
+    BatchFormerMode::Off,
+    BatchFormerMode::Thread,
+    BatchFormerMode::Leader,
+];
+
+/// Workers reply before folding counters into `Metrics` (by design — no
+/// lock is held while senders run), so a metrics read racing the fold can
+/// momentarily under-count. Poll until `cond` holds (or time out and
+/// return the last snapshot for the assertion message).
+fn metrics_when(
+    coord: &Coordinator,
+    cond: impl Fn(&dippm::coordinator::Metrics) -> bool,
+) -> dippm::coordinator::Metrics {
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        let m = coord.metrics();
+        if cond(&m) || std::time::Instant::now() >= deadline {
+            return m;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+#[test]
+fn all_modes_serve_identical_answers() {
+    let serial = Coordinator::start_sim(opts(BatchFormerMode::Off, 1, Duration::from_millis(1)))
+        .unwrap();
+    for mode in ALL_MODES {
+        let coord =
+            Coordinator::start_sim(opts(mode, 4, Duration::from_millis(1))).unwrap();
+        for i in 0..14 {
+            let g = Family::MobileNet.generate(i % 7);
+            let got = coord.predict(g.clone()).unwrap();
+            let want = serial.predict(g).unwrap();
+            assert_eq!(got, want, "mode {mode:?} changed an answer");
+        }
+        let m = coord.metrics();
+        assert_eq!(m.errors, 0);
+        assert_eq!(m.batch_former, mode.as_str());
+        assert_eq!(m.requests, 14);
+    }
+}
+
+#[test]
+fn leader_mode_with_a_single_worker_degenerates_cleanly() {
+    // One worker both forms and executes: the pipeline must not deadlock
+    // or change answers.
+    let coord =
+        Coordinator::start_sim(opts(BatchFormerMode::Leader, 1, Duration::from_millis(1)))
+            .unwrap();
+    let g = Family::ResNet.generate(2);
+    let a = coord.predict(g.clone()).unwrap();
+    let b = coord.predict(g).unwrap();
+    assert_eq!(a, b);
+    let m = metrics_when(&coord, |m| m.batches == 1);
+    assert_eq!(m.batches, 1, "the repeat is a cache hit");
+    assert_eq!(m.cache_hits, 1);
+}
+
+/// The acceptance bound: with `--executor-threads 4` under a slow trickle
+/// of distinct misses, a former-mode pipeline admits every request within
+/// one `max_wait` of its arrival. The gauge is measured inside the queue
+/// at admission (execution and reply delivery excluded), and the former's
+/// arrival-gap linger closes trickle batches after `max_wait / 8` — so the
+/// margin to the bound is ~8x, far beyond scheduler jitter.
+#[test]
+fn trickle_queue_residency_never_exceeds_one_max_wait() {
+    let max_wait = Duration::from_millis(400);
+    for mode in [BatchFormerMode::Thread, BatchFormerMode::Leader] {
+        let coord = Coordinator::start_sim(opts(mode, 4, max_wait)).unwrap();
+        for i in 0..5 {
+            // Distinct architectures: every request is a real miss that
+            // must be admitted through the former.
+            let g = ALL_FAMILIES[(2 * i) % ALL_FAMILIES.len()].generate(i);
+            coord.predict(g).unwrap();
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        let m = metrics_when(&coord, |m| m.latency_count() == 5);
+        assert_eq!(m.errors, 0);
+        assert!(m.queue_residency_max_us > 0, "residency gauge must be live");
+        assert!(
+            u128::from(m.queue_residency_max_us) <= max_wait.as_micros(),
+            "mode {mode:?}: queue residency {}us exceeds one max_wait ({}us)",
+            m.queue_residency_max_us,
+            max_wait.as_micros()
+        );
+        // The latency histogram saw every backend-served request.
+        assert_eq!(m.latency_count(), 5);
+        assert!(m.latency_p50_us() > 0);
+        assert!(m.latency_p50_us() <= m.latency_p99_us());
+        assert!(m.latency_p99_us() <= m.latency_max_us());
+    }
+}
+
+/// A backend whose very first `predict_into` (across all workers) blocks
+/// until the test opens the gate — the tool for wedging one worker while
+/// the others must keep the pipeline alive.
+struct FirstCallGate {
+    /// (armed, open) — the first caller disarms and then waits for open.
+    state: Arc<(Mutex<(bool, bool)>, Condvar)>,
+}
+
+impl Backend for FirstCallGate {
+    fn name(&self) -> &'static str {
+        "first-call-gate"
+    }
+
+    fn max_batch(&self) -> usize {
+        1
+    }
+
+    fn predict_into(
+        &mut self,
+        requests: &[PredictRequest<'_>],
+        out: &mut Vec<RawOutcome>,
+    ) -> anyhow::Result<()> {
+        let (lock, cv) = &*self.state;
+        let mut s = lock.lock().unwrap();
+        if s.0 {
+            s.0 = false; // disarm: only the very first call blocks
+            while !s.1 {
+                s = cv.wait(s).unwrap();
+            }
+        }
+        drop(s);
+        out.extend(
+            requests
+                .iter()
+                .map(|req| Ok([1.0, 100.0 + req.graph.n_nodes() as f64, 1.0])),
+        );
+        Ok(())
+    }
+}
+
+#[test]
+fn idle_worker_steals_the_former_role_while_a_worker_is_wedged() {
+    let state = Arc::new((Mutex::new((true, false)), Condvar::new()));
+    let coord = {
+        let state = state.clone();
+        Coordinator::start_with_backend(
+            Box::new(move || {
+                Ok(Box::new(FirstCallGate {
+                    state: state.clone(),
+                }) as Box<dyn Backend>)
+            }),
+            opts(BatchFormerMode::Leader, 2, Duration::from_millis(2)),
+        )
+        .unwrap()
+    };
+    // First submission wedges whichever worker executes it.
+    let rx_wedged = coord.submit(Family::Vgg.generate(0));
+    // Wait until the gate is actually held.
+    loop {
+        if !state.0.lock().unwrap().0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // With one worker wedged mid-batch, the other must steal the former
+    // role (the ring is empty), form the next batch and execute it —
+    // if it were sleeping on the ring instead, this recv would time out.
+    let rx_live = coord.submit(Family::ResNet.generate(0));
+    let pred = rx_live
+        .recv_timeout(Duration::from_secs(10))
+        .expect("an idle worker must keep serving while a peer is wedged")
+        .unwrap();
+    assert!(pred.memory_mb > 0.0);
+    // Open the gate; the wedged request completes too.
+    {
+        let (lock, cv) = &*state;
+        lock.lock().unwrap().1 = true;
+        cv.notify_all();
+    }
+    rx_wedged
+        .recv_timeout(Duration::from_secs(10))
+        .expect("wedged request completes once the gate opens")
+        .unwrap();
+    let m = metrics_when(&coord, |m| m.batches == 2);
+    assert_eq!(m.errors, 0);
+    assert_eq!(m.batches, 2, "max_batch=1: one batch per miss");
+}
+
+#[test]
+fn shutdown_drains_queued_jobs_in_every_mode() {
+    for mode in ALL_MODES {
+        let coord =
+            Coordinator::start_sim(opts(mode, 2, Duration::from_millis(5))).unwrap();
+        // A burst of distinct misses, then an immediate drop: the queue is
+        // closed, the former folds the remainder into closed batches, the
+        // workers drain the ring, and only then does drop return.
+        let rxs: Vec<_> = (0..ALL_FAMILIES.len())
+            .map(|i| coord.submit(ALL_FAMILIES[i].generate(0)))
+            .collect();
+        drop(coord);
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let pred = rx
+                .recv()
+                .unwrap_or_else(|_| panic!("mode {mode:?}: reply {i} dropped on shutdown"))
+                .unwrap();
+            assert!(pred.latency_ms.is_finite());
+        }
+    }
+}
+
+#[test]
+fn ring_and_queue_gauges_settle_after_a_burst() {
+    let coord =
+        Coordinator::start_sim(opts(BatchFormerMode::Thread, 3, Duration::from_millis(2)))
+            .unwrap();
+    let rxs: Vec<_> = (0..ALL_FAMILIES.len())
+        .map(|i| coord.submit(ALL_FAMILIES[i].generate(1)))
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let m = metrics_when(&coord, |m| m.latency_count() == ALL_FAMILIES.len() as u64);
+    assert_eq!(m.queue_depth, 0, "all jobs admitted");
+    assert_eq!(m.ring_depth, 0, "all batches executed");
+    assert!(m.queue_depth_hwm >= 1, "the burst was visible to the gauge");
+    assert_eq!(m.latency_count(), ALL_FAMILIES.len() as u64);
+    assert_eq!(m.batch_former, "thread");
+}
+
+/// Deterministic no-double-wait at the pipeline level: a single miss
+/// through a 4-worker former pipeline replies well before two `max_wait`
+/// windows could elapse — in the per-worker design, a second camper's
+/// window was the failure mode this pipeline removes.
+#[test]
+fn single_miss_never_waits_two_windows() {
+    let max_wait = Duration::from_millis(300);
+    let coord = Coordinator::start_sim(opts(BatchFormerMode::Leader, 4, max_wait)).unwrap();
+    let t0 = std::time::Instant::now();
+    coord.predict(Family::DenseNet.generate(3)).unwrap();
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < max_wait * 2,
+        "one miss must never span two windows: {elapsed:?} vs max_wait {max_wait:?}"
+    );
+    let m = metrics_when(&coord, |m| m.batches >= 1);
+    assert!(u128::from(m.queue_residency_max_us) <= max_wait.as_micros());
+}

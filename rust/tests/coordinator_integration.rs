@@ -49,8 +49,13 @@ fn single_predict_roundtrip() {
 #[test]
 fn concurrent_requests_are_batched_not_dropped() {
     // Cache off: this test is about the dynamic batcher, so every request
-    // must reach the executor.
-    let coord = Arc::new(sim_coordinator(cache_off()));
+    // must reach the executor. A generous window (the linger is an eighth
+    // of it) keeps the burst batching by size-close regardless of how
+    // slowly this thread submits.
+    let coord = Arc::new(sim_coordinator(CoordinatorOptions {
+        max_wait: Duration::from_millis(50),
+        ..cache_off()
+    }));
     let n = 48;
     let mut rxs = Vec::new();
     for i in 0..n {
@@ -366,6 +371,19 @@ fn tcp_end_to_end_all_frameworks() {
     assert_eq!(v.path(&["analyses_computed"]).as_usize(), Some(1), "{stats}");
     assert_eq!(v.path(&["analyses_reused"]).as_usize(), Some(1), "{stats}");
     assert_eq!(v.path(&["executor_threads"]).as_usize(), Some(1), "{stats}");
+    // Batch-former observability: the mode, the latency histogram (one
+    // backend-served request so far) and the queue/ring gauges.
+    assert_eq!(v.path(&["batch_former"]).as_str(), Some("leader"), "{stats}");
+    assert_eq!(v.path(&["latency_count"]).as_usize(), Some(1), "{stats}");
+    assert!(v.path(&["latency_p99_us"]).as_usize().unwrap() > 0, "{stats}");
+    assert!(
+        v.path(&["latency_p50_us"]).as_usize().unwrap()
+            <= v.path(&["latency_p99_us"]).as_usize().unwrap(),
+        "{stats}"
+    );
+    assert_eq!(v.path(&["queue_depth"]).as_usize(), Some(0), "{stats}");
+    assert!(v.path(&["queue_depth_hwm"]).as_usize().unwrap() >= 1, "{stats}");
+    assert!(v.path(&["queue_residency_max_us"]).as_usize().is_some(), "{stats}");
 
     // Malformed request -> structured error, connection stays up.
     let resp = client.roundtrip("{\"model\": 42}").unwrap();
@@ -487,7 +505,11 @@ impl Backend for GatedBackend {
         1
     }
 
-    fn predict_raw(&mut self, requests: &[PredictRequest<'_>]) -> anyhow::Result<Vec<RawOutcome>> {
+    fn predict_into(
+        &mut self,
+        requests: &[PredictRequest<'_>],
+        out: &mut Vec<RawOutcome>,
+    ) -> anyhow::Result<()> {
         for req in requests {
             self.served.lock().unwrap().push(req.graph.variant.clone());
         }
@@ -500,10 +522,12 @@ impl Backend for GatedBackend {
                 open = cv.wait(open).unwrap();
             }
         }
-        Ok(requests
-            .iter()
-            .map(|req| Ok([1.0, 100.0 + req.graph.n_nodes() as f64, 1.0]))
-            .collect())
+        out.extend(
+            requests
+                .iter()
+                .map(|req| Ok([1.0, 100.0 + req.graph.n_nodes() as f64, 1.0])),
+        );
+        Ok(())
     }
 }
 
