@@ -1,0 +1,236 @@
+//! Wire-protocol scaling (L3 transport): the binary reactor vs the JSON-
+//! lines listener at increasing connection counts, against the simulator
+//! backend on a hot (100% cache hit) workload — so the transport, not the
+//! model, dominates and the two protocols compare head-to-head.
+//!
+//! Shape: N connections held open for the whole run; a small pool of
+//! driver threads round-robins its share of connections, one request in
+//! flight per connection (closed loop), measuring per-request RTT. Every
+//! connection gets one untimed warmup round first. The same schedule runs
+//! over `WireClient` (binary frames) and `tcp::Client` (JSON lines);
+//! each run gets a fresh coordinator + listener so counters and cache
+//! state never bleed across runs.
+//!
+//! Scale knobs: DIPPM_BENCH_WIRE_LEVELS (comma-separated connection
+//! counts, default "64,256,1024"; FULL=1 default "64,256,1024,4096,10240"
+//! — the big levels need `ulimit -n` well above 2x the level),
+//! DIPPM_BENCH_WIRE_ROUNDS (timed requests per connection, default 4),
+//! DIPPM_BENCH_WIRE_THREADS (driver threads, default 8). Set
+//! DIPPM_BENCH_JSON=<path> to merge a `wire_scaling` section into the
+//! serving-throughput JSON document (read-modify-write: both benches
+//! share the CI `BENCH_serving_throughput.json` artifact).
+
+#[path = "common.rs"]
+mod common;
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use dippm::coordinator::{tcp, Coordinator, CoordinatorOptions, ServeOptions};
+use dippm::ir::Graph;
+use dippm::modelgen::Family;
+use dippm::util::bench::{banner, Table};
+use dippm::util::json::{Json, JsonObj};
+use dippm::util::stats::quantile;
+use dippm::wire::{reactor, ReactorConfig, WireClient};
+
+/// One connection of either protocol, driven identically.
+enum AnyClient {
+    Binary(WireClient),
+    JsonLines(tcp::Client),
+}
+
+impl AnyClient {
+    fn rtt(&mut self, g: &Graph) {
+        match self {
+            AnyClient::Binary(c) => {
+                c.predict_graph(g).unwrap();
+            }
+            AnyClient::JsonLines(c) => {
+                let r = c.predict_graph(g).unwrap();
+                assert!(r.contains("\"ok\":true"), "json predict failed: {r}");
+            }
+        }
+    }
+}
+
+/// Fresh coordinator + listener for one (protocol, level) run; returns
+/// the address to connect to.
+fn start_server(wire: &str, conns: usize) -> String {
+    let coord = Arc::new(Coordinator::start_sim(CoordinatorOptions::default()).unwrap());
+    // Warm the cache so every benched request is a pure transport + hit.
+    coord.predict(hot_graph()).unwrap();
+    let (port_tx, port_rx) = mpsc::channel();
+    if wire == "binary" {
+        let cfg = ReactorConfig {
+            max_connections: conns + 64,
+            ..ReactorConfig::default()
+        };
+        std::thread::spawn(move || {
+            reactor::serve(coord, "127.0.0.1:0", cfg, move |p| {
+                let _ = port_tx.send(p);
+            })
+            .unwrap();
+        });
+    } else {
+        let opts = ServeOptions {
+            max_connections: conns + 64,
+            ..ServeOptions::default()
+        };
+        std::thread::spawn(move || {
+            tcp::serve_with(coord, "127.0.0.1:0", opts, move |p| {
+                let _ = port_tx.send(p);
+            })
+            .unwrap();
+        });
+    }
+    format!("127.0.0.1:{}", port_rx.recv().unwrap())
+}
+
+fn hot_graph() -> Graph {
+    Family::Mlp.generate(0)
+}
+
+/// Drive `conns` connections for `rounds` timed requests each across
+/// `threads` driver threads. Returns (req_per_s, per-request latencies).
+fn run_level(wire: &str, conns: usize, rounds: usize, threads: usize) -> (f64, Vec<f64>) {
+    let addr = start_server(wire, conns);
+    let g = hot_graph();
+
+    // Open every connection up front and deal them to driver threads.
+    let mut decks: Vec<Vec<AnyClient>> = (0..threads).map(|_| Vec::new()).collect();
+    for i in 0..conns {
+        let client = if wire == "binary" {
+            AnyClient::Binary(WireClient::connect(&addr).unwrap())
+        } else {
+            AnyClient::JsonLines(tcp::Client::connect(&addr).unwrap())
+        };
+        decks[i % threads].push(client);
+    }
+
+    let handles: Vec<_> = decks
+        .into_iter()
+        .map(|mut deck| {
+            let g = g.clone();
+            std::thread::spawn(move || {
+                // Untimed warmup round: connection setup and first-touch
+                // costs stay out of the latency distribution.
+                for c in deck.iter_mut() {
+                    c.rtt(&g);
+                }
+                let mut lats = Vec::with_capacity(deck.len() * rounds);
+                let t0 = Instant::now();
+                for _ in 0..rounds {
+                    for c in deck.iter_mut() {
+                        let t = Instant::now();
+                        c.rtt(&g);
+                        lats.push(t.elapsed().as_secs_f64());
+                    }
+                }
+                (t0.elapsed().as_secs_f64(), lats)
+            })
+        })
+        .collect();
+
+    let mut lats = Vec::new();
+    let mut slowest = 0.0f64;
+    for h in handles {
+        let (el, l) = h.join().unwrap();
+        slowest = slowest.max(el);
+        lats.extend(l);
+    }
+    let total = conns * rounds;
+    (total as f64 / slowest.max(1e-9), lats)
+}
+
+fn main() {
+    banner(
+        "Perf/L3",
+        "wire scaling: binary reactor vs JSON-lines at rising connection counts",
+    );
+    let default_levels = if common::is_full() {
+        "64,256,1024,4096,10240"
+    } else {
+        "64,256,1024"
+    };
+    let levels: Vec<usize> = std::env::var("DIPPM_BENCH_WIRE_LEVELS")
+        .unwrap_or_else(|_| default_levels.to_string())
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .filter(|&n| n > 0)
+        .collect();
+    let rounds = common::env_usize("DIPPM_BENCH_WIRE_ROUNDS", 4);
+    let threads = common::env_usize("DIPPM_BENCH_WIRE_THREADS", 8).max(1);
+
+    let mut t = Table::new(&["connections", "wire", "req/s", "p50 (ms)", "p99 (ms)"]);
+    let mut json_rows: Vec<Json> = Vec::new();
+    let mut summaries: Vec<String> = Vec::new();
+    for &conns in &levels {
+        let mut level_rps = (0.0, 0.0); // (binary, json)
+        let mut level_p99 = (0.0, 0.0);
+        for wire in ["binary", "json"] {
+            let (rps, lats) = run_level(wire, conns, rounds, threads);
+            let p50 = 1e3 * quantile(&lats, 0.5);
+            let p99 = 1e3 * quantile(&lats, 0.99);
+            if wire == "binary" {
+                level_rps.0 = rps;
+                level_p99.0 = p99;
+            } else {
+                level_rps.1 = rps;
+                level_p99.1 = p99;
+            }
+            t.row(&[
+                conns.to_string(),
+                wire.into(),
+                format!("{rps:.0}"),
+                format!("{p50:.3}"),
+                format!("{p99:.3}"),
+            ]);
+            let mut row = JsonObj::new();
+            row.insert("wire", wire);
+            row.insert("connections", conns);
+            row.insert("rounds", rounds);
+            row.insert("req_per_s", rps);
+            row.insert("p50_ms", p50);
+            row.insert("p99_ms", p99);
+            json_rows.push(Json::Obj(row));
+        }
+        summaries.push(format!(
+            "{conns} conns: binary {:.0} req/s vs json {:.0} ({:.2}x); \
+             p99 {:.3}ms vs {:.3}ms",
+            level_rps.0,
+            level_rps.1,
+            if level_rps.1 > 0.0 { level_rps.0 / level_rps.1 } else { 0.0 },
+            level_p99.0,
+            level_p99.1
+        ));
+    }
+    t.print();
+    println!("\n{threads} driver threads, {rounds} timed rounds per connection, hot workload");
+    for s in &summaries {
+        println!("{s}");
+    }
+    println!("target: binary >= json req/s and p99 <= json p99 at every level");
+
+    // Merge a wire_scaling section into the shared serving JSON document
+    // (serving_throughput writes the same file first in CI; benches run
+    // sequentially, so read-modify-write is race-free).
+    if let Ok(path) = std::env::var("DIPPM_BENCH_JSON") {
+        let mut doc = match std::fs::read_to_string(&path).map(|s| Json::parse(&s)) {
+            Ok(Ok(Json::Obj(o))) => o,
+            _ => {
+                let mut o = JsonObj::new();
+                o.insert("bench", "serving_throughput");
+                o
+            }
+        };
+        let mut section = JsonObj::new();
+        section.insert("rounds", rounds);
+        section.insert("driver_threads", threads);
+        section.insert("levels", Json::Arr(json_rows));
+        doc.insert("wire_scaling", Json::Obj(section));
+        std::fs::write(&path, format!("{}\n", Json::Obj(doc))).expect("write DIPPM_BENCH_JSON");
+        println!("merged wire_scaling into {path}");
+    }
+}

@@ -2,7 +2,8 @@
 //! dynamic batcher in front of the PJRT predict executable, exposing DIPPM
 //! as a service (the paper's Fig. 5 usability story, minus Python).
 //!
-//! Architecture: callers (CLI, TCP handler threads, benches) submit graphs
+//! Architecture: callers (CLI, TCP handler threads, wire event loops,
+//! benches) submit graphs
 //! through a bounded priority job queue. The submit path runs the one-pass
 //! `GraphAnalysis` exactly once — its fingerprint is the cache key, and the
 //! analysis rides the job so nothing downstream re-traverses the graph.
@@ -25,6 +26,12 @@
 //! onto one in-flight batch slot (single-flight dedup). Backends are
 //! pluggable (`backend::PjrtBackend` for the AOT/PJRT path,
 //! `backend::SimBackend` for the hermetic simulator path).
+//!
+//! Two front doors share the coordinator: the JSON-lines listener here
+//! (`tcp` — compatibility, examples, curl) and the binary wire reactor
+//! (`crate::wire` — length-prefixed frames, pipelining, 10k-connection
+//! event loops). `--wire json|binary|both` selects which run; both report
+//! transport counters into one [`crate::wire::WireMetrics`].
 
 pub mod backend;
 pub mod batcher;
@@ -37,3 +44,4 @@ pub use backend::{Backend, BackendFactory, PjrtBackend, PredictRequest, RawOutco
 pub use batcher::BatchFormerMode;
 pub use protocol::{Prediction, Request};
 pub use server::{CacheValue, Coordinator, CoordinatorOptions, Metrics};
+pub use tcp::ServeOptions;

@@ -159,6 +159,18 @@ pub fn cache_stats_response(m: &Metrics) -> String {
     o.insert("ring_depth", m.ring_depth as usize);
     o.insert("ring_depth_hwm", m.ring_depth_hwm as usize);
     o.insert("queue_residency_max_us", m.queue_residency_max_us as usize);
+    // Transport counters, aggregated across the JSON-lines listener and
+    // the binary wire reactor (`--wire`). Always present — a server with
+    // no traffic reports zeros, not absent fields.
+    o.insert("connections_open", m.wire_connections_open as usize);
+    o.insert("connections_accepted", m.wire_connections_accepted as usize);
+    o.insert("connections_closed", m.wire_connections_closed as usize);
+    o.insert("connections_rejected", m.wire_connections_rejected as usize);
+    o.insert("frames_rx", m.wire_frames_rx as usize);
+    o.insert("frames_tx", m.wire_frames_tx as usize);
+    o.insert("frame_decode_errors", m.wire_frame_decode_errors as usize);
+    o.insert("bytes_rx", m.wire_bytes_rx as usize);
+    o.insert("bytes_tx", m.wire_bytes_tx as usize);
     Json::Obj(o).to_string()
 }
 
@@ -271,6 +283,15 @@ mod tests {
             torn_tail_drops: 1,
             journal_bytes: 4096,
             journal_generation: 3,
+            wire_connections_open: 4,
+            wire_connections_accepted: 11,
+            wire_connections_closed: 7,
+            wire_connections_rejected: 1,
+            wire_frames_rx: 100,
+            wire_frames_tx: 99,
+            wire_frame_decode_errors: 2,
+            wire_bytes_rx: 5000,
+            wire_bytes_tx: 4000,
             ..Default::default()
         };
         let s = cache_stats_response(&m);
@@ -307,6 +328,16 @@ mod tests {
         assert_eq!(v.path(&["ring_depth"]).as_usize(), Some(1));
         assert_eq!(v.path(&["ring_depth_hwm"]).as_usize(), Some(3));
         assert_eq!(v.path(&["queue_residency_max_us"]).as_usize(), Some(2500));
+        // Transport counters.
+        assert_eq!(v.path(&["connections_open"]).as_usize(), Some(4));
+        assert_eq!(v.path(&["connections_accepted"]).as_usize(), Some(11));
+        assert_eq!(v.path(&["connections_closed"]).as_usize(), Some(7));
+        assert_eq!(v.path(&["connections_rejected"]).as_usize(), Some(1));
+        assert_eq!(v.path(&["frames_rx"]).as_usize(), Some(100));
+        assert_eq!(v.path(&["frames_tx"]).as_usize(), Some(99));
+        assert_eq!(v.path(&["frame_decode_errors"]).as_usize(), Some(2));
+        assert_eq!(v.path(&["bytes_rx"]).as_usize(), Some(5000));
+        assert_eq!(v.path(&["bytes_tx"]).as_usize(), Some(4000));
     }
 
     #[test]
@@ -333,6 +364,12 @@ mod tests {
         assert_eq!(v.path(&["queue_depth_hwm"]).as_usize(), Some(0));
         assert_eq!(v.path(&["ring_depth_hwm"]).as_usize(), Some(0));
         assert_eq!(v.path(&["queue_residency_max_us"]).as_usize(), Some(0));
+        // Transport counters are zeroed too, never absent.
+        assert_eq!(v.path(&["connections_open"]).as_usize(), Some(0));
+        assert_eq!(v.path(&["connections_accepted"]).as_usize(), Some(0));
+        assert_eq!(v.path(&["frames_rx"]).as_usize(), Some(0));
+        assert_eq!(v.path(&["frame_decode_errors"]).as_usize(), Some(0));
+        assert_eq!(v.path(&["bytes_tx"]).as_usize(), Some(0));
     }
 
     #[test]

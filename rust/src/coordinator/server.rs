@@ -56,6 +56,7 @@ use crate::runtime::ParamStore;
 use crate::simulator::CostSweep;
 use crate::util::stats::LogHistogram;
 use crate::util::threadpool::ThreadPool;
+use crate::wire::WireMetrics;
 use crate::{log_info, log_warn};
 
 use super::backend::{Backend, BackendFactory, PjrtBackend, SimBackend};
@@ -185,6 +186,21 @@ pub struct Metrics {
     pub journal_bytes: u64,
     /// Current store generation.
     pub journal_generation: u64,
+    /// Transport counters, aggregated across the JSON-lines listener and
+    /// the binary wire reactor (see [`crate::wire::WireMetrics`]).
+    pub wire_connections_open: u64,
+    pub wire_connections_accepted: u64,
+    pub wire_connections_closed: u64,
+    /// Connections turned away at the `--max-connections` cap.
+    pub wire_connections_rejected: u64,
+    /// Binary frames / JSON request lines read.
+    pub wire_frames_rx: u64,
+    /// Binary frames / JSON response lines written.
+    pub wire_frames_tx: u64,
+    /// Framing + payload decode failures on either listener.
+    pub wire_frame_decode_errors: u64,
+    pub wire_bytes_rx: u64,
+    pub wire_bytes_tx: u64,
 }
 
 impl Metrics {
@@ -314,6 +330,9 @@ pub struct Coordinator {
     flight: Option<Arc<SingleFlight<Prediction>>>,
     default_target: Target,
     snapshot_path: Option<PathBuf>,
+    /// Transport counters shared with every listener serving this
+    /// coordinator (JSON threads + wire event loops).
+    wire: Arc<WireMetrics>,
     /// The journal/manifest/generation store behind `--cache-file`.
     store: Option<Arc<JournalStore<CacheValue>>>,
     /// When durable state was last written (flush/compaction/boot).
@@ -595,6 +614,7 @@ impl Coordinator {
             flight,
             default_target: opts.target,
             snapshot_path: opts.cache.snapshot_path,
+            wire: Arc::new(WireMetrics::default()),
             store,
             last_persist,
             handles,
@@ -606,6 +626,13 @@ impl Coordinator {
     /// The target assumed for submissions that do not name one.
     pub fn default_target(&self) -> &Target {
         &self.default_target
+    }
+
+    /// Transport counters for this coordinator's listeners. Both the
+    /// JSON-lines listener and the binary reactor report here; metrics
+    /// are aggregated across them in [`Coordinator::metrics`].
+    pub fn wire_metrics(&self) -> &Arc<WireMetrics> {
+        &self.wire
     }
 
     /// Submit a graph for the default target; see [`Coordinator::submit_to`].
@@ -827,6 +854,17 @@ impl Coordinator {
             m.cache_entries = s.entries;
             m.cache_capacity = s.capacity;
         }
+        let w = &self.wire;
+        let ld = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        m.wire_connections_open = ld(&w.connections_open);
+        m.wire_connections_accepted = ld(&w.connections_accepted);
+        m.wire_connections_closed = ld(&w.connections_closed);
+        m.wire_connections_rejected = ld(&w.connections_rejected);
+        m.wire_frames_rx = ld(&w.frames_rx);
+        m.wire_frames_tx = ld(&w.frames_tx);
+        m.wire_frame_decode_errors = ld(&w.frame_decode_errors);
+        m.wire_bytes_rx = ld(&w.bytes_rx);
+        m.wire_bytes_tx = ld(&w.bytes_tx);
         m
     }
 

@@ -2,15 +2,23 @@
 //! (prediction or error). Each connection gets a handler thread; all
 //! handlers share the coordinator's request queue (the executor batches
 //! across connections — that is the point of the dynamic batcher).
+//!
+//! This is the *compatibility* listener: human-debuggable, curl-able, and
+//! what every example speaks. High-connection-count serving lives in
+//! [`crate::wire`] (binary frames + nonblocking reactor); both listeners
+//! share the [`crate::wire::WireMetrics`] transport counters and the same
+//! connection-cap / idle-timeout hygiene ([`ServeOptions`]).
 
-use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::io::{BufRead, BufReader, BufWriter, ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::ir::Graph;
 use crate::log_info;
+use crate::wire::WireMetrics;
 
 use super::protocol::{
     cache_compact_response, cache_load_response, cache_save_response, cache_stats_response,
@@ -19,42 +27,122 @@ use super::protocol::{
 use super::server::Coordinator;
 use crate::util::json::{Json, JsonObj};
 
-/// Serve forever on `addr` (e.g. "127.0.0.1:7401"). Returns the bound port
-/// via the callback (useful with port 0 in tests).
+/// Hygiene knobs for the JSON-lines listener (`--max-connections`,
+/// `--idle-timeout-s`). The connection cap is enforced against the
+/// coordinator's shared open-connection gauge, so when both listeners run
+/// (`--wire both`) the cap bounds their *combined* footprint.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Reject new connections while this many are open across listeners.
+    pub max_connections: usize,
+    /// Close a connection whose next request does not arrive within this
+    /// window (dead peers stop pinning threads and file descriptors).
+    pub idle_timeout: Duration,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            max_connections: 10_240,
+            idle_timeout: Duration::from_secs(300),
+        }
+    }
+}
+
+/// Serve forever on `addr` (e.g. "127.0.0.1:7401") with default hygiene
+/// options. Returns the bound port via the callback (useful with port 0
+/// in tests).
 pub fn serve(coordinator: Arc<Coordinator>, addr: &str, on_bound: impl FnOnce(u16)) -> Result<()> {
+    serve_with(coordinator, addr, ServeOptions::default(), on_bound)
+}
+
+/// [`serve`] with explicit connection-cap and idle-timeout options.
+pub fn serve_with(
+    coordinator: Arc<Coordinator>,
+    addr: &str,
+    opts: ServeOptions,
+    on_bound: impl FnOnce(u16),
+) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
     let port = listener.local_addr()?.port();
     log_info!("dippm serving on port {port}");
     on_bound(port);
+    // Accept failures (fd exhaustion, aborted handshakes) back off
+    // exponentially instead of spinning a hot warn loop.
+    let mut backoff = Duration::from_millis(10);
     for stream in listener.incoming() {
         let stream = match stream {
-            Ok(s) => s,
+            Ok(s) => {
+                backoff = Duration::from_millis(10);
+                s
+            }
             Err(e) => {
-                crate::log_warn!("accept failed: {e}");
+                crate::log_warn!("accept failed: {e} (backing off {backoff:?})");
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_secs(2));
                 continue;
             }
         };
+        let wire = coordinator.wire_metrics().clone();
+        let open = wire.connections_open.load(std::sync::atomic::Ordering::Relaxed);
+        if open as usize >= opts.max_connections {
+            wire.conn_rejected();
+            let mut s = stream;
+            let _ = s.set_nonblocking(true);
+            let mut line = error_response("server at connection capacity");
+            line.push('\n');
+            let _ = s.write(line.as_bytes());
+            crate::log_debug!("json connection rejected at cap ({open} open)");
+            continue;
+        }
+        wire.conn_opened();
         let coord = coordinator.clone();
+        let idle = opts.idle_timeout;
         std::thread::spawn(move || {
-            if let Err(e) = handle_connection(&coord, stream) {
+            if let Err(e) = handle_connection(&coord, stream, idle) {
                 crate::log_debug!("connection ended: {e}");
             }
+            coord.wire_metrics().conn_closed();
         });
     }
     Ok(())
 }
 
-fn handle_connection(coordinator: &Coordinator, stream: TcpStream) -> Result<()> {
-    let reader = BufReader::new(stream.try_clone()?);
+fn handle_connection(
+    coordinator: &Coordinator,
+    stream: TcpStream,
+    idle_timeout: Duration,
+) -> Result<()> {
+    // The read timeout doubles as the idle timeout: a peer that stays
+    // silent for a whole window is treated as gone (clean close, not an
+    // error).
+    if idle_timeout > Duration::ZERO {
+        stream.set_read_timeout(Some(idle_timeout))?;
+    }
+    let wire = coordinator.wire_metrics().clone();
+    let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
-    for line in reader.lines() {
-        let line = line?;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // EOF
+            Ok(n) => wire.rx(1, n as u64),
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                crate::log_debug!("json connection idle for {idle_timeout:?}; closing");
+                return Ok(());
+            }
+            Err(e) => return Err(e.into()),
+        }
         if line.trim().is_empty() {
             continue;
         }
         // Parse each line exactly once; route on the `cmd` key.
         let response = match Json::parse(&line) {
-            Err(e) => error_response(&e.to_string()),
+            Err(e) => {
+                wire.decode_error();
+                error_response(&e.to_string())
+            }
             Ok(v) => match parse_cmd(&v) {
                 Some("cache_stats") => cache_stats_response(&coordinator.metrics()),
                 Some("cache_save") => match coordinator.save_cache(v.path(&["path"]).as_str()) {
@@ -78,15 +166,18 @@ fn handle_connection(coordinator: &Coordinator, stream: TcpStream) -> Result<()>
                         },
                         Err(e) => error_response(&e),
                     },
-                    Err(e) => error_response(&e),
+                    Err(e) => {
+                        wire.decode_error();
+                        error_response(&e)
+                    }
                 },
             },
         };
         writer.write_all(response.as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
+        wire.tx(1, response.len() as u64 + 1);
     }
-    Ok(())
 }
 
 /// Minimal client for tests and the serve_demo example.
@@ -147,40 +238,66 @@ impl Client {
 
     /// Convenience: predict a graph via its native-format export.
     pub fn predict_graph(&mut self, graph: &Graph) -> Result<String> {
-        let model = crate::frontends::export(crate::frontends::Framework::Native, graph);
-        let line = format!(
-            "{{\"framework\":\"native\",\"model\":{}}}",
-            compact_json(&model)
-        );
-        self.roundtrip(&line)
+        self.roundtrip(&predict_request_line(graph, None)?)
     }
 
     /// Convenience: predict a graph for a specific target configuration.
     pub fn predict_graph_on(&mut self, graph: &Graph, target: &str) -> Result<String> {
-        let model = crate::frontends::export(crate::frontends::Framework::Native, graph);
-        let line = format!(
-            "{{\"framework\":\"native\",\"target\":\"{target}\",\"model\":{}}}",
-            compact_json(&model)
-        );
-        self.roundtrip(&line)
+        self.roundtrip(&predict_request_line(graph, Some(target))?)
     }
 }
 
-/// Re-serialize pretty JSON compactly so it fits on one protocol line.
-fn compact_json(pretty: &str) -> String {
-    crate::util::json::Json::parse(pretty)
-        .map(|j| j.to_string())
-        .unwrap_or_else(|_| pretty.to_string())
+/// Build a predict request line via the JSON writer, so every field —
+/// including a caller-supplied `target` — is escaped. (An earlier version
+/// spliced `target` into the line with `format!`, letting a quote-bearing
+/// string inject extra request fields.)
+fn predict_request_line(graph: &Graph, target: Option<&str>) -> Result<String> {
+    let model = crate::frontends::export(crate::frontends::Framework::Native, graph);
+    let mut o = JsonObj::new();
+    o.insert("framework", "native");
+    if let Some(t) = target {
+        o.insert("target", t);
+    }
+    o.insert(
+        "model",
+        Json::parse(&model).map_err(|e| anyhow::anyhow!("exported model is not JSON: {e}"))?,
+    );
+    Ok(Json::Obj(o).to_string())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::modelgen::Family;
 
     #[test]
-    fn compact_json_flattens() {
-        let c = compact_json("{\n  \"a\": 1\n}");
-        assert_eq!(c, "{\"a\":1}");
-        assert!(!c.contains('\n'));
+    fn predict_request_line_is_one_escaped_json_line() {
+        let g = Family::Mlp.generate(0);
+        let line = predict_request_line(&g, Some("a100:2g.10gb")).unwrap();
+        assert!(!line.contains('\n'));
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.path(&["framework"]).as_str(), Some("native"));
+        assert_eq!(v.path(&["target"]).as_str(), Some("a100:2g.10gb"));
+        assert!(matches!(v.path(&["model"]), Json::Obj(_)));
+    }
+
+    #[test]
+    fn hostile_target_cannot_inject_request_fields() {
+        // A quote-bearing target must stay inside the target string —
+        // with the old format! splice this smuggled a `cmd` key into the
+        // request object.
+        let g = Family::Mlp.generate(0);
+        let hostile = "x\",\"cmd\":\"cache_stats";
+        let line = predict_request_line(&g, Some(hostile)).unwrap();
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.path(&["target"]).as_str(), Some(hostile));
+        assert!(v.path(&["cmd"]).as_str().is_none(), "injected cmd key");
+    }
+
+    #[test]
+    fn serve_options_defaults_are_sane() {
+        let o = ServeOptions::default();
+        assert!(o.max_connections >= 1024);
+        assert!(o.idle_timeout >= Duration::from_secs(30));
     }
 }

@@ -32,3 +32,4 @@ pub mod runtime;
 pub mod simulator;
 pub mod training;
 pub mod util;
+pub mod wire;

@@ -18,7 +18,8 @@ use std::sync::Arc;
 use anyhow::{anyhow, Context, Result};
 
 use dippm::cache::{CacheConfig, Target};
-use dippm::coordinator::{Coordinator, CoordinatorOptions};
+use dippm::coordinator::{Coordinator, CoordinatorOptions, ServeOptions};
+use dippm::wire::ReactorConfig;
 use dippm::dataset::{io as ds_io, Dataset};
 use dippm::frontends::{self, Framework};
 use dippm::ir::Graph;
@@ -48,11 +49,16 @@ COMMANDS
   serve          [--checkpoint <file>] [--addr 127.0.0.1:7401] [--max-wait-ms 2]
                  [--backend auto|pjrt|sim] [--executor-threads 1]
                  [--batch-former leader|thread|off]
+                 [--wire json|binary|both] [--wire-addr host:port]
+                 [--max-connections 10240] [--idle-timeout-s N] [--event-loops N]
                  [--no-cache] [--no-dedup]
                  [--cache-capacity 8192] [--cache-shards 8] [--cache-ttl-s N]
                  [--cache-file <dir>] [--cache-snapshot-every-s N]
                  [--cache-compact-bytes 67108864] [--cache-compact-ratio 0.5]
                  [--target-device a100[:MIG]]   (MIG: 1g.5gb|2g.10gb|3g.20gb|7g.40gb)
+                 (--wire binary serves the length-prefixed binary frame
+                  protocol on a nonblocking reactor; both = JSON on --addr
+                  plus binary on --wire-addr, default --addr's port + 1)
   cache-stats    [--addr 127.0.0.1:7401]
   mig            --model <file> [--framework auto] [--checkpoint <file>]
                  [--target-device a100[:MIG]]
@@ -69,6 +75,7 @@ fn main() {
         "backend", "executor-threads", "batch-former", "cache-capacity",
         "cache-shards", "cache-ttl-s", "cache-file", "cache-snapshot-every-s",
         "cache-compact-bytes", "cache-compact-ratio", "target-device",
+        "wire", "wire-addr", "max-connections", "idle-timeout-s", "event-loops",
     ]) {
         Ok(a) => a,
         Err(e) => {
@@ -357,13 +364,81 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let threads = opts.executor_threads.max(1);
     let former = opts.batch_former.as_str();
-    dippm::coordinator::tcp::serve(coord, addr, move |port| {
-        println!("listening on port {port}; protocol: one JSON request per line");
+    let banner = move |port: u16, proto: &str| {
+        println!("listening on port {port}; protocol: {proto}");
         println!(
             "{cache_desc}; {threads} executor thread(s), batch former {former:?}; \
              query counters with {{\"cmd\":\"cache_stats\"}}"
         );
-    })
+    };
+
+    // Listener hygiene shared by both protocols: the connection cap is a
+    // global gauge, the idle timeout applies per connection.
+    let max_connections = args.get_usize("max-connections", 10_240).max(1);
+    let idle = seconds_arg(args, "idle-timeout-s")?;
+    let serve_opts = ServeOptions {
+        max_connections,
+        idle_timeout: idle.unwrap_or(ServeOptions::default().idle_timeout),
+    };
+    let reactor_cfg = ReactorConfig {
+        event_loops: args
+            .get_usize("event-loops", ReactorConfig::default().event_loops)
+            .max(1),
+        max_connections,
+        idle_timeout: idle.unwrap_or(ReactorConfig::default().idle_timeout),
+        ..ReactorConfig::default()
+    };
+
+    match args.get_or("wire", "json") {
+        "json" => dippm::coordinator::tcp::serve_with(coord, addr, serve_opts, move |port| {
+            banner(port, "one JSON request per line")
+        }),
+        "binary" => dippm::wire::reactor::serve(coord, addr, reactor_cfg, move |port| {
+            banner(port, "binary wire frames (pipelined)")
+        }),
+        "both" => {
+            let wire_addr = match args.get("wire-addr") {
+                Some(a) => a.to_string(),
+                None => bump_port(addr)?,
+            };
+            let json_coord = coord.clone();
+            let json_addr = addr.to_string();
+            std::thread::Builder::new()
+                .name("dippm-json-listener".into())
+                .spawn(move || {
+                    if let Err(e) =
+                        dippm::coordinator::tcp::serve_with(json_coord, &json_addr, serve_opts, |port| {
+                            println!("listening on port {port}; protocol: one JSON request per line");
+                        })
+                    {
+                        eprintln!("json listener failed: {e:#}");
+                    }
+                })
+                .expect("spawn json listener");
+            dippm::wire::reactor::serve(coord, &wire_addr, reactor_cfg, move |port| {
+                banner(port, "binary wire frames (pipelined)")
+            })
+        }
+        other => Err(anyhow!("unknown --wire mode {other:?} (expected json|binary|both)")),
+    }
+}
+
+/// Default binary-listener address for `--wire both`: the JSON listener's
+/// host with the next port (port 0 stays 0 — both get ephemeral ports).
+fn bump_port(addr: &str) -> Result<String> {
+    let (host, port) = addr
+        .rsplit_once(':')
+        .ok_or_else(|| anyhow!("--addr must be host:port, got {addr:?}"))?;
+    let p: u16 = port
+        .parse()
+        .map_err(|_| anyhow!("--addr has a non-numeric port: {addr:?}"))?;
+    let bumped = if p == 0 {
+        0
+    } else {
+        p.checked_add(1)
+            .ok_or_else(|| anyhow!("--addr port {p} has no successor for --wire both"))?
+    };
+    Ok(format!("{host}:{bumped}"))
 }
 
 fn cmd_cache_stats(args: &Args) -> Result<()> {

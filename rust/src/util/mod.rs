@@ -9,11 +9,13 @@
 //! * [`threadpool`] — fixed thread pool for the dataset builder + benches.
 //! * [`proptest`] — a miniature property-testing harness with shrinking.
 //! * [`bench`] — a criterion-less measurement harness for `cargo bench`.
+//! * [`poll`] — readiness polling shim (poll(2) FFI) for the wire reactor.
 
 pub mod args;
 pub mod bench;
 pub mod json;
 pub mod logging;
+pub mod poll;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

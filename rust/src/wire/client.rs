@@ -1,0 +1,135 @@
+//! Binary-mode client: the counterpart of `coordinator::tcp::Client` for
+//! the reactor listener. Split send/recv halves expose pipelining — queue
+//! many requests on one socket, then collect replies in whatever order
+//! the server finishes them, matching on sequence id.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::Prediction;
+use crate::ir::Graph;
+
+use super::frame::{self, Decoded, Frame, FrameKind, DEFAULT_MAX_PAYLOAD};
+use super::codec;
+
+/// A blocking client speaking the binary wire protocol.
+pub struct WireClient {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    next_seq: u32,
+}
+
+impl WireClient {
+    pub fn connect(addr: &str) -> Result<WireClient> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(WireClient {
+            stream,
+            rbuf: Vec::new(),
+            next_seq: 1,
+        })
+    }
+
+    fn alloc_seq(&mut self) -> u32 {
+        let seq = self.next_seq;
+        // Skip 0 on wrap: seq 0 marks connection-level errors.
+        self.next_seq = self.next_seq.wrapping_add(1).max(1);
+        seq
+    }
+
+    /// Queue one predict request without waiting for the reply; returns
+    /// the sequence id the reply will carry. Call repeatedly to pipeline.
+    pub fn send_predict(&mut self, graph: &Graph, target: Option<&str>) -> Result<u32> {
+        let seq = self.alloc_seq();
+        let payload = codec::encode_request(graph, target);
+        let bytes = frame::encode(FrameKind::Request, seq, &payload);
+        self.stream.write_all(&bytes)?;
+        Ok(seq)
+    }
+
+    /// Block until one complete frame arrives.
+    pub fn recv_frame(&mut self) -> Result<Frame> {
+        let mut chunk = [0u8; 16 * 1024];
+        loop {
+            match frame::decode(&self.rbuf, DEFAULT_MAX_PAYLOAD)? {
+                Decoded::Frame {
+                    kind,
+                    seq,
+                    payload,
+                    consumed,
+                } => {
+                    let frame = Frame {
+                        kind,
+                        seq,
+                        payload: payload.to_vec(),
+                    };
+                    self.rbuf.drain(..consumed);
+                    return Ok(frame);
+                }
+                Decoded::Incomplete => {
+                    let n = self.stream.read(&mut chunk)?;
+                    if n == 0 {
+                        bail!("server closed the connection mid-frame");
+                    }
+                    self.rbuf.extend_from_slice(&chunk[..n]);
+                }
+            }
+        }
+    }
+
+    /// Block for the next reply: `(seq, Ok(prediction) | Err(message))`.
+    /// Replies arrive in the server's completion order, not send order.
+    pub fn recv_reply(&mut self) -> Result<(u32, Result<Prediction, String>)> {
+        let f = self.recv_frame()?;
+        match f.kind {
+            FrameKind::Response => {
+                let pred = codec::decode_prediction(&f.payload).map_err(|e| anyhow!(e))?;
+                Ok((f.seq, Ok(pred)))
+            }
+            FrameKind::Error => {
+                let msg = String::from_utf8_lossy(&f.payload).into_owned();
+                if f.seq == 0 {
+                    // Connection-level: the server is about to close on us.
+                    bail!("wire protocol error: {msg}");
+                }
+                Ok((f.seq, Err(msg)))
+            }
+            other => bail!("unexpected frame kind {:?} while awaiting a reply", other),
+        }
+    }
+
+    /// Blocking convenience: one request, one reply, default target.
+    pub fn predict_graph(&mut self, graph: &Graph) -> Result<Prediction> {
+        self.predict(graph, None)
+    }
+
+    /// Blocking convenience for a specific target string (e.g.
+    /// `"a100:2g.10gb"`).
+    pub fn predict_graph_on(&mut self, graph: &Graph, target: &str) -> Result<Prediction> {
+        self.predict(graph, Some(target))
+    }
+
+    fn predict(&mut self, graph: &Graph, target: Option<&str>) -> Result<Prediction> {
+        let want = self.send_predict(graph, target)?;
+        let (seq, reply) = self.recv_reply()?;
+        if seq != want {
+            bail!("reply seq {seq} does not match request seq {want} (pipelining misuse)");
+        }
+        reply.map_err(|e| anyhow!(e))
+    }
+
+    /// Fetch the server's `cache_stats` JSON document.
+    pub fn stats(&mut self) -> Result<String> {
+        let seq = self.alloc_seq();
+        let bytes = frame::encode(FrameKind::Stats, seq, &[]);
+        self.stream.write_all(&bytes)?;
+        let f = self.recv_frame()?;
+        match f.kind {
+            FrameKind::Stats => Ok(String::from_utf8_lossy(&f.payload).into_owned()),
+            FrameKind::Error => bail!("{}", String::from_utf8_lossy(&f.payload)),
+            other => bail!("unexpected frame kind {other:?} in stats reply"),
+        }
+    }
+}

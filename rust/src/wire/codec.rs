@@ -1,0 +1,421 @@
+//! Payload codecs for the wire frames: a compact binary graph encoding for
+//! predict requests and a fixed-layout prediction encoding for responses.
+//!
+//! The request codec is the reason the binary protocol beats JSON-lines:
+//! a JSON request re-serializes the whole model as text (tens of KB for a
+//! ResNet) and the server pays a full JSON parse plus frontend lowering per
+//! request. The binary payload *is* the IR — ops as ordinals, shapes and
+//! edges as integers — and [`decode_request`] reads it straight out of the
+//! connection's read buffer (the frame layer hands a borrowed `&[u8]`, no
+//! intermediate string or JSON tree) into a [`Graph`] that drops directly
+//! into the coordinator's `CostSweep` admission path.
+//!
+//! Node names are deliberately not carried: they are framework metadata
+//! with no effect on prediction (the WL fingerprint and the featurizers
+//! ignore them), so the decoder synthesizes `n<id>`. Family/variant *are*
+//! carried — they seed the simulator's deterministic noise stream, so
+//! dropping them would change answers between the JSON and binary paths.
+//!
+//! Request payload v1 (all integers little-endian):
+//!
+//! ```text
+//! target   u16 len + bytes   "" = server default target
+//! batch    u32
+//! family   u16 len + bytes
+//! variant  u16 len + bytes
+//! n_nodes  u32
+//! node*    op u8 | flags u8 | [kernel u16 u16] | [strides u16 u16]
+//!          | padding u32 | groups u32 | [units u32] | [axis i64]
+//!          | n_inputs u16 + inputs u32* | ndims u8 + dims u32*
+//! ```
+//!
+//! `flags`: bit0 kernel, bit1 strides, bit2 units, bit3 axis.
+//!
+//! Response payload v1: `latency f64 | memory f64 | energy f64 | mig u8
+//! (0 none / 1 present) + [u16 len + bytes]` — the same shape the cache's
+//! snapshot encoding proved out.
+
+use crate::cache::Target;
+use crate::coordinator::Prediction;
+use crate::ir::op::ALL_OPS;
+use crate::ir::{Attrs, Graph, Node, OpKind};
+
+const FLAG_KERNEL: u8 = 1 << 0;
+const FLAG_STRIDES: u8 = 1 << 1;
+const FLAG_UNITS: u8 = 1 << 2;
+const FLAG_AXIS: u8 = 1 << 3;
+
+/// Hard ceiling on decoded node count: far above `max_nodes` (the backend
+/// rejects big graphs anyway) but low enough that a hostile count prefix
+/// cannot make the decoder allocate unboundedly.
+const MAX_WIRE_NODES: usize = 1 << 20;
+
+// --- little-endian writers -------------------------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    let bytes = &s.as_bytes()[..s.len().min(u16::MAX as usize)];
+    // Never split a UTF-8 sequence at the cap (decode would reject it).
+    let mut end = bytes.len();
+    while end > 0 && !s.is_char_boundary(end) {
+        end -= 1;
+    }
+    put_u16(out, end as u16);
+    out.extend_from_slice(&bytes[..end]);
+}
+
+// --- bounds-checked reader -------------------------------------------------
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.buf.len() - self.pos < n {
+            return Err(format!(
+                "request payload truncated (wanted {n} bytes at offset {}, have {})",
+                self.pos,
+                self.buf.len() - self.pos
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, String> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn i64(&mut self) -> Result<i64, String> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<&'a str, String> {
+        let len = self.u16()? as usize;
+        std::str::from_utf8(self.take(len)?).map_err(|_| "non-UTF-8 string field".to_string())
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+// --- request ---------------------------------------------------------------
+
+fn op_ordinal(op: OpKind) -> u8 {
+    ALL_OPS.iter().position(|&o| o == op).expect("op in ALL_OPS") as u8
+}
+
+/// Encode a predict request. `target` = `None` uses the server's default.
+pub fn encode_request(graph: &Graph, target: Option<&str>) -> Vec<u8> {
+    // ~40 bytes/node covers every modelgen family without reallocation.
+    let mut out = Vec::with_capacity(64 + 48 * graph.nodes.len());
+    put_str(&mut out, target.unwrap_or(""));
+    put_u32(&mut out, graph.batch as u32);
+    put_str(&mut out, &graph.family);
+    put_str(&mut out, &graph.variant);
+    put_u32(&mut out, graph.nodes.len() as u32);
+    for node in &graph.nodes {
+        out.push(op_ordinal(node.op));
+        let a = &node.attrs;
+        let mut flags = 0u8;
+        if a.kernel.is_some() {
+            flags |= FLAG_KERNEL;
+        }
+        if a.strides.is_some() {
+            flags |= FLAG_STRIDES;
+        }
+        if a.units.is_some() {
+            flags |= FLAG_UNITS;
+        }
+        if a.axis.is_some() {
+            flags |= FLAG_AXIS;
+        }
+        out.push(flags);
+        if let Some((kh, kw)) = a.kernel {
+            put_u16(&mut out, kh as u16);
+            put_u16(&mut out, kw as u16);
+        }
+        if let Some((sh, sw)) = a.strides {
+            put_u16(&mut out, sh as u16);
+            put_u16(&mut out, sw as u16);
+        }
+        put_u32(&mut out, a.padding as u32);
+        put_u32(&mut out, a.groups as u32);
+        if let Some(u) = a.units {
+            put_u32(&mut out, u as u32);
+        }
+        if let Some(ax) = a.axis {
+            out.extend_from_slice(&ax.to_le_bytes());
+        }
+        put_u16(&mut out, node.inputs.len() as u16);
+        for &src in &node.inputs {
+            put_u32(&mut out, src as u32);
+        }
+        out.push(node.out_shape.len() as u8);
+        for &d in &node.out_shape {
+            put_u32(&mut out, d as u32);
+        }
+    }
+    out
+}
+
+/// Decode a predict request from a borrowed frame payload. The graph is
+/// fully validated (topological order, shape consistency) before it is
+/// returned — a hostile payload is an `Err`, never a malformed `Graph` in
+/// the admission path.
+pub fn decode_request(payload: &[u8]) -> Result<(Graph, Option<Target>), String> {
+    let mut r = Reader::new(payload);
+    let target_s = r.str()?;
+    let target = if target_s.is_empty() {
+        None
+    } else {
+        Some(Target::parse(target_s)?)
+    };
+    let batch = r.u32()? as usize;
+    let family = r.str()?.to_string();
+    let variant = r.str()?.to_string();
+    let n_nodes = r.u32()? as usize;
+    if n_nodes > MAX_WIRE_NODES {
+        return Err(format!("request claims {n_nodes} nodes (limit {MAX_WIRE_NODES})"));
+    }
+    // Each node occupies >= 9 bytes: a cheap total-size sanity check before
+    // reserving anything.
+    if n_nodes.saturating_mul(9) > r.remaining() {
+        return Err(format!(
+            "request claims {n_nodes} nodes but only {} payload bytes remain",
+            r.remaining()
+        ));
+    }
+    let mut nodes = Vec::with_capacity(n_nodes);
+    for id in 0..n_nodes {
+        let op_idx = r.u8()? as usize;
+        let op = *ALL_OPS
+            .get(op_idx)
+            .ok_or_else(|| format!("node {id}: unknown op ordinal {op_idx}"))?;
+        let flags = r.u8()?;
+        let kernel = if flags & FLAG_KERNEL != 0 {
+            Some((r.u16()? as usize, r.u16()? as usize))
+        } else {
+            None
+        };
+        let strides = if flags & FLAG_STRIDES != 0 {
+            Some((r.u16()? as usize, r.u16()? as usize))
+        } else {
+            None
+        };
+        let padding = r.u32()? as usize;
+        let groups = r.u32()? as usize;
+        let units = if flags & FLAG_UNITS != 0 {
+            Some(r.u32()? as usize)
+        } else {
+            None
+        };
+        let axis = if flags & FLAG_AXIS != 0 { Some(r.i64()?) } else { None };
+        let n_inputs = r.u16()? as usize;
+        let mut inputs = Vec::with_capacity(n_inputs);
+        for _ in 0..n_inputs {
+            inputs.push(r.u32()? as usize);
+        }
+        let ndims = r.u8()? as usize;
+        let mut out_shape = Vec::with_capacity(ndims);
+        for _ in 0..ndims {
+            out_shape.push(r.u32()? as usize);
+        }
+        nodes.push(Node {
+            id,
+            op,
+            attrs: Attrs {
+                kernel,
+                strides,
+                padding,
+                groups,
+                units,
+                axis,
+            },
+            inputs,
+            out_shape,
+            name: format!("n{id}"),
+        });
+    }
+    if r.remaining() != 0 {
+        return Err(format!("request has {} trailing bytes", r.remaining()));
+    }
+    let graph = Graph {
+        nodes,
+        batch,
+        family,
+        variant,
+    };
+    graph.validate()?;
+    Ok((graph, target))
+}
+
+// --- response --------------------------------------------------------------
+
+/// Encode a prediction as a response payload.
+pub fn encode_prediction(p: &Prediction) -> Vec<u8> {
+    let mut out = Vec::with_capacity(32);
+    out.extend_from_slice(&p.latency_ms.to_le_bytes());
+    out.extend_from_slice(&p.memory_mb.to_le_bytes());
+    out.extend_from_slice(&p.energy_j.to_le_bytes());
+    match &p.mig_profile {
+        None => out.push(0),
+        Some(name) => {
+            out.push(1);
+            put_str(&mut out, name);
+        }
+    }
+    out
+}
+
+/// Decode a response payload back into a prediction.
+pub fn decode_prediction(payload: &[u8]) -> Result<Prediction, String> {
+    let mut r = Reader::new(payload);
+    let latency_ms = r.f64()?;
+    let memory_mb = r.f64()?;
+    let energy_j = r.f64()?;
+    let mig_profile = match r.u8()? {
+        0 => None,
+        1 => Some(r.str()?.to_string()),
+        other => return Err(format!("bad mig tag {other}")),
+    };
+    if r.remaining() != 0 {
+        return Err(format!("response has {} trailing bytes", r.remaining()));
+    }
+    Ok(Prediction {
+        latency_ms,
+        memory_mb,
+        energy_j,
+        mig_profile,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontends::structurally_equal;
+    use crate::modelgen::ALL_FAMILIES;
+    use crate::simulator::CostSweep;
+
+    #[test]
+    fn request_roundtrip_every_family() {
+        for (i, fam) in ALL_FAMILIES.iter().enumerate() {
+            let g = fam.generate(i);
+            let payload = encode_request(&g, None);
+            let (back, target) = decode_request(&payload).unwrap();
+            assert!(structurally_equal(&g, &back), "{fam:?}");
+            assert_eq!(target, None);
+            assert_eq!(back.family, g.family);
+            assert_eq!(back.variant, g.variant);
+            // The cache key must be transport-invariant.
+            assert_eq!(
+                CostSweep::of(&g).fingerprint,
+                CostSweep::of(&back).fingerprint,
+                "{fam:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn request_carries_target() {
+        let g = ALL_FAMILIES[0].generate(0);
+        let payload = encode_request(&g, Some("a100:2g.10gb"));
+        let (_, target) = decode_request(&payload).unwrap();
+        assert_eq!(target.unwrap().to_string(), "a100:2g.10gb");
+        // A bad target is a decode error, mirroring the JSON protocol.
+        let payload = encode_request(&g, Some("a100:9g.80gb"));
+        assert!(decode_request(&payload).is_err());
+    }
+
+    #[test]
+    fn hostile_payloads_error_cleanly() {
+        assert!(decode_request(&[]).is_err());
+        // Claims 1M nodes with no bytes behind the claim.
+        let mut p = Vec::new();
+        put_str(&mut p, "");
+        put_u32(&mut p, 1);
+        put_str(&mut p, "f");
+        put_str(&mut p, "v");
+        put_u32(&mut p, (MAX_WIRE_NODES + 1) as u32);
+        assert!(decode_request(&p).unwrap_err().contains("limit"));
+        // Truncated mid-node.
+        let g = ALL_FAMILIES[0].generate(0);
+        let full = encode_request(&g, None);
+        for cut in [full.len() / 4, full.len() / 2, full.len() - 1] {
+            assert!(decode_request(&full[..cut]).is_err(), "cut {cut}");
+        }
+        // Trailing garbage is rejected, not ignored.
+        let mut padded = full.clone();
+        padded.push(0);
+        assert!(decode_request(&padded).unwrap_err().contains("trailing"));
+        // A structurally invalid graph (forward edge) fails validation.
+        let mut g2 = g;
+        g2.nodes[0].inputs = vec![5];
+        // encode succeeds (it is mechanical); decode must reject.
+        let bad = encode_request(&g2, None);
+        assert!(decode_request(&bad).is_err());
+    }
+
+    #[test]
+    fn prediction_roundtrip() {
+        for mig in [None, Some("2g.10gb".to_string())] {
+            let p = Prediction {
+                latency_ms: 1.25,
+                memory_mb: 2865.0,
+                energy_j: 0.75,
+                mig_profile: mig,
+            };
+            let payload = encode_prediction(&p);
+            assert_eq!(decode_prediction(&payload).unwrap(), p);
+        }
+        assert!(decode_prediction(&[1, 2, 3]).is_err());
+        let mut bad_tag = encode_prediction(&Prediction {
+            latency_ms: 0.0,
+            memory_mb: 0.0,
+            energy_j: 0.0,
+            mig_profile: None,
+        });
+        bad_tag[24] = 9;
+        assert!(decode_prediction(&bad_tag).is_err());
+    }
+
+    #[test]
+    fn binary_request_is_much_smaller_than_json() {
+        let g = ALL_FAMILIES[0].generate(0);
+        let json = crate::frontends::export(crate::frontends::Framework::Native, &g);
+        let bin = encode_request(&g, None);
+        assert!(
+            bin.len() * 2 < json.len(),
+            "binary {} bytes vs json model {} bytes",
+            bin.len(),
+            json.len()
+        );
+    }
+}

@@ -1,0 +1,330 @@
+//! The binary wire frame: length-prefixed, checksummed, versioned.
+//!
+//! Reuses the record-framing idiom proven in `cache/persist.rs`
+//! (`len`-prefix + FNV-1a/splitmix digest over the payload) and adds what a
+//! network transport needs on top of a crash-safe file format: a magic for
+//! cheap protocol detection, a version byte for compatibility windows, a
+//! frame *kind*, and a per-connection **sequence id** so clients can
+//! pipeline many requests on one socket and match the (possibly
+//! out-of-order) replies.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! offset  size  field
+//!      0     2  magic       0xD1 0x77 ("DIPPM wire")
+//!      2     1  version     1
+//!      3     1  kind        1=request 2=response 3=error 4=stats
+//!      4     4  seq         echoed verbatim in the reply
+//!      8     4  len         payload length in bytes
+//!     12     8  crc         checksum(payload)
+//!     20   len  payload     kind-specific (see `codec`)
+//! ```
+//!
+//! Compatibility rules: the magic and the header layout are frozen; a
+//! server receiving an unknown `version` or `kind` answers with an error
+//! frame and closes (it cannot know the unknown version's framing, so
+//! resynchronization is impossible). New payload fields ride behind new
+//! kinds or a version bump — never by reinterpreting existing ones.
+
+use std::fmt;
+
+use crate::util::rng::splitmix64;
+
+/// Frame magic: never appears at the start of a JSON-lines request, so a
+/// client speaking the wrong protocol fails fast with a clear error.
+pub const MAGIC: [u8; 2] = [0xD1, 0x77];
+
+/// Current wire protocol version.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 20;
+
+/// Default per-frame payload ceiling (16 MiB — far above any modelgen
+/// export, small enough that a hostile length prefix cannot balloon a
+/// connection's read buffer).
+pub const DEFAULT_MAX_PAYLOAD: usize = 16 << 20;
+
+/// What a frame carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Client → server: a predict request (`codec::encode_request`).
+    Request = 1,
+    /// Server → client: a successful prediction (`codec::encode_prediction`).
+    Response = 2,
+    /// Server → client: a UTF-8 error message for the echoed seq (seq 0 =
+    /// connection-level protocol error; the server closes after sending).
+    Error = 3,
+    /// Client → server with an empty payload: stats request. Server →
+    /// client: the `cache_stats` JSON document as the payload.
+    Stats = 4,
+}
+
+impl FrameKind {
+    pub fn from_u8(v: u8) -> Option<FrameKind> {
+        match v {
+            1 => Some(FrameKind::Request),
+            2 => Some(FrameKind::Response),
+            3 => Some(FrameKind::Error),
+            4 => Some(FrameKind::Stats),
+            _ => None,
+        }
+    }
+
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+}
+
+/// Payload digest: FNV-1a with a final splitmix avalanche — the same
+/// construction `cache/persist.rs` uses for journal records, so truncation
+/// at any byte and single-bit flips both change the digest.
+pub fn checksum(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    splitmix64(h)
+}
+
+/// An owned frame (client side and tests; the server decodes borrowed).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub seq: u32,
+    pub payload: Vec<u8>,
+}
+
+/// Append one encoded frame to `out`.
+pub fn encode_into(kind: FrameKind, seq: u32, payload: &[u8], out: &mut Vec<u8>) {
+    out.reserve(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(WIRE_VERSION);
+    out.push(kind.as_u8());
+    out.extend_from_slice(&seq.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&checksum(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+}
+
+/// Encode one frame into a fresh buffer.
+pub fn encode(kind: FrameKind, seq: u32, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    encode_into(kind, seq, payload, &mut out);
+    out
+}
+
+/// A decoded view into the read buffer. The payload borrows the buffer —
+/// no copy between the socket and the codec.
+#[derive(Debug, PartialEq)]
+pub enum Decoded<'a> {
+    /// Not enough bytes yet; read more (a torn frame is indistinguishable
+    /// from an in-progress one until the connection closes).
+    Incomplete,
+    Frame {
+        kind: FrameKind,
+        seq: u32,
+        payload: &'a [u8],
+        /// Total bytes consumed (header + payload): advance the buffer by
+        /// this much before decoding the next pipelined frame.
+        consumed: usize,
+    },
+}
+
+/// Unrecoverable framing errors. After any of these the stream position is
+/// untrustworthy: the server sends one error frame and closes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    BadMagic([u8; 2]),
+    BadVersion(u8),
+    BadKind(u8),
+    Oversized { len: usize, max: usize },
+    BadChecksum,
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::BadMagic(m) => write!(
+                f,
+                "bad frame magic {m:02x?} (expected {MAGIC:02x?}; is the client speaking \
+                 the JSON protocol to a binary listener?)"
+            ),
+            FrameError::BadVersion(v) => {
+                write!(f, "unsupported wire version {v} (this server speaks {WIRE_VERSION})")
+            }
+            FrameError::BadKind(k) => write!(f, "unknown frame kind {k}"),
+            FrameError::Oversized { len, max } => {
+                write!(f, "frame payload {len} bytes exceeds the {max}-byte limit")
+            }
+            FrameError::BadChecksum => write!(f, "frame checksum mismatch (corrupt payload)"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Try to decode one frame from the front of `buf`.
+pub fn decode(buf: &[u8], max_payload: usize) -> Result<Decoded<'_>, FrameError> {
+    if buf.len() < HEADER_LEN {
+        // Validate what we do have: a client that opens with garbage
+        // should be rejected on byte 1, not after 20 bytes trickle in.
+        if !buf.is_empty() && buf[0] != MAGIC[0] {
+            return Err(FrameError::BadMagic([buf[0], *buf.get(1).unwrap_or(&0)]));
+        }
+        if buf.len() >= 2 && buf[1] != MAGIC[1] {
+            return Err(FrameError::BadMagic([buf[0], buf[1]]));
+        }
+        return Ok(Decoded::Incomplete);
+    }
+    if buf[..2] != MAGIC {
+        return Err(FrameError::BadMagic([buf[0], buf[1]]));
+    }
+    if buf[2] != WIRE_VERSION {
+        return Err(FrameError::BadVersion(buf[2]));
+    }
+    let kind = FrameKind::from_u8(buf[3]).ok_or(FrameError::BadKind(buf[3]))?;
+    let seq = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    let len = u32::from_le_bytes(buf[8..12].try_into().unwrap()) as usize;
+    if len > max_payload {
+        return Err(FrameError::Oversized { len, max: max_payload });
+    }
+    if buf.len() < HEADER_LEN + len {
+        return Ok(Decoded::Incomplete);
+    }
+    let crc = u64::from_le_bytes(buf[12..20].try_into().unwrap());
+    let payload = &buf[HEADER_LEN..HEADER_LEN + len];
+    if checksum(payload) != crc {
+        return Err(FrameError::BadChecksum);
+    }
+    Ok(Decoded::Frame {
+        kind,
+        seq,
+        payload,
+        consumed: HEADER_LEN + len,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_kinds() {
+        for kind in [
+            FrameKind::Request,
+            FrameKind::Response,
+            FrameKind::Error,
+            FrameKind::Stats,
+        ] {
+            let payload = vec![7u8; 33];
+            let bytes = encode(kind, 42, &payload);
+            assert_eq!(bytes.len(), HEADER_LEN + 33);
+            match decode(&bytes, DEFAULT_MAX_PAYLOAD).unwrap() {
+                Decoded::Frame {
+                    kind: k,
+                    seq,
+                    payload: p,
+                    consumed,
+                } => {
+                    assert_eq!(k, kind);
+                    assert_eq!(seq, 42);
+                    assert_eq!(p, &payload[..]);
+                    assert_eq!(consumed, bytes.len());
+                }
+                other => panic!("expected a frame, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn empty_payload_roundtrips() {
+        let bytes = encode(FrameKind::Stats, 0, &[]);
+        assert_eq!(bytes.len(), HEADER_LEN);
+        assert!(matches!(
+            decode(&bytes, DEFAULT_MAX_PAYLOAD).unwrap(),
+            Decoded::Frame { kind: FrameKind::Stats, seq: 0, payload: &[], .. }
+        ));
+    }
+
+    #[test]
+    fn every_truncation_is_incomplete_not_an_error() {
+        let bytes = encode(FrameKind::Request, 7, b"hello world");
+        for cut in 0..bytes.len() {
+            let d = decode(&bytes[..cut], DEFAULT_MAX_PAYLOAD)
+                .unwrap_or_else(|e| panic!("cut at {cut}: {e}"));
+            assert_eq!(d, Decoded::Incomplete, "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn pipelined_frames_decode_in_order() {
+        let mut buf = Vec::new();
+        encode_into(FrameKind::Request, 1, b"a", &mut buf);
+        encode_into(FrameKind::Request, 2, b"bb", &mut buf);
+        let Decoded::Frame { seq, consumed, .. } = decode(&buf, DEFAULT_MAX_PAYLOAD).unwrap()
+        else {
+            panic!("first frame");
+        };
+        assert_eq!(seq, 1);
+        let Decoded::Frame { seq, payload, .. } =
+            decode(&buf[consumed..], DEFAULT_MAX_PAYLOAD).unwrap()
+        else {
+            panic!("second frame");
+        };
+        assert_eq!(seq, 2);
+        assert_eq!(payload, b"bb");
+    }
+
+    #[test]
+    fn bad_magic_rejected_on_first_bytes() {
+        assert!(matches!(
+            decode(b"{", DEFAULT_MAX_PAYLOAD),
+            Err(FrameError::BadMagic(_))
+        ));
+        let mut bytes = encode(FrameKind::Request, 1, b"x");
+        bytes[1] = 0x00;
+        assert!(matches!(
+            decode(&bytes[..2], DEFAULT_MAX_PAYLOAD),
+            Err(FrameError::BadMagic(_))
+        ));
+    }
+
+    #[test]
+    fn bad_version_kind_size_and_checksum_are_errors() {
+        let good = encode(FrameKind::Request, 1, b"payload");
+
+        let mut v = good.clone();
+        v[2] = 9;
+        assert_eq!(
+            decode(&v, DEFAULT_MAX_PAYLOAD),
+            Err(FrameError::BadVersion(9))
+        );
+
+        let mut k = good.clone();
+        k[3] = 200;
+        assert_eq!(decode(&k, DEFAULT_MAX_PAYLOAD), Err(FrameError::BadKind(200)));
+
+        // Hostile length prefix: rejected before any buffer grows.
+        let mut o = good.clone();
+        o[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            decode(&o, DEFAULT_MAX_PAYLOAD),
+            Err(FrameError::Oversized { .. })
+        ));
+
+        let mut c = good;
+        *c.last_mut().unwrap() ^= 0xff;
+        assert_eq!(decode(&c, DEFAULT_MAX_PAYLOAD), Err(FrameError::BadChecksum));
+    }
+
+    #[test]
+    fn checksum_detects_truncation_and_flips() {
+        let a = checksum(b"abc");
+        assert_ne!(a, checksum(b"ab"));
+        assert_ne!(a, checksum(b"abd"));
+        assert_ne!(checksum(b""), 0);
+    }
+}

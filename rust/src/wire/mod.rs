@@ -1,0 +1,109 @@
+//! Binary wire protocol + nonblocking reactor: the massive-connection
+//! front door.
+//!
+//! The JSON-lines listener (`coordinator::tcp`) spends one OS thread and a
+//! full JSON parse per connection — fine for examples, fatal for the
+//! paper's design-space-exploration workload where thousands of clients
+//! price graphs concurrently. This subsystem replaces both costs:
+//!
+//! * [`frame`] — length-prefixed, checksummed, versioned frames with
+//!   per-connection sequence ids, so one socket carries many pipelined
+//!   requests and replies may return out of order.
+//! * [`codec`] — a compact binary graph encoding decoded zero-copy from
+//!   the connection buffer straight into the `CostSweep` admission path
+//!   (no intermediate JSON text or tree).
+//! * [`reactor`] — a nonblocking accept loop feeding a small fixed pool of
+//!   event-loop threads (poll(2) shim in `util::poll`), each owning a slab
+//!   of connection states; 10k connections cost buffers, not threads.
+//! * [`client`] — the binary-mode client used by tests and the
+//!   `wire_throughput` bench.
+//!
+//! Both listeners (JSON and binary) report into one [`WireMetrics`], which
+//! `Coordinator::metrics` folds into `cache_stats`.
+
+pub mod client;
+pub mod codec;
+pub mod frame;
+pub mod reactor;
+
+pub use client::WireClient;
+pub use frame::{Frame, FrameError, FrameKind, DEFAULT_MAX_PAYLOAD, WIRE_VERSION};
+pub use reactor::ReactorConfig;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Transport counters shared by every listener thread (JSON handler
+/// threads and reactor event loops alike). All relaxed atomics: these are
+/// monotone counters plus one gauge, read only for reporting.
+#[derive(Debug, Default)]
+pub struct WireMetrics {
+    pub connections_accepted: AtomicU64,
+    pub connections_closed: AtomicU64,
+    /// Connections turned away at the `--max-connections` cap.
+    pub connections_rejected: AtomicU64,
+    /// Gauge: currently open connections across all listeners.
+    pub connections_open: AtomicU64,
+    /// Frames (binary) / request lines (JSON) read.
+    pub frames_rx: AtomicU64,
+    /// Frames / response lines written.
+    pub frames_tx: AtomicU64,
+    /// Framing or payload decode failures (bad magic/checksum/JSON/...).
+    pub frame_decode_errors: AtomicU64,
+    pub bytes_rx: AtomicU64,
+    pub bytes_tx: AtomicU64,
+}
+
+impl WireMetrics {
+    pub fn conn_opened(&self) {
+        self.connections_accepted.fetch_add(1, Ordering::Relaxed);
+        self.connections_open.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Pair of [`WireMetrics::conn_opened`]; never call without it.
+    pub fn conn_closed(&self) {
+        self.connections_closed.fetch_add(1, Ordering::Relaxed);
+        self.connections_open.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn conn_rejected(&self) {
+        self.connections_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn rx(&self, frames: u64, bytes: u64) {
+        self.frames_rx.fetch_add(frames, Ordering::Relaxed);
+        self.bytes_rx.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn tx(&self, frames: u64, bytes: u64) {
+        self.frames_tx.fetch_add(frames, Ordering::Relaxed);
+        self.bytes_tx.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn decode_error(&self) {
+        self.frame_decode_errors.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_gauge_tracks_pairs() {
+        let m = WireMetrics::default();
+        m.conn_opened();
+        m.conn_opened();
+        m.conn_closed();
+        assert_eq!(m.connections_accepted.load(Ordering::Relaxed), 2);
+        assert_eq!(m.connections_closed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.connections_open.load(Ordering::Relaxed), 1);
+        m.rx(3, 100);
+        m.tx(2, 50);
+        m.decode_error();
+        assert_eq!(m.frames_rx.load(Ordering::Relaxed), 3);
+        assert_eq!(m.frames_tx.load(Ordering::Relaxed), 2);
+        assert_eq!(m.bytes_rx.load(Ordering::Relaxed), 100);
+        assert_eq!(m.bytes_tx.load(Ordering::Relaxed), 50);
+        assert_eq!(m.frame_decode_errors.load(Ordering::Relaxed), 1);
+    }
+}

@@ -1,0 +1,512 @@
+//! Nonblocking reactor: one accept thread feeding a small fixed pool of
+//! event-loop threads, each owning a slab of connection states. This is
+//! the binary listener behind `--wire binary|both`.
+//!
+//! Concurrency model (no epoll, no wakers — just `poll(2)` via
+//! `util::poll` and the coordinator's own reply channels):
+//!
+//! * The accept thread blocks in `accept()`, enforces the global
+//!   connection cap, and hands fresh sockets to the least-loaded loop via
+//!   a tiny injection queue. Accept failures back off exponentially
+//!   (10ms → 2s) instead of spinning a hot warn loop.
+//! * Each event loop iterates: drain injected sockets into the slab →
+//!   `poll` every live fd (read interest always, write interest only with
+//!   queued output) → pump readable sockets through the frame decoder →
+//!   submit decoded requests to the coordinator → drain finished replies
+//!   into write buffers → flush → sweep idle connections.
+//! * Cache hits reply *synchronously inside* `Coordinator::submit_to`, so
+//!   the immediate `try_recv` after submit turns the hot path into
+//!   decode → hash → encode within one iteration — no parked state at
+//!   all. Misses park a `(seq, Receiver)` pair on the connection; the loop
+//!   polls them with `try_recv` each iteration (poll timeout drops to 1ms
+//!   while any reply is pending), and replies go out in completion order —
+//!   out-of-order by design, matched by seq.
+//!
+//! Error discipline mirrors the frame layer: framing errors (bad magic /
+//! version / kind / checksum / oversize) get one error frame with seq 0,
+//! then the connection closes — the stream position is untrustworthy.
+//! Request-level errors (malformed graph payload, unknown target, backend
+//! rejection) get an error frame echoing the request's seq and the
+//! connection lives on.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::{Coordinator, Prediction};
+use crate::util::poll::{poll, Fd, PollEntry};
+use crate::util::threadpool::ThreadPool;
+use crate::{log_debug, log_info, log_warn};
+
+use super::frame::{self, Decoded, FrameKind, DEFAULT_MAX_PAYLOAD};
+use super::{codec, WireMetrics};
+
+/// Reactor sizing and hygiene knobs.
+#[derive(Debug, Clone)]
+pub struct ReactorConfig {
+    /// Event-loop threads (`--event-loops`). Connections are partitioned
+    /// across loops at accept time.
+    pub event_loops: usize,
+    /// Global open-connection cap shared with the accept thread
+    /// (`--max-connections`).
+    pub max_connections: usize,
+    /// Close connections with no traffic and no pending replies for this
+    /// long (`--idle-timeout-s`).
+    pub idle_timeout: Duration,
+    /// Per-frame payload ceiling.
+    pub max_frame: usize,
+}
+
+impl Default for ReactorConfig {
+    fn default() -> Self {
+        ReactorConfig {
+            event_loops: ThreadPool::default_parallelism().min(4),
+            max_connections: 10_240,
+            idle_timeout: Duration::from_secs(60),
+            max_frame: DEFAULT_MAX_PAYLOAD,
+        }
+    }
+}
+
+/// A slow or hostile peer that lets replies pile up unread gets cut off
+/// once its write buffer crosses this (64 MiB would mean ~2M unread
+/// predictions; 16 MiB is already pathological).
+const MAX_WRITE_BUFFER: usize = 16 << 20;
+
+/// Read chunk size per `read()` call.
+const READ_CHUNK: usize = 64 * 1024;
+
+#[cfg(unix)]
+fn fd_of(s: &TcpStream) -> Fd {
+    use std::os::unix::io::AsRawFd;
+    s.as_raw_fd() as Fd
+}
+
+#[cfg(not(unix))]
+fn fd_of(_s: &TcpStream) -> Fd {
+    -1
+}
+
+/// Per-connection state owned by exactly one event loop.
+struct Conn {
+    stream: TcpStream,
+    fd: Fd,
+    /// Unconsumed inbound bytes (frames decode from the front).
+    rbuf: Vec<u8>,
+    /// Outbound bytes not yet accepted by the kernel.
+    wbuf: Vec<u8>,
+    /// In-flight requests: seq + the coordinator's reply channel, polled
+    /// with `try_recv` each iteration. Completion order wins — replies go
+    /// out out-of-order, matched by seq.
+    pending: Vec<(u32, Receiver<Result<Prediction>>)>,
+    last_activity: Instant,
+    /// Flush `wbuf`, then close (set after a fatal framing error).
+    closing: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        let fd = fd_of(&stream);
+        Conn {
+            stream,
+            fd,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            pending: Vec::new(),
+            last_activity: Instant::now(),
+            closing: false,
+        }
+    }
+
+    fn push_frame(&mut self, kind: FrameKind, seq: u32, payload: &[u8], wire: &WireMetrics) {
+        frame::encode_into(kind, seq, payload, &mut self.wbuf);
+        wire.tx(1, (frame::HEADER_LEN + payload.len()) as u64);
+    }
+}
+
+/// Work handed from the accept thread to an event loop.
+struct LoopShared {
+    injected: Mutex<Vec<TcpStream>>,
+    /// Connections currently owned by this loop (accept-side load metric).
+    load: AtomicU64,
+}
+
+/// Serve the binary protocol forever on `addr`. `on_bound` receives the
+/// bound port (bind to port 0 in tests). Never returns except on bind
+/// failure.
+pub fn serve(
+    coordinator: Arc<Coordinator>,
+    addr: &str,
+    cfg: ReactorConfig,
+    on_bound: impl FnOnce(u16),
+) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    let port = listener.local_addr()?.port();
+    let loops = cfg.event_loops.max(1);
+    log_info!(
+        "dippm binary wire protocol on port {port} ({loops} event loops, \
+         max {} connections, idle timeout {:?})",
+        cfg.max_connections,
+        cfg.idle_timeout
+    );
+
+    let shared: Vec<Arc<LoopShared>> = (0..loops)
+        .map(|_| {
+            Arc::new(LoopShared {
+                injected: Mutex::new(Vec::new()),
+                load: AtomicU64::new(0),
+            })
+        })
+        .collect();
+    for (i, ls) in shared.iter().enumerate() {
+        let ls = ls.clone();
+        let coord = coordinator.clone();
+        let cfg = cfg.clone();
+        std::thread::Builder::new()
+            .name(format!("dippm-wire-loop-{i}"))
+            .spawn(move || event_loop_main(coord, ls, cfg))
+            .expect("spawn wire event loop");
+    }
+    on_bound(port);
+
+    let wire = coordinator.wire_metrics().clone();
+    // Exponential backoff on accept failures (EMFILE, ENFILE, ECONNABORTED
+    // storms): first failure waits 10ms, doubling to a 2s ceiling; any
+    // successful accept resets it. The pre-reactor listener logged each
+    // failure in a hot loop.
+    let mut backoff = Duration::from_millis(10);
+    for stream in listener.incoming() {
+        let stream = match stream {
+            Ok(s) => {
+                backoff = Duration::from_millis(10);
+                s
+            }
+            Err(e) => {
+                log_warn!("wire accept failed: {e} (backing off {backoff:?})");
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_secs(2));
+                continue;
+            }
+        };
+        let open = wire.connections_open.load(Ordering::Relaxed);
+        if open as usize >= cfg.max_connections {
+            wire.conn_rejected();
+            // Best-effort courtesy frame; the kernel buffer takes 20-ish
+            // bytes without blocking on any sane socket.
+            let mut s = stream;
+            let _ = s.set_nonblocking(true);
+            let _ = s.write(&frame::encode(
+                FrameKind::Error,
+                0,
+                b"server at connection capacity",
+            ));
+            log_debug!("wire connection rejected at cap ({open} open)");
+            continue;
+        }
+        wire.conn_opened();
+        // Least-loaded loop takes the socket; ties break toward loop 0.
+        let target = shared
+            .iter()
+            .min_by_key(|ls| ls.load.load(Ordering::Relaxed))
+            .expect("at least one loop");
+        target.load.fetch_add(1, Ordering::Relaxed);
+        target.injected.lock().unwrap().push(stream);
+    }
+    Ok(())
+}
+
+fn event_loop_main(coordinator: Arc<Coordinator>, shared: Arc<LoopShared>, cfg: ReactorConfig) {
+    let wire = coordinator.wire_metrics().clone();
+    // Slab of connection states: stable indices, freed slots recycled.
+    let mut slab: Vec<Option<Conn>> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    let mut entries: Vec<PollEntry> = Vec::new();
+    let mut slots: Vec<usize> = Vec::new();
+    let mut scratch = vec![0u8; READ_CHUNK];
+    let mut last_idle_sweep = Instant::now();
+
+    loop {
+        // 1. Adopt injected sockets.
+        {
+            let mut injected = shared.injected.lock().unwrap();
+            for stream in injected.drain(..) {
+                if stream.set_nonblocking(true).is_err() {
+                    wire.conn_closed();
+                    shared.load.fetch_sub(1, Ordering::Relaxed);
+                    continue;
+                }
+                let _ = stream.set_nodelay(true);
+                let conn = Conn::new(stream);
+                match free.pop() {
+                    Some(i) => slab[i] = Some(conn),
+                    None => slab.push(Some(conn)),
+                }
+            }
+        }
+
+        // 2. Poll every live connection. Write interest only when output
+        // is queued; a pending reply shortens the timeout so try_recv
+        // polling stays sub-millisecond without a wakeup channel.
+        entries.clear();
+        slots.clear();
+        let mut any_pending = false;
+        for (i, slot) in slab.iter().enumerate() {
+            if let Some(c) = slot {
+                entries.push(PollEntry::new(c.fd, !c.closing, !c.wbuf.is_empty()));
+                slots.push(i);
+                any_pending |= !c.pending.is_empty();
+            }
+        }
+        let timeout = if any_pending {
+            Duration::from_millis(1)
+        } else {
+            Duration::from_millis(10)
+        };
+        if entries.is_empty() {
+            std::thread::sleep(timeout);
+        } else if let Err(e) = poll(&mut entries, timeout) {
+            log_warn!("wire poll failed: {e}; event loop sleeping briefly");
+            std::thread::sleep(Duration::from_millis(10));
+            continue;
+        }
+
+        // 3. Service readiness + reply channels.
+        let now = Instant::now();
+        for (e_idx, &slot) in slots.iter().enumerate() {
+            let entry = entries[e_idx];
+            let Some(conn) = slab[slot].as_mut() else {
+                continue;
+            };
+            let mut dead = entry.hangup && !entry.readable;
+            if entry.readable && !dead {
+                dead = pump_reads(conn, &coordinator, &wire, &cfg, &mut scratch, now);
+            }
+            if !dead {
+                drain_replies(conn, &wire, now);
+            }
+            if !dead && !conn.wbuf.is_empty() {
+                dead = flush_writes(conn, now);
+            }
+            if !dead && conn.wbuf.len() > MAX_WRITE_BUFFER {
+                log_debug!("wire connection dropped: {} B of unread replies", conn.wbuf.len());
+                dead = true;
+            }
+            // A closing connection goes away once its error frame is out.
+            if !dead && conn.closing && conn.wbuf.is_empty() {
+                dead = true;
+            }
+            if dead {
+                slab[slot] = None;
+                free.push(slot);
+                wire.conn_closed();
+                shared.load.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+
+        // 4. Idle sweep (~1 Hz): drop connections with no traffic and no
+        // in-flight work for `idle_timeout`.
+        if now.duration_since(last_idle_sweep) >= Duration::from_secs(1) {
+            last_idle_sweep = now;
+            for (i, slot) in slab.iter_mut().enumerate() {
+                let timed_out = slot.as_ref().is_some_and(|c| {
+                    c.pending.is_empty() && now.duration_since(c.last_activity) > cfg.idle_timeout
+                });
+                if timed_out {
+                    *slot = None;
+                    free.push(i);
+                    wire.conn_closed();
+                    shared.load.fetch_sub(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}
+
+/// Read until `WouldBlock`, then decode and dispatch every complete
+/// frame. Returns true when the connection is finished (EOF or error).
+fn pump_reads(
+    conn: &mut Conn,
+    coordinator: &Coordinator,
+    wire: &WireMetrics,
+    cfg: &ReactorConfig,
+    scratch: &mut [u8],
+    now: Instant,
+) -> bool {
+    loop {
+        match conn.stream.read(scratch) {
+            Ok(0) => {
+                // Peer closed its send side. Anything buffered is a torn
+                // frame; in-flight replies have nowhere to go.
+                return true;
+            }
+            Ok(n) => {
+                conn.rbuf.extend_from_slice(&scratch[..n]);
+                wire.bytes_rx.fetch_add(n as u64, Ordering::Relaxed);
+                conn.last_activity = now;
+                if n < scratch.len() {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return true,
+        }
+    }
+
+    // Decode every complete frame at the front of the buffer.
+    let mut consumed_total = 0usize;
+    loop {
+        match frame::decode(&conn.rbuf[consumed_total..], cfg.max_frame) {
+            Ok(Decoded::Incomplete) => break,
+            Ok(Decoded::Frame {
+                kind,
+                seq,
+                payload,
+                consumed,
+            }) => {
+                wire.frames_rx.fetch_add(1, Ordering::Relaxed);
+                // Borrow dance: the payload borrows rbuf, and dispatch
+                // needs &mut conn to queue the reply. Decode the request
+                // in place (zero-copy), then drop the borrow.
+                let action = dispatch(kind, payload, coordinator);
+                consumed_total += consumed;
+                match action {
+                    Dispatch::Reply(kind, body) => {
+                        conn.push_frame(kind, seq, &body, wire);
+                    }
+                    Dispatch::Pending(rx) => conn.pending.push((seq, rx)),
+                    Dispatch::RequestError(msg) => {
+                        wire.decode_error();
+                        conn.push_frame(FrameKind::Error, seq, msg.as_bytes(), wire);
+                    }
+                    Dispatch::Fatal(msg) => {
+                        wire.decode_error();
+                        conn.push_frame(FrameKind::Error, 0, msg.as_bytes(), wire);
+                        conn.closing = true;
+                        break;
+                    }
+                }
+            }
+            Err(e) => {
+                // Framing is unrecoverable: stream position is garbage.
+                wire.decode_error();
+                conn.push_frame(FrameKind::Error, 0, e.to_string().as_bytes(), wire);
+                conn.closing = true;
+                break;
+            }
+        }
+    }
+    if consumed_total > 0 {
+        conn.rbuf.drain(..consumed_total);
+    }
+    if conn.closing {
+        conn.rbuf.clear();
+    }
+    false
+}
+
+enum Dispatch {
+    /// Answered synchronously (stats, or a cache hit caught below).
+    Reply(FrameKind, Vec<u8>),
+    /// Submitted; reply channel parked on the connection.
+    Pending(Receiver<Result<Prediction>>),
+    /// Bad request payload — error frame with the request's seq, stay open.
+    RequestError(String),
+    /// Protocol misuse — error frame seq 0, then close.
+    Fatal(String),
+}
+
+fn dispatch(kind: FrameKind, payload: &[u8], coordinator: &Coordinator) -> Dispatch {
+    match kind {
+        FrameKind::Request => match codec::decode_request(payload) {
+            Err(e) => Dispatch::RequestError(e),
+            Ok((graph, target)) => {
+                let target = target.unwrap_or_else(|| coordinator.default_target().clone());
+                let rx = coordinator.submit_to(graph, target);
+                // Cache hits (and tombstones) replied inside submit_to:
+                // collect them now and the hot path never parks state.
+                match rx.try_recv() {
+                    Ok(Ok(pred)) => {
+                        Dispatch::Reply(FrameKind::Response, codec::encode_prediction(&pred))
+                    }
+                    Ok(Err(e)) => Dispatch::RequestError(format!("{e:#}")),
+                    Err(TryRecvError::Empty) => Dispatch::Pending(rx),
+                    Err(TryRecvError::Disconnected) => {
+                        Dispatch::RequestError("coordinator shut down".into())
+                    }
+                }
+            }
+        },
+        FrameKind::Stats => {
+            let stats = crate::coordinator::protocol::cache_stats_response(&coordinator.metrics());
+            Dispatch::Reply(FrameKind::Stats, stats.into_bytes())
+        }
+        // Response/Error frames flow server → client only.
+        FrameKind::Response | FrameKind::Error => Dispatch::Fatal(format!(
+            "client sent a server-only frame kind ({})",
+            kind.as_u8()
+        )),
+    }
+}
+
+/// Move every completed in-flight reply into the write buffer
+/// (completion order — this is where out-of-order replies happen).
+fn drain_replies(conn: &mut Conn, wire: &WireMetrics, now: Instant) {
+    let mut i = 0;
+    while i < conn.pending.len() {
+        let (seq, rx) = &conn.pending[i];
+        let seq = *seq;
+        let done = match rx.try_recv() {
+            Ok(Ok(pred)) => {
+                let body = codec::encode_prediction(&pred);
+                conn.push_frame(FrameKind::Response, seq, &body, wire);
+                true
+            }
+            Ok(Err(e)) => {
+                conn.push_frame(FrameKind::Error, seq, format!("{e:#}").as_bytes(), wire);
+                true
+            }
+            Err(TryRecvError::Empty) => false,
+            Err(TryRecvError::Disconnected) => {
+                conn.push_frame(FrameKind::Error, seq, b"coordinator shut down", wire);
+                true
+            }
+        };
+        if done {
+            conn.pending.swap_remove(i);
+            conn.last_activity = now;
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// Write as much of `wbuf` as the kernel takes. Returns true when the
+/// connection is finished (peer gone).
+fn flush_writes(conn: &mut Conn, now: Instant) -> bool {
+    let mut written = 0usize;
+    let finished = loop {
+        if written == conn.wbuf.len() {
+            break false;
+        }
+        match conn.stream.write(&conn.wbuf[written..]) {
+            Ok(0) => break true,
+            Ok(n) => {
+                written += n;
+                conn.last_activity = now;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break false,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => break true,
+        }
+    };
+    if written > 0 {
+        conn.wbuf.drain(..written);
+    }
+    finished
+}

@@ -1,0 +1,535 @@
+//! Integration: the binary wire protocol — frame codec properties, the
+//! nonblocking reactor end-to-end (predictions must match the coordinator
+//! exactly), hostile-input handling (garbage, torn length prefixes, bad
+//! checksums → one seq-0 error frame, then close), pipelining with
+//! out-of-order replies matched by sequence id, connection caps and idle
+//! timeouts on both listeners, and the transport counters in `cache_stats`.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use dippm::cache::Target;
+use dippm::coordinator::{
+    tcp, Backend, Coordinator, CoordinatorOptions, PredictRequest, RawOutcome, ServeOptions,
+};
+use dippm::frontends;
+use dippm::modelgen::{Family, ALL_FAMILIES};
+use dippm::util::json::Json;
+use dippm::util::proptest::proptest;
+use dippm::wire::frame::{self, Decoded, FrameKind, DEFAULT_MAX_PAYLOAD};
+use dippm::wire::{codec, reactor, Frame, ReactorConfig, WireClient};
+use dippm::{prop_assert, prop_assert_eq};
+
+fn sim_coordinator() -> Arc<Coordinator> {
+    Arc::new(Coordinator::start_sim(CoordinatorOptions::default()).unwrap())
+}
+
+/// Start the binary reactor on an ephemeral port; returns its address.
+fn start_reactor(coord: Arc<Coordinator>, cfg: ReactorConfig) -> String {
+    let (port_tx, port_rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        reactor::serve(coord, "127.0.0.1:0", cfg, move |p| {
+            let _ = port_tx.send(p);
+        })
+        .unwrap();
+    });
+    format!("127.0.0.1:{}", port_rx.recv().unwrap())
+}
+
+/// Start the JSON-lines listener on an ephemeral port; returns its address.
+fn start_json(coord: Arc<Coordinator>, opts: ServeOptions) -> String {
+    let (port_tx, port_rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        tcp::serve_with(coord, "127.0.0.1:0", opts, move |p| {
+            let _ = port_tx.send(p);
+        })
+        .unwrap();
+    });
+    format!("127.0.0.1:{}", port_rx.recv().unwrap())
+}
+
+/// Raw socket speaking hand-crafted bytes — for hostile-input tests the
+/// well-behaved `WireClient` cannot express.
+struct RawWire {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl RawWire {
+    fn connect(addr: &str) -> RawWire {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        RawWire {
+            stream,
+            buf: Vec::new(),
+        }
+    }
+
+    fn send(&mut self, bytes: &[u8]) {
+        self.stream.write_all(bytes).unwrap();
+    }
+
+    /// Block until one complete (well-formed) frame arrives.
+    fn read_frame(&mut self) -> Frame {
+        let mut chunk = [0u8; 4096];
+        loop {
+            match frame::decode(&self.buf, DEFAULT_MAX_PAYLOAD).unwrap() {
+                Decoded::Frame {
+                    kind,
+                    seq,
+                    payload,
+                    consumed,
+                } => {
+                    let f = Frame {
+                        kind,
+                        seq,
+                        payload: payload.to_vec(),
+                    };
+                    self.buf.drain(..consumed);
+                    return f;
+                }
+                Decoded::Incomplete => {
+                    let n = self.stream.read(&mut chunk).expect("frame before timeout");
+                    assert!(n > 0, "connection closed before a full frame arrived");
+                    self.buf.extend_from_slice(&chunk[..n]);
+                }
+            }
+        }
+    }
+
+    /// Assert the server closes the connection (EOF within the timeout).
+    fn expect_closed(&mut self) {
+        let mut chunk = [0u8; 4096];
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return,
+                Ok(_) => continue, // drain whatever was still in flight
+                Err(e) => panic!("expected EOF, got read error: {e}"),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- codec --
+
+#[test]
+fn frame_roundtrip_property() {
+    const KINDS: [FrameKind; 4] = [
+        FrameKind::Request,
+        FrameKind::Response,
+        FrameKind::Error,
+        FrameKind::Stats,
+    ];
+    proptest(200, |g| {
+        let kind = KINDS[g.usize_in(0, KINDS.len() - 1)];
+        let seq = g.usize_in(0, u32::MAX as usize) as u32;
+        let payload: Vec<u8> = g
+            .vec_usize(512, 255)
+            .into_iter()
+            .map(|b| b as u8)
+            .collect();
+        let bytes = frame::encode(kind, seq, &payload);
+
+        // Full buffer decodes back to exactly what went in.
+        match frame::decode(&bytes, DEFAULT_MAX_PAYLOAD).map_err(|e| e.to_string())? {
+            Decoded::Frame {
+                kind: k,
+                seq: s,
+                payload: p,
+                consumed,
+            } => {
+                prop_assert_eq!(k, kind);
+                prop_assert_eq!(s, seq);
+                prop_assert!(p == &payload[..], "payload mismatch");
+                prop_assert_eq!(consumed, bytes.len());
+            }
+            Decoded::Incomplete => return Err("complete frame decoded Incomplete".into()),
+        }
+
+        // Every strict prefix is Incomplete — a torn frame is never an
+        // error, it just waits for more bytes.
+        for cut in 0..bytes.len() {
+            let d = frame::decode(&bytes[..cut], DEFAULT_MAX_PAYLOAD)
+                .map_err(|e| format!("cut at {cut}: {e}"))?;
+            prop_assert!(d == Decoded::Incomplete, "cut at {} not Incomplete", cut);
+        }
+
+        // Two pipelined frames decode in order from one buffer.
+        let mut two = bytes.clone();
+        frame::encode_into(FrameKind::Stats, seq.wrapping_add(1), b"x", &mut two);
+        let Ok(Decoded::Frame { consumed, .. }) = frame::decode(&two, DEFAULT_MAX_PAYLOAD) else {
+            return Err("first pipelined frame did not decode".into());
+        };
+        match frame::decode(&two[consumed..], DEFAULT_MAX_PAYLOAD) {
+            Ok(Decoded::Frame { seq: s2, .. }) => prop_assert_eq!(s2, seq.wrapping_add(1)),
+            other => return Err(format!("second pipelined frame: {other:?}")),
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn request_codec_roundtrip_property() {
+    proptest(40, |g| {
+        let fam = ALL_FAMILIES[g.usize_in(0, ALL_FAMILIES.len() - 1)];
+        let graph = fam.generate(g.usize_in(0, 6));
+        let target = if g.bool() { Some("a100:2g.10gb") } else { None };
+        let payload = codec::encode_request(&graph, target);
+        let (back, t) = codec::decode_request(&payload)?;
+        prop_assert!(
+            frontends::structurally_equal(&graph, &back),
+            "decoded graph differs structurally ({})",
+            graph.variant
+        );
+        prop_assert_eq!(t.is_some(), target.is_some());
+        Ok(())
+    });
+}
+
+// --------------------------------------------------------- happy path ---
+
+#[test]
+fn binary_predictions_match_the_coordinator_exactly() {
+    let coord = sim_coordinator();
+    let addr = start_reactor(coord.clone(), ReactorConfig::default());
+    let mut client = WireClient::connect(&addr).unwrap();
+
+    for (i, family) in [Family::Mlp, Family::ResNet, Family::Vit]
+        .into_iter()
+        .enumerate()
+    {
+        let g = family.generate(i);
+        let want = coord.predict(g.clone()).unwrap();
+        let got = client.predict_graph(&g).unwrap();
+        assert_eq!(got, want, "binary path changed the answer for {}", g.variant);
+    }
+
+    // A target string rides the wire and selects the same MIG-sliced entry.
+    let g = Family::MobileNet.generate(1);
+    let target = Target::parse("a100:2g.10gb").unwrap();
+    let want = coord.predict_to(g.clone(), Some(target)).unwrap();
+    let got = client.predict_graph_on(&g, "a100:2g.10gb").unwrap();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn request_error_echoes_seq_and_keeps_the_connection_open() {
+    let coord = sim_coordinator();
+    let addr = start_reactor(coord, ReactorConfig::default());
+    let mut client = WireClient::connect(&addr).unwrap();
+    let g = Family::Mlp.generate(0);
+
+    let bad_seq = client.send_predict(&g, Some("a100:9g.99gb")).unwrap();
+    let (seq, reply) = client.recv_reply().unwrap();
+    assert_eq!(seq, bad_seq, "request-level errors echo the request seq");
+    assert!(reply.is_err(), "unknown MIG profile must be an error");
+
+    // The connection survives a request-level error.
+    let pred = client.predict_graph(&g).unwrap();
+    assert!(pred.latency_ms.is_finite());
+}
+
+// ------------------------------------------------------ hostile input ---
+
+#[test]
+fn json_bytes_on_the_binary_port_get_one_error_frame_then_close() {
+    let coord = sim_coordinator();
+    let addr = start_reactor(coord, ReactorConfig::default());
+    let mut raw = RawWire::connect(&addr);
+    raw.send(b"{\"cmd\":\"cache_stats\"}\n");
+    let f = raw.read_frame();
+    assert_eq!(f.kind, FrameKind::Error);
+    assert_eq!(f.seq, 0, "framing errors carry seq 0");
+    let msg = String::from_utf8_lossy(&f.payload).into_owned();
+    assert!(msg.contains("magic"), "unhelpful error: {msg}");
+    raw.expect_closed();
+}
+
+#[test]
+fn corrupt_checksum_gets_one_error_frame_then_close() {
+    let coord = sim_coordinator();
+    let addr = start_reactor(coord, ReactorConfig::default());
+    let mut raw = RawWire::connect(&addr);
+
+    let payload = codec::encode_request(&Family::Mlp.generate(0), None);
+    let mut bytes = frame::encode(FrameKind::Request, 9, &payload);
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0xff;
+    raw.send(&bytes);
+
+    let f = raw.read_frame();
+    assert_eq!(f.kind, FrameKind::Error);
+    assert_eq!(f.seq, 0);
+    let msg = String::from_utf8_lossy(&f.payload).into_owned();
+    assert!(msg.contains("checksum"), "unhelpful error: {msg}");
+    raw.expect_closed();
+}
+
+#[test]
+fn oversized_length_prefix_is_rejected_before_buffering() {
+    let coord = sim_coordinator();
+    let addr = start_reactor(coord, ReactorConfig::default());
+    let mut raw = RawWire::connect(&addr);
+
+    // A 20-byte header claiming a payload one past the limit: rejected on
+    // the header alone, no payload bytes ever sent.
+    let mut header = Vec::new();
+    header.extend_from_slice(&frame::MAGIC);
+    header.push(frame::WIRE_VERSION);
+    header.push(FrameKind::Request.as_u8());
+    header.extend_from_slice(&7u32.to_le_bytes());
+    header.extend_from_slice(&(DEFAULT_MAX_PAYLOAD as u32 + 1).to_le_bytes());
+    header.extend_from_slice(&0u64.to_le_bytes());
+    raw.send(&header);
+
+    let f = raw.read_frame();
+    assert_eq!(f.kind, FrameKind::Error);
+    assert_eq!(f.seq, 0);
+    let msg = String::from_utf8_lossy(&f.payload).into_owned();
+    assert!(msg.contains("exceeds"), "unhelpful error: {msg}");
+    raw.expect_closed();
+}
+
+// --------------------------------------------------------- pipelining ---
+
+/// A backend whose every call waits for the gate: lets a test park a cache
+/// miss inside the executor while cache hits keep flowing.
+struct GateBackend {
+    gate: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl Backend for GateBackend {
+    fn name(&self) -> &'static str {
+        "gate"
+    }
+
+    fn max_batch(&self) -> usize {
+        1
+    }
+
+    fn predict_into(
+        &mut self,
+        requests: &[PredictRequest<'_>],
+        out: &mut Vec<RawOutcome>,
+    ) -> anyhow::Result<()> {
+        {
+            let (open, cv) = &*self.gate;
+            let mut open = open.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+        }
+        out.extend(
+            requests
+                .iter()
+                .map(|req| Ok([1.0, 100.0 + req.graph.n_nodes() as f64, 1.0])),
+        );
+        Ok(())
+    }
+}
+
+#[test]
+fn pipelined_replies_can_arrive_out_of_order_matched_by_seq() {
+    let gate = Arc::new((Mutex::new(true), Condvar::new()));
+    let coord = {
+        let gate = gate.clone();
+        Arc::new(
+            Coordinator::start_with_backend(
+                Box::new(move || {
+                    Ok(Box::new(GateBackend { gate: gate.clone() }) as Box<dyn Backend>)
+                }),
+                CoordinatorOptions::default(),
+            )
+            .unwrap(),
+        )
+    };
+    let g_hot = Family::Mlp.generate(0);
+    let g_cold = Family::ResNet.generate(0);
+
+    // Warm the cache while the gate is open, then shut it: the next miss
+    // blocks inside the backend until the test releases it.
+    let warm = coord.predict(g_hot.clone()).unwrap();
+    *gate.0.lock().unwrap() = false;
+
+    let addr = start_reactor(coord, ReactorConfig::default());
+    let mut client = WireClient::connect(&addr).unwrap();
+    let seq_cold = client.send_predict(&g_cold, None).unwrap();
+    let seq_hot = client.send_predict(&g_hot, None).unwrap();
+
+    // The hot request was sent second but its cache hit overtakes the
+    // gated miss — the reply stream is out of order by design.
+    let (first_seq, first) = client.recv_reply().unwrap();
+    assert_eq!(first_seq, seq_hot, "cache hit must not wait behind the miss");
+    assert_eq!(first.unwrap(), warm);
+
+    {
+        let (open, cv) = &*gate;
+        *open.lock().unwrap() = true;
+        cv.notify_all();
+    }
+    let (second_seq, second) = client.recv_reply().unwrap();
+    assert_eq!(second_seq, seq_cold);
+    assert!(second.unwrap().latency_ms.is_finite());
+}
+
+#[test]
+fn reactor_sustains_ten_thousand_pipelined_requests() {
+    let coord = sim_coordinator();
+    let g = Family::Mlp.generate(0);
+    let warm = coord.predict(g.clone()).unwrap();
+
+    let cfg = ReactorConfig {
+        event_loops: 2,
+        ..ReactorConfig::default()
+    };
+    let addr = start_reactor(coord, cfg);
+
+    const CONNS: usize = 64;
+    const PER_CONN: usize = 160; // 64 * 160 = 10_240 requests
+
+    let mut clients: Vec<WireClient> = (0..CONNS)
+        .map(|_| WireClient::connect(&addr).unwrap())
+        .collect();
+
+    // Phase 1: pipeline every request on every connection, reading nothing.
+    let sent: Vec<Vec<u32>> = clients
+        .iter_mut()
+        .map(|c| {
+            (0..PER_CONN)
+                .map(|_| c.send_predict(&g, None).unwrap())
+                .collect()
+        })
+        .collect();
+
+    // Phase 2: collect replies; every connection gets exactly its own seq
+    // set back and every prediction is the cached answer.
+    for (c, seqs) in clients.iter_mut().zip(&sent) {
+        let mut got: Vec<u32> = (0..PER_CONN)
+            .map(|_| {
+                let (seq, reply) = c.recv_reply().unwrap();
+                assert_eq!(reply.unwrap(), warm);
+                seq
+            })
+            .collect();
+        got.sort_unstable();
+        let mut want = seqs.clone();
+        want.sort_unstable();
+        assert_eq!(got, want, "reply seqs must cover exactly the sent seqs");
+    }
+
+    // Transport counters saw the whole storm.
+    let mut stats_client = WireClient::connect(&addr).unwrap();
+    let v = Json::parse(&stats_client.stats().unwrap()).unwrap();
+    assert!(v.path(&["frames_rx"]).as_usize().unwrap() >= CONNS * PER_CONN);
+    assert!(v.path(&["frames_tx"]).as_usize().unwrap() >= CONNS * PER_CONN);
+    assert!(v.path(&["connections_accepted"]).as_usize().unwrap() >= CONNS);
+    assert!(v.path(&["bytes_rx"]).as_usize().unwrap() > 0);
+    assert!(v.path(&["bytes_tx"]).as_usize().unwrap() > 0);
+    assert_eq!(v.path(&["frame_decode_errors"]).as_usize(), Some(0));
+}
+
+// --------------------------------------------------- caps and hygiene ---
+
+#[test]
+fn connection_cap_rejects_the_excess_binary_connection() {
+    let coord = sim_coordinator();
+    let cfg = ReactorConfig {
+        max_connections: 2,
+        ..ReactorConfig::default()
+    };
+    let addr = start_reactor(coord, cfg);
+    let g = Family::Mlp.generate(0);
+
+    // Two roundtrips guarantee the accept thread registered both.
+    let mut a = WireClient::connect(&addr).unwrap();
+    let mut b = WireClient::connect(&addr).unwrap();
+    a.predict_graph(&g).unwrap();
+    b.predict_graph(&g).unwrap();
+
+    let mut third = RawWire::connect(&addr);
+    let f = third.read_frame();
+    assert_eq!(f.kind, FrameKind::Error);
+    assert_eq!(f.seq, 0);
+    assert!(String::from_utf8_lossy(&f.payload).contains("capacity"));
+    third.expect_closed();
+
+    let v = Json::parse(&a.stats().unwrap()).unwrap();
+    assert!(v.path(&["connections_rejected"]).as_usize().unwrap() >= 1);
+    assert_eq!(v.path(&["connections_open"]).as_usize(), Some(2));
+}
+
+#[test]
+fn connection_cap_rejects_the_excess_json_connection() {
+    let coord = sim_coordinator();
+    let opts = ServeOptions {
+        max_connections: 1,
+        ..ServeOptions::default()
+    };
+    let addr = start_json(coord, opts);
+
+    let mut first = tcp::Client::connect(&addr).unwrap();
+    assert!(first.cache_stats().unwrap().contains("\"ok\":true"));
+
+    // Read without writing: the server pushes the rejection line at accept.
+    let s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut line = String::new();
+    BufReader::new(s).read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":false"), "{line}");
+    assert!(line.contains("capacity"), "{line}");
+}
+
+#[test]
+fn idle_binary_connections_are_swept() {
+    let coord = sim_coordinator();
+    let cfg = ReactorConfig {
+        idle_timeout: Duration::from_millis(200),
+        ..ReactorConfig::default()
+    };
+    let addr = start_reactor(coord, cfg);
+    let mut raw = RawWire::connect(&addr);
+    raw.send(&frame::encode(FrameKind::Stats, 1, &[]));
+    assert_eq!(raw.read_frame().kind, FrameKind::Stats);
+    // Stay silent past the timeout: the ~1 Hz sweep closes the socket.
+    raw.expect_closed();
+}
+
+#[test]
+fn idle_json_connections_are_closed() {
+    let coord = sim_coordinator();
+    let opts = ServeOptions {
+        idle_timeout: Duration::from_millis(200),
+        ..ServeOptions::default()
+    };
+    let addr = start_json(coord, opts);
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut buf = [0u8; 64];
+    let n = s.read(&mut buf).unwrap();
+    assert_eq!(n, 0, "idle connection should see clean EOF");
+}
+
+// ----------------------------------------------- injection regression ---
+
+#[test]
+fn hostile_target_string_is_a_request_error_not_a_command() {
+    let coord = sim_coordinator();
+    let addr = start_json(coord, ServeOptions::default());
+    let mut client = tcp::Client::connect(&addr).unwrap();
+    let g = Family::Mlp.generate(0);
+
+    // With the old format!-spliced request line this executed cache_stats.
+    let resp = client
+        .predict_graph_on(&g, "x\",\"cmd\":\"cache_stats")
+        .unwrap();
+    assert!(resp.contains("\"ok\":false"), "{resp}");
+    assert!(
+        !resp.contains("hit_rate"),
+        "target injection executed a command: {resp}"
+    );
+}
