@@ -1,0 +1,251 @@
+//! Fleet scaling (L3 serving): aggregate throughput of SimBackend
+//! replicas behind the consistent-hash router, and manifest warm-start
+//! vs. cold recompute.
+//!
+//! * **scaling** — the same cache-miss-heavy Zipf(α=1.1) request stream
+//!   driven closed-loop through a 1-replica fleet and a 3-replica fleet.
+//!   Every replica runs one executor thread, so added throughput must
+//!   come from adding replicas (the tentpole claim: ~linear scaling).
+//!   Both runs go through the router, so proxy overhead cancels.
+//! * **warm start** — one replica computes + compacts a store; a cold
+//!   peer either replicates it over the wire (`ManifestFetch`/`GenFetch`
+//!   + `load_cache`) or recomputes every prediction from scratch.
+//!
+//! Scale knobs: DIPPM_BENCH_FLEET_CLIENTS (default 12),
+//! DIPPM_BENCH_FLEET_REQS (timed requests per client, default 60),
+//! DIPPM_BENCH_FLEET_POOL (distinct graphs under the Zipf stream,
+//! default 512), DIPPM_BENCH_FLEET_ENTRIES (warm-start store size,
+//! default 400); FULL=1 raises the defaults. Set DIPPM_BENCH_JSON=<path>
+//! to write the `BENCH_fleet.json` document the CI gate reads.
+
+#[path = "common.rs"]
+mod common;
+
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use dippm::cache::CacheConfig;
+use dippm::coordinator::{Coordinator, CoordinatorOptions};
+use dippm::fleet::replicate_from_peer;
+use dippm::fleet::router::{self, RouterConfig};
+use dippm::ir::Graph;
+use dippm::modelgen::ALL_FAMILIES;
+use dippm::util::bench::{banner, Table};
+use dippm::util::json::{Json, JsonObj};
+use dippm::util::rng::Rng;
+use dippm::wire::{reactor, ReactorConfig, WireClient};
+
+/// Distinct architectures by construction: family × grid index.
+fn graph_pool(n: usize) -> Vec<Graph> {
+    (0..n)
+        .map(|i| ALL_FAMILIES[i % ALL_FAMILIES.len()].generate(i / ALL_FAMILIES.len()))
+        .collect()
+}
+
+/// Zipf(alpha) ranks over `pool` items, deterministic in `seed`.
+fn zipf_indices(n_requests: usize, pool: usize, alpha: f64, seed: u64) -> Vec<usize> {
+    let weights: Vec<f64> = (1..=pool).map(|k| (k as f64).powf(-alpha)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut cdf = Vec::with_capacity(pool);
+    let mut acc = 0.0;
+    for w in &weights {
+        acc += w / total;
+        cdf.push(acc);
+    }
+    let mut rng = Rng::new(seed);
+    (0..n_requests)
+        .map(|_| {
+            let u = rng.f64();
+            cdf.iter().position(|&c| u <= c).unwrap_or(pool - 1)
+        })
+        .collect()
+}
+
+/// One single-executor SimBackend replica on an ephemeral port.
+fn start_replica() -> String {
+    let opts = CoordinatorOptions {
+        executor_threads: 1,
+        ..Default::default()
+    };
+    let coord = Arc::new(Coordinator::start_sim(opts).unwrap());
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        reactor::serve(coord, "127.0.0.1:0", ReactorConfig::default(), move |p| {
+            let _ = tx.send(p);
+        })
+        .unwrap();
+    });
+    format!("127.0.0.1:{}", rx.recv().unwrap())
+}
+
+fn start_router(replicas: Vec<String>) -> String {
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let cfg = RouterConfig {
+            replicas,
+            ..RouterConfig::default()
+        };
+        router::serve("127.0.0.1:0", cfg, move |p| {
+            let _ = tx.send(p);
+        })
+        .unwrap();
+    });
+    format!("127.0.0.1:{}", rx.recv().unwrap())
+}
+
+/// Closed-loop Zipf stream through a fresh `n_replicas`-wide fleet;
+/// returns aggregate req/s (total requests / slowest client).
+fn run_fleet(n_replicas: usize, clients: usize, per_client: usize, pool: &[Graph]) -> f64 {
+    let replicas: Vec<String> = (0..n_replicas).map(|_| start_replica()).collect();
+    let addr = start_router(replicas);
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let addr = addr.clone();
+            let schedule: Vec<Graph> = zipf_indices(per_client, pool.len(), 1.1, 42 + c as u64)
+                .into_iter()
+                .map(|i| pool[i].clone())
+                .collect();
+            std::thread::spawn(move || {
+                let mut client = WireClient::connect(&addr).unwrap();
+                let t0 = Instant::now();
+                for g in &schedule {
+                    client.predict_graph(g).unwrap();
+                }
+                t0.elapsed().as_secs_f64()
+            })
+        })
+        .collect();
+    let mut slowest = 0.0f64;
+    for h in handles {
+        slowest = slowest.max(h.join().unwrap());
+    }
+    (clients * per_client) as f64 / slowest.max(1e-9)
+}
+
+/// Warm-start a cold peer two ways; returns (warm_s, cold_s, entries).
+fn warm_start_times(n_entries: usize) -> (f64, f64, usize) {
+    let root = std::env::temp_dir();
+    let store = root.join(format!("dippm-fleet-bench-store-{}", std::process::id()));
+    let scratch = root.join(format!("dippm-fleet-bench-scratch-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store);
+    let _ = std::fs::remove_dir_all(&scratch);
+
+    let opts = CoordinatorOptions {
+        cache: CacheConfig {
+            snapshot_path: Some(store.clone()),
+            ..CacheConfig::default()
+        },
+        ..Default::default()
+    };
+    let source = Arc::new(Coordinator::start_sim(opts).unwrap());
+    let pool = graph_pool(n_entries);
+    for g in &pool {
+        source.predict(g.clone()).unwrap();
+    }
+    source.compact_cache().unwrap();
+    let (tx, rx) = mpsc::channel();
+    let served = source.clone();
+    std::thread::spawn(move || {
+        reactor::serve(served, "127.0.0.1:0", ReactorConfig::default(), move |p| {
+            let _ = tx.send(p);
+        })
+        .unwrap();
+    });
+    let addr = format!("127.0.0.1:{}", rx.recv().unwrap());
+
+    // Warm path: ship manifest + generation files, load the copy.
+    let t0 = Instant::now();
+    replicate_from_peer(&addr, &scratch).unwrap();
+    let warm = Coordinator::start_sim(CoordinatorOptions::default()).unwrap();
+    let loaded = warm.load_cache(Some(scratch.to_str().unwrap())).unwrap().entries;
+    let warm_s = t0.elapsed().as_secs_f64();
+    assert_eq!(loaded, n_entries, "warm start lost entries");
+
+    // Cold path: recompute every prediction from scratch.
+    let cold = Coordinator::start_sim(CoordinatorOptions::default()).unwrap();
+    let t0 = Instant::now();
+    for g in &pool {
+        cold.predict(g.clone()).unwrap();
+    }
+    let cold_s = t0.elapsed().as_secs_f64();
+
+    let _ = std::fs::remove_dir_all(&store);
+    let _ = std::fs::remove_dir_all(&scratch);
+    (warm_s, cold_s, loaded)
+}
+
+fn main() {
+    banner(
+        "Perf/L3",
+        "fleet scaling: replicas behind the consistent-hash router + manifest warm start",
+    );
+    let clients = common::env_usize(
+        "DIPPM_BENCH_FLEET_CLIENTS",
+        if common::is_full() { 24 } else { 12 },
+    )
+    .max(1);
+    let per_client = common::env_usize(
+        "DIPPM_BENCH_FLEET_REQS",
+        if common::is_full() { 120 } else { 60 },
+    )
+    .max(1);
+    let pool_size = common::env_usize(
+        "DIPPM_BENCH_FLEET_POOL",
+        if common::is_full() { 2048 } else { 512 },
+    )
+    .max(1);
+    let entries = common::env_usize(
+        "DIPPM_BENCH_FLEET_ENTRIES",
+        if common::is_full() { 2000 } else { 400 },
+    )
+    .max(1);
+
+    let pool = graph_pool(pool_size);
+    let mut t = Table::new(&["fleet", "replicas", "req/s"]);
+    let single = run_fleet(1, clients, per_client, &pool);
+    t.row(&["single".into(), "1".into(), format!("{single:.0}")]);
+    let fleet = run_fleet(3, clients, per_client, &pool);
+    t.row(&["sharded".into(), "3".into(), format!("{fleet:.0}")]);
+    t.print();
+    let speedup = if single > 0.0 { fleet / single } else { 0.0 };
+    println!(
+        "\n{clients} clients x {per_client} reqs, zipf pool {pool_size} (miss-heavy): \
+         3 replicas = {speedup:.2}x one replica"
+    );
+
+    let (warm_s, cold_s, loaded) = warm_start_times(entries);
+    let warm_speedup = if warm_s > 0.0 { cold_s / warm_s } else { 0.0 };
+    println!(
+        "warm start: {loaded} entries replicated + loaded in {warm_s:.3}s vs \
+         {cold_s:.3}s recompute ({warm_speedup:.1}x)"
+    );
+    println!("target: 3-replica fleet >= 2x single; warm start >= 5x recompute");
+
+    if let Ok(path) = std::env::var("DIPPM_BENCH_JSON") {
+        let mut doc = match std::fs::read_to_string(&path).map(|s| Json::parse(&s)) {
+            Ok(Ok(Json::Obj(o))) => o,
+            _ => {
+                let mut o = JsonObj::new();
+                o.insert("bench", "fleet_scaling");
+                o
+            }
+        };
+        let mut scaling = JsonObj::new();
+        scaling.insert("clients", clients);
+        scaling.insert("per_client", per_client);
+        scaling.insert("zipf_pool", pool_size);
+        scaling.insert("single_req_per_s", single);
+        scaling.insert("fleet_req_per_s", fleet);
+        scaling.insert("fleet_replicas", 3usize);
+        scaling.insert("speedup", speedup);
+        doc.insert("fleet_scaling", Json::Obj(scaling));
+        let mut warm = JsonObj::new();
+        warm.insert("entries", loaded);
+        warm.insert("warm_s", warm_s);
+        warm.insert("cold_s", cold_s);
+        warm.insert("speedup", warm_speedup);
+        doc.insert("warm_start", Json::Obj(warm));
+        std::fs::write(&path, format!("{}\n", Json::Obj(doc))).expect("write DIPPM_BENCH_JSON");
+        println!("wrote fleet_scaling + warm_start into {path}");
+    }
+}

@@ -461,6 +461,13 @@ impl<V: Clone> ShardedLruCache<V> {
         self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 
+    /// Per-shard live entry counts, in shard order. Surfaced through
+    /// `cache_stats` so fleet operators can see each replica's owned-key
+    /// distribution and spot misrouted requests.
+    pub fn shard_lens(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).collect()
+    }
+
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

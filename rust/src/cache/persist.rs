@@ -491,16 +491,20 @@ fn parse_store_file(name: &str) -> Option<u64> {
 
 /// Per-shard record in the manifest: the generation file's exact byte
 /// length and whole-file checksum (0/0 = no base file for this shard).
+/// Public so fleet replication can verify fetched generation files against
+/// the manifest the peer advertised.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
-struct ShardRecord {
-    len: u64,
-    digest: u64,
+pub struct ShardRecord {
+    pub len: u64,
+    pub digest: u64,
 }
 
+/// The decoded `MANIFEST`: the committed generation id plus one
+/// [`ShardRecord`] per shard file.
 #[derive(Debug, Clone, PartialEq, Eq)]
-struct Manifest {
-    generation: u64,
-    shards: Vec<ShardRecord>,
+pub struct Manifest {
+    pub generation: u64,
+    pub shards: Vec<ShardRecord>,
 }
 
 fn encode_manifest(m: &Manifest) -> Vec<u8> {
@@ -518,7 +522,10 @@ fn encode_manifest(m: &Manifest) -> Vec<u8> {
     body
 }
 
-fn decode_manifest(bytes: &[u8]) -> Result<Manifest> {
+/// Decode and validate `MANIFEST` bytes (magic, version, self-checksum).
+/// Public so fleet replication can inspect a peer's manifest before
+/// fetching generation files.
+pub fn decode_manifest(bytes: &[u8]) -> Result<Manifest> {
     if bytes.len() < 8 + 4 + 8 + 4 + CHECKSUM_LEN {
         bail!("manifest too short ({} bytes)", bytes.len());
     }
@@ -1356,6 +1363,85 @@ pub fn migrate_legacy_snapshot<V: SnapshotValue + Clone + Send + Sync>(
         path.display()
     );
     Ok(true)
+}
+
+// ---------------------------------------------------------------------------
+// fleet replication: manifest + generation-file export/import
+// ---------------------------------------------------------------------------
+
+/// Read a store's committed `MANIFEST` bytes for shipping to a peer.
+/// The bytes are validated before export — a replica never advertises a
+/// manifest it could not itself boot from.
+pub fn manifest_bytes(dir: &Path) -> Result<Vec<u8>> {
+    let path = dir.join("MANIFEST");
+    let bytes = fs::read(&path)
+        .with_context(|| format!("reading manifest {}", path.display()))?;
+    decode_manifest(&bytes)
+        .with_context(|| format!("validating manifest {}", path.display()))?;
+    Ok(bytes)
+}
+
+/// Read one generation shard file's raw bytes for shipping to a peer.
+/// Requests for a superseded generation fail naturally once the boot-time
+/// janitor has removed its files.
+pub fn gen_shard_bytes(dir: &Path, generation: u64, shard: usize) -> Result<Vec<u8>> {
+    let path = gen_file(dir, generation, shard);
+    fs::read(&path).with_context(|| format!("reading generation file {}", path.display()))
+}
+
+/// What [`import_store`] wrote.
+#[derive(Debug, Clone)]
+pub struct ImportReport {
+    pub generation: u64,
+    pub shards_written: usize,
+    pub bytes: usize,
+}
+
+/// Assemble a bootable store directory from a peer's manifest plus the
+/// generation shard files fetched against it. Every non-empty manifest
+/// record must be present in `shard_files` and match byte-for-byte (exact
+/// length + whole-file checksum); nothing is written until the whole set
+/// verifies, and the `MANIFEST` itself is committed last so an interrupted
+/// import leaves no bootable-but-partial store behind.
+pub fn import_store(
+    dir: &Path,
+    manifest: &[u8],
+    shard_files: &[(usize, Vec<u8>)],
+) -> Result<ImportReport> {
+    let m = decode_manifest(manifest).context("imported manifest invalid")?;
+    for (shard, bytes) in shard_files {
+        let rec = m
+            .shards
+            .get(*shard)
+            .ok_or_else(|| anyhow!("shard {shard} not in manifest ({} shards)", m.shards.len()))?;
+        if rec.len != bytes.len() as u64 {
+            bail!(
+                "shard {shard} length mismatch: manifest says {} bytes, got {}",
+                rec.len,
+                bytes.len()
+            );
+        }
+        if rec.digest != checksum(bytes) {
+            bail!("shard {shard} checksum mismatch against manifest record");
+        }
+    }
+    for (i, rec) in m.shards.iter().enumerate() {
+        if rec.len > 0 && !shard_files.iter().any(|(s, _)| *s == i) {
+            bail!("manifest shard {i} missing from import set");
+        }
+    }
+    fs::create_dir_all(dir).with_context(|| format!("creating store dir {}", dir.display()))?;
+    let mut total = 0usize;
+    for (shard, bytes) in shard_files {
+        atomic_write(&gen_file(dir, m.generation, *shard), bytes)?;
+        total += bytes.len();
+    }
+    atomic_write(&dir.join("MANIFEST"), manifest)?;
+    Ok(ImportReport {
+        generation: m.generation,
+        shards_written: shard_files.len(),
+        bytes: total + manifest.len(),
+    })
 }
 
 #[cfg(test)]

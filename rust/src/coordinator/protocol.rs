@@ -120,6 +120,13 @@ pub fn cache_stats_response(m: &Metrics) -> String {
     o.insert("expirations", m.cache_expirations as usize);
     o.insert("entries", m.cache_entries as usize);
     o.insert("capacity", m.cache_capacity as usize);
+    // Per-shard owned-key counts (empty array with the cache disabled):
+    // in a fleet, each replica's slice of the ring should hold a roughly
+    // even spread here, and a lopsided replica means misrouted requests.
+    o.insert(
+        "cache_shard_keys",
+        Json::Arr(m.cache_shard_keys.iter().map(|&n| Json::Num(n as f64)).collect()),
+    );
     o.insert("negative_hits", m.negative_hits as usize);
     // Persistence fields are always reported, cold boot included (a cold
     // boot is warm_start_entries 0 + persist counters at zero, not an
@@ -171,6 +178,25 @@ pub fn cache_stats_response(m: &Metrics) -> String {
     o.insert("frame_decode_errors", m.wire_frame_decode_errors as usize);
     o.insert("bytes_rx", m.wire_bytes_rx as usize);
     o.insert("bytes_tx", m.wire_bytes_tx as usize);
+    Json::Obj(o).to_string()
+}
+
+/// Serialize the `shard_stats` response (the wire `ShardStats` verb):
+/// the slice of `cache_stats` a fleet router needs to audit placement —
+/// per-shard owned-key counts plus the store generation the replica
+/// would serve to a warm-starting peer.
+pub fn shard_stats_response(m: &Metrics) -> String {
+    let mut o = JsonObj::new();
+    o.insert("ok", true);
+    o.insert("cache_enabled", m.cache_enabled);
+    o.insert("entries", m.cache_entries as usize);
+    o.insert(
+        "cache_shard_keys",
+        Json::Arr(m.cache_shard_keys.iter().map(|&n| Json::Num(n as f64)).collect()),
+    );
+    o.insert("persist_enabled", m.persist_enabled);
+    o.insert("journal_generation", m.journal_generation as usize);
+    o.insert("warm_start_entries", m.warm_start_entries as usize);
     Json::Obj(o).to_string()
 }
 
@@ -283,6 +309,7 @@ mod tests {
             torn_tail_drops: 1,
             journal_bytes: 4096,
             journal_generation: 3,
+            cache_shard_keys: vec![3, 2, 1],
             wire_connections_open: 4,
             wire_connections_accepted: 11,
             wire_connections_closed: 7,
@@ -315,6 +342,10 @@ mod tests {
         assert_eq!(v.path(&["torn_tail_drops"]).as_usize(), Some(1));
         assert_eq!(v.path(&["journal_bytes"]).as_usize(), Some(4096));
         assert_eq!(v.path(&["journal_generation"]).as_usize(), Some(3));
+        let shard_keys = v.path(&["cache_shard_keys"]).as_arr().unwrap();
+        assert_eq!(shard_keys.len(), 3);
+        assert_eq!(shard_keys[0].as_usize(), Some(3));
+        assert_eq!(shard_keys[2].as_usize(), Some(1));
         // Batch-former pipeline fields.
         assert_eq!(v.path(&["batch_former"]).as_str(), Some("leader"));
         assert_eq!(v.path(&["latency_count"]).as_usize(), Some(3));
@@ -356,6 +387,7 @@ mod tests {
         assert_eq!(v.path(&["compactions"]).as_usize(), Some(0));
         assert_eq!(v.path(&["replayed_records"]).as_usize(), Some(0));
         assert_eq!(v.path(&["torn_tail_drops"]).as_usize(), Some(0));
+        assert_eq!(v.path(&["cache_shard_keys"]).as_arr().map(<[Json]>::len), Some(0));
         // Latency/gauge fields are present (zeroed) before any traffic,
         // so clients never special-case their absence either.
         assert_eq!(v.path(&["latency_count"]).as_usize(), Some(0));
@@ -370,6 +402,27 @@ mod tests {
         assert_eq!(v.path(&["frames_rx"]).as_usize(), Some(0));
         assert_eq!(v.path(&["frame_decode_errors"]).as_usize(), Some(0));
         assert_eq!(v.path(&["bytes_tx"]).as_usize(), Some(0));
+    }
+
+    #[test]
+    fn shard_stats_serializes() {
+        let m = crate::coordinator::Metrics {
+            cache_enabled: true,
+            cache_entries: 6,
+            cache_shard_keys: vec![4, 0, 2],
+            persist_enabled: true,
+            journal_generation: 2,
+            warm_start_entries: 3,
+            ..Default::default()
+        };
+        let v = Json::parse(&shard_stats_response(&m)).unwrap();
+        assert_eq!(v.path(&["ok"]).as_bool(), Some(true));
+        assert_eq!(v.path(&["entries"]).as_usize(), Some(6));
+        let keys = v.path(&["cache_shard_keys"]).as_arr().unwrap();
+        assert_eq!(keys.len(), 3);
+        assert_eq!(keys[0].as_usize(), Some(4));
+        assert_eq!(v.path(&["journal_generation"]).as_usize(), Some(2));
+        assert_eq!(v.path(&["warm_start_entries"]).as_usize(), Some(3));
     }
 
     #[test]

@@ -162,6 +162,10 @@ pub struct Metrics {
     pub cache_expirations: u64,
     pub cache_entries: u64,
     pub cache_capacity: u64,
+    /// Live entries per LRU shard, in shard order (empty with the cache
+    /// disabled). Fleet operators read this per replica to see owned-key
+    /// distribution and spot misrouted requests.
+    pub cache_shard_keys: Vec<u64>,
     /// Requests answered by a cached *negative* entry (tombstone): the
     /// backend's earlier per-graph failure was replayed without the graph
     /// ever reaching the executor again.
@@ -804,6 +808,30 @@ impl Coordinator {
         Ok(report)
     }
 
+    /// Serve the persistence store's committed `MANIFEST` bytes — the
+    /// wire `ManifestFetch` verb behind fleet cache replication. Errors
+    /// when persistence is off or no generation has been committed yet
+    /// (journal-only stores have nothing worth shipping).
+    pub fn manifest_payload(&self) -> Result<Vec<u8>> {
+        let store = self
+            .store
+            .as_ref()
+            .ok_or_else(|| anyhow!("no cache store (start with --cache-file)"))?;
+        persist::manifest_bytes(store.dir())
+    }
+
+    /// Serve one generation shard file's raw bytes — the wire `GenFetch`
+    /// verb. A request for a superseded generation fails once the
+    /// compactor's janitor has deleted its files; the fetching peer
+    /// re-reads the manifest and retries.
+    pub fn gen_shard_payload(&self, generation: u64, shard: usize) -> Result<Vec<u8>> {
+        let store = self
+            .store
+            .as_ref()
+            .ok_or_else(|| anyhow!("no cache store (start with --cache-file)"))?;
+        persist::gen_shard_bytes(store.dir(), generation, shard)
+    }
+
     fn resolve_snapshot_path(&self, path: Option<&str>) -> Result<PathBuf> {
         path.map(|p| Path::new(p).to_path_buf())
             .or_else(|| self.snapshot_path.clone())
@@ -853,6 +881,7 @@ impl Coordinator {
             m.cache_expirations = s.expirations;
             m.cache_entries = s.entries;
             m.cache_capacity = s.capacity;
+            m.cache_shard_keys = cache.shard_lens().into_iter().map(|n| n as u64).collect();
         }
         let w = &self.wire;
         let ld = |a: &AtomicU64| a.load(Ordering::Relaxed);

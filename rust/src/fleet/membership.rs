@@ -1,0 +1,218 @@
+//! Replica membership: the static `--fleet-replicas` list plus live
+//! health state and routing counters.
+//!
+//! Health is pessimistic-fast, optimistic-slow: the router marks a
+//! replica down the moment a forward fails (the request at hand fails
+//! over immediately; no client-visible error), and a background prober
+//! brings it back only after it answers a `Stats` round-trip. Probe
+//! failures back off exponentially per replica so a long-dead peer costs
+//! one cheap connect attempt every few seconds, not every interval.
+
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::wire::WireClient;
+use crate::{log_info, log_warn};
+
+/// A replica's routing availability.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaHealth {
+    /// Routable (initial state; restored by a successful probe).
+    Healthy,
+    /// A forward or probe failed; requests fail over until a probe
+    /// succeeds.
+    Down,
+}
+
+/// One downstream coordinator replica: address, health, and the
+/// router-side counters `fleet_stats` reports.
+pub struct Replica {
+    pub addr: String,
+    state: AtomicU8,
+    /// Requests forwarded here (first attempts on the replica's own
+    /// ring slice).
+    pub routed: AtomicU64,
+    /// Additional attempts made here after another replica failed
+    /// mid-request.
+    pub retried: AtomicU64,
+    /// Requests this replica absorbed for a down peer's ring slice.
+    pub failed_over: AtomicU64,
+    /// Forwards currently awaiting a downstream reply (bounded-load
+    /// balancing input).
+    pub in_flight: AtomicU64,
+    /// Probe backoff, milliseconds (doubles per failure, reset on
+    /// success).
+    backoff_ms: AtomicU64,
+    /// Milliseconds of backoff still to elapse before the next probe.
+    probe_wait_ms: AtomicU64,
+}
+
+impl Replica {
+    fn new(addr: String) -> Replica {
+        Replica {
+            addr,
+            state: AtomicU8::new(ReplicaHealth::Healthy as u8),
+            routed: AtomicU64::new(0),
+            retried: AtomicU64::new(0),
+            failed_over: AtomicU64::new(0),
+            in_flight: AtomicU64::new(0),
+            backoff_ms: AtomicU64::new(0),
+            probe_wait_ms: AtomicU64::new(0),
+        }
+    }
+
+    pub fn health(&self) -> ReplicaHealth {
+        if self.state.load(Ordering::Relaxed) == ReplicaHealth::Healthy as u8 {
+            ReplicaHealth::Healthy
+        } else {
+            ReplicaHealth::Down
+        }
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.health() == ReplicaHealth::Healthy
+    }
+}
+
+/// The fleet's replica set. The list is static (`--fleet-replicas`);
+/// only health and counters change at runtime.
+pub struct Membership {
+    pub replicas: Vec<Arc<Replica>>,
+}
+
+impl Membership {
+    pub fn new(addrs: &[String]) -> Result<Arc<Membership>> {
+        if addrs.is_empty() {
+            return Err(anyhow!("--fleet-replicas must name at least one replica"));
+        }
+        Ok(Arc::new(Membership {
+            replicas: addrs.iter().cloned().map(|a| Arc::new(Replica::new(a))).collect(),
+        }))
+    }
+
+    pub fn len(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.replicas.is_empty()
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.replicas.iter().filter(|r| r.is_alive()).count()
+    }
+
+    /// Total forwards currently in flight across the fleet (bounded-load
+    /// denominator).
+    pub fn total_in_flight(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|r| r.in_flight.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// A forward to `i` failed: stop routing there until a probe
+    /// succeeds.
+    pub fn mark_down(&self, i: usize) {
+        let r = &self.replicas[i];
+        let was = r
+            .state
+            .swap(ReplicaHealth::Down as u8, Ordering::Relaxed);
+        if was == ReplicaHealth::Healthy as u8 {
+            log_warn!("fleet replica {} marked down", r.addr);
+        }
+    }
+
+    pub fn mark_healthy(&self, i: usize) {
+        let r = &self.replicas[i];
+        let was = r
+            .state
+            .swap(ReplicaHealth::Healthy as u8, Ordering::Relaxed);
+        r.backoff_ms.store(0, Ordering::Relaxed);
+        if was == ReplicaHealth::Down as u8 {
+            log_info!("fleet replica {} healthy again", r.addr);
+        }
+    }
+
+    /// Spawn the background health prober: every `interval` it pings
+    /// every replica whose backoff has elapsed with a `Stats` round-trip,
+    /// restoring down replicas that answer and downing healthy ones that
+    /// stopped answering. Runs for the router's lifetime.
+    pub fn spawn_prober(self: &Arc<Self>, interval: Duration) {
+        let me = self.clone();
+        std::thread::Builder::new()
+            .name("dippm-fleet-prober".into())
+            .spawn(move || loop {
+                std::thread::sleep(interval);
+                let step_ms = interval.as_millis().max(1) as u64;
+                for (i, r) in me.replicas.iter().enumerate() {
+                    // Down replicas probe on an exponential schedule:
+                    // skip this tick while backoff is still elapsing.
+                    let wait = r.probe_wait_ms.load(Ordering::Relaxed);
+                    if wait > step_ms {
+                        r.probe_wait_ms.store(wait - step_ms, Ordering::Relaxed);
+                        continue;
+                    }
+                    if probe(&r.addr, interval).is_ok() {
+                        me.mark_healthy(i);
+                        r.probe_wait_ms.store(0, Ordering::Relaxed);
+                    } else {
+                        me.mark_down(i);
+                        // 1x → 2x → 4x … 32x the interval between probes.
+                        let next = (r.backoff_ms.load(Ordering::Relaxed) * 2)
+                            .clamp(step_ms, step_ms * 32);
+                        r.backoff_ms.store(next, Ordering::Relaxed);
+                        r.probe_wait_ms.store(next, Ordering::Relaxed);
+                    }
+                }
+            })
+            .expect("spawn fleet prober");
+    }
+}
+
+/// One health probe: bounded connect + a `Stats` round-trip (proves the
+/// replica's reactor is serving, not merely accepting).
+fn probe(addr: &str, timeout: Duration) -> Result<()> {
+    let sock = addr
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| anyhow!("{addr} resolves to no address"))?;
+    let timeout = timeout.max(Duration::from_millis(100));
+    let stream = TcpStream::connect_timeout(&sock, timeout)?;
+    let _ = stream.set_read_timeout(Some(timeout));
+    let _ = stream.set_write_timeout(Some(timeout));
+    let mut client = WireClient::from_stream(stream);
+    client.stats().map(|_| ())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn health_transitions_and_counts() {
+        let m = Membership::new(&["a:1".into(), "b:2".into(), "c:3".into()]).unwrap();
+        assert_eq!(m.alive_count(), 3);
+        m.mark_down(1);
+        assert_eq!(m.alive_count(), 2);
+        assert_eq!(m.replicas[1].health(), ReplicaHealth::Down);
+        assert!(m.replicas[0].is_alive());
+        m.mark_healthy(1);
+        assert_eq!(m.alive_count(), 3);
+    }
+
+    #[test]
+    fn empty_replica_list_rejected() {
+        assert!(Membership::new(&[]).is_err());
+    }
+
+    #[test]
+    fn probe_fails_fast_on_dead_port() {
+        // Reserved port 1 on localhost: nothing listens there.
+        assert!(probe("127.0.0.1:1", Duration::from_millis(200)).is_err());
+    }
+}

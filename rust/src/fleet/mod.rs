@@ -1,0 +1,38 @@
+//! Fleet mode: N coordinator replicas behind a consistent-hash router.
+//!
+//! One process is the scale ceiling PRs 3–6 left standing: a single LRU
+//! caps the hot set and a single reactor caps aggregate throughput. The
+//! graph-fingerprint cache key already makes placement trivial — it is
+//! deterministic across processes (`CacheKey::as_u128`), so hashing it
+//! onto a ring of replicas gives each replica a disjoint cache slice and
+//! aggregate capacity/throughput that scales ~linearly in replica count.
+//!
+//! Three pieces, one per module:
+//!
+//! * [`router`] — a consistent-hash ring (virtual nodes + bounded-load
+//!   balancing) and the router process: it accepts binary-protocol
+//!   clients, peeks just far enough into each predict request to compute
+//!   the cache key, and forwards the frame verbatim to the owning
+//!   replica, failing over clockwise to the next live peer when a shard
+//!   is down.
+//! * [`membership`] — the static `--fleet-replicas` list plus per-replica
+//!   health state: a replica is marked down the instant a forward fails,
+//!   and a background prober with per-replica exponential backoff brings
+//!   it back once it answers again.
+//! * [`replication`] — manifest-based cache replication: every replica
+//!   serves its persistence store's `MANIFEST` (generation id + per-shard
+//!   byte length + checksum) and raw generation files over the
+//!   `ManifestFetch`/`GenFetch` wire verbs, so a cold-booting or
+//!   rebalancing replica fetches a peer's warm-start generation files
+//!   instead of recomputing predictions.
+//!
+//! Everything is hermetically testable with SimBackend replicas on
+//! localhost: see `tests/fleet.rs` and the `fleet_scaling` bench.
+
+pub mod membership;
+pub mod replication;
+pub mod router;
+
+pub use membership::{Membership, Replica, ReplicaHealth};
+pub use replication::replicate_from_peer;
+pub use router::{HashRing, RouterConfig};

@@ -1,0 +1,153 @@
+//! Manifest-based cache replication: warm-start a replica from a peer's
+//! persistence store instead of recomputing predictions.
+//!
+//! The persistence layer (PR 4) already gives every replica exactly the
+//! artifact replication needs: an atomically-swapped `MANIFEST` naming a
+//! committed generation plus, per shard, the generation file's byte
+//! length and whole-file checksum. Replication is therefore file
+//! shipping, not entry shipping:
+//!
+//! 1. `ManifestFetch` → the peer's validated `MANIFEST` bytes.
+//! 2. `GenFetch(generation, shard)` per non-empty manifest record → the
+//!    raw `gen-<G>-shard-<S>.bin` bytes.
+//! 3. [`crate::cache::persist::import_store`] verifies every file
+//!    against its manifest record (exact length + checksum) and
+//!    assembles a bootable store directory, committing the `MANIFEST`
+//!    last — a crash mid-import leaves nothing a boot would trust.
+//!
+//! The caller then loads that directory like any other store
+//! (`Coordinator::load_cache`), which counts the entries as
+//! `warm_start_entries`. Journal tails are deliberately not shipped:
+//! the manifest names only compacted state, and the peer's tail keeps
+//! changing under load — compact before replicating when freshness
+//! matters (the warm-start test does exactly that).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::cache::persist::{self, ImportReport};
+use crate::log_info;
+use crate::wire::WireClient;
+
+/// Fetch `peer_addr`'s committed store into `dest` and verify it
+/// end-to-end. `dest` need not exist; an existing store there is
+/// overwritten shard-by-shard (the manifest swap is last, so readers
+/// never observe a half-imported generation).
+pub fn replicate_from_peer(peer_addr: &str, dest: &Path) -> Result<ImportReport> {
+    let mut client = WireClient::connect(peer_addr)
+        .with_context(|| format!("connecting to fleet peer {peer_addr}"))?;
+    let manifest = client
+        .fetch_manifest()
+        .with_context(|| format!("fetching manifest from {peer_addr}"))?;
+    let m = persist::decode_manifest(&manifest)?;
+    let mut shard_files = Vec::new();
+    for (i, rec) in m.shards.iter().enumerate() {
+        if rec.len == 0 {
+            continue; // no base file for this shard
+        }
+        let bytes = client
+            .fetch_gen_shard(m.generation, i as u32)
+            .with_context(|| {
+                format!("fetching generation {} shard {i} from {peer_addr}", m.generation)
+            })?;
+        shard_files.push((i, bytes));
+    }
+    let report = persist::import_store(dest, &manifest, &shard_files)?;
+    log_info!(
+        "replicated generation {} from {peer_addr}: {} shard files, {} bytes -> {}",
+        report.generation,
+        report.shards_written,
+        report.bytes,
+        dest.display()
+    );
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::persist::{import_store, manifest_bytes, write_fresh_store};
+    use std::time::Duration;
+
+    fn tmp_dir(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("dippm-fleet-repl-{}-{name}", std::process::id()))
+    }
+
+    /// The wire-free core: export a store's manifest + gen files, import
+    /// them elsewhere, boot the copy, get the same entries back.
+    #[test]
+    fn export_import_roundtrip_is_bootable() {
+        let src = tmp_dir("src");
+        let dst = tmp_dir("dst");
+        let _ = std::fs::remove_dir_all(&src);
+        let _ = std::fs::remove_dir_all(&dst);
+        let entries: Vec<(u128, u32, Duration)> = (0..200u32)
+            .map(|i| ((i as u128) << 64 | i as u128, i, Duration::ZERO))
+            .collect();
+        write_fresh_store(&src, entries.clone(), 4, 2).unwrap();
+
+        let manifest = manifest_bytes(&src).unwrap();
+        let m = persist::decode_manifest(&manifest).unwrap();
+        let mut shard_files = Vec::new();
+        for (i, rec) in m.shards.iter().enumerate() {
+            if rec.len > 0 {
+                shard_files.push((i, persist::gen_shard_bytes(&src, m.generation, i).unwrap()));
+            }
+        }
+        let report = import_store(&dst, &manifest, &shard_files).unwrap();
+        assert_eq!(report.generation, m.generation);
+        assert_eq!(report.shards_written, shard_files.len());
+
+        let boot = persist::read_store::<u32>(&dst).unwrap();
+        let mut got: Vec<(u128, u32)> =
+            boot.base.into_iter().map(|(k, v, _)| (k, v)).collect();
+        got.sort_unstable();
+        let mut want: Vec<(u128, u32)> =
+            entries.into_iter().map(|(k, v, _)| (k, v)).collect();
+        want.sort_unstable();
+        assert_eq!(got, want);
+        let _ = std::fs::remove_dir_all(&src);
+        let _ = std::fs::remove_dir_all(&dst);
+    }
+
+    #[test]
+    fn import_rejects_tampered_shards() {
+        let src = tmp_dir("tamper-src");
+        let dst = tmp_dir("tamper-dst");
+        let _ = std::fs::remove_dir_all(&src);
+        let _ = std::fs::remove_dir_all(&dst);
+        let entries: Vec<(u128, u32, Duration)> =
+            (0..50u32).map(|i| (i as u128, i, Duration::ZERO)).collect();
+        write_fresh_store(&src, entries, 2, 1).unwrap();
+        let manifest = manifest_bytes(&src).unwrap();
+        let m = persist::decode_manifest(&manifest).unwrap();
+        let mut shard_files = Vec::new();
+        for (i, rec) in m.shards.iter().enumerate() {
+            if rec.len > 0 {
+                shard_files.push((i, persist::gen_shard_bytes(&src, m.generation, i).unwrap()));
+            }
+        }
+        // Flip one byte in the first shipped file: checksum mismatch.
+        let mut bad = shard_files.clone();
+        bad[0].1[20] ^= 0xFF;
+        let err = import_store(&dst, &manifest, &bad).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "unexpected error: {err}");
+        // Nothing committed: no MANIFEST in dest.
+        assert!(!dst.join("MANIFEST").exists());
+
+        // Truncation is caught by the length record.
+        let mut short = shard_files.clone();
+        short[0].1.pop();
+        let err = import_store(&dst, &manifest, &short).unwrap_err().to_string();
+        assert!(err.contains("length"), "unexpected error: {err}");
+
+        // A missing non-empty shard is refused outright.
+        let err = import_store(&dst, &manifest, &shard_files[1..])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("missing"), "unexpected error: {err}");
+        let _ = std::fs::remove_dir_all(&src);
+        let _ = std::fs::remove_dir_all(&dst);
+    }
+}

@@ -1,0 +1,511 @@
+//! The fleet router: a consistent-hash ring over the replica set plus a
+//! blocking forwarding proxy speaking the binary wire protocol on both
+//! sides.
+//!
+//! Placement: the router decodes just enough of each predict request to
+//! recompute the replica-side cache key (`CostSweep::of` fingerprint ×
+//! target — the *identical* recipe `Coordinator::submit_to` uses, so a
+//! request always lands on the replica whose LRU slice owns it), hashes
+//! that key onto a ring of `vnodes` points per replica, and forwards the
+//! original payload bytes verbatim to the first viable replica in
+//! clockwise preference order.
+//!
+//! Viable = alive (see [`super::membership`]) and under the bounded-load
+//! cap: an owner already carrying more than `load_factor ×` the fleet's
+//! mean in-flight load sheds the request to the next alive successor
+//! (consistent hashing with bounded loads — one hot fingerprint cannot
+//! serialize its whole shard behind one replica). When a forward fails
+//! mid-request the replica is marked down and the request retries on the
+//! next alive successor — fail-open, no client-visible error; the
+//! successor recomputes the prediction (a cache miss, not a wrong
+//! answer, since every replica runs the same deterministic pipeline).
+//!
+//! Concurrency model: one blocking thread per client connection, each
+//! owning its private downstream connections (created lazily per
+//! replica, reused across requests). Routers front tens of client
+//! connections, not the reactor's tens of thousands — thread-per-conn
+//! keeps failover logic linear and testable.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::cache::CacheKey;
+use crate::simulator::CostSweep;
+use crate::util::json::{Json, JsonObj};
+use crate::util::rng::splitmix64;
+use crate::wire::frame::{self, Decoded, FrameKind, DEFAULT_MAX_PAYLOAD};
+use crate::wire::{codec, WireClient};
+use crate::{log_info, log_warn};
+
+use super::membership::Membership;
+
+/// Consistent-hash ring: `vnodes` pseudo-random points per replica on
+/// the u64 circle, a key owned by the first point at or clockwise of its
+/// hash. Deterministic across processes (splitmix64, no std hasher), so
+/// every router instance and every test agrees on placement.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    /// Sorted (point, replica) pairs.
+    points: Vec<(u64, u32)>,
+    replicas: usize,
+}
+
+impl HashRing {
+    pub fn new(replicas: usize, vnodes: usize) -> HashRing {
+        assert!(replicas > 0, "ring needs at least one replica");
+        let vnodes = vnodes.max(1);
+        let mut points = Vec::with_capacity(replicas * vnodes);
+        for r in 0..replicas {
+            for v in 0..vnodes {
+                // Independent streams per replica; ties broken by index
+                // so equal points cannot reorder between builds.
+                let p = splitmix64(((r as u64) << 32) ^ v as u64 ^ 0xF1EE_7000);
+                points.push((p, r as u32));
+            }
+        }
+        points.sort_unstable();
+        HashRing { points, replicas }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// Where a cache key lands on the circle.
+    fn key_point(key: u128) -> u64 {
+        // as_u128 is already avalanche-mixed; fold and re-mix so ring
+        // position is independent of the LRU's own shard index (which
+        // uses the high half directly).
+        splitmix64((key as u64) ^ ((key >> 64) as u64).rotate_left(32))
+    }
+
+    /// The key's primary owner.
+    pub fn owner(&self, key: u128) -> usize {
+        self.preference(key)[0]
+    }
+
+    /// Every replica exactly once, in clockwise order from the key's
+    /// point — the failover order.
+    pub fn preference(&self, key: u128) -> Vec<usize> {
+        let p = Self::key_point(key);
+        let start = self.points.partition_point(|&(pt, _)| pt < p);
+        let mut seen = vec![false; self.replicas];
+        let mut order = Vec::with_capacity(self.replicas);
+        for i in 0..self.points.len() {
+            let (_, r) = self.points[(start + i) % self.points.len()];
+            if !seen[r as usize] {
+                seen[r as usize] = true;
+                order.push(r as usize);
+                if order.len() == self.replicas {
+                    break;
+                }
+            }
+        }
+        order
+    }
+
+    /// Each replica's first ring point — a stable "position" label for
+    /// `fleet_stats`.
+    pub fn positions(&self) -> Vec<u64> {
+        let mut pos = vec![u64::MAX; self.replicas];
+        for &(p, r) in &self.points {
+            let r = r as usize;
+            if p < pos[r] {
+                pos[r] = p;
+            }
+        }
+        pos
+    }
+}
+
+/// Router knobs (`--fleet router`).
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Downstream replica addresses (`--fleet-replicas a:1,b:2,...`).
+    pub replicas: Vec<String>,
+    /// Ring points per replica (`--fleet-vnodes`).
+    pub vnodes: usize,
+    /// Bounded-load factor (`--fleet-load-factor`): an owner above
+    /// `load_factor × mean in-flight` sheds to the next alive successor.
+    pub load_factor: f64,
+    /// Health-probe cadence (`--fleet-health-interval-s`).
+    pub health_interval: Duration,
+    /// Per-frame payload ceiling (shared with the replica reactors).
+    pub max_frame: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            replicas: Vec::new(),
+            vnodes: 64,
+            load_factor: 1.25,
+            health_interval: Duration::from_secs(1),
+            max_frame: DEFAULT_MAX_PAYLOAD,
+        }
+    }
+}
+
+struct Router {
+    ring: HashRing,
+    members: Arc<Membership>,
+    cfg: RouterConfig,
+}
+
+/// Serve the fleet router forever on `addr`. `on_bound` receives the
+/// bound port (bind port 0 in tests). Never returns except on bind
+/// failure.
+pub fn serve(addr: &str, cfg: RouterConfig, on_bound: impl FnOnce(u16)) -> Result<()> {
+    let members = Membership::new(&cfg.replicas)?;
+    members.spawn_prober(cfg.health_interval);
+    let ring = HashRing::new(members.len(), cfg.vnodes);
+    let listener = TcpListener::bind(addr)?;
+    let port = listener.local_addr()?.port();
+    log_info!(
+        "dippm fleet router on port {port} ({} replicas, {} vnodes, load factor {})",
+        members.len(),
+        cfg.vnodes,
+        cfg.load_factor
+    );
+    on_bound(port);
+    let router = Arc::new(Router { ring, members, cfg });
+    for stream in listener.incoming() {
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                log_warn!("fleet router accept failed: {e}");
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        let router = router.clone();
+        std::thread::Builder::new()
+            .name("dippm-fleet-conn".into())
+            .spawn(move || {
+                let peer = stream
+                    .peer_addr()
+                    .map(|a| a.to_string())
+                    .unwrap_or_else(|_| "?".into());
+                if let Err(e) = handle_client(stream, &router) {
+                    log_warn!("fleet client {peer}: {e:#}");
+                }
+            })
+            .expect("spawn fleet connection thread");
+    }
+    Ok(())
+}
+
+/// One client connection: read frames, route/answer each, until EOF.
+fn handle_client(mut stream: TcpStream, router: &Router) -> Result<()> {
+    let _ = stream.set_nodelay(true);
+    // Lazily-opened downstream connections, private to this client.
+    let mut downstream: HashMap<usize, WireClient> = HashMap::new();
+    let mut rbuf: Vec<u8> = Vec::new();
+    let mut chunk = vec![0u8; 64 * 1024];
+    loop {
+        let (kind, seq, payload, consumed) =
+            match frame::decode(&rbuf, router.cfg.max_frame) {
+                Ok(Decoded::Frame {
+                    kind,
+                    seq,
+                    payload,
+                    consumed,
+                }) => (kind, seq, payload.to_vec(), consumed),
+                Ok(Decoded::Incomplete) => {
+                    let n = stream.read(&mut chunk)?;
+                    if n == 0 {
+                        return Ok(()); // clean EOF
+                    }
+                    rbuf.extend_from_slice(&chunk[..n]);
+                    continue;
+                }
+                Err(e) => {
+                    // Same discipline as the reactor: framing errors get
+                    // one seq-0 error frame, then the connection closes.
+                    let _ = stream.write_all(&frame::encode(
+                        FrameKind::Error,
+                        0,
+                        e.to_string().as_bytes(),
+                    ));
+                    return Ok(());
+                }
+            };
+        rbuf.drain(..consumed);
+        let (rkind, body) = answer(router, &mut downstream, kind, &payload);
+        if rkind == FrameKind::Error && body == SERVER_ONLY {
+            let _ = stream.write_all(&frame::encode(FrameKind::Error, 0, &body));
+            return Ok(());
+        }
+        stream.write_all(&frame::encode(rkind, seq, &body))?;
+    }
+}
+
+const SERVER_ONLY: &[u8] = b"client sent a server-only frame kind";
+
+/// Route or answer one frame; returns the reply (kind, payload).
+fn answer(
+    router: &Router,
+    downstream: &mut HashMap<usize, WireClient>,
+    kind: FrameKind,
+    payload: &[u8],
+) -> (FrameKind, Vec<u8>) {
+    match kind {
+        FrameKind::Request => route_request(router, downstream, payload),
+        // Both stats verbs answer with the router's own document (echoing
+        // the request's kind, so plain stats clients keep working): the
+        // fleet is the unit an operator monitors here, and per-replica
+        // cache stats stay one `shard_stats` hop away on each replica.
+        FrameKind::Stats | FrameKind::FleetStats => {
+            (kind, fleet_stats_json(router).into_bytes())
+        }
+        FrameKind::ShardStats | FrameKind::ManifestFetch | FrameKind::GenFetch => (
+            FrameKind::Error,
+            b"replication verbs are served by replicas, not the router".to_vec(),
+        ),
+        FrameKind::Response | FrameKind::Error | FrameKind::Manifest | FrameKind::GenData => {
+            (FrameKind::Error, SERVER_ONLY.to_vec())
+        }
+    }
+}
+
+/// Forward a predict request to the key's owner, shedding bounded-load
+/// overflow and failing over past dead replicas.
+fn route_request(
+    router: &Router,
+    downstream: &mut HashMap<usize, WireClient>,
+    payload: &[u8],
+) -> (FrameKind, Vec<u8>) {
+    // Recompute the replica's cache key: same fingerprint, same default
+    // target policy. A payload the replica would reject is rejected here
+    // with the same kind of request-level error.
+    let key = match codec::decode_request(payload) {
+        Ok((graph, target)) => {
+            CacheKey::new(CostSweep::of(&graph).fingerprint, &target.unwrap_or_default())
+        }
+        Err(e) => return (FrameKind::Error, e.into_bytes()),
+    };
+    let order = router.ring.preference(key.as_u128());
+    let members = &router.members;
+
+    // Bounded load: the mean in-flight count across alive replicas,
+    // scaled by the load factor, caps any single replica. `+1` keeps the
+    // cap above zero on an idle fleet.
+    let alive = members.alive_count().max(1);
+    let cap = ((members.total_in_flight() as f64 / alive as f64) * router.cfg.load_factor)
+        .ceil() as u64
+        + 1;
+
+    // Preference order, alive replicas only; over-cap owners drop behind
+    // under-cap successors but stay as fallbacks.
+    let mut candidates: Vec<usize> = Vec::with_capacity(order.len());
+    let mut shed: Vec<usize> = Vec::new();
+    for &i in &order {
+        if !members.replicas[i].is_alive() {
+            continue;
+        }
+        if members.replicas[i].in_flight.load(Ordering::Relaxed) < cap {
+            candidates.push(i);
+        } else {
+            shed.push(i);
+        }
+    }
+    candidates.extend(shed);
+    if candidates.is_empty() {
+        // Fail-open even past health state: probe order anyway rather
+        // than erroring while the prober lags a replica's recovery.
+        candidates = order.clone();
+    }
+
+    let owner = order[0];
+    for (attempt, &i) in candidates.iter().enumerate() {
+        let r = &members.replicas[i];
+        if attempt == 0 {
+            r.routed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            r.retried.fetch_add(1, Ordering::Relaxed);
+        }
+        if i != owner {
+            r.failed_over.fetch_add(1, Ordering::Relaxed);
+        }
+        r.in_flight.fetch_add(1, Ordering::Relaxed);
+        let result = forward_once(downstream, i, &r.addr, payload);
+        r.in_flight.fetch_sub(1, Ordering::Relaxed);
+        match result {
+            Ok(reply) => return reply,
+            Err(e) => {
+                // Transport failure: this replica is gone mid-request.
+                // Drop its pooled connection, mark it down, try the next.
+                downstream.remove(&i);
+                members.mark_down(i);
+                log_warn!("fleet forward to {} failed ({e:#}); failing over", r.addr);
+            }
+        }
+    }
+    (
+        FrameKind::Error,
+        b"no live replica for this shard".to_vec(),
+    )
+}
+
+/// One forward on the pooled downstream connection: send the original
+/// request payload under this connection's own seq, wait for its reply.
+/// `Err` = transport failure (caller fails over); a request-level error
+/// from the replica is a successful forward and flows back to the client.
+fn forward_once(
+    downstream: &mut HashMap<usize, WireClient>,
+    i: usize,
+    addr: &str,
+    payload: &[u8],
+) -> Result<(FrameKind, Vec<u8>)> {
+    if !downstream.contains_key(&i) {
+        downstream.insert(i, WireClient::connect(addr)?);
+    }
+    let client = downstream.get_mut(&i).expect("just inserted");
+    let seq = client.send_raw(FrameKind::Request, payload)?;
+    let f = client.recv_frame()?;
+    if f.seq != seq && f.seq != 0 {
+        anyhow::bail!("replica {addr} answered seq {} for request seq {seq}", f.seq);
+    }
+    Ok((f.kind, f.payload))
+}
+
+/// The `fleet_stats` document: ring layout + per-replica health and
+/// routing counters.
+fn fleet_stats_json(router: &Router) -> String {
+    let positions = router.ring.positions();
+    let mut o = JsonObj::new();
+    o.insert("ok", true);
+    o.insert("fleet", "router");
+    o.insert("replicas", router.members.len());
+    o.insert("alive", router.members.alive_count());
+    o.insert("vnodes", router.cfg.vnodes);
+    o.insert("load_factor", router.cfg.load_factor);
+    let rows: Vec<Json> = router
+        .members
+        .replicas
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let mut row = JsonObj::new();
+            row.insert("addr", r.addr.as_str());
+            row.insert("alive", r.is_alive());
+            // First ring point, as a stable position label (hex keeps
+            // the u64 exact; JSON numbers are f64).
+            row.insert("ring_position", format!("{:016x}", positions[i]));
+            row.insert("routed", r.routed.load(Ordering::Relaxed) as usize);
+            row.insert("retried", r.retried.load(Ordering::Relaxed) as usize);
+            row.insert("failed_over", r.failed_over.load(Ordering::Relaxed) as usize);
+            row.insert("in_flight", r.in_flight.load(Ordering::Relaxed) as usize);
+            Json::Obj(row)
+        })
+        .collect();
+    o.insert("replica_stats", Json::Arr(rows));
+    Json::Obj(o).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic-but-realistic keys: avalanche-mixed like CacheKey.
+    fn keys(n: u64) -> impl Iterator<Item = u128> {
+        (0..n).map(|i| {
+            let lo = splitmix64(i ^ 0xA5A5_0001);
+            let hi = splitmix64(i ^ 0x5A5A_0002);
+            ((hi as u128) << 64) | lo as u128
+        })
+    }
+
+    #[test]
+    fn ring_balance_is_bounded() {
+        // 10k synthetic fingerprints over 8 replicas × 128 vnodes: the
+        // fullest shard stays within 2x the emptiest. Deterministic —
+        // the ring and the keys both come from splitmix64 streams.
+        let ring = HashRing::new(8, 128);
+        let mut owned = vec![0u64; 8];
+        for k in keys(10_000) {
+            owned[ring.owner(k)] += 1;
+        }
+        let max = *owned.iter().max().unwrap();
+        let min = *owned.iter().min().unwrap();
+        assert!(min > 0, "a replica owns nothing: {owned:?}");
+        let ratio = max as f64 / min as f64;
+        assert!(ratio <= 2.0, "load ratio {ratio:.2} too lopsided: {owned:?}");
+    }
+
+    #[test]
+    fn ring_join_moves_few_keys() {
+        // Adding a 10th replica to a 9-replica ring must remap roughly
+        // 1/10 of keys — and only *to* the joiner, never between
+        // incumbents (the whole point of consistent hashing).
+        let before = HashRing::new(9, 128);
+        let after = HashRing::new(10, 128);
+        let total = 10_000u64;
+        let mut moved = 0u64;
+        for k in keys(total) {
+            let a = before.owner(k);
+            let b = after.owner(k);
+            if a != b {
+                moved += 1;
+                assert_eq!(b, 9, "key moved between incumbents: {a} -> {b}");
+            }
+        }
+        let frac = moved as f64 / total as f64;
+        assert!(
+            frac > 0.02 && frac <= 2.0 / 10.0,
+            "join remapped {frac:.3} of keys (want ~1/10)"
+        );
+    }
+
+    #[test]
+    fn ring_leave_moves_only_the_leavers_keys() {
+        // A dead replica's keys spill to its clockwise successors; every
+        // other key keeps its owner. Failover uses preference order, so
+        // "the ring with replica 3 dead" = skip 3 in preference.
+        let ring = HashRing::new(6, 128);
+        let dead = 3usize;
+        let mut spilled = 0u64;
+        let total = 10_000u64;
+        for k in keys(total) {
+            let order = ring.preference(k);
+            let with_dead: usize = *order.iter().find(|&&r| r != dead).unwrap();
+            if order[0] == dead {
+                spilled += 1;
+            } else {
+                assert_eq!(order[0], with_dead, "live key changed owner");
+            }
+        }
+        let frac = spilled as f64 / total as f64;
+        assert!(
+            frac > 0.05 && frac <= 2.0 / 6.0,
+            "leave spilled {frac:.3} of keys (want ~1/6)"
+        );
+    }
+
+    #[test]
+    fn preference_is_a_permutation() {
+        let ring = HashRing::new(5, 32);
+        for k in keys(100) {
+            let mut p = ring.preference(k);
+            assert_eq!(p[0], ring.owner(k));
+            p.sort_unstable();
+            assert_eq!(p, vec![0, 1, 2, 3, 4]);
+        }
+    }
+
+    #[test]
+    fn ring_is_deterministic_across_builds() {
+        let a = HashRing::new(4, 64);
+        let b = HashRing::new(4, 64);
+        for k in keys(500) {
+            assert_eq!(a.owner(k), b.owner(k));
+        }
+        assert_eq!(a.positions(), b.positions());
+    }
+}

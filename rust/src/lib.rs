@@ -24,6 +24,7 @@ pub mod cache;
 pub mod coordinator;
 pub mod dataset;
 pub mod features;
+pub mod fleet;
 pub mod frontends;
 pub mod ir;
 pub mod mig;

@@ -19,6 +19,7 @@ use anyhow::{anyhow, Context, Result};
 
 use dippm::cache::{CacheConfig, Target};
 use dippm::coordinator::{Coordinator, CoordinatorOptions, ServeOptions};
+use dippm::fleet::RouterConfig;
 use dippm::wire::ReactorConfig;
 use dippm::dataset::{io as ds_io, Dataset};
 use dippm::frontends::{self, Framework};
@@ -56,9 +57,16 @@ COMMANDS
                  [--cache-file <dir>] [--cache-snapshot-every-s N]
                  [--cache-compact-bytes 67108864] [--cache-compact-ratio 0.5]
                  [--target-device a100[:MIG]]   (MIG: 1g.5gb|2g.10gb|3g.20gb|7g.40gb)
+                 [--fleet router|replica] [--fleet-replicas host:port,...]
+                 [--fleet-vnodes 64] [--fleet-load-factor 1.25]
+                 [--fleet-health-interval-s 1] [--fleet-warm-from host:port]
                  (--wire binary serves the length-prefixed binary frame
                   protocol on a nonblocking reactor; both = JSON on --addr
                   plus binary on --wire-addr, default --addr's port + 1)
+                 (--fleet router consistent-hashes predict requests across
+                  --fleet-replicas with bounded-load balancing + failover;
+                  --fleet replica with --fleet-warm-from fetches a peer's
+                  manifest + generation files before serving)
   cache-stats    [--addr 127.0.0.1:7401]
   mig            --model <file> [--framework auto] [--checkpoint <file>]
                  [--target-device a100[:MIG]]
@@ -76,6 +84,8 @@ fn main() {
         "cache-shards", "cache-ttl-s", "cache-file", "cache-snapshot-every-s",
         "cache-compact-bytes", "cache-compact-ratio", "target-device",
         "wire", "wire-addr", "max-connections", "idle-timeout-s", "event-loops",
+        "fleet", "fleet-replicas", "fleet-vnodes", "fleet-load-factor",
+        "fleet-health-interval-s", "fleet-warm-from",
     ]) {
         Ok(a) => a,
         Err(e) => {
@@ -339,8 +349,44 @@ fn cmd_predict(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    match args.get("fleet") {
+        Some("router") => return cmd_fleet_router(args),
+        // A replica is a normal coordinator; the flag exists for operator
+        // clarity plus the warm-from hook below.
+        Some("replica") | None => {}
+        Some(other) => {
+            return Err(anyhow!("unknown --fleet mode {other:?} (expected router|replica)"))
+        }
+    }
     let opts = coordinator_options(args)?;
     let coord = Arc::new(start_coordinator(args, opts.clone())?);
+    // Manifest-based warm start: fetch a peer's committed store into a
+    // scratch directory, load it (counts as warm_start_entries), discard
+    // the scratch. Runs before the listeners bind, so a client that can
+    // reach this replica always sees the warmed cache.
+    if let Some(peer) = args.get("fleet-warm-from") {
+        let scratch = std::env::temp_dir().join(format!(
+            "dippm-fleet-warm-{}-{}",
+            std::process::id(),
+            args.get_or("addr", "default")
+                .replace([':', '/', '\\'], "_")
+        ));
+        let _ = std::fs::remove_dir_all(&scratch);
+        let scratch_str = scratch.to_string_lossy().into_owned();
+        let result = dippm::fleet::replicate_from_peer(peer, &scratch).and_then(|report| {
+            let load = coord.load_cache(Some(scratch_str.as_str()))?;
+            println!(
+                "warm-started {} entries from fleet peer {peer} (generation {}, {} bytes shipped)",
+                load.entries, report.generation, report.bytes
+            );
+            Ok(())
+        });
+        let _ = std::fs::remove_dir_all(&scratch);
+        // Fail-open: a dead peer must not keep the replica from serving.
+        if let Err(e) = result {
+            eprintln!("fleet warm start from {peer} failed ({e:#}); serving cold");
+        }
+    }
     let addr = args.get_or("addr", "127.0.0.1:7401");
     let cache_desc = if opts.cache.enabled {
         let persist_desc = match (&opts.cache.snapshot_path, opts.cache.snapshot_every) {
@@ -421,6 +467,38 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         other => Err(anyhow!("unknown --wire mode {other:?} (expected json|binary|both)")),
     }
+}
+
+/// `serve --fleet router`: no coordinator, no backend — just the
+/// consistent-hash forwarding proxy over `--fleet-replicas`.
+fn cmd_fleet_router(args: &Args) -> Result<()> {
+    let replicas: Vec<String> = args
+        .get("fleet-replicas")
+        .ok_or(anyhow!(
+            "--fleet-replicas host:port[,host:port...] required for --fleet router"
+        ))?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let defaults = RouterConfig::default();
+    let cfg = RouterConfig {
+        vnodes: args.get_usize("fleet-vnodes", defaults.vnodes).max(1),
+        load_factor: args.get_f64("fleet-load-factor", defaults.load_factor).max(1.0),
+        health_interval: seconds_arg(args, "fleet-health-interval-s")?
+            .unwrap_or(defaults.health_interval),
+        replicas,
+        ..defaults
+    };
+    let addr = args.get_or("addr", "127.0.0.1:7401");
+    let n = cfg.replicas.len();
+    dippm::fleet::router::serve(addr, cfg, move |port| {
+        println!(
+            "listening on port {port}; protocol: fleet router (binary wire frames, \
+             {n} replicas)"
+        );
+        println!("query routing counters with the fleet_stats wire verb");
+    })
 }
 
 /// Default binary-listener address for `--wire both`: the JSON listener's

@@ -24,12 +24,18 @@ pub struct WireClient {
 impl WireClient {
     pub fn connect(addr: &str) -> Result<WireClient> {
         let stream = TcpStream::connect(addr)?;
+        Ok(WireClient::from_stream(stream))
+    }
+
+    /// Wrap an already-connected stream (callers that need connect/read
+    /// timeouts — the fleet health prober — set them up first).
+    pub fn from_stream(stream: TcpStream) -> WireClient {
         let _ = stream.set_nodelay(true);
-        Ok(WireClient {
+        WireClient {
             stream,
             rbuf: Vec::new(),
             next_seq: 1,
-        })
+        }
     }
 
     fn alloc_seq(&mut self) -> u32 {
@@ -42,9 +48,15 @@ impl WireClient {
     /// Queue one predict request without waiting for the reply; returns
     /// the sequence id the reply will carry. Call repeatedly to pipeline.
     pub fn send_predict(&mut self, graph: &Graph, target: Option<&str>) -> Result<u32> {
-        let seq = self.alloc_seq();
         let payload = codec::encode_request(graph, target);
-        let bytes = frame::encode(FrameKind::Request, seq, &payload);
+        self.send_raw(FrameKind::Request, &payload)
+    }
+
+    /// Queue one already-encoded payload under a fresh sequence id — the
+    /// fleet router forwards request payloads verbatim through this.
+    pub fn send_raw(&mut self, kind: FrameKind, payload: &[u8]) -> Result<u32> {
+        let seq = self.alloc_seq();
+        let bytes = frame::encode(kind, seq, payload);
         self.stream.write_all(&bytes)?;
         Ok(seq)
     }
@@ -120,16 +132,56 @@ impl WireClient {
         reply.map_err(|e| anyhow!(e))
     }
 
-    /// Fetch the server's `cache_stats` JSON document.
-    pub fn stats(&mut self) -> Result<String> {
+    /// One blocking round-trip of an admin/replication verb: send `kind`
+    /// with `payload`, expect a `want` reply (error frames surface as
+    /// `Err`).
+    fn call(&mut self, kind: FrameKind, payload: &[u8], want: FrameKind) -> Result<Vec<u8>> {
         let seq = self.alloc_seq();
-        let bytes = frame::encode(FrameKind::Stats, seq, &[]);
+        let bytes = frame::encode(kind, seq, payload);
         self.stream.write_all(&bytes)?;
         let f = self.recv_frame()?;
-        match f.kind {
-            FrameKind::Stats => Ok(String::from_utf8_lossy(&f.payload).into_owned()),
-            FrameKind::Error => bail!("{}", String::from_utf8_lossy(&f.payload)),
-            other => bail!("unexpected frame kind {other:?} in stats reply"),
+        if f.kind == want {
+            Ok(f.payload)
+        } else if f.kind == FrameKind::Error {
+            bail!("{}", String::from_utf8_lossy(&f.payload))
+        } else {
+            bail!("unexpected frame kind {:?} in {kind:?} reply", f.kind)
         }
+    }
+
+    /// Fetch the server's `cache_stats` JSON document.
+    pub fn stats(&mut self) -> Result<String> {
+        let body = self.call(FrameKind::Stats, &[], FrameKind::Stats)?;
+        Ok(String::from_utf8_lossy(&body).into_owned())
+    }
+
+    /// Fetch the replica's `shard_stats` JSON document (per-shard
+    /// owned-key counts + the store generation it would replicate).
+    pub fn shard_stats(&mut self) -> Result<String> {
+        let body = self.call(FrameKind::ShardStats, &[], FrameKind::ShardStats)?;
+        Ok(String::from_utf8_lossy(&body).into_owned())
+    }
+
+    /// Fetch a fleet router's `fleet_stats` JSON document (per-replica
+    /// routed / retried / failed-over counters + ring layout). A plain
+    /// replica answers this with a request-level error.
+    pub fn fleet_stats(&mut self) -> Result<String> {
+        let body = self.call(FrameKind::FleetStats, &[], FrameKind::FleetStats)?;
+        Ok(String::from_utf8_lossy(&body).into_owned())
+    }
+
+    /// Fetch the peer's committed persistence-store `MANIFEST` bytes
+    /// (fleet cache replication).
+    pub fn fetch_manifest(&mut self) -> Result<Vec<u8>> {
+        self.call(FrameKind::ManifestFetch, &[], FrameKind::Manifest)
+    }
+
+    /// Fetch one generation shard file's raw bytes from the peer's store.
+    pub fn fetch_gen_shard(&mut self, generation: u64, shard: u32) -> Result<Vec<u8>> {
+        self.call(
+            FrameKind::GenFetch,
+            &codec::encode_gen_fetch(generation, shard),
+            FrameKind::GenData,
+        )
     }
 }

@@ -317,6 +317,29 @@ pub fn decode_prediction(payload: &[u8]) -> Result<Prediction, String> {
     })
 }
 
+/// Encode a `GenFetch` payload: generation id (u64 LE) + shard index
+/// (u32 LE). The reply is a `GenData` frame carrying the raw generation
+/// shard file, verified end-to-end against the peer's manifest record.
+pub fn encode_gen_fetch(generation: u64, shard: u32) -> Vec<u8> {
+    let mut out = Vec::with_capacity(12);
+    out.extend_from_slice(&generation.to_le_bytes());
+    out.extend_from_slice(&shard.to_le_bytes());
+    out
+}
+
+/// Decode a `GenFetch` payload into `(generation, shard)`.
+pub fn decode_gen_fetch(payload: &[u8]) -> Result<(u64, u32), String> {
+    if payload.len() != 12 {
+        return Err(format!(
+            "gen-fetch payload must be 12 bytes, got {}",
+            payload.len()
+        ));
+    }
+    let generation = u64::from_le_bytes(payload[..8].try_into().unwrap());
+    let shard = u32::from_le_bytes(payload[8..].try_into().unwrap());
+    Ok((generation, shard))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

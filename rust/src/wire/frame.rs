@@ -15,6 +15,8 @@
 //!      0     2  magic       0xD1 0x77 ("DIPPM wire")
 //!      2     1  version     1
 //!      3     1  kind        1=request 2=response 3=error 4=stats
+//!                           5=manifest-fetch 6=manifest 7=gen-fetch
+//!                           8=gen-data 9=shard-stats 10=fleet-stats
 //!      4     4  seq         echoed verbatim in the reply
 //!      8     4  len         payload length in bytes
 //!     12     8  crc         checksum(payload)
@@ -59,6 +61,30 @@ pub enum FrameKind {
     /// Client → server with an empty payload: stats request. Server →
     /// client: the `cache_stats` JSON document as the payload.
     Stats = 4,
+    /// Client → server with an empty payload: fetch the replica's
+    /// persistence-store manifest (fleet cache replication). Answered with
+    /// a [`FrameKind::Manifest`] frame.
+    ManifestFetch = 5,
+    /// Server → client: the raw `MANIFEST` file bytes (self-checksummed —
+    /// see `cache::persist::decode_manifest`).
+    Manifest = 6,
+    /// Client → server: fetch one generation shard file. Payload: the
+    /// generation id (u64 LE) followed by the shard index (u32 LE).
+    /// Answered with a [`FrameKind::GenData`] frame.
+    GenFetch = 7,
+    /// Server → client: the raw `gen-<G>-shard-<S>.bin` bytes (internally
+    /// checksummed, and verifiable against the manifest's per-shard
+    /// `len`/`digest` record).
+    GenData = 8,
+    /// Client → server with an empty payload: per-shard cache ownership
+    /// (owned-key count per LRU shard + store generation). Server →
+    /// client: a JSON document as the payload.
+    ShardStats = 9,
+    /// Client → router with an empty payload: router-side per-replica
+    /// counters (routed / retried / failed-over, ring positions, health).
+    /// Router → client: a JSON document. A plain replica answers with a
+    /// request-level error — only routers serve this verb.
+    FleetStats = 10,
 }
 
 impl FrameKind {
@@ -68,6 +94,12 @@ impl FrameKind {
             2 => Some(FrameKind::Response),
             3 => Some(FrameKind::Error),
             4 => Some(FrameKind::Stats),
+            5 => Some(FrameKind::ManifestFetch),
+            6 => Some(FrameKind::Manifest),
+            7 => Some(FrameKind::GenFetch),
+            8 => Some(FrameKind::GenData),
+            9 => Some(FrameKind::ShardStats),
+            10 => Some(FrameKind::FleetStats),
             _ => None,
         }
     }
@@ -218,6 +250,12 @@ mod tests {
             FrameKind::Response,
             FrameKind::Error,
             FrameKind::Stats,
+            FrameKind::ManifestFetch,
+            FrameKind::Manifest,
+            FrameKind::GenFetch,
+            FrameKind::GenData,
+            FrameKind::ShardStats,
+            FrameKind::FleetStats,
         ] {
             let payload = vec![7u8; 33];
             let bytes = encode(kind, 42, &payload);

@@ -446,11 +446,40 @@ fn dispatch(kind: FrameKind, payload: &[u8], coordinator: &Coordinator) -> Dispa
             let stats = crate::coordinator::protocol::cache_stats_response(&coordinator.metrics());
             Dispatch::Reply(FrameKind::Stats, stats.into_bytes())
         }
-        // Response/Error frames flow server → client only.
-        FrameKind::Response | FrameKind::Error => Dispatch::Fatal(format!(
-            "client sent a server-only frame kind ({})",
-            kind.as_u8()
-        )),
+        // Fleet replication verbs: ship the persistence store's committed
+        // manifest and generation shard files to a warm-starting peer.
+        // Errors (no store, no committed generation, deleted stale file)
+        // are request-level — the connection lives on.
+        FrameKind::ManifestFetch => match coordinator.manifest_payload() {
+            Ok(bytes) => Dispatch::Reply(FrameKind::Manifest, bytes),
+            Err(e) => Dispatch::RequestError(format!("{e:#}")),
+        },
+        FrameKind::GenFetch => match codec::decode_gen_fetch(payload) {
+            Err(e) => Dispatch::RequestError(e),
+            Ok((generation, shard)) => {
+                match coordinator.gen_shard_payload(generation, shard as usize) {
+                    Ok(bytes) => Dispatch::Reply(FrameKind::GenData, bytes),
+                    Err(e) => Dispatch::RequestError(format!("{e:#}")),
+                }
+            }
+        },
+        FrameKind::ShardStats => {
+            let stats = crate::coordinator::protocol::shard_stats_response(&coordinator.metrics());
+            Dispatch::Reply(FrameKind::ShardStats, stats.into_bytes())
+        }
+        // Only a fleet router carries per-replica routing counters; on a
+        // plain replica the verb is a request-level error so a probing
+        // client can tell the two apart without dropping the connection.
+        FrameKind::FleetStats => Dispatch::RequestError(
+            "fleet_stats is served by a fleet router, not a coordinator replica".into(),
+        ),
+        // Response/Error/Manifest/GenData frames flow server → client only.
+        FrameKind::Response | FrameKind::Error | FrameKind::Manifest | FrameKind::GenData => {
+            Dispatch::Fatal(format!(
+                "client sent a server-only frame kind ({})",
+                kind.as_u8()
+            ))
+        }
     }
 }
 

@@ -1,0 +1,365 @@
+//! Integration: the sharded coordinator fleet — consistent-hash routing
+//! through the fleet router must be bit-identical to a single coordinator,
+//! a killed replica's shard must fail over to a live peer with no
+//! client-visible error, and a cold replica must warm-start from a peer's
+//! committed manifest + generation files (`warm_start_entries > 0`,
+//! zero backend recomputation).
+//!
+//! The failover and CLI warm-start tests drive real `dippm serve` child
+//! processes (the only way to kill a replica mid-stream); everything else
+//! runs hermetically in-process on `SimBackend`.
+//!
+//! Set `DIPPM_FLEET_TEST_DIR` to root the store directories somewhere
+//! persistent (the CI `fleet-smoke` job points it at the workspace and
+//! uploads the directories on failure); cleanup happens only on success.
+
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use dippm::cache::CacheConfig;
+use dippm::coordinator::{Coordinator, CoordinatorOptions, Prediction};
+use dippm::fleet::replicate_from_peer;
+use dippm::fleet::router::{self, RouterConfig};
+use dippm::ir::Graph;
+use dippm::modelgen::{Family, ALL_FAMILIES};
+use dippm::util::json::Json;
+use dippm::wire::{reactor, ReactorConfig, WireClient};
+
+static DIR_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Fresh store directory under `DIPPM_FLEET_TEST_DIR` (CI artifact root)
+/// or the system temp dir.
+fn fleet_dir(name: &str) -> PathBuf {
+    let root = std::env::var("DIPPM_FLEET_TEST_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| std::env::temp_dir());
+    let _ = std::fs::create_dir_all(&root);
+    let dir = root.join(format!(
+        "dippm-fleet-{}-{name}-{}",
+        std::process::id(),
+        DIR_COUNTER.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn sim_coordinator() -> Arc<Coordinator> {
+    Arc::new(Coordinator::start_sim(CoordinatorOptions::default()).unwrap())
+}
+
+/// A coordinator persisting its cache to `dir` — the replication source.
+fn sim_coordinator_with_store(dir: &Path) -> Arc<Coordinator> {
+    let opts = CoordinatorOptions {
+        cache: CacheConfig {
+            snapshot_path: Some(dir.to_path_buf()),
+            ..CacheConfig::default()
+        },
+        ..CoordinatorOptions::default()
+    };
+    Arc::new(Coordinator::start_sim(opts).unwrap())
+}
+
+/// Start the binary reactor on an ephemeral port; returns its address.
+fn start_reactor(coord: Arc<Coordinator>) -> String {
+    let (port_tx, port_rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        reactor::serve(coord, "127.0.0.1:0", ReactorConfig::default(), move |p| {
+            let _ = port_tx.send(p);
+        })
+        .unwrap();
+    });
+    format!("127.0.0.1:{}", port_rx.recv().unwrap())
+}
+
+/// Start the fleet router over `replicas` on an ephemeral port. A fast
+/// probe cadence keeps the kill-one test's health convergence quick.
+fn start_router(replicas: Vec<String>) -> String {
+    let (port_tx, port_rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let cfg = RouterConfig {
+            replicas,
+            health_interval: Duration::from_millis(200),
+            ..RouterConfig::default()
+        };
+        router::serve("127.0.0.1:0", cfg, move |p| {
+            let _ = port_tx.send(p);
+        })
+        .unwrap();
+    });
+    format!("127.0.0.1:{}", port_rx.recv().unwrap())
+}
+
+/// A real `dippm serve` replica process — killable, unlike an in-process
+/// reactor thread. The bound port is scraped from the startup banner.
+struct ChildReplica {
+    child: Child,
+    addr: String,
+}
+
+impl ChildReplica {
+    fn spawn(extra: &[&str]) -> ChildReplica {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_dippm"))
+            .args([
+                "serve",
+                "--backend",
+                "sim",
+                "--wire",
+                "binary",
+                "--addr",
+                "127.0.0.1:0",
+                "--fleet",
+                "replica",
+            ])
+            .args(extra)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .expect("spawn dippm replica");
+        let stdout = child.stdout.take().expect("piped stdout");
+        let mut lines = BufReader::new(stdout).lines();
+        let addr = loop {
+            match lines.next() {
+                Some(Ok(line)) => {
+                    if let Some(rest) = line.strip_prefix("listening on port ") {
+                        let port: String =
+                            rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+                        break format!("127.0.0.1:{port}");
+                    }
+                }
+                _ => panic!("replica exited before printing its port"),
+            }
+        };
+        // Keep draining the pipe so the child never blocks on a full one.
+        std::thread::spawn(move || {
+            for _ in lines {}
+        });
+        ChildReplica { child, addr }
+    }
+
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for ChildReplica {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// A deterministic request stream touching every model family.
+fn request_stream(seeds: std::ops::Range<usize>) -> Vec<Graph> {
+    ALL_FAMILIES
+        .iter()
+        .flat_map(|f| seeds.clone().map(move |s| f.generate(s)))
+        .collect()
+}
+
+// -------------------------------------------------------------- routing --
+
+/// Acceptance: three SimBackend replicas behind the router serve
+/// bit-identical predictions to a single coordinator for the same
+/// request stream — and the ring actually spreads that stream.
+#[test]
+fn fleet_parity_with_single_coordinator() {
+    let reference = sim_coordinator();
+    let replicas: Vec<String> = (0..3).map(|_| start_reactor(sim_coordinator())).collect();
+    let router_addr = start_router(replicas);
+    let mut client = WireClient::connect(&router_addr).unwrap();
+
+    let graphs = request_stream(0..3);
+    for g in &graphs {
+        let want = reference.predict_to(g.clone(), None).unwrap();
+        let got = client.predict_graph(g).unwrap();
+        assert_eq!(got, want, "prediction diverged through the router");
+    }
+
+    let stats = Json::parse(&client.fleet_stats().unwrap()).unwrap();
+    assert_eq!(stats.path(&["ok"]).as_bool(), Some(true));
+    assert_eq!(stats.path(&["alive"]).as_usize(), Some(3));
+    let rows = stats.path(&["replica_stats"]).as_arr().unwrap();
+    let routed: usize = rows
+        .iter()
+        .map(|r| r.path(&["routed"]).as_usize().unwrap())
+        .sum();
+    assert_eq!(routed, graphs.len(), "every request routes exactly once");
+    let busy = rows
+        .iter()
+        .filter(|r| r.path(&["routed"]).as_usize().unwrap() > 0)
+        .count();
+    assert!(busy >= 2, "all traffic landed on one replica: {stats}");
+    // A healthy sequential stream never fails over.
+    let failed: usize = rows
+        .iter()
+        .map(|r| r.path(&["failed_over"]).as_usize().unwrap())
+        .sum();
+    assert_eq!(failed, 0, "spurious failover on a healthy fleet: {stats}");
+}
+
+/// The stats/replication verbs answer at the right layer: replicas serve
+/// `shard_stats` + manifest fetches, the router serves `fleet_stats`
+/// (echoing the plain `stats` verb too), and each side rejects the
+/// other's verbs with a request-level error, not a dropped connection.
+#[test]
+fn stats_verbs_route_to_the_right_layer() {
+    let replica = start_reactor(sim_coordinator());
+    let router_addr = start_router(vec![replica.clone()]);
+
+    // Warm one entry so the shard document has something to count.
+    let mut rc = WireClient::connect(&replica).unwrap();
+    rc.predict_graph(&Family::ResNet.generate(0)).unwrap();
+
+    let shard = Json::parse(&rc.shard_stats().unwrap()).unwrap();
+    assert_eq!(shard.path(&["ok"]).as_bool(), Some(true));
+    let owned: usize = shard
+        .path(&["cache_shard_keys"])
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|n| n.as_usize().unwrap())
+        .sum();
+    assert_eq!(Some(owned), shard.path(&["entries"]).as_usize());
+    // Per-shard ownership also rides along in the full stats document.
+    let full = Json::parse(&rc.stats().unwrap()).unwrap();
+    assert!(full.path(&["cache_shard_keys"]).as_arr().is_some());
+
+    // A plain replica does not serve fleet_stats...
+    let err = rc.fleet_stats().unwrap_err().to_string();
+    assert!(err.contains("fleet router"), "unexpected error: {err}");
+    // ...and one without a store has no manifest to replicate.
+    let err = rc.fetch_manifest().unwrap_err().to_string();
+    assert!(err.contains("cache store"), "unexpected error: {err}");
+
+    // The router answers both stats verbs with the fleet document...
+    let mut fc = WireClient::connect(&router_addr).unwrap();
+    for doc in [fc.fleet_stats().unwrap(), fc.stats().unwrap()] {
+        let v = Json::parse(&doc).unwrap();
+        assert_eq!(v.path(&["fleet"]).as_str(), Some("router"));
+        assert_eq!(v.path(&["replicas"]).as_usize(), Some(1));
+        let row = &v.path(&["replica_stats"]).as_arr().unwrap()[0];
+        assert_eq!(row.path(&["addr"]).as_str(), Some(replica.as_str()));
+        assert_eq!(row.path(&["ring_position"]).as_str().map(str::len), Some(16));
+    }
+    // ...and points replication verbs at the replicas.
+    let err = fc.shard_stats().unwrap_err().to_string();
+    assert!(err.contains("replicas"), "unexpected error: {err}");
+}
+
+// ------------------------------------------------------------- failover --
+
+/// Acceptance: kill one of three replica processes mid-stream; rerunning
+/// the same stream through the same client connection sees zero errors
+/// (the dead shard fails over), identical predictions, and `fleet_stats`
+/// records the failovers + the death.
+#[test]
+fn killed_replica_fails_over_without_client_errors() {
+    let children: Vec<ChildReplica> = (0..3).map(|_| ChildReplica::spawn(&[])).collect();
+    let router_addr = start_router(children.iter().map(|c| c.addr.clone()).collect());
+    let mut client = WireClient::connect(&router_addr).unwrap();
+
+    let graphs = request_stream(0..2);
+    let first: Vec<Prediction> = graphs
+        .iter()
+        .map(|g| client.predict_graph(g).unwrap())
+        .collect();
+
+    let mut children = children;
+    let dead_addr = children[0].addr.clone();
+    children[0].kill();
+
+    for (g, want) in graphs.iter().zip(&first) {
+        let got = client
+            .predict_graph(g)
+            .expect("failover must hide the dead replica from clients");
+        assert_eq!(&got, want, "prediction changed after failover");
+    }
+
+    // Let the health prober catch the corpse even if no request did.
+    std::thread::sleep(Duration::from_millis(800));
+    let stats = Json::parse(&client.fleet_stats().unwrap()).unwrap();
+    let rows = stats.path(&["replica_stats"]).as_arr().unwrap();
+    let dead = rows
+        .iter()
+        .find(|r| r.path(&["addr"]).as_str() == Some(dead_addr.as_str()))
+        .expect("dead replica still listed");
+    assert_eq!(dead.path(&["alive"]).as_bool(), Some(false), "{stats}");
+    assert_eq!(stats.path(&["alive"]).as_usize(), Some(2), "{stats}");
+    let failed_over: usize = rows
+        .iter()
+        .map(|r| r.path(&["failed_over"]).as_usize().unwrap())
+        .sum();
+    assert!(failed_over > 0, "no request recorded a failover: {stats}");
+}
+
+// ----------------------------------------------------------- warm start --
+
+/// Acceptance: a cold coordinator warm-starts from a peer's committed
+/// manifest over the wire — `warm_start_entries > 0` and every imported
+/// prediction is served without a single backend batch (no recompute).
+#[test]
+fn replica_warm_starts_from_peer_manifest() {
+    let src_store = fleet_dir("warm-src");
+    let scratch = fleet_dir("warm-scratch");
+    let source = sim_coordinator_with_store(&src_store);
+
+    let graphs: Vec<Graph> = ALL_FAMILIES.iter().map(|f| f.generate(7)).collect();
+    let want: Vec<Prediction> = graphs
+        .iter()
+        .map(|g| source.predict_to(g.clone(), None).unwrap())
+        .collect();
+    // Replication ships committed generations only: compact first.
+    let compact = source.compact_cache().unwrap();
+    assert_eq!(compact.entries, graphs.len());
+    let src_addr = start_reactor(source);
+
+    let report = replicate_from_peer(&src_addr, &scratch).unwrap();
+    assert_eq!(report.generation, compact.generation);
+    assert!(report.shards_written > 0 && report.bytes > 0);
+
+    let warm = sim_coordinator();
+    let load = warm.load_cache(Some(scratch.to_str().unwrap())).unwrap();
+    assert_eq!(load.entries, graphs.len());
+    assert_eq!(warm.metrics().warm_start_entries as usize, graphs.len());
+
+    for (g, w) in graphs.iter().zip(&want) {
+        assert_eq!(&warm.predict_to(g.clone(), None).unwrap(), w);
+    }
+    let m = warm.metrics();
+    assert_eq!(m.batches, 0, "warm replica recomputed imported entries");
+    assert!(m.cache_hits as usize >= graphs.len());
+
+    let _ = std::fs::remove_dir_all(&src_store);
+    let _ = std::fs::remove_dir_all(&scratch);
+}
+
+/// The CLI path end-to-end: `serve --fleet replica --fleet-warm-from`
+/// fetches the peer's store before binding, reports the warm start in
+/// `cache_stats`, and serves the peer's predictions as pure cache hits.
+#[test]
+fn cli_replica_warm_starts_over_the_wire() {
+    let src_store = fleet_dir("cli-warm-src");
+    let source = sim_coordinator_with_store(&src_store);
+    let g = Family::MobileNet.generate(3);
+    let want = source.predict_to(g.clone(), None).unwrap();
+    source.compact_cache().unwrap();
+    let src_addr = start_reactor(source);
+
+    let mut child = ChildReplica::spawn(&["--fleet-warm-from", &src_addr]);
+    let mut client = WireClient::connect(&child.addr).unwrap();
+    let stats = Json::parse(&client.stats().unwrap()).unwrap();
+    let warm = stats.path(&["warm_start_entries"]).as_usize().unwrap();
+    assert!(warm > 0, "child replica served cold: {stats}");
+
+    assert_eq!(client.predict_graph(&g).unwrap(), want);
+    let stats = Json::parse(&client.stats().unwrap()).unwrap();
+    assert_eq!(stats.path(&["batches"]).as_usize(), Some(0), "{stats}");
+    assert!(stats.path(&["hits"]).as_usize().unwrap() >= 1, "{stats}");
+
+    child.kill();
+    let _ = std::fs::remove_dir_all(&src_store);
+}
