@@ -49,6 +49,7 @@ fn pred(i: u64) -> CacheValue {
         memory_mb: 1000.0 + (i % 4096) as f64,
         energy_j: 0.1 + (i % 31) as f64 * 0.01,
         mig_profile: if i % 3 == 0 { Some("2g.10gb".into()) } else { None },
+        degraded: false,
     })
 }
 

@@ -290,6 +290,11 @@ fn main() {
         row.insert("queue_depth_hwm", m.queue_depth_hwm as usize);
         row.insert("ring_depth_hwm", m.ring_depth_hwm as usize);
         row.insert("queue_residency_max_us", m.queue_residency_max_us as usize);
+        // No-fault baseline hygiene: with no fault plan armed, nothing may
+        // be shed, panic or serve degraded (CI gates these at zero).
+        row.insert("deadline_expired", m.deadline_expired as usize);
+        row.insert("degraded_served", m.degraded_served as usize);
+        row.insert("backend_panics", m.backend_panics as usize);
         json_rows.push(Json::Obj(row));
     }
     t.print();

@@ -1100,6 +1100,12 @@ impl<V: SnapshotValue + Clone> JournalStore<V> {
         self.check_alive()?;
         let _io = self.io.lock().unwrap();
         self.crash_gate("append:start")?;
+        if crate::util::faults::fire("disk:write") {
+            // Chaos-harness twin of the crash gates above: a *failed*
+            // (not fatal) journal write. The flusher reports it, marks
+            // the delta stream incomplete, and rebases on the next flush.
+            bail!("injected journal write failure (fault plan disk:write)");
+        }
         let generation = self.generation.load(Ordering::Relaxed);
         // Build per-shard record batches; remember each batch's last
         // record length so the torn-record injection can cut mid-record.

@@ -32,7 +32,7 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -88,6 +88,29 @@ pub fn linger_slice(max_wait: Duration) -> Duration {
     (max_wait / 8).max(Duration::from_micros(50))
 }
 
+/// Recover the guard from a possibly-poisoned lock. A worker that panics
+/// mid-predict (a backend bug, or an injected chaos fault) poisons any
+/// mutex it held; every queue/ring invariant here holds across a panic at
+/// any wait point (the state is a `VecDeque` plus flags, mutated only in
+/// non-panicking sections), so taking the inner value is sound — and the
+/// alternative is one crashed worker wedging the former ring for every
+/// other thread.
+pub(crate) fn lock_recover<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn wait_recover<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(|e| e.into_inner())
+}
+
+fn wait_timeout_recover<'a, T>(
+    cv: &Condvar,
+    g: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(g, dur).unwrap_or_else(|e| e.into_inner())
+}
+
 /// One queued prediction request, carrying its one-pass analysis so
 /// nothing downstream re-traverses the graph.
 pub(crate) struct Job {
@@ -96,7 +119,18 @@ pub(crate) struct Job {
     pub target: Target,
     pub key: Option<CacheKey>,
     pub enqueued: Instant,
+    /// Absolute shed point: past this instant the client has given up, so
+    /// the job is failed (`deadline expired`) instead of executed —
+    /// checked at admission, batch formation, and pre-execution.
+    pub deadline: Option<Instant>,
     pub reply: Sender<Result<Prediction>>,
+}
+
+impl Job {
+    /// Has this job's deadline passed as of `now`?
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| d <= now)
+    }
 }
 
 /// A closed batch plus how many of its jobs jumped an older queued miss
@@ -145,7 +179,7 @@ impl JobQueue {
 
     /// Currently queued jobs (the `queue_depth` gauge).
     pub fn depth(&self) -> usize {
-        self.inner.lock().unwrap().jobs.len()
+        lock_recover(&self.inner).jobs.len()
     }
 
     /// Most jobs ever queued at once (the `queue_depth_hwm` gauge).
@@ -157,9 +191,9 @@ impl JobQueue {
     /// `sync_channel` semantics). Returns the job back when the queue is
     /// closed (shutdown), so the caller can unwind its single-flight.
     pub fn push(&self, job: Job) -> std::result::Result<(), Job> {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = lock_recover(&self.inner);
         while q.jobs.len() >= self.capacity && !q.closed {
-            q = self.not_full.wait(q).unwrap();
+            q = wait_recover(&self.not_full, q);
         }
         if q.closed {
             return Err(job);
@@ -172,10 +206,16 @@ impl JobQueue {
         Ok(())
     }
 
+    /// Has the queue been closed (shutdown)? The supervisor's backend
+    /// rebuild loop checks this to stop retrying a factory nobody needs.
+    pub fn is_closed(&self) -> bool {
+        lock_recover(&self.inner).closed
+    }
+
     /// Close the queue: pushes fail, poppers drain what is left and then
     /// observe `None`. Wakes every waiter.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        lock_recover(&self.inner).closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }
@@ -196,7 +236,7 @@ impl JobQueue {
         linger: Option<Duration>,
         priorities: impl Fn(&VecDeque<Job>) -> Vec<usize>,
     ) -> Option<Batch> {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = lock_recover(&self.inner);
         loop {
             // Block for the first job.
             loop {
@@ -206,7 +246,7 @@ impl JobQueue {
                 if q.closed {
                     return None;
                 }
-                q = self.not_empty.wait(q).unwrap();
+                q = wait_recover(&self.not_empty, q);
             }
             // Grow: keep the batch open until the queue could fill it or
             // the deadline passes. With a linger, a slice that elapses
@@ -224,7 +264,7 @@ impl JobQueue {
                     wait = wait.min(slice);
                 }
                 let len_before = q.jobs.len();
-                let (guard, timed_out) = self.not_empty.wait_timeout(q, wait).unwrap();
+                let (guard, timed_out) = wait_timeout_recover(&self.not_empty, q, wait);
                 q = guard;
                 if linger.is_some() && timed_out.timed_out() && q.jobs.len() == len_before {
                     break; // a full linger slice with no arrivals
@@ -334,19 +374,19 @@ impl BatchRing {
     /// Snapshot the nudge counter — take it *before* trying the former
     /// role, pass it to [`BatchRing::pop_or_nudged`].
     pub fn nudge_count(&self) -> u64 {
-        self.inner.lock().unwrap().nudges
+        lock_recover(&self.inner).nudges
     }
 
     /// Signal that the former role was freed: wakes every parked follower
     /// so one of them claims the role (the others go back to waiting).
     pub fn nudge(&self) {
-        self.inner.lock().unwrap().nudges += 1;
+        lock_recover(&self.inner).nudges += 1;
         self.not_empty.notify_all();
     }
 
     /// Closed batches currently awaiting a worker (the `ring_depth` gauge).
     pub fn depth(&self) -> usize {
-        self.inner.lock().unwrap().batches.len()
+        lock_recover(&self.inner).batches.len()
     }
 
     /// Most batches ever parked at once (the `ring_depth_hwm` gauge).
@@ -359,9 +399,9 @@ impl BatchRing {
     /// race) — the caller must execute it inline so its replies are never
     /// dropped.
     pub fn push(&self, batch: Batch) -> std::result::Result<(), Batch> {
-        let mut r = self.inner.lock().unwrap();
+        let mut r = lock_recover(&self.inner);
         while r.batches.len() >= self.capacity && !r.closed {
-            r = self.not_full.wait(r).unwrap();
+            r = wait_recover(&self.not_full, r);
         }
         if r.closed {
             return Err(batch);
@@ -377,7 +417,7 @@ impl BatchRing {
     /// Non-blocking pop (the worker's first stop on each loop: never let a
     /// closed batch wait while this worker is idle).
     pub fn try_pop(&self) -> Option<Batch> {
-        let mut r = self.inner.lock().unwrap();
+        let mut r = lock_recover(&self.inner);
         let b = r.batches.pop_front();
         if b.is_some() {
             drop(r);
@@ -389,7 +429,7 @@ impl BatchRing {
     /// Blocking pop: returns `None` only when the ring is closed *and*
     /// drained, so shutdown never strands a formed batch.
     pub fn pop_blocking(&self) -> Option<Batch> {
-        let mut r = self.inner.lock().unwrap();
+        let mut r = lock_recover(&self.inner);
         loop {
             if let Some(b) = r.batches.pop_front() {
                 drop(r);
@@ -399,7 +439,7 @@ impl BatchRing {
             if r.closed {
                 return None;
             }
-            r = self.not_empty.wait(r).unwrap();
+            r = wait_recover(&self.not_empty, r);
         }
     }
 
@@ -413,7 +453,7 @@ impl BatchRing {
     /// ex-former while new jobs queue. At true idle nobody is nudging, so
     /// followers block indefinitely (no polling).
     pub fn pop_or_nudged(&self, seen: u64) -> RingPop {
-        let mut r = self.inner.lock().unwrap();
+        let mut r = lock_recover(&self.inner);
         loop {
             if let Some(b) = r.batches.pop_front() {
                 drop(r);
@@ -426,13 +466,13 @@ impl BatchRing {
             if r.nudges != seen {
                 return RingPop::Nudged;
             }
-            r = self.not_empty.wait(r).unwrap();
+            r = wait_recover(&self.not_empty, r);
         }
     }
 
     /// Close the ring: pushes bounce, poppers drain then observe `None`.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        lock_recover(&self.inner).closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }
@@ -507,6 +547,7 @@ mod tests {
                 target: Target::default(),
                 key,
                 enqueued: Instant::now(),
+                deadline: None,
                 reply,
             },
             rx,
@@ -907,6 +948,60 @@ mod tests {
         std::thread::sleep(Duration::from_millis(50));
         ring.nudge();
         assert!(handle.join().unwrap(), "a parked follower must observe the nudge");
+    }
+
+    #[test]
+    fn job_expiry_is_none_until_the_deadline_passes() {
+        let (mut job, _rx) = dummy_job(0);
+        let now = Instant::now();
+        assert!(!job.expired(now), "no deadline = never expired");
+        job.deadline = Some(now + Duration::from_secs(60));
+        assert!(!job.expired(now));
+        job.deadline = Some(now);
+        assert!(job.expired(now), "deadline is inclusive");
+        assert!(job.expired(now + Duration::from_millis(1)));
+    }
+
+    #[test]
+    fn poisoned_queue_lock_recovers() {
+        // A worker panicking while holding the queue lock must not wedge
+        // the queue for every other thread.
+        let q = Arc::new(JobQueue::new(16));
+        let q2 = q.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = q2.inner.lock().unwrap();
+            panic!("poison the queue lock");
+        })
+        .join();
+        let (job, _rx) = dummy_job(0);
+        q.push(job).map_err(|_| ()).unwrap();
+        assert_eq!(q.depth(), 1);
+        let b = q.pop_batch(8, Duration::ZERO, None, fifo_prio).unwrap();
+        assert_eq!(b.jobs.len(), 1);
+    }
+
+    #[test]
+    fn poisoned_ring_lock_recovers() {
+        let ring = Arc::new(BatchRing::new(4));
+        let r2 = ring.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = r2.inner.lock().unwrap();
+            panic!("poison the ring lock");
+        })
+        .join();
+        let (job, _rx) = dummy_job(0);
+        ring.push(Batch {
+            jobs: vec![job],
+            jumped: 0,
+            max_residency: Duration::ZERO,
+        })
+        .map_err(|_| ())
+        .unwrap();
+        assert_eq!(ring.depth(), 1);
+        assert!(ring.try_pop().is_some());
+        ring.nudge();
+        ring.close();
+        assert!(ring.pop_blocking().is_none());
     }
 
     #[test]

@@ -17,28 +17,220 @@
 //! Workers publish results to the cache, wake single-flight followers and
 //! reply *before* folding their counters (and per-request latencies, into
 //! the log-bucketed histogram) into [`Metrics`] under one short lock.
+//!
+//! Robustness (the supervision layer): every predict call runs under
+//! `catch_unwind`, so a panicking backend fails its batch with error
+//! replies instead of killing the worker thread; the worker then rebuilds
+//! its backend through the factory with exponential backoff. Jobs whose
+//! key crashes a backend twice are *quarantined* — a short-TTL poison
+//! tombstone through the negative-cache machinery — and consecutive
+//! backend failures trip the shared circuit [`Breaker`], flipping the
+//! coordinator into degraded mode until the breaker half-opens and a
+//! probe batch succeeds. Expired-deadline jobs are shed (error reply, no
+//! execution) at batch formation and again right before execution.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::cache::{ShardedLruCache, SingleFlight};
 use crate::mig;
+use crate::util::faults;
 use crate::{log_info, log_warn};
 
 use super::backend::{Backend, BackendFactory, PredictRequest, RawOutcome};
 use super::batcher::{
-    admission_priority, starvation_bound, Batch, BatchFormerMode, BatchRing, FormerRole, Job,
-    JobQueue, RingPop,
+    admission_priority, lock_recover, starvation_bound, Batch, BatchFormerMode, BatchRing,
+    FormerRole, Job, JobQueue, RingPop,
 };
 use super::protocol::Prediction;
 use super::server::{CacheValue, Metrics};
 
+/// Quarantine tombstone TTL when negative caching is otherwise disabled:
+/// a key that crashed the backend twice stays poisoned this long.
+const QUARANTINE_TTL: Duration = Duration::from_secs(5);
+
+/// How many times a key may crash a backend before it is quarantined.
+const QUARANTINE_CRASHES: u32 = 2;
+
+/// Backend-rebuild backoff after a panic: `10ms * 2^(n-1)`, capped.
+const RESTART_BACKOFF_BASE: Duration = Duration::from_millis(10);
+const RESTART_BACKOFF_CAP: Duration = Duration::from_secs(1);
+
+/// Circuit-breaker state: `Closed` (healthy), `Open` (degraded — the
+/// submit path answers from cache + the simulator fallback), `HalfOpen`
+/// (cooldown elapsed; real traffic probes the backend again).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+impl BreakerState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half_open",
+        }
+    }
+}
+
+const BREAKER_CLOSED: u8 = 0;
+const BREAKER_OPEN: u8 = 1;
+const BREAKER_HALF_OPEN: u8 = 2;
+
+/// Per-backend circuit breaker shared by every worker and the submit
+/// path. `threshold` consecutive batch-level backend failures (errors or
+/// panics — per-request failures don't count) open it; after `cooldown`
+/// it half-opens, letting real traffic probe the backend: one successful
+/// batch closes it, one more failure reopens it.
+pub(crate) struct Breaker {
+    state: AtomicU8,
+    consecutive: AtomicU32,
+    trips: AtomicU64,
+    opened_at_us: AtomicU64,
+    threshold: u32,
+    cooldown: Duration,
+    epoch: Instant,
+}
+
+impl Breaker {
+    pub fn new(threshold: u32, cooldown: Duration) -> Breaker {
+        Breaker {
+            state: AtomicU8::new(BREAKER_CLOSED),
+            consecutive: AtomicU32::new(0),
+            trips: AtomicU64::new(0),
+            opened_at_us: AtomicU64::new(0),
+            threshold: threshold.max(1),
+            cooldown,
+            epoch: Instant::now(),
+        }
+    }
+
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// A batch-level backend success: close from any state.
+    pub fn on_success(&self) {
+        self.consecutive.store(0, Ordering::Relaxed);
+        let prev = self.state.swap(BREAKER_CLOSED, Ordering::AcqRel);
+        if prev != BREAKER_CLOSED {
+            log_info!("backend circuit breaker closed (probe succeeded)");
+        }
+    }
+
+    /// A batch-level backend failure (error or panic). A half-open probe
+    /// failure reopens immediately; `threshold` consecutive failures open
+    /// a closed breaker.
+    pub fn on_failure(&self) {
+        let n = self.consecutive.fetch_add(1, Ordering::AcqRel) + 1;
+        let cur = self.state.load(Ordering::Acquire);
+        let open_now = cur == BREAKER_HALF_OPEN || (cur == BREAKER_CLOSED && n >= self.threshold);
+        if open_now && self.state.swap(BREAKER_OPEN, Ordering::AcqRel) != BREAKER_OPEN {
+            self.opened_at_us.store(self.now_us(), Ordering::Release);
+            self.trips.fetch_add(1, Ordering::Relaxed);
+            log_warn!(
+                "backend circuit breaker opened after {n} consecutive backend failure(s); \
+                 serving degraded (cache + simulator fallback) for {:?}",
+                self.cooldown
+            );
+        }
+    }
+
+    /// Current state, performing the open → half-open transition once the
+    /// cooldown elapses (called on the submit path, so the first request
+    /// after the cooldown becomes the probe).
+    pub fn state(&self) -> BreakerState {
+        let cur = self.state.load(Ordering::Acquire);
+        if cur == BREAKER_OPEN {
+            let opened = self.opened_at_us.load(Ordering::Acquire);
+            if self.now_us().saturating_sub(opened) >= self.cooldown.as_micros() as u64
+                && self
+                    .state
+                    .compare_exchange(
+                        BREAKER_OPEN,
+                        BREAKER_HALF_OPEN,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    )
+                    .is_ok()
+            {
+                log_info!("backend circuit breaker half-open: probing the backend");
+                return BreakerState::HalfOpen;
+            }
+        }
+        match self.state.load(Ordering::Acquire) {
+            BREAKER_OPEN => BreakerState::Open,
+            BREAKER_HALF_OPEN => BreakerState::HalfOpen,
+            _ => BreakerState::Closed,
+        }
+    }
+
+    /// Degraded mode = breaker open (half-open traffic probes the real
+    /// backend instead of the fallback).
+    pub fn is_degraded(&self) -> bool {
+        self.state() == BreakerState::Open
+    }
+
+    pub fn trips(&self) -> u64 {
+        self.trips.load(Ordering::Relaxed)
+    }
+}
+
+/// Supervision state shared by the workers and the coordinator: the
+/// circuit breaker, the shed/panic/restart counters, and the per-key
+/// crash counts behind quarantine.
+pub(crate) struct Supervisor {
+    pub breaker: Breaker,
+    pub panics: AtomicU64,
+    pub restarts: AtomicU64,
+    pub quarantined: AtomicU64,
+    pub shed_formation: AtomicU64,
+    pub shed_execution: AtomicU64,
+    crash_counts: Mutex<HashMap<u128, u32>>,
+}
+
+impl Supervisor {
+    pub fn new(threshold: u32, cooldown: Duration) -> Supervisor {
+        Supervisor {
+            breaker: Breaker::new(threshold, cooldown),
+            panics: AtomicU64::new(0),
+            restarts: AtomicU64::new(0),
+            quarantined: AtomicU64::new(0),
+            shed_formation: AtomicU64::new(0),
+            shed_execution: AtomicU64::new(0),
+            crash_counts: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Record that `key` was in a batch that crashed the backend. True
+    /// once the key has crashed [`QUARANTINE_CRASHES`] backends — the
+    /// caller then poisons it (and the count resets, so a fresh chance
+    /// follows the tombstone's TTL).
+    fn note_crash(&self, key: u128) -> bool {
+        let mut counts = lock_recover(&self.crash_counts);
+        let n = counts.entry(key).or_insert(0);
+        *n += 1;
+        if *n >= QUARANTINE_CRASHES {
+            counts.remove(&key);
+            true
+        } else {
+            false
+        }
+    }
+}
+
 /// Everything a worker (or the dedicated former) shares with the
-/// coordinator: queue, ring, role, metrics and the cache plumbing.
+/// coordinator: queue, ring, role, metrics, supervision state and the
+/// cache plumbing.
 pub(crate) struct ExecutorShared {
     pub queue: Arc<JobQueue>,
     pub ring: Arc<BatchRing>,
@@ -46,6 +238,7 @@ pub(crate) struct ExecutorShared {
     pub metrics: Arc<Mutex<Metrics>>,
     pub cache: Option<Arc<ShardedLruCache<CacheValue>>>,
     pub flight: Option<Arc<SingleFlight<Prediction>>>,
+    pub supervisor: Arc<Supervisor>,
     pub mode: BatchFormerMode,
     pub max_wait: Duration,
     pub linger: Duration,
@@ -93,21 +286,90 @@ struct BatchOutcomeCounters {
     reused: u64,
 }
 
-/// Execute one closed batch: drive the backend from the scratch buffers,
-/// publish per-request results to the cache (failures become short-TTL
-/// tombstones), wake followers, reply, then fold counters + latencies into
-/// the metrics under one short lock.
+/// Where an expired-deadline job was shed (selects the counter and the
+/// error message's wording).
+#[derive(Clone, Copy)]
+pub(crate) enum ShedStage {
+    Formation,
+    Execution,
+}
+
+/// Shed every expired job from `jobs`: error reply to the leader and all
+/// its parked single-flight followers (no one else will ever compute the
+/// result), counted into the stage's shed counter. Cheap when nothing
+/// carries a deadline.
+pub(crate) fn shed_expired_jobs(jobs: &mut Vec<Job>, sh: &ExecutorShared, stage: ShedStage) {
+    let now = Instant::now();
+    if !jobs.iter().any(|j| j.expired(now)) {
+        return;
+    }
+    let stage_name = match stage {
+        ShedStage::Formation => "batch formation",
+        ShedStage::Execution => "execution",
+    };
+    let mut shed = 0u64;
+    jobs.retain(|job| {
+        if !job.expired(now) {
+            return true;
+        }
+        shed += 1;
+        let msg = format!(
+            "deadline expired before {stage_name} (queued {:?})",
+            job.enqueued.elapsed()
+        );
+        if let (Some(k), Some(flight)) = (job.key, &sh.flight) {
+            for w in flight.take(k.as_u128()) {
+                shed += 1;
+                let _ = w.reply.send(Err(anyhow!("{msg}")));
+            }
+        }
+        let _ = job.reply.send(Err(anyhow!("{msg}")));
+        false
+    });
+    let counter = match stage {
+        ShedStage::Formation => &sh.supervisor.shed_formation,
+        ShedStage::Execution => &sh.supervisor.shed_execution,
+    };
+    counter.fetch_add(shed, Ordering::Relaxed);
+}
+
+/// What [`execute_batch`] observed from the backend, driving the
+/// supervisor in the worker loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum ExecOutcome {
+    /// The backend answered (individual requests may still have failed).
+    Served,
+    /// Batch-level backend error — every job failed, backend object intact.
+    BackendError,
+    /// The backend panicked mid-predict: the worker must drop and rebuild
+    /// it before executing anything else.
+    BackendPanic,
+}
+
+/// Execute one closed batch: shed expired jobs, drive the backend from
+/// the scratch buffers under a panic guard, publish per-request results
+/// to the cache (failures become short-TTL tombstones), wake followers,
+/// reply, then fold counters + latencies into the metrics under one short
+/// lock. Feeds the circuit breaker on the way out.
 pub(crate) fn execute_batch(
     backend: &mut dyn Backend,
-    batch: Batch,
+    mut batch: Batch,
     scratch: &mut BatchScratch,
     sh: &ExecutorShared,
-) {
+) -> ExecOutcome {
+    // Last deadline checkpoint: a job expiring while parked in the ring
+    // is shed here instead of occupying backend capacity.
+    shed_expired_jobs(&mut batch.jobs, sh, ShedStage::Execution);
     let Batch {
         jobs,
         jumped,
         max_residency,
     } = batch;
+    if jobs.is_empty() {
+        let mut m = lock_recover(&sh.metrics);
+        m.priority_admissions += jumped;
+        return ExecOutcome::Served;
+    }
     let n_jobs = jobs.len() as u64;
 
     // Covariance: the 'static-typed (empty) buffer coerces down to the
@@ -119,17 +381,43 @@ pub(crate) fn execute_batch(
         target: &j.target,
     }));
     scratch.outcomes.clear();
-    let result = backend.predict_into(&requests, &mut scratch.outcomes);
+    if let Some(spike) = faults::spike("backend:latency") {
+        std::thread::sleep(spike);
+    }
+    // Panic guard: a crashing backend (real bug or injected chaos) fails
+    // this batch with error replies instead of killing the worker thread.
+    let call = catch_unwind(AssertUnwindSafe(|| {
+        if faults::fire("backend:panic") {
+            panic!("injected: backend panic");
+        }
+        if faults::fire("backend:error") {
+            return Err(anyhow!("injected: backend error"));
+        }
+        backend.predict_into(&requests, &mut scratch.outcomes)
+    }));
     scratch.requests = recycled(requests);
 
-    let result = match result {
-        Ok(()) if scratch.outcomes.len() == jobs.len() => Ok(()),
-        Ok(()) => Err(anyhow!(
+    let result = match call {
+        Err(_panic) => {
+            handle_backend_panic(jobs, jumped, max_residency, sh);
+            sh.supervisor.panics.fetch_add(1, Ordering::Relaxed);
+            sh.supervisor.breaker.on_failure();
+            return ExecOutcome::BackendPanic;
+        }
+        Ok(Ok(())) if scratch.outcomes.len() == jobs.len() => Ok(()),
+        Ok(Ok(())) => Err(anyhow!(
             "backend returned {} outcomes for {} jobs",
             scratch.outcomes.len(),
             jobs.len()
         )),
-        Err(e) => Err(e),
+        Ok(Err(e)) => Err(e),
+    };
+    let outcome = if result.is_ok() {
+        sh.supervisor.breaker.on_success();
+        ExecOutcome::Served
+    } else {
+        sh.supervisor.breaker.on_failure();
+        ExecOutcome::BackendError
     };
 
     // Publish to cache, wake followers and reply first — no lock held
@@ -149,6 +437,7 @@ pub(crate) fn execute_batch(
                             energy_j: raw[2],
                             mig_profile: mig::predict_profile(raw[1])
                                 .map(|p| p.name().to_string()),
+                            degraded: false,
                         };
                         if let (Some(k), Some(cache)) = (job.key, &sh.cache) {
                             cache.insert(k, CacheValue::Pred(pred.clone()));
@@ -208,7 +497,7 @@ pub(crate) fn execute_batch(
         }
     }
 
-    let mut m = sh.metrics.lock().unwrap();
+    let mut m = lock_recover(&sh.metrics);
     m.batches += 1;
     m.batch_fill_sum += n_jobs;
     m.coalesced += c.coalesced;
@@ -221,6 +510,51 @@ pub(crate) fn execute_batch(
     for &us in &scratch.latencies_us {
         m.latency.record(us);
     }
+    drop(m);
+    outcome
+}
+
+/// Fail every job of a batch whose backend panicked: error replies to
+/// leaders + parked followers, per-key crash accounting, and poison
+/// tombstones (short-TTL negative-cache entries) for keys that have now
+/// crashed a backend [`QUARANTINE_CRASHES`] times.
+fn handle_backend_panic(jobs: Vec<Job>, jumped: u64, max_residency: Duration, sh: &ExecutorShared) {
+    let n_jobs = jobs.len() as u64;
+    let mut errors = 0u64;
+    for job in jobs {
+        errors += 1;
+        let quarantine = job
+            .key
+            .map(|k| sh.supervisor.note_crash(k.as_u128()))
+            .unwrap_or(false);
+        let msg = if quarantine {
+            "backend panicked during predict (request quarantined)"
+        } else {
+            "backend panicked during predict"
+        };
+        if quarantine {
+            sh.supervisor.quarantined.fetch_add(1, Ordering::Relaxed);
+            if let (Some(k), Some(cache)) = (job.key, &sh.cache) {
+                let ttl = sh.negative_ttl.unwrap_or(QUARANTINE_TTL);
+                cache.insert_with_ttl(k, CacheValue::Tombstone(msg.to_string()), Some(ttl));
+            }
+        }
+        if let (Some(k), Some(flight)) = (job.key, &sh.flight) {
+            for w in flight.take(k.as_u128()) {
+                errors += 1;
+                let _ = w.reply.send(Err(anyhow!("{msg}")));
+            }
+        }
+        let _ = job.reply.send(Err(anyhow!("{msg}")));
+    }
+    let mut m = lock_recover(&sh.metrics);
+    m.batches += 1;
+    m.batch_fill_sum += n_jobs;
+    m.errors += errors;
+    m.priority_admissions += jumped;
+    m.queue_residency_max_us = m
+        .queue_residency_max_us
+        .max(max_residency.as_micros() as u64);
 }
 
 /// The cache-aware admission priority map: one single-flight snapshot per
@@ -252,8 +586,13 @@ fn priorities_fn(
 pub(crate) fn former_main(sh: Arc<ExecutorShared>, max_b: usize) {
     let bound = starvation_bound(sh.max_wait);
     let priorities = priorities_fn(sh.flight.clone(), bound);
-    while let Some(batch) = sh.queue.pop_batch(max_b, sh.max_wait, Some(sh.linger), &priorities)
+    while let Some(mut batch) =
+        sh.queue.pop_batch(max_b, sh.max_wait, Some(sh.linger), &priorities)
     {
+        shed_expired_jobs(&mut batch.jobs, &sh, ShedStage::Formation);
+        if batch.jobs.is_empty() {
+            continue;
+        }
         if let Err(batch) = sh.ring.push(batch) {
             // Unreachable by construction (only this thread closes the
             // ring, below) — but never silently drop replies.
@@ -265,6 +604,41 @@ pub(crate) fn former_main(sh: Arc<ExecutorShared>, max_b: usize) {
     }
     sh.ring.close();
     crate::log_debug!("batch former thread shutting down");
+}
+
+/// Rebuild a panicked worker's backend through the factory, backing off
+/// exponentially across consecutive rebuild failures. Gives up (returns
+/// `None`) only when the pipeline is shutting down.
+fn respawn_backend(
+    worker: usize,
+    factory: &BackendFactory,
+    sh: &ExecutorShared,
+    consecutive_panics: u32,
+) -> Option<Box<dyn Backend>> {
+    let mut delay = RESTART_BACKOFF_CAP.min(
+        RESTART_BACKOFF_BASE * 2u32.saturating_pow(consecutive_panics.saturating_sub(1)),
+    );
+    std::thread::sleep(delay);
+    loop {
+        if sh.queue.is_closed() {
+            return None;
+        }
+        match factory() {
+            Ok(b) => {
+                sh.supervisor.restarts.fetch_add(1, Ordering::Relaxed);
+                log_info!("executor worker {worker}: backend rebuilt after panic");
+                return Some(b);
+            }
+            Err(e) => {
+                delay = (delay * 2).clamp(RESTART_BACKOFF_BASE, RESTART_BACKOFF_CAP);
+                log_warn!(
+                    "executor worker {worker}: backend rebuild failed ({e:#}); \
+                     retrying in {delay:?}"
+                );
+                std::thread::sleep(delay);
+            }
+        }
+    }
 }
 
 /// One executor worker. Builds its backend via the factory (reporting
@@ -301,25 +675,87 @@ pub(crate) fn executor_main(
     let mut scratch = BatchScratch::with_capacity(max_b);
     let bound = starvation_bound(sh.max_wait);
     let priorities = priorities_fn(sh.flight.clone(), bound);
+    let mut consecutive_panics = 0u32;
+
+    // Execute one batch under supervision: a panicking backend is dropped
+    // and rebuilt with exponential backoff (in consecutive-panic count).
+    // False only when the pipeline shut down mid-rebuild.
+    fn run_supervised(
+        worker: usize,
+        factory: &BackendFactory,
+        backend: &mut Box<dyn Backend>,
+        batch: Batch,
+        scratch: &mut BatchScratch,
+        sh: &ExecutorShared,
+        consecutive_panics: &mut u32,
+    ) -> bool {
+        match execute_batch(backend.as_mut(), batch, scratch, sh) {
+            ExecOutcome::Served => {
+                *consecutive_panics = 0;
+                true
+            }
+            ExecOutcome::BackendError => true,
+            ExecOutcome::BackendPanic => {
+                *consecutive_panics += 1;
+                match respawn_backend(worker, factory, sh, *consecutive_panics) {
+                    Some(b) => {
+                        *backend = b;
+                        true
+                    }
+                    None => false,
+                }
+            }
+        }
+    }
 
     // --- serve loop ------------------------------------------------------
     match sh.mode {
         BatchFormerMode::Off => {
             // Legacy pipeline: every worker grows its own batch.
             while let Some(batch) = sh.queue.pop_batch(max_b, sh.max_wait, None, &priorities) {
-                execute_batch(backend.as_mut(), batch, &mut scratch, &sh);
+                if !run_supervised(
+                    worker,
+                    factory,
+                    &mut backend,
+                    batch,
+                    &mut scratch,
+                    &sh,
+                    &mut consecutive_panics,
+                ) {
+                    break;
+                }
             }
         }
         BatchFormerMode::Thread => {
             // A dedicated former owns admission; workers only execute.
             while let Some(batch) = sh.ring.pop_blocking() {
-                execute_batch(backend.as_mut(), batch, &mut scratch, &sh);
+                if !run_supervised(
+                    worker,
+                    factory,
+                    &mut backend,
+                    batch,
+                    &mut scratch,
+                    &sh,
+                    &mut consecutive_panics,
+                ) {
+                    break;
+                }
             }
         }
         BatchFormerMode::Leader => loop {
             // 1. Never let a closed batch wait while this worker is idle.
             if let Some(batch) = sh.ring.try_pop() {
-                execute_batch(backend.as_mut(), batch, &mut scratch, &sh);
+                if !run_supervised(
+                    worker,
+                    factory,
+                    &mut backend,
+                    batch,
+                    &mut scratch,
+                    &sh,
+                    &mut consecutive_panics,
+                ) {
+                    break;
+                }
                 continue;
             }
             // 2. Ring empty: steal the former role instead of sleeping.
@@ -333,7 +769,14 @@ pub(crate) fn executor_main(
                         .pop_batch(max_b, sh.max_wait, Some(sh.linger), &priorities);
                 sh.role.release();
                 match formed {
-                    Some(batch) => {
+                    Some(mut batch) => {
+                        shed_expired_jobs(&mut batch.jobs, &sh, ShedStage::Formation);
+                        if batch.jobs.is_empty() {
+                            // Everything expired while forming; free role
+                            // already released — wake a contender.
+                            sh.ring.nudge();
+                            continue;
+                        }
                         // Hand the closed batch to an idle follower; if the
                         // ring bounced it (shutdown race), execute inline —
                         // a formed batch's replies are never dropped. Then
@@ -343,7 +786,17 @@ pub(crate) fn executor_main(
                         let bounced = sh.ring.push(batch);
                         sh.ring.nudge();
                         if let Err(batch) = bounced {
-                            execute_batch(backend.as_mut(), batch, &mut scratch, &sh);
+                            if !run_supervised(
+                                worker,
+                                factory,
+                                &mut backend,
+                                batch,
+                                &mut scratch,
+                                &sh,
+                                &mut consecutive_panics,
+                            ) {
+                                break;
+                            }
                         }
                     }
                     None => {
@@ -357,7 +810,17 @@ pub(crate) fn executor_main(
                 // batch lands, shutdown, or the role frees (nudge).
                 match sh.ring.pop_or_nudged(seen) {
                     RingPop::Batch(batch) => {
-                        execute_batch(backend.as_mut(), batch, &mut scratch, &sh)
+                        if !run_supervised(
+                            worker,
+                            factory,
+                            &mut backend,
+                            batch,
+                            &mut scratch,
+                            &sh,
+                            &mut consecutive_panics,
+                        ) {
+                            break;
+                        }
                     }
                     RingPop::Closed => break,
                     RingPop::Nudged => {} // re-contend for the former role

@@ -38,6 +38,10 @@ pub struct Prediction {
     pub energy_j: f64,
     /// None = model exceeds the largest profile (eq. 2's "None").
     pub mig_profile: Option<String>,
+    /// Served by the degraded-mode simulator fallback while the backend
+    /// circuit breaker is open — an analytic estimate, not the trained
+    /// model. Degraded predictions are never cached.
+    pub degraded: bool,
 }
 
 impl Prediction {
@@ -50,6 +54,7 @@ impl Prediction {
             Some(p) => o.insert("mig_profile", p.as_str()),
             None => o.insert("mig_profile", Json::Null),
         }
+        o.insert("degraded", self.degraded);
         o.insert("ok", true);
         Json::Obj(o)
     }
@@ -89,6 +94,24 @@ pub fn parse_target_value(v: &Json) -> Result<Option<Target>, String> {
         Json::Null => Ok(None),
         Json::Str(s) => Target::parse(s).map(Some),
         other => Err(format!("'target' must be a string, got {other}")),
+    }
+}
+
+/// Extract the optional `"deadline_ms"` budget of a prediction request:
+/// how long the client is willing to wait, measured from admission. The
+/// server sheds the request (with an error reply) once the budget is
+/// spent instead of executing it. `Ok(None)` = no deadline (wait
+/// indefinitely); a non-numeric or negative value is an error.
+pub fn parse_deadline_value(v: &Json) -> Result<Option<std::time::Duration>, String> {
+    match v.path(&["deadline_ms"]) {
+        Json::Null => Ok(None),
+        Json::Num(ms) => {
+            if !ms.is_finite() || *ms < 0.0 {
+                return Err(format!("'deadline_ms' must be a finite non-negative number, got {ms}"));
+            }
+            Ok(Some(std::time::Duration::from_millis(*ms as u64)))
+        }
+        other => Err(format!("'deadline_ms' must be a number, got {other}")),
     }
 }
 
@@ -166,6 +189,24 @@ pub fn cache_stats_response(m: &Metrics) -> String {
     o.insert("ring_depth", m.ring_depth as usize);
     o.insert("ring_depth_hwm", m.ring_depth_hwm as usize);
     o.insert("queue_residency_max_us", m.queue_residency_max_us as usize);
+    // Robustness counters: deadline sheds per pipeline stage, backend
+    // supervision (panics caught, restarts, quarantined poison requests),
+    // circuit-breaker state and degraded-mode fallback serves. Always
+    // present — a healthy server reports zeros and "closed", not absent
+    // fields.
+    o.insert("deadline_expired", m.deadline_expired as usize);
+    o.insert("shed_admission", m.shed_admission as usize);
+    o.insert("shed_formation", m.shed_formation as usize);
+    o.insert("shed_execution", m.shed_execution as usize);
+    o.insert("backend_panics", m.backend_panics as usize);
+    o.insert("backend_restarts", m.backend_restarts as usize);
+    o.insert("quarantined", m.quarantined as usize);
+    o.insert(
+        "breaker_state",
+        if m.breaker_state.is_empty() { "closed" } else { m.breaker_state },
+    );
+    o.insert("breaker_trips", m.breaker_trips as usize);
+    o.insert("degraded_served", m.degraded_served as usize);
     // Transport counters, aggregated across the JSON-lines listener and
     // the binary wire reactor (`--wire`). Always present — a server with
     // no traffic reports zeros, not absent fields.
@@ -319,6 +360,16 @@ mod tests {
             wire_frame_decode_errors: 2,
             wire_bytes_rx: 5000,
             wire_bytes_tx: 4000,
+            deadline_expired: 6,
+            shed_admission: 1,
+            shed_formation: 2,
+            shed_execution: 3,
+            backend_panics: 4,
+            backend_restarts: 4,
+            quarantined: 2,
+            breaker_state: "half_open",
+            breaker_trips: 1,
+            degraded_served: 8,
             ..Default::default()
         };
         let s = cache_stats_response(&m);
@@ -359,6 +410,17 @@ mod tests {
         assert_eq!(v.path(&["ring_depth"]).as_usize(), Some(1));
         assert_eq!(v.path(&["ring_depth_hwm"]).as_usize(), Some(3));
         assert_eq!(v.path(&["queue_residency_max_us"]).as_usize(), Some(2500));
+        // Robustness counters.
+        assert_eq!(v.path(&["deadline_expired"]).as_usize(), Some(6));
+        assert_eq!(v.path(&["shed_admission"]).as_usize(), Some(1));
+        assert_eq!(v.path(&["shed_formation"]).as_usize(), Some(2));
+        assert_eq!(v.path(&["shed_execution"]).as_usize(), Some(3));
+        assert_eq!(v.path(&["backend_panics"]).as_usize(), Some(4));
+        assert_eq!(v.path(&["backend_restarts"]).as_usize(), Some(4));
+        assert_eq!(v.path(&["quarantined"]).as_usize(), Some(2));
+        assert_eq!(v.path(&["breaker_state"]).as_str(), Some("half_open"));
+        assert_eq!(v.path(&["breaker_trips"]).as_usize(), Some(1));
+        assert_eq!(v.path(&["degraded_served"]).as_usize(), Some(8));
         // Transport counters.
         assert_eq!(v.path(&["connections_open"]).as_usize(), Some(4));
         assert_eq!(v.path(&["connections_accepted"]).as_usize(), Some(11));
@@ -396,6 +458,18 @@ mod tests {
         assert_eq!(v.path(&["queue_depth_hwm"]).as_usize(), Some(0));
         assert_eq!(v.path(&["ring_depth_hwm"]).as_usize(), Some(0));
         assert_eq!(v.path(&["queue_residency_max_us"]).as_usize(), Some(0));
+        // Robustness counters are zeroed, and the breaker reports
+        // "closed" (never the empty default), on a cold boot.
+        assert_eq!(v.path(&["deadline_expired"]).as_usize(), Some(0));
+        assert_eq!(v.path(&["shed_admission"]).as_usize(), Some(0));
+        assert_eq!(v.path(&["shed_formation"]).as_usize(), Some(0));
+        assert_eq!(v.path(&["shed_execution"]).as_usize(), Some(0));
+        assert_eq!(v.path(&["backend_panics"]).as_usize(), Some(0));
+        assert_eq!(v.path(&["backend_restarts"]).as_usize(), Some(0));
+        assert_eq!(v.path(&["quarantined"]).as_usize(), Some(0));
+        assert_eq!(v.path(&["breaker_state"]).as_str(), Some("closed"));
+        assert_eq!(v.path(&["breaker_trips"]).as_usize(), Some(0));
+        assert_eq!(v.path(&["degraded_served"]).as_usize(), Some(0));
         // Transport counters are zeroed too, never absent.
         assert_eq!(v.path(&["connections_open"]).as_usize(), Some(0));
         assert_eq!(v.path(&["connections_accepted"]).as_usize(), Some(0));
@@ -485,14 +559,38 @@ mod tests {
             memory_mb: 3000.0,
             energy_j: 0.4,
             mig_profile: Some("1g.5gb".into()),
+            degraded: false,
         };
         let j = p.to_json().to_string();
         assert!(j.contains("\"mig_profile\":\"1g.5gb\""));
+        assert!(j.contains("\"degraded\":false"));
         assert!(j.contains("\"ok\":true"));
         let p2 = Prediction {
             mig_profile: None,
+            degraded: true,
             ..p
         };
-        assert!(p2.to_json().to_string().contains("\"mig_profile\":null"));
+        let j2 = p2.to_json().to_string();
+        assert!(j2.contains("\"mig_profile\":null"));
+        assert!(j2.contains("\"degraded\":true"));
+    }
+
+    #[test]
+    fn deadline_field_parses_or_defaults() {
+        let v = Json::parse(r#"{"model":{},"deadline_ms":250}"#).unwrap();
+        let d = parse_deadline_value(&v).unwrap().unwrap();
+        assert_eq!(d, std::time::Duration::from_millis(250));
+        let v = Json::parse(r#"{"model":{},"deadline_ms":0}"#).unwrap();
+        assert_eq!(
+            parse_deadline_value(&v).unwrap(),
+            Some(std::time::Duration::ZERO),
+            "a zero budget is a valid (immediately-expired) deadline"
+        );
+        let v = Json::parse(r#"{"model":{}}"#).unwrap();
+        assert_eq!(parse_deadline_value(&v).unwrap(), None);
+        let v = Json::parse(r#"{"deadline_ms":-5}"#).unwrap();
+        assert!(parse_deadline_value(&v).is_err());
+        let v = Json::parse(r#"{"deadline_ms":"soon"}"#).unwrap();
+        assert!(parse_deadline_value(&v).is_err());
     }
 }

@@ -53,15 +53,15 @@ use crate::cache::{
 };
 use crate::ir::Graph;
 use crate::runtime::ParamStore;
-use crate::simulator::CostSweep;
+use crate::simulator::{CostSweep, GraphAnalysis};
 use crate::util::stats::LogHistogram;
 use crate::util::threadpool::ThreadPool;
 use crate::wire::WireMetrics;
 use crate::{log_info, log_warn};
 
-use super::backend::{Backend, BackendFactory, PjrtBackend, SimBackend};
+use super::backend::{Backend, BackendFactory, PjrtBackend, PredictRequest, SimBackend};
 use super::batcher::{linger_slice, BatchFormerMode, BatchRing, FormerRole, Job, JobQueue};
-use super::executor::{executor_main, former_main, ExecutorShared};
+use super::executor::{executor_main, former_main, ExecutorShared, Supervisor};
 use super::protocol::Prediction;
 
 /// Batching + caching policy knobs.
@@ -87,6 +87,12 @@ pub struct CoordinatorOptions {
     /// Target configuration assumed for submissions that do not name one
     /// (`--target-device`). Folded into every cache key.
     pub target: Target,
+    /// Consecutive backend batch failures (errors or panics) that trip
+    /// the circuit breaker into degraded mode (`--breaker-threshold`).
+    pub breaker_threshold: u32,
+    /// How long an open breaker waits before letting one half-open probe
+    /// batch through to the backend (`--breaker-cooldown-ms`).
+    pub breaker_cooldown: Duration,
 }
 
 impl Default for CoordinatorOptions {
@@ -98,6 +104,8 @@ impl Default for CoordinatorOptions {
             batch_former: BatchFormerMode::default(),
             cache: CacheConfig::default(),
             target: Target::default(),
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_secs(5),
         }
     }
 }
@@ -190,6 +198,30 @@ pub struct Metrics {
     pub journal_bytes: u64,
     /// Current store generation.
     pub journal_generation: u64,
+    /// Expired-deadline requests shed (replied with an error instead of
+    /// executed) across every stage: `shed_admission + shed_formation +
+    /// shed_execution`.
+    pub deadline_expired: u64,
+    /// Sheds on the submit path (the budget was already spent on arrival).
+    pub shed_admission: u64,
+    /// Sheds at batch formation (expired while waiting in the queue).
+    pub shed_formation: u64,
+    /// Sheds on the executor, after admission but before the backend ran.
+    pub shed_execution: u64,
+    /// Backend panics caught by the executor's supervisor.
+    pub backend_panics: u64,
+    /// Backend instances rebuilt by the supervisor after a panic.
+    pub backend_restarts: u64,
+    /// Requests quarantined (short-TTL poison tombstones) after crashing
+    /// a backend [`super::executor`]'s `QUARANTINE_CRASHES` times.
+    pub quarantined: u64,
+    /// Circuit-breaker state: `closed` / `open` / `half_open`.
+    pub breaker_state: &'static str,
+    /// Times the breaker tripped open over the server's lifetime.
+    pub breaker_trips: u64,
+    /// Cache misses answered by the degraded-mode simulator fallback
+    /// (breaker open), tagged `degraded:true` and never cached.
+    pub degraded_served: u64,
     /// Transport counters, aggregated across the JSON-lines listener and
     /// the binary wire reactor (see [`crate::wire::WireMetrics`]).
     pub wire_connections_open: u64,
@@ -296,11 +328,14 @@ impl SnapshotValue for CacheValue {
             ),
             _ => bail!("malformed prediction payload ({} bytes)", bytes.len()),
         };
+        // Only authoritative (backend-served) predictions are ever
+        // cached, so anything read back from disk is non-degraded.
         Ok(CacheValue::Pred(Prediction {
             latency_ms: f(0),
             memory_mb: f(1),
             energy_j: f(2),
             mig_profile,
+            degraded: false,
         }))
     }
 }
@@ -332,6 +367,19 @@ pub struct Coordinator {
     warm_start: AtomicU64,
     cache: Option<Arc<ShardedLruCache<CacheValue>>>,
     flight: Option<Arc<SingleFlight<Prediction>>>,
+    /// Backend supervision state shared with the executors: circuit
+    /// breaker, panic/restart/quarantine counters, formation/execution
+    /// shed counters.
+    supervisor: Arc<Supervisor>,
+    /// Expired-at-admission sheds (the submit-path stage; the formation
+    /// and execution stages count on the supervisor).
+    shed_admission: AtomicU64,
+    /// Misses answered by the degraded-mode fallback below.
+    degraded_served: AtomicU64,
+    /// Analytic fallback for degraded mode: while the breaker is open,
+    /// cache misses are answered by the simulator (tagged `degraded`)
+    /// instead of queueing into a tripped backend.
+    fallback: Mutex<SimBackend>,
     default_target: Target,
     snapshot_path: Option<PathBuf>,
     /// Transport counters shared with every listener serving this
@@ -520,6 +568,7 @@ impl Coordinator {
             m.executor_threads = threads as u64;
             m.batch_former = opts.batch_former.as_str();
         }
+        let supervisor = Arc::new(Supervisor::new(opts.breaker_threshold, opts.breaker_cooldown));
         let shared = Arc::new(ExecutorShared {
             queue: queue.clone(),
             ring: ring.clone(),
@@ -527,6 +576,7 @@ impl Coordinator {
             metrics: metrics.clone(),
             cache: cache.clone(),
             flight: flight.clone(),
+            supervisor: supervisor.clone(),
             mode: opts.batch_former,
             max_wait: opts.max_wait,
             linger: linger_slice(opts.max_wait),
@@ -616,6 +666,10 @@ impl Coordinator {
             warm_start: AtomicU64::new(warm),
             cache,
             flight,
+            supervisor,
+            shed_admission: AtomicU64::new(0),
+            degraded_served: AtomicU64::new(0),
+            fallback: Mutex::new(SimBackend::new()),
             default_target: opts.target,
             snapshot_path: opts.cache.snapshot_path,
             wire: Arc::new(WireMetrics::default()),
@@ -649,9 +703,35 @@ impl Coordinator {
     /// returns; misses enqueue (or coalesce onto an identical in-flight
     /// submission of the same graph × target).
     pub fn submit_to(&self, graph: Graph, target: Target) -> Receiver<Result<Prediction>> {
+        self.submit_deadline(graph, target, None)
+    }
+
+    /// Submit with an optional deadline budget (how long the caller will
+    /// wait, measured from now). The deadline rides the job through the
+    /// pipeline and is checked at admission, batch formation and
+    /// pre-execution: an expired request is shed — replied with an error
+    /// — instead of executed, so abandoned work never occupies the
+    /// backend. `None` = wait indefinitely (the classic submit path).
+    pub fn submit_deadline(
+        &self,
+        graph: Graph,
+        target: Target,
+        budget: Option<Duration>,
+    ) -> Receiver<Result<Prediction>> {
         let (reply, rx) = mpsc::channel();
         let enqueued = Instant::now();
+        let deadline = budget.map(|b| enqueued + b);
         self.requests.fetch_add(1, Ordering::Relaxed);
+        // Admission-stage deadline check: a zero (or already-spent)
+        // budget sheds before any analysis work happens.
+        if deadline.is_some_and(|d| d <= enqueued) {
+            self.shed_admission.fetch_add(1, Ordering::Relaxed);
+            let _ = reply.send(Err(anyhow!(
+                "deadline expired at admission (budget {:?})",
+                budget.unwrap_or_default()
+            )));
+            return rx;
+        }
         // Stage 1 on the submitting thread: the cost sweep, whose
         // fingerprint is the cache key. Hits and coalesced followers stop
         // here; only a miss that actually enqueues completes the sweep
@@ -677,6 +757,20 @@ impl Coordinator {
                 }
                 None => {}
             }
+            // Breaker open: the backend pool is considered down. Misses
+            // are answered by the analytic simulator — tagged `degraded`
+            // and never cached, so a recovered backend recomputes them
+            // authoritatively — instead of queueing into a tripped
+            // backend. Checked after the cache lookup (hits stay
+            // authoritative) and before single-flight (degraded replies
+            // are immediate; nothing to coalesce onto).
+            if self.supervisor.breaker.is_degraded() {
+                let analysis = sweep.complete(&graph);
+                self.analyses.fetch_add(1, Ordering::Relaxed);
+                self.degraded_served.fetch_add(1, Ordering::Relaxed);
+                let _ = reply.send(self.degraded_predict(&graph, &analysis, &target));
+                return rx;
+            }
             if let Some(flight) = &self.flight {
                 match flight.join(k.as_u128(), reply.clone(), enqueued) {
                     Role::Follower => return rx,
@@ -684,6 +778,15 @@ impl Coordinator {
                 }
             }
             key = Some(k);
+        }
+        // Cache disabled: degraded mode still must not feed the tripped
+        // backend (the cache-enabled path checked above, post-lookup).
+        if self.cache.is_none() && self.supervisor.breaker.is_degraded() {
+            let analysis = sweep.complete(&graph);
+            self.analyses.fetch_add(1, Ordering::Relaxed);
+            self.degraded_served.fetch_add(1, Ordering::Relaxed);
+            let _ = reply.send(self.degraded_predict(&graph, &analysis, &target));
+            return rx;
         }
         // Miss (or cache disabled): build the full plan from the sweep —
         // the cost pass is not re-run.
@@ -695,6 +798,7 @@ impl Coordinator {
             target,
             key,
             enqueued,
+            deadline,
             reply,
         };
         if self.queue.push(job).is_err() {
@@ -715,10 +819,45 @@ impl Coordinator {
     /// Blocking convenience: submit for `target` (default when `None`)
     /// and wait.
     pub fn predict_to(&self, graph: Graph, target: Option<Target>) -> Result<Prediction> {
+        self.predict_deadline(graph, target, None)
+    }
+
+    /// Blocking convenience with a deadline budget; see
+    /// [`Coordinator::submit_deadline`].
+    pub fn predict_deadline(
+        &self,
+        graph: Graph,
+        target: Option<Target>,
+        budget: Option<Duration>,
+    ) -> Result<Prediction> {
         let target = target.unwrap_or_else(|| self.default_target.clone());
-        self.submit_to(graph, target)
+        self.submit_deadline(graph, target, budget)
             .recv()
             .map_err(|_| anyhow!("coordinator shut down"))?
+    }
+
+    /// Serve one degraded-mode prediction from the analytic simulator
+    /// fallback (breaker open). Mirrors the executor's outcome mapping;
+    /// never touches the cache.
+    fn degraded_predict(
+        &self,
+        graph: &Graph,
+        analysis: &GraphAnalysis,
+        target: &Target,
+    ) -> Result<Prediction> {
+        let mut backend = self.fallback.lock().unwrap_or_else(|e| e.into_inner());
+        let outcomes = backend.predict_raw(&[PredictRequest { graph, analysis, target }])?;
+        match outcomes.into_iter().next() {
+            Some(Ok(raw)) => Ok(Prediction {
+                latency_ms: raw[0],
+                memory_mb: raw[1],
+                energy_j: raw[2],
+                mig_profile: crate::mig::predict_profile(raw[1]).map(|p| p.name().to_string()),
+                degraded: true,
+            }),
+            Some(Err(msg)) => Err(anyhow!("{msg} (served degraded: backend breaker open)")),
+            None => Err(anyhow!("degraded fallback returned no outcome")),
+        }
     }
 
     fn mark_persisted(&self) {
@@ -894,6 +1033,20 @@ impl Coordinator {
         m.wire_frame_decode_errors = ld(&w.frame_decode_errors);
         m.wire_bytes_rx = ld(&w.bytes_rx);
         m.wire_bytes_tx = ld(&w.bytes_tx);
+        // Robustness: deadline sheds per stage, supervision counters and
+        // the live breaker state (reading it here also advances an open
+        // breaker to half-open once its cooldown elapses).
+        let sup = &self.supervisor;
+        m.shed_admission = self.shed_admission.load(Ordering::Relaxed);
+        m.shed_formation = sup.shed_formation.load(Ordering::Relaxed);
+        m.shed_execution = sup.shed_execution.load(Ordering::Relaxed);
+        m.deadline_expired = m.shed_admission + m.shed_formation + m.shed_execution;
+        m.backend_panics = sup.panics.load(Ordering::Relaxed);
+        m.backend_restarts = sup.restarts.load(Ordering::Relaxed);
+        m.quarantined = sup.quarantined.load(Ordering::Relaxed);
+        m.breaker_state = sup.breaker.state().as_str();
+        m.breaker_trips = sup.breaker.trips();
+        m.degraded_served = self.degraded_served.load(Ordering::Relaxed);
         m
     }
 
@@ -1002,6 +1155,8 @@ mod tests {
         assert!(o.cache.capacity >= 1024);
         assert_eq!(o.target, Target::default());
         assert!(o.cache.negative_ttl.is_some());
+        assert!(o.breaker_threshold >= 1, "a zero threshold would trip instantly");
+        assert!(o.breaker_cooldown > Duration::ZERO);
     }
 
     #[test]
@@ -1051,6 +1206,7 @@ mod tests {
             memory_mb: 2865.0,
             energy_j: 0.75,
             mig_profile: Some("1g.5gb".into()),
+            degraded: false,
         };
         let bytes = CacheValue::Pred(pred.clone()).snapshot_encode().unwrap();
         let CacheValue::Pred(back) = CacheValue::snapshot_decode(&bytes).unwrap() else {

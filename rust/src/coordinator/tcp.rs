@@ -22,7 +22,7 @@ use crate::wire::WireMetrics;
 
 use super::protocol::{
     cache_compact_response, cache_load_response, cache_save_response, cache_stats_response,
-    error_response, parse_cmd, parse_request_value, parse_target_value,
+    error_response, parse_cmd, parse_deadline_value, parse_request_value, parse_target_value,
 };
 use super::server::Coordinator;
 use crate::util::json::{Json, JsonObj};
@@ -159,12 +159,14 @@ fn handle_connection(
                 },
                 Some(other) => error_response(&format!("unknown cmd {other:?}")),
                 None => match parse_request_value(&v) {
-                    Ok(graph) => match parse_target_value(&v) {
-                        Ok(target) => match coordinator.predict_to(graph, target) {
-                            Ok(pred) => pred.to_json().to_string(),
-                            Err(e) => error_response(&format!("{e:#}")),
-                        },
-                        Err(e) => error_response(&e),
+                    Ok(graph) => match (parse_target_value(&v), parse_deadline_value(&v)) {
+                        (Ok(target), Ok(budget)) => {
+                            match coordinator.predict_deadline(graph, target, budget) {
+                                Ok(pred) => pred.to_json().to_string(),
+                                Err(e) => error_response(&format!("{e:#}")),
+                            }
+                        }
+                        (Err(e), _) | (_, Err(e)) => error_response(&e),
                     },
                     Err(e) => {
                         wire.decode_error();
@@ -244,6 +246,25 @@ impl Client {
     /// Convenience: predict a graph for a specific target configuration.
     pub fn predict_graph_on(&mut self, graph: &Graph, target: &str) -> Result<String> {
         self.roundtrip(&predict_request_line(graph, Some(target))?)
+    }
+
+    /// Convenience: predict with a deadline budget in milliseconds; the
+    /// server sheds the request with an error once the budget is spent.
+    pub fn predict_graph_deadline(
+        &mut self,
+        graph: &Graph,
+        target: Option<&str>,
+        deadline_ms: u64,
+    ) -> Result<String> {
+        let mut line = predict_request_line(graph, target)?;
+        // Splice the numeric field through the JSON tree, not string
+        // concatenation, to keep the line well-formed.
+        let Json::Obj(mut o) = Json::parse(&line).expect("request line is JSON") else {
+            anyhow::bail!("request line is not a JSON object");
+        };
+        o.insert("deadline_ms", deadline_ms as f64);
+        line = Json::Obj(o).to_string();
+        self.roundtrip(&line)
     }
 }
 

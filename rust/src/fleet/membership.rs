@@ -49,6 +49,13 @@ pub struct Replica {
     backoff_ms: AtomicU64,
     /// Milliseconds of backoff still to elapse before the next probe.
     probe_wait_ms: AtomicU64,
+    /// Monotonic health-transition counter: bumped every time this
+    /// replica flips healthy→down or down→healthy. The router stamps
+    /// each pooled downstream connection with the epoch it was dialed
+    /// under; a mismatch means the peer bounced since then, so the stale
+    /// socket (pointing at the dead incarnation) is evicted and re-dialed
+    /// instead of burning a failover on its inevitable write error.
+    epoch: AtomicU64,
 }
 
 impl Replica {
@@ -62,7 +69,13 @@ impl Replica {
             in_flight: AtomicU64::new(0),
             backoff_ms: AtomicU64::new(0),
             probe_wait_ms: AtomicU64::new(0),
+            epoch: AtomicU64::new(0),
         }
+    }
+
+    /// Current health-transition epoch (see the field doc).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
     }
 
     pub fn health(&self) -> ReplicaHealth {
@@ -123,6 +136,7 @@ impl Membership {
             .state
             .swap(ReplicaHealth::Down as u8, Ordering::Relaxed);
         if was == ReplicaHealth::Healthy as u8 {
+            r.epoch.fetch_add(1, Ordering::Relaxed);
             log_warn!("fleet replica {} marked down", r.addr);
         }
     }
@@ -134,6 +148,7 @@ impl Membership {
             .swap(ReplicaHealth::Healthy as u8, Ordering::Relaxed);
         r.backoff_ms.store(0, Ordering::Relaxed);
         if was == ReplicaHealth::Down as u8 {
+            r.epoch.fetch_add(1, Ordering::Relaxed);
             log_info!("fleet replica {} healthy again", r.addr);
         }
     }
@@ -149,28 +164,43 @@ impl Membership {
             .spawn(move || loop {
                 std::thread::sleep(interval);
                 let step_ms = interval.as_millis().max(1) as u64;
-                for (i, r) in me.replicas.iter().enumerate() {
-                    // Down replicas probe on an exponential schedule:
-                    // skip this tick while backoff is still elapsing.
-                    let wait = r.probe_wait_ms.load(Ordering::Relaxed);
-                    if wait > step_ms {
-                        r.probe_wait_ms.store(wait - step_ms, Ordering::Relaxed);
-                        continue;
-                    }
-                    if probe(&r.addr, interval).is_ok() {
-                        me.mark_healthy(i);
-                        r.probe_wait_ms.store(0, Ordering::Relaxed);
-                    } else {
-                        me.mark_down(i);
-                        // 1x → 2x → 4x … 32x the interval between probes.
-                        let next = (r.backoff_ms.load(Ordering::Relaxed) * 2)
-                            .clamp(step_ms, step_ms * 32);
-                        r.backoff_ms.store(next, Ordering::Relaxed);
-                        r.probe_wait_ms.store(next, Ordering::Relaxed);
-                    }
-                }
+                prober_tick(&me, step_ms, &mut |_, addr| probe(addr, interval).is_ok());
             })
             .expect("spawn fleet prober");
+    }
+}
+
+/// One prober pass over the replica set: probe every replica whose
+/// backoff has elapsed, restore/down each from the result, and advance
+/// the per-replica exponential schedule (1x → 2x → 4x … 32x the tick
+/// interval between probes of a dead peer; a successful probe resets it).
+/// `step_ms` is the tick cadence in milliseconds and `probe` answers
+/// whether a replica responded — no clock, no sockets, so tests drive
+/// ticks with a fake probe instead of sleeping.
+pub(crate) fn prober_tick(
+    me: &Membership,
+    step_ms: u64,
+    probe: &mut dyn FnMut(usize, &str) -> bool,
+) {
+    for (i, r) in me.replicas.iter().enumerate() {
+        // Down replicas probe on an exponential schedule: skip this
+        // tick while backoff is still elapsing.
+        let wait = r.probe_wait_ms.load(Ordering::Relaxed);
+        if wait > step_ms {
+            r.probe_wait_ms.store(wait - step_ms, Ordering::Relaxed);
+            continue;
+        }
+        if probe(i, &r.addr) {
+            me.mark_healthy(i);
+            r.probe_wait_ms.store(0, Ordering::Relaxed);
+        } else {
+            me.mark_down(i);
+            // 1x → 2x → 4x … 32x the interval between probes.
+            let next = (r.backoff_ms.load(Ordering::Relaxed) * 2)
+                .clamp(step_ms, step_ms * 32);
+            r.backoff_ms.store(next, Ordering::Relaxed);
+            r.probe_wait_ms.store(next, Ordering::Relaxed);
+        }
     }
 }
 
@@ -214,5 +244,78 @@ mod tests {
     fn probe_fails_fast_on_dead_port() {
         // Reserved port 1 on localhost: nothing listens there.
         assert!(probe("127.0.0.1:1", Duration::from_millis(200)).is_err());
+    }
+
+    /// Drive `ticks` fake-clock prober ticks against one always-failing
+    /// replica, returning the tick numbers (1-based) at which a probe
+    /// actually fired.
+    fn failing_probe_ticks(m: &Membership, ticks: u64, step_ms: u64) -> Vec<u64> {
+        let mut fired = Vec::new();
+        for tick in 1..=ticks {
+            prober_tick(m, step_ms, &mut |_, _| {
+                fired.push(tick);
+                false
+            });
+        }
+        fired
+    }
+
+    #[test]
+    fn prober_backoff_doubles_to_32x_then_holds() {
+        let m = Membership::new(&["a:1".into()]).unwrap();
+        let fired = failing_probe_ticks(&m, 200, 100);
+        // First probe fires on the first tick (no backoff yet); every
+        // failure then doubles the gap until it pins at 32 ticks.
+        let gaps: Vec<u64> = fired.windows(2).map(|w| w[1] - w[0]).collect();
+        assert_eq!(fired[0], 1, "first probe must not wait");
+        assert_eq!(&gaps[..6], &[1, 2, 4, 8, 16, 32], "schedule: {gaps:?}");
+        assert!(
+            gaps[6..].iter().all(|&g| g == 32),
+            "backoff must hold at 32x: {gaps:?}"
+        );
+        assert_eq!(m.replicas[0].health(), ReplicaHealth::Down);
+    }
+
+    #[test]
+    fn successful_probe_resets_backoff_and_restores_health() {
+        let m = Membership::new(&["a:1".into()]).unwrap();
+        // Fail long enough to reach the 32x cap…
+        failing_probe_ticks(&m, 70, 100);
+        assert_eq!(m.replicas[0].health(), ReplicaHealth::Down);
+        // …wait out the pending backoff, then answer one probe.
+        let mut answered = false;
+        for _ in 0..33 {
+            prober_tick(&m, 100, &mut |_, _| {
+                answered = true;
+                true
+            });
+            if answered {
+                break;
+            }
+        }
+        assert!(answered, "probe never fired after the capped backoff");
+        assert_eq!(m.replicas[0].health(), ReplicaHealth::Healthy);
+        // The reset must restart the schedule at 1x, not resume at 32x.
+        let fired = failing_probe_ticks(&m, 8, 100);
+        let gaps: Vec<u64> = fired.windows(2).map(|w| w[1] - w[0]).collect();
+        assert_eq!(fired[0], 1, "healthy replicas probe every tick");
+        assert_eq!(&gaps[..2], &[1, 2], "backoff did not reset: {gaps:?}");
+    }
+
+    #[test]
+    fn health_epoch_bumps_only_on_transitions() {
+        let m = Membership::new(&["a:1".into(), "b:2".into()]).unwrap();
+        let r = &m.replicas[0];
+        assert_eq!(r.epoch(), 0);
+        m.mark_down(0);
+        assert_eq!(r.epoch(), 1);
+        m.mark_down(0); // already down: no transition
+        assert_eq!(r.epoch(), 1);
+        m.mark_healthy(0);
+        assert_eq!(r.epoch(), 2);
+        m.mark_healthy(0); // already healthy: no transition
+        assert_eq!(r.epoch(), 2);
+        // Other replicas are untouched.
+        assert_eq!(m.replicas[1].epoch(), 0);
     }
 }

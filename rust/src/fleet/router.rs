@@ -19,6 +19,10 @@
 //! next alive successor — fail-open, no client-visible error; the
 //! successor recomputes the prediction (a cache miss, not a wrong
 //! answer, since every replica runs the same deterministic pipeline).
+//! A request carrying a deadline extension budgets its own failover:
+//! once the budget is spent the router answers with an explicit
+//! deadline-expired error instead of retrying toward a reply every
+//! replica would shed at admission anyway.
 //!
 //! Concurrency model: one blocking thread per client connection, each
 //! owning its private downstream connections (created lazily per
@@ -31,19 +35,20 @@ use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::cache::CacheKey;
 use crate::simulator::CostSweep;
+use crate::util::faults;
 use crate::util::json::{Json, JsonObj};
 use crate::util::rng::splitmix64;
 use crate::wire::frame::{self, Decoded, FrameKind, DEFAULT_MAX_PAYLOAD};
 use crate::wire::{codec, WireClient};
 use crate::{log_info, log_warn};
 
-use super::membership::Membership;
+use super::membership::{Membership, Replica};
 
 /// Consistent-hash ring: `vnodes` pseudo-random points per replica on
 /// the u64 circle, a key owned by the first point at or clockwise of its
@@ -204,8 +209,11 @@ pub fn serve(addr: &str, cfg: RouterConfig, on_bound: impl FnOnce(u16)) -> Resul
 /// One client connection: read frames, route/answer each, until EOF.
 fn handle_client(mut stream: TcpStream, router: &Router) -> Result<()> {
     let _ = stream.set_nodelay(true);
-    // Lazily-opened downstream connections, private to this client.
-    let mut downstream: HashMap<usize, WireClient> = HashMap::new();
+    // Lazily-opened downstream connections, private to this client. Each
+    // entry records the replica's health epoch at dial time: if the peer
+    // bounced since (down → healthy), the pooled socket points at the
+    // dead incarnation and is re-dialed instead of wasting a failover.
+    let mut downstream: HashMap<usize, (u64, WireClient)> = HashMap::new();
     let mut rbuf: Vec<u8> = Vec::new();
     let mut chunk = vec![0u8; 64 * 1024];
     loop {
@@ -251,7 +259,7 @@ const SERVER_ONLY: &[u8] = b"client sent a server-only frame kind";
 /// Route or answer one frame; returns the reply (kind, payload).
 fn answer(
     router: &Router,
-    downstream: &mut HashMap<usize, WireClient>,
+    downstream: &mut HashMap<usize, (u64, WireClient)>,
     kind: FrameKind,
     payload: &[u8],
 ) -> (FrameKind, Vec<u8>) {
@@ -278,16 +286,20 @@ fn answer(
 /// overflow and failing over past dead replicas.
 fn route_request(
     router: &Router,
-    downstream: &mut HashMap<usize, WireClient>,
+    downstream: &mut HashMap<usize, (u64, WireClient)>,
     payload: &[u8],
 ) -> (FrameKind, Vec<u8>) {
     // Recompute the replica's cache key: same fingerprint, same default
     // target policy. A payload the replica would reject is rejected here
-    // with the same kind of request-level error.
-    let key = match codec::decode_request(payload) {
-        Ok((graph, target)) => {
-            CacheKey::new(CostSweep::of(&graph).fingerprint, &target.unwrap_or_default())
-        }
+    // with the same kind of request-level error. The deadline extension
+    // (if any) also budgets the *failover loop*: retrying past the
+    // client's deadline only produces an answer the replica would shed
+    // anyway, so the router gives up first with an explicit error.
+    let (key, deadline) = match codec::decode_request(payload) {
+        Ok((graph, target, deadline_ms)) => (
+            CacheKey::new(CostSweep::of(&graph).fingerprint, &target.unwrap_or_default()),
+            deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms as u64)),
+        ),
         Err(e) => return (FrameKind::Error, e.into_bytes()),
     };
     let order = router.ring.preference(key.as_u128());
@@ -324,6 +336,16 @@ fn route_request(
 
     let owner = order[0];
     for (attempt, &i) in candidates.iter().enumerate() {
+        // Deadline-budgeted failover: once the client's budget is spent,
+        // further retries can only yield a reply the replica would shed
+        // at admission. Shed here instead, with the attempt count.
+        if deadline.is_some_and(|d| d <= Instant::now()) {
+            return (
+                FrameKind::Error,
+                format!("deadline expired during fleet failover ({attempt} attempts made)")
+                    .into_bytes(),
+            );
+        }
         let r = &members.replicas[i];
         if attempt == 0 {
             r.routed.fetch_add(1, Ordering::Relaxed);
@@ -334,7 +356,7 @@ fn route_request(
             r.failed_over.fetch_add(1, Ordering::Relaxed);
         }
         r.in_flight.fetch_add(1, Ordering::Relaxed);
-        let result = forward_once(downstream, i, &r.addr, payload);
+        let result = forward_once(downstream, i, r, payload);
         r.in_flight.fetch_sub(1, Ordering::Relaxed);
         match result {
             Ok(reply) => return reply,
@@ -357,20 +379,43 @@ fn route_request(
 /// request payload under this connection's own seq, wait for its reply.
 /// `Err` = transport failure (caller fails over); a request-level error
 /// from the replica is a successful forward and flows back to the client.
+///
+/// Pool hygiene: the entry is keyed by the replica's health epoch at
+/// dial time. A replica that went down and recovered bumps its epoch
+/// twice, so the stale socket (connected to the dead incarnation) is
+/// evicted and re-dialed here rather than discovered the hard way as a
+/// mid-request write error and an unnecessary failover.
 fn forward_once(
-    downstream: &mut HashMap<usize, WireClient>,
+    downstream: &mut HashMap<usize, (u64, WireClient)>,
     i: usize,
-    addr: &str,
+    r: &Replica,
     payload: &[u8],
 ) -> Result<(FrameKind, Vec<u8>)> {
-    if !downstream.contains_key(&i) {
-        downstream.insert(i, WireClient::connect(addr)?);
+    if faults::fire("fleet:stall-peer") {
+        // A wedged peer never answers; surface it as a transport failure
+        // so the request fails over instead of hanging the client.
+        downstream.remove(&i);
+        anyhow::bail!("replica {} stalled (injected fault)", r.addr);
     }
-    let client = downstream.get_mut(&i).expect("just inserted");
+    if let Some(spike) = faults::spike("fleet:slow-peer") {
+        std::thread::sleep(spike);
+    }
+    let epoch = r.epoch();
+    if matches!(downstream.get(&i), Some((e, _)) if *e != epoch) {
+        downstream.remove(&i);
+    }
+    if !downstream.contains_key(&i) {
+        downstream.insert(i, (epoch, WireClient::connect(&r.addr)?));
+    }
+    let (_, client) = downstream.get_mut(&i).expect("just inserted");
     let seq = client.send_raw(FrameKind::Request, payload)?;
     let f = client.recv_frame()?;
     if f.seq != seq && f.seq != 0 {
-        anyhow::bail!("replica {addr} answered seq {} for request seq {seq}", f.seq);
+        anyhow::bail!(
+            "replica {} answered seq {} for request seq {seq}",
+            r.addr,
+            f.seq
+        );
     }
     Ok((f.kind, f.payload))
 }

@@ -57,6 +57,7 @@ COMMANDS
                  [--cache-file <dir>] [--cache-snapshot-every-s N]
                  [--cache-compact-bytes 67108864] [--cache-compact-ratio 0.5]
                  [--target-device a100[:MIG]]   (MIG: 1g.5gb|2g.10gb|3g.20gb|7g.40gb)
+                 [--breaker-threshold 3] [--breaker-cooldown-ms 5000]
                  [--fleet router|replica] [--fleet-replicas host:port,...]
                  [--fleet-vnodes 64] [--fleet-load-factor 1.25]
                  [--fleet-health-interval-s 1] [--fleet-warm-from host:port]
@@ -86,6 +87,7 @@ fn main() {
         "wire", "wire-addr", "max-connections", "idle-timeout-s", "event-loops",
         "fleet", "fleet-replicas", "fleet-vnodes", "fleet-load-factor",
         "fleet-health-interval-s", "fleet-warm-from",
+        "breaker-threshold", "breaker-cooldown-ms",
     ]) {
         Ok(a) => a,
         Err(e) => {
@@ -167,6 +169,10 @@ fn coordinator_options(args: &Args) -> Result<CoordinatorOptions> {
         .map_err(|e| anyhow!(e))?,
         cache,
         target: target_from_args(args)?,
+        breaker_threshold: args.get_u64("breaker-threshold", 3).max(1) as u32,
+        breaker_cooldown: std::time::Duration::from_millis(
+            args.get_u64("breaker-cooldown-ms", 5000),
+        ),
         ..Default::default()
     })
 }

@@ -1,0 +1,318 @@
+//! Deterministic seeded fault-injection harness (chaos testing).
+//!
+//! Generalizes the persistence crash-hook pattern (`cache/persist.rs`) into
+//! a process-wide registry of named injection points woven through the
+//! serving stack: backend errors/panics/latency spikes in the executor,
+//! dropped and torn frames in the wire reactor, slow/stalled peers in the
+//! fleet router, and disk write failures in the persistence store.
+//!
+//! A *fault plan* is a seed plus per-point firing probabilities:
+//!
+//! ```text
+//! DIPPM_FAULT_PLAN="53682:backend:panic=0.2,wire:torn-frame=0.05"
+//! ```
+//!
+//! Every injection point draws its decisions from its own PCG32 stream
+//! derived from the plan seed and the point name, so a given seed produces
+//! an identical per-point decision sequence on every run — chaos failures
+//! are replayable by re-running with the same plan string. Probabilities
+//! outside the plan default to 0 (the point never fires), and with no plan
+//! installed every check short-circuits on one relaxed atomic load.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Once, RwLock};
+use std::time::Duration;
+
+use super::rng::{hash_bytes, Rng};
+
+/// Every injection point the serving stack consults, in rough
+/// pipeline order. Plans naming any other point are rejected at parse
+/// time so typos fail loudly instead of silently never firing.
+pub const FAULT_POINTS: &[&str] = &[
+    "backend:error",   // whole predict batch returns an error
+    "backend:panic",   // backend panics mid-predict (caught by the supervisor)
+    "backend:latency", // predict stalls for a deterministic spike
+    "wire:drop-frame", // reactor silently discards a decoded request frame
+    "wire:torn-frame", // reactor writes half a reply frame, then closes
+    "fleet:slow-peer", // router forwarding stalls before the downstream send
+    "fleet:stall-peer",// router treats the downstream peer as wedged (error)
+    "disk:write",      // persistence journal append fails
+];
+
+/// Millisecond range for injected latency spikes (`delay_ms` draws
+/// uniformly from this, inclusive).
+const SPIKE_MS: (u64, u64) = (2, 20);
+
+struct Point {
+    name: &'static str,
+    probability: f64,
+    rng: Mutex<Rng>,
+    checked: AtomicU64,
+    fired: AtomicU64,
+}
+
+/// A parsed, seeded fault plan. Install one process-wide with
+/// [`install`] (tests) or via `DIPPM_FAULT_PLAN` (CI / operators).
+pub struct FaultPlan {
+    seed: u64,
+    points: Vec<Point>,
+}
+
+impl FaultPlan {
+    /// Parse `"<seed>:<point>=<prob>[,<point>=<prob>...]"`. Point names
+    /// themselves contain `:`, so only the first `:` separates the seed.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let (seed_str, rest) = spec
+            .split_once(':')
+            .ok_or_else(|| format!("fault plan {spec:?} missing '<seed>:' prefix"))?;
+        let seed: u64 = seed_str
+            .trim()
+            .parse()
+            .map_err(|_| format!("fault plan seed {seed_str:?} is not a u64"))?;
+        let mut plan = FaultPlan { seed, points: Vec::new() };
+        for entry in rest.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (name, prob_str) = entry
+                .split_once('=')
+                .ok_or_else(|| format!("fault plan entry {entry:?} is not point=prob"))?;
+            let name = FAULT_POINTS
+                .iter()
+                .copied()
+                .find(|p| *p == name.trim())
+                .ok_or_else(|| {
+                    format!("unknown fault point {:?} (known: {FAULT_POINTS:?})", name.trim())
+                })?;
+            let probability: f64 = prob_str
+                .trim()
+                .parse()
+                .map_err(|_| format!("fault probability {prob_str:?} is not a number"))?;
+            if !(0.0..=1.0).contains(&probability) {
+                return Err(format!("fault probability {probability} outside [0, 1]"));
+            }
+            if plan.points.iter().any(|p| p.name == name) {
+                return Err(format!("fault point {name:?} listed twice"));
+            }
+            plan.points.push(Point {
+                name,
+                probability,
+                rng: Mutex::new(Rng::new(seed).split(hash_bytes(name.as_bytes()))),
+                checked: AtomicU64::new(0),
+                fired: AtomicU64::new(0),
+            });
+        }
+        if plan.points.is_empty() {
+            return Err(format!("fault plan {spec:?} names no injection points"));
+        }
+        Ok(plan)
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn point(&self, name: &str) -> Option<&Point> {
+        self.points.iter().find(|p| p.name == name)
+    }
+
+    /// Draw the next decision for `name`. Deterministic per (seed, point):
+    /// the k-th call for a point always returns the same answer for the
+    /// same seed, regardless of what other points drew in between.
+    pub fn should_fire(&self, name: &str) -> bool {
+        let Some(p) = self.point(name) else { return false };
+        p.checked.fetch_add(1, Ordering::Relaxed);
+        let fired = p
+            .rng
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .bool(p.probability);
+        if fired {
+            p.fired.fetch_add(1, Ordering::Relaxed);
+        }
+        fired
+    }
+
+    /// Like [`should_fire`], but a firing also draws a deterministic spike
+    /// duration (for latency-style points).
+    pub fn spike(&self, name: &str) -> Option<Duration> {
+        let Some(p) = self.point(name) else { return None };
+        p.checked.fetch_add(1, Ordering::Relaxed);
+        let mut rng = p.rng.lock().unwrap_or_else(|e| e.into_inner());
+        if !rng.bool(p.probability) {
+            return None;
+        }
+        let ms = rng.int_in(SPIKE_MS.0 as i64, SPIKE_MS.1 as i64) as u64;
+        drop(rng);
+        p.fired.fetch_add(1, Ordering::Relaxed);
+        Some(Duration::from_millis(ms))
+    }
+
+    /// `(point, checked, fired)` counters, for chaos-run logs.
+    pub fn counters(&self) -> Vec<(&'static str, u64, u64)> {
+        self.points
+            .iter()
+            .map(|p| {
+                (
+                    p.name,
+                    p.checked.load(Ordering::Relaxed),
+                    p.fired.load(Ordering::Relaxed),
+                )
+            })
+            .collect()
+    }
+}
+
+// Process-global plan. `ACTIVE` is the fast path: with no plan installed
+// every `fire()` on the hot serving path costs one relaxed load.
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static ENV_INIT: Once = Once::new();
+
+fn plan_slot() -> &'static RwLock<Option<Arc<FaultPlan>>> {
+    static SLOT: RwLock<Option<Arc<FaultPlan>>> = RwLock::new(None);
+    &SLOT
+}
+
+fn init_from_env() {
+    ENV_INIT.call_once(|| {
+        if let Ok(spec) = std::env::var("DIPPM_FAULT_PLAN") {
+            if spec.trim().is_empty() {
+                return;
+            }
+            match FaultPlan::parse(&spec) {
+                Ok(plan) => {
+                    eprintln!("fault plan armed from DIPPM_FAULT_PLAN (seed {})", plan.seed);
+                    install(Some(plan));
+                }
+                Err(e) => {
+                    eprintln!("ignoring invalid DIPPM_FAULT_PLAN: {e}");
+                }
+            }
+        }
+    });
+}
+
+/// Install (or clear, with `None`) the process-wide fault plan. Chaos
+/// tests install per-scenario plans; operators use `DIPPM_FAULT_PLAN`.
+pub fn install(plan: Option<FaultPlan>) {
+    ENV_INIT.call_once(|| {}); // tests installing first suppress env arming
+    let mut slot = plan_slot().write().unwrap_or_else(|e| e.into_inner());
+    ACTIVE.store(plan.is_some(), Ordering::Release);
+    *slot = plan.map(Arc::new);
+}
+
+/// The currently-armed plan, if any (for counter dumps).
+pub fn active_plan() -> Option<Arc<FaultPlan>> {
+    init_from_env();
+    if !ACTIVE.load(Ordering::Acquire) {
+        return None;
+    }
+    plan_slot()
+        .read()
+        .unwrap_or_else(|e| e.into_inner())
+        .clone()
+}
+
+/// Should the named injection point fire now? `false` when no plan is
+/// armed or the plan does not mention the point.
+pub fn fire(name: &str) -> bool {
+    match active_plan() {
+        Some(plan) => plan.should_fire(name),
+        None => false,
+    }
+}
+
+/// Latency-style check: `Some(spike)` when the point fires.
+pub fn spike(name: &str) -> Option<Duration> {
+    match active_plan() {
+        Some(plan) => plan.spike(name),
+        None => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("").is_err());
+        assert!(FaultPlan::parse("no-seed").is_err());
+        assert!(FaultPlan::parse("x:backend:panic=0.5").is_err());
+        assert!(FaultPlan::parse("7:unknown:point=0.5").is_err());
+        assert!(FaultPlan::parse("7:backend:panic").is_err());
+        assert!(FaultPlan::parse("7:backend:panic=1.5").is_err());
+        assert!(FaultPlan::parse("7:backend:panic=0.1,backend:panic=0.2").is_err());
+        assert!(FaultPlan::parse("7:").is_err());
+    }
+
+    #[test]
+    fn parse_accepts_full_point_set() {
+        let spec = format!(
+            "42:{}",
+            FAULT_POINTS
+                .iter()
+                .map(|p| format!("{p}=0.5"))
+                .collect::<Vec<_>>()
+                .join(",")
+        );
+        let plan = FaultPlan::parse(&spec).unwrap();
+        assert_eq!(plan.seed(), 42);
+        assert_eq!(plan.counters().len(), FAULT_POINTS.len());
+    }
+
+    #[test]
+    fn identical_seeds_reproduce_identical_sequences() {
+        let spec = "1234:backend:panic=0.3,wire:torn-frame=0.7";
+        let a = FaultPlan::parse(spec).unwrap();
+        let b = FaultPlan::parse(spec).unwrap();
+        for point in ["backend:panic", "wire:torn-frame"] {
+            let da: Vec<bool> = (0..256).map(|_| a.should_fire(point)).collect();
+            let db: Vec<bool> = (0..256).map(|_| b.should_fire(point)).collect();
+            assert_eq!(da, db, "seed-identical plans diverged at {point}");
+            assert!(da.iter().any(|&x| x), "{point} never fired at p=0.3+");
+            assert!(!da.iter().all(|&x| x), "{point} always fired at p<1");
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let a = FaultPlan::parse("1:backend:error=0.5").unwrap();
+        let b = FaultPlan::parse("2:backend:error=0.5").unwrap();
+        let da: Vec<bool> = (0..128).map(|_| a.should_fire("backend:error")).collect();
+        let db: Vec<bool> = (0..128).map(|_| b.should_fire("backend:error")).collect();
+        assert_ne!(da, db);
+    }
+
+    #[test]
+    fn probability_extremes() {
+        let plan = FaultPlan::parse("9:backend:error=0,backend:panic=1").unwrap();
+        assert!((0..100).all(|_| !plan.should_fire("backend:error")));
+        assert!((0..100).all(|_| plan.should_fire("backend:panic")));
+        // Unlisted points never fire.
+        assert!(!plan.should_fire("disk:write"));
+    }
+
+    #[test]
+    fn spikes_are_bounded_and_deterministic() {
+        let a = FaultPlan::parse("5:backend:latency=1").unwrap();
+        let b = FaultPlan::parse("5:backend:latency=1").unwrap();
+        for _ in 0..64 {
+            let (sa, sb) = (a.spike("backend:latency"), b.spike("backend:latency"));
+            assert_eq!(sa, sb);
+            let ms = sa.expect("p=1 must fire").as_millis() as u64;
+            assert!((SPIKE_MS.0..=SPIKE_MS.1).contains(&ms), "spike {ms}ms");
+        }
+    }
+
+    #[test]
+    fn counters_track_checked_and_fired() {
+        let plan = FaultPlan::parse("3:disk:write=1,wire:drop-frame=0").unwrap();
+        for _ in 0..10 {
+            plan.should_fire("disk:write");
+            plan.should_fire("wire:drop-frame");
+        }
+        let counters = plan.counters();
+        let disk = counters.iter().find(|c| c.0 == "disk:write").unwrap();
+        let drop = counters.iter().find(|c| c.0 == "wire:drop-frame").unwrap();
+        assert_eq!((disk.1, disk.2), (10, 10));
+        assert_eq!((drop.1, drop.2), (10, 0));
+    }
+}

@@ -10,9 +10,13 @@
 //! * [`proptest`] — a miniature property-testing harness with shrinking.
 //! * [`bench`] — a criterion-less measurement harness for `cargo bench`.
 //! * [`poll`] — readiness polling shim (poll(2) FFI) for the wire reactor.
+//! * [`faults`] — deterministic seeded fault-injection harness
+//!   (`DIPPM_FAULT_PLAN`) consulted by the executor, reactor, fleet
+//!   router, and persistence store.
 
 pub mod args;
 pub mod bench;
+pub mod faults;
 pub mod json;
 pub mod logging;
 pub mod poll;

@@ -48,7 +48,20 @@ impl WireClient {
     /// Queue one predict request without waiting for the reply; returns
     /// the sequence id the reply will carry. Call repeatedly to pipeline.
     pub fn send_predict(&mut self, graph: &Graph, target: Option<&str>) -> Result<u32> {
-        let payload = codec::encode_request(graph, target);
+        self.send_predict_deadline(graph, target, None)
+    }
+
+    /// Like [`WireClient::send_predict`], carrying an optional deadline
+    /// budget (milliseconds from server admission): the server sheds the
+    /// request with an error reply once the budget is spent instead of
+    /// executing it.
+    pub fn send_predict_deadline(
+        &mut self,
+        graph: &Graph,
+        target: Option<&str>,
+        deadline_ms: Option<u32>,
+    ) -> Result<u32> {
+        let payload = codec::encode_request_with_deadline(graph, target, deadline_ms);
         self.send_raw(FrameKind::Request, &payload)
     }
 

@@ -31,9 +31,17 @@
 //!
 //! `flags`: bit0 kernel, bit1 strides, bit2 units, bit3 axis.
 //!
+//! After the node list a request may carry an optional trailing *deadline
+//! extension*: `tag u8 (must be 1) | deadline_ms u32` — the client's
+//! budget in milliseconds, measured from server admission. A request
+//! ending at the node list has no deadline (the pre-extension byte format,
+//! still emitted by [`encode_request`], decodes unchanged). The frame
+//! header itself is frozen; the extension rides inside the payload.
+//!
 //! Response payload v1: `latency f64 | memory f64 | energy f64 | mig u8
-//! (0 none / 1 present) + [u16 len + bytes]` — the same shape the cache's
-//! snapshot encoding proved out.
+//! (0 none / 1 present) + [u16 len + bytes] | degraded u8 (0/1)` — the
+//! same shape the cache's snapshot encoding proved out, plus the
+//! degraded-mode marker (decoders tolerate its absence from older peers).
 
 use crate::cache::Target;
 use crate::coordinator::Prediction;
@@ -134,6 +142,17 @@ fn op_ordinal(op: OpKind) -> u8 {
 
 /// Encode a predict request. `target` = `None` uses the server's default.
 pub fn encode_request(graph: &Graph, target: Option<&str>) -> Vec<u8> {
+    encode_request_with_deadline(graph, target, None)
+}
+
+/// Encode a predict request carrying an optional deadline budget
+/// (milliseconds from admission). `None` emits the pre-extension byte
+/// format exactly.
+pub fn encode_request_with_deadline(
+    graph: &Graph,
+    target: Option<&str>,
+    deadline_ms: Option<u32>,
+) -> Vec<u8> {
     // ~40 bytes/node covers every modelgen family without reallocation.
     let mut out = Vec::with_capacity(64 + 48 * graph.nodes.len());
     put_str(&mut out, target.unwrap_or(""));
@@ -183,14 +202,19 @@ pub fn encode_request(graph: &Graph, target: Option<&str>) -> Vec<u8> {
             put_u32(&mut out, d as u32);
         }
     }
+    if let Some(ms) = deadline_ms {
+        out.push(1);
+        put_u32(&mut out, ms);
+    }
     out
 }
 
-/// Decode a predict request from a borrowed frame payload. The graph is
-/// fully validated (topological order, shape consistency) before it is
-/// returned — a hostile payload is an `Err`, never a malformed `Graph` in
-/// the admission path.
-pub fn decode_request(payload: &[u8]) -> Result<(Graph, Option<Target>), String> {
+/// Decode a predict request from a borrowed frame payload into
+/// `(graph, target, deadline_ms)`. The graph is fully validated
+/// (topological order, shape consistency) before it is returned — a
+/// hostile payload is an `Err`, never a malformed `Graph` in the
+/// admission path.
+pub fn decode_request(payload: &[u8]) -> Result<(Graph, Option<Target>, Option<u32>), String> {
     let mut r = Reader::new(payload);
     let target_s = r.str()?;
     let target = if target_s.is_empty() {
@@ -264,6 +288,16 @@ pub fn decode_request(payload: &[u8]) -> Result<(Graph, Option<Target>), String>
             name: format!("n{id}"),
         });
     }
+    // Optional trailing deadline extension (absent = no deadline, the
+    // pre-extension format).
+    let deadline_ms = if r.remaining() > 0 {
+        match r.u8()? {
+            1 => Some(r.u32()?),
+            other => return Err(format!("bad deadline extension tag {other}")),
+        }
+    } else {
+        None
+    };
     if r.remaining() != 0 {
         return Err(format!("request has {} trailing bytes", r.remaining()));
     }
@@ -274,7 +308,7 @@ pub fn decode_request(payload: &[u8]) -> Result<(Graph, Option<Target>), String>
         variant,
     };
     graph.validate()?;
-    Ok((graph, target))
+    Ok((graph, target, deadline_ms))
 }
 
 // --- response --------------------------------------------------------------
@@ -292,6 +326,7 @@ pub fn encode_prediction(p: &Prediction) -> Vec<u8> {
             put_str(&mut out, name);
         }
     }
+    out.push(p.degraded as u8);
     out
 }
 
@@ -306,6 +341,16 @@ pub fn decode_prediction(payload: &[u8]) -> Result<Prediction, String> {
         1 => Some(r.str()?.to_string()),
         other => return Err(format!("bad mig tag {other}")),
     };
+    // Trailing degraded marker; tolerate its absence (older peers).
+    let degraded = if r.remaining() > 0 {
+        match r.u8()? {
+            0 => false,
+            1 => true,
+            other => return Err(format!("bad degraded tag {other}")),
+        }
+    } else {
+        false
+    };
     if r.remaining() != 0 {
         return Err(format!("response has {} trailing bytes", r.remaining()));
     }
@@ -314,6 +359,7 @@ pub fn decode_prediction(payload: &[u8]) -> Result<Prediction, String> {
         memory_mb,
         energy_j,
         mig_profile,
+        degraded,
     })
 }
 
@@ -352,9 +398,10 @@ mod tests {
         for (i, fam) in ALL_FAMILIES.iter().enumerate() {
             let g = fam.generate(i);
             let payload = encode_request(&g, None);
-            let (back, target) = decode_request(&payload).unwrap();
+            let (back, target, deadline) = decode_request(&payload).unwrap();
             assert!(structurally_equal(&g, &back), "{fam:?}");
             assert_eq!(target, None);
+            assert_eq!(deadline, None);
             assert_eq!(back.family, g.family);
             assert_eq!(back.variant, g.variant);
             // The cache key must be transport-invariant.
@@ -370,11 +417,32 @@ mod tests {
     fn request_carries_target() {
         let g = ALL_FAMILIES[0].generate(0);
         let payload = encode_request(&g, Some("a100:2g.10gb"));
-        let (_, target) = decode_request(&payload).unwrap();
+        let (_, target, _) = decode_request(&payload).unwrap();
         assert_eq!(target.unwrap().to_string(), "a100:2g.10gb");
         // A bad target is a decode error, mirroring the JSON protocol.
         let payload = encode_request(&g, Some("a100:9g.80gb"));
         assert!(decode_request(&payload).is_err());
+    }
+
+    #[test]
+    fn request_carries_deadline() {
+        let g = ALL_FAMILIES[0].generate(0);
+        let payload = encode_request_with_deadline(&g, None, Some(250));
+        let (back, _, deadline) = decode_request(&payload).unwrap();
+        assert!(structurally_equal(&g, &back));
+        assert_eq!(deadline, Some(250));
+        // `None` emits the pre-extension byte format exactly.
+        assert_eq!(
+            encode_request_with_deadline(&g, None, None),
+            encode_request(&g, None)
+        );
+        // A torn extension (tag without the budget) is a decode error.
+        let torn = &payload[..payload.len() - 2];
+        assert!(decode_request(torn).unwrap_err().contains("truncated"));
+        // Bytes after a complete extension are trailing garbage.
+        let mut padded = payload.clone();
+        padded.extend_from_slice(&[1, 0]);
+        assert!(decode_request(&padded).unwrap_err().contains("trailing"));
     }
 
     #[test]
@@ -394,10 +462,13 @@ mod tests {
         for cut in [full.len() / 4, full.len() / 2, full.len() - 1] {
             assert!(decode_request(&full[..cut]).is_err(), "cut {cut}");
         }
-        // Trailing garbage is rejected, not ignored.
+        // Trailing garbage is rejected, not ignored: a stray byte after
+        // the node list reads as a malformed deadline extension.
         let mut padded = full.clone();
         padded.push(0);
-        assert!(decode_request(&padded).unwrap_err().contains("trailing"));
+        assert!(decode_request(&padded)
+            .unwrap_err()
+            .contains("deadline extension tag"));
         // A structurally invalid graph (forward edge) fails validation.
         let mut g2 = g;
         g2.nodes[0].inputs = vec![5];
@@ -409,14 +480,17 @@ mod tests {
     #[test]
     fn prediction_roundtrip() {
         for mig in [None, Some("2g.10gb".to_string())] {
-            let p = Prediction {
-                latency_ms: 1.25,
-                memory_mb: 2865.0,
-                energy_j: 0.75,
-                mig_profile: mig,
-            };
-            let payload = encode_prediction(&p);
-            assert_eq!(decode_prediction(&payload).unwrap(), p);
+            for degraded in [false, true] {
+                let p = Prediction {
+                    latency_ms: 1.25,
+                    memory_mb: 2865.0,
+                    energy_j: 0.75,
+                    mig_profile: mig.clone(),
+                    degraded,
+                };
+                let payload = encode_prediction(&p);
+                assert_eq!(decode_prediction(&payload).unwrap(), p);
+            }
         }
         assert!(decode_prediction(&[1, 2, 3]).is_err());
         let mut bad_tag = encode_prediction(&Prediction {
@@ -424,9 +498,28 @@ mod tests {
             memory_mb: 0.0,
             energy_j: 0.0,
             mig_profile: None,
+            degraded: false,
         });
         bad_tag[24] = 9;
         assert!(decode_prediction(&bad_tag).is_err());
+    }
+
+    #[test]
+    fn prediction_decode_tolerates_missing_degraded_marker() {
+        // An older peer's encoding ends at the mig field; it must decode
+        // as non-degraded, not error.
+        let p = Prediction {
+            latency_ms: 1.0,
+            memory_mb: 2.0,
+            energy_j: 3.0,
+            mig_profile: Some("1g.5gb".into()),
+            degraded: true,
+        };
+        let mut payload = encode_prediction(&p);
+        payload.pop();
+        let back = decode_prediction(&payload).unwrap();
+        assert!(!back.degraded);
+        assert_eq!(back.mig_profile, p.mig_profile);
     }
 
     #[test]

@@ -28,6 +28,10 @@
 //! frame and closes (it cannot know the unknown version's framing, so
 //! resynchronization is impossible). New payload fields ride behind new
 //! kinds or a version bump — never by reinterpreting existing ones.
+//! Optional *payload-level* extensions (the request deadline, the
+//! response degraded marker — see `codec`) live inside the payload bytes
+//! where old decoders either tolerate or cleanly reject them; the header
+//! never grows.
 
 use std::fmt;
 

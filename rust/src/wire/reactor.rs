@@ -39,6 +39,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::coordinator::{Coordinator, Prediction};
+use crate::util::faults;
 use crate::util::poll::{poll, Fd, PollEntry};
 use crate::util::threadpool::ThreadPool;
 use crate::{log_debug, log_info, log_warn};
@@ -124,6 +125,18 @@ impl Conn {
     }
 
     fn push_frame(&mut self, kind: FrameKind, seq: u32, payload: &[u8], wire: &WireMetrics) {
+        // Chaos: a torn frame — half the encoded reply goes out, then the
+        // connection closes. The client sees a truncated stream + EOF,
+        // exactly the signature of a server dying mid-write.
+        if faults::fire("wire:torn-frame") {
+            let mut tmp = Vec::with_capacity(frame::HEADER_LEN + payload.len());
+            frame::encode_into(kind, seq, payload, &mut tmp);
+            tmp.truncate((frame::HEADER_LEN + payload.len()) / 2);
+            wire.tx(1, tmp.len() as u64);
+            self.wbuf.extend_from_slice(&tmp);
+            self.closing = true;
+            return;
+        }
         frame::encode_into(kind, seq, payload, &mut self.wbuf);
         wire.tx(1, (frame::HEADER_LEN + payload.len()) as u64);
     }
@@ -370,6 +383,13 @@ fn pump_reads(
                 consumed,
             }) => {
                 wire.frames_rx.fetch_add(1, Ordering::Relaxed);
+                // Chaos: silently discard a decoded request frame — the
+                // client never gets a reply for this seq and must recover
+                // via its own deadline/timeout.
+                if kind == FrameKind::Request && faults::fire("wire:drop-frame") {
+                    consumed_total += consumed;
+                    continue;
+                }
                 // Borrow dance: the payload borrows rbuf, and dispatch
                 // needs &mut conn to queue the reply. Decode the request
                 // in place (zero-copy), then drop the borrow.
@@ -425,9 +445,10 @@ fn dispatch(kind: FrameKind, payload: &[u8], coordinator: &Coordinator) -> Dispa
     match kind {
         FrameKind::Request => match codec::decode_request(payload) {
             Err(e) => Dispatch::RequestError(e),
-            Ok((graph, target)) => {
+            Ok((graph, target, deadline_ms)) => {
                 let target = target.unwrap_or_else(|| coordinator.default_target().clone());
-                let rx = coordinator.submit_to(graph, target);
+                let budget = deadline_ms.map(|ms| Duration::from_millis(ms as u64));
+                let rx = coordinator.submit_deadline(graph, target, budget);
                 // Cache hits (and tombstones) replied inside submit_to:
                 // collect them now and the hot path never parks state.
                 match rx.try_recv() {

@@ -1,0 +1,486 @@
+//! Chaos: deterministic fault-injection runs over the serving stack.
+//!
+//! Every scenario arms a seeded [`FaultPlan`] (`util::faults`), drives
+//! real traffic through a coordinator (and, for wire faults, a reactor),
+//! and asserts the robustness invariants the supervision layer promises:
+//!
+//! * **exactly-one-reply** — under backend errors, panics and latency
+//!   spikes, every submitted request gets exactly one reply (`Ok` or
+//!   `Err`), and the request counter never drifts from the reply count;
+//! * **breaker lifecycle** — injected panics trip the circuit breaker,
+//!   misses are then served degraded (tagged, never cached) by the
+//!   simulator fallback, and once faults stop the half-open probe closes
+//!   the breaker again — all observable through `Metrics`/`cache_stats`;
+//! * **deadline shedding** — an expired budget shed at admission or
+//!   pre-execution never reaches the backend;
+//! * **quarantine** — a key that crashes the backend twice is poisoned
+//!   (short-TTL tombstone) instead of crashing a third backend;
+//! * **determinism** — identical plan seeds reproduce identical
+//!   per-point injection sequences end to end;
+//! * **wire survival** — torn/dropped frames cost at most the affected
+//!   connection; the reactor keeps serving new ones.
+//!
+//! The fault plan is process-global, so every test serializes on one
+//! mutex and disarms the plan on scenario exit (drop guard). The base
+//! seed comes from `DIPPM_CHAOS_SEED` (CI matrixes it); each scenario
+//! derives its own stream so seeds never collide across tests.
+
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+use dippm::coordinator::{
+    protocol, Backend, BatchFormerMode, Coordinator, CoordinatorOptions, PredictRequest,
+    RawOutcome,
+};
+use dippm::modelgen::{Family, ALL_FAMILIES};
+use dippm::util::faults::{self, FaultPlan};
+use dippm::wire::{reactor, ReactorConfig, WireClient};
+
+/// One plan at a time: the fault registry is process-global and cargo
+/// runs test threads in parallel.
+static CHAOS_LOCK: Mutex<()> = Mutex::new(());
+
+/// Plan guard: holds the chaos lock and disarms the plan on drop, so a
+/// failing scenario cannot leak faults into the next one.
+struct ArmedPlan {
+    _guard: MutexGuard<'static, ()>,
+}
+
+impl Drop for ArmedPlan {
+    fn drop(&mut self) {
+        faults::install(None);
+    }
+}
+
+/// Serialize + arm `spec` (`""` = hold the lock with no plan armed).
+fn arm(spec: &str) -> ArmedPlan {
+    let guard = CHAOS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    if spec.is_empty() {
+        faults::install(None);
+    } else {
+        faults::install(Some(FaultPlan::parse(spec).expect("valid plan spec")));
+    }
+    ArmedPlan { _guard: guard }
+}
+
+/// CI matrixes this; locally every run uses the same default stream.
+fn base_seed() -> u64 {
+    std::env::var("DIPPM_CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(101)
+}
+
+fn opts(threads: usize, mode: BatchFormerMode) -> CoordinatorOptions {
+    CoordinatorOptions {
+        executor_threads: threads,
+        batch_former: mode,
+        max_wait: Duration::from_millis(2),
+        ..Default::default()
+    }
+}
+
+/// Distinct architectures per index — every request is a real cache miss.
+fn graph(i: usize) -> dippm::ir::Graph {
+    ALL_FAMILIES[i % ALL_FAMILIES.len()].generate(i)
+}
+
+/// Workers reply before folding counters into `Metrics`, so poll until
+/// `cond` holds (or time out and return the last snapshot).
+fn metrics_when(
+    coord: &Coordinator,
+    cond: impl Fn(&dippm::coordinator::Metrics) -> bool,
+) -> dippm::coordinator::Metrics {
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        let m = coord.metrics();
+        if cond(&m) || std::time::Instant::now() >= deadline {
+            return m;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+// ------------------------------------------------- exactly one reply ---
+
+#[test]
+fn every_request_replies_exactly_once_under_backend_chaos() {
+    let base = base_seed();
+    // Four independent fault-plan seeds (the acceptance floor): same
+    // invariant must hold under every injection sequence.
+    for round in 0..4u64 {
+        let seed = base.wrapping_mul(1000) + round;
+        let _plan = arm(&format!(
+            "{seed}:backend:panic=0.25,backend:error=0.25,backend:latency=0.3"
+        ));
+        let coord = Coordinator::start_sim(CoordinatorOptions {
+            // High threshold: keep the breaker closed so every request
+            // exercises the supervised backend path, not the fallback.
+            breaker_threshold: 1000,
+            ..opts(2, BatchFormerMode::Leader)
+        })
+        .unwrap();
+        const N: usize = 24;
+        let receivers: Vec<_> = (0..N).map(|i| coord.submit(graph(i))).collect();
+        let (mut oks, mut errs) = (0u64, 0u64);
+        for (i, rx) in receivers.into_iter().enumerate() {
+            match rx.recv_timeout(Duration::from_secs(30)) {
+                Ok(Ok(_)) => oks += 1,
+                Ok(Err(_)) => errs += 1,
+                Err(e) => panic!("request {i} never replied (seed {seed}): {e}"),
+            }
+            // Exactly one: the reply channel must now be spent.
+            assert!(
+                rx.try_recv().is_err(),
+                "request {i} got a second reply (seed {seed})"
+            );
+        }
+        assert_eq!(oks + errs, N as u64);
+        let m = metrics_when(&coord, |m| {
+            m.requests == N as u64 && m.backend_restarts == m.backend_panics
+        });
+        assert_eq!(m.requests, N as u64, "request counter drifted (seed {seed})");
+        assert!(m.batches >= 1);
+        // No deadline was set, so nothing may have been shed as expired.
+        assert_eq!(m.deadline_expired, 0, "phantom deadline sheds (seed {seed})");
+        // Panic accounting is consistent: each counted panic restarted a
+        // backend (or shutdown began, which it didn't — we're still up).
+        let plan = faults::active_plan().expect("plan armed");
+        let fired_panics = plan
+            .counters()
+            .iter()
+            .find(|c| c.0 == "backend:panic")
+            .map(|c| c.2)
+            .unwrap_or(0);
+        assert_eq!(m.backend_panics, fired_panics, "panic counter drift");
+        assert_eq!(m.backend_restarts, m.backend_panics);
+    }
+}
+
+#[test]
+fn serving_recovers_fully_after_faults_stop() {
+    let seed = base_seed().wrapping_mul(1000) + 17;
+    let _plan = arm(&format!("{seed}:backend:panic=0.5,backend:error=0.5"));
+    let coord = Coordinator::start_sim(CoordinatorOptions {
+        breaker_threshold: 1000,
+        ..opts(2, BatchFormerMode::Leader)
+    })
+    .unwrap();
+    for i in 0..8 {
+        let _ = coord.predict(graph(i)); // errors expected and allowed
+    }
+    let errors_during = coord.metrics().errors;
+    // Faults off: every subsequent request must succeed — the workers
+    // rebuilt their backends and no poisoned state lingers.
+    faults::install(None);
+    for i in 8..16 {
+        coord
+            .predict(graph(i))
+            .unwrap_or_else(|e| panic!("request {i} failed after faults cleared: {e:#}"));
+    }
+    let m = metrics_when(&coord, |m| m.requests == 16);
+    assert_eq!(m.errors, errors_during, "errors kept growing after recovery");
+}
+
+// ------------------------------------------------- breaker lifecycle ---
+
+#[test]
+fn breaker_opens_serves_degraded_then_recovers() {
+    let seed = base_seed().wrapping_mul(1000) + 29;
+    let _plan = arm(&format!("{seed}:backend:panic=1"));
+    let cooldown = Duration::from_millis(500);
+    let coord = Coordinator::start_sim(CoordinatorOptions {
+        breaker_threshold: 2,
+        breaker_cooldown: cooldown,
+        ..opts(1, BatchFormerMode::Off)
+    })
+    .unwrap();
+
+    // Two consecutive panicking batches trip the breaker.
+    assert!(coord.predict(graph(100)).is_err());
+    assert!(coord.predict(graph(101)).is_err());
+    let m = coord.metrics();
+    assert_eq!(m.breaker_state, "open", "breaker did not open");
+    assert_eq!(m.breaker_trips, 1);
+    assert_eq!(m.backend_panics, 2);
+
+    // Open breaker: misses are served by the simulator fallback, tagged.
+    let p = coord.predict(graph(102)).expect("degraded miss must serve");
+    assert!(p.degraded, "fallback prediction must carry the degraded tag");
+    let m = coord.metrics();
+    assert!(m.degraded_served >= 1);
+    // The operator-facing document carries the whole story.
+    let stats = protocol::cache_stats_response(&m);
+    assert!(stats.contains("\"breaker_state\":\"open\""), "{stats}");
+    assert!(stats.contains("\"degraded_served\":"), "{stats}");
+    assert!(stats.contains("\"backend_panics\":2"), "{stats}");
+
+    // Degraded predictions are never cached: re-asking the same graph
+    // after recovery must reach the real backend (asserted below by the
+    // un-tagged answer).
+    faults::install(None);
+    std::thread::sleep(cooldown + Duration::from_millis(150));
+    // First request after the cooldown is the half-open probe; the
+    // healthy backend answers and the breaker closes.
+    let p = coord.predict(graph(102)).expect("probe must serve");
+    assert!(!p.degraded, "authoritative answer must not be tagged degraded");
+    let m = metrics_when(&coord, |m| m.breaker_state == "closed");
+    assert_eq!(m.breaker_state, "closed", "breaker did not close after probe");
+    assert_eq!(m.backend_restarts, 2, "each caught panic rebuilds a backend");
+}
+
+// ------------------------------------------------------- quarantine ---
+
+#[test]
+fn key_that_crashes_two_backends_is_quarantined() {
+    let seed = base_seed().wrapping_mul(1000) + 43;
+    let _plan = arm(&format!("{seed}:backend:panic=1"));
+    let coord = Coordinator::start_sim(CoordinatorOptions {
+        breaker_threshold: 1000,
+        ..opts(1, BatchFormerMode::Off)
+    })
+    .unwrap();
+    let g = Family::Vgg.generate(3);
+    // Crash one: counted, not yet quarantined.
+    assert!(coord.predict(g.clone()).is_err());
+    // Crash two: quarantined — a poison tombstone through the negative
+    // cache.
+    let e = coord.predict(g.clone()).unwrap_err();
+    assert!(e.to_string().contains("quarantined"), "{e:#}");
+    // Third ask is answered from the tombstone on the submit path: no
+    // third backend dies.
+    let e = coord.predict(g).unwrap_err();
+    assert!(e.to_string().contains("quarantined"), "{e:#}");
+    let m = metrics_when(&coord, |m| m.quarantined == 1);
+    assert_eq!(m.quarantined, 1);
+    assert_eq!(m.backend_panics, 2, "the tombstone must absorb the third ask");
+    assert!(m.negative_hits >= 1);
+}
+
+// -------------------------------------------------- deadline shedding ---
+
+/// A backend whose very first `predict_into` blocks until the gate
+/// opens — wedges the single worker so queued jobs outlive their budget.
+struct FirstCallGate {
+    /// (armed, open)
+    state: Arc<(Mutex<(bool, bool)>, Condvar)>,
+}
+
+impl Backend for FirstCallGate {
+    fn name(&self) -> &'static str {
+        "first-call-gate"
+    }
+
+    fn max_batch(&self) -> usize {
+        4
+    }
+
+    fn predict_into(
+        &mut self,
+        requests: &[PredictRequest<'_>],
+        out: &mut Vec<RawOutcome>,
+    ) -> anyhow::Result<()> {
+        let (lock, cv) = &*self.state;
+        let mut s = lock.lock().unwrap();
+        if s.0 {
+            s.0 = false;
+            while !s.1 {
+                s = cv.wait(s).unwrap();
+            }
+        }
+        drop(s);
+        out.extend(
+            requests
+                .iter()
+                .map(|req| Ok([1.0, 100.0 + req.graph.n_nodes() as f64, 1.0])),
+        );
+        Ok(())
+    }
+}
+
+#[test]
+fn expired_deadlines_shed_before_the_backend_runs() {
+    // No fault plan: deadline shedding is supervision, not chaos — but
+    // hold the lock so another scenario's plan can't bleed in.
+    let _plan = arm("");
+    let state = Arc::new((Mutex::new((true, false)), Condvar::new()));
+    let coord = {
+        let state = state.clone();
+        Coordinator::start_with_backend(
+            Box::new(move || {
+                Ok(Box::new(FirstCallGate {
+                    state: state.clone(),
+                }) as Box<dyn Backend>)
+            }),
+            opts(1, BatchFormerMode::Off),
+        )
+        .unwrap()
+    };
+
+    // Admission shed: an already-spent budget never enqueues.
+    let e = coord
+        .predict_deadline(graph(0), None, Some(Duration::ZERO))
+        .unwrap_err();
+    assert!(e.to_string().contains("deadline expired"), "{e:#}");
+
+    // Wedge the only worker with an un-budgeted request…
+    let rx_wedged = coord.submit(graph(1));
+    loop {
+        if !state.0.lock().unwrap().0 {
+            break; // the gate is held
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // …queue a tightly-budgeted one behind it and let the budget expire.
+    let rx_late = coord.submit_deadline(
+        graph(2),
+        dippm::cache::Target::default(),
+        Some(Duration::from_millis(10)),
+    );
+    std::thread::sleep(Duration::from_millis(60));
+    // Open the gate: the wedged request serves; the expired one is shed
+    // before its batch reaches the backend.
+    {
+        let (lock, cv) = &*state;
+        lock.lock().unwrap().1 = true;
+        cv.notify_all();
+    }
+    rx_wedged
+        .recv_timeout(Duration::from_secs(10))
+        .expect("wedged request must reply")
+        .expect("wedged request must serve");
+    let late = rx_late
+        .recv_timeout(Duration::from_secs(10))
+        .expect("shed request must still reply");
+    let e = late.expect_err("expired request must not serve");
+    assert!(e.to_string().contains("deadline expired"), "{e:#}");
+
+    let m = metrics_when(&coord, |m| m.deadline_expired >= 2);
+    assert_eq!(m.shed_admission, 1);
+    assert_eq!(
+        m.shed_formation + m.shed_execution,
+        1,
+        "the queued expiry sheds exactly once in the pipeline"
+    );
+    assert_eq!(m.deadline_expired, 2);
+    // The shed batch never invoked the backend: only the wedged request's
+    // batch executed.
+    assert_eq!(m.batches, 1, "an expired job reached the backend");
+}
+
+// ----------------------------------------------------- determinism ---
+
+#[test]
+fn identical_seeds_reproduce_identical_injection_sequences() {
+    let _guard = arm("");
+    let seed = base_seed().wrapping_mul(1000) + 77;
+    let spec = format!(
+        "{seed}:backend:panic=0.4,backend:error=0.3,backend:latency=0.5"
+    );
+    // Sequential single-worker runs: the per-point decision order is a
+    // pure function of the plan seed, so two full serving runs must
+    // consult and fire every point identically.
+    let run = || {
+        faults::install(Some(FaultPlan::parse(&spec).unwrap()));
+        let coord = Coordinator::start_sim(CoordinatorOptions {
+            breaker_threshold: 1000,
+            ..opts(1, BatchFormerMode::Off)
+        })
+        .unwrap();
+        for i in 0..16 {
+            let _ = coord.predict(graph(i));
+        }
+        let counters = faults::active_plan().expect("armed").counters();
+        faults::install(None);
+        counters
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "same seed, same workload, different injections");
+    assert!(
+        a.iter().any(|&(_, checked, _)| checked > 0),
+        "the plan was never consulted: {a:?}"
+    );
+    assert!(
+        a.iter().any(|&(_, _, fired)| fired > 0),
+        "nothing ever fired at these probabilities: {a:?}"
+    );
+}
+
+// ---------------------------------------------------- wire survival ---
+
+fn start_reactor(coord: Arc<Coordinator>) -> String {
+    let (port_tx, port_rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        reactor::serve(coord, "127.0.0.1:0", ReactorConfig::default(), move |p| {
+            let _ = port_tx.send(p);
+        })
+        .unwrap();
+    });
+    format!("127.0.0.1:{}", port_rx.recv().unwrap())
+}
+
+#[test]
+fn reactor_survives_torn_reply_frames() {
+    let seed = base_seed().wrapping_mul(1000) + 88;
+    let _plan = arm(&format!("{seed}:wire:torn-frame=1"));
+    let coord = Arc::new(Coordinator::start_sim(CoordinatorOptions::default()).unwrap());
+    let addr = start_reactor(coord.clone());
+
+    // Every reply is torn mid-frame and the connection closed: the
+    // client sees a transport error, never a corrupt prediction.
+    let mut client = WireClient::connect(&addr).unwrap();
+    client.send_predict(&graph(0), None).unwrap();
+    assert!(
+        client.recv_reply().is_err(),
+        "a torn frame must not decode into a reply"
+    );
+
+    // The blast radius is that one connection: faults off, the server
+    // keeps accepting and serving.
+    faults::install(None);
+    let mut client = WireClient::connect(&addr).unwrap();
+    let pred = client.predict_graph(&graph(1)).unwrap();
+    assert!(!pred.degraded);
+}
+
+#[test]
+fn reactor_survives_dropped_request_frames() {
+    let seed = base_seed().wrapping_mul(1000) + 99;
+    let _plan = arm(&format!("{seed}:wire:drop-frame=1"));
+    let coord = Arc::new(Coordinator::start_sim(CoordinatorOptions::default()).unwrap());
+    let addr = start_reactor(coord.clone());
+    let armed = faults::active_plan().expect("plan armed");
+
+    let mut client = WireClient::connect(&addr).unwrap();
+    let dropped_seq = client.send_predict(&graph(0), None).unwrap();
+    // Give the reactor time to decode (and drop) the frame, then disarm.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        let fired = armed
+            .counters()
+            .iter()
+            .find(|c| c.0 == "wire:drop-frame")
+            .map(|c| c.2)
+            .unwrap_or(0);
+        if fired >= 1 || std::time::Instant::now() >= deadline {
+            assert!(fired >= 1, "the request frame was never dropped");
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    faults::install(None);
+
+    // The connection itself survived the drop: the next request on the
+    // same socket serves, and the reply matches *its* sequence id.
+    let live_seq = client.send_predict(&graph(1), None).unwrap();
+    let (seq, reply) = client.recv_reply().unwrap();
+    assert_eq!(seq, live_seq, "reply for the dropped frame materialized");
+    assert_ne!(seq, dropped_seq);
+    reply.expect("post-drop request must serve");
+
+    // Stats still flow on a fresh connection (server-wide health).
+    let mut probe = WireClient::connect(&addr).unwrap();
+    let stats = probe.stats().unwrap();
+    assert!(stats.contains("\"breaker_state\""), "{stats}");
+}

@@ -180,7 +180,8 @@ fn request_codec_roundtrip_property() {
         let graph = fam.generate(g.usize_in(0, 6));
         let target = if g.bool() { Some("a100:2g.10gb") } else { None };
         let payload = codec::encode_request(&graph, target);
-        let (back, t) = codec::decode_request(&payload)?;
+        let (back, t, deadline) = codec::decode_request(&payload)?;
+        prop_assert_eq!(deadline, None);
         prop_assert!(
             frontends::structurally_equal(&graph, &back),
             "decoded graph differs structurally ({})",
