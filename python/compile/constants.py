@@ -19,8 +19,8 @@ def _env_int(name: str, default: int) -> int:
 
 # Padded graph encoding ------------------------------------------------------
 MAX_NODES = _env_int("DIPPM_MAX_NODES", 160)  # N: operator nodes per graph
-NODE_FEATS = _env_int("DIPPM_NODE_FEATS", 32)  # F: paper §3.2 fixed length 32
-STATIC_FEATS = 5  # F_s: MACs, batch, #conv, #dense, #relu (paper eq. 1)
+NODE_FEATS = _env_int("DIPPM_NODE_FEATS", 36)  # F: paper §3.2's 32 + 4-wide dtype one-hot
+STATIC_FEATS = 9  # F_s: MACs, batch, #conv, #dense, #relu (paper eq. 1) + 4 dtype counts
 TARGETS = 3  # latency (ms), memory (MB), energy (J)
 
 # Model / training -----------------------------------------------------------

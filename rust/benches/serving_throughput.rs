@@ -28,6 +28,13 @@
 //!   `max_wait / 8` instead of waiting out the full window). CI gates
 //!   `trickle_p99_speedup >= 1.0`.
 //!
+//! * **dtype** — the cold corpus quantized to fp16: every node carries a
+//!   non-default dtype, exercising the dtype-aware fingerprint, feature
+//!   and costing paths on pure misses. `dtype_overhead_ratio` in the JSON
+//!   is cold-fp32 req/s over dtype-fp16 req/s through the identical
+//!   stack; CI gates it < 1.05 (dtype plumbing must not tax the serving
+//!   path by more than 5%).
+//!
 //! Scale knobs: DIPPM_BENCH_REQS (per client), DIPPM_BENCH_CLIENTS,
 //! DIPPM_BENCH_THREADS (multi-thread pool size),
 //! DIPPM_BENCH_TRICKLE_WAIT_MS (trickle max_wait, default 8), FULL=1.
@@ -44,7 +51,8 @@ use std::time::Duration;
 
 use dippm::cache::CacheConfig;
 use dippm::coordinator::{BatchFormerMode, Coordinator, CoordinatorOptions};
-use dippm::ir::Graph;
+use dippm::ir::quantize::quantize;
+use dippm::ir::{DType, Graph};
 use dippm::modelgen::ALL_FAMILIES;
 use dippm::runtime::Runtime;
 use dippm::util::bench::{banner, Table};
@@ -170,6 +178,14 @@ fn main() {
             "trickle" => cold_pool
                 [client * trickle_reqs..(client + 1) * trickle_reqs]
                 .to_vec(),
+            // The cold corpus with every node quantized to fp16: same
+            // request count and miss pattern as cold, but every graph
+            // takes the dtype-attributed path end to end. Quantization
+            // happens here, outside the timed load.
+            "dtype" => cold_pool[client * per_client..(client + 1) * per_client]
+                .iter()
+                .map(|g| quantize(g, DType::F16))
+                .collect(),
             _ => zipf_indices(per_client, zipf_pool, 1.1, 42 + client as u64)
                 .into_iter()
                 .map(|i| mixed_pool[i].clone())
@@ -188,6 +204,7 @@ fn main() {
     ]);
     let mut hot_rps = (0.0, 0.0); // (cache on, cache off)
     let mut cold_rps = (0.0, 0.0); // (1 thread, mt_threads)
+    let mut dtype_rps = 0.0; // fp16 corpus, comparable with cold_rps.0
     // Trickle p99 (ms): legacy per-worker batcher vs the former pipeline.
     let mut trickle_p99 = (0.0, 0.0); // (off, leader)
     let mut trickle_latency = (0u64, 0u64); // leader run's (p50_us, p99_us)
@@ -210,6 +227,9 @@ fn main() {
         }
     }
     runs.push(("cold", true, mt_threads, BatchFormerMode::Leader, default_wait));
+    // The dtype overhead probe: the cold-miss load again, fp16 corpus,
+    // run-for-run comparable with ("cold", cache on, 1 thread) above.
+    runs.push(("dtype", true, 1, BatchFormerMode::Leader, default_wait));
     runs.push((
         "trickle",
         true,
@@ -247,6 +267,9 @@ fn main() {
             } else {
                 cold_rps.1 = rps;
             }
+        }
+        if scenario == "dtype" {
+            dtype_rps = rps;
         }
         if scenario == "trickle" {
             let p99 = 1e3 * quantile(&lats, 0.99);
@@ -314,6 +337,14 @@ fn main() {
              {cold_thread_speedup:.2}x (target > 1x)"
         );
     }
+    let dtype_overhead_ratio = if dtype_rps > 0.0 { cold_rps.0 / dtype_rps } else { 0.0 };
+    if dtype_rps > 0.0 {
+        println!(
+            "dtype overhead: fp32 cold {:.0} req/s vs fp16 corpus {dtype_rps:.0} req/s \
+             ({dtype_overhead_ratio:.3}x, target < 1.05x)",
+            cold_rps.0
+        );
+    }
     let trickle_p99_speedup = if trickle_p99.1 > 0.0 { trickle_p99.0 / trickle_p99.1 } else { 0.0 };
     if trickle_p99.1 > 0.0 {
         println!(
@@ -338,6 +369,11 @@ fn main() {
         doc.insert("hot_speedup", hot_speedup);
         doc.insert("executor_threads_mt", mt_threads);
         doc.insert("cold_thread_speedup", cold_thread_speedup);
+        // The dtype gate (CI asserts the ratio < 1.05): fp16-corpus misses
+        // must cost within 5% of the default-dtype cold path.
+        doc.insert("cold_fp32_req_per_s", cold_rps.0);
+        doc.insert("dtype_fp16_req_per_s", dtype_rps);
+        doc.insert("dtype_overhead_ratio", dtype_overhead_ratio);
         // The batch-former trickle gate (CI asserts speedup >= 1.0) plus
         // the server-side latency histogram of the former run.
         doc.insert("trickle_wait_ms", 1e3 * trickle_wait.as_secs_f64());

@@ -234,8 +234,8 @@ impl Default for SimBackend {
         // Mirrors the AOT manifest constants (max_nodes=160, feats=32).
         let constants = Constants {
             max_nodes: 160,
-            node_feats: 32,
-            static_feats: 5,
+            node_feats: crate::features::NODE_FEATS,
+            static_feats: crate::features::STATIC_FEATS,
             targets: 3,
             batch: 1,
             hidden: 128,

@@ -6,7 +6,7 @@
 
 use std::io::{self, Read, Write};
 
-use crate::ir::{Attrs, Graph, Node, OpKind};
+use crate::ir::{Attrs, DType, Graph, Node, OpKind};
 use crate::simulator::Measurement;
 
 use super::normalize::{NormStats, N_STATICS, N_TARGETS};
@@ -14,7 +14,7 @@ use super::split::Splits;
 use super::{Dataset, Sample};
 
 const MAGIC: &[u8; 7] = b"DIPPMDS";
-const VERSION: u8 = 1;
+const VERSION: u8 = 2; // v2: statics widened 5 -> 9 (dtype counts)
 
 // ---- little-endian primitives ---------------------------------------------
 
@@ -151,6 +151,7 @@ fn read_graph(r: &mut impl Read) -> io::Result<Graph> {
                 } else {
                     Some(axis_raw as i64 - 1 - 16)
                 },
+                dtype: DType::F32,
             },
             inputs,
             out_shape,

@@ -9,7 +9,9 @@
 use crate::util::stats::Welford;
 
 pub const N_TARGETS: usize = 3;
-pub const N_STATICS: usize = 5;
+/// Width of the static-feature vector — tracks the simulator's layout
+/// (eq.-1 five plus the four dtype counts).
+pub const N_STATICS: usize = crate::simulator::analysis::STATIC_FEATS;
 
 /// Per-dimension log1p + z-score transform parameters.
 #[derive(Debug, Clone, PartialEq)]
@@ -93,7 +95,7 @@ mod tests {
         let stats = NormStats::fit(
             [[1.0, 2000.0, 0.5], [10.0, 4000.0, 5.0], [100.0, 8000.0, 50.0]]
                 .into_iter(),
-            [[1e9, 8.0, 50.0, 1.0, 40.0]].iter(),
+            [[1e9, 8.0, 50.0, 1.0, 40.0, 90.0, 0.0, 0.0, 0.0]].iter(),
         );
         let raw = [12.5, 3000.0, 2.25];
         let back = stats.denorm_target(stats.norm_target(raw));

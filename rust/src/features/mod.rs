@@ -1,10 +1,11 @@
 //! Featurization: the Node Feature Generator (paper §3.2, Algorithm 1) and
 //! the Static Feature Generator (paper §3.3, eq. 1).
 //!
-//! The NFG walks the IR in post-order, emits a fixed 32-feature vector per
-//! operator node (one-hot category ⊕ attributes ⊕ output shape) and the
-//! row-normalized adjacency-with-self-loops Â the dense GraphSAGE kernel
-//! consumes. The SFG emits `F_s = MACs ⊕ batch ⊕ #conv ⊕ #dense ⊕ #relu`.
+//! The NFG walks the IR in post-order, emits a fixed 36-feature vector per
+//! operator node (one-hot category ⊕ attributes ⊕ output shape ⊕ dtype
+//! one-hot) and the row-normalized adjacency-with-self-loops Â the dense
+//! GraphSAGE kernel consumes. The SFG emits
+//! `F_s = MACs ⊕ batch ⊕ #conv ⊕ #dense ⊕ #relu ⊕ dtype counts`.
 
 pub mod node_features;
 pub mod static_features;
@@ -13,4 +14,4 @@ pub use node_features::{
     encode_graph, encode_graph_analyzed, fill_padded, fill_padded_analyzed, FeatureConfig,
     GraphFeatures, NODE_FEATS,
 };
-pub use static_features::{static_feature_bits, static_features, STATIC_FEATS};
+pub use static_features::{static_feature_bits, static_features, EQ1_STATIC_FEATS, STATIC_FEATS};

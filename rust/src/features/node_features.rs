@@ -1,9 +1,11 @@
 //! Node Feature Generator — paper Algorithm 1.
 //!
-//! For each operator node: `F_node = one_hot(op) ⊕ F_attr ⊕ F_shape`, fixed
-//! length 32 (18 one-hot categories + 6 attribute features + 8 shape
-//! features). All features are scaled to roughly [0, 1] with log transforms
-//! on magnitudes so the GNN sees well-conditioned inputs.
+//! For each operator node: `F_node = one_hot(op) ⊕ F_attr ⊕ F_shape ⊕
+//! one_hot(dtype)`, fixed length 36 — the paper's 32 (18 one-hot categories
+//! + 6 attribute features + 8 shape features, §3.2) extended with a 4-wide
+//! dtype one-hot (fp32/fp16/bf16/int8) so the predictor sees quantization.
+//! All features are scaled to roughly [0, 1] with log transforms on
+//! magnitudes so the GNN sees well-conditioned inputs.
 //!
 //! The adjacency matrix Â is row-normalized with self-loops — the mean
 //! aggregator of the GraphSAGE layer folded into the matrix (DESIGN.md §7),
@@ -19,8 +21,11 @@ use crate::simulator::GraphAnalysis;
 pub const ATTR_FEATS: usize = 6;
 /// Number of output-shape features.
 pub const SHAPE_FEATS: usize = 8;
-/// Total node feature length — the paper fixes this at 32 (§3.2).
-pub const NODE_FEATS: usize = N_CATEGORIES + ATTR_FEATS + SHAPE_FEATS;
+/// Width of the dtype one-hot block.
+pub const DTYPE_FEATS: usize = crate::ir::ALL_DTYPES.len();
+/// Total node feature length — the paper's fixed 32 (§3.2) plus the dtype
+/// one-hot block.
+pub const NODE_FEATS: usize = N_CATEGORIES + ATTR_FEATS + SHAPE_FEATS + DTYPE_FEATS;
 
 /// Shape configuration of the padded encoding (mirrors the AOT manifest).
 #[derive(Debug, Clone, Copy)]
@@ -46,14 +51,14 @@ pub struct GraphFeatures {
     pub a_hat: Vec<f32>,
 }
 
-/// Encode one node's 32 features into `out`, computing the node's cost
+/// Encode one node's features into `out`, computing the node's cost
 /// from scratch (legacy path; the serving path passes cached costs via
 /// [`node_feature_row_with_cost`]).
 fn node_feature_row(graph: &Graph, id: usize, out: &mut [f32]) {
     node_feature_row_with_cost(graph, id, &op_cost(graph, &graph.nodes[id]), out)
 }
 
-/// Encode one node's 32 features into `out` from a precomputed [`OpCost`].
+/// Encode one node's features into `out` from a precomputed [`OpCost`].
 fn node_feature_row_with_cost(graph: &Graph, id: usize, cost: &OpCost, out: &mut [f32]) {
     debug_assert_eq!(out.len(), NODE_FEATS);
     let node = &graph.nodes[id];
@@ -85,6 +90,10 @@ fn node_feature_row_with_cost(graph: &Graph, id: usize, cost: &OpCost, out: &mut
     out[base + 5] = (numel(s) as f32 + 1.0).ln() / 18.0;
     out[base + 6] = ((cost.flops + 1.0) as f32).ln() / 26.0;
     out[base + 7] = ((cost.total_bytes() + 1.0) as f32).ln() / 22.0;
+
+    // --- dtype one-hot ---------------------------------------------------
+    let base = N_CATEGORIES + ATTR_FEATS + SHAPE_FEATS;
+    out[base + a.dtype.index()] = 1.0;
 }
 
 /// Encode the whole graph (Algorithm 1's CreateGraph): X and Â at natural
@@ -233,8 +242,35 @@ mod tests {
     }
 
     #[test]
-    fn feature_length_is_32() {
-        assert_eq!(NODE_FEATS, 32); // the paper's fixed length (§3.2)
+    fn feature_length_is_36() {
+        // the paper's fixed 32 (§3.2) + the 4-wide dtype one-hot
+        assert_eq!(NODE_FEATS, 36);
+    }
+
+    #[test]
+    fn dtype_one_hot_encoded() {
+        use crate::ir::DType;
+        let g = tiny();
+        let f = encode_graph(&g);
+        let base = N_CATEGORIES + ATTR_FEATS + SHAPE_FEATS;
+        for i in 0..f.n {
+            let row = &f.x[i * NODE_FEATS..(i + 1) * NODE_FEATS];
+            assert_eq!(row[base], 1.0, "node {i} must be fp32");
+            assert!(row[base + 1..].iter().all(|&v| v == 0.0));
+        }
+        let q = crate::ir::quantize::quantize(&g, DType::I8);
+        let fq = encode_graph(&q);
+        for i in 0..fq.n {
+            let row = &fq.x[i * NODE_FEATS..(i + 1) * NODE_FEATS];
+            assert_eq!(row[base + DType::I8.index()], 1.0, "node {i}");
+            assert_eq!(row[base], 0.0);
+        }
+        // all non-dtype features except the byte-derived ones match
+        for i in 0..f.n {
+            let a = &f.x[i * NODE_FEATS..i * NODE_FEATS + N_CATEGORIES + ATTR_FEATS];
+            let b = &fq.x[i * NODE_FEATS..i * NODE_FEATS + N_CATEGORIES + ATTR_FEATS];
+            assert_eq!(a, b, "node {i}");
+        }
     }
 
     #[test]

@@ -1,6 +1,9 @@
-//! Static Feature Generator — paper §3.3, eq. (1):
+//! Static Feature Generator — paper §3.3, eq. (1), plus the dtype mix:
 //!
-//! `F_s = F_mac ⊕ F_batch ⊕ F_Tconv ⊕ F_Tdense ⊕ F_Trelu`
+//! `F_s = F_mac ⊕ F_batch ⊕ F_Tconv ⊕ F_Tdense ⊕ F_Trelu ⊕ F_dtype[4]`
+//!
+//! The trailing four entries count nodes per dtype (fp32/fp16/bf16/int8, in
+//! [`ALL_DTYPES`] order) so the MLP head can separate quantized variants.
 //!
 //! MACs follow the TVM relay analysis convention (conv2d, conv2d_transpose,
 //! dense, batch_matmul — plus depthwise, which TVM counts as grouped conv).
@@ -8,10 +11,10 @@
 //! training split) happens in `dataset::normalize` so serving can reuse the
 //! exact training statistics.
 
-use crate::ir::{Graph, OpKind};
+use crate::ir::{Graph, OpKind, ALL_DTYPES};
 use crate::simulator::cost::total_macs;
 
-pub use crate::simulator::analysis::STATIC_FEATS;
+pub use crate::simulator::analysis::{EQ1_STATIC_FEATS, STATIC_FEATS};
 
 /// Raw static features of a graph, in the paper's eq. (1) order.
 ///
@@ -22,12 +25,20 @@ pub fn static_features(graph: &Graph) -> [f64; STATIC_FEATS] {
     let conv = graph.count_op(OpKind::Conv2d)
         + graph.count_op(OpKind::DepthwiseConv2d)
         + graph.count_op(OpKind::Conv2dTranspose);
+    let mut dtype_counts = [0usize; ALL_DTYPES.len()];
+    for n in &graph.nodes {
+        dtype_counts[n.attrs.dtype.index()] += 1;
+    }
     [
         total_macs(graph),
         graph.batch as f64,
         conv as f64,
         graph.count_op(OpKind::Dense) as f64,
         graph.count_op(OpKind::Relu) as f64,
+        dtype_counts[0] as f64,
+        dtype_counts[1] as f64,
+        dtype_counts[2] as f64,
+        dtype_counts[3] as f64,
     ]
 }
 
@@ -47,10 +58,10 @@ mod tests {
 
     #[test]
     fn feature_bits_are_exact_counts() {
-        let bits = static_feature_bits(&[1e9, 8.0, 3.0, 1.0, 2.0]);
-        assert_eq!(bits, [1_000_000_000, 8, 3, 1, 2]);
+        let bits = static_feature_bits(&[1e9, 8.0, 3.0, 1.0, 2.0, 6.0, 0.0, 0.0, 0.0]);
+        assert_eq!(bits, [1_000_000_000, 8, 3, 1, 2, 6, 0, 0, 0]);
         // Negative (impossible, but defensive) clamps to zero.
-        assert_eq!(static_feature_bits(&[-1.0, 0.0, 0.0, 0.0, 0.0])[0], 0);
+        assert_eq!(static_feature_bits(&[-1.0; STATIC_FEATS])[0], 0);
     }
 
     #[test]
@@ -69,6 +80,22 @@ mod tests {
         assert_eq!(s[2], 2.0); // convs
         assert_eq!(s[3], 1.0); // dense
         assert_eq!(s[4], 2.0); // relus
+        assert_eq!(s[5], g.nodes.len() as f64); // all nodes fp32
+        assert_eq!(&s[6..], &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn dtype_counts_track_quantization() {
+        let mut b = GraphBuilder::new("t", "t", 1);
+        let x = b.input(vec![1, 3, 8, 8]);
+        b.conv2d(x, 4, 3, 1, 1);
+        let g = b.finish();
+        let q = crate::ir::quantize::quantize(&g, crate::ir::DType::I8);
+        let s = static_features(&q);
+        assert_eq!(s[5], 0.0);
+        assert_eq!(s[8], q.nodes.len() as f64);
+        // eq.-1 prefix unchanged by quantization
+        assert_eq!(&static_features(&g)[..EQ1_STATIC_FEATS], &s[..EQ1_STATIC_FEATS]);
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! TensorFlow frontend: Keras functional-API model config JSON
 //! (`class_name`/`config`/`inbound_nodes`), `channels_first` data format.
 
-use crate::ir::{Attrs, Graph, OpKind};
+use crate::ir::{Attrs, DType, Graph, OpKind};
 use crate::util::json::{Json, JsonObj};
 
 use super::NodeSpec;
@@ -214,6 +214,7 @@ pub fn parse(content: &str) -> Result<Graph, String> {
                 .as_usize()
                 .or_else(|| c.path(&["filters"]).as_usize()),
             axis: c.path(&["axis"]).as_i64(),
+            dtype: DType::F32,
         };
         specs.push(NodeSpec {
             name,

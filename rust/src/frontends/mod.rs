@@ -8,16 +8,25 @@
 //! | [`torchscript`] | PyTorch     | TorchScript-style node list (`aten::*`) |
 //! | [`keras`]     | TensorFlow    | Keras functional-API config JSON |
 //! | [`onnx_text`] | ONNX          | textual protobuf (`node { op_type: … }`) |
+//! | [`onnx_pb`]   | ONNX          | binary protobuf (hand-rolled wire walker) |
+//! | [`safetensors`] | checkpoints | header-only `.safetensors` ingestion |
 //! | [`paddle`]    | PaddlePaddle  | program-desc JSON (`elementwise_add`, …) |
 //!
 //! Every frontend lowers to [`NodeSpec`]s and calls [`assemble`], which
 //! resolves name references, topologically sorts, runs shape inference and
-//! validates — so a malformed model fails loudly at parse time.
+//! validates — so a malformed model fails loudly at parse time. The text
+//! formats go through [`parse`]/[`detect`]; binary formats (and files of
+//! unknown encoding) go through [`parse_bytes_any`]/[`detect_bytes`],
+//! which fall back to text sniffing when the bytes are UTF-8. No frontend
+//! may panic on any input — hostile bytes are `Err`s
+//! (`tests/ingest_fuzz.rs`).
 
 pub mod keras;
 pub mod native;
+pub mod onnx_pb;
 pub mod onnx_text;
 pub mod paddle;
+pub mod safetensors;
 pub mod torchscript;
 
 use crate::ir::infer::{infer_shape, Shape};
@@ -30,6 +39,10 @@ pub enum Framework {
     PyTorch,
     TensorFlow,
     Onnx,
+    /// Binary ONNX protobuf (`.onnx`) — bytes, not text.
+    OnnxBinary,
+    /// safetensors checkpoint header — bytes, not text.
+    Safetensors,
     Paddle,
 }
 
@@ -40,6 +53,8 @@ impl Framework {
             Framework::PyTorch => "pytorch",
             Framework::TensorFlow => "tensorflow",
             Framework::Onnx => "onnx",
+            Framework::OnnxBinary => "onnx-binary",
+            Framework::Safetensors => "safetensors",
             Framework::Paddle => "paddle",
         }
     }
@@ -50,6 +65,8 @@ impl Framework {
             "pytorch" | "torch" | "torchscript" => Some(Framework::PyTorch),
             "tensorflow" | "tf" | "keras" => Some(Framework::TensorFlow),
             "onnx" => Some(Framework::Onnx),
+            "onnx-binary" | "onnxpb" | "onnx_pb" => Some(Framework::OnnxBinary),
+            "safetensors" | "st" => Some(Framework::Safetensors),
             "paddle" | "paddlepaddle" => Some(Framework::Paddle),
             _ => None,
         }
@@ -79,6 +96,24 @@ pub fn detect(content: &str) -> Option<Framework> {
     }
 }
 
+/// Sniff binary formats, falling back to text sniffing on UTF-8 bytes.
+pub fn detect_bytes(bytes: &[u8]) -> Option<Framework> {
+    // safetensors: 8-byte LE header length, then a JSON object.
+    if bytes.len() >= 9 && bytes[8] == b'{' {
+        let mut len8 = [0u8; 8];
+        len8.copy_from_slice(&bytes[..8]);
+        let n = u64::from_le_bytes(len8);
+        if n >= 2 && n <= (bytes.len() - 8) as u64 {
+            return Some(Framework::Safetensors);
+        }
+    }
+    // Binary ONNX ModelProto opens with field 1 varint (ir_version): 0x08.
+    if bytes.first() == Some(&0x08) {
+        return Some(Framework::OnnxBinary);
+    }
+    std::str::from_utf8(bytes).ok().and_then(detect)
+}
+
 /// Parse with an explicit framework.
 pub fn parse(framework: Framework, content: &str) -> Result<Graph, String> {
     match framework {
@@ -86,7 +121,23 @@ pub fn parse(framework: Framework, content: &str) -> Result<Graph, String> {
         Framework::PyTorch => torchscript::parse(content),
         Framework::TensorFlow => keras::parse(content),
         Framework::Onnx => onnx_text::parse(content),
+        Framework::OnnxBinary => onnx_pb::parse(content.as_bytes()),
+        Framework::Safetensors => safetensors::parse(content.as_bytes()),
         Framework::Paddle => paddle::parse(content),
+    }
+}
+
+/// [`parse`] from raw bytes: binary frontends take them as-is; text
+/// frontends require (and check) UTF-8.
+pub fn parse_framework_bytes(framework: Framework, bytes: &[u8]) -> Result<Graph, String> {
+    match framework {
+        Framework::OnnxBinary => onnx_pb::parse(bytes),
+        Framework::Safetensors => safetensors::parse(bytes),
+        fw => {
+            let text = std::str::from_utf8(bytes)
+                .map_err(|_| format!("{} model is not UTF-8 text", fw.name()))?;
+            parse(fw, text)
+        }
     }
 }
 
@@ -94,6 +145,12 @@ pub fn parse(framework: Framework, content: &str) -> Result<Graph, String> {
 pub fn parse_any(content: &str) -> Result<Graph, String> {
     let fw = detect(content).ok_or("unable to detect model framework")?;
     parse(fw, content)
+}
+
+/// Parse raw bytes with auto-detection (binary formats included).
+pub fn parse_bytes_any(bytes: &[u8]) -> Result<Graph, String> {
+    let fw = detect_bytes(bytes).ok_or("unable to detect model framework")?;
+    parse_framework_bytes(fw, bytes)
 }
 
 /// Export a graph to a framework's format (used by modelgen to fabricate
@@ -105,6 +162,16 @@ pub fn export(framework: Framework, graph: &Graph) -> String {
         Framework::TensorFlow => keras::export(graph),
         Framework::Onnx => onnx_text::export(graph),
         Framework::Paddle => paddle::export(graph),
+        fw => panic!("{} is a binary format; use export_bytes", fw.name()),
+    }
+}
+
+/// [`export`] as bytes; the only way to serialize the binary formats.
+pub fn export_bytes(framework: Framework, graph: &Graph) -> Vec<u8> {
+    match framework {
+        Framework::OnnxBinary => onnx_pb::export(graph),
+        Framework::Safetensors => safetensors::export(graph),
+        fw => export(fw, graph).into_bytes(),
     }
 }
 
@@ -350,6 +417,27 @@ mod tests {
             let text = export(fw, &g);
             assert_eq!(detect(&text), Some(fw), "{fw:?}");
         }
+    }
+
+    #[test]
+    fn detect_bytes_covers_binary_and_text() {
+        let g = Family::ResNet.generate(0);
+        for fw in [
+            Framework::Native,
+            Framework::PyTorch,
+            Framework::TensorFlow,
+            Framework::Onnx,
+            Framework::OnnxBinary,
+            Framework::Safetensors,
+            Framework::Paddle,
+        ] {
+            let bytes = export_bytes(fw, &g);
+            assert_eq!(detect_bytes(&bytes), Some(fw), "{fw:?}");
+            let parsed = parse_bytes_any(&bytes).unwrap_or_else(|e| panic!("{fw:?}: {e}"));
+            assert_eq!(parsed.batch, g.batch, "{fw:?}");
+        }
+        assert_eq!(detect_bytes(&[0xFF, 0xFE, 0x00]), None);
+        assert_eq!(detect_bytes(b""), None);
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! [`Graph`], including node names, family/variant metadata and all
 //! attributes. This is the repo's canonical on-disk model format.
 
-use crate::ir::{Attrs, Graph, OpKind};
+use crate::ir::{Attrs, DType, Graph, OpKind};
 use crate::util::json::{Json, JsonObj};
 
 use super::NodeSpec;
@@ -52,6 +52,11 @@ pub fn export(graph: &Graph) -> String {
             }
             if let Some(ax) = n.attrs.axis {
                 a.insert("axis", ax);
+            }
+            // fp32 is the implicit default; omitting it keeps pre-dtype
+            // exports byte-identical.
+            if n.attrs.dtype != DType::F32 {
+                a.insert("dtype", n.attrs.dtype.name());
             }
             o.insert("attrs", a);
             Json::Obj(o)
@@ -115,6 +120,11 @@ pub fn parse(content: &str) -> Result<Graph, String> {
             groups: a.path(&["groups"]).as_usize().unwrap_or(1),
             units: a.path(&["units"]).as_usize(),
             axis: a.path(&["axis"]).as_i64(),
+            dtype: match a.path(&["dtype"]).as_str() {
+                None => DType::F32,
+                Some(s) => DType::from_name(s)
+                    .ok_or_else(|| format!("node {i}: unknown dtype {s:?}"))?,
+            },
         };
         specs.push(NodeSpec {
             name,
@@ -151,6 +161,23 @@ mod tests {
         let text = r#"{"format":"dippm-ir","family":"t","variant":"t","batch":1,
             "nodes":[{"name":"x","op":"warp_drive","inputs":[],"shape":[1,3,4,4],"attrs":{}}]}"#;
         assert!(parse(text).unwrap_err().contains("unknown op"));
+    }
+
+    #[test]
+    fn dtype_roundtrips_and_f32_is_omitted() {
+        let g = crate::ir::quantize::quantize(&Family::ResNet.generate(1), DType::I8);
+        let text = export(&g);
+        assert!(text.contains("\"dtype\""));
+        assert_eq!(parse(&text).unwrap(), g);
+        let f32_text = export(&Family::ResNet.generate(1));
+        assert!(!f32_text.contains("\"dtype\""));
+    }
+
+    #[test]
+    fn rejects_unknown_dtype() {
+        let text = r#"{"format":"dippm-ir","family":"t","variant":"t","batch":1,
+            "nodes":[{"name":"x","op":"input","inputs":[],"shape":[1,3,4,4],"attrs":{"dtype":"f64"}}]}"#;
+        assert!(parse(text).unwrap_err().contains("unknown dtype"));
     }
 
     #[test]

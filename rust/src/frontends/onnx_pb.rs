@@ -1,0 +1,803 @@
+//! ONNX frontend: binary protobuf model files (`.onnx`).
+//!
+//! Hand-rolled protobuf wire-format walker — varints, the four live wire
+//! types, bounded length-delimited fields — no protobuf crate, no codegen.
+//! Only the fields the IR needs are decoded; everything else is skipped by
+//! wire type. Every read is bounds-checked and every failure is a
+//! `Result::Err` with a message: hostile or truncated bytes must never
+//! panic this process (fuzzed in `tests/ingest_fuzz.rs`).
+//!
+//! Field numbers follow `onnx.proto3`:
+//! `ModelProto{1:ir_version, 2:producer_name, 7:graph, 14:metadata_props}`,
+//! `GraphProto{1:node, 2:name, 5:initializer, 11:input, 13:value_info}`,
+//! `NodeProto{1:input, 2:output, 3:name, 4:op_type, 5:attribute}`,
+//! `AttributeProto{1:name, 3:i, 8:ints}`,
+//! `TensorProto{1:dims, 2:data_type, 8:name}`,
+//! `ValueInfoProto{1:name, 2:type}` →
+//! `TypeProto{1:tensor_type}` → `{1:elem_type, 2:shape}` → `{1:dim}` →
+//! `Dimension{1:dim_value}`.
+//!
+//! Dtype travels two ways: per-tensor `elem_type` on graph inputs and
+//! `value_info` entries (our exporter writes one per node, so round-trips
+//! are exact), with weight-initializer `data_type` as the fallback for
+//! models that ship no inferred value_info.
+
+use std::collections::BTreeMap;
+
+use crate::ir::{Attrs, DType, Graph, OpKind};
+
+use super::onnx_text::{op_of, op_type_of};
+use super::NodeSpec;
+
+// ---------------------------------------------------------------------------
+// Wire-format reader
+// ---------------------------------------------------------------------------
+
+const WIRE_VARINT: u8 = 0;
+const WIRE_FIXED64: u8 = 1;
+const WIRE_LEN: u8 = 2;
+const WIRE_FIXED32: u8 = 5;
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn done(&self) -> bool {
+        self.pos >= self.buf.len()
+    }
+
+    fn varint(&mut self) -> Result<u64, String> {
+        let mut v: u64 = 0;
+        for shift in (0..64).step_by(7) {
+            let Some(&b) = self.buf.get(self.pos) else {
+                return Err(format!("truncated varint at byte {}", self.pos));
+            };
+            self.pos += 1;
+            let low = (b & 0x7F) as u64;
+            if shift == 63 && low > 1 {
+                return Err(format!("varint overflows u64 at byte {}", self.pos - 1));
+            }
+            v |= low << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+        }
+        Err(format!("varint longer than 10 bytes at byte {}", self.pos))
+    }
+
+    /// Read a field key; returns (field number, wire type).
+    fn key(&mut self) -> Result<(u64, u8), String> {
+        let k = self.varint()?;
+        Ok((k >> 3, (k & 7) as u8))
+    }
+
+    /// Read a length-delimited payload as a sub-slice.
+    fn bytes(&mut self) -> Result<&'a [u8], String> {
+        let len = self.varint()?;
+        let remaining = self.buf.len() - self.pos;
+        if len > remaining as u64 {
+            return Err(format!(
+                "length-delimited field of {len} bytes at byte {} overruns the \
+                 {remaining} remaining",
+                self.pos
+            ));
+        }
+        let start = self.pos;
+        self.pos += len as usize;
+        Ok(&self.buf[start..self.pos])
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        let b = self.bytes()?;
+        String::from_utf8(b.to_vec()).map_err(|_| "non-UTF8 bytes in string field".to_string())
+    }
+
+    fn skip(&mut self, field: u64, wire: u8) -> Result<(), String> {
+        match wire {
+            WIRE_VARINT => self.varint().map(|_| ()),
+            WIRE_FIXED64 => self.fixed(8),
+            WIRE_LEN => self.bytes().map(|_| ()),
+            WIRE_FIXED32 => self.fixed(4),
+            w => Err(format!("field {field}: unsupported wire type {w}")),
+        }
+    }
+
+    fn fixed(&mut self, n: usize) -> Result<(), String> {
+        if self.buf.len() - self.pos < n {
+            return Err(format!("truncated {n}-byte scalar at byte {}", self.pos));
+        }
+        self.pos += n;
+        Ok(())
+    }
+}
+
+/// Repeated int64: accepts both packed (wire 2) and unpacked (wire 0).
+fn read_ints(r: &mut Reader, wire: u8, out: &mut Vec<i64>) -> Result<(), String> {
+    match wire {
+        WIRE_VARINT => {
+            out.push(r.varint()? as i64);
+            Ok(())
+        }
+        WIRE_LEN => {
+            let mut sub = Reader::new(r.bytes()?);
+            while !sub.done() {
+                out.push(sub.varint()? as i64);
+            }
+            Ok(())
+        }
+        w => Err(format!("repeated int64 field has wire type {w}")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decoded message shapes (only what assembly needs)
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct PbAttr {
+    name: String,
+    i: Option<i64>,
+    ints: Vec<i64>,
+}
+
+impl PbAttr {
+    /// Single-int view: `i` if set, else the first of `ints`.
+    fn first_int(&self) -> Option<i64> {
+        self.i.or_else(|| self.ints.first().copied())
+    }
+}
+
+#[derive(Default)]
+struct PbNode {
+    op_type: String,
+    name: String,
+    inputs: Vec<String>,
+    outputs: Vec<String>,
+    attrs: Vec<PbAttr>,
+}
+
+#[derive(Default)]
+struct PbTensor {
+    name: String,
+    dims: Vec<i64>,
+    data_type: u64,
+}
+
+#[derive(Default)]
+struct PbValueInfo {
+    name: String,
+    elem_type: u64,
+    dims: Vec<i64>,
+}
+
+#[derive(Default)]
+struct PbGraph {
+    name: String,
+    nodes: Vec<PbNode>,
+    initializers: Vec<PbTensor>,
+    inputs: Vec<PbValueInfo>,
+    value_infos: Vec<PbValueInfo>,
+}
+
+fn parse_attr(buf: &[u8]) -> Result<PbAttr, String> {
+    let mut r = Reader::new(buf);
+    let mut a = PbAttr::default();
+    while !r.done() {
+        let (field, wire) = r.key()?;
+        match field {
+            1 => a.name = r.string()?,
+            3 => a.i = Some(r.varint()? as i64),
+            8 => read_ints(&mut r, wire, &mut a.ints)?,
+            _ => r.skip(field, wire)?,
+        }
+    }
+    Ok(a)
+}
+
+fn parse_node(buf: &[u8]) -> Result<PbNode, String> {
+    let mut r = Reader::new(buf);
+    let mut n = PbNode::default();
+    while !r.done() {
+        let (field, wire) = r.key()?;
+        match field {
+            1 => n.inputs.push(r.string()?),
+            2 => n.outputs.push(r.string()?),
+            3 => n.name = r.string()?,
+            4 => n.op_type = r.string()?,
+            5 => n.attrs.push(parse_attr(r.bytes()?)?),
+            _ => r.skip(field, wire)?,
+        }
+    }
+    Ok(n)
+}
+
+fn parse_tensor(buf: &[u8]) -> Result<PbTensor, String> {
+    let mut r = Reader::new(buf);
+    let mut t = PbTensor::default();
+    while !r.done() {
+        let (field, wire) = r.key()?;
+        match field {
+            1 => read_ints(&mut r, wire, &mut t.dims)?,
+            2 => t.data_type = r.varint()?,
+            8 => t.name = r.string()?,
+            _ => r.skip(field, wire)?,
+        }
+    }
+    Ok(t)
+}
+
+fn parse_value_info(buf: &[u8]) -> Result<PbValueInfo, String> {
+    let mut r = Reader::new(buf);
+    let mut v = PbValueInfo::default();
+    while !r.done() {
+        let (field, wire) = r.key()?;
+        match field {
+            1 => v.name = r.string()?,
+            2 => {
+                // TypeProto → tensor_type(1) → { elem_type(1), shape(2) }
+                let mut t = Reader::new(r.bytes()?);
+                while !t.done() {
+                    let (tf, tw) = t.key()?;
+                    if tf != 1 {
+                        t.skip(tf, tw)?;
+                        continue;
+                    }
+                    let mut tt = Reader::new(t.bytes()?);
+                    while !tt.done() {
+                        let (ttf, ttw) = tt.key()?;
+                        match ttf {
+                            1 => v.elem_type = tt.varint()?,
+                            2 => {
+                                let mut sh = Reader::new(tt.bytes()?);
+                                while !sh.done() {
+                                    let (sf, sw) = sh.key()?;
+                                    if sf != 1 {
+                                        sh.skip(sf, sw)?;
+                                        continue;
+                                    }
+                                    let mut d = Reader::new(sh.bytes()?);
+                                    let mut dim: Option<i64> = None;
+                                    while !d.done() {
+                                        let (df, dw) = d.key()?;
+                                        if df == 1 {
+                                            dim = Some(d.varint()? as i64);
+                                        } else {
+                                            d.skip(df, dw)?;
+                                        }
+                                    }
+                                    v.dims.push(dim.ok_or_else(|| {
+                                        format!(
+                                            "tensor {:?} has a symbolic dimension \
+                                             (dim_param); concrete shapes required",
+                                            v.name
+                                        )
+                                    })?);
+                                }
+                            }
+                            _ => tt.skip(ttf, ttw)?,
+                        }
+                    }
+                }
+            }
+            _ => r.skip(field, wire)?,
+        }
+    }
+    Ok(v)
+}
+
+fn parse_graph_msg(buf: &[u8]) -> Result<PbGraph, String> {
+    let mut r = Reader::new(buf);
+    let mut g = PbGraph::default();
+    while !r.done() {
+        let (field, wire) = r.key()?;
+        match field {
+            1 => g.nodes.push(parse_node(r.bytes()?)?),
+            2 => g.name = r.string()?,
+            5 => g.initializers.push(parse_tensor(r.bytes()?)?),
+            11 => g.inputs.push(parse_value_info(r.bytes()?)?),
+            13 => g.value_infos.push(parse_value_info(r.bytes()?)?),
+            _ => r.skip(field, wire)?,
+        }
+    }
+    Ok(g)
+}
+
+// ---------------------------------------------------------------------------
+// Parse: bytes → Graph
+// ---------------------------------------------------------------------------
+
+fn usize_dim(name: &str, d: i64) -> Result<usize, String> {
+    if d <= 0 {
+        return Err(format!("tensor {name:?} has non-positive dimension {d}"));
+    }
+    Ok(d as usize)
+}
+
+/// Parse a binary ONNX `ModelProto` into an IR graph.
+pub fn parse(bytes: &[u8]) -> Result<Graph, String> {
+    let mut r = Reader::new(bytes);
+    let mut graph: Option<PbGraph> = None;
+    let mut meta: BTreeMap<String, String> = BTreeMap::new();
+    while !r.done() {
+        let (field, wire) = r.key().map_err(|e| format!("onnx: {e}"))?;
+        match field {
+            7 => graph = Some(parse_graph_msg(r.bytes()?)?),
+            14 => {
+                // StringStringEntryProto { key = 1, value = 2 }
+                let mut kv = Reader::new(r.bytes()?);
+                let (mut k, mut v) = (String::new(), String::new());
+                while !kv.done() {
+                    let (f, w) = kv.key()?;
+                    match f {
+                        1 => k = kv.string()?,
+                        2 => v = kv.string()?,
+                        _ => kv.skip(f, w)?,
+                    }
+                }
+                meta.insert(k, v);
+            }
+            _ => r.skip(field, wire).map_err(|e| format!("onnx: {e}"))?,
+        }
+    }
+    let g = graph.ok_or("onnx: model has no graph field")?;
+
+    let family = meta
+        .get("family")
+        .cloned()
+        .unwrap_or_else(|| "onnx".to_string());
+    let variant = if g.name.is_empty() {
+        "model".to_string()
+    } else {
+        g.name.clone()
+    };
+
+    let init_by_name: BTreeMap<&str, &PbTensor> = g
+        .initializers
+        .iter()
+        .map(|t| (t.name.as_str(), t))
+        .collect();
+    // Per-tensor dtypes from typed inputs + inferred value_info.
+    let mut dtype_of: BTreeMap<&str, DType> = BTreeMap::new();
+    for vi in g.inputs.iter().chain(&g.value_infos) {
+        if let Some(dt) = DType::from_onnx_elem(vi.elem_type) {
+            dtype_of.insert(vi.name.as_str(), dt);
+        }
+    }
+
+    let mut specs = Vec::new();
+    for vi in &g.inputs {
+        if init_by_name.contains_key(vi.name.as_str()) {
+            continue; // weights re-listed as typed inputs (pre-IR-4 style)
+        }
+        let mut shape = Vec::with_capacity(vi.dims.len());
+        for &d in &vi.dims {
+            shape.push(usize_dim(&vi.name, d)?);
+        }
+        let dt = match vi.elem_type {
+            0 => DType::F32, // untyped input defaults like everything else
+            e => DType::from_onnx_elem(e)
+                .ok_or_else(|| format!("input {:?}: unsupported elem_type {e}", vi.name))?,
+        };
+        specs.push(NodeSpec {
+            name: vi.name.clone(),
+            op: OpKind::Input,
+            attrs: Attrs::none().with_dtype(dt),
+            input_names: vec![],
+            shape: Some(shape),
+        });
+    }
+
+    let batch = match meta.get("batch") {
+        Some(b) => b
+            .parse::<usize>()
+            .map_err(|_| format!("onnx: metadata batch {b:?} is not a usize"))?,
+        None => specs
+            .first()
+            .and_then(|s| s.shape.as_ref()?.first().copied())
+            .ok_or("onnx: unable to determine batch (no metadata, no typed input)")?,
+    };
+
+    for node in &g.nodes {
+        let op = op_of(&node.op_type)?;
+        let name = node
+            .outputs
+            .first()
+            .cloned()
+            .or_else(|| {
+                if node.name.is_empty() {
+                    None
+                } else {
+                    Some(node.name.clone())
+                }
+            })
+            .ok_or("onnx: node lacks output/name")?;
+        let mut attrs = Attrs::none();
+        let mut shape: Option<Vec<usize>> = None;
+        for a in &node.attrs {
+            let ints = &a.ints;
+            match a.name.as_str() {
+                "kernel_shape" if ints.len() >= 2 => {
+                    attrs.kernel =
+                        Some((usize_dim(&name, ints[0])?, usize_dim(&name, ints[1])?));
+                }
+                "strides" if ints.len() >= 2 => {
+                    attrs.strides =
+                        Some((usize_dim(&name, ints[0])?, usize_dim(&name, ints[1])?));
+                }
+                "pads" => {
+                    if let Some(p) = a.first_int() {
+                        if p < 0 {
+                            return Err(format!("node {name:?}: negative padding {p}"));
+                        }
+                        attrs.padding = p as usize;
+                    }
+                }
+                "group" => {
+                    if let Some(gv) = a.first_int() {
+                        attrs.groups = usize_dim(&name, gv)?;
+                    }
+                }
+                "out_channels" => {
+                    if let Some(u) = a.first_int() {
+                        attrs.units = Some(usize_dim(&name, u)?);
+                    }
+                }
+                "axis" | "axes" => attrs.axis = a.first_int(),
+                "shape" if !ints.is_empty() => {
+                    let mut s = Vec::with_capacity(ints.len());
+                    for &d in ints {
+                        s.push(usize_dim(&name, d)?);
+                    }
+                    shape = Some(s);
+                }
+                _ => {}
+            }
+        }
+        // Weight initializers among the inputs: recover kernel/units the way
+        // real exporters encode them (Conv W [M, C/g, kh, kw]; Gemm/Linear
+        // B [K, N], or [N, K] with transB=1), then drop them from the edge
+        // list — initializers are constants, not graph edges.
+        let trans_b = node
+            .attrs
+            .iter()
+            .any(|a| a.name == "transB" && a.first_int() == Some(1));
+        let mut input_names = Vec::with_capacity(node.inputs.len());
+        for in_name in &node.inputs {
+            let Some(t) = init_by_name.get(in_name.as_str()) else {
+                input_names.push(in_name.clone());
+                continue;
+            };
+            match op {
+                OpKind::Conv2d | OpKind::Conv2dTranspose | OpKind::DepthwiseConv2d
+                    if t.dims.len() == 4 =>
+                {
+                    if attrs.units.is_none() {
+                        attrs.units = Some(usize_dim(&t.name, t.dims[0])?);
+                    }
+                    if attrs.kernel.is_none() {
+                        attrs.kernel =
+                            Some((usize_dim(&t.name, t.dims[2])?, usize_dim(&t.name, t.dims[3])?));
+                    }
+                }
+                OpKind::Dense if t.dims.len() == 2 => {
+                    if attrs.units.is_none() {
+                        let u = if trans_b { t.dims[0] } else { t.dims[1] };
+                        attrs.units = Some(usize_dim(&t.name, u)?);
+                    }
+                }
+                _ => {}
+            }
+            if attrs.dtype == DType::F32 {
+                if let Some(dt) = DType::from_onnx_elem(t.data_type) {
+                    attrs.dtype = dt;
+                }
+            }
+        }
+        // Inferred value_info beats the weight fallback: it types this
+        // node's own output.
+        if let Some(&dt) = dtype_of.get(name.as_str()) {
+            attrs.dtype = dt;
+        }
+        specs.push(NodeSpec {
+            name,
+            op,
+            attrs,
+            input_names,
+            shape,
+        });
+    }
+    super::assemble(&family, &variant, batch, specs)
+}
+
+// ---------------------------------------------------------------------------
+// Export: Graph → bytes (fabricates test corpora; round-trip property)
+// ---------------------------------------------------------------------------
+
+fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+fn put_key(out: &mut Vec<u8>, field: u64, wire: u8) {
+    put_varint(out, (field << 3) | wire as u64);
+}
+
+fn put_u64(out: &mut Vec<u8>, field: u64, v: u64) {
+    put_key(out, field, WIRE_VARINT);
+    put_varint(out, v);
+}
+
+fn put_bytes(out: &mut Vec<u8>, field: u64, payload: &[u8]) {
+    put_key(out, field, WIRE_LEN);
+    put_varint(out, payload.len() as u64);
+    out.extend_from_slice(payload);
+}
+
+fn put_str(out: &mut Vec<u8>, field: u64, s: &str) {
+    put_bytes(out, field, s.as_bytes());
+}
+
+fn attr_ints(name: &str, vals: &[i64]) -> Vec<u8> {
+    let mut a = Vec::new();
+    put_str(&mut a, 1, name);
+    let mut packed = Vec::new();
+    for &v in vals {
+        put_varint(&mut packed, v as u64);
+    }
+    put_bytes(&mut a, 8, &packed);
+    put_u64(&mut a, 20, 7); // AttributeType::INTS
+    a
+}
+
+fn value_info(name: &str, dtype: DType, dims: &[usize]) -> Vec<u8> {
+    let mut shape = Vec::new();
+    for &d in dims {
+        let mut dim = Vec::new();
+        put_u64(&mut dim, 1, d as u64);
+        put_bytes(&mut shape, 1, &dim);
+    }
+    let mut tensor_type = Vec::new();
+    put_u64(&mut tensor_type, 1, dtype.onnx_elem());
+    put_bytes(&mut tensor_type, 2, &shape);
+    let mut ty = Vec::new();
+    put_bytes(&mut ty, 1, &tensor_type);
+    let mut vi = Vec::new();
+    put_str(&mut vi, 1, name);
+    put_bytes(&mut vi, 2, &ty);
+    vi
+}
+
+/// Dims-and-dtype-only weight initializer (no raw_data — the predictor
+/// models cost, it never reads weight values).
+fn initializer(name: &str, dtype: DType, dims: &[usize]) -> Vec<u8> {
+    let mut t = Vec::new();
+    let mut packed = Vec::new();
+    for &d in dims {
+        put_varint(&mut packed, d as u64);
+    }
+    put_bytes(&mut t, 1, &packed);
+    put_u64(&mut t, 2, dtype.onnx_elem());
+    put_str(&mut t, 8, name);
+    t
+}
+
+/// Serialize a graph as a binary ONNX `ModelProto`.
+pub fn export(graph: &Graph) -> Vec<u8> {
+    let mut g = Vec::new();
+    put_str(&mut g, 2, &graph.variant);
+    for n in &graph.nodes {
+        if n.op == OpKind::Input {
+            let vi = value_info(&n.name, n.attrs.dtype, &n.out_shape);
+            put_bytes(&mut g, 11, &vi);
+            continue;
+        }
+        let mut node = Vec::new();
+        for &i in &n.inputs {
+            put_str(&mut node, 1, &graph.nodes[i].name);
+        }
+        // Weight initializer: listed as a node input (ONNX convention) and
+        // emitted under GraphProto.initializer below.
+        let weight_dims = weight_dims_of(graph, n);
+        if weight_dims.is_some() {
+            put_str(&mut node, 1, &format!("{}.weight", n.name));
+        }
+        put_str(&mut node, 2, &n.name);
+        put_str(&mut node, 3, &n.name);
+        put_str(&mut node, 4, op_type_of(n.op));
+        let mut put_attr = |name: &str, vals: &[i64]| {
+            let a = attr_ints(name, vals);
+            put_bytes(&mut node, 5, &a);
+        };
+        if let Some((kh, kw)) = n.attrs.kernel {
+            put_attr("kernel_shape", &[kh as i64, kw as i64]);
+        }
+        if let Some((sh, sw)) = n.attrs.strides {
+            put_attr("strides", &[sh as i64, sw as i64]);
+        }
+        if n.attrs.padding != 0 {
+            let p = n.attrs.padding as i64;
+            put_attr("pads", &[p, p, p, p]);
+        }
+        let groups = if n.op == OpKind::DepthwiseConv2d {
+            n.out_shape[1]
+        } else {
+            n.attrs.groups
+        };
+        if groups != 1 {
+            put_attr("group", &[groups as i64]);
+        }
+        if n.op == OpKind::DepthwiseConv2d {
+            put_attr("out_channels", &[n.out_shape[1] as i64]);
+        } else if let Some(u) = n.attrs.units {
+            put_attr("out_channels", &[u as i64]);
+        }
+        if let Some(ax) = n.attrs.axis {
+            put_attr("axis", &[ax]);
+        }
+        if matches!(
+            n.op,
+            OpKind::Reshape | OpKind::Transpose | OpKind::StridedSlice
+        ) {
+            put_attr(
+                "shape",
+                &n.out_shape.iter().map(|&d| d as i64).collect::<Vec<_>>(),
+            );
+        }
+        put_bytes(&mut g, 1, &node);
+        if let Some(dims) = weight_dims {
+            let t = initializer(&format!("{}.weight", n.name), n.attrs.dtype, &dims);
+            put_bytes(&mut g, 5, &t);
+        }
+        // Inferred value_info: types every intermediate so the parser
+        // recovers per-node dtype exactly.
+        let vi = value_info(&n.name, n.attrs.dtype, &n.out_shape);
+        put_bytes(&mut g, 13, &vi);
+    }
+
+    let mut model = Vec::new();
+    put_u64(&mut model, 1, 8); // ir_version
+    put_str(&mut model, 2, "dippm");
+    put_bytes(&mut model, 7, &g);
+    for (k, v) in [
+        ("family", graph.family.clone()),
+        ("batch", graph.batch.to_string()),
+    ] {
+        let mut kv = Vec::new();
+        put_str(&mut kv, 1, k);
+        put_str(&mut kv, 2, &v);
+        put_bytes(&mut model, 14, &kv);
+    }
+    model
+}
+
+/// Weight-tensor dims for ops that own weights, in the layout the parser's
+/// fallback derivation expects.
+fn weight_dims_of(graph: &Graph, n: &crate::ir::Node) -> Option<Vec<usize>> {
+    let in_ch = n
+        .inputs
+        .first()
+        .and_then(|&i| graph.nodes[i].out_shape.get(1).copied())
+        .unwrap_or(1);
+    match n.op {
+        OpKind::Conv2d | OpKind::Conv2dTranspose => {
+            let (kh, kw) = n.attrs.kernel.unwrap_or((1, 1));
+            let per_group = (in_ch / n.attrs.groups.max(1)).max(1);
+            Some(vec![n.out_shape.get(1).copied().unwrap_or(1), per_group, kh, kw])
+        }
+        OpKind::DepthwiseConv2d => {
+            let (kh, kw) = n.attrs.kernel.unwrap_or((1, 1));
+            Some(vec![n.out_shape.get(1).copied().unwrap_or(1), 1, kh, kw])
+        }
+        OpKind::Dense => {
+            let d_in = n
+                .inputs
+                .first()
+                .and_then(|&i| graph.nodes[i].out_shape.last().copied())
+                .unwrap_or(1);
+            let d_out = n.out_shape.last().copied().unwrap_or(1);
+            Some(vec![d_in, d_out]) // [K, N], transB = 0
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontends::structurally_equal;
+    use crate::ir::quantize::quantize;
+    use crate::modelgen::Family;
+
+    #[test]
+    fn efficientnet_roundtrip() {
+        let g = Family::EfficientNet.generate(1);
+        let parsed = parse(&export(&g)).unwrap();
+        assert!(structurally_equal(&g, &parsed));
+        assert_eq!(parsed.family, g.family);
+        assert_eq!(parsed.batch, g.batch);
+    }
+
+    #[test]
+    fn densenet_roundtrip_with_concats() {
+        let g = Family::DenseNet.generate(0);
+        let parsed = parse(&export(&g)).unwrap();
+        assert!(structurally_equal(&g, &parsed));
+    }
+
+    #[test]
+    fn dtype_roundtrips_per_node() {
+        let g = quantize(&Family::MobileNet.generate(2), DType::F16);
+        let parsed = parse(&export(&g)).unwrap();
+        assert!(structurally_equal(&g, &parsed));
+        assert!(parsed.nodes.iter().all(|n| n.attrs.dtype == DType::F16));
+    }
+
+    #[test]
+    fn units_recovered_from_weight_initializer_when_attr_absent() {
+        // A real exporter writes no out_channels attribute — Conv channels
+        // live in the weight tensor W [M, C/g, kh, kw]. Hand-build one.
+        let mut g = Vec::new();
+        let vi = value_info("x", DType::F32, &[1, 3, 8, 8]);
+        put_bytes(&mut g, 11, &vi);
+        let mut node = Vec::new();
+        put_str(&mut node, 1, "x");
+        put_str(&mut node, 1, "w");
+        put_str(&mut node, 2, "y");
+        put_str(&mut node, 4, "Conv");
+        let a = attr_ints("kernel_shape", &[3, 3]);
+        put_bytes(&mut node, 5, &a);
+        put_bytes(&mut g, 1, &node);
+        let w = initializer("w", DType::F32, &[4, 3, 3, 3]);
+        put_bytes(&mut g, 5, &w);
+        let mut model = Vec::new();
+        put_u64(&mut model, 1, 8);
+        put_bytes(&mut model, 7, &g);
+
+        let parsed = parse(&model).unwrap();
+        let conv = parsed
+            .nodes
+            .iter()
+            .find(|n| n.op == OpKind::Conv2d)
+            .expect("conv node");
+        assert_eq!(conv.attrs.units, Some(4));
+        assert_eq!(conv.attrs.kernel, Some((3, 3)));
+        assert_eq!(conv.out_shape, vec![1, 4, 6, 6]);
+        assert_eq!(parsed.batch, 1);
+    }
+
+    #[test]
+    fn hostile_bytes_error_not_panic() {
+        // Truncated varint, absurd length prefix, bad wire type, raw noise.
+        for bad in [
+            &[0x08u8, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF][..],
+            &[0x3A, 0xFF, 0xFF, 0xFF, 0x7F, 0x00][..],
+            &[0x0C, 0x01][..],
+            &[0xDE, 0xAD, 0xBE, 0xEF][..],
+            &[][..],
+        ] {
+            assert!(parse(bad).is_err(), "{bad:?} must error");
+        }
+    }
+
+    #[test]
+    fn truncations_never_panic() {
+        let g = Family::MnasNet.generate(0);
+        let full = export(&g);
+        for len in (0..full.len()).step_by(7) {
+            let _ = parse(&full[..len]); // any Result is fine; panics are not
+        }
+    }
+}

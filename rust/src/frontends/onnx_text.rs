@@ -155,7 +155,8 @@ impl<'a> Lexer<'a> {
                 {
                     self.pos += 1;
                 }
-                let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+                let s = std::str::from_utf8(&self.bytes[start..self.pos])
+                    .map_err(|_| format!("non-UTF8 bytes in number at {start}"))?;
                 s.parse().map(Tok::Int).map_err(|e| e.to_string())
             }
             _ => {
@@ -172,7 +173,7 @@ impl<'a> Lexer<'a> {
                 }
                 Ok(Tok::Ident(
                     std::str::from_utf8(&self.bytes[start..self.pos])
-                        .unwrap()
+                        .map_err(|_| format!("non-UTF8 bytes in identifier at {start}"))?
                         .to_string(),
                 ))
             }
@@ -219,7 +220,7 @@ fn parse_msg(lex: &mut Lexer, top: bool) -> Result<Message, String> {
 // ONNX mapping
 // ---------------------------------------------------------------------------
 
-fn op_type_of(op: OpKind) -> &'static str {
+pub(crate) fn op_type_of(op: OpKind) -> &'static str {
     match op {
         OpKind::Input => "Input", // emitted as graph.input, not a node
         OpKind::Conv2d | OpKind::DepthwiseConv2d => "Conv",
@@ -247,7 +248,7 @@ fn op_type_of(op: OpKind) -> &'static str {
     }
 }
 
-fn op_of(op_type: &str) -> Result<OpKind, String> {
+pub(crate) fn op_of(op_type: &str) -> Result<OpKind, String> {
     Ok(match op_type {
         "Conv" => OpKind::Conv2d,
         "ConvTranspose" => OpKind::Conv2dTranspose,

@@ -1,7 +1,7 @@
 //! PaddlePaddle frontend: program-desc style JSON (`blocks`/`ops`/`vars`,
 //! paddle operator vocabulary: `elementwise_add`, `pool2d`, `reshape2`, …).
 
-use crate::ir::{Attrs, Graph, OpKind};
+use crate::ir::{Attrs, DType, Graph, OpKind};
 use crate::util::json::{Json, JsonObj};
 
 use super::NodeSpec;
@@ -235,6 +235,7 @@ pub fn parse(content: &str) -> Result<Graph, String> {
                 .as_usize()
                 .or_else(|| a.path(&["size"]).as_usize()),
             axis: a.path(&["axis"]).as_i64(),
+            dtype: DType::F32,
         };
         specs.push(NodeSpec {
             name,

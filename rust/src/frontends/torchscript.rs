@@ -2,7 +2,7 @@
 //! PyTorch attribute vocabulary). This is the format a
 //! `torch.jit.trace(...).graph` dump serializes to in our exchange tooling.
 
-use crate::ir::{Attrs, Graph, OpKind};
+use crate::ir::{Attrs, DType, Graph, OpKind};
 use crate::util::json::{Json, JsonObj};
 
 use super::NodeSpec;
@@ -177,6 +177,7 @@ pub fn parse(content: &str) -> Result<Graph, String> {
                 .as_usize()
                 .or_else(|| a.path(&["out_features"]).as_usize()),
             axis: a.path(&["dim"]).as_i64(),
+            dtype: DType::F32,
         };
         let shape = n.path(&["type"]).as_arr().map(|arr| {
             arr.iter().map(|d| d.as_usize().unwrap_or(0)).collect()

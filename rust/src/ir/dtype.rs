@@ -1,0 +1,167 @@
+//! Element dtypes — first-class on every node so the simulator can price
+//! quantized variants (fp16/bf16/int8) differently from fp32 and the cache
+//! can keep their predictions apart.
+//!
+//! The default everywhere is [`DType::F32`]: graphs built by `modelgen`,
+//! the text frontends, and every pre-dtype artifact stay fp32 and must
+//! keep byte-identical costs, features, and fingerprints.
+
+use std::fmt;
+
+/// Tensor element type of a node's output (and its weights, if any).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DType {
+    /// IEEE 754 single precision — the pre-dtype-era implicit default.
+    #[default]
+    F32,
+    /// IEEE 754 half precision.
+    F16,
+    /// bfloat16 (same byte width as f16, wider exponent).
+    BF16,
+    /// 8-bit signed integer (post-training quantization).
+    I8,
+}
+
+pub const ALL_DTYPES: [DType; 4] = [DType::F32, DType::F16, DType::BF16, DType::I8];
+
+impl DType {
+    /// Bytes per element. fp32 is exactly 4.0 — the value the whole
+    /// simulator used as `BYTES_PER_ELEM` before dtypes existed.
+    pub fn bytes(self) -> f64 {
+        match self {
+            DType::F32 => 4.0,
+            DType::F16 | DType::BF16 => 2.0,
+            DType::I8 => 1.0,
+        }
+    }
+
+    /// Canonical lowercase name (native format, CLI flags).
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F16 => "f16",
+            DType::BF16 => "bf16",
+            DType::I8 => "i8",
+        }
+    }
+
+    /// Parse a dtype name. Accepts our canonical names plus the common
+    /// aliases used by ONNX/safetensors-adjacent tooling.
+    pub fn from_name(s: &str) -> Option<DType> {
+        match s {
+            "f32" | "fp32" | "float32" | "float" | "F32" => Some(DType::F32),
+            "f16" | "fp16" | "float16" | "half" | "F16" => Some(DType::F16),
+            "bf16" | "bfloat16" | "BF16" => Some(DType::BF16),
+            "i8" | "int8" | "I8" => Some(DType::I8),
+            _ => None,
+        }
+    }
+
+    /// Dtype one-hot index for node features (stable, matches `ALL_DTYPES`).
+    pub fn index(self) -> usize {
+        match self {
+            DType::F32 => 0,
+            DType::F16 => 1,
+            DType::BF16 => 2,
+            DType::I8 => 3,
+        }
+    }
+
+    /// Map an ONNX `TensorProto.DataType` enum value. Unsupported element
+    /// types (double, int64 weight indices, …) return `None` and callers
+    /// decide whether that's an error or "ignore this tensor".
+    pub fn from_onnx_elem(elem: u64) -> Option<DType> {
+        match elem {
+            1 => Some(DType::F32),
+            10 => Some(DType::F16),
+            16 => Some(DType::BF16),
+            3 => Some(DType::I8),
+            _ => None,
+        }
+    }
+
+    /// ONNX `TensorProto.DataType` enum value for export.
+    pub fn onnx_elem(self) -> u64 {
+        match self {
+            DType::F32 => 1,
+            DType::F16 => 10,
+            DType::BF16 => 16,
+            DType::I8 => 3,
+        }
+    }
+
+    /// Map a safetensors header dtype string ("F32", "F16", "BF16", "I8").
+    pub fn from_safetensors(s: &str) -> Option<DType> {
+        match s {
+            "F32" => Some(DType::F32),
+            "F16" => Some(DType::F16),
+            "BF16" => Some(DType::BF16),
+            "I8" => Some(DType::I8),
+            _ => None,
+        }
+    }
+
+    /// Safetensors header spelling.
+    pub fn safetensors_name(self) -> &'static str {
+        match self {
+            DType::F32 => "F32",
+            DType::F16 => "F16",
+            DType::BF16 => "BF16",
+            DType::I8 => "I8",
+        }
+    }
+
+    /// Relative math-throughput multiplier vs fp32 on the simulated A100:
+    /// half-width dtypes double tensor-core rates, int8 quadruples them
+    /// (A100 peak: 312 TFLOPS fp16/bf16, 624 TOPS int8 vs 156 TFLOPS TF32).
+    pub fn throughput_scale(self) -> f64 {
+        match self {
+            DType::F32 => 1.0,
+            DType::F16 | DType::BF16 => 2.0,
+            DType::I8 => 4.0,
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_f32_with_legacy_width() {
+        assert_eq!(DType::default(), DType::F32);
+        assert_eq!(DType::F32.bytes(), 4.0);
+        assert_eq!(DType::F32.throughput_scale(), 1.0);
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for dt in ALL_DTYPES {
+            assert_eq!(DType::from_name(dt.name()), Some(dt), "{dt}");
+            assert_eq!(DType::from_safetensors(dt.safetensors_name()), Some(dt));
+            assert_eq!(DType::from_onnx_elem(dt.onnx_elem()), Some(dt));
+        }
+        assert_eq!(DType::from_name("f64"), None);
+        assert_eq!(DType::from_onnx_elem(11), None); // double
+    }
+
+    #[test]
+    fn indices_are_dense_and_stable() {
+        for (i, dt) in ALL_DTYPES.iter().enumerate() {
+            assert_eq!(dt.index(), i);
+        }
+    }
+
+    #[test]
+    fn narrower_dtypes_are_smaller_and_faster() {
+        assert!(DType::F16.bytes() < DType::F32.bytes());
+        assert!(DType::I8.bytes() < DType::F16.bytes());
+        assert!(DType::I8.throughput_scale() > DType::F16.throughput_scale());
+    }
+}

@@ -2,7 +2,8 @@
 //! the [`GraphBuilder`] the model generators and frontends use to construct
 //! valid graphs (shape inference runs at every `add`).
 
-use super::infer::{infer_shape, numel, weight_count, Shape};
+use super::dtype::DType;
+use super::infer::{checked_numel, checked_weight_count, infer_shape, numel, weight_count, Shape};
 use super::op::{Attrs, OpKind};
 use crate::util::rng::splitmix64;
 
@@ -79,6 +80,18 @@ impl Graph {
                         n.op
                     ));
                 }
+            }
+            // Overflow-checked element and weight counts: hostile dims must
+            // error here, not wrap downstream into bogus tiny costs.
+            checked_numel(&n.out_shape).map_err(|e| format!("node {i} ({}): {e}", n.op))?;
+            {
+                let in_shape = n
+                    .inputs
+                    .first()
+                    .map(|&s| self.nodes[s].out_shape.as_slice())
+                    .unwrap_or(&[]);
+                checked_weight_count(n.op, &n.attrs, in_shape, &n.out_shape)
+                    .map_err(|e| format!("node {i}: {e}"))?;
             }
             if n.op == OpKind::Input {
                 if !n.inputs.is_empty() {
@@ -220,6 +233,13 @@ impl Graph {
             h = mix(h, node.out_shape.len() as u64);
             for &d in &node.out_shape {
                 h = mix(h, d as u64 + 1);
+            }
+            // Dtype folds into the signature — so fp16/int8 variants never
+            // collide with fp32 in the cache — but ONLY when non-default:
+            // fp32 graphs must keep their pre-dtype-era fingerprints
+            // bit-identical (persisted caches, replication manifests).
+            if a.dtype != DType::F32 {
+                h = mix(h, 0xD7_17E0 ^ a.dtype.index() as u64);
             }
             h
         }
@@ -497,6 +517,34 @@ mod tests {
         sa.sort_unstable();
         sb.sort_unstable();
         assert_ne!(sa, sb);
+    }
+
+    #[test]
+    fn dtype_changes_signatures_but_f32_is_legacy() {
+        let a = tiny();
+        let mut b = tiny();
+        for n in b.nodes.iter_mut() {
+            n.attrs.dtype = DType::F16;
+        }
+        assert_ne!(a.canonical_signatures(), b.canonical_signatures());
+        let mut c = tiny();
+        for n in c.nodes.iter_mut() {
+            n.attrs.dtype = DType::I8;
+        }
+        assert_ne!(b.canonical_signatures(), c.canonical_signatures());
+        // explicitly-f32 == default (pre-dtype) signatures
+        let mut d = tiny();
+        for n in d.nodes.iter_mut() {
+            n.attrs.dtype = DType::F32;
+        }
+        assert_eq!(a.canonical_signatures(), d.canonical_signatures());
+    }
+
+    #[test]
+    fn validate_rejects_overflowing_shapes() {
+        let mut g = tiny();
+        g.nodes[0].out_shape = vec![2, usize::MAX / 2, usize::MAX / 2];
+        assert!(g.validate().is_err());
     }
 
     #[test]

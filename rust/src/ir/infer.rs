@@ -6,6 +6,42 @@ use super::op::{Attrs, OpKind};
 
 pub type Shape = Vec<usize>;
 
+/// Hard cap on elements per tensor (2^34 ≈ 17 G elements — 64 GiB at fp32,
+/// beyond any single-GPU budget we model). Hostile dims that overflow a
+/// `usize` product, or merely exceed this cap, are rejected by
+/// [`checked_numel`] / `Graph::validate` instead of wrapping in release
+/// builds and producing bogus tiny costs.
+pub const MAX_TENSOR_ELEMS: usize = 1 << 34;
+
+/// Overflow-checked element count of a shape, capped at
+/// [`MAX_TENSOR_ELEMS`]. Empty shapes count as 1 (scalar), matching
+/// [`numel`].
+pub fn checked_numel(shape: &[usize]) -> Result<usize, String> {
+    let mut n: usize = 1;
+    for &d in shape {
+        n = n
+            .checked_mul(d)
+            .ok_or_else(|| format!("tensor shape {shape:?} overflows element count"))?;
+    }
+    if n > MAX_TENSOR_ELEMS {
+        return Err(format!(
+            "tensor shape {shape:?} has {n} elements, beyond the {MAX_TENSOR_ELEMS} cap"
+        ));
+    }
+    Ok(n.max(1))
+}
+
+/// Normalize an axis with ONNX semantics: negative axes count from the
+/// back (`axis += rank`). Out-of-range axes (after normalization) error.
+pub fn normalize_axis(axis: i64, rank: usize) -> Result<usize, String> {
+    let r = rank as i64;
+    let a = if axis < 0 { axis + r } else { axis };
+    if a < 0 || a >= r {
+        return Err(format!("axis {axis} out of rank {rank}"));
+    }
+    Ok(a as usize)
+}
+
 /// Infer the output shape, or an error string describing the mismatch.
 pub fn infer_shape(op: OpKind, attrs: &Attrs, inputs: &[&Shape]) -> Result<Shape, String> {
     let need = |n: usize| -> Result<(), String> {
@@ -27,6 +63,9 @@ pub fn infer_shape(op: OpKind, attrs: &Attrs, inputs: &[&Shape]) -> Result<Shape
             let (n, c, h, w) = (s[0], s[1], s[2], s[3]);
             let (kh, kw) = attrs.kernel.ok_or("conv needs kernel")?;
             let (sh, sw) = attrs.strides.unwrap_or((1, 1));
+            if sh == 0 || sw == 0 {
+                return Err(format!("{op} stride must be nonzero"));
+            }
             let p = attrs.padding;
             let out_c = match op {
                 OpKind::DepthwiseConv2d => c,
@@ -42,12 +81,23 @@ pub fn infer_shape(op: OpKind, attrs: &Attrs, inputs: &[&Shape]) -> Result<Shape
                 return Err(format!("C_in {c} not divisible by groups {}", attrs.groups));
             }
             let (oh, ow) = if op == OpKind::Conv2dTranspose {
-                (h * sh, w * sw) // common upsampling configuration
+                // common upsampling configuration
+                let oh = h
+                    .checked_mul(sh)
+                    .ok_or_else(|| format!("{op} output height overflows"))?;
+                let ow = w
+                    .checked_mul(sw)
+                    .ok_or_else(|| format!("{op} output width overflows"))?;
+                (oh, ow)
             } else {
-                if h + 2 * p < kh || w + 2 * p < kw {
+                let ph = padded_extent(h, p)
+                    .ok_or_else(|| format!("{op} padded height overflows"))?;
+                let pw = padded_extent(w, p)
+                    .ok_or_else(|| format!("{op} padded width overflows"))?;
+                if ph < kh || pw < kw {
                     return Err(format!("kernel {kh}x{kw} larger than padded input {h}x{w}"));
                 }
-                ((h + 2 * p - kh) / sh + 1, (w + 2 * p - kw) / sw + 1)
+                ((ph - kh) / sh + 1, (pw - kw) / sw + 1)
             };
             if oh == 0 || ow == 0 {
                 return Err(format!("{op} output collapsed to zero: {oh}x{ow}"));
@@ -104,11 +154,8 @@ pub fn infer_shape(op: OpKind, attrs: &Attrs, inputs: &[&Shape]) -> Result<Shape
             if inputs.is_empty() {
                 return Err("concat needs at least one input".into());
             }
-            let axis = attrs.axis.unwrap_or(1) as usize;
             let first = inputs[0];
-            if axis >= first.len() {
-                return Err(format!("concat axis {axis} out of rank {}", first.len()));
-            }
+            let axis = normalize_axis(attrs.axis.unwrap_or(1), first.len())?;
             let mut out = first.clone();
             for s in &inputs[1..] {
                 if s.len() != first.len() {
@@ -121,9 +168,11 @@ pub fn infer_shape(op: OpKind, attrs: &Attrs, inputs: &[&Shape]) -> Result<Shape
                         ));
                     }
                 }
-                out[axis] += s[axis];
             }
-            out[axis] = inputs.iter().map(|s| s[axis]).sum();
+            out[axis] = inputs
+                .iter()
+                .try_fold(0usize, |acc, s| acc.checked_add(s[axis]))
+                .ok_or("concat axis length overflows")?;
             Ok(out)
         }
 
@@ -135,9 +184,17 @@ pub fn infer_shape(op: OpKind, attrs: &Attrs, inputs: &[&Shape]) -> Result<Shape
             }
             let (kh, kw) = attrs.kernel.ok_or("pool needs kernel")?;
             let (sh, sw) = attrs.strides.unwrap_or((kh, kw));
+            if sh == 0 || sw == 0 {
+                return Err(format!("{op} stride must be nonzero"));
+            }
             let p = attrs.padding;
-            let oh = (s[2] + 2 * p - kh) / sh + 1;
-            let ow = (s[3] + 2 * p - kw) / sw + 1;
+            let ph = padded_extent(s[2], p).ok_or_else(|| format!("{op} padded height overflows"))?;
+            let pw = padded_extent(s[3], p).ok_or_else(|| format!("{op} padded width overflows"))?;
+            if ph < kh || pw < kw {
+                return Err(format!("kernel {kh}x{kw} larger than padded input"));
+            }
+            let oh = (ph - kh) / sh + 1;
+            let ow = (pw - kw) / sw + 1;
             if oh == 0 || ow == 0 {
                 return Err("pool output collapsed to zero".into());
             }
@@ -156,7 +213,11 @@ pub fn infer_shape(op: OpKind, attrs: &Attrs, inputs: &[&Shape]) -> Result<Shape
         OpKind::Flatten => {
             need(1)?;
             let s = inputs[0];
-            Ok(vec![s[0], s[1..].iter().product::<usize>().max(1)])
+            let rest = s[1..]
+                .iter()
+                .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                .ok_or_else(|| format!("flatten of {s:?} overflows"))?;
+            Ok(vec![s[0], rest.max(1)])
         }
 
         OpKind::Reshape | OpKind::Transpose | OpKind::StridedSlice => {
@@ -169,10 +230,7 @@ pub fn infer_shape(op: OpKind, attrs: &Attrs, inputs: &[&Shape]) -> Result<Shape
         OpKind::Mean => {
             need(1)?;
             let s = inputs[0];
-            let axis = attrs.axis.unwrap_or(1) as usize;
-            if axis >= s.len() {
-                return Err(format!("mean axis {axis} out of rank {}", s.len()));
-            }
+            let axis = normalize_axis(attrs.axis.unwrap_or(1), s.len())?;
             let mut out = s.clone();
             out.remove(axis);
             if out.is_empty() {
@@ -183,34 +241,74 @@ pub fn infer_shape(op: OpKind, attrs: &Attrs, inputs: &[&Shape]) -> Result<Shape
     }
 }
 
-/// Element count of a shape.
+/// `extent + 2 * padding`, or `None` on overflow.
+fn padded_extent(extent: usize, padding: usize) -> Option<usize> {
+    padding.checked_mul(2).and_then(|p2| extent.checked_add(p2))
+}
+
+/// Element count of a shape. Saturates instead of wrapping on overflow;
+/// graphs that pass [`crate::ir::Graph::validate`] (which runs
+/// [`checked_numel`] per node) never reach saturation.
 pub fn numel(shape: &[usize]) -> usize {
-    shape.iter().product::<usize>().max(if shape.is_empty() { 0 } else { 1 })
+    let n = shape
+        .iter()
+        .fold(1usize, |acc, &d| acc.saturating_mul(d));
+    n.max(if shape.is_empty() { 0 } else { 1 })
 }
 
 /// Trainable weight parameter count of an op (for model-size accounting).
+/// Saturates on overflow; [`checked_weight_count`] is the erroring variant
+/// used by graph validation.
 pub fn weight_count(op: OpKind, attrs: &Attrs, in_shape: &[usize], out_shape: &[usize]) -> usize {
+    checked_weight_count(op, attrs, in_shape, out_shape).unwrap_or(usize::MAX)
+}
+
+/// Overflow-checked trainable weight parameter count.
+pub fn checked_weight_count(
+    op: OpKind,
+    attrs: &Attrs,
+    in_shape: &[usize],
+    out_shape: &[usize],
+) -> Result<usize, String> {
+    let overflow = || format!("{op} weight count overflows (in {in_shape:?}, out {out_shape:?})");
+    let prod = |dims: &[usize]| -> Result<usize, String> {
+        dims.iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .ok_or_else(overflow)
+    };
     match op {
         OpKind::Conv2d | OpKind::Conv2dTranspose => {
             let (kh, kw) = attrs.kernel.unwrap_or((1, 1));
             let c_in = in_shape.get(1).copied().unwrap_or(1);
             let c_out = out_shape.get(1).copied().unwrap_or(1);
             let g = attrs.groups.max(1);
-            c_out * (c_in / g) * kh * kw + c_out
+            prod(&[c_out, c_in / g, kh, kw])?
+                .checked_add(c_out)
+                .ok_or_else(overflow)
         }
         OpKind::DepthwiseConv2d => {
             let (kh, kw) = attrs.kernel.unwrap_or((1, 1));
             let c = in_shape.get(1).copied().unwrap_or(1);
-            c * kh * kw + c
+            prod(&[c, kh, kw])?.checked_add(c).ok_or_else(overflow)
         }
         OpKind::Dense => {
             let d_in = *in_shape.last().unwrap_or(&1);
             let d_out = *out_shape.last().unwrap_or(&1);
-            d_in * d_out + d_out
+            prod(&[d_in, d_out])?.checked_add(d_out).ok_or_else(overflow)
         }
-        OpKind::BatchNorm => 2 * in_shape.get(1).copied().unwrap_or(1),
-        OpKind::LayerNorm => 2 * in_shape.last().copied().unwrap_or(1),
-        _ => 0,
+        OpKind::BatchNorm => in_shape
+            .get(1)
+            .copied()
+            .unwrap_or(1)
+            .checked_mul(2)
+            .ok_or_else(overflow),
+        OpKind::LayerNorm => in_shape
+            .last()
+            .copied()
+            .unwrap_or(1)
+            .checked_mul(2)
+            .ok_or_else(overflow),
+        _ => Ok(0),
     }
 }
 
@@ -321,6 +419,50 @@ mod tests {
         assert!(infer_shape(OpKind::Add, &Attrs::none(), &[&a, &a]).is_ok());
         let b = vec![1, 32, 28, 28];
         assert!(infer_shape(OpKind::Add, &Attrs::none(), &[&a, &b]).is_err());
+    }
+
+    #[test]
+    fn negative_axes_normalize_like_onnx() {
+        let s = vec![4, 197, 384];
+        // mean over axis -2 == axis 1
+        let out = infer_shape(OpKind::Mean, &Attrs::with_axis(-2), &[&s]).unwrap();
+        assert_eq!(out, vec![4, 384]);
+        let a = vec![1, 64, 28, 28];
+        let b = vec![1, 32, 28, 28];
+        // concat over axis -3 == axis 1 on a 4-D tensor
+        let out = infer_shape(OpKind::Concat, &Attrs::with_axis(-3), &[&a, &b]).unwrap();
+        assert_eq!(out, vec![1, 96, 28, 28]);
+        // still-out-of-range axes error instead of reinterpreting
+        assert!(infer_shape(OpKind::Mean, &Attrs::with_axis(-9), &[&s]).is_err());
+        assert!(infer_shape(OpKind::Mean, &Attrs::with_axis(3), &[&s]).is_err());
+    }
+
+    #[test]
+    fn hostile_dims_error_instead_of_wrapping() {
+        let huge = vec![usize::MAX / 2, 8];
+        assert!(checked_numel(&huge).is_err());
+        // beyond the element cap but no usize overflow
+        assert!(checked_numel(&[1 << 20, 1 << 20]).is_err());
+        assert!(checked_numel(&[1, 3, 224, 224]).is_ok());
+        // saturating numel never wraps to a tiny value
+        assert_eq!(numel(&huge), usize::MAX);
+        // flatten of an overflowing shape errors
+        assert!(infer_shape(OpKind::Flatten, &Attrs::none(), &[&huge.clone()]).is_err());
+        // conv with absurd padding errors
+        let a = Attrs::conv(64, 3, 1, usize::MAX / 2 + 1, 1);
+        assert!(infer_shape(OpKind::Conv2d, &a, &[&vec![1, 3, 8, 8]]).is_err());
+        // zero stride errors instead of dividing by zero
+        let mut z = Attrs::conv(64, 3, 1, 1, 1);
+        z.strides = Some((0, 0));
+        assert!(infer_shape(OpKind::Conv2d, &z, &[&vec![1, 3, 8, 8]]).is_err());
+        // weight-count overflow is caught
+        assert!(checked_weight_count(
+            OpKind::Dense,
+            &Attrs::dense(usize::MAX / 2),
+            &[1, usize::MAX / 2],
+            &[1, usize::MAX / 2],
+        )
+        .is_err());
     }
 
     #[test]

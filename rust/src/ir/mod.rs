@@ -5,9 +5,12 @@
 //! speak it. A [`Graph`] is a DAG of operator [`Node`]s over NCHW tensors,
 //! stored in topological order (enforced at construction / validation).
 
+pub mod dtype;
 pub mod graph;
 pub mod infer;
 pub mod op;
+pub mod quantize;
 
+pub use dtype::{DType, ALL_DTYPES};
 pub use graph::{Graph, GraphBuilder, Node, NodeId};
 pub use op::{Attrs, OpKind};

@@ -7,6 +7,8 @@
 
 use std::fmt;
 
+use super::dtype::DType;
+
 /// Operator kinds. The one-hot *category* used in node features groups
 /// related kinds (see [`OpKind::category`]) to keep the paper's fixed
 /// 32-feature budget (§3.2).
@@ -207,6 +209,9 @@ pub struct Attrs {
     pub units: Option<usize>,
     /// Axis for concat/softmax/mean.
     pub axis: Option<i64>,
+    /// Element dtype of this node's output (and weights). Defaults to
+    /// [`DType::F32`], the pre-dtype-era behavior.
+    pub dtype: DType,
 }
 
 impl Attrs {
@@ -217,6 +222,12 @@ impl Attrs {
         }
     }
 
+    /// This attrs set, re-typed to `dtype`.
+    pub fn with_dtype(mut self, dtype: DType) -> Attrs {
+        self.dtype = dtype;
+        self
+    }
+
     pub fn conv(out_ch: usize, k: usize, s: usize, pad: usize, groups: usize) -> Attrs {
         Attrs {
             kernel: Some((k, k)),
@@ -225,6 +236,7 @@ impl Attrs {
             groups,
             units: Some(out_ch),
             axis: None,
+            dtype: DType::F32,
         }
     }
 
@@ -236,6 +248,7 @@ impl Attrs {
             groups: 1,
             units: None,
             axis: None,
+            dtype: DType::F32,
         }
     }
 

@@ -1,0 +1,108 @@
+//! Graph-rewrite pass emitting quantized variants of a graph for
+//! design-space-exploration sweeps: "what do I save at fp16 / int8?".
+//!
+//! The rewrite is a pure metadata pass — shapes and topology are
+//! untouched; every node's `attrs.dtype` is set to the target dtype (a
+//! whole-graph cast, the way TensorRT's `--fp16` / `--int8` builder flags
+//! or torch `.half()` convert a model). The variant tag is suffixed so
+//! dataset entries and logs stay distinguishable; fingerprints diverge
+//! automatically because dtype folds into the WL signatures.
+
+use super::dtype::{DType, ALL_DTYPES};
+use super::graph::Graph;
+
+/// Rewrite `graph` to a uniformly `dtype`-typed variant.
+///
+/// Casting to [`DType::F32`] returns a graph bit-identical to the input
+/// except for any nodes that were non-fp32 (the tag is only suffixed for
+/// non-fp32 targets, so fp32-in → fp32-out is a true no-op).
+pub fn quantize(graph: &Graph, dtype: DType) -> Graph {
+    let mut g = graph.clone();
+    for n in g.nodes.iter_mut() {
+        n.attrs.dtype = dtype;
+    }
+    if dtype != DType::F32 {
+        let suffix = format!("-{}", dtype.name());
+        if !g.variant.ends_with(&suffix) {
+            g.variant.push_str(&suffix);
+        }
+    } else {
+        // Strip a previous quantize suffix when casting back to fp32 so
+        // quantize(quantize(g, X), F32) round-trips to g.
+        for dt in ALL_DTYPES {
+            if dt == DType::F32 {
+                continue;
+            }
+            let suffix = format!("-{}", dt.name());
+            if let Some(stripped) = g.variant.strip_suffix(&suffix) {
+                g.variant = stripped.to_string();
+                break;
+            }
+        }
+    }
+    g
+}
+
+/// All dtype variants of a graph (fp32 first), for DSE sweeps over the
+/// quantization axis.
+pub fn dtype_sweep(graph: &Graph) -> Vec<Graph> {
+    ALL_DTYPES.iter().map(|&dt| quantize(graph, dt)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::GraphBuilder;
+    use crate::ir::OpKind;
+
+    fn tiny() -> Graph {
+        let mut b = GraphBuilder::new("test", "tiny", 1);
+        let x = b.input(vec![1, 3, 16, 16]);
+        let c = b.conv_relu(x, 8, 3, 1, 1);
+        let p = b.add(OpKind::GlobalAvgPool2d, crate::ir::Attrs::none(), &[c]);
+        let f = b.add(OpKind::Flatten, crate::ir::Attrs::none(), &[p]);
+        b.dense(f, 10);
+        b.finish()
+    }
+
+    #[test]
+    fn quantize_sets_every_node_and_stays_valid() {
+        let g = tiny();
+        let q = quantize(&g, DType::F16);
+        assert!(q.validate().is_ok());
+        assert!(q.nodes.iter().all(|n| n.attrs.dtype == DType::F16));
+        assert_eq!(q.variant, "tiny-f16");
+        // topology and shapes untouched
+        assert_eq!(q.n_nodes(), g.n_nodes());
+        for (a, b) in g.nodes.iter().zip(q.nodes.iter()) {
+            assert_eq!(a.out_shape, b.out_shape);
+            assert_eq!(a.op, b.op);
+        }
+    }
+
+    #[test]
+    fn f32_quantize_is_identity() {
+        let g = tiny();
+        assert_eq!(quantize(&g, DType::F32), g);
+    }
+
+    #[test]
+    fn quantize_roundtrips_through_f32() {
+        let g = tiny();
+        let q = quantize(&quantize(&g, DType::I8), DType::F32);
+        assert_eq!(q, g);
+    }
+
+    #[test]
+    fn sweep_covers_all_dtypes_distinctly() {
+        let g = tiny();
+        let sweep = dtype_sweep(&g);
+        assert_eq!(sweep.len(), ALL_DTYPES.len());
+        assert_eq!(sweep[0], g); // fp32 first, unchanged
+        let mut sigs: Vec<Vec<u64>> =
+            sweep.iter().map(|v| v.canonical_signatures()).collect();
+        sigs.sort();
+        sigs.dedup();
+        assert_eq!(sigs.len(), ALL_DTYPES.len(), "dtype variants must not collide");
+    }
+}

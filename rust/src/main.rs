@@ -327,14 +327,14 @@ fn cmd_evaluate(args: &Args) -> Result<()> {
 
 fn read_model(args: &Args) -> Result<Graph> {
     let path = args.get("model").ok_or(anyhow!("--model required"))?;
-    let content =
-        std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    // Bytes, not a string: binary ONNX and safetensors are legal inputs.
+    let content = std::fs::read(path).with_context(|| format!("reading {path}"))?;
     match args.get("framework") {
-        Some("auto") | None => frontends::parse_any(&content).map_err(|e| anyhow!(e)),
+        Some("auto") | None => frontends::parse_bytes_any(&content).map_err(|e| anyhow!(e)),
         Some(name) => {
             let fw = Framework::from_name(name)
                 .ok_or_else(|| anyhow!("unknown framework {name:?}"))?;
-            frontends::parse(fw, &content).map_err(|e| anyhow!(e))
+            frontends::parse_framework_bytes(fw, &content).map_err(|e| anyhow!(e))
         }
     }
 }

@@ -141,7 +141,7 @@ mod tests {
     use super::*;
 
     const SAMPLE: &str = r#"{
-      "constants": {"max_nodes":160,"node_feats":32,"static_feats":5,
+      "constants": {"max_nodes":160,"node_feats":36,"static_feats":9,
                     "targets":3,"batch":32,"hidden":128,
                     "dropout":0.05,"huber_delta":1.0},
       "variants": {
@@ -181,7 +181,7 @@ mod tests {
         if let Ok(text) = std::fs::read_to_string("artifacts/manifest.json") {
             let m = Manifest::parse(&text).unwrap();
             assert!(m.variants.contains_key("sage"));
-            assert_eq!(m.constants.node_feats, 32);
+            assert_eq!(m.constants.node_feats, 36);
         }
     }
 }

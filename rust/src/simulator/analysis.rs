@@ -34,8 +34,17 @@ use super::cost::{op_cost, OpCost};
 use super::fusion::{self, Kernel};
 use super::memory;
 
-/// Number of static features (paper eq. 1).
-pub const STATIC_FEATS: usize = 5;
+/// Number of static features: the paper's eq. (1) five (MACs, batch,
+/// #conv, #dense, #relu) plus four per-dtype node counts (fp32/fp16/bf16/
+/// int8) so the predictor sees the quantization mix.
+pub const STATIC_FEATS: usize = 9;
+
+/// The eq. (1) prefix of the static vector. Only these five fold into the
+/// fingerprint (see [`fold_fingerprint`]); the dtype counts reach the key
+/// through the WL signatures instead, which keeps every pre-dtype fp32
+/// fingerprint bit-identical to what persisted caches and replication
+/// manifests were written with.
+pub const EQ1_STATIC_FEATS: usize = 5;
 
 /// A 128-bit structural graph fingerprint.
 ///
@@ -48,8 +57,10 @@ pub const STATIC_FEATS: usize = 5;
 /// Construction: per-node Weisfeiler–Lehman signatures from
 /// [`Graph::canonical_signatures`] (id/name-invariant) are folded with an
 /// order-independent multiset combine (wrapping sums of keyed mixes) over
-/// nodes and edges, then mixed with the static-feature vector (paper eq. 1)
-/// so the cache key covers exactly what the predictor sees. Only the
+/// nodes and edges, then mixed with the eq. (1) static features so the
+/// cache key covers what the predictor sees (the dtype-mix statics are
+/// covered through the WL signatures, which fold each non-fp32 node's
+/// dtype — see `Graph::canonical_signatures`). Only the
 /// in-repo splitmix64 is used — never `std`'s randomized hasher — so keys
 /// are stable across runs, processes and machines.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -123,7 +134,10 @@ fn fold_fingerprint(graph: &Graph, statics: &[f64; STATIC_FEATS]) -> Fingerprint
         }
     }
     let mut t = splitmix64(graph.batch as u64 ^ 0xBA7C_4000);
-    for v in static_bits(statics) {
+    // Fold only the eq. (1) prefix: fp32 graphs must keep their pre-dtype
+    // fingerprints (the dtype counts are zero-for-fp16/bf16/i8 there, but
+    // folding them at all would change every existing key).
+    for v in static_bits(statics).into_iter().take(EQ1_STATIC_FEATS) {
         t = splitmix64(t ^ v);
     }
     t = splitmix64(t ^ (graph.n_nodes() as u64).rotate_left(32));
@@ -141,6 +155,7 @@ fn statics_sweep(graph: &Graph, cost_of: impl Fn(usize) -> OpCost) -> ([f64; STA
     let mut macs = 0.0;
     let mut flops = 0.0;
     let (mut conv, mut dense, mut relu) = (0u64, 0u64, 0u64);
+    let mut dtype_counts = [0u64; crate::ir::ALL_DTYPES.len()];
     for (i, node) in graph.nodes.iter().enumerate() {
         let c = cost_of(i);
         flops += c.flops;
@@ -153,6 +168,7 @@ fn statics_sweep(graph: &Graph, cost_of: impl Fn(usize) -> OpCost) -> ([f64; STA
             OpKind::Relu => relu += 1,
             _ => {}
         }
+        dtype_counts[node.attrs.dtype.index()] += 1;
     }
     let statics = [
         macs,
@@ -160,6 +176,10 @@ fn statics_sweep(graph: &Graph, cost_of: impl Fn(usize) -> OpCost) -> ([f64; STA
         conv as f64,
         dense as f64,
         relu as f64,
+        dtype_counts[0] as f64,
+        dtype_counts[1] as f64,
+        dtype_counts[2] as f64,
+        dtype_counts[3] as f64,
     ];
     (statics, flops)
 }
@@ -340,6 +360,29 @@ mod tests {
         assert_eq!(a.variant, g.variant);
         assert_eq!(a.batch, g.batch);
         assert_eq!(a.n_nodes, g.n_nodes());
+    }
+
+    #[test]
+    fn dtype_mix_reaches_statics_and_fingerprint() {
+        use crate::ir::quantize::quantize;
+        use crate::ir::DType;
+        let g = sample(2, 8);
+        let a32 = GraphAnalysis::of(&g);
+        // all six nodes fp32
+        assert_eq!(a32.statics[5], g.n_nodes() as f64);
+        assert_eq!(&a32.statics[6..], &[0.0, 0.0, 0.0]);
+        let q = quantize(&g, DType::F16);
+        let a16 = GraphAnalysis::of(&q);
+        assert_eq!(a16.statics[6], g.n_nodes() as f64);
+        assert_eq!(a16.statics[5], 0.0);
+        // distinct cache keys per dtype
+        assert_ne!(a16.fingerprint, a32.fingerprint);
+        assert_ne!(
+            GraphAnalysis::of(&quantize(&g, DType::I8)).fingerprint,
+            a16.fingerprint
+        );
+        // eq. (1) prefix is dtype-independent (same shapes, same MACs)
+        assert_eq!(a16.statics[..5], a32.statics[..5]);
     }
 
     #[test]

@@ -3,12 +3,22 @@
 //! MACs follow TVM's relay.analysis.count_macs convention (only conv /
 //! dense / batch_matmul count — paper §3.3); FLOPs are the full roofline
 //! work estimate used by the device model, and bytes are the ideal HBM
-//! traffic of an unfused kernel (inputs + weights + outputs, fp32).
+//! traffic of an unfused kernel (inputs + weights + outputs), scaled by
+//! each tensor's element dtype: inputs are priced at their *producer's*
+//! dtype, weights and outputs at the node's own dtype. All-fp32 graphs
+//! (the implicit default) cost exactly what the pre-dtype model charged.
 
 use crate::ir::infer::numel;
 use crate::ir::{Graph, Node, OpKind};
 
-pub const BYTES_PER_ELEM: f64 = 4.0; // fp32 inference, as measured by the paper
+/// Legacy fp32 element width — still the byte width of every default-dtype
+/// tensor (`DType::F32.bytes()` returns exactly this).
+pub const BYTES_PER_ELEM: f64 = 4.0;
+
+/// Byte width of `node`'s output (and weight) elements.
+pub fn node_elem_bytes(node: &Node) -> f64 {
+    node.attrs.dtype.bytes()
+}
 
 /// Cost of one node in isolation (before fusion).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -33,6 +43,17 @@ pub fn op_cost(graph: &Graph, node: &Node) -> OpCost {
         .iter()
         .map(|&i| numel(&graph.nodes[i].out_shape) as f64)
         .sum();
+    // Input bytes at each producer's dtype (a concat of fp16 tensors reads
+    // fp16 bytes even if this node is typed differently).
+    let in_bytes: f64 = node
+        .inputs
+        .iter()
+        .map(|&i| {
+            let p = &graph.nodes[i];
+            numel(&p.out_shape) as f64 * node_elem_bytes(p)
+        })
+        .sum();
+    let elem = node_elem_bytes(node);
     let out_numel = numel(&node.out_shape) as f64;
     let first_in = node
         .inputs
@@ -41,8 +62,8 @@ pub fn op_cost(graph: &Graph, node: &Node) -> OpCost {
         .unwrap_or(&[]);
 
     let mut c = OpCost {
-        bytes_in: in_numel * BYTES_PER_ELEM,
-        bytes_out: out_numel * BYTES_PER_ELEM,
+        bytes_in: in_bytes,
+        bytes_out: out_numel * elem,
         ..Default::default()
     };
 
@@ -59,22 +80,21 @@ pub fn op_cost(graph: &Graph, node: &Node) -> OpCost {
             c.macs = out_numel * (c_in / groups) * (kh * kw) as f64;
             c.flops = 2.0 * c.macs;
             let c_out = node.out_shape.get(1).copied().unwrap_or(1) as f64;
-            c.bytes_weights = (c_out * (c_in / groups) * (kh * kw) as f64 + c_out)
-                * BYTES_PER_ELEM;
+            c.bytes_weights = (c_out * (c_in / groups) * (kh * kw) as f64 + c_out) * elem;
         }
         OpKind::DepthwiseConv2d => {
             let (kh, kw) = node.attrs.kernel.unwrap_or((1, 1));
             c.macs = out_numel * (kh * kw) as f64;
             c.flops = 2.0 * c.macs;
             let ch = first_in.get(1).copied().unwrap_or(1) as f64;
-            c.bytes_weights = (ch * (kh * kw) as f64 + ch) * BYTES_PER_ELEM;
+            c.bytes_weights = (ch * (kh * kw) as f64 + ch) * elem;
         }
         OpKind::Dense => {
             let d_in = *first_in.last().unwrap_or(&1) as f64;
             c.macs = out_numel * d_in;
             c.flops = 2.0 * c.macs;
             let d_out = *node.out_shape.last().unwrap_or(&1) as f64;
-            c.bytes_weights = (d_in * d_out + d_out) * BYTES_PER_ELEM;
+            c.bytes_weights = (d_in * d_out + d_out) * elem;
         }
         OpKind::BatchMatmul => {
             // [B,M,K] x [B,K,N]: B*M*N*K MACs
@@ -96,12 +116,12 @@ pub fn op_cost(graph: &Graph, node: &Node) -> OpCost {
         OpKind::BatchNorm => {
             c.flops = 2.0 * out_numel; // folded scale+shift at inference
             let ch = first_in.get(1).copied().unwrap_or(1) as f64;
-            c.bytes_weights = 2.0 * ch * BYTES_PER_ELEM;
+            c.bytes_weights = 2.0 * ch * elem;
         }
         OpKind::LayerNorm => {
             c.flops = 8.0 * out_numel;
             let d = *first_in.last().unwrap_or(&1) as f64;
-            c.bytes_weights = 2.0 * d * BYTES_PER_ELEM;
+            c.bytes_weights = 2.0 * d * elem;
         }
         OpKind::Reshape | OpKind::Flatten => {
             // Metadata-only on contiguous tensors.
@@ -181,6 +201,23 @@ mod tests {
         let conv_only = op_cost(&g, &g.nodes[1]).macs;
         assert_eq!(total_macs(&g), conv_only);
         assert!(total_flops(&g) > 2.0 * conv_only);
+    }
+
+    #[test]
+    fn dtype_scales_bytes_not_flops() {
+        let mut b = GraphBuilder::new("t", "t", 1);
+        let x = b.input(vec![1, 3, 32, 32]);
+        b.conv2d(x, 16, 3, 1, 1);
+        let g = b.finish();
+        let f16 = crate::ir::quantize::quantize(&g, crate::ir::DType::F16);
+        let i8g = crate::ir::quantize::quantize(&g, crate::ir::DType::I8);
+        let c32 = op_cost(&g, &g.nodes[1]);
+        let c16 = op_cost(&f16, &f16.nodes[1]);
+        let c8 = op_cost(&i8g, &i8g.nodes[1]);
+        assert_eq!(c16.flops, c32.flops);
+        assert_eq!(c16.macs, c32.macs);
+        assert_eq!(c16.total_bytes(), c32.total_bytes() / 2.0);
+        assert_eq!(c8.total_bytes(), c32.total_bytes() / 4.0);
     }
 
     #[test]

@@ -129,6 +129,21 @@ impl DeviceSpec {
     pub fn bw_util(&self, bytes: f64) -> f64 {
         self.max_bw_util * bytes / (bytes + self.bytes_half_util)
     }
+
+    /// Peak tensor-core throughput at `dtype` (FLOP/s or OP/s). fp32 runs
+    /// the TF32 path at exactly `tc_flops` — the pre-dtype value — while
+    /// fp16/bf16 double it (312 TFLOPS on the datasheet) and int8
+    /// quadruples it (624 TOPS).
+    pub fn tc_flops_at(&self, dtype: crate::ir::DType) -> f64 {
+        self.tc_flops * dtype.throughput_scale()
+    }
+
+    /// Peak CUDA-core throughput at `dtype`. fp16 doubles the fp32 rate
+    /// (packed half2 math); bf16/int8 on CUDA cores see the same 2x/4x
+    /// packing win as the tensor-core path.
+    pub fn cuda_flops_at(&self, dtype: crate::ir::DType) -> f64 {
+        self.cuda_flops * dtype.throughput_scale()
+    }
 }
 
 #[cfg(test)]
@@ -150,6 +165,17 @@ mod tests {
         assert!(sm.windows(2).all(|w| w[0] < w[1]));
         assert!(bw.windows(2).all(|w| w[0] < w[1]));
         assert_eq!(MigProfile::G7_40.sm_fraction(), 1.0);
+    }
+
+    #[test]
+    fn dtype_throughput_tiers() {
+        use crate::ir::DType;
+        let d = DeviceSpec::default();
+        assert_eq!(d.tc_flops_at(DType::F32), d.tc_flops);
+        assert_eq!(d.cuda_flops_at(DType::F32), d.cuda_flops);
+        assert_eq!(d.tc_flops_at(DType::F16), 2.0 * d.tc_flops);
+        assert_eq!(d.tc_flops_at(DType::BF16), 2.0 * d.tc_flops);
+        assert_eq!(d.tc_flops_at(DType::I8), 4.0 * d.tc_flops);
     }
 
     #[test]

@@ -10,9 +10,9 @@
 //!     round-trip (input bytes from the producer are dropped);
 //!   * reshape/flatten are zero-cost and never form kernels.
 
-use crate::ir::{Graph, NodeId, OpKind};
+use crate::ir::{DType, Graph, NodeId, OpKind};
 
-use super::cost::{op_cost, OpCost};
+use super::cost::{node_elem_bytes, op_cost, OpCost};
 
 /// A fused kernel: one launch on the device.
 #[derive(Debug, Clone, PartialEq)]
@@ -23,6 +23,9 @@ pub struct Kernel {
     pub cost: OpCost,
     /// Whether the producer runs on tensor cores.
     pub tensor_core: bool,
+    /// Element dtype of the producer op — selects the math-throughput tier
+    /// (fp16/bf16 double, int8 quadruple the tensor-core rate).
+    pub dtype: DType,
 }
 
 /// Partition the graph into fused kernels (in topological order),
@@ -75,7 +78,7 @@ pub fn fuse_with_costs(graph: &Graph, costs: &[OpCost]) -> Vec<Kernel> {
                 let primary_bytes = crate::ir::infer::numel(
                     &graph.nodes[primary].out_shape,
                 ) as f64
-                    * super::cost::BYTES_PER_ELEM;
+                    * node_elem_bytes(&graph.nodes[primary]);
                 k.cost.bytes_in += c.bytes_in - primary_bytes;
                 // Output of the kernel is now this op's output.
                 k.cost.bytes_out = c.bytes_out;
@@ -87,6 +90,7 @@ pub fn fuse_with_costs(graph: &Graph, costs: &[OpCost]) -> Vec<Kernel> {
                     nodes: vec![node.id],
                     cost: c,
                     tensor_core: node.op.is_tensor_core(),
+                    dtype: node.attrs.dtype,
                 });
                 kernel_of[node.id] = Some(kid);
             }

@@ -9,10 +9,10 @@
 //! (paper §1) and reproduces the Fig. 3 profile-capacity effect via the
 //! context scaling in `Simulator::memory_mb`.
 
-use crate::ir::infer::numel;
+use crate::ir::infer::{numel, weight_count};
 use crate::ir::{Graph, OpKind};
 
-use super::cost::BYTES_PER_ELEM;
+use super::cost::node_elem_bytes;
 
 /// Peak live activation bytes over a topological execution of the graph.
 pub fn peak_activation_bytes(graph: &Graph) -> f64 {
@@ -49,7 +49,7 @@ pub fn peak_activation_bytes(graph: &Graph) -> f64 {
         // Allocate this node's output (reshape/flatten alias their input).
         let aliases = matches!(node.op, OpKind::Reshape | OpKind::Flatten);
         if !aliases {
-            live += numel(&node.out_shape) as f64 * BYTES_PER_ELEM;
+            live += numel(&node.out_shape) as f64 * node_elem_bytes(node);
         }
         peak = peak.max(live);
         // Free tensors whose last use was this node.
@@ -58,7 +58,7 @@ pub fn peak_activation_bytes(graph: &Graph) -> f64 {
                 let nj = &graph.nodes[j];
                 let aliases_j = matches!(nj.op, OpKind::Reshape | OpKind::Flatten);
                 if !aliases_j {
-                    live -= numel(&nj.out_shape) as f64 * BYTES_PER_ELEM;
+                    live -= numel(&nj.out_shape) as f64 * node_elem_bytes(nj);
                 }
                 // Guard against double-free by marking as freed.
                 // (last_use[j] can equal i only once since we mutate below.)
@@ -74,9 +74,20 @@ pub fn peak_activation_bytes(graph: &Graph) -> f64 {
     peak
 }
 
-/// Weight bytes of the whole model.
+/// Weight bytes of the whole model, at each node's own dtype.
 pub fn weight_bytes(graph: &Graph) -> f64 {
-    graph.total_weights() as f64 * BYTES_PER_ELEM
+    graph
+        .nodes
+        .iter()
+        .map(|n| {
+            let in_shape = n
+                .inputs
+                .first()
+                .map(|&s| graph.nodes[s].out_shape.as_slice())
+                .unwrap_or(&[]);
+            weight_count(n.op, &n.attrs, in_shape, &n.out_shape) as f64 * node_elem_bytes(n)
+        })
+        .sum()
 }
 
 /// cuDNN-style workspace: a fraction of the largest single conv activation,
@@ -91,7 +102,7 @@ pub fn workspace_bytes(graph: &Graph) -> f64 {
                 OpKind::Conv2d | OpKind::DepthwiseConv2d | OpKind::Conv2dTranspose
             )
         })
-        .map(|n| numel(&n.out_shape) as f64 * BYTES_PER_ELEM * 0.5)
+        .map(|n| numel(&n.out_shape) as f64 * node_elem_bytes(n) * 0.5)
         .fold(0.0, f64::max)
 }
 

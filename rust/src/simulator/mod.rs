@@ -73,10 +73,12 @@ impl Simulator {
         let bw = profile.bw_fraction();
         let mut total = 0.0;
         for k in &a.kernels {
+            // Per-kernel dtype selects the math tier: fp32 at the legacy
+            // TF32/CUDA rates, fp16/bf16 at 2x, int8 at 4x.
             let peak = if k.tensor_core {
-                s.tc_flops
+                s.tc_flops_at(k.dtype)
             } else {
-                s.cuda_flops
+                s.cuda_flops_at(k.dtype)
             } * sm;
             let cu = s.compute_util(k.cost.flops * sm.recip().min(4.0)); // smaller slice saturates sooner
             let bu = s.bw_util(k.cost.total_bytes());
@@ -98,9 +100,9 @@ impl Simulator {
         let (mut t_sum, mut u_sum) = (0.0, 0.0);
         for k in &a.kernels {
             let peak = if k.tensor_core {
-                s.tc_flops
+                s.tc_flops_at(k.dtype)
             } else {
-                s.cuda_flops
+                s.cuda_flops_at(k.dtype)
             } * sm;
             let cu = s.compute_util(k.cost.flops * sm.recip().min(4.0));
             let bu = s.bw_util(k.cost.total_bytes());
@@ -332,6 +334,31 @@ mod tests {
             assert_eq!(sim.measure_on_analyzed(&a, p), sim.measure_on(&g, p));
         }
         assert_eq!(sim.measure_analyzed(&a), sim.measure(&g));
+    }
+
+    #[test]
+    fn quantized_variants_predict_lower_latency_and_memory() {
+        use crate::ir::quantize::quantize;
+        use crate::ir::DType;
+        let sim = Simulator::new();
+        let g = convnet(8, 64, 6);
+        let f32_lat = sim.latency_s(&g, MigProfile::G7_40);
+        let f32_mem = sim.memory_mb(&g, MigProfile::G7_40);
+        for dt in [DType::F16, DType::BF16, DType::I8] {
+            let q = quantize(&g, dt);
+            let lat = sim.latency_s(&q, MigProfile::G7_40);
+            let mem = sim.memory_mb(&q, MigProfile::G7_40);
+            assert!(lat < f32_lat, "{dt}: {lat} !< {f32_lat}");
+            assert!(mem < f32_mem, "{dt}: {mem} !< {f32_mem}");
+        }
+        // int8 beats fp16 (narrower bytes, faster math)
+        assert!(
+            sim.latency_s(&quantize(&g, DType::I8), MigProfile::G7_40)
+                < sim.latency_s(&quantize(&g, DType::F16), MigProfile::G7_40)
+        );
+        // explicit fp32 is bit-identical to the default path
+        let f32_explicit = quantize(&g, DType::F32);
+        assert_eq!(sim.measure(&f32_explicit), sim.measure(&g));
     }
 
     #[test]

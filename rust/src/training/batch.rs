@@ -144,8 +144,8 @@ mod tests {
     fn consts() -> Constants {
         Constants {
             max_nodes: 160,
-            node_feats: 32,
-            static_feats: 5,
+            node_feats: crate::features::NODE_FEATS,
+            static_feats: crate::features::STATIC_FEATS,
             targets: 3,
             batch: 4,
             hidden: 128,

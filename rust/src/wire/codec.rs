@@ -29,7 +29,11 @@
 //!          | n_inputs u16 + inputs u32* | ndims u8 + dims u32*
 //! ```
 //!
-//! `flags`: bit0 kernel, bit1 strides, bit2 units, bit3 axis.
+//! `flags`: bit0 kernel, bit1 strides, bit2 units, bit3 axis, bit4 dtype.
+//! A set dtype bit is followed by one dtype ordinal byte immediately after
+//! the axis field; fp32 nodes never set the bit, so pre-dtype encoders and
+//! decoders interoperate byte-for-byte on fp32 graphs (cache keys include
+//! dtype via the fingerprint, so the two never mix predictions).
 //!
 //! After the node list a request may carry an optional trailing *deadline
 //! extension*: `tag u8 (must be 1) | deadline_ms u32` — the client's
@@ -46,12 +50,13 @@
 use crate::cache::Target;
 use crate::coordinator::Prediction;
 use crate::ir::op::ALL_OPS;
-use crate::ir::{Attrs, Graph, Node, OpKind};
+use crate::ir::{Attrs, DType, Graph, Node, OpKind, ALL_DTYPES};
 
 const FLAG_KERNEL: u8 = 1 << 0;
 const FLAG_STRIDES: u8 = 1 << 1;
 const FLAG_UNITS: u8 = 1 << 2;
 const FLAG_AXIS: u8 = 1 << 3;
+const FLAG_DTYPE: u8 = 1 << 4;
 
 /// Hard ceiling on decoded node count: far above `max_nodes` (the backend
 /// rejects big graphs anyway) but low enough that a hostile count prefix
@@ -176,6 +181,9 @@ pub fn encode_request_with_deadline(
         if a.axis.is_some() {
             flags |= FLAG_AXIS;
         }
+        if a.dtype != DType::F32 {
+            flags |= FLAG_DTYPE;
+        }
         out.push(flags);
         if let Some((kh, kw)) = a.kernel {
             put_u16(&mut out, kh as u16);
@@ -192,6 +200,9 @@ pub fn encode_request_with_deadline(
         }
         if let Some(ax) = a.axis {
             out.extend_from_slice(&ax.to_le_bytes());
+        }
+        if a.dtype != DType::F32 {
+            out.push(a.dtype.index() as u8);
         }
         put_u16(&mut out, node.inputs.len() as u16);
         for &src in &node.inputs {
@@ -262,6 +273,14 @@ pub fn decode_request(payload: &[u8]) -> Result<(Graph, Option<Target>, Option<u
             None
         };
         let axis = if flags & FLAG_AXIS != 0 { Some(r.i64()?) } else { None };
+        let dtype = if flags & FLAG_DTYPE != 0 {
+            let idx = r.u8()? as usize;
+            *ALL_DTYPES
+                .get(idx)
+                .ok_or_else(|| format!("node {id}: unknown dtype ordinal {idx}"))?
+        } else {
+            DType::F32
+        };
         let n_inputs = r.u16()? as usize;
         let mut inputs = Vec::with_capacity(n_inputs);
         for _ in 0..n_inputs {
@@ -282,6 +301,7 @@ pub fn decode_request(payload: &[u8]) -> Result<(Graph, Option<Target>, Option<u
                 groups,
                 units,
                 axis,
+                dtype,
             },
             inputs,
             out_shape,
@@ -475,6 +495,52 @@ mod tests {
         // encode succeeds (it is mechanical); decode must reject.
         let bad = encode_request(&g2, None);
         assert!(decode_request(&bad).is_err());
+    }
+
+    #[test]
+    fn dtype_rides_the_flag_byte() {
+        let g = ALL_FAMILIES[1].generate(3);
+        let q = crate::ir::quantize::quantize(&g, DType::F16);
+        let payload = encode_request(&q, None);
+        let (back, _, _) = decode_request(&payload).unwrap();
+        assert!(back.nodes.iter().all(|n| n.attrs.dtype == DType::F16));
+        assert_eq!(
+            CostSweep::of(&q).fingerprint,
+            CostSweep::of(&back).fingerprint
+        );
+        // fp32 graphs never set the dtype bit: encoding is byte-identical
+        // to the pre-dtype wire format.
+        let f32_payload = encode_request(&g, None);
+        assert!(payload.len() > f32_payload.len());
+        // An out-of-range dtype ordinal is a decode error: flip the first
+        // flagged node's dtype byte. The flags byte is at offset 1 of the
+        // first node record; locate it by re-encoding with a marker dtype.
+        let mut bad = payload.clone();
+        // find the first byte where the two encodings diverge: that is the
+        // flags byte of node 0; the dtype ordinal follows its attr fields.
+        let div = payload
+            .iter()
+            .zip(f32_payload.iter())
+            .position(|(a, b)| a != b)
+            .unwrap();
+        assert_eq!(payload[div] & FLAG_DTYPE, FLAG_DTYPE);
+        // the dtype byte for node 0 sits before the next divergence-free
+        // run; brute-force: corrupt each byte after the flags byte until
+        // decode complains about a dtype ordinal.
+        let mut saw_dtype_err = false;
+        for i in div + 1..(div + 32).min(bad.len()) {
+            let orig = bad[i];
+            bad[i] = 0xEE;
+            if let Err(e) = decode_request(&bad) {
+                if e.contains("dtype ordinal") {
+                    saw_dtype_err = true;
+                    bad[i] = orig;
+                    break;
+                }
+            }
+            bad[i] = orig;
+        }
+        assert!(saw_dtype_err, "corrupting the dtype byte must be caught");
     }
 
     #[test]

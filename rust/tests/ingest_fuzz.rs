@@ -1,0 +1,250 @@
+//! Frontend ingestion fuzz & property suite.
+//!
+//! Three invariants, over the whole modelgen zoo:
+//!
+//! 1. **Round-trip parity** — binary ONNX and safetensors exports parse
+//!    back to the structure (and dtypes) they encoded.
+//! 2. **Error, never panic** — mutated, truncated, and bit-flipped model
+//!    bytes must always produce a `Result`, for every frontend. A panic
+//!    anywhere in the parse path fails this suite.
+//! 3. **fp32 bit-identity** — dtype plumbing must not move a single bit
+//!    for default-dtype graphs: fingerprints, statics, and measurements
+//!    of an fp32 graph are identical before and after a trip through the
+//!    dtype-aware frontends and the quantize pass.
+//!
+//! Seeded like `cache_journal.rs`: set `DIPPM_PROPTEST_SEED` to reproduce
+//! a CI failure exactly.
+
+use dippm::frontends::{
+    self, export_bytes, parse_bytes_any, parse_framework_bytes, structurally_equal, Framework,
+};
+use dippm::ir::quantize::{dtype_sweep, quantize};
+use dippm::ir::{DType, Graph, ALL_DTYPES};
+use dippm::modelgen::{Family, ALL_FAMILIES};
+use dippm::simulator::{Fingerprint, GraphAnalysis, Simulator};
+use dippm::util::proptest::{proptest, Gen};
+use dippm::{prop_assert, prop_assert_eq};
+
+fn zoo_graph(g: &mut Gen) -> Graph {
+    let family = *g.rng.choose(&ALL_FAMILIES);
+    let idx = g.usize_in(0, family.grid_size().saturating_sub(1));
+    family.generate(idx)
+}
+
+// ---------------------------------------------------------------------------
+// 1. Round-trip parity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn onnx_pb_roundtrips_the_whole_zoo() {
+    for family in ALL_FAMILIES {
+        let g = family.generate(1);
+        let parsed = frontends::onnx_pb::parse(&frontends::onnx_pb::export(&g))
+            .unwrap_or_else(|e| panic!("{family:?}: {e}"));
+        assert!(
+            structurally_equal(&g, &parsed),
+            "{family:?} altered through binary ONNX"
+        );
+        assert_eq!(parsed.family, g.family, "{family:?}");
+        assert_eq!(parsed.batch, g.batch, "{family:?}");
+    }
+}
+
+#[test]
+fn safetensors_roundtrips_weighted_structure_across_zoo() {
+    let weighted = |g: &Graph| {
+        g.nodes
+            .iter()
+            .filter(|n| n.op.counts_macs() && !n.inputs.is_empty())
+            .count()
+    };
+    for family in ALL_FAMILIES {
+        let g = family.generate(0);
+        let parsed = frontends::safetensors::parse(&frontends::safetensors::export(&g))
+            .unwrap_or_else(|e| panic!("{family:?}: {e}"));
+        // Conv/dense branches survive; batch_matmul has no weight tensor.
+        let matmuls = g
+            .nodes
+            .iter()
+            .filter(|n| n.op == dippm::ir::OpKind::BatchMatmul)
+            .count();
+        assert_eq!(
+            weighted(&parsed),
+            weighted(&g) - matmuls,
+            "{family:?} lost weighted ops through safetensors"
+        );
+        assert_eq!(parsed.batch, g.batch, "{family:?}");
+        assert_eq!(parsed.family, g.family, "{family:?}");
+    }
+}
+
+#[test]
+fn dtype_survives_binary_roundtrips_for_every_dtype() {
+    let g = Family::MobileNet.generate(3);
+    for variant in dtype_sweep(&g) {
+        let dt = variant.nodes[0].attrs.dtype;
+        let pb = frontends::onnx_pb::parse(&frontends::onnx_pb::export(&variant)).unwrap();
+        assert!(structurally_equal(&variant, &pb), "{dt}");
+        assert!(pb.nodes.iter().all(|n| n.attrs.dtype == dt), "{dt}");
+        let st = frontends::safetensors::parse(&frontends::safetensors::export(&variant)).unwrap();
+        assert!(st.nodes.iter().all(|n| n.attrs.dtype == dt), "{dt}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Error, never panic
+// ---------------------------------------------------------------------------
+
+/// Apply one random corruption: truncate, flip bytes, splice a hostile
+/// varint/length, or zero a window.
+fn mutate(g: &mut Gen, bytes: &mut Vec<u8>) {
+    if bytes.is_empty() {
+        bytes.extend_from_slice(&[0xFF, 0xFF, 0xFF]);
+        return;
+    }
+    match g.usize_in(0, 3) {
+        0 => {
+            let at = g.usize_in(0, bytes.len() - 1);
+            bytes.truncate(at);
+        }
+        1 => {
+            for _ in 0..=g.usize_in(0, 7) {
+                let at = g.usize_in(0, bytes.len() - 1);
+                bytes[at] ^= 1 << g.usize_in(0, 7);
+            }
+        }
+        2 => {
+            // Hostile varint: max-length, all-continuation bytes.
+            let at = g.usize_in(0, bytes.len() - 1);
+            for (i, b) in bytes[at..].iter_mut().take(10).enumerate() {
+                *b = if i == 9 { 0x7F } else { 0xFF };
+            }
+        }
+        _ => {
+            let at = g.usize_in(0, bytes.len() - 1);
+            let end = (at + g.usize_in(1, 64)).min(bytes.len());
+            for b in &mut bytes[at..end] {
+                *b = 0;
+            }
+        }
+    }
+}
+
+#[test]
+fn mutated_onnx_pb_errors_never_panic() {
+    proptest(60, |g| {
+        let graph = zoo_graph(g);
+        let mut bytes = frontends::onnx_pb::export(&graph);
+        for _ in 0..=g.usize_in(0, 2) {
+            mutate(g, &mut bytes);
+        }
+        // Any Result is acceptable; a panic aborts the whole suite. An Ok
+        // must have come through assemble → validate.
+        if let Ok(parsed) = frontends::onnx_pb::parse(&bytes) {
+            prop_assert!(parsed.validate().is_ok(), "parsed graph fails validate");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn mutated_safetensors_errors_never_panic() {
+    proptest(60, |g| {
+        let graph = zoo_graph(g);
+        let mut bytes = frontends::safetensors::export(&graph);
+        for _ in 0..=g.usize_in(0, 2) {
+            mutate(g, &mut bytes);
+        }
+        if let Ok(parsed) = frontends::safetensors::parse(&bytes) {
+            prop_assert!(parsed.validate().is_ok(), "parsed graph fails validate");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn mutated_text_formats_error_never_panic() {
+    // Text frontends get the same treatment through the byte entry point:
+    // mutations may break UTF-8, detection, or structure — never the process.
+    let frameworks = [
+        Framework::Native,
+        Framework::PyTorch,
+        Framework::TensorFlow,
+        Framework::Onnx,
+        Framework::Paddle,
+    ];
+    proptest(60, |g| {
+        let graph = zoo_graph(g);
+        let fw = frameworks[g.usize_in(0, frameworks.len() - 1)];
+        let mut bytes = export_bytes(fw, &graph);
+        for _ in 0..=g.usize_in(0, 2) {
+            mutate(g, &mut bytes);
+        }
+        if let Ok(parsed) = parse_framework_bytes(fw, &bytes) {
+            prop_assert!(parsed.validate().is_ok(), "parsed graph fails validate");
+        }
+        let _ = parse_bytes_any(&bytes); // auto-detect path too
+        Ok(())
+    });
+}
+
+#[test]
+fn non_utf8_text_input_is_a_clean_error() {
+    let junk = [0xC3, 0x28, 0xFF, 0xFE]; // invalid UTF-8 sequences
+    for fw in [Framework::Onnx, Framework::Native, Framework::PyTorch] {
+        let err = parse_framework_bytes(fw, &junk).unwrap_err();
+        assert!(err.contains("UTF-8"), "{fw:?}: {err}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. fp32 bit-identity under the dtype machinery
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fp32_graphs_are_bit_identical_through_dtype_plumbing() {
+    let sim = Simulator::new();
+    proptest(25, |g| {
+        let graph = zoo_graph(g);
+        let before = GraphAnalysis::of(&graph);
+
+        // The quantize pass at F32 is the identity.
+        let q = quantize(&graph, DType::F32);
+        prop_assert_eq!(&graph, &q);
+
+        // A trip through the dtype-aware binary frontend moves no bits.
+        let back = frontends::onnx_pb::parse(&frontends::onnx_pb::export(&graph))
+            .map_err(|e| format!("pb roundtrip: {e}"))?;
+        let after = GraphAnalysis::of(&back);
+        prop_assert_eq!(before.fingerprint, after.fingerprint);
+        prop_assert_eq!(before.statics, after.statics);
+
+        let m0 = sim.measure(&graph);
+        let m1 = sim.measure(&back);
+        prop_assert_eq!(m0.latency_ms.to_bits(), m1.latency_ms.to_bits());
+        prop_assert_eq!(m0.memory_mb.to_bits(), m1.memory_mb.to_bits());
+        Ok(())
+    });
+}
+
+#[test]
+fn dtype_variants_get_distinct_fingerprints_and_cheaper_costs() {
+    let sim = Simulator::new();
+    let g = Family::ResNet.generate(4);
+    let prints: Vec<Fingerprint> = dtype_sweep(&g)
+        .iter()
+        .map(Fingerprint::of_graph)
+        .collect();
+    for i in 0..prints.len() {
+        for j in i + 1..prints.len() {
+            assert_ne!(prints[i], prints[j], "dtypes {i} and {j} collide");
+        }
+    }
+    let base = sim.measure(&g);
+    for dt in [DType::F16, DType::BF16, DType::I8] {
+        let m = sim.measure(&quantize(&g, dt));
+        assert!(m.latency_ms < base.latency_ms, "{dt} not faster");
+        assert!(m.memory_mb < base.memory_mb, "{dt} not smaller");
+    }
+    assert_eq!(ALL_DTYPES.len(), prints.len());
+}

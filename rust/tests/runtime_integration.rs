@@ -24,7 +24,7 @@ fn manifest_constants_match_feature_generator() {
     let Some(rt) = runtime() else { return };
     let c = rt.manifest.constants;
     assert_eq!(c.node_feats, dippm::features::node_features::NODE_FEATS);
-    assert_eq!(c.static_feats, 5);
+    assert_eq!(c.static_feats, dippm::features::STATIC_FEATS);
     assert_eq!(c.targets, 3);
     assert!(c.max_nodes >= 128);
 }
