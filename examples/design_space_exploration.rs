@@ -1,107 +1,141 @@
-//! Design-space exploration — the paper's intro use case: sweep a model
-//! family's design knobs (width, resolution, batch) and get instant
-//! latency/energy/memory estimates without touching the target GPU,
-//! then pick the Pareto-efficient configurations.
-//!
-//! Uses the simulator as ground truth and (optionally, after a short
-//! training run) the GNN predictor side by side, demonstrating that DIPPM
-//! ranks design points the same way the device does.
+//! Design-space exploration through the sweep verb — the paper's intro
+//! use case served by the coordinator: one request ships an EfficientNet
+//! base graph plus a mutation grid, and the server expands the
+//! width × batch × dtype candidates, dedups them against the prediction
+//! cache, streams back chunked latency/energy/memory estimates, and
+//! closes with the Pareto frontier plus a fleet-level MIG packing.
 //!
 //! Run: `cargo run --release --example design_space_exploration`
+//!
+//! Pass `--client-loop` to run the same grid the old way — expanded
+//! client-side, one predict round trip per candidate (the baseline the
+//! `sweep_throughput` bench compares against).
 
-use dippm::dataset::Dataset;
+use std::sync::{mpsc, Arc};
+
+use dippm::coordinator::{expand, Coordinator, CoordinatorOptions, SweepSpec};
+use dippm::ir::DType;
 use dippm::modelgen::mobile::efficientnet;
-use dippm::runtime::Runtime;
-use dippm::simulator::{MigProfile, Simulator};
-use dippm::training::{TrainConfig, Trainer};
 use dippm::util::bench::Table;
+use dippm::wire::{reactor, ReactorConfig, WireClient};
+
+/// Start the binary reactor on an ephemeral port; returns its address.
+fn serve(coord: Arc<Coordinator>) -> String {
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        reactor::serve(coord, "127.0.0.1:0", ReactorConfig::default(), move |p| {
+            let _ = tx.send(p);
+        })
+        .unwrap();
+    });
+    format!("127.0.0.1:{}", rx.recv().unwrap())
+}
 
 fn main() -> anyhow::Result<()> {
-    let sim = Simulator::new();
+    let client_loop = std::env::args().any(|a| a == "--client-loop");
+    let coord = Arc::new(Coordinator::start_sim(CoordinatorOptions::default())?);
+    let addr = serve(coord);
+    let mut client = WireClient::connect(&addr)?;
 
-    println!("=== EfficientNet design-space exploration (simulator) ===\n");
-    // Sweep scale variants at batch 16, res offset 0 (grid bi=4, ri=0).
-    let mut t = Table::new(&[
-        "variant", "res", "batch", "latency (ms)", "energy (J)", "memory (MB)",
-        "img/s", "MIG fit",
-    ]);
-    let mut points = Vec::new();
-    for scale in 0..7 {
-        for tweak in 0..2 {
-            let vi = scale * 2 + tweak;
-            let idx = vi * efficientnet::GRID.resolutions * efficientnet::GRID.batches
-                + 4; // ri=0, bi=4 (batch 16)
-            let g = efficientnet::build(idx, 1);
-            let m = sim.measure(&g);
-            let thru = g.batch as f64 / (m.latency_ms / 1e3);
-            let fit = dippm::mig::predict_profile(m.memory_mb)
-                .map(|p| p.name())
-                .unwrap_or("None");
-            t.row(&[
-                g.variant.clone(),
-                g.nodes[0].out_shape[2].to_string(),
-                g.batch.to_string(),
-                format!("{:.3}", m.latency_ms),
-                format!("{:.3}", m.energy_j),
-                format!("{:.0}", m.memory_mb),
-                format!("{thru:.0}"),
-                fit.to_string(),
-            ]);
-            points.push((g.variant.clone(), m.latency_ms, m.energy_j));
+    // EfficientNet-B0 at batch 16 is the base; the server mutates it.
+    let base = efficientnet::build(4, 1);
+    let spec = SweepSpec {
+        widths: vec![100, 85, 70, 55],
+        batches: vec![1, 4, 16, 64],
+        dtypes: vec![DType::F32, DType::F16],
+        slo_ms: 10.0,
+        fleet_gpus: 4,
+        ..SweepSpec::default()
+    };
+
+    if client_loop {
+        // Baseline: the pre-sweep protocol — expand the grid locally and
+        // pay one round trip (and one server admission) per candidate.
+        let t0 = std::time::Instant::now();
+        let cands = expand(&base, &spec);
+        let mut ok = 0usize;
+        for c in &cands {
+            if let Ok(g) = &c.graph {
+                if client.predict_graph(g).is_ok() {
+                    ok += 1;
+                }
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "[client-loop] {ok}/{} candidates in {dt:.2}s ({:.0} cand/s, one round trip each)",
+            cands.len(),
+            cands.len() as f64 / dt
+        );
+        return Ok(());
+    }
+
+    println!("=== EfficientNet design-space sweep (one round trip) ===\n");
+    let t0 = std::time::Instant::now();
+    let (items, summary) = client.sweep(&base, None, &spec)?;
+    let dt = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new(&["candidate", "latency (ms)", "energy (J)", "memory (MB)", "cached"]);
+    for it in items.iter().take(12) {
+        match &it.result {
+            Ok(p) => t.row(&[
+                it.label.clone(),
+                format!("{:.3}", p.latency_ms),
+                format!("{:.3}", p.energy_j),
+                format!("{:.0}", p.memory_mb),
+                if it.cached { "Y".into() } else { "n".into() },
+            ]),
+            Err(e) => t.row(&[it.label.clone(), e.clone(), "-".into(), "-".into(), "-".into()]),
         }
     }
     t.print();
+    if items.len() > 12 {
+        println!("  ... {} more candidates", items.len() - 12);
+    }
+    println!(
+        "\n{} candidates in {dt:.2}s ({:.0} cand/s): {} deduped, {} cache hits, {} batches, {} errors",
+        summary.candidates,
+        summary.candidates as f64 / dt,
+        summary.duplicates,
+        summary.cache_hits,
+        summary.batches,
+        summary.errors
+    );
 
-    // Pareto front on (latency, energy).
-    println!("\nPareto-efficient (latency, energy) points:");
-    for (name, lat, en) in &points {
-        let dominated = points
-            .iter()
-            .any(|(n2, l2, e2)| n2 != name && l2 <= lat && e2 <= en && (l2 < lat || e2 < en));
-        if !dominated {
-            println!("  {name}: {lat:.3} ms, {en:.3} J");
+    println!("\nServer-computed Pareto frontier (latency, memory, energy):");
+    for f in &summary.frontier {
+        println!(
+            "  {}: {:.3} ms, {:.0} MB, {:.3} J",
+            f.label, f.latency_ms, f.memory_mb, f.energy_j
+        );
+    }
+
+    if let Some(pack) = &summary.packing {
+        println!(
+            "\nFleet packing: {} placed on {} A100s (SLO {} ms; rejected: {} slo, {} capacity, {} fleet-full)",
+            pack.placed.len(),
+            pack.gpus,
+            pack.slo_ms.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
+            pack.rejected_slo,
+            pack.rejected_capacity,
+            pack.rejected_fleet_full
+        );
+        let mut t = Table::new(&["candidate", "gpu", "MIG slice"]);
+        for p in pack.placed.iter().take(12) {
+            t.row(&[p.label.clone(), p.gpu.to_string(), p.profile.name().to_string()]);
         }
+        t.print();
     }
 
-    // Batch-size exploration on one variant: the latency/throughput tradeoff.
-    println!("\n=== batch-size sweep (efficientnet-b0) — MIG placement changes ===\n");
-    let mut t = Table::new(&["batch", "latency (ms)", "img/s", "memory (MB)", "smallest MIG fit"]);
-    for bi in 0..8 {
-        let g = efficientnet::build(bi, 1); // vi=0, ri=0, batch sweep
-        let m = sim.measure(&g);
-        let fit = dippm::mig::predict_profile(m.memory_mb)
-            .map(|p| p.name())
-            .unwrap_or("None");
-        t.row(&[
-            g.batch.to_string(),
-            format!("{:.3}", m.latency_ms),
-            format!("{:.0}", g.batch as f64 / (m.latency_ms / 1e3)),
-            format!("{:.0}", m.memory_mb),
-            fit.to_string(),
-        ]);
-    }
-    t.print();
-
-    // Optional: compare predictor vs simulator ranking (short training).
-    if std::env::var("DIPPM_DSE_TRAIN").is_ok() {
-        println!("\n=== predictor-vs-simulator ranking (training briefly) ===");
-        let ds = Dataset::build(0.05, 42, 0);
-        let rt = Runtime::new("artifacts")?;
-        let mut trainer = Trainer::new(
-            &rt,
-            TrainConfig {
-                epochs: 10,
-                lr: 3e-3,
-                ..Default::default()
-            },
-        )?;
-        for e in 0..10 {
-            trainer.train_epoch(&ds, e)?;
-        }
-        let rep = trainer.evaluate(&ds, &ds.splits.test)?;
-        println!("test MAPE {:.3} — latency ranking agreement follows", rep.overall());
-    }
-
-    let _ = MigProfile::G7_40;
+    // Re-sweep: every distinct grid point answers from the cache now.
+    let t0 = std::time::Instant::now();
+    let (_, again) = client.sweep(&base, None, &spec)?;
+    println!(
+        "\nRe-sweep (warm cache): {} hits / {} distinct in {:.3}s, {} new batches",
+        again.cache_hits,
+        summary.candidates - summary.duplicates,
+        t0.elapsed().as_secs_f64(),
+        again.batches
+    );
     Ok(())
 }

@@ -1,14 +1,21 @@
-//! Predictor-guided NAS — the paper's intro motivates DIPPM for "efficient
-//! Neural Architecture Search": a latency/memory-constrained random search
-//! where candidate architectures are scored by the *trained predictor*
-//! instead of being run on the device. The device simulator then verifies
+//! Predictor-guided NAS through the sweep verb — the paper's intro
+//! motivates DIPPM for "efficient Neural Architecture Search": candidate
+//! architectures are scored by the *trained predictor* instead of being
+//! run on the device. Instead of one request per candidate, the search
+//! ships each family's base architecture once and lets the server expand
+//! the depth × width × batch grid, dedup it against the prediction cache,
+//! and stream back scored candidates. The device simulator then verifies
 //! the final picks — measuring how much the predictor's ranking agrees
-//! with ground truth (the metric that decides whether DIPPM-guided NAS
-//! actually works).
+//! with ground truth.
 //!
 //! Run: `cargo run --release --example nas_search`
+//!
+//! Pass `--client-loop` for the old per-candidate random search (one
+//! predict round trip per candidate — the bench baseline).
 
-use dippm::coordinator::{Coordinator, CoordinatorOptions};
+use std::sync::{mpsc, Arc};
+
+use dippm::coordinator::{expand, Coordinator, CoordinatorOptions, SweepSpec};
 use dippm::dataset::Dataset;
 use dippm::ir::Graph;
 use dippm::modelgen::ALL_FAMILIES;
@@ -17,11 +24,26 @@ use dippm::simulator::Simulator;
 use dippm::training::{TrainConfig, Trainer};
 use dippm::util::bench::Table;
 use dippm::util::rng::Rng;
+use dippm::wire::{reactor, ReactorConfig, WireClient};
 
 const LATENCY_BUDGET_MS: f64 = 5.0;
 const MEMORY_BUDGET_MB: f64 = 5.0 * 1024.0; // must fit a 1g.5gb MIG slice
 
+/// Start the binary reactor on an ephemeral port; returns its address.
+fn serve(coord: Arc<Coordinator>) -> String {
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        reactor::serve(coord, "127.0.0.1:0", ReactorConfig::default(), move |p| {
+            let _ = tx.send(p);
+        })
+        .unwrap();
+    });
+    format!("127.0.0.1:{}", rx.recv().unwrap())
+}
+
 fn main() -> anyhow::Result<()> {
+    let client_loop = std::env::args().any(|a| a == "--client-loop");
+
     // Train the predictor briefly (reuse a checkpoint in real use).
     println!("[setup] training the predictor...");
     let ds = Dataset::build(0.06, 42, 0);
@@ -42,29 +64,69 @@ fn main() -> anyhow::Result<()> {
     let params = trainer.params.clone();
     drop(trainer);
     drop(rt);
-    let coord = Coordinator::start("artifacts", params, CoordinatorOptions::default())?;
+    let coord = Arc::new(Coordinator::start(
+        "artifacts",
+        params,
+        CoordinatorOptions::default(),
+    )?);
+    let addr = serve(coord);
+    let mut client = WireClient::connect(&addr)?;
 
-    // Random search over the whole modelgen design space.
-    let mut rng = Rng::new(2026);
-    let n_candidates = 120;
-    println!("\n[search] scoring {n_candidates} random candidates against");
-    println!("         latency < {LATENCY_BUDGET_MS} ms, memory < {MEMORY_BUDGET_MB:.0} MB (1g.5gb)\n");
+    println!("\n[search] budget: latency < {LATENCY_BUDGET_MS} ms, memory < {MEMORY_BUDGET_MB:.0} MB (1g.5gb)\n");
     let mut feasible: Vec<(Graph, f64, f64)> = Vec::new();
+    let mut scored = 0usize;
     let t0 = std::time::Instant::now();
-    for _ in 0..n_candidates {
-        let family = *rng.choose(&ALL_FAMILIES);
-        let idx = rng.below(family.grid_size());
-        let g = family.generate(idx);
-        let pred = coord.predict(g.clone())?;
-        if pred.latency_ms < LATENCY_BUDGET_MS && pred.memory_mb < MEMORY_BUDGET_MB {
-            feasible.push((g, pred.latency_ms, pred.memory_mb));
+
+    if client_loop {
+        // Baseline: random search, one predict round trip per candidate.
+        let mut rng = Rng::new(2026);
+        let n_candidates = 120;
+        println!("[search] client loop: scoring {n_candidates} random candidates one by one");
+        for _ in 0..n_candidates {
+            let family = *rng.choose(&ALL_FAMILIES);
+            let idx = rng.below(family.grid_size());
+            let g = family.generate(idx);
+            let pred = client.predict_graph(&g)?;
+            scored += 1;
+            if pred.latency_ms < LATENCY_BUDGET_MS && pred.memory_mb < MEMORY_BUDGET_MB {
+                feasible.push((g, pred.latency_ms, pred.memory_mb));
+            }
+        }
+    } else {
+        // One sweep per family: the server expands and scores the grid,
+        // the client only filters the streamed results. The same
+        // expansion runs locally (it is deterministic) so the simulator
+        // can verify picks without a graph ever crossing the wire twice.
+        let spec = SweepSpec {
+            depths: vec![1, 2],
+            widths: vec![100, 75, 50],
+            batches: vec![1, 4],
+            ..SweepSpec::default()
+        };
+        println!(
+            "[search] server sweep: {} candidates per family, one round trip each family",
+            spec.total()
+        );
+        for family in ALL_FAMILIES {
+            let base = family.generate(0);
+            let local = expand(&base, &spec);
+            let (items, summary) = client.sweep(&base, None, &spec)?;
+            scored += summary.candidates as usize;
+            for it in &items {
+                let Ok(pred) = &it.result else { continue };
+                if pred.latency_ms < LATENCY_BUDGET_MS && pred.memory_mb < MEMORY_BUDGET_MB {
+                    if let Some(Ok(g)) = local.get(it.index as usize).map(|c| &c.graph) {
+                        feasible.push((g.clone(), pred.latency_ms, pred.memory_mb));
+                    }
+                }
+            }
         }
     }
     let search_s = t0.elapsed().as_secs_f64();
     println!(
-        "[search] {} feasible / {n_candidates} in {search_s:.1}s ({:.0} cand/s — no GPU runs)",
+        "[search] {} feasible / {scored} scored in {search_s:.1}s ({:.0} cand/s — no GPU runs)",
         feasible.len(),
-        n_candidates as f64 / search_s
+        scored as f64 / search_s
     );
 
     // Rank by predicted latency, verify the top picks on the device model.

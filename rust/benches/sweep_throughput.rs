@@ -1,0 +1,145 @@
+//! Sweep service throughput: one server-side `Sweep` round trip vs the
+//! pre-sweep client loop (expand locally, one `Predict` round trip per
+//! candidate) on the same cache-warm 512-candidate EfficientNet grid.
+//!
+//! The server path wins on three fronts the client loop pays per
+//! candidate: round-trip latency, request decode/admission, and cache
+//! probing one key at a time. A warm-up sweep populates the prediction
+//! cache first so both timed paths measure serving, not simulation.
+//!
+//! Scale knobs: DIPPM_BENCH_SWEEP_REPS (timed server sweeps, default 4;
+//! FULL=1 raises to 16). The grid itself is fixed at 512 candidates —
+//! the CI gate reads the `sweep` section of DIPPM_BENCH_JSON and asserts
+//! server >= 5x client loop on exactly this workload.
+
+#[path = "common.rs"]
+mod common;
+
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use dippm::coordinator::{expand, Coordinator, CoordinatorOptions, SweepSpec};
+use dippm::ir::DType;
+use dippm::modelgen::mobile::efficientnet;
+use dippm::util::bench::{banner, Table};
+use dippm::util::json::{Json, JsonObj};
+use dippm::wire::{reactor, ReactorConfig, WireClient};
+
+/// Start the binary reactor on an ephemeral port; returns its address.
+fn serve(coord: Arc<Coordinator>) -> String {
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        reactor::serve(coord, "127.0.0.1:0", ReactorConfig::default(), move |p| {
+            let _ = tx.send(p);
+        })
+        .unwrap();
+    });
+    format!("127.0.0.1:{}", rx.recv().unwrap())
+}
+
+/// 2 depths x 8 widths x 8 batches x 4 dtypes = 512 candidates.
+fn grid() -> SweepSpec {
+    SweepSpec {
+        depths: vec![1, 2],
+        widths: vec![100, 90, 80, 70, 60, 50, 40, 30],
+        batches: vec![1, 2, 4, 8, 16, 32, 64, 128],
+        dtypes: vec![DType::F32, DType::F16, DType::BF16, DType::I8],
+        ..SweepSpec::default()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    banner(
+        "Perf/L2",
+        "sweep service: one server-side round trip vs per-candidate client loop",
+    );
+    let reps = common::env_usize(
+        "DIPPM_BENCH_SWEEP_REPS",
+        if common::is_full() { 16 } else { 4 },
+    )
+    .max(1);
+
+    let coord = Arc::new(Coordinator::start_sim(CoordinatorOptions::default())?);
+    let addr = serve(coord);
+    let mut client = WireClient::connect(&addr)?;
+    let base = efficientnet::build(4, 1); // EfficientNet-B0, batch 16
+    let spec = grid();
+    let total = spec.total();
+
+    // Warm up: one cold sweep computes every distinct candidate once.
+    let t0 = Instant::now();
+    let (_, cold) = client.sweep(&base, None, &spec)?;
+    let cold_s = t0.elapsed().as_secs_f64();
+    assert_eq!(cold.candidates as usize, total, "grid size drifted");
+    assert_eq!(cold.errors, 0, "grid produced invalid candidates");
+    println!(
+        "[warm-up] {total} candidates computed in {cold_s:.2}s \
+         ({} duplicate grid points, frontier {})",
+        cold.duplicates,
+        cold.frontier.len()
+    );
+
+    // Server path: `reps` cache-warm sweeps, one round trip each.
+    let t0 = Instant::now();
+    let mut hits = 0u64;
+    let mut frontier_size = 0usize;
+    for _ in 0..reps {
+        let (_, s) = client.sweep(&base, None, &spec)?;
+        hits += s.cache_hits;
+        frontier_size = s.frontier.len();
+    }
+    let server_s = t0.elapsed().as_secs_f64();
+    let server_cps = (reps * total) as f64 / server_s.max(1e-9);
+    let hit_ratio = hits as f64 / (reps * total) as f64;
+
+    // Client loop: the old protocol — expand locally, one predict round
+    // trip per candidate, against the very same warm cache.
+    let cands = expand(&base, &spec);
+    let graphs: Vec<_> = cands.iter().filter_map(|c| c.graph.as_ref().ok()).collect();
+    assert_eq!(graphs.len(), total, "local expansion disagrees with server");
+    let t0 = Instant::now();
+    for g in &graphs {
+        client.predict_graph(g)?;
+    }
+    let client_s = t0.elapsed().as_secs_f64();
+    let client_cps = graphs.len() as f64 / client_s.max(1e-9);
+    let speedup = if client_cps > 0.0 {
+        server_cps / client_cps
+    } else {
+        0.0
+    };
+
+    let mut t = Table::new(&["path", "round trips", "cand/s"]);
+    t.row(&["server sweep".into(), reps.to_string(), format!("{server_cps:.0}")]);
+    t.row(&["client loop".into(), total.to_string(), format!("{client_cps:.0}")]);
+    t.print();
+    println!(
+        "\n{total}-candidate grid, cache-warm: server sweep = {speedup:.1}x client loop \
+         (hit ratio {hit_ratio:.3}, frontier {frontier_size})"
+    );
+    println!("target: server sweep >= 5x client loop on the warm 512-candidate grid");
+
+    if let Ok(path) = std::env::var("DIPPM_BENCH_JSON") {
+        let mut doc = match std::fs::read_to_string(&path).map(|s| Json::parse(&s)) {
+            Ok(Ok(Json::Obj(o))) => o,
+            _ => {
+                let mut o = JsonObj::new();
+                o.insert("bench", "sweep_throughput");
+                o
+            }
+        };
+        let mut sweep = JsonObj::new();
+        sweep.insert("candidates", total);
+        sweep.insert("duplicates", cold.duplicates as usize);
+        sweep.insert("reps", reps);
+        sweep.insert("server_cands_per_s", server_cps);
+        sweep.insert("client_loop_cands_per_s", client_cps);
+        sweep.insert("speedup", speedup);
+        sweep.insert("hit_ratio", hit_ratio);
+        sweep.insert("frontier_size", frontier_size);
+        doc.insert("sweep", Json::Obj(sweep));
+        std::fs::write(&path, format!("{}\n", Json::Obj(doc))).expect("write DIPPM_BENCH_JSON");
+        println!("wrote sweep into {path}");
+    }
+    Ok(())
+}

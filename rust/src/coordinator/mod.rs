@@ -38,10 +38,15 @@ pub mod batcher;
 pub mod executor;
 pub mod protocol;
 pub mod server;
+pub mod sweep;
 pub mod tcp;
 
 pub use backend::{Backend, BackendFactory, PjrtBackend, PredictRequest, RawOutcome, SimBackend};
 pub use batcher::BatchFormerMode;
 pub use protocol::{Prediction, Request};
 pub use server::{CacheValue, Coordinator, CoordinatorOptions, Metrics};
+pub use sweep::{
+    expand, pareto_frontier, Candidate, FrontierPoint, SweepEvent, SweepItem, SweepSpec,
+    SweepSummary, MAX_SWEEP_CANDIDATES, SWEEP_CHUNK,
+};
 pub use tcp::ServeOptions;

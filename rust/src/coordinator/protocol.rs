@@ -15,14 +15,21 @@
 //! `cache_load` flush or read a journal store (optional `"path"`,
 //! defaulting to the server's `--cache-file`); `cache_compact` forces a
 //! sharded parallel compaction of the configured store.
+//!
+//! The `sweep` cmd is the JSON twin of the binary sweep verb: one request
+//! line carrying a base `model` plus a `"spec"` mutation grid streams back
+//! multiple response lines — `{"sweep":"chunk","items":[...]}` per
+//! candidate wave, closed by one `{"sweep":"done",...}` summary line with
+//! the Pareto frontier and optional fleet packing.
 
 use crate::cache::persist::CompactReport;
 use crate::cache::{LoadReport, SaveReport, Target};
 use crate::frontends::{self, Framework};
-use crate::ir::Graph;
+use crate::ir::{DType, Graph};
 use crate::util::json::{Json, JsonObj};
 
 use super::server::Metrics;
+use super::sweep::{SweepItem, SweepSpec, SweepSummary};
 
 /// An in-process prediction request.
 #[derive(Debug)]
@@ -115,6 +122,153 @@ pub fn parse_deadline_value(v: &Json) -> Result<Option<std::time::Duration>, Str
     }
 }
 
+fn parse_u32_axis(spec: &Json, key: &str) -> Result<Vec<u32>, String> {
+    match spec.path(&[key]) {
+        Json::Null => Ok(Vec::new()),
+        Json::Arr(a) => a
+            .iter()
+            .map(|x| match x {
+                Json::Num(n)
+                    if n.is_finite()
+                        && *n >= 0.0
+                        && n.fract() == 0.0
+                        && *n <= u32::MAX as f64 =>
+                {
+                    Ok(*n as u32)
+                }
+                other => {
+                    Err(format!("'{key}' entries must be non-negative integers, got {other}"))
+                }
+            })
+            .collect(),
+        other => Err(format!("'{key}' must be an array, got {other}")),
+    }
+}
+
+/// Parse the `"spec"` object of a `{"cmd":"sweep"}` request into a
+/// [`SweepSpec`]. Every axis is optional (absent = leave that knob
+/// alone); `slo_ms` and `fleet_gpus` default to "no SLO" / "no packing".
+pub fn parse_sweep_spec_value(v: &Json) -> Result<SweepSpec, String> {
+    let spec = match v.path(&["spec"]) {
+        Json::Null => return Err("sweep request lacks a 'spec' object".into()),
+        s @ Json::Obj(_) => s,
+        other => return Err(format!("'spec' must be an object, got {other}")),
+    };
+    let mut out = SweepSpec {
+        depths: parse_u32_axis(spec, "depths")?,
+        widths: parse_u32_axis(spec, "widths")?,
+        batches: parse_u32_axis(spec, "batches")?,
+        ..SweepSpec::default()
+    };
+    match spec.path(&["dtypes"]) {
+        Json::Null => {}
+        Json::Arr(a) => {
+            for x in a {
+                let name = x
+                    .as_str()
+                    .ok_or_else(|| format!("'dtypes' entries must be strings, got {x}"))?;
+                out.dtypes.push(
+                    DType::from_name(name).ok_or_else(|| format!("unknown dtype {name:?}"))?,
+                );
+            }
+        }
+        other => return Err(format!("'dtypes' must be an array, got {other}")),
+    }
+    match spec.path(&["slo_ms"]) {
+        Json::Null => {}
+        Json::Num(n) if n.is_finite() => out.slo_ms = *n,
+        other => return Err(format!("'slo_ms' must be a finite number, got {other}")),
+    }
+    match spec.path(&["fleet_gpus"]) {
+        Json::Null => {}
+        Json::Num(n) if n.is_finite() && *n >= 0.0 && n.fract() == 0.0 && *n <= u32::MAX as f64 => {
+            out.fleet_gpus = *n as u32;
+        }
+        other => return Err(format!("'fleet_gpus' must be a non-negative integer, got {other}")),
+    }
+    Ok(out)
+}
+
+fn sweep_item_json(it: &SweepItem) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("index", it.index);
+    o.insert("label", it.label.as_str());
+    o.insert("cached", it.cached);
+    match &it.result {
+        Ok(p) => o.insert("prediction", p.to_json()),
+        Err(e) => o.insert("error", e.as_str()),
+    }
+    Json::Obj(o)
+}
+
+/// Serialize one streamed sweep chunk line:
+/// `{"ok":true,"sweep":"chunk","items":[...]}`.
+pub fn sweep_chunk_response(items: &[SweepItem]) -> String {
+    let mut o = JsonObj::new();
+    o.insert("ok", true);
+    o.insert("sweep", "chunk");
+    o.insert("items", Json::Arr(items.iter().map(sweep_item_json).collect()));
+    Json::Obj(o).to_string()
+}
+
+/// Serialize the terminal sweep summary line:
+/// `{"ok":true,"sweep":"done",...}` with the accounting totals, the
+/// Pareto frontier, and the optional fleet-packing epilogue (`null` when
+/// the request asked for zero GPUs).
+pub fn sweep_done_response(s: &SweepSummary) -> String {
+    let mut o = JsonObj::new();
+    o.insert("ok", true);
+    o.insert("sweep", "done");
+    o.insert("candidates", s.candidates as usize);
+    o.insert("duplicates", s.duplicates as usize);
+    o.insert("cache_hits", s.cache_hits as usize);
+    o.insert("batches", s.batches as usize);
+    o.insert("errors", s.errors as usize);
+    let frontier: Vec<Json> = s
+        .frontier
+        .iter()
+        .map(|f| {
+            let mut p = JsonObj::new();
+            p.insert("index", f.index);
+            p.insert("label", f.label.as_str());
+            p.insert("latency_ms", f.latency_ms);
+            p.insert("memory_mb", f.memory_mb);
+            p.insert("energy_j", f.energy_j);
+            Json::Obj(p)
+        })
+        .collect();
+    o.insert("frontier", Json::Arr(frontier));
+    match &s.packing {
+        None => o.insert("packing", Json::Null),
+        Some(p) => {
+            let mut po = JsonObj::new();
+            po.insert("gpus", p.gpus);
+            match p.slo_ms {
+                Some(slo) => po.insert("slo_ms", slo),
+                None => po.insert("slo_ms", Json::Null),
+            }
+            po.insert("rejected_slo", p.rejected_slo);
+            po.insert("rejected_capacity", p.rejected_capacity);
+            po.insert("rejected_fleet_full", p.rejected_fleet_full);
+            let placed: Vec<Json> = p
+                .placed
+                .iter()
+                .map(|pl| {
+                    let mut q = JsonObj::new();
+                    q.insert("index", pl.index);
+                    q.insert("label", pl.label.as_str());
+                    q.insert("gpu", pl.gpu);
+                    q.insert("profile", pl.profile.name());
+                    Json::Obj(q)
+                })
+                .collect();
+            po.insert("placed", Json::Arr(placed));
+            o.insert("packing", Json::Obj(po));
+        }
+    }
+    Json::Obj(o).to_string()
+}
+
 pub fn error_response(msg: &str) -> String {
     let mut o = JsonObj::new();
     o.insert("ok", false);
@@ -166,6 +320,15 @@ pub fn cache_stats_response(m: &Metrics) -> String {
     o.insert("requests", m.requests as usize);
     o.insert("batches", m.batches as usize);
     o.insert("mean_batch_fill", m.mean_batch_fill());
+    // Sweep-service counters (the server-side DSE verb): sweeps served,
+    // grid points expanded, intra-request duplicates collapsed, candidates
+    // answered from the cache, and admission waves pushed through the
+    // batch former. Always present — zeros before the first sweep.
+    o.insert("sweeps", m.sweeps as usize);
+    o.insert("sweep_candidates", m.sweep_candidates as usize);
+    o.insert("sweep_dup_candidates", m.sweep_dup_candidates as usize);
+    o.insert("sweep_cache_hits", m.sweep_cache_hits as usize);
+    o.insert("sweep_batches", m.sweep_batches as usize);
     // Analyze-once observability: full analyses built for enqueued misses
     // (hits stop at the cost-sweep/fingerprint stage) vs. consumed by the
     // executor/backend, and how often cache-aware admission reordered the
@@ -332,6 +495,11 @@ mod tests {
             queue_residency_max_us: 2500,
             requests: 10,
             batches: 2,
+            sweeps: 2,
+            sweep_candidates: 64,
+            sweep_dup_candidates: 16,
+            sweep_cache_hits: 32,
+            sweep_batches: 1,
             cache_enabled: true,
             cache_hits: 6,
             cache_misses: 4,
@@ -410,6 +578,12 @@ mod tests {
         assert_eq!(v.path(&["ring_depth"]).as_usize(), Some(1));
         assert_eq!(v.path(&["ring_depth_hwm"]).as_usize(), Some(3));
         assert_eq!(v.path(&["queue_residency_max_us"]).as_usize(), Some(2500));
+        // Sweep-service counters.
+        assert_eq!(v.path(&["sweeps"]).as_usize(), Some(2));
+        assert_eq!(v.path(&["sweep_candidates"]).as_usize(), Some(64));
+        assert_eq!(v.path(&["sweep_dup_candidates"]).as_usize(), Some(16));
+        assert_eq!(v.path(&["sweep_cache_hits"]).as_usize(), Some(32));
+        assert_eq!(v.path(&["sweep_batches"]).as_usize(), Some(1));
         // Robustness counters.
         assert_eq!(v.path(&["deadline_expired"]).as_usize(), Some(6));
         assert_eq!(v.path(&["shed_admission"]).as_usize(), Some(1));
@@ -458,6 +632,13 @@ mod tests {
         assert_eq!(v.path(&["queue_depth_hwm"]).as_usize(), Some(0));
         assert_eq!(v.path(&["ring_depth_hwm"]).as_usize(), Some(0));
         assert_eq!(v.path(&["queue_residency_max_us"]).as_usize(), Some(0));
+        // Sweep-service counters are zeroed before the first sweep, never
+        // absent.
+        assert_eq!(v.path(&["sweeps"]).as_usize(), Some(0));
+        assert_eq!(v.path(&["sweep_candidates"]).as_usize(), Some(0));
+        assert_eq!(v.path(&["sweep_dup_candidates"]).as_usize(), Some(0));
+        assert_eq!(v.path(&["sweep_cache_hits"]).as_usize(), Some(0));
+        assert_eq!(v.path(&["sweep_batches"]).as_usize(), Some(0));
         // Robustness counters are zeroed, and the breaker reports
         // "closed" (never the empty default), on a cold boot.
         assert_eq!(v.path(&["deadline_expired"]).as_usize(), Some(0));
@@ -573,6 +754,119 @@ mod tests {
         let j2 = p2.to_json().to_string();
         assert!(j2.contains("\"mig_profile\":null"));
         assert!(j2.contains("\"degraded\":true"));
+    }
+
+    #[test]
+    fn sweep_spec_parses_with_defaults_and_errors() {
+        let v = Json::parse(
+            r#"{"cmd":"sweep","model":{},"spec":{"depths":[1,2],"widths":[100,50],"batches":[1,8],"dtypes":["f16","i8"],"slo_ms":5.0,"fleet_gpus":4}}"#,
+        )
+        .unwrap();
+        let s = parse_sweep_spec_value(&v).unwrap();
+        assert_eq!(s.depths, vec![1, 2]);
+        assert_eq!(s.widths, vec![100, 50]);
+        assert_eq!(s.batches, vec![1, 8]);
+        assert_eq!(s.dtypes, vec![DType::F16, DType::I8]);
+        assert!((s.slo_ms - 5.0).abs() < 1e-12);
+        assert_eq!(s.fleet_gpus, 4);
+        assert_eq!(s.total(), 16);
+
+        // An empty spec is the identity grid: one candidate, no packing.
+        let v = Json::parse(r#"{"spec":{}}"#).unwrap();
+        let s = parse_sweep_spec_value(&v).unwrap();
+        assert_eq!(s, SweepSpec::default());
+        assert_eq!(s.total(), 1);
+
+        assert!(parse_sweep_spec_value(&Json::parse(r#"{"model":{}}"#).unwrap()).is_err());
+        assert!(parse_sweep_spec_value(&Json::parse(r#"{"spec":[]}"#).unwrap()).is_err());
+        assert!(
+            parse_sweep_spec_value(&Json::parse(r#"{"spec":{"depths":[1.5]}}"#).unwrap()).is_err()
+        );
+        assert!(
+            parse_sweep_spec_value(&Json::parse(r#"{"spec":{"dtypes":["f12"]}}"#).unwrap())
+                .is_err()
+        );
+        assert!(
+            parse_sweep_spec_value(&Json::parse(r#"{"spec":{"fleet_gpus":-1}}"#).unwrap())
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn sweep_responses_serialize() {
+        let items = vec![
+            SweepItem {
+                index: 0,
+                label: "d1-w100-b1-f32".into(),
+                result: Ok(Prediction {
+                    latency_ms: 2.0,
+                    memory_mb: 512.0,
+                    energy_j: 0.1,
+                    mig_profile: Some("1g.5gb".into()),
+                    degraded: false,
+                }),
+                cached: true,
+            },
+            SweepItem {
+                index: 1,
+                label: "d1-w100-b2-f32".into(),
+                result: Err("rewrite failed".into()),
+                cached: false,
+            },
+        ];
+        let v = Json::parse(&sweep_chunk_response(&items)).unwrap();
+        assert_eq!(v.path(&["ok"]).as_bool(), Some(true));
+        assert_eq!(v.path(&["sweep"]).as_str(), Some("chunk"));
+        let arr = v.path(&["items"]).as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].path(&["cached"]).as_bool(), Some(true));
+        assert_eq!(arr[0].path(&["prediction", "latency_ms"]).as_f64(), Some(2.0));
+        assert_eq!(arr[1].path(&["error"]).as_str(), Some("rewrite failed"));
+
+        let summary = SweepSummary {
+            candidates: 4,
+            duplicates: 1,
+            cache_hits: 2,
+            batches: 1,
+            errors: 1,
+            frontier: vec![crate::coordinator::FrontierPoint {
+                index: 0,
+                label: "d1-w100-b1-f32".into(),
+                latency_ms: 2.0,
+                memory_mb: 512.0,
+                energy_j: 0.1,
+            }],
+            packing: None,
+        };
+        let v = Json::parse(&sweep_done_response(&summary)).unwrap();
+        assert_eq!(v.path(&["sweep"]).as_str(), Some("done"));
+        assert_eq!(v.path(&["candidates"]).as_usize(), Some(4));
+        assert_eq!(v.path(&["duplicates"]).as_usize(), Some(1));
+        assert_eq!(v.path(&["cache_hits"]).as_usize(), Some(2));
+        assert_eq!(v.path(&["frontier"]).as_arr().map(<[Json]>::len), Some(1));
+        assert!(matches!(v.path(&["packing"]), Json::Null));
+
+        // With a fleet-packing epilogue attached.
+        let packed = SweepSummary {
+            packing: Some(crate::mig::pack_fleet(
+                &[crate::mig::PackRequest {
+                    index: 0,
+                    label: "d1-w100-b1-f32".into(),
+                    latency_ms: 2.0,
+                    memory_mb: 512.0,
+                }],
+                1,
+                Some(10.0),
+            )),
+            ..summary
+        };
+        let v = Json::parse(&sweep_done_response(&packed)).unwrap();
+        assert_eq!(v.path(&["packing", "gpus"]).as_usize(), Some(1));
+        assert!((v.path(&["packing", "slo_ms"]).as_f64().unwrap() - 10.0).abs() < 1e-12);
+        let placed = v.path(&["packing", "placed"]).as_arr().unwrap();
+        assert_eq!(placed.len(), 1);
+        assert_eq!(placed[0].path(&["profile"]).as_str(), Some("1g.5gb"));
+        assert_eq!(placed[0].path(&["gpu"]).as_usize(), Some(0));
     }
 
     #[test]

@@ -237,6 +237,21 @@ pub struct Metrics {
     pub wire_frame_decode_errors: u64,
     pub wire_bytes_rx: u64,
     pub wire_bytes_tx: u64,
+    /// Server-side DSE sweep requests served (wire `SweepRequest` frames
+    /// plus JSON `sweep` commands).
+    pub sweeps: u64,
+    /// Grid points expanded across all sweeps, including duplicates and
+    /// candidates whose rewrite/shape-inference failed.
+    pub sweep_candidates: u64,
+    /// Candidates that normalized to an earlier grid point of the *same*
+    /// request (fingerprint × target collision) and reused its result
+    /// without a cache lookup.
+    pub sweep_dup_candidates: u64,
+    /// Sweep candidates answered synchronously by the prediction cache.
+    pub sweep_cache_hits: u64,
+    /// Admission waves a sweep pushed through the batch former (chunks
+    /// containing at least one cache miss).
+    pub sweep_batches: u64,
 }
 
 impl Metrics {
@@ -376,6 +391,13 @@ pub struct Coordinator {
     shed_admission: AtomicU64,
     /// Misses answered by the degraded-mode fallback below.
     degraded_served: AtomicU64,
+    /// Server-side sweep counters (see the matching [`Metrics`] fields);
+    /// kept out of the metrics mutex like the submit-path counters above.
+    pub(super) sweeps: AtomicU64,
+    pub(super) sweep_candidates: AtomicU64,
+    pub(super) sweep_dup_candidates: AtomicU64,
+    pub(super) sweep_cache_hits: AtomicU64,
+    pub(super) sweep_batches: AtomicU64,
     /// Analytic fallback for degraded mode: while the breaker is open,
     /// cache misses are answered by the simulator (tagged `degraded`)
     /// instead of queueing into a tripped backend.
@@ -669,6 +691,11 @@ impl Coordinator {
             supervisor,
             shed_admission: AtomicU64::new(0),
             degraded_served: AtomicU64::new(0),
+            sweeps: AtomicU64::new(0),
+            sweep_candidates: AtomicU64::new(0),
+            sweep_dup_candidates: AtomicU64::new(0),
+            sweep_cache_hits: AtomicU64::new(0),
+            sweep_batches: AtomicU64::new(0),
             fallback: Mutex::new(SimBackend::new()),
             default_target: opts.target,
             snapshot_path: opts.cache.snapshot_path,
@@ -1047,6 +1074,11 @@ impl Coordinator {
         m.breaker_state = sup.breaker.state().as_str();
         m.breaker_trips = sup.breaker.trips();
         m.degraded_served = self.degraded_served.load(Ordering::Relaxed);
+        m.sweeps = self.sweeps.load(Ordering::Relaxed);
+        m.sweep_candidates = self.sweep_candidates.load(Ordering::Relaxed);
+        m.sweep_dup_candidates = self.sweep_dup_candidates.load(Ordering::Relaxed);
+        m.sweep_cache_hits = self.sweep_cache_hits.load(Ordering::Relaxed);
+        m.sweep_batches = self.sweep_batches.load(Ordering::Relaxed);
         m
     }
 

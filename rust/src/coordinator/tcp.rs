@@ -1,7 +1,10 @@
 //! TCP JSON-lines front end: one line in (request), one line out
-//! (prediction or error). Each connection gets a handler thread; all
-//! handlers share the coordinator's request queue (the executor batches
-//! across connections — that is the point of the dynamic batcher).
+//! (prediction or error). The one exception is the `sweep` cmd, which
+//! streams several `{"sweep":"chunk",...}` lines closed by one
+//! `{"sweep":"done",...}` line. Each connection gets a handler thread;
+//! all handlers share the coordinator's request queue (the executor
+//! batches across connections — that is the point of the dynamic
+//! batcher).
 //!
 //! This is the *compatibility* listener: human-debuggable, curl-able, and
 //! what every example speaks. High-connection-count serving lives in
@@ -22,9 +25,11 @@ use crate::wire::WireMetrics;
 
 use super::protocol::{
     cache_compact_response, cache_load_response, cache_save_response, cache_stats_response,
-    error_response, parse_cmd, parse_deadline_value, parse_request_value, parse_target_value,
+    error_response, parse_cmd, parse_deadline_value, parse_request_value, parse_sweep_spec_value,
+    parse_target_value, sweep_chunk_response, sweep_done_response,
 };
 use super::server::Coordinator;
+use super::sweep::SweepEvent;
 use crate::util::json::{Json, JsonObj};
 
 /// Hygiene knobs for the JSON-lines listener (`--max-connections`,
@@ -157,6 +162,13 @@ fn handle_connection(
                     Ok(r) => cache_compact_response(&r),
                     Err(e) => error_response(&format!("{e:#}")),
                 },
+                // The sweep cmd streams multiple response lines; it owns
+                // the writer for the duration instead of returning one
+                // response string.
+                Some("sweep") => {
+                    handle_sweep(coordinator, &v, &mut writer, &wire)?;
+                    continue;
+                }
                 Some(other) => error_response(&format!("unknown cmd {other:?}")),
                 None => match parse_request_value(&v) {
                     Ok(graph) => match (parse_target_value(&v), parse_deadline_value(&v)) {
@@ -180,6 +192,63 @@ fn handle_connection(
         writer.flush()?;
         wire.tx(1, response.len() as u64 + 1);
     }
+}
+
+/// Run one JSON sweep request end to end, streaming chunk lines followed
+/// by the terminal `done` line (or a single error line when the request
+/// itself is malformed). Socket write failures abort the sweep quietly
+/// server-side and close the connection.
+fn handle_sweep(
+    coordinator: &Coordinator,
+    v: &Json,
+    writer: &mut BufWriter<TcpStream>,
+    wire: &Arc<WireMetrics>,
+) -> Result<()> {
+    let mut send = |writer: &mut BufWriter<TcpStream>, line: String| -> Result<()> {
+        writer.write_all(line.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        wire.tx(1, line.len() as u64 + 1);
+        Ok(())
+    };
+    // Deadlines apply to single predictions; a sweep's lifetime is the
+    // whole stream (the binary verb rejects the extension the same way).
+    if !matches!(v.path(&["deadline_ms"]), Json::Null) {
+        wire.decode_error();
+        return send(writer, error_response("sweep requests do not accept 'deadline_ms'"));
+    }
+    let parsed = parse_request_value(v)
+        .and_then(|g| Ok((g, parse_target_value(v)?, parse_sweep_spec_value(v)?)));
+    let (graph, target, spec) = match parsed {
+        Ok(p) => p,
+        Err(e) => {
+            wire.decode_error();
+            return send(writer, error_response(&e));
+        }
+    };
+    let target = target.unwrap_or_default();
+    let mut io_err: Option<anyhow::Error> = None;
+    let run = coordinator.run_sweep(&graph, &spec, &target, &mut |ev| {
+        let line = match ev {
+            SweepEvent::Chunk(items) => sweep_chunk_response(&items),
+            SweepEvent::Done(s) => sweep_done_response(&s),
+            SweepEvent::Fatal(e) => error_response(&e),
+        };
+        match send(writer, line) {
+            Ok(()) => true,
+            Err(e) => {
+                io_err = Some(e);
+                false
+            }
+        }
+    });
+    if let Some(e) = io_err {
+        return Err(e);
+    }
+    if let Err(e) = run {
+        return send(writer, error_response(&e));
+    }
+    Ok(())
 }
 
 /// Minimal client for tests and the serve_demo example.
@@ -246,6 +315,47 @@ impl Client {
     /// Convenience: predict a graph for a specific target configuration.
     pub fn predict_graph_on(&mut self, graph: &Graph, target: &str) -> Result<String> {
         self.roundtrip(&predict_request_line(graph, Some(target))?)
+    }
+
+    /// Run a server-side design-space sweep: one request line out,
+    /// multiple response lines back (`{"sweep":"chunk",...}`* then one
+    /// `{"sweep":"done",...}`). `spec_json` is the mutation-grid object,
+    /// e.g. `{"widths":[100,50],"dtypes":["f16"]}`. Returns every
+    /// response line in arrival order; the last is the summary (or an
+    /// error line).
+    pub fn sweep(
+        &mut self,
+        graph: &Graph,
+        target: Option<&str>,
+        spec_json: &str,
+    ) -> Result<Vec<String>> {
+        let line = predict_request_line(graph, target)?;
+        let Json::Obj(mut o) = Json::parse(&line).expect("request line is JSON") else {
+            anyhow::bail!("request line is not a JSON object");
+        };
+        o.insert("cmd", "sweep");
+        o.insert(
+            "spec",
+            Json::parse(spec_json).map_err(|e| anyhow::anyhow!("spec is not JSON: {e}"))?,
+        );
+        self.writer.write_all(Json::Obj(o).to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut out = Vec::new();
+        loop {
+            let mut resp = String::new();
+            if self.reader.read_line(&mut resp)? == 0 {
+                anyhow::bail!("server closed the connection mid-sweep");
+            }
+            let resp = resp.trim_end().to_string();
+            let v = Json::parse(&resp).map_err(|e| anyhow::anyhow!("bad sweep line: {e}"))?;
+            let done = v.path(&["sweep"]).as_str() == Some("done")
+                || v.path(&["ok"]).as_bool() == Some(false);
+            out.push(resp);
+            if done {
+                return Ok(out);
+            }
+        }
     }
 
     /// Convenience: predict with a deadline budget in milliseconds; the

@@ -29,8 +29,17 @@
 //! replica, reused across requests). Routers front tens of client
 //! connections, not the reactor's tens of thousands — thread-per-conn
 //! keeps failover logic linear and testable.
+//!
+//! Sweeps (the multi-frame DSE verb) route by the *base* graph's
+//! fingerprint, so the whole grid lands on the replica whose cache slice
+//! owns the family the client is iterating on. The router relays the
+//! replica's chunk stream verbatim; if the replica dies mid-stream it
+//! re-issues the full sweep to the next alive successor and filters out
+//! candidate indices the client already received (expansion is
+//! deterministic, so the successor's terminal summary covers the full
+//! grid) — fail-open, no client-visible error.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::Ordering;
@@ -245,6 +254,12 @@ fn handle_client(mut stream: TcpStream, router: &Router) -> Result<()> {
                 }
             };
         rbuf.drain(..consumed);
+        if kind == FrameKind::SweepRequest {
+            // Multi-frame exchange: the sweep handler owns the client
+            // stream until the terminal frame is relayed.
+            route_sweep(router, &mut downstream, &mut stream, seq, &payload)?;
+            continue;
+        }
         let (rkind, body) = answer(router, &mut downstream, kind, &payload);
         if rkind == FrameKind::Error && body == SERVER_ONLY {
             let _ = stream.write_all(&frame::encode(FrameKind::Error, 0, &body));
@@ -276,9 +291,18 @@ fn answer(
             FrameKind::Error,
             b"replication verbs are served by replicas, not the router".to_vec(),
         ),
-        FrameKind::Response | FrameKind::Error | FrameKind::Manifest | FrameKind::GenData => {
-            (FrameKind::Error, SERVER_ONLY.to_vec())
-        }
+        // Intercepted in handle_client before answer() — a sweep is a
+        // multi-frame exchange and cannot return one reply here.
+        FrameKind::SweepRequest => (
+            FrameKind::Error,
+            b"sweep requests are handled as a stream".to_vec(),
+        ),
+        FrameKind::Response
+        | FrameKind::Error
+        | FrameKind::Manifest
+        | FrameKind::GenData
+        | FrameKind::SweepChunk
+        | FrameKind::SweepDone => (FrameKind::Error, SERVER_ONLY.to_vec()),
     }
 }
 
@@ -373,6 +397,168 @@ fn route_request(
         FrameKind::Error,
         b"no live replica for this shard".to_vec(),
     )
+}
+
+/// How one sweep forward attempt ended (`Err` = replica transport
+/// failure, the caller fails over).
+enum SweepOutcome {
+    /// The replica's terminal frame (done summary or request-level error)
+    /// was relayed to the client.
+    Finished,
+    /// The *client* connection failed mid-stream; abort, do not fail
+    /// over (there is nobody left to stream to).
+    ClientGone(anyhow::Error),
+}
+
+/// Forward a sweep to the base fingerprint's owner, relaying the chunk
+/// stream and failing over past replicas that die mid-stream. `Err` =
+/// the client connection itself failed (caller closes it).
+fn route_sweep(
+    router: &Router,
+    downstream: &mut HashMap<usize, (u64, WireClient)>,
+    stream: &mut TcpStream,
+    seq: u32,
+    payload: &[u8],
+) -> Result<()> {
+    // Placement: the *base* graph's cache key. Every candidate the sweep
+    // expands shares the family's locality, so one replica's LRU slice
+    // sees the whole grid (that is what makes the dedup + cache-hit path
+    // effective across repeated sweeps).
+    let (graph, target, _spec) = match codec::decode_sweep_request(payload) {
+        Ok(t) => t,
+        Err(e) => {
+            stream.write_all(&frame::encode(FrameKind::Error, seq, e.as_bytes()))?;
+            return Ok(());
+        }
+    };
+    let key = CacheKey::new(CostSweep::of(&graph).fingerprint, &target.unwrap_or_default());
+    let order = router.ring.preference(key.as_u128());
+    let members = &router.members;
+    let mut candidates: Vec<usize> = order
+        .iter()
+        .copied()
+        .filter(|&i| members.replicas[i].is_alive())
+        .collect();
+    if candidates.is_empty() {
+        // Fail-open past health state, same as route_request.
+        candidates = order.clone();
+    }
+    let owner = order[0];
+    // Candidate indices already streamed to the client: a failover
+    // re-issues the whole sweep to the successor and filters these out
+    // so the client never sees a duplicate item.
+    let mut sent: HashSet<u32> = HashSet::new();
+    for (attempt, &i) in candidates.iter().enumerate() {
+        let r = &members.replicas[i];
+        if attempt == 0 {
+            r.routed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            r.retried.fetch_add(1, Ordering::Relaxed);
+        }
+        if i != owner {
+            r.failed_over.fetch_add(1, Ordering::Relaxed);
+        }
+        r.in_flight.fetch_add(1, Ordering::Relaxed);
+        let result = forward_sweep_once(downstream, i, r, payload, seq, &mut sent, stream);
+        r.in_flight.fetch_sub(1, Ordering::Relaxed);
+        match result {
+            Ok(SweepOutcome::Finished) => return Ok(()),
+            Ok(SweepOutcome::ClientGone(e)) => return Err(e),
+            Err(e) => {
+                downstream.remove(&i);
+                members.mark_down(i);
+                log_warn!(
+                    "fleet sweep forward to {} failed ({e:#}); failing over",
+                    r.addr
+                );
+            }
+        }
+    }
+    stream.write_all(&frame::encode(
+        FrameKind::Error,
+        seq,
+        b"no live replica for this sweep",
+    ))?;
+    Ok(())
+}
+
+/// One sweep forward on the pooled downstream connection: relay chunk
+/// frames (filtered against `sent`) under the client's seq until the
+/// replica's terminal frame. `Err` = replica transport failure or
+/// protocol violation (caller fails over).
+fn forward_sweep_once(
+    downstream: &mut HashMap<usize, (u64, WireClient)>,
+    i: usize,
+    r: &Replica,
+    payload: &[u8],
+    client_seq: u32,
+    sent: &mut HashSet<u32>,
+    stream: &mut TcpStream,
+) -> Result<SweepOutcome> {
+    if faults::fire("fleet:stall-peer") {
+        downstream.remove(&i);
+        anyhow::bail!("replica {} stalled (injected fault)", r.addr);
+    }
+    if let Some(spike) = faults::spike("fleet:slow-peer") {
+        std::thread::sleep(spike);
+    }
+    let epoch = r.epoch();
+    if matches!(downstream.get(&i), Some((e, _)) if *e != epoch) {
+        downstream.remove(&i);
+    }
+    if !downstream.contains_key(&i) {
+        downstream.insert(i, (epoch, WireClient::connect(&r.addr)?));
+    }
+    let (_, client) = downstream.get_mut(&i).expect("just inserted");
+    let fwd_seq = client.send_raw(FrameKind::SweepRequest, payload)?;
+    loop {
+        let f = client.recv_frame()?;
+        if f.kind == FrameKind::Error && f.seq == 0 {
+            // Connection-level error: the replica is closing on us.
+            anyhow::bail!(
+                "replica {} closed mid-sweep: {}",
+                r.addr,
+                String::from_utf8_lossy(&f.payload)
+            );
+        }
+        if f.seq != fwd_seq {
+            anyhow::bail!(
+                "replica {} answered seq {} for sweep seq {fwd_seq}",
+                r.addr,
+                f.seq
+            );
+        }
+        match f.kind {
+            FrameKind::SweepChunk => {
+                let items = codec::decode_sweep_chunk(&f.payload)
+                    .map_err(|e| anyhow::anyhow!("bad sweep chunk from {}: {e}", r.addr))?;
+                let fresh: Vec<_> =
+                    items.into_iter().filter(|it| sent.insert(it.index)).collect();
+                if fresh.is_empty() {
+                    continue; // a failover retread — everything already sent
+                }
+                let body = codec::encode_sweep_chunk(&fresh);
+                if let Err(e) =
+                    stream.write_all(&frame::encode(FrameKind::SweepChunk, client_seq, &body))
+                {
+                    return Ok(SweepOutcome::ClientGone(e.into()));
+                }
+            }
+            // Terminal frames relay as-is: the done summary covers the
+            // full grid (expansion is deterministic on every replica),
+            // and a request-level error ends the sweep for the client.
+            FrameKind::SweepDone | FrameKind::Error => {
+                if let Err(e) = stream.write_all(&frame::encode(f.kind, client_seq, &f.payload)) {
+                    return Ok(SweepOutcome::ClientGone(e.into()));
+                }
+                return Ok(SweepOutcome::Finished);
+            }
+            other => anyhow::bail!(
+                "unexpected frame kind {other:?} in sweep stream from {}",
+                r.addr
+            ),
+        }
+    }
 }
 
 /// One forward on the pooled downstream connection: send the original

@@ -10,7 +10,9 @@ pub mod graph;
 pub mod infer;
 pub mod op;
 pub mod quantize;
+pub mod rewrite;
 
 pub use dtype::{DType, ALL_DTYPES};
 pub use graph::{Graph, GraphBuilder, Node, NodeId};
 pub use op::{Attrs, OpKind};
+pub use rewrite::{rebatch, scale_depth, scale_width};

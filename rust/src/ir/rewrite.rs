@@ -1,0 +1,352 @@
+//! Structural rewrite passes for design-space-exploration sweeps: scale a
+//! model's width (channel/unit counts), depth (replicate shape-preserving
+//! weighted layers) or batch size, producing new *valid* graphs whose
+//! shapes are re-derived through [`infer_shape`] node by node.
+//!
+//! Together with [`super::quantize`] these are the mutation axes of the
+//! server-side `Sweep` verb: the client ships one base graph plus grids of
+//! `(depth, width, batch, dtype)` knobs and the server expands the cross
+//! product locally. Every pass is deterministic and total over its inputs:
+//! a knob combination the architecture cannot support (e.g. width-scaling
+//! a residual branch anchored on the unscaled input) returns a
+//! per-candidate `Err` instead of panicking or emitting an invalid graph.
+
+use super::graph::{Graph, Node};
+use super::infer::{infer_shape, numel, Shape};
+use super::op::OpKind;
+
+/// Scale the width (conv output channels / dense units) of every weighted
+/// layer to `percent`% of its original size, rounding to the nearest unit
+/// with a floor of 1. The final classifier head — a `Dense` sink — keeps
+/// its units (class count is not a width knob). Depthwise convolutions
+/// re-sync `groups` to their (scaled) input channel count. `percent ==
+/// 100` is the identity (a plain clone, same variant tag).
+pub fn scale_width(graph: &Graph, percent: usize) -> Result<Graph, String> {
+    if percent == 0 {
+        return Err("width percent must be >= 1".into());
+    }
+    if percent == 100 {
+        return Ok(graph.clone());
+    }
+    let consumers = graph.consumers();
+    let mut nodes: Vec<Node> = Vec::with_capacity(graph.nodes.len());
+    for n in &graph.nodes {
+        let mut node = n.clone();
+        match n.op {
+            OpKind::Input => {}
+            OpKind::Reshape | OpKind::Transpose | OpKind::StridedSlice => {
+                let old_in = numel(&graph.nodes[n.inputs[0]].out_shape);
+                let new_in = numel(&nodes[n.inputs[0]].out_shape);
+                node.out_shape =
+                    rescale_opaque(n.op, &n.out_shape, old_in, new_in, &[1])?;
+            }
+            _ => {
+                // The classifier head keeps its class count; every other
+                // units-bearing op scales.
+                let head = n.op == OpKind::Dense && consumers[n.id].is_empty();
+                if !head {
+                    if let Some(u) = node.attrs.units {
+                        node.attrs.units = Some(scale_units(u, percent)?);
+                    }
+                }
+                if n.op == OpKind::DepthwiseConv2d {
+                    node.attrs.groups = nodes[n.inputs[0]].out_shape[1];
+                }
+                let shapes: Vec<&Shape> =
+                    n.inputs.iter().map(|&s| &nodes[s].out_shape).collect();
+                node.out_shape = infer_shape(n.op, &node.attrs, &shapes).map_err(|e| {
+                    format!("width {percent}% fails at node {} ({}): {e}", n.id, n.op)
+                })?;
+            }
+        }
+        nodes.push(node);
+    }
+    finish(graph, nodes, graph.batch, format!("{}-w{percent}", graph.variant))
+}
+
+/// Deepen the model by replacing every *shape-preserving, single-input,
+/// MAC-counting* node (e.g. a 3x3 stride-1 same-channel conv, a
+/// square dense projection) with a chain of `repeat` copies. Graphs with
+/// no such node come back structurally unchanged (the depth knob is a
+/// no-op for them). `repeat == 1` is the identity.
+pub fn scale_depth(graph: &Graph, repeat: usize) -> Result<Graph, String> {
+    if repeat == 0 {
+        return Err("depth repeat must be >= 1".into());
+    }
+    if repeat == 1 {
+        return Ok(graph.clone());
+    }
+    let mut nodes: Vec<Node> = Vec::with_capacity(graph.nodes.len());
+    let mut map = vec![0usize; graph.nodes.len()];
+    for n in &graph.nodes {
+        let mut node = n.clone();
+        node.inputs = n.inputs.iter().map(|&s| map[s]).collect();
+        node.id = nodes.len();
+        let replicate = n.inputs.len() == 1
+            && n.op.counts_macs()
+            && n.out_shape == graph.nodes[n.inputs[0]].out_shape;
+        let mut last = node.id;
+        nodes.push(node);
+        if replicate {
+            for r in 1..repeat {
+                let id = nodes.len();
+                let mut copy = n.clone();
+                copy.id = id;
+                copy.inputs = vec![last];
+                copy.name = format!("{}_d{r}", n.name);
+                nodes.push(copy);
+                last = id;
+            }
+        }
+        map[n.id] = last;
+    }
+    finish(graph, nodes, graph.batch, format!("{}-d{repeat}", graph.variant))
+}
+
+/// Re-batch the graph: every `Input` node's leading dimension (and the
+/// graph's `batch` field) becomes `batch`, and all downstream shapes are
+/// re-derived. Rebatching to the current batch is the identity.
+pub fn rebatch(graph: &Graph, batch: usize) -> Result<Graph, String> {
+    if batch == 0 {
+        return Err("batch must be >= 1".into());
+    }
+    if batch == graph.batch {
+        return Ok(graph.clone());
+    }
+    let mut nodes: Vec<Node> = Vec::with_capacity(graph.nodes.len());
+    for n in &graph.nodes {
+        let mut node = n.clone();
+        match n.op {
+            OpKind::Input => {
+                node.out_shape[0] = batch;
+            }
+            OpKind::Reshape | OpKind::Transpose | OpKind::StridedSlice => {
+                let old_in = numel(&graph.nodes[n.inputs[0]].out_shape);
+                let new_in = numel(&nodes[n.inputs[0]].out_shape);
+                node.out_shape =
+                    rescale_opaque(n.op, &n.out_shape, old_in, new_in, &[0])?;
+            }
+            _ => {
+                let shapes: Vec<&Shape> =
+                    n.inputs.iter().map(|&s| &nodes[s].out_shape).collect();
+                node.out_shape = infer_shape(n.op, &node.attrs, &shapes).map_err(|e| {
+                    format!("rebatch to {batch} fails at node {} ({}): {e}", n.id, n.op)
+                })?;
+            }
+        }
+        nodes.push(node);
+    }
+    finish(graph, nodes, batch, format!("{}-b{batch}", graph.variant))
+}
+
+/// Nearest-unit scaling with a floor of 1 and an overflow check.
+fn scale_units(units: usize, percent: usize) -> Result<usize, String> {
+    units
+        .checked_mul(percent)
+        .map(|p| ((p + 50) / 100).max(1))
+        .ok_or_else(|| format!("width {percent}% of {units} units overflows"))
+}
+
+/// Rescale the out-of-band target shape of a reshape-family node whose
+/// input element count changed from `old_in` to `new_in`: scale exactly
+/// one dimension by the same ratio (trying `prefer`red dims first, then
+/// the rest) so the element-count invariant survives. Errors when no
+/// single dimension divides cleanly — that candidate is unsupported.
+fn rescale_opaque(
+    op: OpKind,
+    old_out: &Shape,
+    old_in: usize,
+    new_in: usize,
+    prefer: &[usize],
+) -> Result<Shape, String> {
+    if old_in == new_in {
+        return Ok(old_out.to_vec());
+    }
+    let mut order: Vec<usize> = prefer.iter().copied().filter(|&d| d < old_out.len()).collect();
+    for d in 0..old_out.len() {
+        if !order.contains(&d) {
+            order.push(d);
+        }
+    }
+    for d in order {
+        if let Some(p) = old_out[d].checked_mul(new_in) {
+            if old_in > 0 && p % old_in == 0 && p / old_in >= 1 {
+                let mut out = old_out.to_vec();
+                out[d] = p / old_in;
+                return Ok(out);
+            }
+        }
+    }
+    Err(format!(
+        "cannot rescale {op} target {old_out:?} from {old_in} to {new_in} elements"
+    ))
+}
+
+/// Assemble and validate the rewritten graph. Validation is the safety
+/// net: a pass bug (or an architecture the ratio heuristics cannot carry)
+/// surfaces as a per-candidate error here, never as an invalid graph
+/// escaping into the admission path.
+fn finish(base: &Graph, nodes: Vec<Node>, batch: usize, variant: String) -> Result<Graph, String> {
+    let g = Graph {
+        nodes,
+        batch,
+        family: base.family.clone(),
+        variant,
+    };
+    g.validate()?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Attrs, GraphBuilder};
+
+    /// conv -> relu -> (shape-preserving conv) -> pool -> flatten -> dense
+    fn tiny() -> Graph {
+        let mut b = GraphBuilder::new("test", "tiny", 2);
+        let x = b.input(vec![2, 3, 16, 16]);
+        let c1 = b.conv_relu(x, 8, 3, 1, 1);
+        let c2 = b.conv2d(c1, 8, 3, 1, 1); // 8 -> 8, stride 1: shape-preserving
+        let p = b.add(OpKind::GlobalAvgPool2d, Attrs::none(), &[c2]);
+        let f = b.add(OpKind::Flatten, Attrs::none(), &[p]);
+        b.dense(f, 10);
+        b.finish()
+    }
+
+    fn residual_from_input() -> Graph {
+        let mut b = GraphBuilder::new("test", "skip", 1);
+        let x = b.input(vec![1, 8, 8, 8]);
+        let c = b.conv2d(x, 8, 3, 1, 1);
+        b.add(OpKind::Add, Attrs::none(), &[c, x]);
+        b.finish()
+    }
+
+    #[test]
+    fn width_100_is_identity() {
+        let g = tiny();
+        assert_eq!(scale_width(&g, 100).unwrap(), g);
+    }
+
+    #[test]
+    fn width_scales_channels_but_not_the_head() {
+        let g = tiny();
+        let half = scale_width(&g, 50).unwrap();
+        assert!(half.validate().is_ok());
+        assert_eq!(half.nodes[1].attrs.units, Some(4), "conv channels halved");
+        assert_eq!(half.nodes[1].out_shape[1], 4);
+        let head = half.nodes.last().unwrap();
+        assert_eq!(head.attrs.units, Some(10), "classifier keeps its classes");
+        assert_eq!(half.variant, "tiny-w50");
+        // Fingerprints diverge from the base.
+        assert_ne!(half.canonical_signatures(), g.canonical_signatures());
+    }
+
+    #[test]
+    fn width_floor_is_one_unit() {
+        let g = tiny();
+        let slim = scale_width(&g, 1).unwrap();
+        assert!(slim.nodes[1].attrs.units.unwrap() >= 1);
+        assert!(slim.validate().is_ok());
+    }
+
+    #[test]
+    fn width_resyncs_depthwise_groups() {
+        let mut b = GraphBuilder::new("test", "dw", 1);
+        let x = b.input(vec![1, 3, 16, 16]);
+        let c = b.conv2d(x, 32, 3, 1, 1);
+        b.depthwise(c, 3, 1, 1);
+        let g = b.finish();
+        let half = scale_width(&g, 50).unwrap();
+        assert_eq!(half.nodes[1].out_shape[1], 16);
+        assert_eq!(half.nodes[2].attrs.groups, 16, "depthwise groups follow C_in");
+        assert!(half.validate().is_ok());
+    }
+
+    #[test]
+    fn width_rejects_residual_anchored_on_input() {
+        // The skip branch keeps the input's 8 channels while the conv
+        // branch scales — an architecture the width knob cannot support.
+        let g = residual_from_input();
+        assert!(scale_width(&g, 50).is_err());
+    }
+
+    #[test]
+    fn width_scales_residuals_between_scaled_branches() {
+        let mut b = GraphBuilder::new("test", "res", 1);
+        let x = b.input(vec![1, 3, 8, 8]);
+        let c1 = b.conv2d(x, 16, 3, 1, 1);
+        let c2 = b.conv2d(c1, 16, 3, 1, 1);
+        let s = b.add(OpKind::Add, Attrs::none(), &[c1, c2]);
+        b.relu(s);
+        let g = b.finish();
+        let wide = scale_width(&g, 200).unwrap();
+        assert_eq!(wide.nodes[1].out_shape[1], 32);
+        assert!(wide.validate().is_ok());
+    }
+
+    #[test]
+    fn depth_1_is_identity() {
+        let g = tiny();
+        assert_eq!(scale_depth(&g, 1).unwrap(), g);
+    }
+
+    #[test]
+    fn depth_replicates_shape_preserving_weighted_nodes() {
+        let g = tiny();
+        let deep = scale_depth(&g, 3).unwrap();
+        assert!(deep.validate().is_ok());
+        // Exactly one node qualifies (the 8->8 conv); 2 copies appended.
+        assert_eq!(deep.n_nodes(), g.n_nodes() + 2);
+        assert_eq!(deep.count_op(OpKind::Conv2d), 4);
+        assert_eq!(deep.variant, "tiny-d3");
+        assert!(deep.total_weights() > g.total_weights());
+        assert_ne!(deep.canonical_signatures().len(), g.canonical_signatures().len());
+    }
+
+    #[test]
+    fn depth_without_qualifying_nodes_is_structurally_unchanged() {
+        // conv 3->8 changes channels; dense head is a sink but changes
+        // features — nothing replicates.
+        let mut b = GraphBuilder::new("test", "flat", 1);
+        let x = b.input(vec![1, 3, 8, 8]);
+        let c = b.conv2d(x, 8, 3, 2, 1);
+        let f = b.add(OpKind::Flatten, Attrs::none(), &[c]);
+        b.dense(f, 10);
+        let g = b.finish();
+        let deep = scale_depth(&g, 4).unwrap();
+        assert_eq!(deep.n_nodes(), g.n_nodes());
+        // Same structure, same fingerprints: the sweep's intra-request
+        // dedup collapses this candidate onto the base.
+        assert_eq!(deep.canonical_signatures(), g.canonical_signatures());
+    }
+
+    #[test]
+    fn rebatch_changes_every_leading_dim() {
+        let g = tiny();
+        let b8 = rebatch(&g, 8).unwrap();
+        assert!(b8.validate().is_ok());
+        assert_eq!(b8.batch, 8);
+        for n in &b8.nodes {
+            assert_eq!(n.out_shape[0], 8, "node {} kept the old batch", n.id);
+        }
+        assert_eq!(rebatch(&g, 2).unwrap(), g, "same batch is the identity");
+    }
+
+    #[test]
+    fn passes_compose() {
+        let g = tiny();
+        let c = rebatch(&scale_width(&scale_depth(&g, 2).unwrap(), 50).unwrap(), 4).unwrap();
+        assert!(c.validate().is_ok());
+        assert_eq!(c.batch, 4);
+        assert_eq!(c.variant, "tiny-d2-w50-b4");
+    }
+
+    #[test]
+    fn zero_knobs_are_rejected() {
+        let g = tiny();
+        assert!(scale_width(&g, 0).is_err());
+        assert!(scale_depth(&g, 0).is_err());
+        assert!(rebatch(&g, 0).is_err());
+    }
+}

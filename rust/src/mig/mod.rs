@@ -181,6 +181,103 @@ impl MigAdvisor {
     }
 }
 
+/// Compute-slice budget of one A100 in MIG mode: profiles occupy 1, 2, 3
+/// or 7 of these units and a GPU holds at most 7 in total.
+pub const A100_SLICES: u32 = 7;
+
+/// Compute-slice units a profile occupies out of [`A100_SLICES`].
+pub fn slice_units(p: MigProfile) -> u32 {
+    match p {
+        MigProfile::G1_5 => 1,
+        MigProfile::G2_10 => 2,
+        MigProfile::G3_20 => 3,
+        MigProfile::G7_40 => 7,
+    }
+}
+
+/// One model to place on the fleet: predicted latency drives the SLO
+/// filter, predicted memory picks the smallest feasible profile (eq. 2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackRequest {
+    /// Caller-side identity (e.g. sweep candidate index).
+    pub index: u32,
+    pub label: String,
+    pub latency_ms: f64,
+    pub memory_mb: f64,
+}
+
+/// A model placed on a concrete GPU and MIG profile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackPlacement {
+    pub index: u32,
+    pub label: String,
+    /// Fleet GPU ordinal in `0..gpus`.
+    pub gpu: u32,
+    pub profile: MigProfile,
+}
+
+/// Result of [`pack_fleet`]: the placements plus why the rest missed out.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct PackReport {
+    pub gpus: u32,
+    pub slo_ms: Option<f64>,
+    pub placed: Vec<PackPlacement>,
+    /// Predicted latency exceeded the SLO.
+    pub rejected_slo: u32,
+    /// Predicted memory exceeds even the 7g.40gb slice (eq. 2 "None").
+    pub rejected_capacity: u32,
+    /// Feasible on its own but no GPU had enough free slices left.
+    pub rejected_fleet_full: u32,
+}
+
+/// Greedy fleet-level MIG bin-packing: drop candidates over the SLO, map
+/// each survivor to its smallest feasible profile via eq. (2), then
+/// first-fit them — smallest slice footprint first, ties broken by memory
+/// then submission order — onto per-GPU budgets of [`A100_SLICES`] units.
+/// Placing small models first maximizes the *number* of placements, the
+/// objective a capacity planner sweeping a design space cares about.
+pub fn pack_fleet(models: &[PackRequest], gpus: u32, slo_ms: Option<f64>) -> PackReport {
+    let mut report = PackReport {
+        gpus,
+        slo_ms,
+        ..PackReport::default()
+    };
+    let mut feasible: Vec<(u32, &PackRequest, MigProfile)> = Vec::new();
+    for m in models {
+        if let Some(slo) = slo_ms {
+            if m.latency_ms > slo {
+                report.rejected_slo += 1;
+                continue;
+            }
+        }
+        match predict_profile(m.memory_mb) {
+            Some(p) => feasible.push((slice_units(p), m, p)),
+            None => report.rejected_capacity += 1,
+        }
+    }
+    feasible.sort_by(|a, b| {
+        a.0.cmp(&b.0)
+            .then(a.1.memory_mb.total_cmp(&b.1.memory_mb))
+            .then(a.1.index.cmp(&b.1.index))
+    });
+    let mut free = vec![A100_SLICES; gpus as usize];
+    for (units, m, profile) in feasible {
+        match free.iter().position(|&f| f >= units) {
+            Some(gpu) => {
+                free[gpu] -= units;
+                report.placed.push(PackPlacement {
+                    index: m.index,
+                    label: m.label.clone(),
+                    gpu: gpu as u32,
+                    profile,
+                });
+            }
+            None => report.rejected_fleet_full += 1,
+        }
+    }
+    report
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -304,5 +401,119 @@ mod tests {
         // consumption/capacity must decrease as capacity grows (feasible ones).
         let feasible: Vec<f64> = scores.iter().filter_map(|(_, s)| *s).collect();
         assert!(feasible.windows(2).all(|w| w[0] > w[1]), "{feasible:?}");
+    }
+
+    fn req(index: u32, latency_ms: f64, memory_mb: f64) -> PackRequest {
+        PackRequest {
+            index,
+            label: format!("m{index}"),
+            latency_ms,
+            memory_mb,
+        }
+    }
+
+    #[test]
+    fn pack_fills_one_gpu_with_small_slices() {
+        // Seven 1g.5gb models fill one A100 exactly.
+        let models: Vec<PackRequest> = (0..9).map(|i| req(i, 1.0, 2000.0)).collect();
+        let r = pack_fleet(&models, 1, None);
+        assert_eq!(r.placed.len(), 7);
+        assert_eq!(r.rejected_fleet_full, 2);
+        assert!(r.placed.iter().all(|p| p.profile == MigProfile::G1_5 && p.gpu == 0));
+    }
+
+    #[test]
+    fn pack_rejects_over_slo_and_over_capacity() {
+        let models = vec![
+            req(0, 1.0, 2000.0),   // fits
+            req(1, 99.0, 2000.0),  // over SLO
+            req(2, 1.0, 50_000.0), // beyond 7g.40gb
+        ];
+        let r = pack_fleet(&models, 4, Some(10.0));
+        assert_eq!(r.placed.len(), 1);
+        assert_eq!(r.placed[0].index, 0);
+        assert_eq!(r.rejected_slo, 1);
+        assert_eq!(r.rejected_capacity, 1);
+        assert_eq!(r.rejected_fleet_full, 0);
+    }
+
+    #[test]
+    fn pack_smallest_first_maximizes_placements() {
+        // One 7g model + seven 1g models on one GPU: the greedy order must
+        // place the seven small ones, not burn the GPU on the big one.
+        let mut models = vec![req(0, 1.0, 30_000.0)];
+        models.extend((1..8).map(|i| req(i, 1.0, 2000.0)));
+        let r = pack_fleet(&models, 1, None);
+        assert_eq!(r.placed.len(), 7);
+        assert!(r.placed.iter().all(|p| p.profile == MigProfile::G1_5));
+        assert_eq!(r.rejected_fleet_full, 1);
+    }
+
+    #[test]
+    fn pack_spills_to_later_gpus() {
+        let models: Vec<PackRequest> = (0..3).map(|i| req(i, 1.0, 30_000.0)).collect();
+        let r = pack_fleet(&models, 2, None);
+        assert_eq!(r.placed.len(), 2);
+        let gpus: Vec<u32> = r.placed.iter().map(|p| p.gpu).collect();
+        assert_eq!(gpus, vec![0, 1]);
+        assert_eq!(r.rejected_fleet_full, 1);
+    }
+
+    /// Property: over randomized fleets, packing never overcommits a GPU's
+    /// 7 slice units, never places a model on a slice too small for its
+    /// memory, and the report's counts partition the input set.
+    #[test]
+    fn pack_property_budgets_and_accounting() {
+        let mut state = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            // splitmix64 — deterministic, no external RNG dependency.
+            state = state.wrapping_add(0x9e3779b97f4a7c15);
+            let mut z = state;
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+            z ^ (z >> 31)
+        };
+        for case in 0..200 {
+            let n = (next() % 24) as u32;
+            let gpus = (next() % 5) as u32;
+            let models: Vec<PackRequest> = (0..n)
+                .map(|i| {
+                    req(
+                        i,
+                        (next() % 2000) as f64 / 100.0,
+                        (next() % 60_000) as f64,
+                    )
+                })
+                .collect();
+            let slo = if next() % 2 == 0 { Some(10.0) } else { None };
+            let r = pack_fleet(&models, gpus, slo);
+            let mut used = vec![0u32; gpus as usize];
+            for p in &r.placed {
+                let m = &models[p.index as usize];
+                // Placed slice really holds the model's predicted memory.
+                assert!(
+                    m.memory_mb < p.profile.capacity_mb(),
+                    "case {case}: {} MB on {}",
+                    m.memory_mb,
+                    p.profile.name()
+                );
+                assert_eq!(p.profile, predict_profile(m.memory_mb).unwrap());
+                if let Some(slo) = slo {
+                    assert!(m.latency_ms <= slo);
+                }
+                used[p.gpu as usize] += slice_units(p.profile);
+            }
+            for (g, &u) in used.iter().enumerate() {
+                assert!(u <= A100_SLICES, "case {case}: gpu {g} uses {u} units");
+            }
+            assert_eq!(
+                r.placed.len() as u32
+                    + r.rejected_slo
+                    + r.rejected_capacity
+                    + r.rejected_fleet_full,
+                n,
+                "case {case}: accounting must partition the input"
+            );
+        }
     }
 }

@@ -8,7 +8,7 @@ use std::net::TcpStream;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::coordinator::Prediction;
+use crate::coordinator::{Prediction, SweepItem, SweepSpec, SweepSummary};
 use crate::ir::Graph;
 
 use super::frame::{self, Decoded, Frame, FrameKind, DEFAULT_MAX_PAYLOAD};
@@ -159,6 +159,61 @@ impl WireClient {
             bail!("{}", String::from_utf8_lossy(&f.payload))
         } else {
             bail!("unexpected frame kind {:?} in {kind:?} reply", f.kind)
+        }
+    }
+
+    /// Queue one design-space sweep request without waiting for replies;
+    /// returns the sequence id every chunk / done frame will carry. The
+    /// server streams back [`FrameKind::SweepChunk`] frames followed by
+    /// one [`FrameKind::SweepDone`].
+    pub fn send_sweep(
+        &mut self,
+        graph: &Graph,
+        target: Option<&str>,
+        spec: &SweepSpec,
+    ) -> Result<u32> {
+        let payload = codec::encode_sweep_request(graph, target, spec);
+        self.send_raw(FrameKind::SweepRequest, &payload)
+    }
+
+    /// Blocking convenience: run one sweep end to end, collecting every
+    /// streamed chunk until the terminal summary arrives. Returns all
+    /// per-candidate items (in candidate-index order, as the server emits
+    /// them) plus the summary with the Pareto frontier and optional fleet
+    /// packing epilogue.
+    pub fn sweep(
+        &mut self,
+        graph: &Graph,
+        target: Option<&str>,
+        spec: &SweepSpec,
+    ) -> Result<(Vec<SweepItem>, SweepSummary)> {
+        let want = self.send_sweep(graph, target, spec)?;
+        let mut items = Vec::new();
+        loop {
+            let f = self.recv_frame()?;
+            match f.kind {
+                FrameKind::SweepChunk if f.seq == want => {
+                    let chunk = codec::decode_sweep_chunk(&f.payload).map_err(|e| anyhow!(e))?;
+                    items.extend(chunk);
+                }
+                FrameKind::SweepDone if f.seq == want => {
+                    let summary = codec::decode_sweep_done(&f.payload).map_err(|e| anyhow!(e))?;
+                    return Ok((items, summary));
+                }
+                FrameKind::Error => {
+                    let msg = String::from_utf8_lossy(&f.payload).into_owned();
+                    if f.seq == 0 {
+                        bail!("wire protocol error: {msg}");
+                    }
+                    if f.seq == want {
+                        bail!("sweep failed: {msg}");
+                    }
+                    // An error for some other pipelined request: not ours
+                    // to handle here.
+                    bail!("error reply for unrelated seq {} mid-sweep: {msg}", f.seq);
+                }
+                other => bail!("unexpected frame kind {:?} while awaiting sweep frames", other),
+            }
         }
     }
 

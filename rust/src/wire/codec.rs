@@ -48,9 +48,11 @@
 //! degraded-mode marker (decoders tolerate its absence from older peers).
 
 use crate::cache::Target;
-use crate::coordinator::Prediction;
+use crate::coordinator::{FrontierPoint, Prediction, SweepItem, SweepSpec, SweepSummary};
 use crate::ir::op::ALL_OPS;
 use crate::ir::{Attrs, DType, Graph, Node, OpKind, ALL_DTYPES};
+use crate::mig::{PackPlacement, PackReport};
+use crate::simulator::ALL_PROFILES;
 
 const FLAG_KERNEL: u8 = 1 << 0;
 const FLAG_STRIDES: u8 = 1 << 1;
@@ -119,6 +121,10 @@ impl<'a> Reader<'a> {
 
     fn u32(&mut self) -> Result<u32, String> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
     fn i64(&mut self) -> Result<i64, String> {
@@ -383,6 +389,266 @@ pub fn decode_prediction(payload: &[u8]) -> Result<Prediction, String> {
     })
 }
 
+// --- sweep -----------------------------------------------------------------
+//
+// SweepRequest payload v1:
+//
+// ```text
+// base_len  u32 + bytes     an embedded predict-request payload
+//                           (`encode_request`, no deadline extension) —
+//                           the base graph plus the sweep's target
+// depths    u16 count + u32*
+// widths    u16 count + u32*
+// batches   u16 count + u32*
+// dtypes    u16 count + u8*  dtype ordinals (`DType::index`)
+// slo_ms    f64              packing SLO (`<= 0` = none)
+// fleet_gpus u32             0 = skip the packing epilogue
+// ```
+//
+// SweepChunk payload: `n u16 | entry*` with entry =
+// `index u32 | label u16-str | ok u8 | body u16 len + bytes | cached u8`
+// where body is a response payload (`encode_prediction`) when ok=1 and a
+// UTF-8 error string when ok=0.
+//
+// SweepDone payload: `candidates u64 | duplicates u64 | cache_hits u64 |
+// batches u64 | errors u64 | n_frontier u32 | frontier* | packing u8` with
+// frontier entry `index u32 | label u16-str | latency f64 | memory f64 |
+// energy f64`; packing=1 is followed by `gpus u32 | slo_ms f64 (<= 0 =
+// none) | rejected_slo u32 | rejected_capacity u32 | rejected_fleet_full
+// u32 | n u32 | (index u32 | label u16-str | gpu u32 | profile u16-str)*`.
+
+/// Encode a sweep request: the base graph + target as an embedded predict
+/// request, followed by the mutation grid.
+pub fn encode_sweep_request(graph: &Graph, target: Option<&str>, spec: &SweepSpec) -> Vec<u8> {
+    let base = encode_request(graph, target);
+    let mut out = Vec::with_capacity(base.len() + 64);
+    put_u32(&mut out, base.len() as u32);
+    out.extend_from_slice(&base);
+    for axis in [&spec.depths, &spec.widths, &spec.batches] {
+        put_u16(&mut out, axis.len() as u16);
+        for &v in axis {
+            put_u32(&mut out, v);
+        }
+    }
+    put_u16(&mut out, spec.dtypes.len() as u16);
+    for &dt in &spec.dtypes {
+        out.push(dt.index() as u8);
+    }
+    out.extend_from_slice(&spec.slo_ms.to_le_bytes());
+    put_u32(&mut out, spec.fleet_gpus);
+    out
+}
+
+/// Decode a sweep request into `(base graph, target, spec)`. The embedded
+/// base request is fully validated like a predict request; a deadline
+/// extension inside it is rejected (sweeps carry no deadline).
+pub fn decode_sweep_request(payload: &[u8]) -> Result<(Graph, Option<Target>, SweepSpec), String> {
+    let mut r = Reader::new(payload);
+    let base_len = r.u32()? as usize;
+    let (graph, target, deadline) = decode_request(r.take(base_len)?)?;
+    if deadline.is_some() {
+        return Err("sweep base request must not carry a deadline extension".into());
+    }
+    let mut axes: [Vec<u32>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+    for axis in axes.iter_mut() {
+        let n = r.u16()? as usize;
+        axis.reserve(n);
+        for _ in 0..n {
+            axis.push(r.u32()?);
+        }
+    }
+    let n_dtypes = r.u16()? as usize;
+    let mut dtypes = Vec::with_capacity(n_dtypes);
+    for _ in 0..n_dtypes {
+        let idx = r.u8()? as usize;
+        dtypes.push(
+            *ALL_DTYPES
+                .get(idx)
+                .ok_or_else(|| format!("sweep: unknown dtype ordinal {idx}"))?,
+        );
+    }
+    let slo_ms = r.f64()?;
+    let fleet_gpus = r.u32()?;
+    if r.remaining() != 0 {
+        return Err(format!("sweep request has {} trailing bytes", r.remaining()));
+    }
+    let [depths, widths, batches] = axes;
+    Ok((
+        graph,
+        target,
+        SweepSpec {
+            depths,
+            widths,
+            batches,
+            dtypes,
+            slo_ms,
+            fleet_gpus,
+        },
+    ))
+}
+
+/// Encode one streamed chunk of per-candidate sweep results.
+pub fn encode_sweep_chunk(items: &[SweepItem]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + 64 * items.len());
+    put_u16(&mut out, items.len() as u16);
+    for item in items {
+        put_u32(&mut out, item.index);
+        put_str(&mut out, &item.label);
+        let body = match &item.result {
+            Ok(p) => {
+                out.push(1);
+                encode_prediction(p)
+            }
+            Err(e) => {
+                out.push(0);
+                let mut b = Vec::new();
+                put_str(&mut b, e);
+                b
+            }
+        };
+        put_u16(&mut out, body.len() as u16);
+        out.extend_from_slice(&body);
+        out.push(item.cached as u8);
+    }
+    out
+}
+
+/// Decode a sweep chunk back into items.
+pub fn decode_sweep_chunk(payload: &[u8]) -> Result<Vec<SweepItem>, String> {
+    let mut r = Reader::new(payload);
+    let n = r.u16()? as usize;
+    let mut items = Vec::with_capacity(n);
+    for _ in 0..n {
+        let index = r.u32()?;
+        let label = r.str()?.to_string();
+        let ok = r.u8()?;
+        let body_len = r.u16()? as usize;
+        let body = r.take(body_len)?;
+        let result = match ok {
+            1 => Ok(decode_prediction(body)?),
+            0 => Err(Reader::new(body).str()?.to_string()),
+            other => return Err(format!("bad sweep item ok tag {other}")),
+        };
+        let cached = match r.u8()? {
+            0 => false,
+            1 => true,
+            other => return Err(format!("bad sweep item cached tag {other}")),
+        };
+        items.push(SweepItem {
+            index,
+            label,
+            result,
+            cached,
+        });
+    }
+    if r.remaining() != 0 {
+        return Err(format!("sweep chunk has {} trailing bytes", r.remaining()));
+    }
+    Ok(items)
+}
+
+/// Encode the sweep epilogue (totals + frontier + optional packing).
+pub fn encode_sweep_done(s: &SweepSummary) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64 + 48 * s.frontier.len());
+    for v in [s.candidates, s.duplicates, s.cache_hits, s.batches, s.errors] {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    put_u32(&mut out, s.frontier.len() as u32);
+    for f in &s.frontier {
+        put_u32(&mut out, f.index);
+        put_str(&mut out, &f.label);
+        out.extend_from_slice(&f.latency_ms.to_le_bytes());
+        out.extend_from_slice(&f.memory_mb.to_le_bytes());
+        out.extend_from_slice(&f.energy_j.to_le_bytes());
+    }
+    match &s.packing {
+        None => out.push(0),
+        Some(p) => {
+            out.push(1);
+            put_u32(&mut out, p.gpus);
+            out.extend_from_slice(&p.slo_ms.unwrap_or(0.0).to_le_bytes());
+            put_u32(&mut out, p.rejected_slo);
+            put_u32(&mut out, p.rejected_capacity);
+            put_u32(&mut out, p.rejected_fleet_full);
+            put_u32(&mut out, p.placed.len() as u32);
+            for pl in &p.placed {
+                put_u32(&mut out, pl.index);
+                put_str(&mut out, &pl.label);
+                put_u32(&mut out, pl.gpu);
+                put_str(&mut out, pl.profile.name());
+            }
+        }
+    }
+    out
+}
+
+/// Decode the sweep epilogue.
+pub fn decode_sweep_done(payload: &[u8]) -> Result<SweepSummary, String> {
+    let mut r = Reader::new(payload);
+    let mut s = SweepSummary {
+        candidates: r.u64()?,
+        duplicates: r.u64()?,
+        cache_hits: r.u64()?,
+        batches: r.u64()?,
+        errors: r.u64()?,
+        ..SweepSummary::default()
+    };
+    let n_frontier = r.u32()? as usize;
+    if n_frontier > MAX_WIRE_NODES {
+        return Err(format!("sweep done claims {n_frontier} frontier points"));
+    }
+    for _ in 0..n_frontier {
+        s.frontier.push(FrontierPoint {
+            index: r.u32()?,
+            label: r.str()?.to_string(),
+            latency_ms: r.f64()?,
+            memory_mb: r.f64()?,
+            energy_j: r.f64()?,
+        });
+    }
+    match r.u8()? {
+        0 => {}
+        1 => {
+            let gpus = r.u32()?;
+            let slo = r.f64()?;
+            let mut p = PackReport {
+                gpus,
+                slo_ms: (slo > 0.0).then_some(slo),
+                placed: Vec::new(),
+                rejected_slo: r.u32()?,
+                rejected_capacity: r.u32()?,
+                rejected_fleet_full: r.u32()?,
+            };
+            let n = r.u32()? as usize;
+            if n > MAX_WIRE_NODES {
+                return Err(format!("sweep done claims {n} placements"));
+            }
+            for _ in 0..n {
+                let index = r.u32()?;
+                let label = r.str()?.to_string();
+                let gpu = r.u32()?;
+                let name = r.str()?;
+                let profile = *ALL_PROFILES
+                    .iter()
+                    .find(|mp| mp.name() == name)
+                    .ok_or_else(|| format!("unknown MIG profile {name:?}"))?;
+                p.placed.push(PackPlacement {
+                    index,
+                    label,
+                    gpu,
+                    profile,
+                });
+            }
+            s.packing = Some(p);
+        }
+        other => return Err(format!("bad packing tag {other}")),
+    }
+    if r.remaining() != 0 {
+        return Err(format!("sweep done has {} trailing bytes", r.remaining()));
+    }
+    Ok(s)
+}
+
 /// Encode a `GenFetch` payload: generation id (u64 LE) + shard index
 /// (u32 LE). The reply is a `GenData` frame carrying the raw generation
 /// shard file, verified end-to-end against the peer's manifest record.
@@ -586,6 +852,126 @@ mod tests {
         let back = decode_prediction(&payload).unwrap();
         assert!(!back.degraded);
         assert_eq!(back.mig_profile, p.mig_profile);
+    }
+
+    #[test]
+    fn sweep_request_roundtrips() {
+        let g = ALL_FAMILIES[0].generate(0);
+        let spec = SweepSpec {
+            depths: vec![1, 2],
+            widths: vec![50, 100, 150],
+            batches: vec![1, 8],
+            dtypes: vec![DType::F32, DType::I8],
+            slo_ms: 5.0,
+            fleet_gpus: 4,
+        };
+        let payload = encode_sweep_request(&g, Some("a100:2g.10gb"), &spec);
+        let (back, target, spec2) = decode_sweep_request(&payload).unwrap();
+        assert!(structurally_equal(&g, &back));
+        assert_eq!(target.unwrap().to_string(), "a100:2g.10gb");
+        assert_eq!(spec2, spec);
+        // Truncations error cleanly, never panic.
+        for cut in [1, payload.len() / 2, payload.len() - 1] {
+            assert!(decode_sweep_request(&payload[..cut]).is_err(), "cut {cut}");
+        }
+        let mut padded = payload.clone();
+        padded.push(0);
+        assert!(decode_sweep_request(&padded).unwrap_err().contains("trailing"));
+        // An embedded deadline is rejected: sweeps carry no deadline.
+        let base = encode_request_with_deadline(&g, None, Some(100));
+        let mut with_deadline = Vec::new();
+        put_u32(&mut with_deadline, base.len() as u32);
+        with_deadline.extend_from_slice(&base);
+        for _ in 0..4 {
+            put_u16(&mut with_deadline, 0);
+        }
+        with_deadline.extend_from_slice(&0f64.to_le_bytes());
+        put_u32(&mut with_deadline, 0);
+        assert!(decode_sweep_request(&with_deadline)
+            .unwrap_err()
+            .contains("deadline"));
+    }
+
+    #[test]
+    fn sweep_chunk_roundtrips() {
+        let items = vec![
+            SweepItem {
+                index: 0,
+                label: "d1-w100-b1-f32".into(),
+                result: Ok(Prediction {
+                    latency_ms: 1.5,
+                    memory_mb: 2048.0,
+                    energy_j: 0.3,
+                    mig_profile: Some("1g.5gb".into()),
+                    degraded: false,
+                }),
+                cached: true,
+            },
+            SweepItem {
+                index: 7,
+                label: "d2-w50-b8-i8".into(),
+                result: Err("width 50% fails at node 3".into()),
+                cached: false,
+            },
+        ];
+        let payload = encode_sweep_chunk(&items);
+        let back = decode_sweep_chunk(&payload).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].index, 0);
+        assert!(back[0].cached);
+        assert_eq!(back[0].result.as_ref().unwrap().latency_ms, 1.5);
+        assert_eq!(back[1].label, "d2-w50-b8-i8");
+        assert_eq!(
+            back[1].result.clone().unwrap_err(),
+            "width 50% fails at node 3"
+        );
+        for cut in [1, payload.len() / 2, payload.len() - 1] {
+            assert!(decode_sweep_chunk(&payload[..cut]).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn sweep_done_roundtrips_with_and_without_packing() {
+        use crate::mig::pack_fleet;
+        use crate::mig::PackRequest;
+        let frontier = vec![FrontierPoint {
+            index: 3,
+            label: "d1-w50-b1-f16".into(),
+            latency_ms: 0.9,
+            memory_mb: 900.0,
+            energy_j: 0.1,
+        }];
+        let mut s = SweepSummary {
+            candidates: 512,
+            duplicates: 12,
+            cache_hits: 400,
+            batches: 2,
+            errors: 1,
+            frontier,
+            packing: None,
+        };
+        let back = decode_sweep_done(&encode_sweep_done(&s)).unwrap();
+        assert_eq!(back.candidates, 512);
+        assert_eq!(back.frontier.len(), 1);
+        assert_eq!(back.frontier[0].label, "d1-w50-b1-f16");
+        assert!(back.packing.is_none());
+
+        let models = vec![
+            PackRequest { index: 0, label: "a".into(), latency_ms: 1.0, memory_mb: 2000.0 },
+            PackRequest { index: 1, label: "b".into(), latency_ms: 9.0, memory_mb: 30_000.0 },
+        ];
+        s.packing = Some(pack_fleet(&models, 2, Some(5.0)));
+        let payload = encode_sweep_done(&s);
+        let back = decode_sweep_done(&payload).unwrap();
+        let p = back.packing.unwrap();
+        assert_eq!(p.gpus, 2);
+        assert_eq!(p.slo_ms, Some(5.0));
+        assert_eq!(p.placed.len(), 1);
+        assert_eq!(p.rejected_slo, 1);
+        assert_eq!(p.placed[0].profile.name(), "1g.5gb");
+        for cut in [4, payload.len() / 2, payload.len() - 1] {
+            assert!(decode_sweep_done(&payload[..cut]).is_err(), "cut {cut}");
+        }
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //!      3     1  kind        1=request 2=response 3=error 4=stats
 //!                           5=manifest-fetch 6=manifest 7=gen-fetch
 //!                           8=gen-data 9=shard-stats 10=fleet-stats
+//!                           11=sweep-request 12=sweep-chunk 13=sweep-done
 //!      4     4  seq         echoed verbatim in the reply
 //!      8     4  len         payload length in bytes
 //!     12     8  crc         checksum(payload)
@@ -89,6 +90,19 @@ pub enum FrameKind {
     /// Router → client: a JSON document. A plain replica answers with a
     /// request-level error — only routers serve this verb.
     FleetStats = 10,
+    /// Client → server: one base graph plus a mutation-grid spec
+    /// (`codec::encode_sweep_request`). The server expands the grid
+    /// locally and answers with a stream of [`FrameKind::SweepChunk`]
+    /// frames followed by one [`FrameKind::SweepDone`] — all echoing the
+    /// request seq, so sweeps interleave freely with pipelined predicts.
+    SweepRequest = 11,
+    /// Server → client: a batch of per-candidate sweep results
+    /// (`codec::encode_sweep_chunk`).
+    SweepChunk = 12,
+    /// Server → client: the sweep epilogue — accounting totals, the
+    /// Pareto frontier, and the optional fleet MIG packing
+    /// (`codec::encode_sweep_done`). Terminates the sweep's reply stream.
+    SweepDone = 13,
 }
 
 impl FrameKind {
@@ -104,6 +118,9 @@ impl FrameKind {
             8 => Some(FrameKind::GenData),
             9 => Some(FrameKind::ShardStats),
             10 => Some(FrameKind::FleetStats),
+            11 => Some(FrameKind::SweepRequest),
+            12 => Some(FrameKind::SweepChunk),
+            13 => Some(FrameKind::SweepDone),
             _ => None,
         }
     }
@@ -260,6 +277,9 @@ mod tests {
             FrameKind::GenData,
             FrameKind::ShardStats,
             FrameKind::FleetStats,
+            FrameKind::SweepRequest,
+            FrameKind::SweepChunk,
+            FrameKind::SweepDone,
         ] {
             let payload = vec![7u8; 33];
             let bytes = encode(kind, 42, &payload);

@@ -38,7 +38,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::{Coordinator, Prediction};
+use crate::coordinator::{Coordinator, Prediction, SweepEvent};
 use crate::util::faults;
 use crate::util::poll::{poll, Fd, PollEntry};
 use crate::util::threadpool::ThreadPool;
@@ -105,6 +105,11 @@ struct Conn {
     /// with `try_recv` each iteration. Completion order wins — replies go
     /// out out-of-order, matched by seq.
     pending: Vec<(u32, Receiver<Result<Prediction>>)>,
+    /// In-flight sweeps: seq + the sweep worker's event channel. Each
+    /// event becomes a `SweepChunk` frame; `Done`/`Fatal` ends the stream.
+    /// The channel is a small `sync_channel`, so a client that stops
+    /// reading stalls its sweep worker instead of ballooning memory.
+    sweeps: Vec<(u32, Receiver<SweepEvent>)>,
     last_activity: Instant,
     /// Flush `wbuf`, then close (set after a fatal framing error).
     closing: bool,
@@ -119,6 +124,7 @@ impl Conn {
             rbuf: Vec::new(),
             wbuf: Vec::new(),
             pending: Vec::new(),
+            sweeps: Vec::new(),
             last_activity: Instant::now(),
             closing: false,
         }
@@ -272,7 +278,7 @@ fn event_loop_main(coordinator: Arc<Coordinator>, shared: Arc<LoopShared>, cfg: 
             if let Some(c) = slot {
                 entries.push(PollEntry::new(c.fd, !c.closing, !c.wbuf.is_empty()));
                 slots.push(i);
-                any_pending |= !c.pending.is_empty();
+                any_pending |= !c.pending.is_empty() || !c.sweeps.is_empty();
             }
         }
         let timeout = if any_pending {
@@ -327,7 +333,9 @@ fn event_loop_main(coordinator: Arc<Coordinator>, shared: Arc<LoopShared>, cfg: 
             last_idle_sweep = now;
             for (i, slot) in slab.iter_mut().enumerate() {
                 let timed_out = slot.as_ref().is_some_and(|c| {
-                    c.pending.is_empty() && now.duration_since(c.last_activity) > cfg.idle_timeout
+                    c.pending.is_empty()
+                        && c.sweeps.is_empty()
+                        && now.duration_since(c.last_activity) > cfg.idle_timeout
                 });
                 if timed_out {
                     *slot = None;
@@ -344,7 +352,7 @@ fn event_loop_main(coordinator: Arc<Coordinator>, shared: Arc<LoopShared>, cfg: 
 /// frame. Returns true when the connection is finished (EOF or error).
 fn pump_reads(
     conn: &mut Conn,
-    coordinator: &Coordinator,
+    coordinator: &Arc<Coordinator>,
     wire: &WireMetrics,
     cfg: &ReactorConfig,
     scratch: &mut [u8],
@@ -400,6 +408,7 @@ fn pump_reads(
                         conn.push_frame(kind, seq, &body, wire);
                     }
                     Dispatch::Pending(rx) => conn.pending.push((seq, rx)),
+                    Dispatch::SweepStream(rx) => conn.sweeps.push((seq, rx)),
                     Dispatch::RequestError(msg) => {
                         wire.decode_error();
                         conn.push_frame(FrameKind::Error, seq, msg.as_bytes(), wire);
@@ -435,13 +444,21 @@ enum Dispatch {
     Reply(FrameKind, Vec<u8>),
     /// Submitted; reply channel parked on the connection.
     Pending(Receiver<Result<Prediction>>),
+    /// Sweep accepted; the worker's event channel parked on the
+    /// connection, drained into `SweepChunk`/`SweepDone` frames.
+    SweepStream(Receiver<SweepEvent>),
     /// Bad request payload — error frame with the request's seq, stay open.
     RequestError(String),
     /// Protocol misuse — error frame seq 0, then close.
     Fatal(String),
 }
 
-fn dispatch(kind: FrameKind, payload: &[u8], coordinator: &Coordinator) -> Dispatch {
+/// Events a sweep worker can buffer ahead of the reactor before its
+/// `send` blocks: enough to keep the pipe busy, small enough that a
+/// client that stops reading stalls the sweep instead of growing memory.
+const SWEEP_CHANNEL_DEPTH: usize = 4;
+
+fn dispatch(kind: FrameKind, payload: &[u8], coordinator: &Arc<Coordinator>) -> Dispatch {
     match kind {
         FrameKind::Request => match codec::decode_request(payload) {
             Err(e) => Dispatch::RequestError(e),
@@ -494,13 +511,45 @@ fn dispatch(kind: FrameKind, payload: &[u8], coordinator: &Coordinator) -> Dispa
         FrameKind::FleetStats => Dispatch::RequestError(
             "fleet_stats is served by a fleet router, not a coordinator replica".into(),
         ),
-        // Response/Error/Manifest/GenData frames flow server → client only.
-        FrameKind::Response | FrameKind::Error | FrameKind::Manifest | FrameKind::GenData => {
-            Dispatch::Fatal(format!(
-                "client sent a server-only frame kind ({})",
-                kind.as_u8()
-            ))
-        }
+        // Server-side DSE sweep: decode on the event loop (cheap), then
+        // run the expansion + admission waves on a dedicated worker thread
+        // — a 4096-candidate sweep must not stall the loop's other
+        // connections. Events stream back over a small sync channel; the
+        // worker blocks when the client (or loop) falls behind, and aborts
+        // when the connection dies (the receiver drops).
+        FrameKind::SweepRequest => match codec::decode_sweep_request(payload) {
+            Err(e) => Dispatch::RequestError(e),
+            Ok((graph, target, spec)) => {
+                let target = target.unwrap_or_else(|| coordinator.default_target().clone());
+                let (tx, rx) = std::sync::mpsc::sync_channel(SWEEP_CHANNEL_DEPTH);
+                let coord = coordinator.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("dippm-sweep-worker".into())
+                    .spawn(move || {
+                        let outcome = coord.run_sweep(&graph, &spec, &target, &mut |ev| {
+                            tx.send(ev).is_ok()
+                        });
+                        if let Err(msg) = outcome {
+                            let _ = tx.send(SweepEvent::Fatal(msg));
+                        }
+                    });
+                match spawned {
+                    Ok(_) => Dispatch::SweepStream(rx),
+                    Err(e) => Dispatch::RequestError(format!("cannot spawn sweep worker: {e}")),
+                }
+            }
+        },
+        // Response/Error/Manifest/GenData/SweepChunk/SweepDone frames flow
+        // server → client only.
+        FrameKind::Response
+        | FrameKind::Error
+        | FrameKind::Manifest
+        | FrameKind::GenData
+        | FrameKind::SweepChunk
+        | FrameKind::SweepDone => Dispatch::Fatal(format!(
+            "client sent a server-only frame kind ({})",
+            kind.as_u8()
+        )),
     }
 }
 
@@ -532,6 +581,50 @@ fn drain_replies(conn: &mut Conn, wire: &WireMetrics, now: Instant) {
             conn.last_activity = now;
         } else {
             i += 1;
+        }
+    }
+    // Sweep streams: move every buffered event out as a frame. The
+    // write-buffer cap bounds how much an unread client can queue — past
+    // it we stop draining and let the worker's sync channel block, which
+    // is the backpressure path, not the connection-kill path.
+    let mut s = 0;
+    while s < conn.sweeps.len() {
+        let mut finished = false;
+        while conn.wbuf.len() < MAX_WRITE_BUFFER / 2 {
+            let (seq, rx) = &conn.sweeps[s];
+            let seq = *seq;
+            match rx.try_recv() {
+                Ok(SweepEvent::Chunk(items)) => {
+                    let body = codec::encode_sweep_chunk(&items);
+                    conn.push_frame(FrameKind::SweepChunk, seq, &body, wire);
+                    conn.last_activity = now;
+                }
+                Ok(SweepEvent::Done(summary)) => {
+                    let body = codec::encode_sweep_done(&summary);
+                    conn.push_frame(FrameKind::SweepDone, seq, &body, wire);
+                    conn.last_activity = now;
+                    finished = true;
+                    break;
+                }
+                Ok(SweepEvent::Fatal(msg)) => {
+                    conn.push_frame(FrameKind::Error, seq, msg.as_bytes(), wire);
+                    conn.last_activity = now;
+                    finished = true;
+                    break;
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    conn.push_frame(FrameKind::Error, seq, b"sweep worker died", wire);
+                    conn.last_activity = now;
+                    finished = true;
+                    break;
+                }
+            }
+        }
+        if finished {
+            conn.sweeps.swap_remove(s);
+        } else {
+            s += 1;
         }
     }
 }

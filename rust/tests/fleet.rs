@@ -20,12 +20,15 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
-use dippm::cache::CacheConfig;
-use dippm::coordinator::{Coordinator, CoordinatorOptions, Prediction};
+use dippm::cache::{CacheConfig, CacheKey, Target};
+use dippm::coordinator::{
+    Coordinator, CoordinatorOptions, Prediction, SweepEvent, SweepItem, SweepSpec,
+};
 use dippm::fleet::replicate_from_peer;
-use dippm::fleet::router::{self, RouterConfig};
-use dippm::ir::Graph;
+use dippm::fleet::router::{self, HashRing, RouterConfig};
+use dippm::ir::{DType, Graph};
 use dippm::modelgen::{Family, ALL_FAMILIES};
+use dippm::simulator::CostSweep;
 use dippm::util::json::Json;
 use dippm::wire::{reactor, ReactorConfig, WireClient};
 
@@ -294,6 +297,134 @@ fn killed_replica_fails_over_without_client_errors() {
         .map(|r| r.path(&["failed_over"]).as_usize().unwrap())
         .sum();
     assert!(failed_over > 0, "no request recorded a failover: {stats}");
+}
+
+// ---------------------------------------------------------------- sweeps --
+
+/// Acceptance: a sweep routed through the fleet lands on the replica
+/// whose ring slice owns the *base* graph's fingerprint (verb-level
+/// routing for the multi-frame exchange), and the streamed results match
+/// a direct sweep on a single coordinator.
+#[test]
+fn sweep_routes_to_the_base_fingerprint_owner() {
+    let coords: Vec<Arc<Coordinator>> = (0..3).map(|_| sim_coordinator()).collect();
+    let replicas: Vec<String> = coords.iter().map(|c| start_reactor(c.clone())).collect();
+    let router_addr = start_router(replicas);
+    let mut client = WireClient::connect(&router_addr).unwrap();
+
+    let base = Family::ResNet.generate(1);
+    let spec = SweepSpec {
+        widths: vec![100, 50],
+        dtypes: vec![DType::F32, DType::F16],
+        ..SweepSpec::default()
+    };
+    let (items, summary) = client.sweep(&base, None, &spec).unwrap();
+    assert_eq!(items.len(), 4);
+    assert_eq!(summary.candidates, 4);
+    assert!(items.iter().all(|i| i.result.is_ok()), "{items:?}");
+    assert!(!summary.frontier.is_empty());
+
+    // The whole grid lands on the base fingerprint's ring owner; the
+    // other replicas never see the sweep.
+    let key = CacheKey::new(CostSweep::of(&base).fingerprint, &Target::default());
+    let ring = HashRing::new(3, RouterConfig::default().vnodes);
+    let owner = ring.owner(key.as_u128());
+    for (i, c) in coords.iter().enumerate() {
+        let got = c.metrics().sweeps;
+        assert_eq!(
+            got,
+            u64::from(i == owner),
+            "replica {i} served {got} sweeps (owner is {owner})"
+        );
+    }
+
+    // Parity with a direct single-coordinator sweep of the same grid.
+    let reference = sim_coordinator();
+    let mut want: Vec<SweepItem> = Vec::new();
+    reference
+        .run_sweep(&base, &spec, &Target::default(), &mut |ev| {
+            if let SweepEvent::Chunk(c) = ev {
+                want.extend(c);
+            }
+            true
+        })
+        .unwrap();
+    assert_eq!(want.len(), items.len());
+    for (w, g) in want.iter().zip(&items) {
+        assert_eq!(w.index, g.index);
+        assert_eq!(w.label, g.label);
+        assert_eq!(
+            w.result.as_ref().unwrap().latency_ms,
+            g.result.as_ref().unwrap().latency_ms,
+            "sweep item {} diverged through the router",
+            g.label
+        );
+    }
+}
+
+/// Acceptance: the replica owning a sweep dies; re-issuing the sweep on
+/// the same client connection sees a complete, duplicate-free stream and
+/// no client-visible error (the router discovers the death inside the
+/// exchange and fails over), and `fleet_stats` records the failover.
+#[test]
+fn sweep_fails_over_when_the_owner_dies() {
+    let children: Vec<ChildReplica> = (0..2).map(|_| ChildReplica::spawn(&[])).collect();
+    let router_addr = start_router(children.iter().map(|c| c.addr.clone()).collect());
+    let mut client = WireClient::connect(&router_addr).unwrap();
+
+    let base = Family::Vgg.generate(2);
+    let spec = SweepSpec {
+        depths: vec![1, 2],
+        batches: vec![1, 4],
+        ..SweepSpec::default()
+    };
+    let (first_items, first) = client.sweep(&base, None, &spec).unwrap();
+    assert_eq!(first.candidates, 4);
+    assert_eq!(first.errors, 0);
+
+    // With only sweep traffic, exactly one replica routed: the owner.
+    let stats = Json::parse(&client.fleet_stats().unwrap()).unwrap();
+    let owner_addr = stats
+        .path(&["replica_stats"])
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|r| r.path(&["routed"]).as_usize().unwrap() > 0)
+        .and_then(|r| r.path(&["addr"]).as_str())
+        .expect("one replica owns the sweep")
+        .to_string();
+    let mut children = children;
+    children
+        .iter_mut()
+        .find(|c| c.addr == owner_addr)
+        .expect("owner is one of the children")
+        .kill();
+
+    let (again_items, again) = client
+        .sweep(&base, None, &spec)
+        .expect("sweep failover must hide the dead replica from clients");
+    assert_eq!(again.candidates, 4);
+    assert_eq!(again.errors, 0);
+    let mut idx: Vec<u32> = again_items.iter().map(|i| i.index).collect();
+    idx.sort_unstable();
+    idx.dedup();
+    assert_eq!(idx.len(), 4, "duplicate or missing items after failover");
+    for (a, b) in first_items.iter().zip(&again_items) {
+        assert_eq!(
+            a.result.as_ref().unwrap().latency_ms,
+            b.result.as_ref().unwrap().latency_ms,
+            "prediction changed after sweep failover"
+        );
+    }
+    let stats = Json::parse(&client.fleet_stats().unwrap()).unwrap();
+    let failed: usize = stats
+        .path(&["replica_stats"])
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|r| r.path(&["failed_over"]).as_usize().unwrap())
+        .sum();
+    assert!(failed > 0, "no failover recorded: {stats}");
 }
 
 // ----------------------------------------------------------- warm start --
